@@ -1,0 +1,32 @@
+//! End-to-end driver (DESIGN.md E3/P1): run all four scheduling
+//! architectures — Megha, Sparrow, Eagle, Pigeon — on real (synthesized
+//! to published marginals) Yahoo-like and Google-like traces, and report
+//! the paper's headline metric: delay in job completion time, plus the
+//! mean-delay reduction factors of §5.2.
+//!
+//! ```sh
+//! cargo run --release --example compare_frameworks            # default scale
+//! cargo run --release --example compare_frameworks -- --scale smoke
+//! ```
+
+use megha::experiments::{fig3, headline, Scale};
+use megha::util::args::Args;
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let scale = Scale::parse(&args.get_or("scale", "default")).expect("bad --scale");
+    let seed = args.u64("seed", 0);
+
+    fig3::run(fig3::Workload::Yahoo, scale, seed);
+    fig3::run(fig3::Workload::Google, scale, seed);
+    let rows = headline::run(scale, seed);
+
+    // sanity verdict against the paper's shape
+    let ok = rows.iter().all(|r| r.vs_sparrow > 1.0);
+    println!(
+        "\nverdict: megha beats sparrow on mean delay in {}/{} workloads {}",
+        rows.iter().filter(|r| r.vs_sparrow > 1.0).count(),
+        rows.len(),
+        if ok { "✔ (paper shape holds)" } else { "✘" }
+    );
+}

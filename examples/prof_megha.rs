@@ -1,0 +1,27 @@
+//! Profiling driver: event-throughput measurement for the Megha engine.
+use std::time::Instant;
+
+fn main() {
+    let mut cfg = megha::config::MeghaConfig::for_workers(3_000);
+    cfg.sim.seed = 1;
+    let trace = megha::workload::synthetic::yahoo_like(300, 3_000, 0.85, 3);
+    let n_tasks = trace.n_tasks();
+    // warmup
+    let out = megha::sched::megha::simulate(&cfg, &trace);
+    let msgs = out.messages;
+    let t0 = Instant::now();
+    let reps = 20;
+    for _ in 0..reps {
+        let out = megha::sched::megha::simulate(&cfg, &trace);
+        std::hint::black_box(out.decisions);
+    }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "yahoo300: {:.1} ms/run, {:.0} tasks/s, {:.0} msgs/s ({} tasks, {} msgs)",
+        dt * 1e3,
+        n_tasks as f64 / dt,
+        msgs as f64 / dt,
+        n_tasks,
+        msgs
+    );
+}

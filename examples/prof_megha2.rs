@@ -1,0 +1,12 @@
+fn main() {
+    let mut cfg = megha::config::MeghaConfig::for_workers(3_000);
+    cfg.sim.seed = 1;
+    let trace = megha::workload::synthetic::yahoo_like(300, 3_000, 0.85, 3);
+    let out = megha::sched::megha::simulate(&cfg, &trace);
+    println!("makespan {:.0}s inconsistencies {} msgs {} tasks {} decisions {}",
+        out.makespan.as_secs(), out.inconsistencies, out.messages, out.tasks, out.decisions);
+    println!("applies {} skips {}",
+        megha::sched::megha::engine::APPLY_TOTAL.load(std::sync::atomic::Ordering::Relaxed),
+        megha::sched::megha::engine::APPLY_SKIP.load(std::sync::atomic::Ordering::Relaxed));
+}
+// (instrumentation printout appended by perf pass)

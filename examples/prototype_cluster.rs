@@ -1,0 +1,40 @@
+//! Fig. 4 reproduction on the real TCP deployment: Megha GMs + LM
+//! services vs the Pigeon distributor + coordinator services, replaying
+//! the down-sampled traces in scaled wall-clock time. When `make
+//! artifacts` has been run, the Megha GM's match operation executes the
+//! AOT-compiled XLA artifact (L1 Pallas kernel + L2 plan) via PJRT —
+//! python is never on the request path.
+//!
+//! ```sh
+//! cargo run --release --example prototype_cluster -- --scale smoke
+//! cargo run --release --example prototype_cluster -- --xla   # PJRT match engine
+//! ```
+
+use megha::experiments::{fig4, Scale};
+use megha::runtime::pjrt::artifacts_available;
+use megha::util::args::Args;
+
+fn main() {
+    let args = Args::from_env(&["xla"]);
+    let scale = Scale::parse(&args.get_or("scale", "smoke")).expect("bad --scale");
+    let seed = args.u64("seed", 0);
+
+    if args.flag("xla") && !artifacts_available() {
+        eprintln!("--xla requested but artifacts/ missing; run `make artifacts`");
+        std::process::exit(1);
+    }
+
+    let a = fig4::run(fig4::Workload::Yahoo, scale, seed).expect("fig4a run");
+    let b = fig4::run(fig4::Workload::Google, scale, seed).expect("fig4b run");
+
+    let verdict = |rows: &[fig4::Fig4Row]| {
+        let megha = rows.iter().find(|r| r.framework == "megha").unwrap();
+        let pigeon = rows.iter().find(|r| r.framework == "pigeon").unwrap();
+        megha.summary.p95 <= pigeon.summary.p95
+    };
+    println!(
+        "\nverdict: megha p95 <= pigeon p95 on yahoo: {} — google: {}",
+        if verdict(&a) { "✔" } else { "✘" },
+        if verdict(&b) { "✔" } else { "✘" }
+    );
+}

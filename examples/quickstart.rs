@@ -1,0 +1,45 @@
+//! Quickstart: simulate Megha on a small synthetic workload and print
+//! the paper's core metrics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use megha::config::MeghaConfig;
+use megha::metrics::summarize_jobs;
+use megha::sched::megha::simulate;
+use megha::workload::synthetic::synthetic_fixed;
+
+fn main() {
+    // a 1 000-worker DC at 70% offered load
+    let mut cfg = MeghaConfig::for_workers(1_000);
+    cfg.sim.seed = 42;
+    println!(
+        "topology: {} GMs x {} LMs x {} workers/partition = {} workers",
+        cfg.spec.n_gm,
+        cfg.spec.n_lm,
+        cfg.spec.workers_per_partition,
+        cfg.spec.n_workers()
+    );
+
+    let trace = synthetic_fixed(100, 200, 1.0, 0.7, cfg.spec.n_workers(), 7);
+    println!(
+        "workload: {} jobs / {} tasks, offered load {:.2}",
+        trace.n_jobs(),
+        trace.n_tasks(),
+        trace.offered_load(cfg.spec.n_workers())
+    );
+
+    let out = simulate(&cfg, &trace);
+    let s = summarize_jobs(&out.jobs);
+    println!("\nresults:");
+    println!("  delay in JCT: median {:.4}s  p95 {:.4}s  max {:.4}s", s.median, s.p95, s.max);
+    println!(
+        "  inconsistencies: {} over {} tasks ({:.5}/task)",
+        out.inconsistencies,
+        out.tasks,
+        out.inconsistency_ratio()
+    );
+    println!("  messages {}  scheduling decisions {}  sdps {:.0}", out.messages, out.decisions, out.sdps());
+    println!("\n(see `megha experiment all` for the full paper reproduction)");
+}

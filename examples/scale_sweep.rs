@@ -1,0 +1,34 @@
+//! Fig. 2 reproduction: sweep DC size (10k–50k workers) and offered load,
+//! reporting Megha's 95th-percentile job delay and inconsistency ratio.
+//!
+//! ```sh
+//! cargo run --release --example scale_sweep -- --scale default
+//! ```
+
+use megha::experiments::{fig2, Scale};
+use megha::util::args::Args;
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let scale = Scale::parse(&args.get_or("scale", "default")).expect("bad --scale");
+    let rows = fig2::run(scale, args.u64("seed", 0));
+
+    // paper shape check: within each DC size, delay and inconsistencies
+    // must rise as load approaches 1
+    let mut shape_ok = true;
+    for w in rows.iter().map(|r| r.workers).collect::<std::collections::BTreeSet<_>>() {
+        let mut per: Vec<_> = rows.iter().filter(|r| r.workers == w).collect();
+        per.sort_by(|a, b| a.load.partial_cmp(&b.load).unwrap());
+        if per.len() >= 2 {
+            let first = per.first().unwrap();
+            let last = per.last().unwrap();
+            if last.inconsistency_ratio < first.inconsistency_ratio {
+                shape_ok = false;
+            }
+        }
+    }
+    println!(
+        "\nverdict: inconsistencies rise with load {}",
+        if shape_ok { "✔ (paper shape holds)" } else { "✘" }
+    );
+}

@@ -1,0 +1,105 @@
+"""AOT lowering: jax (L2+L1) -> HLO *text* artifacts for the Rust runtime.
+
+HLO text — NOT ``lowered.compiler_ir(...).serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Writes:
+  match_plan.hlo.txt   — plan_batch(avail f32[P,W], internal f32[P],
+                          rr i32[1], n_tasks i32[]) -> (assign i32[T], free f32[P])
+  delay_stats.hlo.txt  — delay_summary(delays f32[N], mask f32[N],
+                          edges f32[B]) -> (cdf f32[B], moments f32[4])
+  manifest.json        — shapes, for the Rust loader's sanity checks.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_match_plan() -> str:
+    spec = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)
+    lowered = jax.jit(model.plan_batch).lower(
+        spec((model.P, model.W), jnp.float32),
+        spec((model.P,), jnp.float32),
+        spec((1,), jnp.int32),
+        spec((), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_delay_stats() -> str:
+    spec = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)
+    lowered = jax.jit(model.delay_summary).lower(
+        spec((model.N,), jnp.float32),
+        spec((model.N,), jnp.float32),
+        spec((model.B,), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, fn in [("match_plan", lower_match_plan), ("delay_stats", lower_delay_stats)]:
+        text = fn()
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+    manifest = {
+        "match_plan": {
+            "inputs": [
+                {"name": "avail", "shape": [model.P, model.W], "dtype": "f32"},
+                {"name": "internal", "shape": [model.P], "dtype": "f32"},
+                {"name": "rr", "shape": [1], "dtype": "i32"},
+                {"name": "n_tasks", "shape": [], "dtype": "i32"},
+            ],
+            "outputs": [
+                {"name": "assign", "shape": [model.T], "dtype": "i32"},
+                {"name": "free", "shape": [model.P], "dtype": "f32"},
+            ],
+        },
+        "delay_stats": {
+            "inputs": [
+                {"name": "delays", "shape": [model.N], "dtype": "f32"},
+                {"name": "mask", "shape": [model.N], "dtype": "f32"},
+                {"name": "edges", "shape": [model.B], "dtype": "f32"},
+            ],
+            "outputs": [
+                {"name": "cdf", "shape": [model.B], "dtype": "f32"},
+                {"name": "moments", "shape": [4], "dtype": "f32"},
+            ],
+        },
+        "consts": {"P": model.P, "W": model.W, "T": model.T, "N": model.N, "B": model.B},
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: the GM's placement-match hot-spot.
+
+Given the GM's eventually-consistent global availability state — a `[P, W]`
+bitmap of P partitions x W workers (1.0 = free) — compute, per partition:
+
+* ``free[p]``  — number of free workers (a ``[P,W] @ [W,1]`` dot, so the
+  reduction is MXU-shaped on real TPU hardware), and
+* ``key[p]``   — the partition-ordering key used by the GM's round-robin,
+  internal-first search (paper section 3.2/3.4.1):
+
+  - partitions with no free workers sort last (key 0),
+  - *internal* partitions (owned by this GM) with free workers sort first,
+  - within each class, partitions are visited round-robin starting at the
+    GM's rotation cursor ``rr``.
+
+  key[p] = has_free[p] * (internal[p] * P + (P - rot[p])),
+  rot[p] = (p - rr) mod P
+
+  giving disjoint ranges (P, 2P] for internal-free, (0, P] for
+  external-free and {0} for saturated partitions, so a descending sort of
+  ``key`` yields exactly the paper's search order.
+
+The kernel is lowered with ``interpret=True`` (CPU-PJRT cannot run Mosaic
+custom-calls); see DESIGN.md section Hardware-Adaptation for the TPU tiling
+rationale (P-blocked BlockSpec, bitmap resident in VMEM).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default AOT shapes (padded): 1024 partitions x 64 workers = 64 Ki workers.
+P_DEFAULT = 1024
+W_DEFAULT = 64
+BLOCK_P = 128
+
+
+def _match_block(avail_ref, internal_ref, rr_ref, free_ref, key_ref, *, block_p, n_part):
+    """One P-block: free counts via dot, ordering key elementwise."""
+    a = avail_ref[...]  # [block_p, W]
+    ones = jnp.ones((a.shape[1], 1), dtype=a.dtype)
+    free = jnp.dot(a, ones)[:, 0]  # [block_p] -- MXU-shaped reduction
+    pid = pl.program_id(0)
+    idx = pid * block_p + jax.lax.iota(jnp.int32, block_p)
+    rr = rr_ref[0]
+    rot = jnp.mod(idx - rr, n_part).astype(jnp.float32)
+    internal = internal_ref[...]
+    has_free = (free > 0.0).astype(jnp.float32)
+    npf = jnp.float32(n_part)
+    key = has_free * (internal * npf + (npf - rot))
+    free_ref[...] = free
+    key_ref[...] = key
+
+
+def match_score(avail, internal, rr, *, block_p=BLOCK_P):
+    """Pallas-backed match operation.
+
+    Args:
+      avail:    f32[P, W] availability bitmap (1.0 = free).
+      internal: f32[P] 1.0 where the partition is internal to this GM.
+      rr:       i32[1] round-robin rotation cursor (partition index).
+
+    Returns:
+      (free, key): f32[P] free-worker counts and f32[P] ordering keys.
+    """
+    n_part, n_work = avail.shape
+    block_p = min(block_p, n_part)
+    assert n_part % block_p == 0, (n_part, block_p)
+    grid = (n_part // block_p,)
+    kernel = partial(_match_block, block_p=block_p, n_part=n_part)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_p, n_work), lambda i: (i, 0)),
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_part,), jnp.float32),
+            jax.ShapeDtypeStruct((n_part,), jnp.float32),
+        ],
+        interpret=True,
+    )(avail, internal, rr)

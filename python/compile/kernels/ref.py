@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness ground truth).
+
+These are deliberately written in the most obvious vectorised style; the
+pytest suite asserts the Pallas kernels match them exactly (same float32
+arithmetic, so tolerances are tight).
+"""
+
+import jax.numpy as jnp
+
+
+def match_score_ref(avail, internal, rr):
+    """Reference for match_kernel.match_score. Same contract."""
+    n_part = avail.shape[0]
+    free = jnp.sum(avail, axis=1)
+    idx = jnp.arange(n_part, dtype=jnp.int32)
+    rot = jnp.mod(idx - rr[0], n_part).astype(jnp.float32)
+    has_free = (free > 0.0).astype(jnp.float32)
+    npf = jnp.float32(n_part)
+    key = has_free * (internal * npf + (npf - rot))
+    return free, key
+
+
+def delay_stats_ref(delays, mask, edges):
+    """Reference for stats_kernel.delay_stats. Same contract."""
+    le = (delays[:, None] <= edges[None, :]).astype(jnp.float32) * mask[:, None]
+    cdf = jnp.sum(le, axis=0)
+    cnt = jnp.sum(mask)
+    s = jnp.sum(delays * mask)
+    s2 = jnp.sum(delays * delays * mask)
+    mx = jnp.max(jnp.where(mask > 0.0, delays, -jnp.inf))
+    return cdf, jnp.stack([cnt, s, s2, mx])
+
+
+def plan_batch_ref(avail, internal, rr, n_tasks, n_slots):
+    """Reference task->partition plan (mirrors model.plan_batch).
+
+    Greedy fill in the paper's search order: internal partitions first,
+    round-robin from ``rr``, saturating each partition before moving on.
+    Returns (assign i32[n_slots] with -1 padding, free f32[P]).
+    """
+    n_part = avail.shape[0]
+    free, key = match_score_ref(avail, internal, rr)
+    order = jnp.argsort(-key, stable=True)
+    cap = jnp.where(key[order] > 0.0, free[order], 0.0)
+    cum = jnp.cumsum(cap)
+    t = jnp.arange(n_slots, dtype=jnp.float32)
+    pos = jnp.searchsorted(cum, t, side="right")
+    total = cum[-1]
+    valid = t < jnp.minimum(jnp.float32(n_tasks), total)
+    assign = jnp.where(valid, order[jnp.clip(pos, 0, n_part - 1)], -1)
+    return assign.astype(jnp.int32), free

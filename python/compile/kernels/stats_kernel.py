@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: delay-distribution summary (CDF counts + moments).
+
+The metrics pipeline (Figs. 2-4) summarises tens of thousands of per-job
+delay samples into a CDF over fixed bin edges plus first moments. The
+kernel streams N-blocks of samples and accumulates:
+
+* ``cdf[b]``   = #samples <= edges[b]   (masked),
+* ``moments``  = [count, sum, sum_sq, max].
+
+The comparison matrix ``(d[:, None] <= e[None, :])`` reduced over N is a
+``[Nb, B]`` reduction — again dot-shaped for the MXU. interpret=True, as
+everywhere (see match_kernel.py).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_DEFAULT = 4096
+B_DEFAULT = 64
+BLOCK_N = 512
+
+
+def _stats_block(d_ref, m_ref, e_ref, cdf_ref, mom_ref, *, block_n):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        cdf_ref[...] = jnp.zeros_like(cdf_ref)
+        # max (slot 3) starts at -inf so an all-masked input reports -inf
+        # (built via iota: pallas kernels cannot capture array constants)
+        slot = jax.lax.iota(jnp.int32, 4)
+        mom_ref[...] = jnp.where(slot == 3, -jnp.inf, 0.0).astype(jnp.float32)
+
+    d = d_ref[...]  # [block_n]
+    m = m_ref[...]  # [block_n] mask, 1.0 = valid sample
+    e = e_ref[...]  # [B]
+    le = (d[:, None] <= e[None, :]).astype(jnp.float32) * m[:, None]
+    cdf_ref[...] += jnp.sum(le, axis=0)
+    cnt = jnp.sum(m)
+    s = jnp.sum(d * m)
+    s2 = jnp.sum(d * d * m)
+    # masked max: invalid samples contribute -inf
+    mx = jnp.max(jnp.where(m > 0.0, d, -jnp.inf))
+    prev = mom_ref[...]
+    mom_ref[...] = jnp.stack(
+        [prev[0] + cnt, prev[1] + s, prev[2] + s2, jnp.maximum(prev[3], mx)]
+    )
+
+
+def delay_stats(delays, mask, edges, *, block_n=BLOCK_N):
+    """Pallas-backed delay-distribution summary.
+
+    Args:
+      delays: f32[N] delay samples (padded entries arbitrary).
+      mask:   f32[N] 1.0 for valid samples, 0.0 for padding.
+      edges:  f32[B] ascending CDF bin edges.
+
+    Returns:
+      (cdf, moments): f32[B] counts of samples <= edge, and
+      f32[4] = [count, sum, sum_sq, max] (max = -inf when count == 0).
+    """
+    n, b = delays.shape[0], edges.shape[0]
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    kernel = partial(_stats_block, block_n=block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((4,), jnp.float32),
+        ],
+        interpret=True,
+    )(delays, mask, edges)

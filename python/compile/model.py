@@ -1,0 +1,59 @@
+"""L2: the GM's batched placement planner as a jax computation.
+
+``plan_batch`` is the operation a Megha GM runs once per job (paper
+section 3.4.1): scan the eventually-consistent global state for free
+workers, order partitions internal-first / round-robin, and allocate the
+job's tasks greedily, saturating one partition before moving to the next.
+The partition scan is the L1 Pallas kernel; the allocation is a
+sort + cumsum + searchsorted pipeline that XLA fuses well.
+
+``delay_summary`` wraps the stats kernel for the metrics pipeline.
+
+Both are lowered ONCE by aot.py to HLO text; Rust loads them via PJRT and
+calls them from the L3 hot path (rust/src/runtime/). Python never runs at
+request time.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.match_kernel import match_score
+from compile.kernels.stats_kernel import delay_stats
+
+# AOT shapes (fixed at lowering; Rust pads to these).
+P = 1024  # partitions
+W = 64  # workers per partition
+T = 512  # max tasks planned per call
+N = 4096  # max delay samples per summary call
+B = 64  # CDF bin edges
+
+
+def plan_batch(avail, internal, rr, n_tasks):
+    """Plan up to ``n_tasks`` task placements against the global state.
+
+    Args:
+      avail:    f32[P, W] availability bitmap (1.0 = free).
+      internal: f32[P] internal-partition mask for the calling GM.
+      rr:       i32[1] round-robin cursor.
+      n_tasks:  i32[] number of tasks actually requested (<= T).
+
+    Returns:
+      assign: i32[T] partition index per task slot, -1 for unassigned
+              (slot >= n_tasks or DC capacity exhausted).
+      free:   f32[P] free-worker count per partition (for state refresh).
+    """
+    n_part = avail.shape[0]
+    free, key = match_score(avail, internal, rr)
+    order = jnp.argsort(-key, stable=True)
+    cap = jnp.where(key[order] > 0.0, free[order], 0.0)
+    cum = jnp.cumsum(cap)
+    t = jnp.arange(T, dtype=jnp.float32)
+    pos = jnp.searchsorted(cum, t, side="right")
+    total = cum[-1]
+    valid = t < jnp.minimum(n_tasks.astype(jnp.float32), total)
+    assign = jnp.where(valid, order[jnp.clip(pos, 0, n_part - 1)], -1)
+    return assign.astype(jnp.int32), free
+
+
+def delay_summary(delays, mask, edges):
+    """CDF counts + moments of a masked delay sample batch (see stats_kernel)."""
+    return delay_stats(delays, mask, edges)

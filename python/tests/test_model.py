@@ -1,0 +1,138 @@
+"""L2 plan_batch: shape contract + scheduling-policy properties.
+
+The plan is what the Rust GM executes, so the properties tested here are
+the paper's placement rules: capacity is respected, internal partitions
+are preferred, round-robin order holds, saturation before moving on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import plan_batch_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+PLAN = jax.jit(model.plan_batch)
+
+
+def _state(rng, density=0.3):
+    avail = (rng.random((model.P, model.W)) < density).astype(np.float32)
+    internal = np.zeros(model.P, dtype=np.float32)
+    internal[rng.choice(model.P, size=model.P // 4, replace=False)] = 1.0
+    return jnp.asarray(avail), jnp.asarray(internal)
+
+
+def test_shapes_and_dtypes():
+    rng = np.random.default_rng(0)
+    avail, internal = _state(rng)
+    assign, free = PLAN(avail, internal, jnp.asarray([0], jnp.int32), jnp.int32(100))
+    assert assign.shape == (model.T,) and assign.dtype == jnp.int32
+    assert free.shape == (model.P,) and free.dtype == jnp.float32
+
+
+def test_matches_ref():
+    rng = np.random.default_rng(1)
+    avail, internal = _state(rng)
+    rr = jnp.asarray([37], jnp.int32)
+    a, f = PLAN(avail, internal, rr, jnp.int32(300))
+    a_r, f_r = plan_batch_ref(avail, internal, rr, 300, model.T)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(f), np.asarray(f_r))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    density=st.floats(min_value=0.0, max_value=0.9),
+    n_tasks=st.integers(min_value=0, max_value=model.T),
+    rr=st.integers(min_value=0, max_value=model.P - 1),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_plan_properties(density, n_tasks, rr, seed):
+    rng = np.random.default_rng(seed)
+    avail, internal = _state(rng, density)
+    assign, free = PLAN(
+        avail, internal, jnp.asarray([rr], jnp.int32), jnp.int32(n_tasks)
+    )
+    assign = np.asarray(assign)
+    free = np.asarray(free)
+    total_free = int(free.sum())
+
+    # 1. number of assignments = min(n_tasks, capacity); padding is -1
+    n_assigned = int((assign >= 0).sum())
+    assert n_assigned == min(n_tasks, total_free)
+    assert np.all(assign[n_assigned:] == -1)
+
+    # 2. per-partition load never exceeds capacity
+    used = np.bincount(assign[assign >= 0], minlength=model.P)
+    assert np.all(used <= free.astype(np.int64))
+
+    # 3. internal preference: an external partition is used only once every
+    #    internal partition has been saturated
+    internal_np = np.asarray(internal)
+    ext_used = used[(internal_np == 0) & (used > 0)].sum()
+    if ext_used > 0:
+        int_idx = internal_np > 0
+        assert np.array_equal(used[int_idx], free[int_idx].astype(np.int64)), (
+            "external partition used while internal capacity remained"
+        )
+
+
+def test_internal_preference():
+    """With enough internal capacity, no external partition is touched."""
+    rng = np.random.default_rng(5)
+    avail, internal = _state(rng, 0.5)
+    internal_np = np.asarray(internal)
+    free_per_part = np.asarray(avail).sum(axis=1)
+    internal_cap = int(free_per_part[internal_np > 0].sum())
+    n = min(internal_cap, model.T) // 2
+    assign, _ = PLAN(avail, internal, jnp.asarray([0], jnp.int32), jnp.int32(n))
+    assign = np.asarray(assign)
+    used = assign[assign >= 0]
+    assert len(used) == n
+    assert np.all(internal_np[used] > 0), "external partition used despite internal capacity"
+
+
+def test_saturation_before_moving_on():
+    """Tasks fill one partition completely before the next (paper 3.4.1)."""
+    avail = np.zeros((model.P, model.W), dtype=np.float32)
+    avail[10, :5] = 1.0
+    avail[20, :3] = 1.0
+    internal = np.zeros(model.P, dtype=np.float32)
+    internal[[10, 20]] = 1.0
+    assign, _ = PLAN(
+        jnp.asarray(avail), jnp.asarray(internal), jnp.asarray([0], jnp.int32), jnp.int32(8)
+    )
+    assign = np.asarray(assign)
+    # RR from 0: partition 10 first (5 slots), then 20 (3 slots)
+    assert list(assign[:8]) == [10] * 5 + [20] * 3
+    assert np.all(assign[8:] == -1)
+
+
+def test_round_robin_cursor_respected():
+    avail = np.zeros((model.P, model.W), dtype=np.float32)
+    avail[[4, 100, 600], 0] = 1.0
+    internal = np.zeros(model.P, dtype=np.float32)  # all external
+    assign, _ = PLAN(
+        jnp.asarray(avail), jnp.asarray(internal), jnp.asarray([101], jnp.int32), jnp.int32(3)
+    )
+    # RR from 101: 600 first, then 4 (wraps), then 100
+    assert list(np.asarray(assign[:3])) == [600, 4, 100]
+
+
+def test_zero_tasks():
+    rng = np.random.default_rng(2)
+    avail, internal = _state(rng)
+    assign, _ = PLAN(avail, internal, jnp.asarray([0], jnp.int32), jnp.int32(0))
+    assert np.all(np.asarray(assign) == -1)
+
+
+def test_saturated_dc():
+    avail = jnp.zeros((model.P, model.W), dtype=jnp.float32)
+    internal = jnp.ones(model.P, dtype=jnp.float32)
+    assign, free = PLAN(avail, internal, jnp.asarray([0], jnp.int32), jnp.int32(64))
+    assert np.all(np.asarray(assign) == -1)
+    assert np.all(np.asarray(free) == 0.0)

@@ -1,0 +1,75 @@
+"""Pallas delay-stats kernel vs oracle + numpy cross-check."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import delay_stats_ref
+from compile.kernels.stats_kernel import delay_stats
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _case(rng, n, n_valid, b):
+    delays = rng.exponential(1.0, size=n).astype(np.float32)
+    mask = np.zeros(n, dtype=np.float32)
+    mask[:n_valid] = 1.0
+    edges = np.sort(rng.uniform(0.0, 5.0, size=b)).astype(np.float32)
+    return jnp.asarray(delays), jnp.asarray(mask), jnp.asarray(edges)
+
+
+@pytest.mark.parametrize("n,b", [(512, 8), (1024, 64), (4096, 64)])
+def test_stats_matches_ref(n, b):
+    rng = np.random.default_rng(n + b)
+    delays, mask, edges = _case(rng, n, n // 2, b)
+    cdf, mom = delay_stats(delays, mask, edges)
+    cdf_r, mom_r = delay_stats_ref(delays, mask, edges)
+    np.testing.assert_array_equal(np.asarray(cdf), np.asarray(cdf_r))
+    np.testing.assert_allclose(np.asarray(mom), np.asarray(mom_r), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    log_n=st.integers(min_value=9, max_value=12),
+    b=st.sampled_from([4, 16, 64]),
+    frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_stats_hypothesis(log_n, b, frac, seed):
+    n = 2**log_n
+    rng = np.random.default_rng(seed)
+    delays, mask, edges = _case(rng, n, int(frac * n), b)
+    cdf, mom = delay_stats(delays, mask, edges)
+    cdf_r, mom_r = delay_stats_ref(delays, mask, edges)
+    np.testing.assert_array_equal(np.asarray(cdf), np.asarray(cdf_r))
+    np.testing.assert_allclose(np.asarray(mom), np.asarray(mom_r), rtol=1e-5)
+
+
+def test_stats_against_numpy():
+    """Independent numpy check (not just oracle self-consistency)."""
+    rng = np.random.default_rng(7)
+    n = 2048
+    delays = rng.gamma(2.0, 0.5, size=n).astype(np.float32)
+    mask = (rng.random(n) < 0.8).astype(np.float32)
+    edges = np.linspace(0.0, 6.0, 64, dtype=np.float32)
+    cdf, mom = delay_stats(jnp.asarray(delays), jnp.asarray(mask), jnp.asarray(edges))
+    valid = delays[mask > 0]
+    expect_cdf = np.array([(valid <= e).sum() for e in edges], dtype=np.float32)
+    np.testing.assert_array_equal(np.asarray(cdf), expect_cdf)
+    m = np.asarray(mom)
+    assert m[0] == len(valid)
+    np.testing.assert_allclose(m[1], valid.sum(), rtol=1e-4)
+    np.testing.assert_allclose(m[3], valid.max(), rtol=1e-6)
+
+
+def test_stats_all_masked():
+    n, b = 512, 8
+    delays = jnp.ones(n, dtype=jnp.float32)
+    mask = jnp.zeros(n, dtype=jnp.float32)
+    edges = jnp.linspace(0.0, 2.0, b, dtype=jnp.float32)
+    cdf, mom = delay_stats(delays, mask, edges)
+    assert np.all(np.asarray(cdf) == 0.0)
+    m = np.asarray(mom)
+    assert m[0] == 0.0 and np.isneginf(m[3])

@@ -1,0 +1,268 @@
+//! Benchmark suite (criterion is unavailable offline, so this is a
+//! self-contained harness: warmup + timed iterations, median-of-runs).
+//!
+//! Two kinds of benches:
+//! 1. **paper regeneration** — one bench per table/figure (table1, fig2,
+//!    fig3a/b, fig4a/b, headline) at smoke scale, printing the rows and
+//!    their wall-clock cost;
+//! 2. **microbenches** — the hot paths: match engines (Rust vs XLA),
+//!    simulator event throughput, bitmap scans, wire codec.
+//!
+//! Run with `cargo bench` (or `cargo bench -- fig3 match` to filter).
+
+use std::time::{Duration, Instant};
+
+use megha::cluster::AvailMap;
+use megha::config::MeghaConfig;
+use megha::experiments::{fig2, fig3, fig4, headline, table1, Scale};
+use megha::proto::messages::{MapReq, Msg};
+use megha::runtime::match_engine::{MatchPlanner, RustMatchEngine};
+use megha::runtime::pjrt::{artifacts_available, XlaMatchEngine};
+use megha::sched;
+use megha::util::json::Json;
+use megha::util::rng::Rng;
+use megha::workload::synthetic::{synthetic_fixed, yahoo_like};
+
+struct Bench {
+    filter: Vec<String>,
+}
+
+impl Bench {
+    fn enabled(&self, name: &str) -> bool {
+        self.filter.is_empty() || self.filter.iter().any(|f| name.contains(f.as_str()))
+    }
+
+    /// Time `f` (called with an iteration counter), reporting per-op cost.
+    fn time<F: FnMut() -> u64>(&self, name: &str, mut f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        // warmup
+        let mut units = f();
+        let mut samples = Vec::new();
+        let budget = Duration::from_secs(2);
+        let start = Instant::now();
+        while start.elapsed() < budget && samples.len() < 15 {
+            let t0 = Instant::now();
+            units = f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = samples[samples.len() / 2];
+        let per_unit = med / units.max(1) as f64;
+        println!(
+            "bench {name:<42} {:>10.3} ms/iter  {:>12.1} ns/unit  ({} units, {} samples)",
+            med * 1e3,
+            per_unit * 1e9,
+            units,
+            samples.len()
+        );
+    }
+
+    /// Time a whole-experiment regeneration once.
+    fn once<F: FnOnce()>(&self, name: &str, f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        let t0 = Instant::now();
+        f();
+        println!("bench {name:<42} {:>10.3} s total", t0.elapsed().as_secs_f64());
+    }
+}
+
+fn main() {
+    let filter: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with("--"))
+        .collect();
+    let b = Bench { filter };
+    println!("== megha bench suite ==");
+
+    // ---- 1. paper regeneration (smoke scale) ----
+    b.once("paper/table1", || {
+        table1::run(Scale::Smoke, 0);
+    });
+    b.once("paper/fig2_scalability", || {
+        fig2::run(Scale::Smoke, 0);
+    });
+    b.once("paper/fig3a_yahoo_frameworks", || {
+        fig3::run(fig3::Workload::Yahoo, Scale::Smoke, 0);
+    });
+    b.once("paper/fig3b_google_frameworks", || {
+        fig3::run(fig3::Workload::Google, Scale::Smoke, 0);
+    });
+    b.once("paper/fig4a_prototype_yahoo", || {
+        let _ = fig4::run(fig4::Workload::Yahoo, Scale::Smoke, 0);
+    });
+    b.once("paper/fig4b_prototype_google", || {
+        let _ = fig4::run(fig4::Workload::Google, Scale::Smoke, 0);
+    });
+    b.once("paper/headline_ratios", || {
+        headline::run(Scale::Smoke, 0);
+    });
+
+    // ---- 2. microbenches ----
+    bench_match_engines(&b);
+    bench_sim_throughput(&b);
+    bench_bitmap(&b);
+    bench_codec(&b);
+    bench_ablation_batching(&b);
+    bench_ablation_shuffle(&b);
+    println!("== done ==");
+}
+
+/// L1/L2/L3 hot path: the match operation, Rust vs XLA (PJRT).
+fn bench_match_engines(b: &Bench) {
+    let mut rng = Rng::new(1);
+    let p = 80usize; // the fig3 topology size
+    let free: Vec<u32> = (0..p).map(|_| rng.below(65) as u32).collect();
+    let internal: Vec<bool> = (0..p).map(|i| i % 8 == 0).collect();
+    b.time("match/rust_plan_80p", || {
+        let mut total = 0u64;
+        for rr in 0..1000 {
+            let plan = RustMatchEngine.plan(&free, &internal, rr % p, 256);
+            total += plan.len() as u64;
+        }
+        std::hint::black_box(total);
+        1000
+    });
+    let free_big: Vec<u32> = (0..1024).map(|_| rng.below(65) as u32).collect();
+    let internal_big: Vec<bool> = (0..1024).map(|i| i % 8 == 0).collect();
+    b.time("match/rust_plan_1024p", || {
+        let mut total = 0u64;
+        for rr in 0..1000 {
+            let plan = RustMatchEngine.plan(&free_big, &internal_big, rr % 1024, 512);
+            total += plan.len() as u64;
+        }
+        std::hint::black_box(total);
+        1000
+    });
+    if artifacts_available() {
+        let mut eng = XlaMatchEngine::load_default().expect("artifacts");
+        b.time("match/xla_plan_1024p", || {
+            let mut total = 0u64;
+            for rr in 0..20 {
+                let plan = eng.plan(&free_big, &internal_big, rr % 1024, 512);
+                total += plan.len() as u64;
+            }
+            std::hint::black_box(total);
+            20
+        });
+    } else {
+        println!("bench match/xla_plan_1024p                       SKIPPED (run `make artifacts`)");
+    }
+}
+
+/// Simulator throughput: events/s and scheduling decisions/s.
+fn bench_sim_throughput(b: &Bench) {
+    let mut cfg = MeghaConfig::for_workers(3_000);
+    cfg.sim.seed = 1;
+    let trace = synthetic_fixed(200, 100, 1.0, 0.8, cfg.spec.n_workers(), 2);
+    let n_tasks = trace.n_tasks() as u64;
+    b.time("sim/megha_3k_workers_tasks", || {
+        let out = sched::megha::simulate(&cfg, &trace);
+        std::hint::black_box(out.decisions);
+        n_tasks
+    });
+    let trace_y = yahoo_like(300, 3_000, 0.85, 3);
+    let ny = trace_y.n_tasks() as u64;
+    b.time("sim/megha_yahoo300_tasks", || {
+        let out = sched::megha::simulate(&cfg, &trace_y);
+        std::hint::black_box(out.decisions);
+        ny
+    });
+    let mut scfg = megha::config::SparrowConfig::for_workers(3_000);
+    scfg.sim.seed = 1;
+    b.time("sim/sparrow_yahoo300_tasks", || {
+        let out = sched::sparrow::simulate(&scfg, &trace_y);
+        std::hint::black_box(out.messages);
+        ny
+    });
+}
+
+fn bench_bitmap(b: &Bench) {
+    let mut m = AvailMap::all_free(50_000);
+    let mut rng = Rng::new(5);
+    for _ in 0..25_000 {
+        m.set_busy(rng.below(50_000));
+    }
+    b.time("bitmap/count_free_50k_range", || {
+        let mut acc = 0usize;
+        for i in 0..1000 {
+            let lo = (i * 37) % 40_000;
+            acc += m.count_free_in(lo, lo + 625);
+        }
+        std::hint::black_box(acc);
+        1000
+    });
+    b.time("bitmap/pop_push_cycle", || {
+        for _ in 0..10_000 {
+            if let Some(w) = m.pop_free_in(0, 50_000) {
+                m.set_free(w);
+            }
+        }
+        10_000
+    });
+}
+
+fn bench_codec(b: &Bench) {
+    let msg = Msg::VerifyBatch {
+        gm: 2,
+        maps: (0..64)
+            .map(|i| MapReq {
+                job: i,
+                task: i,
+                worker: i * 3,
+                dur_ms: 1500,
+            })
+            .collect(),
+    };
+    b.time("codec/verify_batch64_roundtrip", || {
+        for _ in 0..1000 {
+            let j = msg.to_json().encode();
+            let back = Msg::from_json(&Json::parse(&j).unwrap()).unwrap();
+            std::hint::black_box(&back);
+        }
+        1000
+    });
+}
+
+/// Ablation: §3.4.1 batching — batch cap 1 vs 64 (messages + delay).
+fn bench_ablation_batching(b: &Bench) {
+    if !b.enabled("ablation/batching") {
+        return;
+    }
+    let trace = synthetic_fixed(100, 60, 1.0, 0.9, 960, 4);
+    let mut msgs = Vec::new();
+    for &cap in &[1usize, 8, 64] {
+        let mut cfg = MeghaConfig::for_workers(960);
+        cfg.sim.seed = 4;
+        cfg.max_batch = cap;
+        let out = sched::megha::simulate(&cfg, &trace);
+        msgs.push((cap, out.messages, megha::metrics::summarize_jobs(&out.jobs).p95));
+    }
+    println!("ablation/batching (messages, p95 delay by batch cap):");
+    for (cap, m, p95) in msgs {
+        println!("    max_batch={cap:<3} messages={m:<8} p95={p95:.4}s");
+    }
+}
+
+/// Ablation: §3.3 per-GM shuffle on/off (inconsistency events).
+fn bench_ablation_shuffle(b: &Bench) {
+    if !b.enabled("ablation/shuffle") {
+        return;
+    }
+    let trace = synthetic_fixed(100, 60, 1.0, 0.95, 960, 6);
+    let mut rows = Vec::new();
+    for &shuffle in &[true, false] {
+        let mut cfg = MeghaConfig::for_workers(960);
+        cfg.sim.seed = 6;
+        cfg.shuffle_workers = shuffle;
+        let out = sched::megha::simulate(&cfg, &trace);
+        rows.push((shuffle, out.inconsistencies, out.inconsistency_ratio()));
+    }
+    println!("ablation/shuffle (inconsistencies with/without §3.3 shuffling):");
+    for (s, n, r) in rows {
+        println!("    shuffle={s:<5} inconsistencies={n:<6} ratio={r:.5}");
+    }
+}

@@ -1,0 +1,175 @@
+//! DC topology and worker-availability state.
+//!
+//! Megha's topology (paper Fig. 1): the DC is divided into `n_lm`
+//! clusters, each managed by a Local Manager; each cluster is further
+//! divided into `n_gm` *partitions*, one per Global Manager. Worker node
+//! `ij_n` lives in partition `(gm=i, lm=j)`.
+//!
+//! Partitions are indexed globally as `p = lm * n_gm + gm`, and workers as
+//! `w = p * workers_per_partition + slot`, so a single flat bitmap
+//! ([`AvailMap`]) can represent any entity's view of the whole DC.
+
+pub mod bitmap;
+
+pub use bitmap::AvailMap;
+
+/// A worker node's global index.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct WorkerId(pub u32);
+
+/// A partition's global index (`lm * n_gm + gm`).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct PartitionId(pub u32);
+
+/// DC topology: `n_lm` clusters x `n_gm` partitions x `workers_per_partition`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClusterSpec {
+    pub n_gm: usize,
+    pub n_lm: usize,
+    pub workers_per_partition: usize,
+}
+
+impl ClusterSpec {
+    pub fn new(n_gm: usize, n_lm: usize, workers_per_partition: usize) -> ClusterSpec {
+        assert!(n_gm > 0 && n_lm > 0 && workers_per_partition > 0);
+        ClusterSpec {
+            n_gm,
+            n_lm,
+            workers_per_partition,
+        }
+    }
+
+    /// Choose a topology for a target worker count: keeps the paper's
+    /// defaults (`n_gm` GMs, `n_lm` LMs) and sizes partitions to cover
+    /// at least `workers` nodes.
+    pub fn for_workers(workers: usize, n_gm: usize, n_lm: usize) -> ClusterSpec {
+        let parts = n_gm * n_lm;
+        let wpp = workers.div_ceil(parts).max(1);
+        ClusterSpec::new(n_gm, n_lm, wpp)
+    }
+
+    pub fn n_partitions(&self) -> usize {
+        self.n_gm * self.n_lm
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_partitions() * self.workers_per_partition
+    }
+
+    /// Workers in one LM's cluster.
+    pub fn workers_per_cluster(&self) -> usize {
+        self.n_gm * self.workers_per_partition
+    }
+
+    pub fn partition(&self, gm: usize, lm: usize) -> PartitionId {
+        debug_assert!(gm < self.n_gm && lm < self.n_lm);
+        PartitionId((lm * self.n_gm + gm) as u32)
+    }
+
+    pub fn gm_of_partition(&self, p: PartitionId) -> usize {
+        p.0 as usize % self.n_gm
+    }
+
+    pub fn lm_of_partition(&self, p: PartitionId) -> usize {
+        p.0 as usize / self.n_gm
+    }
+
+    pub fn partition_of_worker(&self, w: WorkerId) -> PartitionId {
+        PartitionId(w.0 / self.workers_per_partition as u32)
+    }
+
+    pub fn lm_of_worker(&self, w: WorkerId) -> usize {
+        self.lm_of_partition(self.partition_of_worker(w))
+    }
+
+    pub fn owner_gm_of_worker(&self, w: WorkerId) -> usize {
+        self.gm_of_partition(self.partition_of_worker(w))
+    }
+
+    pub fn worker(&self, p: PartitionId, slot: usize) -> WorkerId {
+        debug_assert!(slot < self.workers_per_partition);
+        WorkerId(p.0 * self.workers_per_partition as u32 + slot as u32)
+    }
+
+    /// Range of worker ids in partition `p` (half-open).
+    pub fn worker_range(&self, p: PartitionId) -> std::ops::Range<u32> {
+        let lo = p.0 * self.workers_per_partition as u32;
+        lo..lo + self.workers_per_partition as u32
+    }
+
+    /// Range of worker ids in LM `lm`'s whole cluster (half-open).
+    pub fn cluster_worker_range(&self, lm: usize) -> std::ops::Range<u32> {
+        let lo = (lm * self.workers_per_cluster()) as u32;
+        lo..lo + self.workers_per_cluster() as u32
+    }
+
+    /// Partition ids belonging to LM `lm`.
+    pub fn partitions_of_lm(&self, lm: usize) -> impl Iterator<Item = PartitionId> + '_ {
+        let base = lm * self.n_gm;
+        (0..self.n_gm).map(move |g| PartitionId((base + g) as u32))
+    }
+
+    /// Partition ids internal to GM `gm` (one per LM).
+    pub fn internal_partitions(&self, gm: usize) -> impl Iterator<Item = PartitionId> + '_ {
+        (0..self.n_lm).map(move |l| PartitionId((l * self.n_gm + gm) as u32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_indexing_roundtrips() {
+        let s = ClusterSpec::new(3, 4, 10);
+        assert_eq!(s.n_partitions(), 12);
+        assert_eq!(s.n_workers(), 120);
+        for gm in 0..3 {
+            for lm in 0..4 {
+                let p = s.partition(gm, lm);
+                assert_eq!(s.gm_of_partition(p), gm);
+                assert_eq!(s.lm_of_partition(p), lm);
+                for slot in 0..10 {
+                    let w = s.worker(p, slot);
+                    assert_eq!(s.partition_of_worker(w), p);
+                    assert_eq!(s.lm_of_worker(w), lm);
+                    assert_eq!(s.owner_gm_of_worker(w), gm);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_workers_covers_target() {
+        for &(w, g, l) in &[(3000usize, 8usize, 10usize), (13000, 8, 10), (123, 3, 3)] {
+            let s = ClusterSpec::for_workers(w, g, l);
+            assert!(s.n_workers() >= w);
+            assert_eq!(s.n_gm, g);
+            assert_eq!(s.n_lm, l);
+        }
+    }
+
+    #[test]
+    fn internal_partitions_one_per_lm() {
+        let s = ClusterSpec::new(3, 4, 2);
+        let ps: Vec<_> = s.internal_partitions(1).collect();
+        assert_eq!(ps.len(), 4);
+        for p in ps {
+            assert_eq!(s.gm_of_partition(p), 1);
+        }
+    }
+
+    #[test]
+    fn cluster_ranges_partition_the_dc() {
+        let s = ClusterSpec::new(2, 3, 5);
+        let mut seen = vec![false; s.n_workers()];
+        for lm in 0..3 {
+            for w in s.cluster_worker_range(lm) {
+                assert!(!seen[w as usize]);
+                seen[w as usize] = true;
+                assert_eq!(s.lm_of_worker(WorkerId(w)), lm);
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+}

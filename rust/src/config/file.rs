@@ -1,0 +1,110 @@
+//! `key = value` config-file loader (flattened INI-style sections).
+//!
+//! ```text
+//! # experiment config
+//! [megha]
+//! heartbeat_s = 5.0
+//! max_batch = 64
+//! ```
+//! parses to keys `megha.heartbeat_s`, `megha.max_batch`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct ConfigFile {
+    pub values: BTreeMap<String, String>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<ConfigFile> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(sec) = line.strip_prefix('[') {
+                let Some(sec) = sec.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                };
+                section = sec.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got '{line}'", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, v.trim().to_string());
+        }
+        Ok(ConfigFile { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ConfigFile> {
+        ConfigFile::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("config key '{key}': bad number '{v}'")),
+        }
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("config key '{key}': bad integer '{v}'")),
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("config key '{key}': bad bool '{v}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = ConfigFile::parse(
+            "# top\nglobal = 1\n[megha]\nheartbeat_s = 5.0 # inline\nmax_batch = 64\n[sim]\nseed=7\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("global"), Some("1"));
+        assert_eq!(c.f64("megha.heartbeat_s", 0.0).unwrap(), 5.0);
+        assert_eq!(c.usize("megha.max_batch", 0).unwrap(), 64);
+        assert_eq!(c.usize("sim.seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let c = ConfigFile::parse("x = notanumber\nb = yes\n").unwrap();
+        assert_eq!(c.usize("missing", 3).unwrap(), 3);
+        assert!(c.f64("x", 0.0).is_err());
+        assert!(c.bool("b", false).unwrap());
+        assert!(ConfigFile::parse("justkey\n").is_err());
+        assert!(ConfigFile::parse("[open\n").is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Configuration types for all schedulers + a minimal config-file loader.
+//!
+//! File format (offline build — no TOML crate): `key = value` lines with
+//! `#` comments and `[section]` headers flattened to `section.key`.
+
+pub mod file;
+
+use crate::cluster::ClusterSpec;
+use crate::sim::net::NetModel;
+use crate::sim::time::SimTime;
+
+/// Parameters shared by every simulated architecture.
+#[derive(Clone, Debug)]
+pub struct SimParams {
+    /// One-way network latency model (paper: constant 0.5 ms).
+    pub net: NetModel,
+    /// Threshold on estimated (mean) task duration separating short from
+    /// long jobs, for the priority-aware baselines and for Figs. 3c/3d.
+    pub short_threshold: SimTime,
+    /// RNG seed; every run is a pure function of (config, trace, seed).
+    pub seed: u64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            net: NetModel::paper_default(),
+            short_threshold: SimTime::from_secs(90.0),
+            seed: 0,
+        }
+    }
+}
+
+/// Megha (§3): GM/LM federation with eventually-consistent global state.
+#[derive(Clone, Debug)]
+pub struct MeghaConfig {
+    pub spec: ClusterSpec,
+    pub sim: SimParams,
+    /// LM heartbeat interval (paper: 5 s simulation, 10 s prototype).
+    pub heartbeat: SimTime,
+    /// Max task→node mappings per GM→LM batch (§3.4.1 caps batch size).
+    pub max_batch: usize,
+    /// Per-GM worker shuffle to reduce collisions (§3.3). When false the
+    /// ablation bench measures the extra inconsistencies.
+    pub shuffle_workers: bool,
+    /// Use the XLA (PJRT) match engine instead of the Rust fallback.
+    pub use_xla_match: bool,
+}
+
+impl MeghaConfig {
+    /// Paper-shaped defaults for a DC of `workers` nodes.
+    pub fn for_workers(workers: usize) -> MeghaConfig {
+        // paper's prototype uses 3 GMs; simulations use more at scale
+        let n_gm = if workers <= 1000 { 3 } else { 8 };
+        let n_lm = if workers <= 1000 { 3 } else { 10 };
+        MeghaConfig {
+            spec: ClusterSpec::for_workers(workers, n_gm, n_lm),
+            sim: SimParams::default(),
+            heartbeat: SimTime::from_secs(5.0),
+            max_batch: 64,
+            shuffle_workers: true,
+            use_xla_match: false,
+        }
+    }
+}
+
+/// Sparrow (§2.2.2): batch sampling + late binding.
+#[derive(Clone, Debug)]
+pub struct SparrowConfig {
+    pub workers: usize,
+    pub n_schedulers: usize,
+    /// Probe ratio d: d·n probes per n-task job (paper/Sparrow: d = 2).
+    pub probe_ratio: usize,
+    pub sim: SimParams,
+}
+
+impl SparrowConfig {
+    pub fn for_workers(workers: usize) -> SparrowConfig {
+        SparrowConfig {
+            workers,
+            n_schedulers: 8,
+            probe_ratio: 2,
+            sim: SimParams::default(),
+        }
+    }
+}
+
+/// Eagle (§2.2.3): hybrid centralized (long) + distributed (short) with
+/// succinct state sharing and sticky batch probing.
+#[derive(Clone, Debug)]
+pub struct EagleConfig {
+    pub workers: usize,
+    pub n_schedulers: usize,
+    pub probe_ratio: usize,
+    /// Fraction of the DC reserved for short jobs only (long jobs are
+    /// confined to the complement).
+    pub short_partition_frac: f64,
+    pub sim: SimParams,
+}
+
+impl EagleConfig {
+    pub fn for_workers(workers: usize) -> EagleConfig {
+        EagleConfig {
+            workers,
+            n_schedulers: 8,
+            probe_ratio: 2,
+            short_partition_frac: 0.09, // Eagle paper's default split
+            sim: SimParams::default(),
+        }
+    }
+}
+
+/// Pigeon (§2.2.4): distributors + per-group coordinators with weighted
+/// fair queues and workers reserved for high-priority tasks.
+#[derive(Clone, Debug)]
+pub struct PigeonConfig {
+    pub workers: usize,
+    pub n_distributors: usize,
+    pub n_groups: usize,
+    /// Workers per group reserved for high-priority (short) tasks.
+    pub reserved_frac: f64,
+    /// Weighted fair queuing: 1 low-priority task per `wfq_weight` high.
+    pub wfq_weight: usize,
+    pub sim: SimParams,
+}
+
+impl PigeonConfig {
+    pub fn for_workers(workers: usize) -> PigeonConfig {
+        PigeonConfig {
+            workers,
+            n_distributors: 8,
+            n_groups: (workers / 100).clamp(3, 130),
+            reserved_frac: 0.04, // Pigeon paper: ~3.5-4% reserved
+            wfq_weight: 10,
+            sim: SimParams::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn megha_defaults_cover_workers() {
+        for &w in &[480usize, 3000, 13_000, 50_000] {
+            let c = MeghaConfig::for_workers(w);
+            assert!(c.spec.n_workers() >= w);
+        }
+    }
+
+    #[test]
+    fn pigeon_group_count_bounds() {
+        assert_eq!(PigeonConfig::for_workers(200).n_groups, 3);
+        assert_eq!(PigeonConfig::for_workers(13_000).n_groups, 130);
+        assert_eq!(PigeonConfig::for_workers(100_000).n_groups, 130);
+    }
+
+    #[test]
+    fn default_net_is_half_ms() {
+        let p = SimParams::default();
+        match p.net {
+            NetModel::Constant(d) => assert_eq!(d, SimTime::from_millis(0.5)),
+            _ => panic!("default must be constant"),
+        }
+    }
+}

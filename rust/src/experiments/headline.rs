@@ -1,0 +1,72 @@
+//! Headline claim (§5.2/§8): Megha's average-delay reduction factors.
+//!
+//! Paper: Yahoo trace — ×12.5 vs Sparrow, ×2 vs Eagle, ×1.35 vs Pigeon;
+//! Google sub-trace — ×12.89, ×1.52, ×1.7.
+
+use super::fig3::{self, Workload};
+use super::Scale;
+
+#[derive(Debug, Clone)]
+pub struct HeadlineRow {
+    pub workload: &'static str,
+    pub vs_sparrow: f64,
+    pub vs_eagle: f64,
+    pub vs_pigeon: f64,
+}
+
+pub fn compute(scale: Scale, seed: u64) -> Vec<HeadlineRow> {
+    let mut rows = Vec::new();
+    for (w, label) in [(Workload::Yahoo, "yahoo"), (Workload::Google, "google")] {
+        let cmp = fig3::compare(w, scale, seed);
+        let mean = |n: &str| {
+            cmp.iter()
+                .find(|r| r.framework == n)
+                .map(|r| r.all.mean)
+                .unwrap_or(f64::NAN)
+        };
+        let megha = mean("megha").max(1e-9);
+        rows.push(HeadlineRow {
+            workload: label,
+            vs_sparrow: mean("sparrow") / megha,
+            vs_eagle: mean("eagle") / megha,
+            vs_pigeon: mean("pigeon") / megha,
+        });
+    }
+    rows
+}
+
+pub fn run(scale: Scale, seed: u64) -> Vec<HeadlineRow> {
+    println!("\n=== Headline: Megha's mean-delay reduction factors (scale {scale:?}) ===");
+    println!("paper: yahoo ×12.5 / ×2 / ×1.35 — google ×12.89 / ×1.52 / ×1.7 (vs sparrow/eagle/pigeon)");
+    let rows = compute(scale, seed);
+    println!(
+        "{:<10} {:>12} {:>12} {:>12}",
+        "workload", "vs sparrow", "vs eagle", "vs pigeon"
+    );
+    for r in &rows {
+        println!(
+            "{:<10} {:>11.2}x {:>11.2}x {:>11.2}x",
+            r.workload, r.vs_sparrow, r.vs_eagle, r.vs_pigeon
+        );
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn megha_wins_vs_sparrow_at_smoke_scale() {
+        let rows = compute(Scale::Smoke, 17);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(
+                r.vs_sparrow > 1.0,
+                "{}: expected megha to beat sparrow, ratio {}",
+                r.workload,
+                r.vs_sparrow
+            );
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Experiment harness: one entry per table/figure in the paper's §5.
+//!
+//! | id      | paper artefact | module |
+//! |---------|----------------|--------|
+//! | table1  | Table 1        | [`table1`] |
+//! | fig2a   | Fig. 2a (95p delay vs load, DC sizes 10k–50k) | [`fig2`] |
+//! | fig2b   | Fig. 2b (inconsistencies per task)            | [`fig2`] |
+//! | fig3a–d | Fig. 3 (framework comparison, Yahoo/Google)   | [`fig3`] |
+//! | fig4a/b | Fig. 4 (prototype delay distributions)        | [`fig4`] |
+//! | headline| §5.2/§8 delay-reduction ratios                | [`headline`] |
+//!
+//! Every experiment takes a [`Scale`]: `Smoke` for CI-speed sanity runs,
+//! `Default` for the shapes reported in EXPERIMENTS.md, `Paper` for the
+//! full published workload sizes.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod headline;
+pub mod table1;
+
+/// Experiment scale: trade fidelity for wall-clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// seconds-long sanity runs (used by `cargo test` / benches)
+    Smoke,
+    /// minutes-long runs, the EXPERIMENTS.md defaults
+    Default,
+    /// the paper's full workload sizes
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "smoke" => Some(Scale::Smoke),
+            "default" => Some(Scale::Default),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+}
+
+/// Run an experiment by id, printing its table(s) to stdout.
+pub fn run(id: &str, scale: Scale, seed: u64) -> anyhow::Result<()> {
+    match id {
+        "table1" => {
+            table1::run(scale, seed);
+        }
+        "fig2a" | "fig2b" => {
+            fig2::run(scale, seed);
+        }
+        "fig3a" | "fig3c" => {
+            fig3::run(fig3::Workload::Yahoo, scale, seed);
+        }
+        "fig3b" | "fig3d" => {
+            fig3::run(fig3::Workload::Google, scale, seed);
+        }
+        "fig4a" => {
+            fig4::run(fig4::Workload::Yahoo, scale, seed)?;
+        }
+        "fig4b" => {
+            fig4::run(fig4::Workload::Google, scale, seed)?;
+        }
+        "headline" => {
+            headline::run(scale, seed);
+        }
+        "all" => {
+            table1::run(scale, seed);
+            fig2::run(scale, seed);
+            fig3::run(fig3::Workload::Yahoo, scale, seed);
+            fig3::run(fig3::Workload::Google, scale, seed);
+            fig4::run(fig4::Workload::Yahoo, scale, seed)?;
+            fig4::run(fig4::Workload::Google, scale, seed)?;
+            headline::run(scale, seed);
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (try table1, fig2a, fig2b, fig3a-d, fig4a, fig4b, headline, all)"
+        ),
+    }
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! # megha — eventually-consistent federated data-center scheduling
+//!
+//! Production-quality reproduction of *"Eventually-Consistent Federated
+//! Scheduling for Data Center Workloads"* (Thiyyakat et al., 2023).
+//!
+//! The crate is organised in three layers (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the scheduling systems: the Megha GM/LM
+//!   federation ([`sched::megha`]), the Sparrow / Eagle / Pigeon baselines
+//!   ([`sched`]), the deterministic event-driven simulator ([`sim`]), the
+//!   workload subsystem ([`workload`]), the metrics pipeline ([`metrics`]),
+//!   and a real TCP message-passing prototype ([`proto`]).
+//! * **L2/L1 (build-time Python)** — the GM's placement-match hot-spot as a
+//!   JAX + Pallas computation, AOT-lowered to `artifacts/*.hlo.txt` and
+//!   executed from Rust via PJRT ([`runtime`]).
+//!
+//! Quick start:
+//!
+//! ```no_run
+//! use megha::prelude::*;
+//!
+//! let trace = megha::workload::synthetic::synthetic_fixed(64, 50, 1.0, 0.5, 1_000, 42);
+//! let cfg = MeghaConfig::for_workers(1_000);
+//! let outcome = megha::sched::megha::simulate(&cfg, &trace);
+//! let summary = megha::metrics::summarize_jobs(&outcome.jobs);
+//! println!("median job delay: {:.4}s", summary.median);
+//! ```
+
+pub mod cluster;
+pub mod config;
+pub mod experiments;
+pub mod metrics;
+pub mod proto;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Commonly used types, re-exported for examples and binaries.
+pub mod prelude {
+    pub use crate::cluster::{ClusterSpec, WorkerId};
+    pub use crate::config::{EagleConfig, MeghaConfig, PigeonConfig, SimParams, SparrowConfig};
+    pub use crate::metrics::{DelaySummary, JobRecord};
+    pub use crate::sim::time::SimTime;
+    pub use crate::util::rng::Rng;
+    pub use crate::workload::{Job, Trace};
+}

@@ -1,0 +1,195 @@
+//! `megha` — launcher CLI for the scheduling framework.
+//!
+//! ```text
+//! megha experiment <id> [--scale smoke|default|paper] [--seed N]
+//! megha simulate --scheduler megha|sparrow|eagle|pigeon
+//!                (--trace FILE | --workload yahoo|google|fixed --jobs N)
+//!                [--workers N] [--load X] [--seed N] [--xla]
+//! megha prototype --scheduler megha|pigeon [--jobs N] [--time-scale X] [--xla]
+//! megha trace gen --workload yahoo|google|fixed --jobs N --workers N
+//!                 [--load X] [--seed N] --out FILE
+//! megha trace stats --file FILE
+//! ```
+
+use anyhow::{bail, Context, Result};
+use megha::config::MeghaConfig;
+use megha::experiments::{self, Scale};
+use megha::metrics::{summarize_class, summarize_jobs, RunOutcome};
+use megha::proto::{driver, ProtoConfig};
+use megha::runtime::match_engine::RustMatchEngine;
+use megha::util::args::Args;
+use megha::workload::{synthetic, trace as tracefile, JobClass, Trace};
+
+const FLAGS: &[&str] = &["xla", "help", "short-only"];
+
+fn main() {
+    let args = Args::from_env(FLAGS);
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str());
+    if args.flag("help") || cmd.is_none() {
+        print_usage();
+        return Ok(());
+    }
+    match cmd.unwrap() {
+        "experiment" => cmd_experiment(args),
+        "simulate" => cmd_simulate(args),
+        "prototype" => cmd_prototype(args),
+        "trace" => cmd_trace(args),
+        other => bail!("unknown command '{other}' (try --help)"),
+    }
+}
+
+fn print_usage() {
+    println!("{}", include_str!("main.rs").lines()
+        .skip(1)
+        .take_while(|l| l.starts_with("//!"))
+        .map(|l| l.trim_start_matches("//! ").trim_start_matches("//!"))
+        .collect::<Vec<_>>()
+        .join("\n"));
+}
+
+fn scale_of(args: &Args) -> Result<Scale> {
+    let s = args.get_or("scale", "default");
+    Scale::parse(&s).with_context(|| format!("bad --scale '{s}'"))
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .context("experiment id required (e.g. fig3a, table1, all)")?;
+    experiments::run(id, scale_of(args)?, args.u64("seed", 0))
+}
+
+fn make_workload(args: &Args, workers: usize) -> Result<Trace> {
+    if let Some(path) = args.get("trace") {
+        return tracefile::load(std::path::Path::new(path));
+    }
+    let jobs = args.usize("jobs", 500);
+    let load = args.f64("load", 0.8);
+    let seed = args.u64("seed", 0);
+    Ok(match args.get_or("workload", "fixed").as_str() {
+        "yahoo" => synthetic::yahoo_like(jobs, workers, load, seed),
+        "google" => synthetic::google_like(jobs, workers, load, seed),
+        "fixed" => synthetic::synthetic_fixed(
+            args.usize("tasks-per-job", 100),
+            jobs,
+            args.f64("dur", 1.0),
+            load,
+            workers,
+            seed,
+        ),
+        other => bail!("unknown --workload '{other}'"),
+    })
+}
+
+fn print_outcome(name: &str, out: &RunOutcome, short_only: bool) {
+    let s = if short_only {
+        summarize_class(&out.jobs, JobClass::Short)
+    } else {
+        summarize_jobs(&out.jobs)
+    };
+    println!(
+        "{name}: {} jobs, {} tasks | delay median {:.4}s p95 {:.3}s p99 {:.3}s max {:.3}s",
+        s.n, out.tasks, s.median, s.p95, s.p99, s.max
+    );
+    println!(
+        "  makespan {:.1}s | msgs {} | decisions {} | inconsistencies {} ({:.5}/task) | sdps {:.0}",
+        out.makespan.as_secs(),
+        out.messages,
+        out.decisions,
+        out.inconsistencies,
+        out.inconsistency_ratio(),
+        out.sdps()
+    );
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let workers = args.usize("workers", 3_000);
+    let seed = args.u64("seed", 0);
+    let trace = make_workload(args, workers)?;
+    let scheduler = args.get_or("scheduler", "megha");
+    println!(
+        "simulating {scheduler} on '{}' ({} jobs / {} tasks, {} workers)",
+        trace.name,
+        trace.n_jobs(),
+        trace.n_tasks(),
+        workers
+    );
+    let out = if scheduler == "megha" && args.flag("xla") {
+        let mut cfg = MeghaConfig::for_workers(workers);
+        cfg.sim.seed = seed;
+        let mut eng = megha::runtime::pjrt::XlaMatchEngine::load_default()
+            .context("run `make artifacts` first")?;
+        megha::sched::megha::simulate_with(&cfg, &trace, &mut eng, None)
+    } else {
+        megha::experiments::fig3::run_framework(&scheduler, workers, seed, &trace)
+    };
+    let _ = RustMatchEngine; // default engine, referenced for docs
+    print_outcome(&scheduler, &out, args.flag("short-only"));
+    Ok(())
+}
+
+fn cmd_prototype(args: &Args) -> Result<()> {
+    let scheduler = args.get_or("scheduler", "megha");
+    let mut cfg = ProtoConfig {
+        time_scale: args.f64("time-scale", 0.05),
+        use_xla_match: args.flag("xla"),
+        ..ProtoConfig::default()
+    };
+    cfg.heartbeat = std::time::Duration::from_millis(args.u64("heartbeat-ms", 500));
+    let trace = make_workload(args, cfg.total_workers())?;
+    println!(
+        "prototype {scheduler}: {} GMs / {} clusters x {} slots, {} jobs / {} tasks",
+        cfg.n_gm,
+        cfg.n_clusters,
+        cfg.workers_per_cluster,
+        trace.n_jobs(),
+        trace.n_tasks()
+    );
+    let out = match scheduler.as_str() {
+        "megha" => driver::run_megha(&cfg, &trace)?,
+        "pigeon" => driver::run_pigeon(&cfg, &trace)?,
+        other => bail!("prototype supports megha|pigeon, not '{other}'"),
+    };
+    print_outcome(&scheduler, &out, args.flag("short-only"));
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("gen") => {
+            let workers = args.usize("workers", 3_000);
+            let trace = make_workload(args, workers)?;
+            let out = args.get("out").context("--out FILE required")?;
+            tracefile::save(&trace, std::path::Path::new(out))?;
+            println!(
+                "wrote {} ({} jobs / {} tasks)",
+                out,
+                trace.n_jobs(),
+                trace.n_tasks()
+            );
+            Ok(())
+        }
+        Some("stats") => {
+            let trace = if let Some(f) = args.get("file") {
+                tracefile::load(std::path::Path::new(f))?
+            } else {
+                bail!("--file FILE required (or use `megha experiment table1`)")
+            };
+            println!("{}", megha::workload::stats::header());
+            println!(
+                "{}",
+                megha::workload::stats::format_row(&megha::workload::stats::trace_stats(&trace))
+            );
+            Ok(())
+        }
+        _ => bail!("usage: megha trace gen|stats ..."),
+    }
+}

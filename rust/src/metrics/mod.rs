@@ -1,0 +1,240 @@
+//! Metrics pipeline: JCT, delay decomposition (Eqs. 1–5), summaries.
+//!
+//! Every simulator/prototype run produces a [`RunOutcome`]: per-job
+//! [`JobRecord`]s (enough to compute Eq. 2 delays) plus run-wide counters
+//! (inconsistency events for Fig. 2b, message counts, scheduling
+//! decisions). Summaries are exact (full sort), not sketched.
+
+use crate::sim::time::SimTime;
+use crate::util::stats::{mean, percentile};
+use crate::workload::JobClass;
+
+/// Per-job outcome. Delay (Eq. 2) = JCT − IdealJCT, where IdealJCT is the
+/// longest task's duration (omniscient scheduler, infinite DC).
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    pub job_id: u32,
+    pub submit: SimTime,
+    pub complete: SimTime,
+    pub ideal_jct: SimTime,
+    pub n_tasks: usize,
+    pub class: JobClass,
+}
+
+impl JobRecord {
+    /// Eq. 1: job completion time.
+    pub fn jct(&self) -> SimTime {
+        self.complete - self.submit
+    }
+
+    /// Eq. 2: delay in job completion time, seconds.
+    pub fn delay(&self) -> f64 {
+        (self.jct().saturating_sub(self.ideal_jct)).as_secs()
+    }
+}
+
+/// Aggregate per-task delay components (Eq. 5), summed over a run.
+/// Components that do not apply to a given architecture stay zero
+/// (e.g. Sparrow has no scheduler-side queue).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DelayBreakdown {
+    pub queue_scheduler_s: f64,
+    pub proc_s: f64,
+    pub comm_s: f64,
+    pub queue_worker_s: f64,
+    pub exec_s: f64,
+}
+
+impl DelayBreakdown {
+    pub fn total(&self) -> f64 {
+        self.queue_scheduler_s + self.proc_s + self.comm_s + self.queue_worker_s + self.exec_s
+    }
+}
+
+/// Everything a scheduler run reports.
+#[derive(Clone, Debug, Default)]
+pub struct RunOutcome {
+    pub jobs: Vec<JobRecord>,
+    /// Inconsistency events (Megha: LM-rejected mappings; others: 0).
+    pub inconsistencies: u64,
+    /// Tasks launched (denominator of Fig. 2b's ratio).
+    pub tasks: u64,
+    /// Total messages exchanged (communication overhead).
+    pub messages: u64,
+    /// Scheduling decisions made (SDPS numerator).
+    pub decisions: u64,
+    /// Simulated makespan.
+    pub makespan: SimTime,
+    pub breakdown: DelayBreakdown,
+}
+
+impl RunOutcome {
+    /// Fig. 2b's y-axis: inconsistency events per task request.
+    pub fn inconsistency_ratio(&self) -> f64 {
+        if self.tasks == 0 {
+            0.0
+        } else {
+            self.inconsistencies as f64 / self.tasks as f64
+        }
+    }
+
+    /// Scheduling decisions per simulated second.
+    pub fn sdps(&self) -> f64 {
+        let s = self.makespan.as_secs();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.decisions as f64 / s
+        }
+    }
+
+    /// Mean DC utilization over the run (§2.3.3): executed task-seconds
+    /// divided by `workers × makespan`. Lower delays at equal work mean
+    /// a shorter makespan and therefore higher utilization — the paper's
+    /// "reducing unnecessary queuing ... results in better utilization".
+    pub fn utilization(&self, workers: usize, total_work_s: f64) -> f64 {
+        let cap = workers as f64 * self.makespan.as_secs();
+        if cap <= 0.0 {
+            0.0
+        } else {
+            (total_work_s / cap).min(1.0)
+        }
+    }
+}
+
+/// Distribution summary of job delays (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DelaySummary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+pub fn summarize(delays: &[f64]) -> DelaySummary {
+    if delays.is_empty() {
+        return DelaySummary::default();
+    }
+    let mut v = delays.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    DelaySummary {
+        n: v.len(),
+        mean: mean(&v),
+        median: percentile(&v, 50.0),
+        p95: percentile(&v, 95.0),
+        p99: percentile(&v, 99.0),
+        max: *v.last().unwrap(),
+    }
+}
+
+pub fn summarize_jobs(jobs: &[JobRecord]) -> DelaySummary {
+    let d: Vec<f64> = jobs.iter().map(|j| j.delay()).collect();
+    summarize(&d)
+}
+
+/// Summary restricted to one job class (Figs. 3c/3d: short jobs).
+pub fn summarize_class(jobs: &[JobRecord], class: JobClass) -> DelaySummary {
+    let d: Vec<f64> = jobs
+        .iter()
+        .filter(|j| j.class == class)
+        .map(|j| j.delay())
+        .collect();
+    summarize(&d)
+}
+
+/// Job delays as a plain vector (for CDFs / the XLA stats path).
+pub fn delays(jobs: &[JobRecord]) -> Vec<f64> {
+    jobs.iter().map(|j| j.delay()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u32, submit: f64, complete: f64, ideal: f64) -> JobRecord {
+        JobRecord {
+            job_id: id,
+            submit: SimTime::from_secs(submit),
+            complete: SimTime::from_secs(complete),
+            ideal_jct: SimTime::from_secs(ideal),
+            n_tasks: 1,
+            class: JobClass::Short,
+        }
+    }
+
+    #[test]
+    fn jct_and_delay() {
+        let r = rec(1, 10.0, 15.0, 3.0);
+        assert_eq!(r.jct(), SimTime::from_secs(5.0));
+        assert!((r.delay() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delay_clamped_at_zero() {
+        // completion exactly at ideal → zero delay; never negative
+        let r = rec(1, 0.0, 3.0, 3.0);
+        assert_eq!(r.delay(), 0.0);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let jobs: Vec<JobRecord> = (0..100)
+            .map(|i| rec(i, 0.0, 1.0 + i as f64, 1.0))
+            .collect();
+        let s = summarize_jobs(&jobs);
+        assert_eq!(s.n, 100);
+        assert!((s.median - 49.5).abs() < 1e-9);
+        assert!((s.p95 - 94.05).abs() < 1e-9);
+        assert_eq!(s.max, 99.0);
+    }
+
+    #[test]
+    fn class_filter() {
+        let mut jobs = vec![rec(0, 0.0, 2.0, 1.0)];
+        jobs.push(JobRecord {
+            class: JobClass::Long,
+            ..rec(1, 0.0, 11.0, 1.0)
+        });
+        let s_short = summarize_class(&jobs, JobClass::Short);
+        let s_long = summarize_class(&jobs, JobClass::Long);
+        assert_eq!(s_short.n, 1);
+        assert!((s_short.max - 1.0).abs() < 1e-9);
+        assert_eq!(s_long.n, 1);
+        assert!((s_long.max - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn outcome_ratios() {
+        let o = RunOutcome {
+            inconsistencies: 5,
+            tasks: 1000,
+            decisions: 2000,
+            makespan: SimTime::from_secs(10.0),
+            ..Default::default()
+        };
+        assert!((o.inconsistency_ratio() - 0.005).abs() < 1e-12);
+        assert!((o.sdps() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = summarize(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.p95, 0.0);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let o = RunOutcome {
+            makespan: SimTime::from_secs(10.0),
+            ..Default::default()
+        };
+        // 100 workers × 10 s = 1000 capacity; 400 task-seconds done
+        assert!((o.utilization(100, 400.0) - 0.4).abs() < 1e-12);
+        assert_eq!(o.utilization(100, 2000.0), 1.0); // clamped
+        let empty = RunOutcome::default();
+        assert_eq!(empty.utilization(100, 5.0), 0.0);
+    }
+}

@@ -1,0 +1,74 @@
+//! Wire format: 4-byte big-endian length prefix + JSON body.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+const MAX_FRAME: usize = 64 << 20;
+
+pub fn write_frame<W: Write>(w: &mut W, msg: &Json) -> Result<()> {
+    let body = msg.encode();
+    let len = body.len() as u32;
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Json> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf).context("reading frame length")?;
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        bail!("frame too large: {len} bytes");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading frame body")?;
+    let text = std::str::from_utf8(&body).context("frame not utf-8")?;
+    Json::parse(text).map_err(|e| anyhow::anyhow!("frame parse: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_over_a_buffer() {
+        let msg = Json::obj(vec![
+            ("type", Json::str("verify")),
+            ("maps", Json::arr(vec![Json::num(1.0), Json::num(2.0)])),
+        ]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        write_frame(&mut buf, &Json::Null).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), msg);
+        assert_eq!(read_frame(&mut r).unwrap(), Json::Null);
+        assert!(read_frame(&mut r).is_err()); // EOF
+    }
+
+    #[test]
+    fn roundtrip_over_tcp() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let m = read_frame(&mut s).unwrap();
+            write_frame(&mut s, &m).unwrap(); // echo
+        });
+        let mut c = std::net::TcpStream::connect(addr).unwrap();
+        let msg = Json::obj(vec![("x", Json::num(42.0))]);
+        write_frame(&mut c, &msg).unwrap();
+        assert_eq!(read_frame(&mut c).unwrap(), msg);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME as u32 + 1).to_be_bytes());
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+}

@@ -1,0 +1,267 @@
+//! End-to-end prototype runs: deploy services, replay a trace in real
+//! (scaled) time, collect a [`RunOutcome`] comparable with the simulator.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::gm_client::{run_gm, GmCounters, GmIn};
+use super::lm_service::{spawn_lm, Writer};
+use super::messages::{Msg, TaskSlice};
+use super::pigeon_proto::spawn_coordinator;
+use super::ProtoConfig;
+use crate::metrics::{JobRecord, RunOutcome};
+use crate::sim::time::SimTime;
+use crate::workload::Trace;
+
+fn scaled_ms(cfg: &ProtoConfig, t: SimTime) -> u64 {
+    (t.as_secs() * cfg.time_scale * 1e3).round().max(1.0) as u64
+}
+
+/// Deploy Megha (GM threads + LM TCP services) and replay `trace`.
+pub fn run_megha(cfg: &ProtoConfig, trace: &Trace) -> Result<RunOutcome> {
+    assert!(cfg.workers_per_cluster % cfg.n_gm == 0, "wpc must divide by n_gm");
+    let mut lms = Vec::new();
+    for _ in 0..cfg.n_clusters {
+        lms.push(spawn_lm(
+            cfg.workers_per_cluster,
+            cfg.n_gm,
+            cfg.heartbeat,
+            cfg.launch_overhead,
+        )?);
+    }
+    let addrs: Vec<_> = lms.iter().map(|l| l.addr).collect();
+
+    let mut txs = Vec::new();
+    let mut handles = Vec::new();
+    for gm in 0..cfg.n_gm {
+        let (tx, rx) = mpsc::channel::<GmIn>();
+        let tx_self = tx.clone();
+        let addrs = addrs.clone();
+        let cfg2 = cfg.clone();
+        txs.push(tx);
+        handles.push(std::thread::spawn(move || {
+            run_gm(gm as u32, &addrs, &cfg2, rx, tx_self)
+        }));
+    }
+
+    // real-time trace replay
+    let start = Instant::now();
+    for (i, job) in trace.jobs.iter().enumerate() {
+        let at = Duration::from_millis(scaled_ms(cfg, job.submit));
+        if let Some(wait) = at.checked_sub(start.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let durs_ms: Vec<u64> = job.durations.iter().map(|&d| scaled_ms(cfg, d)).collect();
+        txs[i % cfg.n_gm]
+            .send(GmIn::Job { idx: i as u32, durs_ms })
+            .context("GM input channel closed early")?;
+    }
+    for tx in &txs {
+        let _ = tx.send(GmIn::Eof);
+    }
+
+    let mut records: Vec<JobRecord> = Vec::new();
+    let mut counters = GmCounters::default();
+    for h in handles {
+        let (done, c) = h.join().expect("GM thread panicked")?;
+        counters.inconsistencies += c.inconsistencies;
+        counters.tasks += c.tasks;
+        counters.messages += c.messages;
+        counters.decisions += c.decisions;
+        for d in done {
+            records.push(to_record(cfg, trace, d.idx, d.submitted, d.completed));
+        }
+    }
+    for lm in lms {
+        lm.shutdown();
+    }
+    records.sort_by_key(|r| r.job_id);
+    Ok(RunOutcome {
+        jobs: records,
+        inconsistencies: counters.inconsistencies,
+        tasks: counters.tasks,
+        messages: counters.messages,
+        decisions: counters.decisions,
+        makespan: SimTime::from_secs(start.elapsed().as_secs_f64() / cfg.time_scale),
+        ..Default::default()
+    })
+}
+
+/// Deploy Pigeon (distributor + coordinator TCP services) and replay `trace`.
+pub fn run_pigeon(cfg: &ProtoConfig, trace: &Trace) -> Result<RunOutcome> {
+    let n_groups = cfg.n_clusters;
+    let mut coords = Vec::new();
+    for _ in 0..n_groups {
+        coords.push(spawn_coordinator(
+            cfg.workers_per_cluster,
+            cfg.reserved_frac,
+            cfg.wfq_weight,
+            cfg.launch_overhead,
+        )?);
+    }
+
+    // distributor: one connection per coordinator + a completion channel
+    let (tx, rx) = mpsc::channel::<u32>(); // completed job ids (per task)
+    let mut writers = Vec::new();
+    for c in &coords {
+        let stream = std::net::TcpStream::connect(c.addr)?;
+        let w = Writer::new(stream.try_clone()?);
+        w.send(&Msg::Register { id: 0 })?;
+        writers.push(w);
+        let tx = tx.clone();
+        let mut rd = stream;
+        std::thread::spawn(move || loop {
+            match super::codec::read_frame(&mut rd) {
+                Ok(f) => {
+                    if let Ok(Msg::TaskDone { job, .. }) = Msg::from_json(&f) {
+                        if tx.send(job).is_err() {
+                            break;
+                        }
+                    }
+                }
+                Err(_) => break,
+            }
+        });
+    }
+
+    let start = Instant::now();
+    let mut submitted: Vec<Option<Instant>> = vec![None; trace.n_jobs()];
+    let mut remaining: Vec<u32> = trace.jobs.iter().map(|j| j.n_tasks() as u32).collect();
+    let mut completed: Vec<Option<Instant>> = vec![None; trace.n_jobs()];
+    let mut messages = 0u64;
+
+    let mut pending_done = 0usize;
+    let mut seen = 0usize;
+    for (i, job) in trace.jobs.iter().enumerate() {
+        let at = Duration::from_millis(scaled_ms(cfg, job.submit));
+        if let Some(wait) = at.checked_sub(start.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        // drain any completions that arrived meanwhile
+        while let Ok(j) = rx.try_recv() {
+            note_done(&mut remaining, &mut completed, j);
+            seen += 1;
+        }
+        submitted[i] = Some(Instant::now());
+        pending_done += job.n_tasks();
+        let high = job.class(cfg.short_threshold) == crate::workload::JobClass::Short;
+        let mut slices: Vec<Vec<u64>> = vec![Vec::new(); n_groups];
+        for (t, &d) in job.durations.iter().enumerate() {
+            slices[(i + t) % n_groups].push(scaled_ms(cfg, d));
+        }
+        for (g, durs_ms) in slices.into_iter().enumerate() {
+            if durs_ms.is_empty() {
+                continue;
+            }
+            messages += 1;
+            writers[g].send(&Msg::Tasks(TaskSlice {
+                job: i as u32,
+                durs_ms,
+                high,
+            }))?;
+        }
+    }
+    // wait for all tasks
+    while seen < pending_done {
+        let j = rx
+            .recv_timeout(Duration::from_secs(120))
+            .context("pigeon prototype stalled")?;
+        note_done(&mut remaining, &mut completed, j);
+        seen += 1;
+    }
+
+    for c in coords {
+        c.shutdown();
+    }
+
+    let records: Vec<JobRecord> = (0..trace.n_jobs())
+        .map(|i| {
+            to_record(
+                cfg,
+                trace,
+                i as u32,
+                submitted[i].expect("job never submitted"),
+                completed[i].expect("job never completed"),
+            )
+        })
+        .collect();
+    Ok(RunOutcome {
+        jobs: records,
+        tasks: pending_done as u64,
+        decisions: pending_done as u64,
+        messages,
+        makespan: SimTime::from_secs(start.elapsed().as_secs_f64() / cfg.time_scale),
+        ..Default::default()
+    })
+}
+
+fn note_done(remaining: &mut [u32], completed: &mut [Option<Instant>], job: u32) {
+    let j = job as usize;
+    if remaining[j] > 0 {
+        remaining[j] -= 1;
+        if remaining[j] == 0 {
+            completed[j] = Some(Instant::now());
+        }
+    }
+}
+
+/// Convert wall-clock timings back to trace-scale [`JobRecord`]s.
+fn to_record(
+    cfg: &ProtoConfig,
+    trace: &Trace,
+    idx: u32,
+    submitted: Instant,
+    completed: Instant,
+) -> JobRecord {
+    let j = &trace.jobs[idx as usize];
+    let jct_s = completed.duration_since(submitted).as_secs_f64() / cfg.time_scale;
+    JobRecord {
+        job_id: idx,
+        submit: j.submit,
+        complete: j.submit + SimTime::from_secs(jct_s),
+        ideal_jct: j.ideal_jct(),
+        n_tasks: j.n_tasks(),
+        class: j.class(cfg.short_threshold),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::summarize_jobs;
+    use crate::workload::synthetic::synthetic_fixed;
+
+    fn tiny_cfg() -> ProtoConfig {
+        ProtoConfig {
+            n_gm: 2,
+            n_clusters: 2,
+            workers_per_cluster: 8,
+            heartbeat: Duration::from_millis(100),
+            launch_overhead: Duration::from_millis(2),
+            time_scale: 0.05,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn megha_prototype_end_to_end() {
+        let cfg = tiny_cfg();
+        let trace = synthetic_fixed(6, 8, 0.5, 0.6, cfg.total_workers(), 3);
+        let out = run_megha(&cfg, &trace).expect("megha prototype run");
+        assert_eq!(out.jobs.len(), 8);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+        let s = summarize_jobs(&out.jobs);
+        assert!(s.max < 120.0, "absurd delay {}", s.max);
+    }
+
+    #[test]
+    fn pigeon_prototype_end_to_end() {
+        let cfg = tiny_cfg();
+        let trace = synthetic_fixed(6, 8, 0.5, 0.6, cfg.total_workers(), 4);
+        let out = run_pigeon(&cfg, &trace).expect("pigeon prototype run");
+        assert_eq!(out.jobs.len(), 8);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+    }
+}

@@ -1,0 +1,290 @@
+//! Megha GM as a client thread: eventually-consistent global state,
+//! match operation, batching, completion tracking.
+//!
+//! The GM owns one TCP connection per LM. Reader threads funnel every
+//! inbound message into the GM's single event channel, so GM logic is
+//! single-threaded (like the paper's GM event loop) while I/O is
+//! concurrent.
+
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::codec::read_frame;
+use super::lm_service::Writer;
+use super::messages::{MapReq, Msg};
+use super::ProtoConfig;
+use crate::cluster::{AvailMap, ClusterSpec, PartitionId};
+use crate::runtime::match_engine::{MatchPlanner, RustMatchEngine};
+
+/// Inbound events for the GM loop.
+pub enum GmIn {
+    /// driver: a job assigned to this GM (durations already ms-scaled)
+    Job { idx: u32, durs_ms: Vec<u64> },
+    /// driver: no more jobs will arrive
+    Eof,
+    /// reader threads: message from LM `lm`
+    Lm(u32, Msg),
+}
+
+/// Per-job completion record (wall clock).
+pub struct GmJobDone {
+    pub idx: u32,
+    pub submitted: Instant,
+    pub completed: Instant,
+}
+
+/// Counters mirrored from the simulator's RunOutcome.
+#[derive(Default, Debug, Clone, Copy)]
+pub struct GmCounters {
+    pub inconsistencies: u64,
+    pub tasks: u64,
+    pub messages: u64,
+    pub decisions: u64,
+}
+
+struct JobSt {
+    pending: VecDeque<u32>,
+    durs_ms: Vec<u64>,
+    remaining: u32,
+    submitted: Instant,
+}
+
+/// Run one GM to completion. Returns job records + counters.
+pub fn run_gm(
+    gm_id: u32,
+    lm_addrs: &[SocketAddr],
+    cfg: &ProtoConfig,
+    rx: Receiver<GmIn>,
+    tx_self: Sender<GmIn>,
+) -> Result<(Vec<GmJobDone>, GmCounters)> {
+    let n_lm = lm_addrs.len();
+    let spec = ClusterSpec::new(cfg.n_gm, n_lm, cfg.workers_per_cluster / cfg.n_gm);
+    let n_part = spec.n_partitions();
+
+    // connect + register with every LM; spawn reader threads
+    let mut writers: Vec<Writer> = Vec::new();
+    for (lm, addr) in lm_addrs.iter().enumerate() {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("GM{gm_id} connecting to LM{lm}"))?;
+        let writer = Writer::new(stream.try_clone()?);
+        writer.send(&Msg::Register { id: gm_id })?;
+        writers.push(writer);
+        let tx = tx_self.clone();
+        let mut rd = stream;
+        std::thread::spawn(move || loop {
+            match read_frame(&mut rd) {
+                Ok(frame) => match Msg::from_json(&frame) {
+                    Ok(m) => {
+                        if tx.send(GmIn::Lm(lm as u32, m)).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                },
+                Err(_) => break,
+            }
+        });
+    }
+
+    // the match engine: Rust by default, XLA (PJRT) when configured —
+    // python never runs here; the artifact was compiled at build time.
+    let mut planner: Box<dyn MatchPlanner> = if cfg.use_xla_match {
+        Box::new(
+            crate::runtime::pjrt::XlaMatchEngine::load_default()
+                .context("loading XLA match engine (run `make artifacts`)")?,
+        )
+    } else {
+        Box::new(RustMatchEngine)
+    };
+
+    let mut state = AvailMap::all_free(spec.n_workers());
+    let mut rr: usize = (gm_id as usize * n_part) / cfg.n_gm.max(1);
+    let scan_rot = (gm_id as usize * spec.workers_per_partition) / cfg.n_gm.max(1);
+    let mut queue: VecDeque<u32> = VecDeque::new();
+    let mut jobs: Vec<Option<JobSt>> = Vec::new();
+    let mut done: Vec<GmJobDone> = Vec::new();
+    let mut counters = GmCounters::default();
+    let mut eof = false;
+    let mut open_jobs = 0usize;
+
+    let mut free_counts = vec![0u32; n_part];
+    let mut internal = vec![false; n_part];
+
+    loop {
+        if eof && open_jobs == 0 {
+            break;
+        }
+        let ev = rx.recv().context("GM event channel closed")?;
+        match ev {
+            GmIn::Job { idx, durs_ms } => {
+                let slot = idx as usize;
+                if jobs.len() <= slot {
+                    jobs.resize_with(slot + 1, || None);
+                }
+                jobs[slot] = Some(JobSt {
+                    pending: (0..durs_ms.len() as u32).collect(),
+                    remaining: durs_ms.len() as u32,
+                    durs_ms,
+                    submitted: Instant::now(),
+                });
+                open_jobs += 1;
+                queue.push_back(idx);
+            }
+            GmIn::Eof => eof = true,
+            GmIn::Lm(lm, msg) => {
+                counters.messages += 1;
+                match msg {
+                    Msg::BatchReply { invalid, free } => {
+                        apply_snapshot(&mut state, &spec, lm as usize, &free);
+                        counters.inconsistencies += invalid.len() as u64;
+                        for &(job, task) in invalid.iter().rev() {
+                            if let Some(js) = jobs[job as usize].as_mut() {
+                                js.pending.push_front(task);
+                            }
+                            if !queue.contains(&job) {
+                                queue.push_front(job);
+                            }
+                        }
+                    }
+                    Msg::TaskDone { job, worker, reuse, .. } => {
+                        counters.tasks += 1; // one verified launch completed
+                        let g = spec.cluster_worker_range(lm as usize).start as usize
+                            + worker as usize;
+                        if reuse {
+                            state.set_free(g);
+                        }
+                        if let Some(js) = jobs[job as usize].as_mut() {
+                            js.remaining -= 1;
+                            if js.remaining == 0 {
+                                let js = jobs[job as usize].take().unwrap();
+                                done.push(GmJobDone {
+                                    idx: job,
+                                    submitted: js.submitted,
+                                    completed: Instant::now(),
+                                });
+                                open_jobs -= 1;
+                            }
+                        }
+                    }
+                    Msg::WorkerFreed { worker } => {
+                        let g = spec.cluster_worker_range(lm as usize).start as usize
+                            + worker as usize;
+                        state.set_free(g);
+                    }
+                    Msg::Heartbeat { free } => {
+                        apply_snapshot(&mut state, &spec, lm as usize, &free);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        try_schedule(
+            gm_id, &spec, cfg, &mut state, &mut rr, scan_rot, &mut queue, &mut jobs,
+            planner.as_mut(), &mut free_counts, &mut internal, &writers, &mut counters,
+        );
+    }
+
+    for w in &writers {
+        let _ = w.send(&Msg::Shutdown);
+    }
+    Ok((done, counters))
+}
+
+fn apply_snapshot(state: &mut AvailMap, spec: &ClusterSpec, lm: usize, free: &[u32]) {
+    let r = spec.cluster_worker_range(lm);
+    for g in r.clone() {
+        state.set_busy(g as usize);
+    }
+    for &w in free {
+        let g = r.start as usize + w as usize;
+        if g < r.end as usize {
+            state.set_free(g);
+        }
+    }
+}
+
+/// Mirror of the simulator's GM loop (sched::megha::engine::try_schedule).
+#[allow(clippy::too_many_arguments)]
+fn try_schedule(
+    gm_id: u32,
+    spec: &ClusterSpec,
+    cfg: &ProtoConfig,
+    state: &mut AvailMap,
+    rr: &mut usize,
+    scan_rot: usize,
+    queue: &mut VecDeque<u32>,
+    jobs: &mut [Option<JobSt>],
+    planner: &mut dyn MatchPlanner,
+    free_counts: &mut [u32],
+    internal: &mut [bool],
+    writers: &[Writer],
+    counters: &mut GmCounters,
+) {
+    let n_part = spec.n_partitions();
+    loop {
+        let Some(&jidx) = queue.front() else { break };
+        let Some(js) = jobs[jidx as usize].as_mut() else {
+            queue.pop_front();
+            continue;
+        };
+        if js.pending.is_empty() {
+            queue.pop_front();
+            continue;
+        }
+        if state.free_count() == 0 {
+            break;
+        }
+        for p in 0..n_part {
+            let r = spec.worker_range(PartitionId(p as u32));
+            free_counts[p] = state.count_free_in(r.start as usize, r.end as usize) as u32;
+            internal[p] = spec.gm_of_partition(PartitionId(p as u32)) == gm_id as usize;
+        }
+        let plan = planner.plan(free_counts, internal, *rr, js.pending.len());
+        if plan.is_empty() {
+            break;
+        }
+        let mut batches: Vec<Vec<MapReq>> = vec![Vec::new(); spec.n_lm];
+        let mut last_part = *rr;
+        for (part, k) in plan {
+            last_part = part;
+            let pid = PartitionId(part as u32);
+            let r = spec.worker_range(pid);
+            let lm = spec.lm_of_partition(pid);
+            let cluster_lo = spec.cluster_worker_range(lm).start as usize;
+            for _ in 0..k {
+                let (lo, hi) = (r.start as usize, r.end as usize);
+                let start = lo + scan_rot % (hi - lo);
+                let w = state
+                    .pop_free_in(start, hi)
+                    .or_else(|| state.pop_free_in(lo, start))
+                    .expect("plan promised a free worker");
+                let task = js.pending.pop_front().unwrap();
+                counters.decisions += 1;
+                batches[lm].push(MapReq {
+                    job: jidx,
+                    task,
+                    worker: (w - cluster_lo) as u32,
+                    dur_ms: js.durs_ms[task as usize],
+                });
+            }
+        }
+        *rr = (last_part + 1) % n_part;
+        for (lm, maps) in batches.into_iter().enumerate() {
+            for chunk in maps.chunks(cfg.max_batch) {
+                counters.messages += 1;
+                let _ = writers[lm].send(&Msg::VerifyBatch {
+                    gm: gm_id,
+                    maps: chunk.to_vec(),
+                });
+            }
+        }
+        if jobs[jidx as usize].as_ref().is_some_and(|j| !j.pending.is_empty()) {
+            break;
+        }
+        queue.pop_front();
+    }
+}

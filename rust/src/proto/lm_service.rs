@@ -1,0 +1,297 @@
+//! Megha LM as a real TCP service.
+//!
+//! Owns the authoritative availability state of one cluster's worker
+//! slots. GMs connect, register, and send verification batches; the LM
+//! launches valid mappings on worker slots (wall-clock timers + container
+//! overhead), rejects stale ones in a single batched reply piggybacking a
+//! fresh snapshot, notifies the scheduling GM on every completion, and
+//! broadcasts heartbeat snapshots.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::codec::{read_frame, write_frame};
+use super::messages::{MapReq, Msg};
+use crate::cluster::AvailMap;
+
+/// Shared writer half of a connection.
+#[derive(Clone)]
+pub struct Writer(Arc<Mutex<TcpStream>>);
+
+impl Writer {
+    pub fn new(s: TcpStream) -> Writer {
+        Writer(Arc::new(Mutex::new(s)))
+    }
+
+    pub fn send(&self, msg: &Msg) -> Result<()> {
+        let mut s = self.0.lock().unwrap();
+        write_frame(&mut *s, &msg.to_json())
+    }
+}
+
+struct LmState {
+    free: AvailMap,
+    gms: HashMap<u32, Writer>,
+}
+
+impl LmState {
+    fn free_list(&self) -> Vec<u32> {
+        self.free.iter_free().map(|w| w as u32).collect()
+    }
+}
+
+pub struct LmHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl LmHandle {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop
+        if let Ok(mut s) = TcpStream::connect(self.addr) {
+            let _ = write_frame(&mut s, &Msg::Shutdown.to_json());
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start an LM service for a cluster of `n_workers` slots divided into
+/// `n_gm` partitions (slot `w` is owned by GM `w / (n_workers / n_gm)`).
+pub fn spawn_lm(
+    n_workers: usize,
+    n_gm: usize,
+    heartbeat: Duration,
+    launch_overhead: Duration,
+) -> Result<LmHandle> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let state = Arc::new(Mutex::new(LmState {
+        free: AvailMap::all_free(n_workers),
+        gms: HashMap::new(),
+    }));
+    let wpp = n_workers.div_ceil(n_gm);
+
+    let mut threads = Vec::new();
+
+    // heartbeat broadcaster
+    {
+        let state = state.clone();
+        let stop = stop.clone();
+        threads.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                std::thread::sleep(heartbeat);
+                let (free, writers): (Vec<u32>, Vec<Writer>) = {
+                    let st = state.lock().unwrap();
+                    (st.free_list(), st.gms.values().cloned().collect())
+                };
+                for w in writers {
+                    let _ = w.send(&Msg::Heartbeat { free: free.clone() });
+                }
+            }
+        }));
+    }
+
+    // accept loop
+    {
+        let state = state.clone();
+        let stop = stop.clone();
+        threads.push(std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let state = state.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let _ = serve_conn(stream, state, stop, wpp, launch_overhead);
+                });
+            }
+        }));
+    }
+
+    Ok(LmHandle { addr, stop, threads })
+}
+
+fn serve_conn(
+    stream: TcpStream,
+    state: Arc<Mutex<LmState>>,
+    stop: Arc<AtomicBool>,
+    wpp: usize,
+    launch_overhead: Duration,
+) -> Result<()> {
+    let mut reader = stream.try_clone()?;
+    let writer = Writer::new(stream);
+    let mut gm_id: Option<u32> = None;
+    loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(_) => break, // disconnect
+        };
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match Msg::from_json(&frame)? {
+            Msg::Register { id } => {
+                gm_id = Some(id);
+                state.lock().unwrap().gms.insert(id, writer.clone());
+            }
+            Msg::VerifyBatch { gm, maps } => {
+                handle_verify(&state, gm, maps, wpp, launch_overhead, &writer);
+            }
+            Msg::Shutdown => break,
+            other => anyhow::bail!("LM got unexpected message {other:?}"),
+        }
+        let _ = gm_id;
+    }
+    Ok(())
+}
+
+/// The verification step (§3.3): authoritative check of every mapping.
+fn handle_verify(
+    state: &Arc<Mutex<LmState>>,
+    gm: u32,
+    maps: Vec<MapReq>,
+    wpp: usize,
+    launch_overhead: Duration,
+    reply_to: &Writer,
+) {
+    let mut invalid = Vec::new();
+    {
+        let mut st = state.lock().unwrap();
+        for m in maps {
+            let w = m.worker as usize;
+            if w < st.free.len() && st.free.is_free(w) {
+                st.free.set_busy(w);
+                // launch: a wall-clock timer models the container running
+                let state = state.clone();
+                let dur = launch_overhead + Duration::from_millis(m.dur_ms);
+                let owner_gm = (w / wpp) as u32;
+                std::thread::spawn(move || {
+                    std::thread::sleep(dur);
+                    let (sched_writer, owner_writer) = {
+                        let mut st = state.lock().unwrap();
+                        st.free.set_free(w);
+                        (st.gms.get(&gm).cloned(), st.gms.get(&owner_gm).cloned())
+                    };
+                    if let Some(wr) = sched_writer {
+                        let _ = wr.send(&Msg::TaskDone {
+                            job: m.job,
+                            task: m.task,
+                            worker: m.worker,
+                            reuse: owner_gm == gm,
+                        });
+                    }
+                    // aperiodic update: the owner of a borrowed worker is
+                    // told it is free again (§3.3)
+                    if owner_gm != gm {
+                        if let Some(wr) = owner_writer {
+                            let _ = wr.send(&Msg::WorkerFreed { worker: m.worker });
+                        }
+                    }
+                });
+            } else {
+                invalid.push((m.job, m.task));
+            }
+        }
+        if !invalid.is_empty() {
+            // batched inconsistency reply + piggybacked snapshot (§3.4.1)
+            let free = st.free_list();
+            let _ = reply_to.send(&Msg::BatchReply { invalid, free });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpStream;
+
+    fn connect(addr: SocketAddr, id: u32) -> (TcpStream, Writer) {
+        let s = TcpStream::connect(addr).unwrap();
+        let w = Writer::new(s.try_clone().unwrap());
+        w.send(&Msg::Register { id }).unwrap();
+        (s, w)
+    }
+
+    #[test]
+    fn verify_launch_complete_cycle() {
+        let lm = spawn_lm(8, 2, Duration::from_millis(50), Duration::ZERO).unwrap();
+        let (mut rd, wr) = connect(lm.addr, 0);
+        wr.send(&Msg::VerifyBatch {
+            gm: 0,
+            maps: vec![MapReq { job: 1, task: 0, worker: 3, dur_ms: 30 }],
+        })
+        .unwrap();
+        // expect a TaskDone (reuse=true: worker 3 is in partition 0 of 2x4)
+        loop {
+            let m = Msg::from_json(&read_frame(&mut rd).unwrap()).unwrap();
+            match m {
+                Msg::TaskDone { job, worker, reuse, .. } => {
+                    assert_eq!((job, worker, reuse), (1, 3, true));
+                    break;
+                }
+                Msg::Heartbeat { .. } => continue,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        lm.shutdown();
+    }
+
+    #[test]
+    fn stale_mapping_gets_batched_reply_with_snapshot() {
+        let lm = spawn_lm(4, 2, Duration::from_secs(60), Duration::ZERO).unwrap();
+        let (mut rd, wr) = connect(lm.addr, 1);
+        // occupy worker 2 with a long task, then try to double-book it
+        wr.send(&Msg::VerifyBatch {
+            gm: 1,
+            maps: vec![MapReq { job: 1, task: 0, worker: 2, dur_ms: 500 }],
+        })
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        wr.send(&Msg::VerifyBatch {
+            gm: 1,
+            maps: vec![
+                MapReq { job: 2, task: 0, worker: 2, dur_ms: 100 }, // stale
+                MapReq { job: 2, task: 1, worker: 0, dur_ms: 100 }, // fine
+            ],
+        })
+        .unwrap();
+        loop {
+            let m = Msg::from_json(&read_frame(&mut rd).unwrap()).unwrap();
+            match m {
+                Msg::BatchReply { invalid, free } => {
+                    assert_eq!(invalid, vec![(2, 0)]);
+                    assert!(!free.contains(&2)); // snapshot shows 2 busy
+                    assert!(!free.contains(&0)); // and 0 just launched
+                    break;
+                }
+                Msg::TaskDone { .. } | Msg::Heartbeat { .. } => continue,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        lm.shutdown();
+    }
+
+    #[test]
+    fn heartbeats_flow() {
+        let lm = spawn_lm(4, 2, Duration::from_millis(20), Duration::ZERO).unwrap();
+        let (mut rd, _wr) = connect(lm.addr, 2);
+        let m = Msg::from_json(&read_frame(&mut rd).unwrap()).unwrap();
+        match m {
+            Msg::Heartbeat { free } => assert_eq!(free, vec![0, 1, 2, 3]),
+            other => panic!("unexpected {other:?}"),
+        }
+        lm.shutdown();
+    }
+}

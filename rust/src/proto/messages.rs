@@ -1,0 +1,260 @@
+//! Prototype protocol messages (Megha GM⇄LM and Pigeon dist⇄coord).
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// One task→worker mapping in a Megha verification batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MapReq {
+    pub job: u32,
+    pub task: u32,
+    /// worker index local to the LM's cluster
+    pub worker: u32,
+    /// execution duration in milliseconds (already wall-clock scaled)
+    pub dur_ms: u64,
+}
+
+/// A Pigeon task slice sent to a coordinator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskSlice {
+    pub job: u32,
+    pub durs_ms: Vec<u64>,
+    pub high: bool,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// client → service: identify this connection.
+    Register { id: u32 },
+    /// Megha GM → LM: verify-and-launch a batch (§3.4.1).
+    VerifyBatch { gm: u32, maps: Vec<MapReq> },
+    /// Megha LM → GM: invalid mappings + piggybacked free-worker snapshot.
+    BatchReply { invalid: Vec<(u32, u32)>, free: Vec<u32> },
+    /// LM/coordinator → scheduler: a task finished. `reuse` = Megha §3.4.
+    TaskDone { job: u32, task: u32, worker: u32, reuse: bool },
+    /// Megha LM → owner GM: aperiodic update — a worker another GM had
+    /// borrowed is free again (§3.3).
+    WorkerFreed { worker: u32 },
+    /// Megha LM → GM: heartbeat snapshot (free local worker indices).
+    Heartbeat { free: Vec<u32> },
+    /// Pigeon distributor → coordinator.
+    Tasks(TaskSlice),
+    /// orderly teardown
+    Shutdown,
+}
+
+impl Msg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Msg::Register { id } => Json::obj(vec![
+                ("t", Json::str("reg")),
+                ("id", Json::num(*id as f64)),
+            ]),
+            Msg::VerifyBatch { gm, maps } => Json::obj(vec![
+                ("t", Json::str("verify")),
+                ("gm", Json::num(*gm as f64)),
+                (
+                    "maps",
+                    Json::arr(
+                        maps.iter()
+                            .map(|m| {
+                                Json::arr(vec![
+                                    Json::num(m.job as f64),
+                                    Json::num(m.task as f64),
+                                    Json::num(m.worker as f64),
+                                    Json::num(m.dur_ms as f64),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Msg::BatchReply { invalid, free } => Json::obj(vec![
+                ("t", Json::str("reply")),
+                (
+                    "invalid",
+                    Json::arr(
+                        invalid
+                            .iter()
+                            .map(|&(j, t)| {
+                                Json::arr(vec![Json::num(j as f64), Json::num(t as f64)])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("free", u32s_to_json(free)),
+            ]),
+            Msg::TaskDone { job, task, worker, reuse } => Json::obj(vec![
+                ("t", Json::str("done")),
+                ("job", Json::num(*job as f64)),
+                ("task", Json::num(*task as f64)),
+                ("worker", Json::num(*worker as f64)),
+                ("reuse", Json::Bool(*reuse)),
+            ]),
+            Msg::WorkerFreed { worker } => Json::obj(vec![
+                ("t", Json::str("freed")),
+                ("worker", Json::num(*worker as f64)),
+            ]),
+            Msg::Heartbeat { free } => Json::obj(vec![
+                ("t", Json::str("hb")),
+                ("free", u32s_to_json(free)),
+            ]),
+            Msg::Tasks(s) => Json::obj(vec![
+                ("t", Json::str("tasks")),
+                ("job", Json::num(s.job as f64)),
+                (
+                    "durs",
+                    Json::arr(s.durs_ms.iter().map(|&d| Json::num(d as f64)).collect()),
+                ),
+                ("high", Json::Bool(s.high)),
+            ]),
+            Msg::Shutdown => Json::obj(vec![("t", Json::str("bye"))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Msg> {
+        let t = j
+            .get("t")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| anyhow::anyhow!("message missing 't'"))?;
+        Ok(match t {
+            "reg" => Msg::Register {
+                id: field_u32(j, "id")?,
+            },
+            "verify" => {
+                let maps = j
+                    .req("maps")
+                    .map_err(anyhow::Error::msg)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("maps not array"))?
+                    .iter()
+                    .map(|m| {
+                        let a = m.as_arr().ok_or_else(|| anyhow::anyhow!("map not array"))?;
+                        if a.len() != 4 {
+                            bail!("map arity {}", a.len());
+                        }
+                        Ok(MapReq {
+                            job: a[0].as_u64().unwrap_or(0) as u32,
+                            task: a[1].as_u64().unwrap_or(0) as u32,
+                            worker: a[2].as_u64().unwrap_or(0) as u32,
+                            dur_ms: a[3].as_u64().unwrap_or(0),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Msg::VerifyBatch {
+                    gm: field_u32(j, "gm")?,
+                    maps,
+                }
+            }
+            "reply" => {
+                let invalid = j
+                    .req("invalid")
+                    .map_err(anyhow::Error::msg)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("invalid not array"))?
+                    .iter()
+                    .map(|p| {
+                        let a = p.as_arr().unwrap_or(&[]);
+                        (
+                            a.first().and_then(|x| x.as_u64()).unwrap_or(0) as u32,
+                            a.get(1).and_then(|x| x.as_u64()).unwrap_or(0) as u32,
+                        )
+                    })
+                    .collect();
+                Msg::BatchReply {
+                    invalid,
+                    free: json_to_u32s(j.req("free").map_err(anyhow::Error::msg)?)?,
+                }
+            }
+            "done" => Msg::TaskDone {
+                job: field_u32(j, "job")?,
+                task: field_u32(j, "task")?,
+                worker: field_u32(j, "worker")?,
+                reuse: matches!(j.get("reuse"), Some(Json::Bool(true))),
+            },
+            "freed" => Msg::WorkerFreed {
+                worker: field_u32(j, "worker")?,
+            },
+            "hb" => Msg::Heartbeat {
+                free: json_to_u32s(j.req("free").map_err(anyhow::Error::msg)?)?,
+            },
+            "tasks" => Msg::Tasks(TaskSlice {
+                job: field_u32(j, "job")?,
+                durs_ms: j
+                    .req("durs")
+                    .map_err(anyhow::Error::msg)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("durs not array"))?
+                    .iter()
+                    .map(|d| d.as_u64().unwrap_or(0))
+                    .collect(),
+                high: matches!(j.get("high"), Some(Json::Bool(true))),
+            }),
+            "bye" => Msg::Shutdown,
+            other => bail!("unknown message type '{other}'"),
+        })
+    }
+}
+
+fn field_u32(j: &Json, k: &str) -> Result<u32> {
+    j.get(k)
+        .and_then(|x| x.as_u64())
+        .map(|x| x as u32)
+        .ok_or_else(|| anyhow::anyhow!("missing/invalid field '{k}'"))
+}
+
+fn u32s_to_json(xs: &[u32]) -> Json {
+    Json::arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+fn json_to_u32s(j: &Json) -> Result<Vec<u32>> {
+    Ok(j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected array"))?
+        .iter()
+        .map(|x| x.as_u64().unwrap_or(0) as u32)
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Msg) {
+        let j = m.to_json();
+        let back = Msg::from_json(&Json::parse(&j.encode()).unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Msg::Register { id: 2 });
+        roundtrip(Msg::VerifyBatch {
+            gm: 1,
+            maps: vec![
+                MapReq { job: 3, task: 0, worker: 17, dur_ms: 1500 },
+                MapReq { job: 3, task: 1, worker: 18, dur_ms: 80 },
+            ],
+        });
+        roundtrip(Msg::BatchReply {
+            invalid: vec![(3, 1), (4, 0)],
+            free: vec![0, 5, 9],
+        });
+        roundtrip(Msg::TaskDone { job: 3, task: 0, worker: 17, reuse: true });
+        roundtrip(Msg::WorkerFreed { worker: 9 });
+        roundtrip(Msg::Heartbeat { free: vec![] });
+        roundtrip(Msg::Tasks(TaskSlice {
+            job: 9,
+            durs_ms: vec![100, 200],
+            high: false,
+        }));
+        roundtrip(Msg::Shutdown);
+    }
+
+    #[test]
+    fn unknown_type_rejected() {
+        let j = Json::obj(vec![("t", Json::str("nope"))]);
+        assert!(Msg::from_json(&j).is_err());
+        assert!(Msg::from_json(&Json::Null).is_err());
+    }
+}

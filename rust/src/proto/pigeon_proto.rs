@@ -1,0 +1,246 @@
+//! Pigeon prototype: group coordinators as TCP services + distributor.
+//!
+//! Mirrors `sched::pigeon` semantics over real sockets: a coordinator
+//! owns one group of worker slots (some reserved for high-priority),
+//! launches or queues incoming task slices, and applies weighted fair
+//! queuing when slots free up. Distributors (in the driver) split every
+//! job evenly across coordinators with no global state — the design
+//! whose queuing pathology Fig. 4 exposes.
+
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::codec::read_frame;
+use super::lm_service::Writer;
+use super::messages::Msg;
+use crate::cluster::AvailMap;
+
+struct CoordState {
+    /// free general slots (both priorities) — slot ids [0, general)
+    general: AvailMap,
+    /// free reserved slots (high-priority only) — ids [general, total)
+    reserved: AvailMap,
+    hi_q: VecDeque<(u32, u64)>,
+    lo_q: VecDeque<(u32, u64)>,
+    hi_streak: usize,
+    dist: Option<Writer>,
+    general_n: usize,
+    wfq_weight: usize,
+    launch_overhead: Duration,
+}
+
+pub struct CoordHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl CoordHandle {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Ok(mut s) = TcpStream::connect(self.addr) {
+            let _ = super::codec::write_frame(&mut s, &Msg::Shutdown.to_json());
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+pub fn spawn_coordinator(
+    n_workers: usize,
+    reserved_frac: f64,
+    wfq_weight: usize,
+    launch_overhead: Duration,
+) -> Result<CoordHandle> {
+    let reserved_n = ((n_workers as f64) * reserved_frac).round() as usize;
+    let general_n = n_workers - reserved_n;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let state = Arc::new(Mutex::new(CoordState {
+        general: AvailMap::all_free(general_n),
+        reserved: AvailMap::all_free(reserved_n),
+        hi_q: VecDeque::new(),
+        lo_q: VecDeque::new(),
+        hi_streak: 0,
+        dist: None,
+        general_n,
+        wfq_weight,
+        launch_overhead,
+    }));
+
+    let mut threads = Vec::new();
+    {
+        let state = state.clone();
+        let stop = stop.clone();
+        threads.push(std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let state = state.clone();
+                std::thread::spawn(move || {
+                    let _ = serve(stream, state);
+                });
+            }
+        }));
+    }
+    Ok(CoordHandle { addr, stop, threads })
+}
+
+fn serve(stream: TcpStream, state: Arc<Mutex<CoordState>>) -> Result<()> {
+    let mut reader = stream.try_clone()?;
+    let writer = Writer::new(stream);
+    loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(_) => break,
+        };
+        match Msg::from_json(&frame)? {
+            Msg::Register { .. } => {
+                state.lock().unwrap().dist = Some(writer.clone());
+            }
+            Msg::Tasks(slice) => {
+                let mut st = state.lock().unwrap();
+                for &dur_ms in &slice.durs_ms {
+                    place(&state, &mut st, slice.job, dur_ms, slice.high);
+                }
+            }
+            Msg::Shutdown => break,
+            other => anyhow::bail!("coordinator got unexpected {other:?}"),
+        }
+    }
+    Ok(())
+}
+
+/// Pigeon placement (§2.2.4): high → general then reserved then hi queue;
+/// low → general only, else lo queue.
+fn place(arc: &Arc<Mutex<CoordState>>, st: &mut CoordState, job: u32, dur_ms: u64, high: bool) {
+    if high {
+        if let Some(w) = st.general.pop_free_in(0, st.general.len()) {
+            launch(arc, st, job, dur_ms, w);
+        } else if let Some(w) = st.reserved.pop_free_in(0, st.reserved.len()) {
+            launch(arc, st, job, dur_ms, st.general_n + w);
+        } else {
+            st.hi_q.push_back((job, dur_ms));
+        }
+    } else if let Some(w) = st.general.pop_free_in(0, st.general.len()) {
+        launch(arc, st, job, dur_ms, w);
+    } else {
+        st.lo_q.push_back((job, dur_ms));
+    }
+}
+
+fn launch(arc: &Arc<Mutex<CoordState>>, st: &mut CoordState, job: u32, dur_ms: u64, slot: usize) {
+    let arc = arc.clone();
+    let dur = st.launch_overhead + Duration::from_millis(dur_ms);
+    std::thread::spawn(move || {
+        std::thread::sleep(dur);
+        let mut st = arc.lock().unwrap();
+        // notify the distributor
+        if let Some(d) = st.dist.clone() {
+            let _ = d.send(&Msg::TaskDone {
+                job,
+                task: 0,
+                worker: slot as u32,
+                reuse: false,
+            });
+        }
+        // weighted fair dequeue for the freed slot
+        let is_reserved = slot >= st.general_n;
+        let next = if is_reserved {
+            st.hi_q.pop_front()
+        } else if !st.lo_q.is_empty() && (st.hi_streak >= st.wfq_weight || st.hi_q.is_empty()) {
+            st.hi_streak = 0;
+            st.lo_q.pop_front()
+        } else if let Some(t) = st.hi_q.pop_front() {
+            st.hi_streak += 1;
+            Some(t)
+        } else {
+            st.lo_q.pop_front()
+        };
+        match next {
+            Some((j, d)) => {
+                let arc2 = arc.clone();
+                launch(&arc2, &mut st, j, d, slot);
+            }
+            None => {
+                if is_reserved {
+                    let g = st.general_n;
+                    st.reserved.set_free(slot - g);
+                } else {
+                    st.general.set_free(slot);
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::codec::write_frame;
+    use super::super::messages::TaskSlice;
+
+    #[test]
+    fn coordinator_runs_slices_and_reports() {
+        let c = spawn_coordinator(4, 0.25, 2, Duration::ZERO).unwrap();
+        let mut s = TcpStream::connect(c.addr).unwrap();
+        write_frame(&mut s, &Msg::Register { id: 0 }.to_json()).unwrap();
+        // 6 tasks on 4 slots: queues must drain via WFQ
+        write_frame(
+            &mut s,
+            &Msg::Tasks(TaskSlice {
+                job: 7,
+                durs_ms: vec![20, 20, 20, 20, 20, 20],
+                high: true,
+            })
+            .to_json(),
+        )
+        .unwrap();
+        let mut done = 0;
+        while done < 6 {
+            let m = Msg::from_json(&read_frame(&mut s).unwrap()).unwrap();
+            if let Msg::TaskDone { job, .. } = m {
+                assert_eq!(job, 7);
+                done += 1;
+            }
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn low_priority_cannot_take_reserved_slots() {
+        // 2 slots, 1 reserved: a low slice of 2 runs serially on the one
+        // general slot while a later high task takes the reserved slot.
+        let c = spawn_coordinator(2, 0.5, 10, Duration::ZERO).unwrap();
+        let mut s = TcpStream::connect(c.addr).unwrap();
+        write_frame(&mut s, &Msg::Register { id: 0 }.to_json()).unwrap();
+        write_frame(
+            &mut s,
+            &Msg::Tasks(TaskSlice { job: 1, durs_ms: vec![80, 80], high: false }).to_json(),
+        )
+        .unwrap();
+        write_frame(
+            &mut s,
+            &Msg::Tasks(TaskSlice { job: 2, durs_ms: vec![10], high: true }).to_json(),
+        )
+        .unwrap();
+        // the high task must finish first despite arriving last
+        let m = loop {
+            match Msg::from_json(&read_frame(&mut s).unwrap()).unwrap() {
+                Msg::TaskDone { job, .. } => break job,
+                _ => continue,
+            }
+        };
+        assert_eq!(m, 2, "high-priority task should complete first");
+        c.shutdown();
+    }
+}

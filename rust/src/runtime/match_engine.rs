@@ -1,0 +1,112 @@
+//! The GM's match operation: order partitions, allocate a task batch.
+//!
+//! Contract (identical for both engines, and to `python/compile/model.py`):
+//! given per-partition free-worker counts, the calling GM's internal-
+//! partition mask and its round-robin cursor `rr`, produce an ordered
+//! allocation `[(partition, k), ...]` that places `n_tasks` tasks by
+//! visiting *internal* partitions first (round-robin from `rr`,
+//! saturating each before moving on — §3.4.1), then *external* partitions
+//! (repartition, §3.3), stopping when tasks or capacity run out.
+
+/// An ordered placement plan: `(partition index, tasks allocated)`.
+pub type Plan = Vec<(usize, usize)>;
+
+pub trait MatchPlanner {
+    fn plan(&mut self, free: &[u32], internal: &[bool], rr: usize, n_tasks: usize) -> Plan;
+
+    /// Human-readable engine name (for benches/logs).
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust reference engine — the default on the simulator hot path.
+#[derive(Default, Clone, Debug)]
+pub struct RustMatchEngine;
+
+impl MatchPlanner for RustMatchEngine {
+    fn plan(&mut self, free: &[u32], internal: &[bool], rr: usize, n_tasks: usize) -> Plan {
+        assert_eq!(free.len(), internal.len());
+        let p = free.len();
+        if p == 0 || n_tasks == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let mut left = n_tasks;
+        // pass 1: internal partitions, RR from rr; pass 2: external.
+        for want_internal in [true, false] {
+            for off in 0..p {
+                if left == 0 {
+                    break;
+                }
+                let part = (rr + off) % p;
+                if internal[part] != want_internal || free[part] == 0 {
+                    continue;
+                }
+                let k = left.min(free[part] as usize);
+                out.push((part, k));
+                left -= k;
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// XLA-backed engine executing the AOT artifact. Constructed in
+/// `pjrt.rs`-land; re-exported here so call sites only see the trait.
+pub use super::pjrt::XlaMatchEngine;
+
+/// Total tasks placed by a plan.
+pub fn plan_total(plan: &Plan) -> usize {
+    plan.iter().map(|&(_, k)| k).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(free: &[u32], internal: &[bool], rr: usize, n: usize) -> Plan {
+        RustMatchEngine.plan(free, internal, rr, n)
+    }
+
+    #[test]
+    fn internal_first_rr_order() {
+        let free = [2, 2, 2, 2];
+        let internal = [false, true, false, true];
+        // rr=2: internal pass visits 3 then 1; external pass 2 then 0
+        let p = plan(&free, &internal, 2, 7);
+        assert_eq!(p, vec![(3, 2), (1, 2), (2, 2), (0, 1)]);
+    }
+
+    #[test]
+    fn saturates_before_moving_on() {
+        let free = [5, 3, 0, 4];
+        let internal = [true, true, true, true];
+        let p = plan(&free, &internal, 0, 8);
+        assert_eq!(p, vec![(0, 5), (1, 3)]);
+    }
+
+    #[test]
+    fn capacity_exhausted() {
+        let free = [1, 1];
+        let internal = [true, false];
+        let p = plan(&free, &internal, 0, 10);
+        assert_eq!(plan_total(&p), 2);
+    }
+
+    #[test]
+    fn zero_tasks_or_empty() {
+        assert!(plan(&[1, 2], &[true, false], 0, 0).is_empty());
+        assert!(plan(&[], &[], 0, 5).is_empty());
+    }
+
+    #[test]
+    fn rr_wraps() {
+        let free = [1, 1, 1];
+        let internal = [false, false, false];
+        let p = plan(&free, &internal, 2, 3);
+        assert_eq!(p, vec![(2, 1), (0, 1), (1, 1)]);
+    }
+}

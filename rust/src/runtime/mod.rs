@@ -1,0 +1,17 @@
+//! Runtime bridge between L3 (Rust) and the AOT-compiled L2/L1 artifacts.
+//!
+//! * [`match_engine`] — the GM's placement planner: a pure-Rust engine and
+//!   an XLA (PJRT) engine that executes `artifacts/match_plan.hlo.txt`.
+//!   Both implement [`match_engine::MatchPlanner`] and are bit-equivalent
+//!   (property-tested in `rust/tests/xla_runtime.rs`).
+//! * [`pjrt`] — thin wrapper over the `xla` crate: load HLO text, compile
+//!   on the PJRT CPU client, execute. Adapted from /opt/xla-example.
+//! * [`stats_engine`] — XLA-backed delay-distribution summary (the L1
+//!   stats kernel), used by the experiment harness.
+
+pub mod match_engine;
+pub mod pjrt;
+pub mod stats_engine;
+
+pub use match_engine::{MatchPlanner, RustMatchEngine};
+pub use pjrt::XlaMatchEngine;

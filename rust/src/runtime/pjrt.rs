@@ -1,0 +1,226 @@
+//! PJRT bridge: load the AOT-lowered HLO-text artifacts and execute them.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. See python/compile/aot.py and /opt/xla-example.
+//!
+//! The `[P, W]` "availability" input of the match artifact is fed with
+//! the per-partition free count in column 0 (the kernel only consumes
+//! `sum(row)`), so partitions wider than W workers are representable
+//! exactly (f32 is exact for counts < 2^24).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::match_engine::{MatchPlanner, Plan};
+use crate::util::json::Json;
+
+/// Directory holding `*.hlo.txt` + `manifest.json` (built by
+/// `make artifacts`). Override with `MEGHA_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("MEGHA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True if the AOT artifacts exist (tests skip the XLA path otherwise).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Shared PJRT CPU client + compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<PjrtRuntime> {
+        Ok(PjrtRuntime {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+/// Shapes recorded by aot.py in manifest.json.
+#[derive(Debug, Clone, Copy)]
+pub struct ArtifactShapes {
+    pub p: usize,
+    pub w: usize,
+    pub t: usize,
+    pub n: usize,
+    pub b: usize,
+}
+
+pub fn read_manifest(dir: &Path) -> Result<ArtifactShapes> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading manifest in {}", dir.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+    let c = j
+        .get("consts")
+        .context("manifest missing 'consts'")?;
+    let get = |k: &str| -> Result<usize> {
+        c.get(k)
+            .and_then(|v| v.as_usize())
+            .with_context(|| format!("manifest missing consts.{k}"))
+    };
+    Ok(ArtifactShapes {
+        p: get("P")?,
+        w: get("W")?,
+        t: get("T")?,
+        n: get("N")?,
+        b: get("B")?,
+    })
+}
+
+/// The XLA-backed match engine: executes `match_plan.hlo.txt` (the L2
+/// `plan_batch` computation wrapping the L1 Pallas `match_score` kernel).
+pub struct XlaMatchEngine {
+    exe: xla::PjRtLoadedExecutable,
+    shapes: ArtifactShapes,
+    /// scratch [P*W] input buffer, reused across calls
+    avail: Vec<f32>,
+    internal_buf: Vec<f32>,
+    /// cached input literals, updated in place via copy_raw_from —
+    /// avoids re-allocating the 256 KiB avail literal per call (§Perf L2)
+    avail_lit: xla::Literal,
+    internal_lit: xla::Literal,
+    rr_lit: xla::Literal,
+}
+
+impl XlaMatchEngine {
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<XlaMatchEngine> {
+        Self::load(&artifacts_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<XlaMatchEngine> {
+        let shapes = read_manifest(dir)?;
+        let rt = PjrtRuntime::cpu()?;
+        let exe = rt.load_hlo_text(&dir.join("match_plan.hlo.txt"))?;
+        let avail = vec![0.0f32; shapes.p * shapes.w];
+        let internal_buf = vec![0.0f32; shapes.p];
+        let avail_lit =
+            xla::Literal::vec1(&avail).reshape(&[shapes.p as i64, shapes.w as i64])?;
+        let internal_lit = xla::Literal::vec1(&internal_buf);
+        let rr_lit = xla::Literal::vec1(&[0i32]);
+        Ok(XlaMatchEngine {
+            exe,
+            shapes,
+            avail,
+            internal_buf,
+            avail_lit,
+            internal_lit,
+            rr_lit,
+        })
+    }
+
+    /// One artifact execution: plan up to `T` tasks. Returns the raw
+    /// per-slot partition assignment (length T, -1 padding).
+    fn plan_chunk(&mut self, free: &[u32], internal: &[bool], rr: usize, n: usize) -> Result<Vec<i32>> {
+        let s = self.shapes;
+        assert!(free.len() <= s.p, "too many partitions for the artifact");
+        assert!(n <= s.t);
+        self.avail.iter_mut().for_each(|x| *x = 0.0);
+        for (p, &f) in free.iter().enumerate() {
+            self.avail[p * s.w] = f as f32; // count-in-column-0 encoding
+        }
+        self.internal_buf.iter_mut().for_each(|x| *x = 0.0);
+        for (p, &b) in internal.iter().enumerate() {
+            self.internal_buf[p] = if b { 1.0 } else { 0.0 };
+        }
+        self.avail_lit.copy_raw_from(&self.avail)?;
+        self.internal_lit.copy_raw_from(&self.internal_buf)?;
+        self.rr_lit.copy_raw_from(&[rr as i32])?;
+        let n_l = xla::Literal::scalar(n as i32);
+        let result = self.exe.execute::<&xla::Literal>(&[
+            &self.avail_lit,
+            &self.internal_lit,
+            &self.rr_lit,
+            &n_l,
+        ])?[0][0]
+            .to_literal_sync()?;
+        let (assign, _free_out) = result.to_tuple2()?;
+        Ok(assign.to_vec::<i32>()?)
+    }
+}
+
+impl MatchPlanner for XlaMatchEngine {
+    fn plan(&mut self, free: &[u32], internal: &[bool], rr: usize, n_tasks: usize) -> Plan {
+        // The artifact plans at most T tasks per execution; larger jobs
+        // loop, decrementing a local free-count copy. Ordering stays
+        // identical to the single-shot plan because saturated partitions
+        // drop out of the key ordering.
+        let mut free_left: Vec<u32> = free.to_vec();
+        let mut out: Plan = Vec::new();
+        let mut left = n_tasks;
+        while left > 0 {
+            let n = left.min(self.shapes.t);
+            let assign = self
+                .plan_chunk(&free_left, internal, rr, n)
+                .expect("XLA match engine execution failed");
+            let mut placed = 0usize;
+            for &a in &assign {
+                if a < 0 {
+                    break;
+                }
+                let part = a as usize;
+                placed += 1;
+                free_left[part] -= 1;
+                match out.last_mut() {
+                    Some((p, k)) if *p == part => *k += 1,
+                    _ => out.push((part, 1)),
+                }
+            }
+            if placed == 0 {
+                break; // capacity exhausted
+            }
+            left -= placed;
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parser_rejects_garbage() {
+        let dir = std::env::temp_dir().join("megha-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{\"consts\": {\"P\": 4}}").unwrap();
+        assert!(read_manifest(&dir).is_err()); // missing W/T/N/B
+        std::fs::write(
+            dir.join("manifest.json"),
+            "{\"consts\": {\"P\":4,\"W\":2,\"T\":8,\"N\":16,\"B\":4}}",
+        )
+        .unwrap();
+        let s = read_manifest(&dir).unwrap();
+        assert_eq!((s.p, s.w, s.t, s.n, s.b), (4, 2, 8, 16, 4));
+    }
+}
+
+#[allow(dead_code)]
+fn _assert_bail_used() {
+    // keep `bail!` import alive for future error paths
+    let _ = || -> Result<()> { bail!("unused") };
+}

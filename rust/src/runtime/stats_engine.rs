@@ -1,0 +1,128 @@
+//! XLA-backed delay-distribution summary (the L1 stats kernel).
+//!
+//! Executes `artifacts/delay_stats.hlo.txt` over delay samples in
+//! N-sized chunks, accumulating CDF counts and moments exactly as the
+//! kernel's in-VMEM accumulator does across grid steps.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::pjrt::{read_manifest, ArtifactShapes, PjrtRuntime};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DelayStats {
+    /// `cdf[i]` = number of samples <= `edges[i]`.
+    pub cdf: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+    pub sum_sq: f64,
+    pub max: f64,
+}
+
+impl DelayStats {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+pub struct XlaStatsEngine {
+    exe: xla::PjRtLoadedExecutable,
+    shapes: ArtifactShapes,
+}
+
+impl XlaStatsEngine {
+    pub fn load(dir: &Path) -> Result<XlaStatsEngine> {
+        let shapes = read_manifest(dir)?;
+        let rt = PjrtRuntime::cpu()?;
+        let exe = rt.load_hlo_text(&dir.join("delay_stats.hlo.txt"))?;
+        Ok(XlaStatsEngine { exe, shapes })
+    }
+
+    pub fn load_default() -> Result<XlaStatsEngine> {
+        Self::load(&super::pjrt::artifacts_dir())
+    }
+
+    /// Summarize `samples` against `edges` (must have exactly B entries).
+    pub fn summarize(&self, samples: &[f64], edges: &[f64]) -> Result<DelayStats> {
+        let s = self.shapes;
+        assert_eq!(edges.len(), s.b, "artifact expects exactly B edges");
+        let edges_f: Vec<f32> = edges.iter().map(|&x| x as f32).collect();
+        let edges_l = xla::Literal::vec1(&edges_f);
+
+        let mut out = DelayStats {
+            cdf: vec![0; s.b],
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            max: f64::NEG_INFINITY,
+        };
+        for chunk in samples.chunks(s.n).chain(if samples.is_empty() {
+            // run once on an all-masked block so empty input still works
+            Some(&[][..]).into_iter()
+        } else {
+            None.into_iter()
+        }) {
+            let mut d = vec![0.0f32; s.n];
+            let mut m = vec![0.0f32; s.n];
+            for (i, &x) in chunk.iter().enumerate() {
+                d[i] = x as f32;
+                m[i] = 1.0;
+            }
+            let res = self.exe.execute::<xla::Literal>(&[
+                xla::Literal::vec1(&d),
+                xla::Literal::vec1(&m),
+                edges_l.clone(),
+            ])?[0][0]
+                .to_literal_sync()?;
+            let (cdf, mom) = res.to_tuple2()?;
+            let cdf = cdf.to_vec::<f32>()?;
+            let mom = mom.to_vec::<f32>()?;
+            for (acc, c) in out.cdf.iter_mut().zip(cdf) {
+                *acc += c as u64;
+            }
+            out.count += mom[0] as u64;
+            out.sum += mom[1] as f64;
+            out.sum_sq += mom[2] as f64;
+            out.max = out.max.max(mom[3] as f64);
+        }
+        Ok(out)
+    }
+}
+
+/// Pure-Rust reference for the same summary (used for equivalence tests
+/// and as the fallback when artifacts are absent).
+pub fn summarize_rust(samples: &[f64], edges: &[f64]) -> DelayStats {
+    let cdf = crate::util::stats::cdf_counts(samples, edges)
+        .into_iter()
+        .map(|c| c as u64)
+        .collect();
+    DelayStats {
+        cdf,
+        count: samples.len() as u64,
+        sum: samples.iter().sum(),
+        sum_sq: samples.iter().map(|x| x * x).sum(),
+        max: samples
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rust_reference_summary() {
+        let s = summarize_rust(&[0.1, 0.5, 1.5], &[0.0, 1.0, 2.0]);
+        assert_eq!(s.cdf, vec![0, 2, 3]);
+        assert_eq!(s.count, 3);
+        assert!((s.mean() - 0.7).abs() < 1e-12);
+        assert_eq!(s.max, 1.5);
+    }
+}

@@ -1,0 +1,101 @@
+//! Bookkeeping shared by every scheduler simulation.
+
+use crate::metrics::{JobRecord, RunOutcome};
+use crate::sim::time::SimTime;
+use crate::workload::Trace;
+
+/// Tracks per-job task completion and builds [`JobRecord`]s.
+pub struct JobTracker {
+    remaining: Vec<u32>,
+    records: Vec<Option<JobRecord>>,
+    short_threshold: SimTime,
+    done: usize,
+}
+
+impl JobTracker {
+    pub fn new(trace: &Trace, short_threshold: SimTime) -> JobTracker {
+        JobTracker {
+            remaining: trace.jobs.iter().map(|j| j.n_tasks() as u32).collect(),
+            records: vec![None; trace.jobs.len()],
+            short_threshold,
+            done: 0,
+        }
+    }
+
+    /// Record one finished task; returns true if this completed the job.
+    pub fn task_done(&mut self, trace: &Trace, job_idx: usize, now: SimTime) -> bool {
+        debug_assert!(self.remaining[job_idx] > 0, "job {job_idx} over-completed");
+        self.remaining[job_idx] -= 1;
+        if self.remaining[job_idx] == 0 {
+            let j = &trace.jobs[job_idx];
+            self.records[job_idx] = Some(JobRecord {
+                job_id: j.id,
+                submit: j.submit,
+                complete: now,
+                ideal_jct: j.ideal_jct(),
+                n_tasks: j.n_tasks(),
+                class: j.class(self.short_threshold),
+            });
+            self.done += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.done == self.records.len()
+    }
+
+    pub fn done(&self) -> usize {
+        self.done
+    }
+
+    /// Consume into a [`RunOutcome`] (panics if any job is incomplete —
+    /// a scheduler that loses tasks is a bug, not a statistic).
+    pub fn into_outcome(self, makespan: SimTime) -> RunOutcome {
+        let jobs: Vec<JobRecord> = self
+            .records
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| r.unwrap_or_else(|| panic!("job {i} never completed")))
+            .collect();
+        RunOutcome {
+            jobs,
+            makespan,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::synthetic::synthetic_fixed;
+
+    #[test]
+    fn tracks_completion() {
+        let trace = synthetic_fixed(3, 2, 1.0, 0.5, 100, 1);
+        let mut t = JobTracker::new(&trace, SimTime::from_secs(90.0));
+        assert!(!t.task_done(&trace, 0, SimTime::from_secs(1.0)));
+        assert!(!t.task_done(&trace, 0, SimTime::from_secs(1.5)));
+        assert!(t.task_done(&trace, 0, SimTime::from_secs(2.0)));
+        assert!(!t.all_done());
+        for _ in 0..2 {
+            t.task_done(&trace, 1, SimTime::from_secs(3.0));
+        }
+        assert!(t.task_done(&trace, 1, SimTime::from_secs(4.0)));
+        assert!(t.all_done());
+        let out = t.into_outcome(SimTime::from_secs(4.0));
+        assert_eq!(out.jobs.len(), 2);
+        assert_eq!(out.jobs[0].complete, SimTime::from_secs(2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "never completed")]
+    fn incomplete_job_panics() {
+        let trace = synthetic_fixed(1, 1, 1.0, 0.5, 10, 1);
+        let t = JobTracker::new(&trace, SimTime::from_secs(90.0));
+        let _ = t.into_outcome(SimTime::ZERO);
+    }
+}

@@ -1,0 +1,414 @@
+//! Eagle (§2.2.3): hybrid scheduling — a centralized scheduler for long
+//! jobs, Sparrow-style distributed probing for short jobs, plus:
+//!
+//! * **Succinct State Sharing (SSS)**: workers currently executing a long
+//!   task reject short-job probes and reply with the (possibly stale) bit
+//!   vector of long-occupied nodes; the scheduler re-sends the probe to a
+//!   node the vector says is long-free, and on a second rejection falls
+//!   back to a random node in the *short partition* (the slice of the DC
+//!   where long tasks are never placed).
+//! * **Sticky batch probing**: a worker that finishes a short task asks
+//!   the same job for its next unlaunched task before surfacing its
+//!   reservation queue, shrinking the number of in-flight jobs
+//!   (Little's law).
+//!
+//! Long jobs queue centrally and are placed only on long-partition
+//! workers the central scheduler believes free (its view is updated by
+//! launch/completion messages, so it can race with short tasks — such
+//! long tasks queue briefly at the worker, which is the head-of-line
+//! blocking SSS exists to dodge).
+
+use std::collections::VecDeque;
+
+use crate::cluster::AvailMap;
+use crate::config::EagleConfig;
+use crate::metrics::RunOutcome;
+use crate::sched::common::JobTracker;
+use crate::sim::event::EventQueue;
+use crate::sim::time::SimTime;
+use crate::util::rng::Rng;
+use crate::workload::{JobClass, Trace};
+
+enum Ev {
+    Arrival(u32),
+    /// short-job probe (reservation) arriving at a worker
+    Probe { worker: u32, job: u32, retry: u8 },
+    /// worker → scheduler: probe rejected, carrying the SSS bit vector
+    Reject { job: u32, retry: u8, sss: AvailMap },
+    /// worker → scheduler: reservation at head, request a task
+    Ready { job: u32, worker: u32 },
+    /// scheduler → worker: short task assignment (None = no-op)
+    Launch { worker: u32, job: u32, dur: Option<SimTime> },
+    /// central scheduler → worker: long task (eager, carries duration)
+    LongPlace { worker: u32, job: u32, dur: SimTime },
+    Finish { worker: u32, job: u32, long: bool },
+    /// completion notice to the tracker (and central view update)
+    Done { job: u32, worker: u32, long: bool },
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum WState {
+    Idle,
+    Waiting,
+    Busy { long: bool },
+}
+
+enum QItem {
+    Reservation(u32),            // short job id (late binding)
+    LongTask { job: u32, dur: SimTime },
+}
+
+struct Worker {
+    queue: VecDeque<QItem>,
+    state: WState,
+}
+
+struct JobSched {
+    next_task: u32,
+    n_tasks: u32,
+}
+
+pub fn simulate(cfg: &EagleConfig, trace: &Trace) -> RunOutcome {
+    let n_workers = cfg.workers;
+    let short_cut = ((n_workers as f64) * cfg.short_partition_frac) as usize;
+    // workers [0, short_cut) = short partition (never runs long tasks);
+    // workers [short_cut, n) = long partition.
+    let mut rng = Rng::new(cfg.sim.seed);
+    let mut workers: Vec<Worker> = (0..n_workers)
+        .map(|_| Worker {
+            queue: VecDeque::new(),
+            state: WState::Idle,
+        })
+        .collect();
+    let mut jobs: Vec<JobSched> = trace
+        .jobs
+        .iter()
+        .map(|j| JobSched {
+            next_task: 0,
+            n_tasks: j.n_tasks() as u32,
+        })
+        .collect();
+    let classes: Vec<JobClass> = trace
+        .jobs
+        .iter()
+        .map(|j| j.class(cfg.sim.short_threshold))
+        .collect();
+
+    // central long-job scheduler state
+    let mut central_free = AvailMap::all_free(n_workers);
+    for w in 0..short_cut {
+        central_free.set_busy(w); // short partition is off-limits for long
+    }
+    let mut long_q: VecDeque<(u32, SimTime)> = VecDeque::new();
+    // authoritative "currently executing a long task" set (for SSS replies)
+    let mut long_busy = AvailMap::all_busy(n_workers); // bit set = long-busy
+
+    let mut tracker = JobTracker::new(trace, cfg.sim.short_threshold);
+    let mut out = RunOutcome::default();
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    for (i, j) in trace.jobs.iter().enumerate() {
+        q.push(j.submit, Ev::Arrival(i as u32));
+    }
+
+    while let Some((now, ev)) = q.pop() {
+        match ev {
+            Ev::Arrival(jidx) => match classes[jidx as usize] {
+                JobClass::Long => {
+                    for t in 0..trace.jobs[jidx as usize].n_tasks() {
+                        long_q.push_back((jidx, trace.jobs[jidx as usize].durations[t]));
+                    }
+                    drain_long(&mut long_q, &mut central_free, &mut q, cfg, &mut rng, &mut out);
+                }
+                JobClass::Short => {
+                    // d·n probes: d distinct workers per task, duplicates
+                    // allowed across tasks (as in Sparrow's batch sampling)
+                    let n = jobs[jidx as usize].n_tasks as usize;
+                    let d_per_task = cfg.probe_ratio.min(n_workers);
+                    for _ in 0..n {
+                        for w in rng.sample_distinct(n_workers, d_per_task) {
+                            let d = cfg.sim.net.delay(&mut rng);
+                            out.messages += 1;
+                            q.push(now + d, Ev::Probe {
+                                worker: w as u32,
+                                job: jidx,
+                                retry: 0,
+                            });
+                        }
+                    }
+                }
+            },
+            Ev::Probe { worker, job, retry } => {
+                let w = &mut workers[worker as usize];
+                let is_long_busy = matches!(w.state, WState::Busy { long: true });
+                if is_long_busy {
+                    // SSS: reject with the current long-occupancy vector
+                    let d = cfg.sim.net.delay(&mut rng);
+                    out.messages += 1;
+                    q.push(now + d, Ev::Reject {
+                        job,
+                        retry,
+                        sss: long_busy.clone(),
+                    });
+                } else {
+                    w.queue.push_back(QItem::Reservation(job));
+                    if w.state == WState::Idle {
+                        advance_worker(worker, &mut workers, &mut q, cfg, &mut rng, &mut out);
+                    }
+                }
+            }
+            Ev::Reject { job, retry, sss } => {
+                out.messages += 1;
+                // pick the re-probe target from the freshest SSS
+                let target = if retry == 0 {
+                    // any worker the vector says is long-free
+                    let mut pick = None;
+                    for _ in 0..8 {
+                        let c = rng.below(n_workers);
+                        if !sss.is_free(c) {
+                            pick = Some(c);
+                            break;
+                        }
+                    }
+                    pick.unwrap_or_else(|| rng.below(short_cut.max(1)))
+                } else {
+                    // second rejection: random worker in the short partition
+                    rng.below(short_cut.max(1))
+                };
+                let d = cfg.sim.net.delay(&mut rng);
+                out.messages += 1;
+                q.push(now + d, Ev::Probe {
+                    worker: target as u32,
+                    job,
+                    retry: retry.saturating_add(1),
+                });
+            }
+            Ev::Ready { job, worker } => {
+                out.messages += 1;
+                let js = &mut jobs[job as usize];
+                let dur = if js.next_task < js.n_tasks {
+                    let t = js.next_task as usize;
+                    js.next_task += 1;
+                    out.decisions += 1;
+                    Some(trace.jobs[job as usize].durations[t])
+                } else {
+                    None
+                };
+                let d = cfg.sim.net.delay(&mut rng);
+                out.messages += 1;
+                q.push(now + d, Ev::Launch { worker, job, dur });
+            }
+            Ev::Launch { worker, job, dur } => {
+                let w = &mut workers[worker as usize];
+                match dur {
+                    Some(dur) => {
+                        w.state = WState::Busy { long: false };
+                        out.tasks += 1;
+                        q.push(now + dur, Ev::Finish {
+                            worker,
+                            job,
+                            long: false,
+                        });
+                    }
+                    None => {
+                        w.state = WState::Idle;
+                        advance_worker(worker, &mut workers, &mut q, cfg, &mut rng, &mut out);
+                    }
+                }
+            }
+            Ev::LongPlace { worker, job, dur } => {
+                let w = &mut workers[worker as usize];
+                match w.state {
+                    WState::Idle => {
+                        w.state = WState::Busy { long: true };
+                        long_busy.set_free(worker as usize); // bit set = long-busy
+                        out.tasks += 1;
+                        q.push(now + dur, Ev::Finish {
+                            worker,
+                            job,
+                            long: true,
+                        });
+                    }
+                    _ => {
+                        // raced with a short task: queue at the worker
+                        w.queue.push_back(QItem::LongTask { job, dur });
+                    }
+                }
+            }
+            Ev::Finish { worker, job, long } => {
+                let d = cfg.sim.net.delay(&mut rng);
+                out.breakdown.comm_s += d.as_secs();
+                q.push(now + d, Ev::Done { job, worker, long });
+                let w = &mut workers[worker as usize];
+                w.state = WState::Idle;
+                if long {
+                    long_busy.set_busy(worker as usize);
+                    advance_worker(worker, &mut workers, &mut q, cfg, &mut rng, &mut out);
+                } else {
+                    // sticky batch probing: same job first
+                    let js = &mut jobs[job as usize];
+                    if js.next_task < js.n_tasks {
+                        let t = js.next_task as usize;
+                        js.next_task += 1;
+                        out.decisions += 1;
+                        w.state = WState::Busy { long: false };
+                        out.tasks += 1;
+                        q.push(
+                            now + trace.jobs[job as usize].durations[t],
+                            Ev::Finish {
+                                worker,
+                                job,
+                                long: false,
+                            },
+                        );
+                    } else {
+                        advance_worker(worker, &mut workers, &mut q, cfg, &mut rng, &mut out);
+                    }
+                }
+            }
+            Ev::Done { job, worker, long } => {
+                out.messages += 1;
+                tracker.task_done(trace, job as usize, now);
+                if long {
+                    central_free.set_free(worker as usize);
+                    drain_long(&mut long_q, &mut central_free, &mut q, cfg, &mut rng, &mut out);
+                }
+            }
+        }
+    }
+
+    debug_assert!(tracker.all_done(), "eagle lost jobs");
+    let makespan = q.now();
+    let mut outcome = tracker.into_outcome(makespan);
+    outcome.tasks = out.tasks;
+    outcome.messages = out.messages;
+    outcome.decisions = out.decisions;
+    outcome.breakdown = out.breakdown;
+    outcome
+}
+
+fn drain_long(
+    long_q: &mut VecDeque<(u32, SimTime)>,
+    central_free: &mut AvailMap,
+    q: &mut EventQueue<Ev>,
+    cfg: &EagleConfig,
+    rng: &mut Rng,
+    out: &mut RunOutcome,
+) {
+    while !long_q.is_empty() {
+        let Some(w) = central_free.pop_free_in(0, central_free.len()) else {
+            break;
+        };
+        let (job, dur) = long_q.pop_front().unwrap();
+        out.decisions += 1;
+        out.messages += 1;
+        let d = cfg.sim.net.delay(rng);
+        q.push_after(d, Ev::LongPlace {
+            worker: w as u32,
+            job,
+            dur,
+        });
+    }
+}
+
+fn advance_worker(
+    worker: u32,
+    workers: &mut [Worker],
+    q: &mut EventQueue<Ev>,
+    cfg: &EagleConfig,
+    rng: &mut Rng,
+    out: &mut RunOutcome,
+) {
+    // note: long_busy bookkeeping for queued long tasks happens in Finish
+    let w = &mut workers[worker as usize];
+    if w.state != WState::Idle {
+        return;
+    }
+    match w.queue.pop_front() {
+        Some(QItem::Reservation(job)) => {
+            w.state = WState::Waiting;
+            let d = cfg.sim.net.delay(rng);
+            out.messages += 1;
+            q.push_after(d, Ev::Ready { job, worker });
+        }
+        Some(QItem::LongTask { job, dur }) => {
+            w.state = WState::Busy { long: true };
+            out.tasks += 1;
+            q.push_after(dur, Ev::Finish {
+                worker,
+                job,
+                long: true,
+            });
+        }
+        None => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{summarize_class, summarize_jobs};
+    use crate::sim::time::SimTime;
+    use crate::workload::synthetic::{google_like, synthetic_fixed};
+
+    #[test]
+    fn completes_all_short_jobs() {
+        let mut cfg = EagleConfig::for_workers(200);
+        cfg.sim.seed = 1;
+        // 1 s tasks are far below the 90 s threshold: all short
+        let trace = synthetic_fixed(20, 30, 1.0, 0.5, 200, 2);
+        let outc = simulate(&cfg, &trace);
+        assert_eq!(outc.jobs.len(), 30);
+        assert_eq!(outc.tasks as usize, trace.n_tasks());
+    }
+
+    #[test]
+    fn completes_mixed_workload() {
+        let mut cfg = EagleConfig::for_workers(500);
+        cfg.sim.seed = 3;
+        let trace = google_like(80, 500, 0.7, 4);
+        let outc = simulate(&cfg, &trace);
+        assert_eq!(outc.jobs.len(), 80);
+        assert_eq!(outc.tasks as usize, trace.n_tasks());
+    }
+
+    #[test]
+    fn long_jobs_complete_via_central_queue() {
+        let mut cfg = EagleConfig::for_workers(100);
+        cfg.sim.seed = 5;
+        cfg.sim.short_threshold = SimTime::from_secs(0.5); // everything long
+        let trace = synthetic_fixed(30, 10, 2.0, 0.8, 100, 6);
+        let outc = simulate(&cfg, &trace);
+        assert_eq!(outc.jobs.len(), 10);
+    }
+
+    #[test]
+    fn short_jobs_beat_long_jobs_on_delay() {
+        // Mixed load: short jobs should see lower delays than long ones
+        // thanks to SSS + the reserved short partition.
+        let mut cfg = EagleConfig::for_workers(400);
+        cfg.sim.seed = 7;
+        let trace = google_like(150, 400, 0.85, 8);
+        let outc = simulate(&cfg, &trace);
+        let s = summarize_class(&outc.jobs, JobClass::Short);
+        let l = summarize_class(&outc.jobs, JobClass::Long);
+        if s.n > 5 && l.n > 5 {
+            assert!(
+                s.median <= l.median * 2.0 + 1.0,
+                "short {} vs long {}",
+                s.median,
+                l.median
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut cfg = EagleConfig::for_workers(300);
+        cfg.sim.seed = 11;
+        let trace = google_like(60, 300, 0.8, 12);
+        let a = simulate(&cfg, &trace);
+        let b = simulate(&cfg, &trace);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(summarize_jobs(&a.jobs).p95, summarize_jobs(&b.jobs).p95);
+    }
+}

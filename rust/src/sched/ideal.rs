@@ -1,0 +1,52 @@
+//! The omniscient scheduler on an infinite DC — defines `IdealJCT`
+//! (Eq. 2). Every task starts the instant its job is submitted, so
+//! JCT = max task duration and every delay is exactly zero.
+
+use crate::config::SimParams;
+use crate::metrics::{JobRecord, RunOutcome};
+use crate::sim::time::SimTime;
+use crate::workload::Trace;
+
+pub fn simulate(params: &SimParams, trace: &Trace) -> RunOutcome {
+    let jobs: Vec<JobRecord> = trace
+        .jobs
+        .iter()
+        .map(|j| JobRecord {
+            job_id: j.id,
+            submit: j.submit,
+            complete: j.submit + j.ideal_jct(),
+            ideal_jct: j.ideal_jct(),
+            n_tasks: j.n_tasks(),
+            class: j.class(params.short_threshold),
+        })
+        .collect();
+    let makespan = jobs
+        .iter()
+        .map(|r| r.complete)
+        .max()
+        .unwrap_or(SimTime::ZERO);
+    RunOutcome {
+        tasks: trace.n_tasks() as u64,
+        decisions: trace.n_tasks() as u64,
+        makespan,
+        jobs,
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::summarize_jobs;
+    use crate::workload::synthetic::yahoo_like;
+
+    #[test]
+    fn all_delays_zero() {
+        let trace = yahoo_like(50, 1000, 0.5, 1);
+        let out = simulate(&SimParams::default(), &trace);
+        let s = summarize_jobs(&out.jobs);
+        assert_eq!(s.n, 50);
+        assert_eq!(s.max, 0.0);
+        assert_eq!(s.p95, 0.0);
+    }
+}

@@ -1,0 +1,571 @@
+//! Discrete-event engine for the Megha protocol.
+
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::cluster::AvailMap;
+use crate::config::MeghaConfig;
+use crate::metrics::RunOutcome;
+use crate::runtime::match_engine::{MatchPlanner, RustMatchEngine};
+use crate::sched::common::JobTracker;
+use crate::sim::event::EventQueue;
+use crate::sim::time::SimTime;
+use crate::util::rng::Rng;
+use crate::workload::Trace;
+
+/// One task→worker mapping inside a GM→LM verification batch.
+#[derive(Clone, Debug)]
+struct Mapping {
+    job: u32,   // trace job index
+    task: u32,  // task index within the job
+    worker: u32,
+    dur: SimTime,
+}
+
+/// Simulation events. Message events model one-way network hops.
+enum Ev {
+    /// A job from the trace reaches its GM.
+    Arrival(u32),
+    /// GM→LM: verify-and-launch a batch of mappings (§3.4.1).
+    LmVerify { lm: u32, gm: u32, maps: Vec<Mapping> },
+    /// LM→GM: batched inconsistency reply + piggybacked cluster snapshot.
+    GmReply { gm: u32, invalid: Vec<(u32, u32)>, snap: Rc<Snapshot> },
+    /// Worker finished a task (local to the LM: no network hop).
+    TaskFinish { lm: u32, gm: u32, job: u32, worker: u32 },
+    /// LM→GM: task-completion notice (§3.4). `reuse` = worker is internal
+    /// to the scheduling GM, which may immediately re-assign it.
+    GmTaskDone { gm: u32, job: u32, worker: u32, reuse: bool },
+    /// LM→GM (owner): aperiodic state update — a borrowed worker freed
+    /// (§3.3: "aperiodic LM state updates"; the borrower may not reuse
+    /// it, so the owner is told it is available again).
+    GmWorkerFreed { gm: u32, worker: u32 },
+    /// LM heartbeat tick: broadcast snapshots to all GMs (§3.3).
+    Heartbeat { lm: u32 },
+    /// LM→GM: heartbeat snapshot delivery.
+    GmHeartbeat { gm: u32, snap: Rc<Snapshot> },
+    /// Failure injection (§3.5): the GM loses its in-memory global state
+    /// and must rebuild from subsequent LM updates.
+    GmFail { gm: u32 },
+}
+
+/// A copy of one LM's authoritative cluster state as of send time.
+/// `version` counts LM state changes: a GM that already applied this
+/// version skips the (hot) bitmap overwrite — §Perf L3 iteration 4.
+#[derive(Clone)]
+struct Snapshot {
+    lm: u32,
+    version: u64,
+    state: AvailMap, // global-indexed; only the LM's range is meaningful
+}
+
+/// LM-side authoritative cluster state + change counter.
+struct Lm {
+    state: AvailMap,
+    version: u64,
+}
+
+/// Per-GM state: the eventually-consistent global view + job queue.
+///
+/// `counts` caches the per-partition free-worker counts incrementally —
+/// the match operation reads it directly instead of rescanning the
+/// bitmap per job (the §Perf L3 optimization: ~4.8 µs → ~1 µs per task
+/// on the Fig. 3 Yahoo workload).
+struct Gm {
+    state: AvailMap,
+    counts: Vec<u32>,         // per-partition free workers (mirror of state)
+    internal: Vec<bool>,      // per-partition ownership mask (constant)
+    rr: usize,                // round-robin partition cursor
+    queue: VecDeque<u32>,     // job indices, FIFO
+    in_queue: Vec<bool>,
+    scan_rot: usize,          // per-GM worker shuffle (§3.3)
+    applied: Vec<u64>,        // last snapshot version applied, per LM
+}
+
+impl Gm {
+    fn mark_free(&mut self, spec: &crate::cluster::ClusterSpec, worker: usize) {
+        if self.state.set_free(worker) {
+            let p = spec.partition_of_worker(crate::cluster::WorkerId(worker as u32));
+            self.counts[p.0 as usize] += 1;
+        }
+    }
+
+    /// Re-derive the counts of one LM's partitions after a snapshot.
+    fn recount_cluster(&mut self, spec: &crate::cluster::ClusterSpec, lm: usize) {
+        for p in spec.partitions_of_lm(lm) {
+            let r = spec.worker_range(p);
+            self.counts[p.0 as usize] =
+                self.state.count_free_in(r.start as usize, r.end as usize) as u32;
+        }
+    }
+}
+
+/// Per-job scheduling state at its GM.
+struct JobState {
+    pending: VecDeque<u32>, // tasks not yet validly launched
+    enq: SimTime,           // when the head tasks became schedulable
+}
+
+/// §Perf counters: snapshot applications attempted / skipped by version
+/// gating (process-wide, for profiling drivers — see EXPERIMENTS.md §Perf).
+pub static APPLY_TOTAL: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+/// See [`APPLY_TOTAL`].
+pub static APPLY_SKIP: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Optional failure injection for §3.5 availability tests.
+#[derive(Clone, Copy, Debug)]
+pub struct FailurePlan {
+    pub at: SimTime,
+    pub gm: usize,
+}
+
+/// Simulate Megha with the default pure-Rust match engine.
+pub fn simulate(cfg: &MeghaConfig, trace: &Trace) -> RunOutcome {
+    simulate_with(cfg, trace, &mut RustMatchEngine, None)
+}
+
+/// Simulate with an explicit match engine (e.g. the XLA/PJRT engine) and
+/// optional GM failure injection.
+pub fn simulate_with(
+    cfg: &MeghaConfig,
+    trace: &Trace,
+    planner: &mut dyn MatchPlanner,
+    failure: Option<FailurePlan>,
+) -> RunOutcome {
+    let spec = cfg.spec;
+    let n_gm = spec.n_gm;
+    let n_lm = spec.n_lm;
+    let n_part = spec.n_partitions();
+    let wpp = spec.workers_per_partition;
+    let n_workers = spec.n_workers();
+    let mut rng = Rng::new(cfg.sim.seed);
+
+    let mut gms: Vec<Gm> = (0..n_gm)
+        .map(|g| Gm {
+            state: AvailMap::all_free(n_workers),
+            counts: vec![wpp as u32; n_part],
+            internal: (0..n_part)
+                .map(|p| spec.gm_of_partition(crate::cluster::PartitionId(p as u32)) == g)
+                .collect(),
+            rr: if cfg.shuffle_workers { g * n_part / n_gm } else { 0 },
+            queue: VecDeque::new(),
+            in_queue: vec![false; trace.n_jobs()],
+            scan_rot: if cfg.shuffle_workers { g * wpp / n_gm } else { 0 },
+            applied: vec![u64::MAX; n_lm],
+        })
+        .collect();
+    let mut lms: Vec<Lm> = (0..n_lm)
+        .map(|_| Lm {
+            state: AvailMap::all_free(n_workers),
+            version: 0,
+        })
+        .collect();
+    let mut jobs: Vec<JobState> = trace
+        .jobs
+        .iter()
+        .map(|j| JobState {
+            pending: (0..j.n_tasks() as u32).collect(),
+            enq: j.submit,
+        })
+        .collect();
+
+    let mut tracker = JobTracker::new(trace, cfg.sim.short_threshold);
+    let mut out = RunOutcome::default();
+    let mut q: EventQueue<Ev> = EventQueue::new();
+
+    for (i, j) in trace.jobs.iter().enumerate() {
+        q.push(j.submit, Ev::Arrival(i as u32));
+    }
+    for lm in 0..n_lm {
+        q.push(cfg.heartbeat, Ev::Heartbeat { lm: lm as u32 });
+    }
+    if let Some(f) = failure {
+        assert!(f.gm < n_gm);
+        q.push(f.at, Ev::GmFail { gm: f.gm as u32 });
+    }
+
+    while let Some((now, ev)) = q.pop() {
+        match ev {
+            Ev::Arrival(jidx) => {
+                let gm_id = jidx as usize % n_gm;
+                jobs[jidx as usize].enq = now;
+                gms[gm_id].queue.push_back(jidx);
+                gms[gm_id].in_queue[jidx as usize] = true;
+                try_schedule(
+                    gm_id, &mut gms[gm_id], &mut jobs, trace, &spec, cfg, planner,
+                    &mut q, &mut out, &mut rng, now,
+                );
+            }
+            Ev::LmVerify { lm, gm, maps } => {
+                out.messages += 1;
+                let lm_entry = &mut lms[lm as usize];
+                let lm_state = &mut lm_entry.state;
+                let mut invalid: Vec<(u32, u32)> = Vec::new();
+                for m in maps {
+                    if lm_state.is_free(m.worker as usize) {
+                        lm_state.set_busy(m.worker as usize);
+                        lm_entry.version += 1;
+                        out.tasks += 1;
+                        q.push(now + m.dur, Ev::TaskFinish {
+                            lm,
+                            gm,
+                            job: m.job,
+                            worker: m.worker,
+                        });
+                    } else {
+                        invalid.push((m.job, m.task));
+                    }
+                }
+                if !invalid.is_empty() {
+                    out.inconsistencies += invalid.len() as u64;
+                    out.breakdown.comm_s +=
+                        invalid.len() as f64 * 2.0 * net_s(cfg, &mut rng);
+                    let snap = Rc::new(Snapshot {
+                        lm,
+                        version: lm_entry.version,
+                        state: lm_state.clone(),
+                    });
+                    let d = net(cfg, &mut rng);
+                    q.push(now + d, Ev::GmReply { gm, invalid, snap });
+                }
+            }
+            Ev::GmReply { gm, invalid, snap } => {
+                out.messages += 1;
+                let gm_id = gm as usize;
+                apply_snapshot(&mut gms[gm_id], &snap, &spec);
+                // re-queue invalid tasks at the front (§3.4.1)
+                for &(job, task) in invalid.iter().rev() {
+                    jobs[job as usize].pending.push_front(task);
+                    jobs[job as usize].enq = now;
+                    if !gms[gm_id].in_queue[job as usize] {
+                        gms[gm_id].queue.push_front(job);
+                        gms[gm_id].in_queue[job as usize] = true;
+                    }
+                }
+                try_schedule(
+                    gm_id, &mut gms[gm_id], &mut jobs, trace, &spec, cfg, planner,
+                    &mut q, &mut out, &mut rng, now,
+                );
+            }
+            Ev::TaskFinish { lm, gm, job, worker } => {
+                lms[lm as usize].state.set_free(worker as usize);
+                lms[lm as usize].version += 1;
+                let owner = spec.owner_gm_of_worker(crate::cluster::WorkerId(worker));
+                let reuse = owner == gm as usize;
+                let d = net(cfg, &mut rng);
+                out.breakdown.comm_s += net_s(cfg, &mut rng);
+                q.push(now + d, Ev::GmTaskDone { gm, job, worker, reuse });
+                if !reuse {
+                    // aperiodic update to the owner: its worker is free again
+                    let d2 = net(cfg, &mut rng);
+                    q.push(now + d2, Ev::GmWorkerFreed {
+                        gm: owner as u32,
+                        worker,
+                    });
+                }
+            }
+            Ev::GmWorkerFreed { gm, worker } => {
+                out.messages += 1;
+                let gm_id = gm as usize;
+                gms[gm_id].mark_free(&spec, worker as usize);
+                try_schedule(
+                    gm_id, &mut gms[gm_id], &mut jobs, trace, &spec, cfg, planner,
+                    &mut q, &mut out, &mut rng, now,
+                );
+            }
+            Ev::GmTaskDone { gm, job, worker, reuse } => {
+                out.messages += 1;
+                let gm_id = gm as usize;
+                tracker.task_done(trace, job as usize, now);
+                if reuse {
+                    // §3.4: the GM may map a queued task straight onto the
+                    // freed internal worker.
+                    gms[gm_id].mark_free(&spec, worker as usize);
+                }
+                try_schedule(
+                    gm_id, &mut gms[gm_id], &mut jobs, trace, &spec, cfg, planner,
+                    &mut q, &mut out, &mut rng, now,
+                );
+            }
+            Ev::Heartbeat { lm } => {
+                // one shared snapshot per heartbeat: Rc avoids cloning the
+                // full bitmap once per GM (section Perf, L3 iteration 2)
+                let snap = Rc::new(Snapshot {
+                    lm,
+                    version: lms[lm as usize].version,
+                    state: lms[lm as usize].state.clone(),
+                });
+                for gm in 0..n_gm {
+                    let d = net(cfg, &mut rng);
+                    q.push(now + d, Ev::GmHeartbeat {
+                        gm: gm as u32,
+                        snap: snap.clone(),
+                    });
+                }
+                if !tracker.all_done() {
+                    q.push(now + cfg.heartbeat, Ev::Heartbeat { lm });
+                }
+            }
+            Ev::GmHeartbeat { gm, snap } => {
+                out.messages += 1;
+                let gm_id = gm as usize;
+                apply_snapshot(&mut gms[gm_id], &snap, &spec);
+                try_schedule(
+                    gm_id, &mut gms[gm_id], &mut jobs, trace, &spec, cfg, planner,
+                    &mut q, &mut out, &mut rng, now,
+                );
+            }
+            Ev::GmFail { gm } => {
+                // §3.5: GMs are stateless — model a crash-restart as losing
+                // the global view entirely. Heartbeats rebuild it; pending
+                // jobs are preserved in the durable job store.
+                let gm_id = gm as usize;
+                gms[gm_id].state = AvailMap::all_busy(n_workers);
+                gms[gm_id].counts.iter_mut().for_each(|c| *c = 0);
+            }
+        }
+    }
+
+    debug_assert!(tracker.all_done(), "megha lost jobs");
+    let makespan = q.now();
+    let mut outcome = tracker.into_outcome(makespan);
+    outcome.inconsistencies = out.inconsistencies;
+    outcome.tasks = out.tasks;
+    outcome.messages = out.messages;
+    outcome.decisions = out.decisions;
+    outcome.breakdown = out.breakdown;
+    outcome
+}
+
+fn net(cfg: &MeghaConfig, rng: &mut Rng) -> SimTime {
+    cfg.sim.net.delay(rng)
+}
+
+fn net_s(cfg: &MeghaConfig, rng: &mut Rng) -> f64 {
+    cfg.sim.net.delay(rng).as_secs()
+}
+
+fn apply_snapshot(gm: &mut Gm, snap: &Snapshot, spec: &crate::cluster::ClusterSpec) {
+    // skip if this exact LM state was already applied (no change since):
+    // during long straggler tails most heartbeats carry unchanged state
+    APPLY_TOTAL.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    if gm.applied[snap.lm as usize] == snap.version {
+        APPLY_SKIP.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        return;
+    }
+    gm.applied[snap.lm as usize] = snap.version;
+    let r = spec.cluster_worker_range(snap.lm as usize);
+    gm.state
+        .copy_range_from(&snap.state, r.start as usize, r.end as usize);
+    gm.recount_cluster(spec, snap.lm as usize);
+}
+
+/// The GM scheduling loop: process the job queue FIFO while the global
+/// state shows capacity (§3.2). One `planner.plan` call per job batch —
+/// this is the hot path the XLA engine accelerates.
+#[allow(clippy::too_many_arguments)]
+fn try_schedule(
+    gm_id: usize,
+    gm: &mut Gm,
+    jobs: &mut [JobState],
+    trace: &Trace,
+    spec: &crate::cluster::ClusterSpec,
+    cfg: &MeghaConfig,
+    planner: &mut dyn MatchPlanner,
+    q: &mut EventQueue<Ev>,
+    out: &mut RunOutcome,
+    rng: &mut Rng,
+    now: SimTime,
+) {
+    let n_part = spec.n_partitions();
+    loop {
+        let Some(&jidx) = gm.queue.front() else { break };
+        let js = &mut jobs[jidx as usize];
+        if js.pending.is_empty() {
+            gm.queue.pop_front();
+            gm.in_queue[jidx as usize] = false;
+            continue;
+        }
+        if gm.state.free_count() == 0 {
+            break; // no visible capacity anywhere — wait for updates
+        }
+
+        // ---- the match operation (L1/L2 hot-spot) ----
+        // free counts are maintained incrementally in gm.counts (§Perf)
+        let plan = planner.plan(&gm.counts, &gm.internal, gm.rr, js.pending.len());
+        if plan.is_empty() {
+            break;
+        }
+
+        // Materialize mappings and batch them per LM (§3.4.1).
+        let mut batches: Vec<Vec<Mapping>> = vec![Vec::new(); spec.n_lm];
+        let mut last_part = gm.rr;
+        out.breakdown.queue_scheduler_s +=
+            (now - js.enq).as_secs().max(0.0) * plan.iter().map(|&(_, k)| k).sum::<usize>() as f64;
+        for (part, k) in plan {
+            last_part = part;
+            let pid = crate::cluster::PartitionId(part as u32);
+            let r = spec.worker_range(pid);
+            let lm = spec.lm_of_partition(pid);
+            for _ in 0..k {
+                // rotated first-free scan: each GM starts at a different
+                // slot so GMs pick different workers (§3.3 shuffle)
+                let (lo, hi) = (r.start as usize, r.end as usize);
+                let start = lo + gm.scan_rot % (hi - lo);
+                let w = gm
+                    .state
+                    .pop_free_in(start, hi)
+                    .or_else(|| gm.state.pop_free_in(lo, start))
+                    .expect("plan promised a free worker");
+                gm.counts[part] -= 1;
+                let task = js.pending.pop_front().expect("plan larger than job");
+                out.decisions += 1;
+                batches[lm].push(Mapping {
+                    job: jidx,
+                    task,
+                    worker: w as u32,
+                    dur: trace.jobs[jidx as usize].durations[task as usize],
+                });
+            }
+        }
+        gm.rr = (last_part + 1) % n_part;
+
+        for (lm, maps) in batches.into_iter().enumerate() {
+            if maps.is_empty() {
+                continue;
+            }
+            // cap batch size (§3.4.1): oversized batches split into
+            // multiple messages to bound LM processing latency
+            for chunk in maps.chunks(cfg.max_batch) {
+                let d = net(cfg, rng);
+                out.breakdown.comm_s += chunk.len() as f64 * d.as_secs();
+                q.push(now + d, Ev::LmVerify {
+                    lm: lm as u32,
+                    gm: gm_id as u32,
+                    maps: chunk.to_vec(),
+                });
+            }
+        }
+
+        if !jobs[jidx as usize].pending.is_empty() {
+            break; // partial placement: job stays at the head of the queue
+        }
+        gm.queue.pop_front();
+        gm.in_queue[jidx as usize] = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::summarize_jobs;
+    use crate::workload::synthetic::{synthetic_fixed, yahoo_like};
+
+    fn small_cfg(workers: usize, seed: u64) -> MeghaConfig {
+        let mut c = MeghaConfig::for_workers(workers);
+        c.sim.seed = seed;
+        c
+    }
+
+    #[test]
+    fn completes_all_jobs_low_load() {
+        let cfg = small_cfg(300, 1);
+        let trace = synthetic_fixed(20, 30, 1.0, 0.3, cfg.spec.n_workers(), 2);
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 30);
+        assert_eq!(out.tasks, 600);
+        // At 30% load placements should be near-instant: tiny delays.
+        let s = summarize_jobs(&out.jobs);
+        assert!(s.median < 0.05, "median delay {}", s.median);
+    }
+
+    #[test]
+    fn completes_under_saturation() {
+        // load ~0.95: jobs must queue at GMs but all complete.
+        let cfg = small_cfg(200, 3);
+        let trace = synthetic_fixed(100, 40, 1.0, 0.95, cfg.spec.n_workers(), 4);
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 40);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+    }
+
+    #[test]
+    fn no_worker_side_queuing_invariant() {
+        // Megha never queues tasks at workers: the number of concurrently
+        // running tasks can never exceed the worker count. Indirectly:
+        // makespan >= total_work / workers.
+        let cfg = small_cfg(100, 5);
+        let trace = synthetic_fixed(50, 20, 1.0, 0.9, cfg.spec.n_workers(), 6);
+        let out = simulate(&cfg, &trace);
+        let total_work: f64 = trace.jobs.iter().map(|j| j.total_work().as_secs()).sum();
+        assert!(
+            out.makespan.as_secs() >= total_work / cfg.spec.n_workers() as f64 - 1e-6
+        );
+    }
+
+    #[test]
+    fn inconsistencies_rise_with_load() {
+        let mk = |load: f64, seed: u64| {
+            let cfg = small_cfg(400, seed);
+            let trace = synthetic_fixed(80, 40, 1.0, load, cfg.spec.n_workers(), seed + 1);
+            simulate(&cfg, &trace).inconsistency_ratio()
+        };
+        let lo = mk(0.2, 10);
+        let hi = mk(0.98, 11);
+        assert!(
+            hi >= lo,
+            "inconsistency ratio should not fall with load: lo={lo} hi={hi}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = small_cfg(300, 9);
+        let trace = yahoo_like(60, cfg.spec.n_workers(), 0.7, 9);
+        let a = simulate(&cfg, &trace);
+        let b = simulate(&cfg, &trace);
+        assert_eq!(a.tasks, b.tasks);
+        assert_eq!(a.inconsistencies, b.inconsistencies);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(
+            summarize_jobs(&a.jobs).p95,
+            summarize_jobs(&b.jobs).p95
+        );
+    }
+
+    #[test]
+    fn gm_failure_recovers() {
+        let cfg = small_cfg(200, 12);
+        let trace = synthetic_fixed(50, 30, 1.0, 0.8, cfg.spec.n_workers(), 13);
+        let out = simulate_with(
+            &cfg,
+            &trace,
+            &mut RustMatchEngine,
+            Some(FailurePlan {
+                at: SimTime::from_secs(5.0),
+                gm: 0,
+            }),
+        );
+        // all jobs still complete: heartbeats rebuild the lost state
+        assert_eq!(out.jobs.len(), 30);
+    }
+
+    #[test]
+    fn shuffle_reduces_inconsistencies() {
+        // §3.3: per-GM shuffling should not *increase* collisions; usually
+        // it reduces them. Compare aggregate inconsistencies.
+        let mut tot_on = 0u64;
+        let mut tot_off = 0u64;
+        for seed in 0..5 {
+            let mut cfg = small_cfg(300, seed);
+            let trace = synthetic_fixed(60, 40, 1.0, 0.9, cfg.spec.n_workers(), seed + 50);
+            cfg.shuffle_workers = true;
+            tot_on += simulate(&cfg, &trace).inconsistencies;
+            cfg.shuffle_workers = false;
+            tot_off += simulate(&cfg, &trace).inconsistencies;
+        }
+        assert!(
+            tot_on <= tot_off,
+            "shuffle should not hurt: on={tot_on} off={tot_off}"
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! Megha (§3): federated scheduling on an eventually-consistent global state.
+//!
+//! Two kinds of scheduling entities:
+//!
+//! * **Global Managers (GMs)** hold a *local, eventually-consistent copy of
+//!   the whole DC's availability state* and a FIFO job queue. To place a
+//!   job's tasks a GM runs the *match operation* (the L1/L2 hot-spot — see
+//!   [`crate::runtime::match_engine`]): internal partitions first, round-
+//!   robin from its cursor, saturating each partition before moving on
+//!   (§3.4.1); if internal capacity runs out it *borrows* workers from
+//!   external partitions (repartition, §3.3). Chosen mappings are sent to
+//!   the owning LMs as size-capped batches.
+//! * **Local Managers (LMs)** hold the authoritative state of their
+//!   cluster. They *verify* each mapping: valid ones launch immediately;
+//!   stale ones come back in one batched *inconsistency* reply that
+//!   piggybacks a fresh cluster snapshot (§3.4.1). LMs also broadcast
+//!   snapshots to every GM on a heartbeat (5 s default).
+//!
+//! The simulation is a faithful discrete-event rendering of this protocol
+//! with the paper's 0.5 ms network model. See [`engine`] for the event
+//! machinery and [`engine::simulate`] / [`engine::simulate_with`] for
+//! entry points.
+
+pub mod engine;
+
+pub use engine::{simulate, simulate_with, FailurePlan};

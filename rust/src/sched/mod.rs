@@ -1,0 +1,17 @@
+//! Scheduling architectures.
+//!
+//! * [`megha`] — the paper's contribution: federated GM/LM scheduling on
+//!   an eventually-consistent global state (§3).
+//! * [`sparrow`] — distributed batch sampling + late binding (§2.2.2).
+//! * [`eagle`] — hybrid centralized/distributed with succinct state
+//!   sharing and sticky batch probing (§2.2.3).
+//! * [`pigeon`] — federated distributors + group coordinators with
+//!   weighted fair queues (§2.2.4).
+//! * [`ideal`] — the omniscient infinite-DC scheduler defining IdealJCT.
+
+pub mod common;
+pub mod eagle;
+pub mod ideal;
+pub mod megha;
+pub mod pigeon;
+pub mod sparrow;

@@ -1,0 +1,224 @@
+//! Sparrow (§2.2.2): distributed scheduling with batch sampling and late
+//! binding.
+//!
+//! Per n-task job, the owning scheduler places `d·n` *reservations* on
+//! randomly sampled workers. A worker that reaches a reservation at the
+//! head of its queue RPCs the scheduler; the scheduler *late-binds* the
+//! next unlaunched task to the first workers to respond and no-ops the
+//! rest. No scheduler-side queue exists; all queuing happens at workers —
+//! which is exactly the pathology (random probes queue behind busy
+//! workers while free workers exist elsewhere) that Megha removes.
+
+use std::collections::VecDeque;
+
+use crate::config::SparrowConfig;
+use crate::metrics::RunOutcome;
+use crate::sched::common::JobTracker;
+use crate::sim::event::EventQueue;
+use crate::sim::time::SimTime;
+use crate::util::rng::Rng;
+use crate::workload::Trace;
+
+enum Ev {
+    Arrival(u32),
+    /// scheduler → worker: enqueue a reservation for `job`.
+    Reserve { worker: u32, job: u32 },
+    /// worker → scheduler: reservation reached the head; request a task.
+    Ready { job: u32, worker: u32 },
+    /// scheduler → worker: concrete task (Some) or no-op (None).
+    Launch { worker: u32, job: u32, dur: Option<SimTime> },
+    /// task execution finished at the worker.
+    Finish { worker: u32, job: u32 },
+    /// worker → scheduler: completion notice.
+    Done { job: u32 },
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum WState {
+    Idle,
+    /// sent a Ready RPC, waiting for the scheduler's response
+    Waiting,
+    Busy,
+}
+
+struct Worker {
+    queue: VecDeque<u32>, // job reservations (late binding: no task yet)
+    state: WState,
+}
+
+struct JobSched {
+    next_task: u32,  // next unlaunched task index
+    n_tasks: u32,
+}
+
+pub fn simulate(cfg: &SparrowConfig, trace: &Trace) -> RunOutcome {
+    let n_workers = cfg.workers;
+    let mut rng = Rng::new(cfg.sim.seed);
+    let mut workers: Vec<Worker> = (0..n_workers)
+        .map(|_| Worker {
+            queue: VecDeque::new(),
+            state: WState::Idle,
+        })
+        .collect();
+    let mut jobs: Vec<JobSched> = trace
+        .jobs
+        .iter()
+        .map(|j| JobSched {
+            next_task: 0,
+            n_tasks: j.n_tasks() as u32,
+        })
+        .collect();
+
+    let mut tracker = JobTracker::new(trace, cfg.sim.short_threshold);
+    let mut out = RunOutcome::default();
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    for (i, j) in trace.jobs.iter().enumerate() {
+        q.push(j.submit, Ev::Arrival(i as u32));
+    }
+
+    while let Some((now, ev)) = q.pop() {
+        match ev {
+            Ev::Arrival(jidx) => {
+                // batch sampling: d·n probes per job — d distinct workers
+                // per task, duplicates allowed across tasks (a worker may
+                // hold several reservations for one job)
+                let n = jobs[jidx as usize].n_tasks as usize;
+                let d_per_task = cfg.probe_ratio.min(n_workers);
+                for _ in 0..n {
+                    for w in rng.sample_distinct(n_workers, d_per_task) {
+                        let d = cfg.sim.net.delay(&mut rng);
+                        out.messages += 1;
+                        q.push(now + d, Ev::Reserve {
+                            worker: w as u32,
+                            job: jidx,
+                        });
+                    }
+                }
+            }
+            Ev::Reserve { worker, job } => {
+                let w = &mut workers[worker as usize];
+                w.queue.push_back(job);
+                if w.state == WState::Idle {
+                    advance_worker(worker, &mut workers, &mut q, cfg, &mut rng, &mut out);
+                }
+            }
+            Ev::Ready { job, worker } => {
+                out.messages += 1;
+                let js = &mut jobs[job as usize];
+                let dur = if js.next_task < js.n_tasks {
+                    let t = js.next_task as usize;
+                    js.next_task += 1;
+                    out.decisions += 1;
+                    Some(trace.jobs[job as usize].durations[t])
+                } else {
+                    None // proactive cancellation: all tasks already bound
+                };
+                let d = cfg.sim.net.delay(&mut rng);
+                out.messages += 1;
+                q.push(now + d, Ev::Launch { worker, job, dur });
+            }
+            Ev::Launch { worker, job, dur } => {
+                let w = &mut workers[worker as usize];
+                debug_assert!(w.state == WState::Waiting);
+                match dur {
+                    Some(dur) => {
+                        w.state = WState::Busy;
+                        out.tasks += 1;
+                        q.push(now + dur, Ev::Finish { worker, job });
+                    }
+                    None => {
+                        w.state = WState::Idle;
+                        advance_worker(worker, &mut workers, &mut q, cfg, &mut rng, &mut out);
+                    }
+                }
+            }
+            Ev::Finish { worker, job } => {
+                let d = cfg.sim.net.delay(&mut rng);
+                out.breakdown.comm_s += d.as_secs();
+                q.push(now + d, Ev::Done { job });
+                workers[worker as usize].state = WState::Idle;
+                advance_worker(worker, &mut workers, &mut q, cfg, &mut rng, &mut out);
+            }
+            Ev::Done { job } => {
+                out.messages += 1;
+                tracker.task_done(trace, job as usize, now);
+            }
+        }
+    }
+
+    debug_assert!(tracker.all_done(), "sparrow lost jobs");
+    let makespan = q.now();
+    let mut outcome = tracker.into_outcome(makespan);
+    outcome.tasks = out.tasks;
+    outcome.messages = out.messages;
+    outcome.decisions = out.decisions;
+    outcome.breakdown = out.breakdown;
+    outcome
+}
+
+/// Idle worker pops its next reservation and RPCs the owning scheduler.
+fn advance_worker(
+    worker: u32,
+    workers: &mut [Worker],
+    q: &mut EventQueue<Ev>,
+    cfg: &SparrowConfig,
+    rng: &mut Rng,
+    out: &mut RunOutcome,
+) {
+    let w = &mut workers[worker as usize];
+    debug_assert!(w.state == WState::Idle);
+    if let Some(job) = w.queue.pop_front() {
+        w.state = WState::Waiting;
+        let d = cfg.sim.net.delay(rng);
+        out.messages += 1;
+        q.push_after(d, Ev::Ready { job, worker });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::summarize_jobs;
+    use crate::workload::synthetic::synthetic_fixed;
+
+    #[test]
+    fn completes_all_jobs() {
+        let mut cfg = SparrowConfig::for_workers(200);
+        cfg.sim.seed = 1;
+        let trace = synthetic_fixed(20, 30, 1.0, 0.5, 200, 2);
+        let outc = simulate(&cfg, &trace);
+        assert_eq!(outc.jobs.len(), 30);
+        assert_eq!(outc.tasks as usize, trace.n_tasks());
+    }
+
+    #[test]
+    fn late_binding_no_lost_tasks_under_saturation() {
+        let mut cfg = SparrowConfig::for_workers(100);
+        cfg.sim.seed = 3;
+        let trace = synthetic_fixed(150, 20, 1.0, 0.95, 100, 4);
+        let outc = simulate(&cfg, &trace);
+        assert_eq!(outc.tasks as usize, trace.n_tasks());
+    }
+
+    #[test]
+    fn delays_grow_with_load() {
+        let run = |load: f64| {
+            let mut cfg = SparrowConfig::for_workers(300);
+            cfg.sim.seed = 5;
+            let trace = synthetic_fixed(50, 40, 1.0, load, 300, 6);
+            summarize_jobs(&simulate(&cfg, &trace).jobs).p95
+        };
+        assert!(run(0.9) > run(0.2), "p95 must grow with load");
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut cfg = SparrowConfig::for_workers(150);
+        cfg.sim.seed = 7;
+        let trace = synthetic_fixed(30, 25, 1.0, 0.7, 150, 8);
+        let a = simulate(&cfg, &trace);
+        let b = simulate(&cfg, &trace);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.messages, b.messages);
+    }
+}

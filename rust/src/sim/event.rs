@@ -1,0 +1,159 @@
+//! Generic totally-ordered event queue.
+//!
+//! Each scheduler defines its own event payload type `E`; the queue
+//! orders by `(time, seq)` where `seq` is an insertion counter, so
+//! simulations are fully deterministic regardless of payload.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::time::SimTime;
+
+struct Entry<E> {
+    time: SimTime,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Earliest-first event queue with deterministic FIFO tie-breaking.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: SimTime,
+    pushed: u64,
+    popped: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: SimTime::ZERO,
+            pushed: 0,
+            popped: 0,
+        }
+    }
+
+    /// Schedule `ev` at absolute time `at`. Must not be in the past.
+    pub fn push(&mut self, at: SimTime, ev: E) {
+        debug_assert!(at >= self.now, "event scheduled in the past");
+        self.heap.push(Entry {
+            time: at,
+            seq: self.seq,
+            ev,
+        });
+        self.seq += 1;
+        self.pushed += 1;
+    }
+
+    /// Schedule `ev` after a delay from the current time.
+    pub fn push_after(&mut self, delay: SimTime, ev: E) {
+        self.push(self.now + delay, ev);
+    }
+
+    /// Pop the earliest event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|e| {
+            debug_assert!(e.time >= self.now);
+            self.now = e.time;
+            self.popped += 1;
+            (e.time, e.ev)
+        })
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Total events processed so far (for throughput metrics).
+    pub fn popped(&self) -> u64 {
+        self.popped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(SimTime::from_micros(30), "c");
+        q.push(SimTime::from_micros(10), "a");
+        q.push(SimTime::from_micros(20), "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        let t = SimTime::from_micros(5);
+        for i in 0..10 {
+            q.push(t, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push(SimTime::from_micros(100), ());
+        q.push(SimTime::from_micros(50), ());
+        let (t1, _) = q.pop().unwrap();
+        assert_eq!(q.now(), t1);
+        q.push_after(SimTime::from_micros(10), ());
+        let (t2, _) = q.pop().unwrap();
+        assert_eq!(t2, SimTime::from_micros(60));
+        let (t3, _) = q.pop().unwrap();
+        assert_eq!(t3, SimTime::from_micros(100));
+    }
+
+    #[test]
+    fn counters() {
+        let mut q = EventQueue::new();
+        for i in 0..5u32 {
+            q.push(SimTime::from_micros(i as u64), i);
+        }
+        while q.pop().is_some() {}
+        assert_eq!(q.popped(), 5);
+        assert!(q.is_empty());
+    }
+}

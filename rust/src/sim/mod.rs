@@ -1,0 +1,14 @@
+//! Deterministic discrete-event simulation core.
+//!
+//! All four schedulers (Megha, Sparrow, Eagle, Pigeon) run on this engine:
+//! a totally-ordered event queue ([`event::EventQueue`]), microsecond
+//! simulated time ([`time::SimTime`]), and the paper's constant-latency
+//! network model ([`net::NetModel`], 0.5 ms per message, §4.1).
+
+pub mod event;
+pub mod net;
+pub mod time;
+
+pub use event::EventQueue;
+pub use net::NetModel;
+pub use time::SimTime;

@@ -1,0 +1,58 @@
+//! Network latency model.
+//!
+//! The paper (§4.1) uses a constant 0.5 ms per message in all simulation
+//! experiments, matching the Sparrow/Hawk/Eagle simulators. A jittered
+//! variant is provided for robustness studies (ablation benches).
+
+use super::time::SimTime;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub enum NetModel {
+    /// Constant one-way latency (paper default: 0.5 ms).
+    Constant(SimTime),
+    /// Uniform jitter in [base, base + jitter].
+    Jittered { base: SimTime, jitter: SimTime },
+}
+
+impl NetModel {
+    pub fn paper_default() -> NetModel {
+        NetModel::Constant(SimTime::from_millis(0.5))
+    }
+
+    pub fn delay(&self, rng: &mut Rng) -> SimTime {
+        match self {
+            NetModel::Constant(d) => *d,
+            NetModel::Jittered { base, jitter } => {
+                *base + SimTime::from_micros(rng.below(jitter.as_micros() as usize + 1) as u64)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let m = NetModel::paper_default();
+        let mut r = Rng::new(1);
+        for _ in 0..10 {
+            assert_eq!(m.delay(&mut r), SimTime::from_millis(0.5));
+        }
+    }
+
+    #[test]
+    fn jitter_within_bounds() {
+        let m = NetModel::Jittered {
+            base: SimTime::from_micros(100),
+            jitter: SimTime::from_micros(50),
+        };
+        let mut r = Rng::new(2);
+        for _ in 0..1000 {
+            let d = m.delay(&mut r).as_micros();
+            assert!((100..=150).contains(&d), "{d}");
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and free
+//! positional arguments. Used by `main.rs` and the examples.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw arg list. `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if it.peek().is_some() && !it.peek().unwrap().starts_with("--") {
+                    out.options.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of f64 (`--loads 0.2,0.5,0.9`).
+    pub fn f64_list(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|x| x.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad number '{x}'")))
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of usize.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|x| x.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad integer '{x}'")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str, flags: &[&str]) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()), flags)
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = args("simulate --workers 3000 --load=0.9 --verbose trace.txt", &["verbose"]);
+        assert_eq!(a.positional, vec!["simulate", "trace.txt"]);
+        assert_eq!(a.usize("workers", 0), 3000);
+        assert_eq!(a.f64("load", 0.0), 0.9);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = args("--quiet", &[]);
+        assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = args("--loads 0.2,0.5 --sizes 10,20", &[]);
+        assert_eq!(a.f64_list("loads", &[]), vec![0.2, 0.5]);
+        assert_eq!(a.usize_list("sizes", &[]), vec![10, 20]);
+        assert_eq!(a.f64_list("missing", &[1.0]), vec![1.0]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("", &[]);
+        assert_eq!(a.usize("n", 7), 7);
+        assert_eq!(a.get_or("s", "x"), "x");
+    }
+}

@@ -1,0 +1,7 @@
+//! Self-contained utility substrates (no external deps — offline build).
+
+pub mod args;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,91 @@
+//! Small statistics helpers: exact percentiles, means, CDF evaluation.
+
+/// Exact percentile (linear interpolation, like numpy's default) of an
+/// unsorted sample. Returns 0.0 on an empty slice.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile of an already-sorted sample.
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Empirical CDF of `xs` evaluated at each of `edges` (count <= edge).
+pub fn cdf_counts(xs: &[f64], edges: &[f64]) -> Vec<usize> {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    edges
+        .iter()
+        .map(|&e| v.partition_point(|&x| x <= e))
+        .collect()
+}
+
+/// `n` evenly spaced edges covering [0, hi].
+pub fn linspace(hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n).map(|i| hi * i as f64 / (n - 1) as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_matches_numpy_convention() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert!((percentile(&xs, 95.0) - 3.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single_and_empty() {
+        assert_eq!(percentile(&[7.0], 95.0), 7.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn cdf_counts_basic() {
+        let xs = [0.5, 1.5, 1.5, 3.0];
+        let c = cdf_counts(&xs, &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(c, vec![0, 1, 3, 4]);
+    }
+
+    #[test]
+    fn linspace_endpoints() {
+        let e = linspace(10.0, 5);
+        assert_eq!(e[0], 0.0);
+        assert_eq!(e[4], 10.0);
+        assert_eq!(e.len(), 5);
+    }
+}

@@ -1,0 +1,160 @@
+//! Workloads: jobs, traces, synthetic generators, statistics.
+//!
+//! A [`Trace`] is a time-ordered list of [`Job`]s; each job is a bag of
+//! independent tasks with known durations (the paper's model — tasks are
+//! the scheduling unit, one worker slot each, Eq. 6 defines load).
+
+pub mod stats;
+pub mod synthetic;
+pub mod trace;
+
+use crate::sim::time::SimTime;
+
+/// Short/long classification, used by the priority-aware baselines
+/// (Eagle, Pigeon). Megha is deliberately priority-oblivious.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum JobClass {
+    Short,
+    Long,
+}
+
+/// One job: submitted at `submit`, `durations[i]` is task i's ideal
+/// execution time on an unloaded worker.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: u32,
+    pub submit: SimTime,
+    pub durations: Vec<SimTime>,
+}
+
+impl Job {
+    pub fn new(id: u32, submit: SimTime, durations: Vec<SimTime>) -> Job {
+        assert!(!durations.is_empty(), "job {id} has no tasks");
+        Job {
+            id,
+            submit,
+            durations,
+        }
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.durations.len()
+    }
+
+    /// Ideal JCT (Eq. 2): completion on an infinite DC with an omniscient
+    /// scheduler = the longest task's execution time.
+    pub fn ideal_jct(&self) -> SimTime {
+        *self.durations.iter().max().unwrap()
+    }
+
+    pub fn total_work(&self) -> SimTime {
+        SimTime(self.durations.iter().map(|d| d.0).sum())
+    }
+
+    pub fn mean_duration(&self) -> SimTime {
+        SimTime(self.total_work().0 / self.n_tasks() as u64)
+    }
+
+    /// Classify against a threshold on *estimated* (here: mean) task
+    /// duration, as Eagle does with its runtime estimates.
+    pub fn class(&self, short_threshold: SimTime) -> JobClass {
+        if self.mean_duration() >= short_threshold {
+            JobClass::Long
+        } else {
+            JobClass::Short
+        }
+    }
+}
+
+/// A workload trace: jobs sorted by submit time.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub name: String,
+    pub jobs: Vec<Job>,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>, mut jobs: Vec<Job>) -> Trace {
+        jobs.sort_by_key(|j| (j.submit, j.id));
+        Trace {
+            name: name.into(),
+            jobs,
+        }
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.jobs.iter().map(|j| j.n_tasks()).sum()
+    }
+
+    /// Time of the last submission.
+    pub fn makespan_lower_bound(&self) -> SimTime {
+        self.jobs.last().map(|j| j.submit).unwrap_or(SimTime::ZERO)
+    }
+
+    /// Offered load (Eq. 6) against a DC of `workers` single-slot nodes:
+    /// resource demand per second / total resources.
+    pub fn offered_load(&self, workers: usize) -> f64 {
+        let span = self.makespan_lower_bound().as_secs();
+        if span <= 0.0 {
+            return f64::INFINITY;
+        }
+        let work: f64 = self.jobs.iter().map(|j| j.total_work().as_secs()).sum();
+        work / span / workers as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn secs(s: f64) -> SimTime {
+        SimTime::from_secs(s)
+    }
+
+    #[test]
+    fn job_basics() {
+        let j = Job::new(1, secs(10.0), vec![secs(1.0), secs(3.0), secs(2.0)]);
+        assert_eq!(j.n_tasks(), 3);
+        assert_eq!(j.ideal_jct(), secs(3.0));
+        assert_eq!(j.total_work(), secs(6.0));
+        assert_eq!(j.mean_duration(), secs(2.0));
+        assert_eq!(j.class(secs(2.5)), JobClass::Short);
+        assert_eq!(j.class(secs(1.5)), JobClass::Long);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_job_rejected() {
+        let _ = Job::new(1, secs(0.0), vec![]);
+    }
+
+    #[test]
+    fn trace_sorts_by_submit() {
+        let t = Trace::new(
+            "t",
+            vec![
+                Job::new(2, secs(5.0), vec![secs(1.0)]),
+                Job::new(1, secs(1.0), vec![secs(1.0), secs(1.0)]),
+            ],
+        );
+        assert_eq!(t.jobs[0].id, 1);
+        assert_eq!(t.n_jobs(), 2);
+        assert_eq!(t.n_tasks(), 3);
+    }
+
+    #[test]
+    fn offered_load_eq6() {
+        // 10 jobs, 1 task each, 1 s duration, arriving 1 s apart on a
+        // 2-worker DC: demand = 10 s work over 9 s span / 2 workers.
+        let jobs: Vec<Job> = (0..10)
+            .map(|i| Job::new(i, secs(i as f64), vec![secs(1.0)]))
+            .collect();
+        let t = Trace::new("t", jobs);
+        let load = t.offered_load(2);
+        assert!((load - 10.0 / 9.0 / 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,80 @@
+//! Trace statistics — regenerates the paper's Table 1.
+
+use super::Trace;
+use crate::util::stats::{mean, percentile};
+
+#[derive(Debug, Clone)]
+pub struct TraceStats {
+    pub name: String,
+    pub n_jobs: usize,
+    pub n_tasks: usize,
+    pub mean_tasks_per_job: f64,
+    pub mean_iat_s: f64,
+    pub mean_dur_s: f64,
+    pub p50_dur_s: f64,
+    pub p99_dur_s: f64,
+}
+
+pub fn trace_stats(t: &Trace) -> TraceStats {
+    let durs: Vec<f64> = t
+        .jobs
+        .iter()
+        .flat_map(|j| j.durations.iter().map(|d| d.as_secs()))
+        .collect();
+    let iats: Vec<f64> = t
+        .jobs
+        .windows(2)
+        .map(|w| (w[1].submit - w[0].submit).as_secs())
+        .collect();
+    TraceStats {
+        name: t.name.clone(),
+        n_jobs: t.n_jobs(),
+        n_tasks: t.n_tasks(),
+        mean_tasks_per_job: t.n_tasks() as f64 / t.n_jobs().max(1) as f64,
+        mean_iat_s: mean(&iats),
+        mean_dur_s: mean(&durs),
+        p50_dur_s: percentile(&durs, 50.0),
+        p99_dur_s: percentile(&durs, 99.0),
+    }
+}
+
+/// Table 1 row (fixed-width, printable).
+pub fn format_row(s: &TraceStats) -> String {
+    format!(
+        "{:<28} {:>8} {:>9} {:>10.2} {:>9.3} {:>9.1} {:>9.1}",
+        s.name, s.n_jobs, s.n_tasks, s.mean_tasks_per_job, s.mean_iat_s, s.p50_dur_s, s.p99_dur_s
+    )
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<28} {:>8} {:>9} {:>10} {:>9} {:>9} {:>9}",
+        "workload", "#jobs", "#tasks", "tasks/job", "IAT(s)", "p50dur", "p99dur"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::synthetic::synthetic_fixed;
+
+    #[test]
+    fn stats_of_fixed_trace() {
+        let t = synthetic_fixed(10, 50, 2.0, 0.5, 1000, 1);
+        let s = trace_stats(&t);
+        assert_eq!(s.n_jobs, 50);
+        assert_eq!(s.n_tasks, 500);
+        assert_eq!(s.mean_tasks_per_job, 10.0);
+        assert_eq!(s.p50_dur_s, 2.0);
+        assert_eq!(s.p99_dur_s, 2.0);
+        assert!(s.mean_iat_s > 0.0);
+    }
+
+    #[test]
+    fn row_formatting_stable() {
+        let t = synthetic_fixed(10, 5, 1.0, 0.5, 100, 1);
+        let row = format_row(&trace_stats(&t));
+        assert!(row.contains("synthetic"));
+        assert_eq!(header().split_whitespace().count(), 7);
+    }
+}

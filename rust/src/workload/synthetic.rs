@@ -1,0 +1,274 @@
+//! Synthetic workload generators.
+//!
+//! The Yahoo and Google cluster traces used in the paper are not
+//! redistributable in the Eagle-simulator input form, so we synthesize
+//! traces that match their *published* marginals (Table 1 and the trace
+//! analyses cited in §2.1): job/task counts, heavy-tailed tasks-per-job,
+//! heavy-tailed task durations and Poisson arrivals. The schedulers only
+//! observe (arrival, width, durations), so these marginals drive the
+//! dynamics of Figs. 2–4. See DESIGN.md "Substitutions".
+
+use super::{Job, Trace};
+use crate::sim::time::SimTime;
+use crate::util::rng::Rng;
+
+/// Paper's synthetic trace (§4.1): `n_jobs` jobs, each with
+/// `tasks_per_job` tasks of constant duration `dur_s`; the *constant*
+/// inter-arrival time (Table 1: "0.025s–0.1s based on load") is set so
+/// the offered load (Eq. 6) on a `workers`-node DC equals `load`.
+pub fn synthetic_fixed(
+    tasks_per_job: usize,
+    n_jobs: usize,
+    dur_s: f64,
+    load: f64,
+    workers: usize,
+    seed: u64,
+) -> Trace {
+    assert!(load > 0.0 && load <= 1.0, "load must be in (0, 1]");
+    let _ = seed; // arrivals are deterministic, as in the paper
+    // demand/s = tasks_per_job * dur / iat ; load = demand / workers
+    let iat = tasks_per_job as f64 * dur_s / (load * workers as f64);
+    let jobs = (0..n_jobs)
+        .map(|i| {
+            Job::new(
+                i as u32,
+                SimTime::from_secs(i as f64 * iat),
+                vec![SimTime::from_secs(dur_s); tasks_per_job],
+            )
+        })
+        .collect();
+    Trace::new(format!("synthetic-{tasks_per_job}x{dur_s}s-load{load}"), jobs)
+}
+
+/// Poisson-arrival variant of [`synthetic_fixed`] (for burstiness
+/// ablations; the paper's synthetic trace is constant-IAT).
+pub fn synthetic_poisson(
+    tasks_per_job: usize,
+    n_jobs: usize,
+    dur_s: f64,
+    load: f64,
+    workers: usize,
+    seed: u64,
+) -> Trace {
+    assert!(load > 0.0 && load <= 1.0, "load must be in (0, 1]");
+    let mut rng = Rng::new(seed);
+    let iat = tasks_per_job as f64 * dur_s / (load * workers as f64);
+    let mut t = 0.0f64;
+    let jobs = (0..n_jobs)
+        .map(|i| {
+            let submit = t;
+            t += rng.exp(iat);
+            Job::new(
+                i as u32,
+                SimTime::from_secs(submit),
+                vec![SimTime::from_secs(dur_s); tasks_per_job],
+            )
+        })
+        .collect();
+    Trace::new(
+        format!("synthetic-poisson-{tasks_per_job}x{dur_s}s-load{load}"),
+        jobs,
+    )
+}
+
+/// Yahoo-like trace: Hadoop-style analytics. Calibrated to Table 1's
+/// mean width (968335/24262 ≈ 39.9 tasks/job) with a long-tailed width
+/// mixture and log-normal task durations (median ≈ 25 s, heavy tail).
+pub fn yahoo_like(n_jobs: usize, workers: usize, load: f64, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let jobs = heavy_tailed_jobs(
+        &mut rng,
+        n_jobs,
+        workers,
+        load,
+        // width mixture: (probability, lo, hi) log-uniform buckets
+        &[(0.58, 1.0, 10.0), (0.34, 10.0, 120.0), (0.08, 120.0, 1200.0)],
+        // duration log-normal: exp(mu) = 25 s median, sigma = 1.2
+        25.0f64.ln(),
+        1.2,
+    );
+    Trace::new("yahoo-like", jobs)
+}
+
+/// Google-like sub-trace: Borg-style mixed workload. Calibrated to
+/// Table 1's mean width (312558/10000 ≈ 31.3) with a wider duration
+/// spread (median ≈ 8 s, sigma = 1.8): many tiny tasks, a heavy tail.
+pub fn google_like(n_jobs: usize, workers: usize, load: f64, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let jobs = heavy_tailed_jobs(
+        &mut rng,
+        n_jobs,
+        workers,
+        load,
+        &[(0.62, 1.0, 8.0), (0.30, 8.0, 100.0), (0.08, 100.0, 900.0)],
+        8.0f64.ln(),
+        1.8,
+    );
+    Trace::new("google-like", jobs)
+}
+
+fn heavy_tailed_jobs(
+    rng: &mut Rng,
+    n_jobs: usize,
+    workers: usize,
+    load: f64,
+    width_mix: &[(f64, f64, f64)],
+    dur_mu: f64,
+    dur_sigma: f64,
+) -> Vec<Job> {
+    assert!(load > 0.0 && load <= 1.0);
+    // First draw widths and durations, then set the arrival rate so the
+    // realised offered load (Eq. 6) matches the target.
+    let mut widths = Vec::with_capacity(n_jobs);
+    let mut durs: Vec<Vec<SimTime>> = Vec::with_capacity(n_jobs);
+    let mut total_work = 0.0f64;
+    for _ in 0..n_jobs {
+        let w = sample_width(rng, width_mix);
+        let d: Vec<SimTime> = (0..w)
+            .map(|_| {
+                let s = rng.log_normal(dur_mu, dur_sigma).clamp(0.1, 3600.0);
+                total_work += s;
+                SimTime::from_secs(s)
+            })
+            .collect();
+        widths.push(w);
+        durs.push(d);
+    }
+    // load = total_work / span / workers  =>  span = total_work / (load * workers)
+    let span = total_work / (load * workers as f64);
+    let iat = span / n_jobs as f64;
+    let mut t = 0.0;
+    durs.into_iter()
+        .enumerate()
+        .map(|(i, d)| {
+            let submit = t;
+            t += rng.exp(iat);
+            Job::new(i as u32, SimTime::from_secs(submit), d)
+        })
+        .collect()
+}
+
+fn sample_width(rng: &mut Rng, mix: &[(f64, f64, f64)]) -> usize {
+    let u = rng.f64();
+    let mut acc = 0.0;
+    for &(p, lo, hi) in mix {
+        acc += p;
+        if u < acc {
+            return rng.log_uniform(lo, hi).round().max(1.0) as usize;
+        }
+    }
+    let &(_, lo, hi) = mix.last().unwrap();
+    rng.log_uniform(lo, hi).round().max(1.0) as usize
+}
+
+/// Down-sample for the prototype runs (§4.2): keep each job with
+/// probability `job_keep`, shrink its width by `task_factor` (ceil), and
+/// re-draw arrivals as a Poisson process with mean inter-arrival
+/// `mean_iat_s` (the paper uses 1 s). Durations are scaled by
+/// `dur_scale` so prototype wall-clock stays bounded.
+pub fn downsample(
+    trace: &Trace,
+    job_keep: f64,
+    task_factor: usize,
+    mean_iat_s: f64,
+    dur_scale: f64,
+    seed: u64,
+) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut jobs = Vec::new();
+    for j in &trace.jobs {
+        if rng.f64() >= job_keep {
+            continue;
+        }
+        let n = j.n_tasks().div_ceil(task_factor).max(1);
+        // keep the n longest tasks' durations to preserve the ideal JCT shape
+        let mut d = j.durations.clone();
+        d.sort_unstable_by(|a, b| b.cmp(a));
+        d.truncate(n);
+        let d: Vec<SimTime> = d
+            .into_iter()
+            .map(|x| SimTime::from_secs((x.as_secs() * dur_scale).max(0.05)))
+            .collect();
+        let submit = t;
+        t += rng.exp(mean_iat_s);
+        jobs.push(Job::new(jobs.len() as u32, SimTime::from_secs(submit), d));
+    }
+    Trace::new(format!("{}-downsampled", trace.name), jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_trace_hits_target_load() {
+        let t = synthetic_fixed(100, 200, 1.0, 0.5, 10_000, 1);
+        assert_eq!(t.n_jobs(), 200);
+        assert_eq!(t.n_tasks(), 20_000);
+        let load = t.offered_load(10_000);
+        assert!((load - 0.5).abs() < 0.08, "load {load}");
+        // all durations are 1 s
+        assert!(t.jobs.iter().all(|j| j
+            .durations
+            .iter()
+            .all(|d| *d == SimTime::from_secs(1.0))));
+    }
+
+    #[test]
+    fn yahoo_like_marginals() {
+        let t = yahoo_like(4000, 3000, 0.8, 7);
+        let mean_width = t.n_tasks() as f64 / t.n_jobs() as f64;
+        assert!(
+            (25.0..60.0).contains(&mean_width),
+            "mean width {mean_width} (target ~39.9)"
+        );
+        let load = t.offered_load(3000);
+        assert!((load - 0.8).abs() < 0.1, "load {load}");
+    }
+
+    #[test]
+    fn google_like_marginals() {
+        let t = google_like(4000, 13_000, 0.8, 9);
+        let mean_width = t.n_tasks() as f64 / t.n_jobs() as f64;
+        assert!(
+            (18.0..48.0).contains(&mean_width),
+            "mean width {mean_width} (target ~31.3)"
+        );
+    }
+
+    #[test]
+    fn durations_heavy_tailed() {
+        let t = google_like(2000, 13_000, 0.8, 11);
+        let mut durs: Vec<f64> = t
+            .jobs
+            .iter()
+            .flat_map(|j| j.durations.iter().map(|d| d.as_secs()))
+            .collect();
+        durs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = durs[durs.len() / 2];
+        let p99 = durs[durs.len() * 99 / 100];
+        assert!(p99 / p50 > 10.0, "p99/p50 = {}", p99 / p50);
+    }
+
+    #[test]
+    fn downsample_shrinks_and_respaces() {
+        let t = yahoo_like(2000, 3000, 0.8, 3);
+        let d = downsample(&t, 0.25, 40, 1.0, 0.1, 5);
+        assert!(d.n_jobs() > 300 && d.n_jobs() < 700, "{}", d.n_jobs());
+        let mean_width = d.n_tasks() as f64 / d.n_jobs() as f64;
+        assert!(mean_width < 5.0, "width {mean_width}");
+        // arrivals ~1 s apart on average
+        let span = d.makespan_lower_bound().as_secs();
+        let mean_iat = span / d.n_jobs() as f64;
+        assert!((0.6..1.6).contains(&mean_iat), "iat {mean_iat}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = yahoo_like(100, 3000, 0.7, 42);
+        let b = yahoo_like(100, 3000, 0.7, 42);
+        assert_eq!(a.n_tasks(), b.n_tasks());
+        assert_eq!(a.jobs[50].submit, b.jobs[50].submit);
+    }
+}

@@ -1,0 +1,129 @@
+//! Trace file format (text, one job per line):
+//!
+//! ```text
+//! # comment
+//! <submit_time_s> <job_id> <n_tasks> <dur_1_s> ... <dur_n_s>
+//! ```
+//!
+//! This mirrors the input format of the Sparrow/Eagle simulators the
+//! paper builds on. Parsing is strict: malformed lines are errors, not
+//! warnings, so workload bugs cannot silently skew experiments.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Job, Trace};
+use crate::sim::time::SimTime;
+
+pub fn parse(name: &str, text: &str) -> Result<Trace> {
+    let mut jobs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let submit: f64 = it
+            .next()
+            .context("missing submit time")?
+            .parse()
+            .with_context(|| format!("line {}: bad submit time", lineno + 1))?;
+        let id: u32 = it
+            .next()
+            .context("missing job id")?
+            .parse()
+            .with_context(|| format!("line {}: bad job id", lineno + 1))?;
+        let n: usize = it
+            .next()
+            .context("missing task count")?
+            .parse()
+            .with_context(|| format!("line {}: bad task count", lineno + 1))?;
+        let durs: Vec<SimTime> = it
+            .map(|d| d.parse::<f64>().map(SimTime::from_secs))
+            .collect::<Result<_, _>>()
+            .with_context(|| format!("line {}: bad duration", lineno + 1))?;
+        if durs.len() != n {
+            bail!(
+                "line {}: declared {} tasks but found {} durations",
+                lineno + 1,
+                n,
+                durs.len()
+            );
+        }
+        if n == 0 {
+            bail!("line {}: job with zero tasks", lineno + 1);
+        }
+        jobs.push(Job::new(id, SimTime::from_secs(submit), durs));
+    }
+    Ok(Trace::new(name, jobs))
+}
+
+pub fn encode(trace: &Trace) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# trace: {} ({} jobs)", trace.name, trace.n_jobs());
+    for j in &trace.jobs {
+        let _ = write!(out, "{} {} {}", j.submit.as_secs(), j.id, j.n_tasks());
+        for d in &j.durations {
+            let _ = write!(out, " {}", d.as_secs());
+        }
+        out.push('\n');
+    }
+    out
+}
+
+pub fn load(path: &Path) -> Result<Trace> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "trace".into());
+    parse(&name, &text)
+}
+
+pub fn save(trace: &Trace, path: &Path) -> Result<()> {
+    std::fs::write(path, encode(trace))
+        .with_context(|| format!("writing trace {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Trace::new(
+            "rt",
+            vec![
+                Job::new(0, SimTime::from_secs(0.5), vec![SimTime::from_secs(1.0)]),
+                Job::new(
+                    1,
+                    SimTime::from_secs(1.25),
+                    vec![SimTime::from_secs(0.1), SimTime::from_secs(2.0)],
+                ),
+            ],
+        );
+        let enc = encode(&t);
+        let back = parse("rt", &enc).unwrap();
+        assert_eq!(back.n_jobs(), 2);
+        assert_eq!(back.jobs[1].durations, t.jobs[1].durations);
+        assert_eq!(back.jobs[0].submit, t.jobs[0].submit);
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let t = parse("x", "# hi\n\n0.0 7 1 3.5\n").unwrap();
+        assert_eq!(t.n_jobs(), 1);
+        assert_eq!(t.jobs[0].id, 7);
+        assert_eq!(t.jobs[0].durations[0], SimTime::from_secs(3.5));
+    }
+
+    #[test]
+    fn count_mismatch_rejected() {
+        assert!(parse("x", "0.0 1 3 1.0 2.0").is_err());
+        assert!(parse("x", "0.0 1 0").is_err());
+        assert!(parse("x", "abc 1 1 1.0").is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Cross-module integration tests: full experiment paths at smoke scale,
+//! trace round-trips through the schedulers, prototype-vs-simulator
+//! agreement, and the paper's qualitative claims.
+
+use megha::config::{EagleConfig, MeghaConfig, PigeonConfig, SimParams, SparrowConfig};
+use megha::experiments::{fig2, fig3, fig4, headline, table1, Scale};
+use megha::metrics::{summarize_jobs, RunOutcome};
+use megha::sched;
+use megha::sim::time::SimTime;
+use megha::workload::synthetic::{google_like, synthetic_fixed};
+use megha::workload::trace as tracefile;
+
+#[test]
+fn table1_regenerates() {
+    let rows = table1::run(Scale::Smoke, 0);
+    assert_eq!(rows.len(), 5);
+}
+
+#[test]
+fn fig2_regenerates_with_paper_shape() {
+    let rows = fig2::run(Scale::Smoke, 0);
+    assert!(!rows.is_empty());
+    // sanity: every row completed with bounded medians
+    for r in &rows {
+        assert!(r.median_delay >= 0.0 && r.median_delay < 10.0);
+    }
+}
+
+#[test]
+fn fig3_ordering_megha_beats_sparrow_both_workloads() {
+    for w in [fig3::Workload::Yahoo, fig3::Workload::Google] {
+        let rows = fig3::compare(w, Scale::Smoke, 1);
+        let get = |n: &str| rows.iter().find(|r| r.framework == n).unwrap().all;
+        assert!(get("megha").p95 <= get("sparrow").p95, "{w:?}");
+        assert!(get("megha").mean <= get("sparrow").mean, "{w:?}");
+    }
+}
+
+#[test]
+fn headline_ratios_positive() {
+    let rows = headline::compute(Scale::Smoke, 2);
+    for r in &rows {
+        assert!(r.vs_sparrow.is_finite() && r.vs_sparrow > 0.0);
+        assert!(r.vs_eagle.is_finite() && r.vs_eagle > 0.0);
+        assert!(r.vs_pigeon.is_finite() && r.vs_pigeon > 0.0);
+    }
+}
+
+#[test]
+fn fig4_prototype_megha_vs_pigeon() {
+    let rows = fig4::compare(fig4::Workload::Yahoo, Scale::Smoke, 3).expect("prototype run");
+    assert_eq!(rows.len(), 2);
+    for r in &rows {
+        assert!(r.summary.n > 10, "{} produced too few jobs", r.framework);
+        assert!(r.summary.median.is_finite());
+    }
+}
+
+#[test]
+fn trace_file_roundtrip_through_scheduler() {
+    let dir = std::env::temp_dir().join("megha-it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rt.trace");
+    let trace = google_like(40, 500, 0.6, 9);
+    tracefile::save(&trace, &path).unwrap();
+    let back = tracefile::load(&path).unwrap();
+    assert_eq!(back.n_jobs(), trace.n_jobs());
+    assert_eq!(back.n_tasks(), trace.n_tasks());
+    // identical results from the original and round-tripped trace
+    let mut cfg = MeghaConfig::for_workers(500);
+    cfg.sim.seed = 9;
+    let a = sched::megha::simulate(&cfg, &trace);
+    let b = sched::megha::simulate(&cfg, &back);
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.inconsistencies, b.inconsistencies);
+}
+
+#[test]
+fn all_schedulers_agree_on_ideal_workload() {
+    // one tiny job on an empty DC: every architecture should deliver it
+    // with only communication overhead (well under 100 ms of delay)
+    let trace = synthetic_fixed(4, 1, 1.0, 0.1, 400, 5);
+    let outs: Vec<(&str, RunOutcome)> = vec![
+        ("megha", {
+            let mut c = MeghaConfig::for_workers(400);
+            c.sim.seed = 5;
+            sched::megha::simulate(&c, &trace)
+        }),
+        ("sparrow", {
+            let mut c = SparrowConfig::for_workers(400);
+            c.sim.seed = 5;
+            sched::sparrow::simulate(&c, &trace)
+        }),
+        ("eagle", {
+            let mut c = EagleConfig::for_workers(400);
+            c.sim.seed = 5;
+            sched::eagle::simulate(&c, &trace)
+        }),
+        ("pigeon", {
+            let mut c = PigeonConfig::for_workers(400);
+            c.sim.seed = 5;
+            sched::pigeon::simulate(&c, &trace)
+        }),
+    ];
+    for (name, out) in outs {
+        let s = summarize_jobs(&out.jobs);
+        assert!(
+            s.max < 0.1,
+            "{name}: unloaded single job should be near-ideal, got {}s",
+            s.max
+        );
+    }
+}
+
+#[test]
+fn ideal_scheduler_lower_bounds_everyone() {
+    let trace = google_like(60, 600, 0.8, 6);
+    let ideal = sched::ideal::simulate(&SimParams::default(), &trace);
+    let mut cfg = MeghaConfig::for_workers(600);
+    cfg.sim.seed = 6;
+    let megha_out = sched::megha::simulate(&cfg, &trace);
+    for (i, r) in megha_out.jobs.iter().enumerate() {
+        let ir = &ideal.jobs[i];
+        assert!(
+            r.jct() >= ir.jct(),
+            "job {i}: real JCT {:?} below ideal {:?}",
+            r.jct(),
+            ir.jct()
+        );
+    }
+}
+
+#[test]
+fn megha_gm_failure_does_not_lose_jobs() {
+    use megha::runtime::match_engine::RustMatchEngine;
+    use megha::sched::megha::FailurePlan;
+    let mut cfg = MeghaConfig::for_workers(300);
+    cfg.sim.seed = 8;
+    let trace = synthetic_fixed(60, 25, 1.0, 0.85, cfg.spec.n_workers(), 8);
+    for gm in 0..cfg.spec.n_gm {
+        let out = sched::megha::simulate_with(
+            &cfg,
+            &trace,
+            &mut RustMatchEngine,
+            Some(FailurePlan {
+                at: SimTime::from_secs(3.0),
+                gm,
+            }),
+        );
+        assert_eq!(out.jobs.len(), 25, "GM {gm} failure lost jobs");
+    }
+}
+
+#[test]
+fn heartbeat_interval_affects_staleness() {
+    // longer heartbeats → staler state → at least as many inconsistencies
+    // (aggregated over seeds to smooth stochastic noise)
+    let mut fast_total = 0u64;
+    let mut slow_total = 0u64;
+    for seed in 0..4 {
+        let trace = synthetic_fixed(80, 40, 1.0, 0.95, 960, seed + 20);
+        let mut cfg = MeghaConfig::for_workers(960);
+        cfg.sim.seed = seed;
+        cfg.heartbeat = SimTime::from_secs(1.0);
+        fast_total += sched::megha::simulate(&cfg, &trace).inconsistencies;
+        cfg.heartbeat = SimTime::from_secs(30.0);
+        slow_total += sched::megha::simulate(&cfg, &trace).inconsistencies;
+    }
+    assert!(
+        slow_total * 2 >= fast_total,
+        "staleness signal inverted: fast={fast_total} slow={slow_total}"
+    );
+}

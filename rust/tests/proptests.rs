@@ -1,0 +1,389 @@
+//! Property-based tests over the coordinator invariants (routing,
+//! batching, state management), via the in-tree proptest engine.
+
+use megha::cluster::{AvailMap, ClusterSpec, PartitionId, WorkerId};
+use megha::config::MeghaConfig;
+use megha::metrics::summarize_jobs;
+use megha::runtime::match_engine::{plan_total, MatchPlanner, RustMatchEngine};
+use megha::sched;
+use megha::util::proptest::check;
+use megha::util::rng::Rng;
+use megha::workload::synthetic::synthetic_fixed;
+
+#[test]
+fn plan_respects_capacity_and_order() {
+    check("plan-capacity-order", 200, |g| {
+        let p = g.usize_in(1, 200);
+        let mut rng = Rng::new(g.seed ^ 0x51);
+        let free: Vec<u32> = (0..p).map(|_| rng.below(100) as u32).collect();
+        let internal: Vec<bool> = (0..p).map(|_| rng.next_u64() & 3 == 0).collect();
+        let rr = rng.below(p);
+        let n = rng.below(3000);
+        let plan = RustMatchEngine.plan(&free, &internal, rr, n);
+        let total_free: usize = free.iter().map(|&f| f as usize).sum();
+
+        // 1. places exactly min(n, capacity)
+        if plan_total(&plan) != n.min(total_free) {
+            return Err(format!(
+                "placed {} of n={n}, capacity {total_free}",
+                plan_total(&plan)
+            ));
+        }
+        // 2. no partition over-allocated, no zero runs, no duplicates
+        let mut seen = vec![false; p];
+        for &(part, k) in &plan {
+            if k == 0 {
+                return Err("zero-size run".into());
+            }
+            if k > free[part] as usize {
+                return Err(format!("partition {part} over-allocated"));
+            }
+            if seen[part] {
+                return Err(format!("partition {part} appears twice"));
+            }
+            seen[part] = true;
+        }
+        // 3. internal-first: once an external partition appears, every
+        //    internal partition with capacity must be saturated
+        if let Some(first_ext) = plan.iter().position(|&(part, _)| !internal[part]) {
+            let placed: std::collections::HashMap<usize, usize> =
+                plan.iter().map(|&(p2, k)| (p2, k)).collect();
+            for part in 0..p {
+                if internal[part] && free[part] > 0 {
+                    let got = placed.get(&part).copied().unwrap_or(0);
+                    if got != free[part] as usize {
+                        return Err(format!(
+                            "external used at pos {first_ext} while internal {part} had spare"
+                        ));
+                    }
+                }
+            }
+        }
+        // 4. within each class, RR order from rr
+        let rot = |x: usize| (x + p - rr % p) % p;
+        for w in plan.windows(2) {
+            let (a, b) = (w[0].0, w[1].0);
+            if internal[a] == internal[b] && rot(a) > rot(b) {
+                return Err(format!("RR order violated: {a} before {b} (rr={rr})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bitmap_operations_model_check() {
+    check("bitmap-model", 100, |g| {
+        let n = g.usize_in(1, 500);
+        let mut rng = Rng::new(g.seed ^ 0x77);
+        let mut map = AvailMap::all_busy(n);
+        let mut model = vec![false; n];
+        for _ in 0..400 {
+            let i = rng.below(n);
+            match rng.below(4) {
+                0 => {
+                    map.set_free(i);
+                    model[i] = true;
+                }
+                1 => {
+                    map.set_busy(i);
+                    model[i] = false;
+                }
+                2 => {
+                    let lo = rng.below(n);
+                    let hi = lo + rng.below(n - lo + 1);
+                    let want = model[lo..hi].iter().filter(|&&x| x).count();
+                    if map.count_free_in(lo, hi) != want {
+                        return Err(format!("count mismatch in [{lo},{hi})"));
+                    }
+                }
+                _ => {
+                    let got = map.pop_free_in(0, n);
+                    let want = model.iter().position(|&x| x);
+                    if got != want {
+                        return Err(format!("pop {got:?} vs model {want:?}"));
+                    }
+                    if let Some(w) = got {
+                        model[w] = false;
+                    }
+                }
+            }
+        }
+        if map.free_count() != model.iter().filter(|&&x| x).count() {
+            return Err("free_count drift".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn topology_routing_total_and_disjoint() {
+    check("topology-routing", 100, |g| {
+        let spec = ClusterSpec::new(g.usize_in(1, 12), g.usize_in(1, 12), g.usize_in(1, 40));
+        // every worker maps to exactly one (partition, lm, owner) triple
+        let mut part_counts = vec![0usize; spec.n_partitions()];
+        for w in 0..spec.n_workers() as u32 {
+            let wid = WorkerId(w);
+            let p = spec.partition_of_worker(wid);
+            part_counts[p.0 as usize] += 1;
+            let lm = spec.lm_of_worker(wid);
+            let gm = spec.owner_gm_of_worker(wid);
+            if spec.partition(gm, lm) != p {
+                return Err(format!("worker {w}: partition triple inconsistent"));
+            }
+            if !spec.worker_range(p).contains(&w) {
+                return Err(format!("worker {w} outside its partition range"));
+            }
+        }
+        if part_counts.iter().any(|&c| c != spec.workers_per_partition) {
+            return Err("partition sizes unequal".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn megha_conservation_invariants() {
+    // Across random configs and loads: every task launches exactly once,
+    // every job completes, and JCT >= IdealJCT.
+    check("megha-conservation", 12, |g| {
+        let workers = g.usize_in(60, 500);
+        let mut cfg = MeghaConfig::for_workers(workers);
+        cfg.sim.seed = g.seed;
+        cfg.max_batch = g.usize_in(1, 64);
+        cfg.heartbeat = megha::sim::time::SimTime::from_secs(g.f64_in(0.5, 10.0));
+        cfg.shuffle_workers = g.bool();
+        let load = g.f64_in(0.1, 0.98);
+        let tasks_per_job = g.usize_in(1, 120);
+        let n_jobs = g.usize_in(2, 40);
+        let trace = synthetic_fixed(
+            tasks_per_job,
+            n_jobs,
+            1.0,
+            load,
+            cfg.spec.n_workers(),
+            g.seed ^ 0x99,
+        );
+        let out = sched::megha::simulate(&cfg, &trace);
+        if out.jobs.len() != n_jobs {
+            return Err(format!("{} of {} jobs completed", out.jobs.len(), n_jobs));
+        }
+        if out.tasks as usize != trace.n_tasks() {
+            return Err(format!(
+                "launched {} of {} tasks",
+                out.tasks,
+                trace.n_tasks()
+            ));
+        }
+        for r in &out.jobs {
+            if r.jct() < r.ideal_jct {
+                return Err(format!("job {} finished faster than ideal", r.job_id));
+            }
+        }
+        let s = summarize_jobs(&out.jobs);
+        if !s.p95.is_finite() || s.p95 < 0.0 {
+            return Err("bad p95".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn baselines_conservation_invariants() {
+    check("baselines-conservation", 8, |g| {
+        let workers = g.usize_in(60, 400);
+        let load = g.f64_in(0.1, 0.95);
+        let trace = synthetic_fixed(
+            g.usize_in(1, 80),
+            g.usize_in(2, 30),
+            1.0,
+            load,
+            workers,
+            g.seed ^ 0x33,
+        );
+        let n_jobs = trace.n_jobs();
+        let n_tasks = trace.n_tasks();
+
+        let mut sc = megha::config::SparrowConfig::for_workers(workers);
+        sc.sim.seed = g.seed;
+        let s = sched::sparrow::simulate(&sc, &trace);
+        if s.jobs.len() != n_jobs || s.tasks as usize != n_tasks {
+            return Err(format!("sparrow: {}/{} jobs, {}/{} tasks", s.jobs.len(), n_jobs, s.tasks, n_tasks));
+        }
+
+        let mut ec = megha::config::EagleConfig::for_workers(workers);
+        ec.sim.seed = g.seed;
+        let e = sched::eagle::simulate(&ec, &trace);
+        if e.jobs.len() != n_jobs || e.tasks as usize != n_tasks {
+            return Err(format!("eagle: {}/{} jobs, {}/{} tasks", e.jobs.len(), n_jobs, e.tasks, n_tasks));
+        }
+
+        let mut pc = megha::config::PigeonConfig::for_workers(workers);
+        pc.sim.seed = g.seed;
+        let p = sched::pigeon::simulate(&pc, &trace);
+        if p.jobs.len() != n_jobs || p.tasks as usize != n_tasks {
+            return Err(format!("pigeon: {}/{} jobs, {}/{} tasks", p.jobs.len(), n_jobs, p.tasks, n_tasks));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partition_iterators_consistent_with_ranges() {
+    check("partition-iterators", 60, |g| {
+        let spec = ClusterSpec::new(g.usize_in(1, 8), g.usize_in(1, 8), g.usize_in(1, 16));
+        for lm in 0..spec.n_lm {
+            let r = spec.cluster_worker_range(lm);
+            let via_parts: usize = spec
+                .partitions_of_lm(lm)
+                .map(|p| spec.worker_range(p).len())
+                .sum();
+            if via_parts != r.len() {
+                return Err(format!("lm {lm}: {} vs {}", via_parts, r.len()));
+            }
+        }
+        for gm in 0..spec.n_gm {
+            for p in spec.internal_partitions(gm) {
+                if spec.gm_of_partition(p) != gm {
+                    return Err("internal partition owner mismatch".into());
+                }
+            }
+        }
+        let _ = PartitionId(0);
+        Ok(())
+    });
+}
+
+#[test]
+fn trace_format_roundtrips_random_traces() {
+    use megha::sim::time::SimTime;
+    use megha::workload::{trace as tracefile, Job, Trace};
+    check("trace-roundtrip", 50, |g| {
+        let mut rng = Rng::new(g.seed ^ 0xAB);
+        let n = g.usize_in(1, 40);
+        let mut t = 0.0;
+        let jobs: Vec<Job> = (0..n as u32)
+            .map(|id| {
+                t += rng.uniform(0.0, 5.0);
+                let w = rng.range(1, 50);
+                let durs = (0..w)
+                    .map(|_| SimTime::from_secs(rng.uniform(0.05, 500.0)))
+                    .collect();
+                Job::new(id, SimTime::from_secs(t), durs)
+            })
+            .collect();
+        let trace = Trace::new("prop", jobs);
+        let enc = tracefile::encode(&trace);
+        let back = tracefile::parse("prop", &enc).map_err(|e| e.to_string())?;
+        if back.n_jobs() != trace.n_jobs() || back.n_tasks() != trace.n_tasks() {
+            return Err("job/task count drift".into());
+        }
+        for (a, b) in trace.jobs.iter().zip(&back.jobs) {
+            if a.submit != b.submit || a.durations != b.durations {
+                return Err(format!("job {} drifted", a.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn json_roundtrips_random_values() {
+    use megha::util::json::Json;
+    fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_u64() & 1 == 1),
+            2 => Json::num((rng.next_u64() % 1_000_000) as f64 / 8.0),
+            3 => {
+                let len = rng.below(12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.below(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect();
+                Json::str(s)
+            }
+            4 => Json::arr((0..rng.below(5)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => Json::obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                    .map(|(k, v)| (Box::leak(k.into_boxed_str()) as &str, v))
+                    .collect(),
+            ),
+        }
+    }
+    check("json-roundtrip", 150, |g| {
+        let mut rng = Rng::new(g.seed ^ 0xCD);
+        let v = gen_value(&mut rng, 3);
+        let enc = v.encode();
+        let back = Json::parse(&enc).map_err(|e| e.to_string())?;
+        if back != v {
+            return Err(format!("roundtrip drift: {enc}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn proto_messages_roundtrip_random() {
+    use megha::proto::messages::{MapReq, Msg, TaskSlice};
+    use megha::util::json::Json;
+    check("proto-msg-roundtrip", 80, |g| {
+        let mut rng = Rng::new(g.seed ^ 0xEF);
+        let msg = match rng.below(6) {
+            0 => Msg::Register { id: rng.below(100) as u32 },
+            1 => Msg::VerifyBatch {
+                gm: rng.below(8) as u32,
+                maps: (0..rng.below(80))
+                    .map(|_| MapReq {
+                        job: rng.below(10_000) as u32,
+                        task: rng.below(2_000) as u32,
+                        worker: rng.below(500) as u32,
+                        dur_ms: rng.below(1_000_000) as u64,
+                    })
+                    .collect(),
+            },
+            2 => Msg::BatchReply {
+                invalid: (0..rng.below(30))
+                    .map(|_| (rng.below(1000) as u32, rng.below(100) as u32))
+                    .collect(),
+                free: (0..rng.below(200)).map(|_| rng.below(500) as u32).collect(),
+            },
+            3 => Msg::TaskDone {
+                job: rng.below(1000) as u32,
+                task: rng.below(100) as u32,
+                worker: rng.below(500) as u32,
+                reuse: rng.next_u64() & 1 == 1,
+            },
+            4 => Msg::WorkerFreed { worker: rng.below(500) as u32 },
+            _ => Msg::Tasks(TaskSlice {
+                job: rng.below(1000) as u32,
+                durs_ms: (0..rng.below(50)).map(|_| rng.below(100_000) as u64).collect(),
+                high: rng.next_u64() & 1 == 1,
+            }),
+        };
+        let enc = msg.to_json().encode();
+        let back = Msg::from_json(&Json::parse(&enc).map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+        if back != msg {
+            return Err(format!("message drift: {enc}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn megha_delay_breakdown_sane() {
+    // Eq. 5 components that apply to Megha are non-negative, and comm
+    // reflects at least one network hop per launched task.
+    let mut cfg = MeghaConfig::for_workers(200);
+    cfg.sim.seed = 31;
+    let trace = synthetic_fixed(40, 20, 1.0, 0.8, cfg.spec.n_workers(), 31);
+    let out = sched::megha::simulate(&cfg, &trace);
+    assert!(out.breakdown.queue_scheduler_s >= 0.0);
+    assert!(out.breakdown.comm_s >= out.tasks as f64 * 0.0005);
+    // Megha never queues at workers; the component must stay zero
+    assert_eq!(out.breakdown.queue_worker_s, 0.0);
+}

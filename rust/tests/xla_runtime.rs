@@ -1,0 +1,130 @@
+//! L3 ⇄ L2/L1 integration: the XLA (PJRT) match engine must be
+//! bit-equivalent to the pure-Rust engine, and the XLA stats engine must
+//! agree with the Rust reference.
+//!
+//! These tests require `make artifacts` to have run; they skip (pass
+//! trivially, with a loud message) when artifacts are absent so `cargo
+//! test` works in a fresh checkout.
+
+use megha::runtime::match_engine::{MatchPlanner, RustMatchEngine};
+use megha::runtime::pjrt::{artifacts_available, XlaMatchEngine};
+use megha::runtime::stats_engine::{summarize_rust, XlaStatsEngine};
+use megha::util::proptest::check;
+use megha::util::rng::Rng;
+
+fn skip() -> bool {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        return true;
+    }
+    false
+}
+
+#[test]
+fn xla_match_engine_loads() {
+    if skip() {
+        return;
+    }
+    let mut eng = XlaMatchEngine::load_default().expect("load match artifact");
+    let plan = eng.plan(&[3, 0, 2], &[true, false, false], 0, 4);
+    assert_eq!(plan, vec![(0, 3), (2, 1)]);
+    assert_eq!(eng.name(), "xla");
+}
+
+#[test]
+fn xla_matches_rust_on_fixed_cases() {
+    if skip() {
+        return;
+    }
+    let mut xla = XlaMatchEngine::load_default().unwrap();
+    let mut rust = RustMatchEngine;
+    let cases: Vec<(Vec<u32>, Vec<bool>, usize, usize)> = vec![
+        (vec![1, 1, 1, 1], vec![false, true, false, true], 2, 4),
+        (vec![0, 0, 0], vec![true, true, true], 0, 5),
+        (vec![10, 10], vec![false, false], 1, 7),
+        (vec![5; 16], vec![false; 16], 9, 80), // exhausts capacity
+        (vec![100, 200, 300], vec![true, false, true], 2, 550), // > T chunking
+    ];
+    for (free, internal, rr, n) in cases {
+        let a = xla.plan(&free, &internal, rr, n);
+        let b = rust.plan(&free, &internal, rr, n);
+        assert_eq!(a, b, "free={free:?} rr={rr} n={n}");
+    }
+}
+
+#[test]
+fn xla_matches_rust_property() {
+    if skip() {
+        return;
+    }
+    let mut xla = XlaMatchEngine::load_default().unwrap();
+    check("xla-plan-equivalence", 40, |g| {
+        let p = g.usize_in(1, 128);
+        let mut rng = Rng::new(g.seed ^ 0xABCD);
+        let free: Vec<u32> = (0..p).map(|_| rng.below(65) as u32).collect();
+        let internal: Vec<bool> = (0..p).map(|_| rng.next_u64() & 3 == 0).collect();
+        let rr = rng.below(p);
+        let n = rng.below(1200);
+        let a = xla.plan(&free, &internal, rr, n);
+        let b = RustMatchEngine.plan(&free, &internal, rr, n);
+        if a == b {
+            Ok(())
+        } else {
+            Err(format!("divergence: p={p} rr={rr} n={n}\n xla={a:?}\nrust={b:?}"))
+        }
+    });
+}
+
+#[test]
+fn megha_sim_identical_under_both_engines() {
+    if skip() {
+        return;
+    }
+    // End-to-end: a full Megha simulation driven by the XLA planner must
+    // reproduce the Rust planner's run exactly (same event stream).
+    let mut cfg = megha::config::MeghaConfig::for_workers(200);
+    cfg.sim.seed = 42;
+    let trace =
+        megha::workload::synthetic::synthetic_fixed(40, 20, 1.0, 0.8, cfg.spec.n_workers(), 7);
+    let rust_out =
+        megha::sched::megha::simulate_with(&cfg, &trace, &mut RustMatchEngine, None);
+    let mut xla = XlaMatchEngine::load_default().unwrap();
+    let xla_out = megha::sched::megha::simulate_with(&cfg, &trace, &mut xla, None);
+    assert_eq!(rust_out.makespan, xla_out.makespan);
+    assert_eq!(rust_out.inconsistencies, xla_out.inconsistencies);
+    assert_eq!(rust_out.messages, xla_out.messages);
+    let a = megha::metrics::summarize_jobs(&rust_out.jobs);
+    let b = megha::metrics::summarize_jobs(&xla_out.jobs);
+    assert_eq!(a.p95, b.p95);
+    assert_eq!(a.median, b.median);
+}
+
+#[test]
+fn xla_stats_engine_matches_rust() {
+    if skip() {
+        return;
+    }
+    let eng = XlaStatsEngine::load_default().expect("load stats artifact");
+    let mut rng = Rng::new(99);
+    // 10_000 samples spans 3 artifact chunks (N = 4096)
+    let samples: Vec<f64> = (0..10_000).map(|_| rng.exp(0.8)).collect();
+    let edges: Vec<f64> = (0..64).map(|i| i as f64 * 0.2).collect();
+    let xla = eng.summarize(&samples, &edges).unwrap();
+    let rust = summarize_rust(&samples, &edges);
+    assert_eq!(xla.cdf, rust.cdf);
+    assert_eq!(xla.count, rust.count);
+    assert!((xla.mean() - rust.mean()).abs() < 1e-3);
+    assert!((xla.max - rust.max).abs() < 1e-4);
+}
+
+#[test]
+fn xla_stats_empty_input() {
+    if skip() {
+        return;
+    }
+    let eng = XlaStatsEngine::load_default().unwrap();
+    let edges: Vec<f64> = (0..64).map(|i| i as f64).collect();
+    let s = eng.summarize(&[], &edges).unwrap();
+    assert_eq!(s.count, 0);
+    assert!(s.cdf.iter().all(|&c| c == 0));
+}
