@@ -108,7 +108,40 @@ fn main() {
     bench_codec(&b);
     bench_ablation_batching(&b);
     bench_ablation_shuffle(&b);
+    bench_sweep_speedup(&b);
     println!("== done ==");
+}
+
+/// Parallel sweep harness: the same 4×2×4 grid executed with one thread
+/// and with all cores, comparing true sequential vs parallel wall-clock
+/// (results are bit-identical across thread counts).
+fn bench_sweep_speedup(b: &Bench) {
+    if !b.enabled("sweep/parallel") {
+        return;
+    }
+    let mk_spec = |threads: usize| megha::sweep::SweepSpec {
+        frameworks: megha::sweep::FRAMEWORKS.iter().map(|s| s.to_string()).collect(),
+        scenarios: megha::sweep::scenario_grid(
+            &megha::sweep::WorkloadKind::Fixed { tasks_per_job: 50 },
+            &[400],
+            &[0.6, 0.9],
+            40,
+            &megha::sim::net::NetModel::paper_default(),
+            None,
+        ),
+        seeds: 4,
+        base_seed: 1,
+        threads,
+    };
+    let seq = megha::sweep::run_sweep(&mk_spec(1));
+    let par = megha::sweep::run_sweep(&mk_spec(0));
+    println!(
+        "bench sweep/parallel_4x2x4                       {:>10.3} s sequential  {:>10.3} s parallel  true speedup {:.2}x on {} threads",
+        seq.wall_s,
+        par.wall_s,
+        if par.wall_s > 0.0 { seq.wall_s / par.wall_s } else { 0.0 },
+        par.threads
+    );
 }
 
 /// L1/L2/L3 hot path: the match operation, Rust vs XLA (PJRT).

@@ -37,25 +37,29 @@ pub fn sweep(scale: Scale, seed: u64) -> Vec<Fig2Row> {
             2_000,
         ),
     };
-    let mut rows = Vec::new();
+    // every (size, load) cell is an independent deterministic run:
+    // fan them out over OS threads, keeping row order = sizes × loads
+    let mut cells = Vec::new();
     for &workers in &sizes {
         for &load in &loads {
-            let mut cfg = MeghaConfig::for_workers(workers);
-            cfg.sim.seed = seed;
-            let trace = synthetic_fixed(tasks_per_job, n_jobs, 1.0, load, cfg.spec.n_workers(), seed);
-            let out = megha::simulate(&cfg, &trace);
-            let s = summarize_jobs(&out.jobs);
-            rows.push(Fig2Row {
-                workers,
-                load,
-                rps: load * workers as f64, // tasks of 1 s ⇒ demand/s = load·N
-                median_delay: s.median,
-                p95_delay: s.p95,
-                inconsistency_ratio: out.inconsistency_ratio(),
-            });
+            cells.push((workers, load));
         }
     }
-    rows
+    crate::sweep::parallel_map(cells, 0, |(workers, load)| {
+        let mut cfg = MeghaConfig::for_workers(workers);
+        cfg.sim.seed = seed;
+        let trace = synthetic_fixed(tasks_per_job, n_jobs, 1.0, load, cfg.spec.n_workers(), seed);
+        let out = megha::simulate(&cfg, &trace);
+        let s = summarize_jobs(&out.jobs);
+        Fig2Row {
+            workers,
+            load,
+            rps: load * workers as f64, // tasks of 1 s ⇒ demand/s = load·N
+            median_delay: s.median,
+            p95_delay: s.p95,
+            inconsistency_ratio: out.inconsistency_ratio(),
+        }
+    })
 }
 
 pub fn run(scale: Scale, seed: u64) -> Vec<Fig2Row> {

@@ -4,9 +4,7 @@
 //! 3a/3b: median + 95p delay in JCT over all jobs; 3c/3d: short jobs only.
 
 use super::Scale;
-use crate::config::{EagleConfig, MeghaConfig, PigeonConfig, SparrowConfig};
 use crate::metrics::{summarize_class, summarize_jobs, DelaySummary, RunOutcome};
-use crate::sched;
 use crate::workload::{JobClass, Trace};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,47 +39,26 @@ pub fn make_trace(w: Workload, scale: Scale, seed: u64) -> (Trace, usize) {
 }
 
 pub fn run_framework(name: &str, workers: usize, seed: u64, trace: &Trace) -> RunOutcome {
-    match name {
-        "megha" => {
-            let mut cfg = MeghaConfig::for_workers(workers);
-            cfg.sim.seed = seed;
-            sched::megha::simulate(&cfg, trace)
-        }
-        "sparrow" => {
-            let mut cfg = SparrowConfig::for_workers(workers);
-            cfg.sim.seed = seed;
-            sched::sparrow::simulate(&cfg, trace)
-        }
-        "eagle" => {
-            let mut cfg = EagleConfig::for_workers(workers);
-            cfg.sim.seed = seed;
-            sched::eagle::simulate(&cfg, trace)
-        }
-        "pigeon" => {
-            let mut cfg = PigeonConfig::for_workers(workers);
-            cfg.sim.seed = seed;
-            sched::pigeon::simulate(&cfg, trace)
-        }
-        other => panic!("unknown framework {other}"),
-    }
+    crate::sweep::run_framework(name, workers, seed, trace)
 }
 
-pub const FRAMEWORKS: [&str; 4] = ["megha", "sparrow", "eagle", "pigeon"];
+pub const FRAMEWORKS: [&str; 4] = crate::sweep::FRAMEWORKS;
 
+/// All four frameworks over the same trace, fanned out across OS
+/// threads via [`crate::sweep::parallel_map`] (each run is independent
+/// and deterministic, so the rows are identical to sequential
+/// execution).
 pub fn compare(w: Workload, scale: Scale, seed: u64) -> Vec<Fig3Row> {
     let (trace, workers) = make_trace(w, scale, seed);
-    FRAMEWORKS
-        .iter()
-        .map(|name| {
-            let out = run_framework(name, workers, seed, &trace);
-            Fig3Row {
-                framework: name,
-                all: summarize_jobs(&out.jobs),
-                short: summarize_class(&out.jobs, JobClass::Short),
-                long: summarize_class(&out.jobs, JobClass::Long),
-            }
-        })
-        .collect()
+    crate::sweep::parallel_map(FRAMEWORKS.to_vec(), 0, |name| {
+        let out = run_framework(name, workers, seed, &trace);
+        Fig3Row {
+            framework: name,
+            all: summarize_jobs(&out.jobs),
+            short: summarize_class(&out.jobs, JobClass::Short),
+            long: summarize_class(&out.jobs, JobClass::Long),
+        }
+    })
 }
 
 pub fn run(w: Workload, scale: Scale, seed: u64) -> Vec<Fig3Row> {

@@ -15,6 +15,9 @@ pub struct HeadlineRow {
 }
 
 pub fn compute(scale: Scale, seed: u64) -> Vec<HeadlineRow> {
+    // workloads run sequentially; the four frameworks inside each
+    // `fig3::compare` already fan out over OS threads (nesting another
+    // parallel_map here would just oversubscribe the cores)
     let mut rows = Vec::new();
     for (w, label) in [(Workload::Yahoo, "yahoo"), (Workload::Google, "google")] {
         let cmp = fig3::compare(w, scale, seed);

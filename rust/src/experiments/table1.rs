@@ -19,9 +19,14 @@ pub fn workloads(scale: Scale, seed: u64) -> Vec<Trace> {
         Scale::Default => (4_000, 2_500, 200),
         Scale::Paper => (PAPER_YAHOO_JOBS, PAPER_GOOGLE_JOBS, 2_000),
     };
-    let yahoo = yahoo_like(yahoo_jobs, 3_000, 0.85, seed);
-    let google = google_like(google_jobs, 13_000, 0.85, seed + 1);
-    let synth = synthetic_fixed(1_000, synth_jobs, 1.0, 0.8, 10_000, seed + 2);
+    // the three base generators are independent: build them in parallel
+    let base = crate::sweep::parallel_map(vec![0usize, 1, 2], 0, |i| match i {
+        0 => yahoo_like(yahoo_jobs, 3_000, 0.85, seed),
+        1 => google_like(google_jobs, 13_000, 0.85, seed + 1),
+        _ => synthetic_fixed(1_000, synth_jobs, 1.0, 0.8, 10_000, seed + 2),
+    });
+    let [yahoo, google, synth] =
+        <[Trace; 3]>::try_from(base).expect("three base generators");
     // §4.2: down-sample ×100 on tasks; arrivals Poisson(mean 1 s).
     // job_keep tuned to land near the paper's 792/784-job prototypes.
     let keep = |target: usize, total: usize| (target as f64 / total as f64).min(1.0);

@@ -7,9 +7,11 @@
 //!
 //! * **L3 (this crate)** — the scheduling systems: the Megha GM/LM
 //!   federation ([`sched::megha`]), the Sparrow / Eagle / Pigeon baselines
-//!   ([`sched`]), the deterministic event-driven simulator ([`sim`]), the
-//!   workload subsystem ([`workload`]), the metrics pipeline ([`metrics`]),
-//!   and a real TCP message-passing prototype ([`proto`]).
+//!   ([`sched`]), the deterministic event-driven simulator and its shared
+//!   driver ([`sim`], [`sim::driver`]), the parallel multi-seed sweep
+//!   harness ([`sweep`]), the workload subsystem ([`workload`]), the
+//!   metrics pipeline ([`metrics`]), and a real TCP message-passing
+//!   prototype ([`proto`]).
 //! * **L2/L1 (build-time Python)** — the GM's placement-match hot-spot as a
 //!   JAX + Pallas computation, AOT-lowered to `artifacts/*.hlo.txt` and
 //!   executed from Rust via PJRT ([`runtime`]).
@@ -34,6 +36,7 @@ pub mod proto;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 pub mod workload;
 

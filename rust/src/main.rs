@@ -6,6 +6,11 @@
 //!                (--trace FILE | --workload yahoo|google|fixed --jobs N)
 //!                [--workers N] [--load X] [--seed N] [--xla]
 //! megha prototype --scheduler megha|pigeon [--jobs N] [--time-scale X] [--xla]
+//! megha sweep [--schedulers megha,sparrow,eagle,pigeon] [--seeds N]
+//!             [--base-seed S] [--workers N1,N2,...] [--loads X1,X2,...]
+//!             [--workload yahoo|google|fixed] [--jobs N] [--tasks-per-job N]
+//!             [--net constant|jittered] [--net-ms X] [--jitter-ms X]
+//!             [--fail-gm-at T] [--threads K]
 //! megha trace gen --workload yahoo|google|fixed --jobs N --workers N
 //!                 [--load X] [--seed N] --out FILE
 //! megha trace stats --file FILE
@@ -17,6 +22,9 @@ use megha::experiments::{self, Scale};
 use megha::metrics::{summarize_class, summarize_jobs, RunOutcome};
 use megha::proto::{driver, ProtoConfig};
 use megha::runtime::match_engine::RustMatchEngine;
+use megha::sim::net::NetModel;
+use megha::sim::time::SimTime;
+use megha::sweep;
 use megha::util::args::Args;
 use megha::workload::{synthetic, trace as tracefile, JobClass, Trace};
 
@@ -40,6 +48,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "experiment" => cmd_experiment(args),
         "simulate" => cmd_simulate(args),
         "prototype" => cmd_prototype(args),
+        "sweep" => cmd_sweep(args),
         "trace" => cmd_trace(args),
         other => bail!("unknown command '{other}' (try --help)"),
     }
@@ -159,6 +168,61 @@ fn cmd_prototype(args: &Args) -> Result<()> {
         other => bail!("prototype supports megha|pigeon, not '{other}'"),
     };
     print_outcome(&scheduler, &out, args.flag("short-only"));
+    Ok(())
+}
+
+/// `megha sweep`: fan one experiment over schedulers × scenarios × seeds
+/// across OS threads, printing a percentile table plus the observed
+/// parallel speedup over sequential execution of the same runs.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let frameworks: Vec<String> = args
+        .get_or("schedulers", "megha,sparrow,eagle,pigeon")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    for f in &frameworks {
+        if !sweep::FRAMEWORKS.contains(&f.as_str()) {
+            bail!("unknown scheduler '{f}' (expected megha|sparrow|eagle|pigeon)");
+        }
+    }
+    let workload = sweep::WorkloadKind::parse(
+        &args.get_or("workload", "fixed"),
+        args.usize("tasks-per-job", 100),
+    )
+    .context("bad --workload (yahoo|google|fixed)")?;
+    let net = match args.get_or("net", "constant").as_str() {
+        "constant" => NetModel::Constant(SimTime::from_millis(args.f64("net-ms", 0.5))),
+        "jittered" => NetModel::Jittered {
+            base: SimTime::from_millis(args.f64("net-ms", 0.5)),
+            jitter: SimTime::from_millis(args.f64("jitter-ms", 0.5)),
+        },
+        other => bail!("unknown --net '{other}' (constant|jittered)"),
+    };
+    let gm_fail_at = if args.get("fail-gm-at").is_some() {
+        Some(args.f64("fail-gm-at", 0.0))
+    } else {
+        None
+    };
+    let spec = sweep::SweepSpec {
+        frameworks,
+        scenarios: sweep::scenario_grid(
+            &workload,
+            &args.usize_list("workers", &[600]),
+            &args.f64_list("loads", &[0.5, 0.8]),
+            args.usize("jobs", 100),
+            &net,
+            gm_fail_at,
+        ),
+        seeds: args.u64("seeds", 8),
+        base_seed: args.u64("base-seed", 0),
+        threads: args.usize("threads", 0),
+    };
+    if spec.frameworks.is_empty() || spec.scenarios.is_empty() || spec.seeds == 0 {
+        bail!("empty sweep: need at least one scheduler, scenario, and seed");
+    }
+    let res = sweep::run_sweep(&spec);
+    sweep::print_result(&spec, &res);
     Ok(())
 }
 

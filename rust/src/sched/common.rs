@@ -1,8 +1,88 @@
-//! Bookkeeping shared by every scheduler simulation.
+//! Bookkeeping shared by every scheduler simulation: per-job completion
+//! tracking ([`JobTracker`]), the worker-side state machine used by the
+//! probe/late-binding baselines ([`WState`], [`ProbeWorker`]), and the
+//! per-job late-binding task cursor ([`TaskCursor`]).
+
+use std::collections::VecDeque;
 
 use crate::metrics::{JobRecord, RunOutcome};
 use crate::sim::time::SimTime;
-use crate::workload::Trace;
+use crate::workload::{Job, Trace};
+
+/// Worker execution state for probe-based schedulers (Sparrow, Eagle).
+///
+/// `Busy { long }` records whether the running task is a long-job task —
+/// Sparrow (which has no job classes) always uses `long: false`; Eagle's
+/// succinct state sharing keys off `long: true`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum WState {
+    /// Free, surfacing its reservation queue.
+    Idle,
+    /// Sent a Ready RPC, waiting for the scheduler's (late-bound) reply.
+    Waiting,
+    /// Executing a task.
+    Busy { long: bool },
+}
+
+/// A worker in a probe/late-binding architecture: a queue of pending
+/// reservations (payload `Q` is scheduler-specific) plus its [`WState`].
+pub struct ProbeWorker<Q> {
+    pub queue: VecDeque<Q>,
+    pub state: WState,
+}
+
+impl<Q> ProbeWorker<Q> {
+    /// A fleet of `n` idle workers with empty queues.
+    pub fn fleet(n: usize) -> Vec<ProbeWorker<Q>> {
+        (0..n)
+            .map(|_| ProbeWorker {
+                queue: VecDeque::new(),
+                state: WState::Idle,
+            })
+            .collect()
+    }
+}
+
+/// Late-binding cursor over one job's tasks: tracks the next unlaunched
+/// task index so a Ready RPC binds tasks in order and over-provisioned
+/// probes turn into no-ops once the job is fully bound.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskCursor {
+    pub next_task: u32,
+    pub n_tasks: u32,
+}
+
+impl TaskCursor {
+    /// One cursor per job of `trace`, all starting at task 0.
+    pub fn for_trace(trace: &Trace) -> Vec<TaskCursor> {
+        trace
+            .jobs
+            .iter()
+            .map(|j| TaskCursor {
+                next_task: 0,
+                n_tasks: j.n_tasks() as u32,
+            })
+            .collect()
+    }
+
+    /// Bind the next unlaunched task of `job`, returning its index and
+    /// duration — or `None` when every task is already bound (the
+    /// caller should no-op the probe, i.e. proactive cancellation).
+    pub fn bind_next(&mut self, job: &Job) -> Option<(usize, SimTime)> {
+        if self.next_task < self.n_tasks {
+            let t = self.next_task as usize;
+            self.next_task += 1;
+            Some((t, job.durations[t]))
+        } else {
+            None
+        }
+    }
+
+    /// Whether every task has been bound.
+    pub fn exhausted(&self) -> bool {
+        self.next_task >= self.n_tasks
+    }
+}
 
 /// Tracks per-job task completion and builds [`JobRecord`]s.
 pub struct JobTracker {
@@ -97,5 +177,31 @@ mod tests {
         let trace = synthetic_fixed(1, 1, 1.0, 0.5, 10, 1);
         let t = JobTracker::new(&trace, SimTime::from_secs(90.0));
         let _ = t.into_outcome(SimTime::ZERO);
+    }
+
+    #[test]
+    fn task_cursor_binds_in_order_then_exhausts() {
+        let trace = synthetic_fixed(3, 1, 1.0, 0.5, 10, 2);
+        let mut cursors = TaskCursor::for_trace(&trace);
+        assert_eq!(cursors.len(), 1);
+        let job = &trace.jobs[0];
+        let c = &mut cursors[0];
+        for expect in 0..3usize {
+            let (t, dur) = c.bind_next(job).expect("task available");
+            assert_eq!(t, expect);
+            assert_eq!(dur, job.durations[expect]);
+        }
+        assert!(c.exhausted());
+        assert!(c.bind_next(job).is_none());
+    }
+
+    #[test]
+    fn probe_worker_fleet_starts_idle() {
+        let fleet: Vec<ProbeWorker<u32>> = ProbeWorker::fleet(4);
+        assert_eq!(fleet.len(), 4);
+        for w in &fleet {
+            assert_eq!(w.state, WState::Idle);
+            assert!(w.queue.is_empty());
+        }
     }
 }

@@ -17,20 +17,21 @@
 //! launch/completion messages, so it can race with short tasks — such
 //! long tasks queue briefly at the worker, which is the head-of-line
 //! blocking SSS exists to dodge).
+//!
+//! Runs on the shared [`crate::sim::driver`]; worker state and the
+//! late-binding cursor come from [`crate::sched::common`].
 
 use std::collections::VecDeque;
 
 use crate::cluster::AvailMap;
 use crate::config::EagleConfig;
 use crate::metrics::RunOutcome;
-use crate::sched::common::JobTracker;
-use crate::sim::event::EventQueue;
+use crate::sched::common::{ProbeWorker, TaskCursor, WState};
+use crate::sim::driver::{self, Scheduler, SimCtx};
 use crate::sim::time::SimTime;
-use crate::util::rng::Rng;
 use crate::workload::{JobClass, Trace};
 
-enum Ev {
-    Arrival(u32),
+pub enum Ev {
     /// short-job probe (reservation) arriving at a worker
     Probe { worker: u32, job: u32, retry: u8 },
     /// worker → scheduler: probe rejected, carrying the SSS bit vector
@@ -46,183 +47,186 @@ enum Ev {
     Done { job: u32, worker: u32, long: bool },
 }
 
-#[derive(Clone, Copy, PartialEq)]
-enum WState {
-    Idle,
-    Waiting,
-    Busy { long: bool },
-}
-
+/// Reservation-queue payload: a late-bound short reservation or an
+/// eagerly-bound long task that raced with a short one.
 enum QItem {
-    Reservation(u32),            // short job id (late binding)
+    Reservation(u32), // short job id (late binding)
     LongTask { job: u32, dur: SimTime },
 }
 
-struct Worker {
-    queue: VecDeque<QItem>,
-    state: WState,
+pub struct Eagle<'a> {
+    cfg: &'a EagleConfig,
+    /// workers [0, short_cut) = short partition (never runs long tasks);
+    /// workers [short_cut, n) = long partition.
+    short_cut: usize,
+    workers: Vec<ProbeWorker<QItem>>,
+    jobs: Vec<TaskCursor>,
+    classes: Vec<JobClass>,
+    /// central long-job scheduler's free view (short partition off-limits)
+    central_free: AvailMap,
+    long_q: VecDeque<(u32, SimTime)>,
+    /// authoritative "currently executing a long task" set (for SSS
+    /// replies); bit set = long-busy
+    long_busy: AvailMap,
 }
 
-struct JobSched {
-    next_task: u32,
-    n_tasks: u32,
+impl<'a> Eagle<'a> {
+    pub fn new(cfg: &'a EagleConfig, trace: &Trace) -> Eagle<'a> {
+        let n_workers = cfg.workers;
+        let short_cut = ((n_workers as f64) * cfg.short_partition_frac) as usize;
+        let mut central_free = AvailMap::all_free(n_workers);
+        for w in 0..short_cut {
+            central_free.set_busy(w); // short partition is off-limits for long
+        }
+        Eagle {
+            cfg,
+            short_cut,
+            workers: ProbeWorker::fleet(n_workers),
+            jobs: TaskCursor::for_trace(trace),
+            classes: trace
+                .jobs
+                .iter()
+                .map(|j| j.class(cfg.sim.short_threshold))
+                .collect(),
+            central_free,
+            long_q: VecDeque::new(),
+            long_busy: AvailMap::all_busy(n_workers),
+        }
+    }
+
+    fn drain_long(&mut self, ctx: &mut SimCtx<'_, Ev>) {
+        while !self.long_q.is_empty() {
+            let Some(w) = self.central_free.pop_free_in(0, self.central_free.len()) else {
+                break;
+            };
+            let (job, dur) = self.long_q.pop_front().unwrap();
+            ctx.out.decisions += 1;
+            ctx.send(Ev::LongPlace {
+                worker: w as u32,
+                job,
+                dur,
+            });
+        }
+    }
 }
 
-pub fn simulate(cfg: &EagleConfig, trace: &Trace) -> RunOutcome {
-    let n_workers = cfg.workers;
-    let short_cut = ((n_workers as f64) * cfg.short_partition_frac) as usize;
-    // workers [0, short_cut) = short partition (never runs long tasks);
-    // workers [short_cut, n) = long partition.
-    let mut rng = Rng::new(cfg.sim.seed);
-    let mut workers: Vec<Worker> = (0..n_workers)
-        .map(|_| Worker {
-            queue: VecDeque::new(),
-            state: WState::Idle,
-        })
-        .collect();
-    let mut jobs: Vec<JobSched> = trace
-        .jobs
-        .iter()
-        .map(|j| JobSched {
-            next_task: 0,
-            n_tasks: j.n_tasks() as u32,
-        })
-        .collect();
-    let classes: Vec<JobClass> = trace
-        .jobs
-        .iter()
-        .map(|j| j.class(cfg.sim.short_threshold))
-        .collect();
+impl Scheduler for Eagle<'_> {
+    type Ev = Ev;
 
-    // central long-job scheduler state
-    let mut central_free = AvailMap::all_free(n_workers);
-    for w in 0..short_cut {
-        central_free.set_busy(w); // short partition is off-limits for long
-    }
-    let mut long_q: VecDeque<(u32, SimTime)> = VecDeque::new();
-    // authoritative "currently executing a long task" set (for SSS replies)
-    let mut long_busy = AvailMap::all_busy(n_workers); // bit set = long-busy
-
-    let mut tracker = JobTracker::new(trace, cfg.sim.short_threshold);
-    let mut out = RunOutcome::default();
-    let mut q: EventQueue<Ev> = EventQueue::new();
-    for (i, j) in trace.jobs.iter().enumerate() {
-        q.push(j.submit, Ev::Arrival(i as u32));
+    fn name(&self) -> &'static str {
+        "eagle"
     }
 
-    while let Some((now, ev)) = q.pop() {
+    fn on_arrival(&mut self, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
+        match self.classes[jidx as usize] {
+            JobClass::Long => {
+                let job = &ctx.trace.jobs[jidx as usize];
+                for t in 0..job.n_tasks() {
+                    self.long_q.push_back((jidx, job.durations[t]));
+                }
+                self.drain_long(ctx);
+            }
+            JobClass::Short => {
+                // d·n probes: d distinct workers per task, duplicates
+                // allowed across tasks (as in Sparrow's batch sampling)
+                let n_workers = self.cfg.workers;
+                let n = self.jobs[jidx as usize].n_tasks as usize;
+                let d_per_task = self.cfg.probe_ratio.min(n_workers);
+                for _ in 0..n {
+                    for w in ctx.rng.sample_distinct(n_workers, d_per_task) {
+                        ctx.send(Ev::Probe {
+                            worker: w as u32,
+                            job: jidx,
+                            retry: 0,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_event(&mut self, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
         match ev {
-            Ev::Arrival(jidx) => match classes[jidx as usize] {
-                JobClass::Long => {
-                    for t in 0..trace.jobs[jidx as usize].n_tasks() {
-                        long_q.push_back((jidx, trace.jobs[jidx as usize].durations[t]));
-                    }
-                    drain_long(&mut long_q, &mut central_free, &mut q, cfg, &mut rng, &mut out);
-                }
-                JobClass::Short => {
-                    // d·n probes: d distinct workers per task, duplicates
-                    // allowed across tasks (as in Sparrow's batch sampling)
-                    let n = jobs[jidx as usize].n_tasks as usize;
-                    let d_per_task = cfg.probe_ratio.min(n_workers);
-                    for _ in 0..n {
-                        for w in rng.sample_distinct(n_workers, d_per_task) {
-                            let d = cfg.sim.net.delay(&mut rng);
-                            out.messages += 1;
-                            q.push(now + d, Ev::Probe {
-                                worker: w as u32,
-                                job: jidx,
-                                retry: 0,
-                            });
-                        }
-                    }
-                }
-            },
             Ev::Probe { worker, job, retry } => {
-                let w = &mut workers[worker as usize];
-                let is_long_busy = matches!(w.state, WState::Busy { long: true });
+                let is_long_busy =
+                    matches!(self.workers[worker as usize].state, WState::Busy { long: true });
                 if is_long_busy {
                     // SSS: reject with the current long-occupancy vector
-                    let d = cfg.sim.net.delay(&mut rng);
-                    out.messages += 1;
-                    q.push(now + d, Ev::Reject {
+                    ctx.send(Ev::Reject {
                         job,
                         retry,
-                        sss: long_busy.clone(),
+                        sss: self.long_busy.clone(),
                     });
                 } else {
+                    let w = &mut self.workers[worker as usize];
                     w.queue.push_back(QItem::Reservation(job));
                     if w.state == WState::Idle {
-                        advance_worker(worker, &mut workers, &mut q, cfg, &mut rng, &mut out);
+                        advance_worker(worker, &mut self.workers, ctx);
                     }
                 }
             }
             Ev::Reject { job, retry, sss } => {
-                out.messages += 1;
+                ctx.out.messages += 1;
+                let n_workers = self.cfg.workers;
+                let short_cut = self.short_cut;
                 // pick the re-probe target from the freshest SSS
                 let target = if retry == 0 {
                     // any worker the vector says is long-free
                     let mut pick = None;
                     for _ in 0..8 {
-                        let c = rng.below(n_workers);
+                        let c = ctx.rng.below(n_workers);
                         if !sss.is_free(c) {
                             pick = Some(c);
                             break;
                         }
                     }
-                    pick.unwrap_or_else(|| rng.below(short_cut.max(1)))
+                    pick.unwrap_or_else(|| ctx.rng.below(short_cut.max(1)))
                 } else {
                     // second rejection: random worker in the short partition
-                    rng.below(short_cut.max(1))
+                    ctx.rng.below(short_cut.max(1))
                 };
-                let d = cfg.sim.net.delay(&mut rng);
-                out.messages += 1;
-                q.push(now + d, Ev::Probe {
+                ctx.send(Ev::Probe {
                     worker: target as u32,
                     job,
                     retry: retry.saturating_add(1),
                 });
             }
             Ev::Ready { job, worker } => {
-                out.messages += 1;
-                let js = &mut jobs[job as usize];
-                let dur = if js.next_task < js.n_tasks {
-                    let t = js.next_task as usize;
-                    js.next_task += 1;
-                    out.decisions += 1;
-                    Some(trace.jobs[job as usize].durations[t])
-                } else {
-                    None
+                ctx.out.messages += 1;
+                let dur = match self.jobs[job as usize].bind_next(&ctx.trace.jobs[job as usize]) {
+                    Some((_, dur)) => {
+                        ctx.out.decisions += 1;
+                        Some(dur)
+                    }
+                    None => None,
                 };
-                let d = cfg.sim.net.delay(&mut rng);
-                out.messages += 1;
-                q.push(now + d, Ev::Launch { worker, job, dur });
+                ctx.send(Ev::Launch { worker, job, dur });
             }
             Ev::Launch { worker, job, dur } => {
-                let w = &mut workers[worker as usize];
                 match dur {
                     Some(dur) => {
-                        w.state = WState::Busy { long: false };
-                        out.tasks += 1;
-                        q.push(now + dur, Ev::Finish {
+                        self.workers[worker as usize].state = WState::Busy { long: false };
+                        ctx.out.tasks += 1;
+                        ctx.push_after(dur, Ev::Finish {
                             worker,
                             job,
                             long: false,
                         });
                     }
                     None => {
-                        w.state = WState::Idle;
-                        advance_worker(worker, &mut workers, &mut q, cfg, &mut rng, &mut out);
+                        self.workers[worker as usize].state = WState::Idle;
+                        advance_worker(worker, &mut self.workers, ctx);
                     }
                 }
             }
             Ev::LongPlace { worker, job, dur } => {
-                let w = &mut workers[worker as usize];
+                let w = &mut self.workers[worker as usize];
                 match w.state {
                     WState::Idle => {
                         w.state = WState::Busy { long: true };
-                        long_busy.set_free(worker as usize); // bit set = long-busy
-                        out.tasks += 1;
-                        q.push(now + dur, Ev::Finish {
+                        self.long_busy.set_free(worker as usize); // bit set = long-busy
+                        ctx.out.tasks += 1;
+                        ctx.push_after(dur, Ev::Finish {
                             worker,
                             job,
                             long: true,
@@ -235,90 +239,53 @@ pub fn simulate(cfg: &EagleConfig, trace: &Trace) -> RunOutcome {
                 }
             }
             Ev::Finish { worker, job, long } => {
-                let d = cfg.sim.net.delay(&mut rng);
-                out.breakdown.comm_s += d.as_secs();
-                q.push(now + d, Ev::Done { job, worker, long });
-                let w = &mut workers[worker as usize];
-                w.state = WState::Idle;
+                let d = ctx.net_delay();
+                ctx.out.breakdown.comm_s += d.as_secs();
+                ctx.push_after(d, Ev::Done { job, worker, long });
+                self.workers[worker as usize].state = WState::Idle;
                 if long {
-                    long_busy.set_busy(worker as usize);
-                    advance_worker(worker, &mut workers, &mut q, cfg, &mut rng, &mut out);
+                    self.long_busy.set_busy(worker as usize);
+                    advance_worker(worker, &mut self.workers, ctx);
                 } else {
                     // sticky batch probing: same job first
-                    let js = &mut jobs[job as usize];
-                    if js.next_task < js.n_tasks {
-                        let t = js.next_task as usize;
-                        js.next_task += 1;
-                        out.decisions += 1;
-                        w.state = WState::Busy { long: false };
-                        out.tasks += 1;
-                        q.push(
-                            now + trace.jobs[job as usize].durations[t],
-                            Ev::Finish {
+                    match self.jobs[job as usize].bind_next(&ctx.trace.jobs[job as usize]) {
+                        Some((_, dur)) => {
+                            ctx.out.decisions += 1;
+                            self.workers[worker as usize].state = WState::Busy { long: false };
+                            ctx.out.tasks += 1;
+                            ctx.push_after(dur, Ev::Finish {
                                 worker,
                                 job,
                                 long: false,
-                            },
-                        );
-                    } else {
-                        advance_worker(worker, &mut workers, &mut q, cfg, &mut rng, &mut out);
+                            });
+                        }
+                        None => {
+                            advance_worker(worker, &mut self.workers, ctx);
+                        }
                     }
                 }
             }
             Ev::Done { job, worker, long } => {
-                out.messages += 1;
-                tracker.task_done(trace, job as usize, now);
+                ctx.out.messages += 1;
+                ctx.task_done(job);
                 if long {
-                    central_free.set_free(worker as usize);
-                    drain_long(&mut long_q, &mut central_free, &mut q, cfg, &mut rng, &mut out);
+                    self.central_free.set_free(worker as usize);
+                    self.drain_long(ctx);
                 }
             }
         }
     }
-
-    debug_assert!(tracker.all_done(), "eagle lost jobs");
-    let makespan = q.now();
-    let mut outcome = tracker.into_outcome(makespan);
-    outcome.tasks = out.tasks;
-    outcome.messages = out.messages;
-    outcome.decisions = out.decisions;
-    outcome.breakdown = out.breakdown;
-    outcome
 }
 
-fn drain_long(
-    long_q: &mut VecDeque<(u32, SimTime)>,
-    central_free: &mut AvailMap,
-    q: &mut EventQueue<Ev>,
-    cfg: &EagleConfig,
-    rng: &mut Rng,
-    out: &mut RunOutcome,
-) {
-    while !long_q.is_empty() {
-        let Some(w) = central_free.pop_free_in(0, central_free.len()) else {
-            break;
-        };
-        let (job, dur) = long_q.pop_front().unwrap();
-        out.decisions += 1;
-        out.messages += 1;
-        let d = cfg.sim.net.delay(rng);
-        q.push_after(d, Ev::LongPlace {
-            worker: w as u32,
-            job,
-            dur,
-        });
-    }
+pub fn simulate(cfg: &EagleConfig, trace: &Trace) -> RunOutcome {
+    let mut sched = Eagle::new(cfg, trace);
+    driver::run(&mut sched, &cfg.sim, trace)
 }
 
-fn advance_worker(
-    worker: u32,
-    workers: &mut [Worker],
-    q: &mut EventQueue<Ev>,
-    cfg: &EagleConfig,
-    rng: &mut Rng,
-    out: &mut RunOutcome,
-) {
-    // note: long_busy bookkeeping for queued long tasks happens in Finish
+/// Idle worker surfaces its reservation queue: a short reservation turns
+/// into a Ready RPC; a queued long task starts executing immediately.
+/// (long_busy bookkeeping for queued long tasks happens in Finish.)
+fn advance_worker(worker: u32, workers: &mut [ProbeWorker<QItem>], ctx: &mut SimCtx<'_, Ev>) {
     let w = &mut workers[worker as usize];
     if w.state != WState::Idle {
         return;
@@ -326,14 +293,12 @@ fn advance_worker(
     match w.queue.pop_front() {
         Some(QItem::Reservation(job)) => {
             w.state = WState::Waiting;
-            let d = cfg.sim.net.delay(rng);
-            out.messages += 1;
-            q.push_after(d, Ev::Ready { job, worker });
+            ctx.send(Ev::Ready { job, worker });
         }
         Some(QItem::LongTask { job, dur }) => {
             w.state = WState::Busy { long: true };
-            out.tasks += 1;
-            q.push_after(dur, Ev::Finish {
+            ctx.out.tasks += 1;
+            ctx.push_after(dur, Ev::Finish {
                 worker,
                 job,
                 long: true,

@@ -1,21 +1,22 @@
-//! Discrete-event engine for the Megha protocol.
+//! Discrete-event engine for the Megha protocol, running on the shared
+//! [`crate::sim::driver`] (see `DESIGN.md` for the driver contract).
 
 use std::collections::VecDeque;
 use std::rc::Rc;
 
-use crate::cluster::AvailMap;
+use crate::cluster::{AvailMap, ClusterSpec, PartitionId, WorkerId};
 use crate::config::MeghaConfig;
 use crate::metrics::RunOutcome;
 use crate::runtime::match_engine::{MatchPlanner, RustMatchEngine};
-use crate::sched::common::JobTracker;
-use crate::sim::event::EventQueue;
+use crate::sim::driver::{self, Scheduler, SimCtx};
 use crate::sim::time::SimTime;
-use crate::util::rng::Rng;
 use crate::workload::Trace;
 
 /// One task→worker mapping inside a GM→LM verification batch.
+/// (Fields are module-private; the type is public only because it rides
+/// inside the public [`Ev::LmVerify`] variant.)
 #[derive(Clone, Debug)]
-struct Mapping {
+pub struct Mapping {
     job: u32,   // trace job index
     task: u32,  // task index within the job
     worker: u32,
@@ -23,9 +24,8 @@ struct Mapping {
 }
 
 /// Simulation events. Message events model one-way network hops.
-enum Ev {
-    /// A job from the trace reaches its GM.
-    Arrival(u32),
+/// (Trace arrivals are injected by the driver as `DriverEv::Arrival`.)
+pub enum Ev {
     /// GM→LM: verify-and-launch a batch of mappings (§3.4.1).
     LmVerify { lm: u32, gm: u32, maps: Vec<Mapping> },
     /// LM→GM: batched inconsistency reply + piggybacked cluster snapshot.
@@ -52,7 +52,7 @@ enum Ev {
 /// `version` counts LM state changes: a GM that already applied this
 /// version skips the (hot) bitmap overwrite — §Perf L3 iteration 4.
 #[derive(Clone)]
-struct Snapshot {
+pub struct Snapshot {
     lm: u32,
     version: u64,
     state: AvailMap, // global-indexed; only the LM's range is meaningful
@@ -82,15 +82,15 @@ struct Gm {
 }
 
 impl Gm {
-    fn mark_free(&mut self, spec: &crate::cluster::ClusterSpec, worker: usize) {
+    fn mark_free(&mut self, spec: &ClusterSpec, worker: usize) {
         if self.state.set_free(worker) {
-            let p = spec.partition_of_worker(crate::cluster::WorkerId(worker as u32));
+            let p = spec.partition_of_worker(WorkerId(worker as u32));
             self.counts[p.0 as usize] += 1;
         }
     }
 
     /// Re-derive the counts of one LM's partitions after a snapshot.
-    fn recount_cluster(&mut self, spec: &crate::cluster::ClusterSpec, lm: usize) {
+    fn recount_cluster(&mut self, spec: &ClusterSpec, lm: usize) {
         for p in spec.partitions_of_lm(lm) {
             let r = spec.worker_range(p);
             self.counts[p.0 as usize] =
@@ -118,6 +118,256 @@ pub struct FailurePlan {
     pub gm: usize,
 }
 
+/// The Megha GM/LM federation as a [`Scheduler`] over the shared driver.
+pub struct MeghaSim<'a> {
+    cfg: &'a MeghaConfig,
+    spec: ClusterSpec,
+    planner: &'a mut dyn MatchPlanner,
+    failure: Option<FailurePlan>,
+    gms: Vec<Gm>,
+    lms: Vec<Lm>,
+    jobs: Vec<JobState>,
+}
+
+impl<'a> MeghaSim<'a> {
+    pub fn new(
+        cfg: &'a MeghaConfig,
+        trace: &Trace,
+        planner: &'a mut dyn MatchPlanner,
+        failure: Option<FailurePlan>,
+    ) -> MeghaSim<'a> {
+        let spec = cfg.spec;
+        let n_gm = spec.n_gm;
+        let n_lm = spec.n_lm;
+        let n_part = spec.n_partitions();
+        let wpp = spec.workers_per_partition;
+        let n_workers = spec.n_workers();
+        MeghaSim {
+            cfg,
+            spec,
+            planner,
+            failure,
+            gms: (0..n_gm)
+                .map(|g| Gm {
+                    state: AvailMap::all_free(n_workers),
+                    counts: vec![wpp as u32; n_part],
+                    internal: (0..n_part)
+                        .map(|p| spec.gm_of_partition(PartitionId(p as u32)) == g)
+                        .collect(),
+                    rr: if cfg.shuffle_workers { g * n_part / n_gm } else { 0 },
+                    queue: VecDeque::new(),
+                    in_queue: vec![false; trace.n_jobs()],
+                    scan_rot: if cfg.shuffle_workers { g * wpp / n_gm } else { 0 },
+                    applied: vec![u64::MAX; n_lm],
+                })
+                .collect(),
+            lms: (0..n_lm)
+                .map(|_| Lm {
+                    state: AvailMap::all_free(n_workers),
+                    version: 0,
+                })
+                .collect(),
+            jobs: trace
+                .jobs
+                .iter()
+                .map(|j| JobState {
+                    pending: (0..j.n_tasks() as u32).collect(),
+                    enq: j.submit,
+                })
+                .collect(),
+        }
+    }
+}
+
+impl Scheduler for MeghaSim<'_> {
+    type Ev = Ev;
+
+    fn name(&self) -> &'static str {
+        "megha"
+    }
+
+    fn init(&mut self, ctx: &mut SimCtx<'_, Ev>) {
+        for lm in 0..self.spec.n_lm {
+            ctx.push(self.cfg.heartbeat, Ev::Heartbeat { lm: lm as u32 });
+        }
+        if let Some(f) = self.failure {
+            assert!(f.gm < self.spec.n_gm);
+            ctx.push(f.at, Ev::GmFail { gm: f.gm as u32 });
+        }
+    }
+
+    fn on_arrival(&mut self, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
+        let gm_id = jidx as usize % self.spec.n_gm;
+        self.jobs[jidx as usize].enq = ctx.now();
+        self.gms[gm_id].queue.push_back(jidx);
+        self.gms[gm_id].in_queue[jidx as usize] = true;
+        try_schedule(
+            gm_id,
+            &mut self.gms[gm_id],
+            &mut self.jobs,
+            &self.spec,
+            self.cfg,
+            self.planner,
+            ctx,
+        );
+    }
+
+    fn on_event(&mut self, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
+        match ev {
+            Ev::LmVerify { lm, gm, maps } => {
+                ctx.out.messages += 1;
+                let lm_entry = &mut self.lms[lm as usize];
+                let mut invalid: Vec<(u32, u32)> = Vec::new();
+                for m in maps {
+                    if lm_entry.state.is_free(m.worker as usize) {
+                        lm_entry.state.set_busy(m.worker as usize);
+                        lm_entry.version += 1;
+                        ctx.out.tasks += 1;
+                        ctx.push_after(m.dur, Ev::TaskFinish {
+                            lm,
+                            gm,
+                            job: m.job,
+                            worker: m.worker,
+                        });
+                    } else {
+                        invalid.push((m.job, m.task));
+                    }
+                }
+                if !invalid.is_empty() {
+                    ctx.out.inconsistencies += invalid.len() as u64;
+                    let retry_comm = ctx.net_delay().as_secs();
+                    ctx.out.breakdown.comm_s += invalid.len() as f64 * 2.0 * retry_comm;
+                    let lm_entry = &self.lms[lm as usize];
+                    let snap = Rc::new(Snapshot {
+                        lm,
+                        version: lm_entry.version,
+                        state: lm_entry.state.clone(),
+                    });
+                    let d = ctx.net_delay();
+                    ctx.push_after(d, Ev::GmReply { gm, invalid, snap });
+                }
+            }
+            Ev::GmReply { gm, invalid, snap } => {
+                ctx.out.messages += 1;
+                let gm_id = gm as usize;
+                let now = ctx.now();
+                apply_snapshot(&mut self.gms[gm_id], &snap, &self.spec);
+                // re-queue invalid tasks at the front (§3.4.1)
+                for &(job, task) in invalid.iter().rev() {
+                    self.jobs[job as usize].pending.push_front(task);
+                    self.jobs[job as usize].enq = now;
+                    if !self.gms[gm_id].in_queue[job as usize] {
+                        self.gms[gm_id].queue.push_front(job);
+                        self.gms[gm_id].in_queue[job as usize] = true;
+                    }
+                }
+                try_schedule(
+                    gm_id,
+                    &mut self.gms[gm_id],
+                    &mut self.jobs,
+                    &self.spec,
+                    self.cfg,
+                    self.planner,
+                    ctx,
+                );
+            }
+            Ev::TaskFinish { lm, gm, job, worker } => {
+                self.lms[lm as usize].state.set_free(worker as usize);
+                self.lms[lm as usize].version += 1;
+                let owner = self.spec.owner_gm_of_worker(WorkerId(worker));
+                let reuse = owner == gm as usize;
+                let d = ctx.net_delay();
+                let comm = ctx.net_delay().as_secs();
+                ctx.out.breakdown.comm_s += comm;
+                ctx.push_after(d, Ev::GmTaskDone { gm, job, worker, reuse });
+                if !reuse {
+                    // aperiodic update to the owner: its worker is free again
+                    let d2 = ctx.net_delay();
+                    ctx.push_after(d2, Ev::GmWorkerFreed {
+                        gm: owner as u32,
+                        worker,
+                    });
+                }
+            }
+            Ev::GmWorkerFreed { gm, worker } => {
+                ctx.out.messages += 1;
+                let gm_id = gm as usize;
+                self.gms[gm_id].mark_free(&self.spec, worker as usize);
+                try_schedule(
+                    gm_id,
+                    &mut self.gms[gm_id],
+                    &mut self.jobs,
+                    &self.spec,
+                    self.cfg,
+                    self.planner,
+                    ctx,
+                );
+            }
+            Ev::GmTaskDone { gm, job, worker, reuse } => {
+                ctx.out.messages += 1;
+                let gm_id = gm as usize;
+                ctx.task_done(job);
+                if reuse {
+                    // §3.4: the GM may map a queued task straight onto the
+                    // freed internal worker.
+                    self.gms[gm_id].mark_free(&self.spec, worker as usize);
+                }
+                try_schedule(
+                    gm_id,
+                    &mut self.gms[gm_id],
+                    &mut self.jobs,
+                    &self.spec,
+                    self.cfg,
+                    self.planner,
+                    ctx,
+                );
+            }
+            Ev::Heartbeat { lm } => {
+                // one shared snapshot per heartbeat: Rc avoids cloning the
+                // full bitmap once per GM (section Perf, L3 iteration 2)
+                let lm_entry = &self.lms[lm as usize];
+                let snap = Rc::new(Snapshot {
+                    lm,
+                    version: lm_entry.version,
+                    state: lm_entry.state.clone(),
+                });
+                for gm in 0..self.spec.n_gm {
+                    let d = ctx.net_delay();
+                    ctx.push_after(d, Ev::GmHeartbeat {
+                        gm: gm as u32,
+                        snap: snap.clone(),
+                    });
+                }
+                if !ctx.all_done() {
+                    ctx.push_after(self.cfg.heartbeat, Ev::Heartbeat { lm });
+                }
+            }
+            Ev::GmHeartbeat { gm, snap } => {
+                ctx.out.messages += 1;
+                let gm_id = gm as usize;
+                apply_snapshot(&mut self.gms[gm_id], &snap, &self.spec);
+                try_schedule(
+                    gm_id,
+                    &mut self.gms[gm_id],
+                    &mut self.jobs,
+                    &self.spec,
+                    self.cfg,
+                    self.planner,
+                    ctx,
+                );
+            }
+            Ev::GmFail { gm } => {
+                // §3.5: GMs are stateless — model a crash-restart as losing
+                // the global view entirely. Heartbeats rebuild it; pending
+                // jobs are preserved in the durable job store.
+                let gm_id = gm as usize;
+                self.gms[gm_id].state = AvailMap::all_busy(self.spec.n_workers());
+                self.gms[gm_id].counts.iter_mut().for_each(|c| *c = 0);
+            }
+        }
+    }
+}
+
 /// Simulate Megha with the default pure-Rust match engine.
 pub fn simulate(cfg: &MeghaConfig, trace: &Trace) -> RunOutcome {
     simulate_with(cfg, trace, &mut RustMatchEngine, None)
@@ -131,220 +381,11 @@ pub fn simulate_with(
     planner: &mut dyn MatchPlanner,
     failure: Option<FailurePlan>,
 ) -> RunOutcome {
-    let spec = cfg.spec;
-    let n_gm = spec.n_gm;
-    let n_lm = spec.n_lm;
-    let n_part = spec.n_partitions();
-    let wpp = spec.workers_per_partition;
-    let n_workers = spec.n_workers();
-    let mut rng = Rng::new(cfg.sim.seed);
-
-    let mut gms: Vec<Gm> = (0..n_gm)
-        .map(|g| Gm {
-            state: AvailMap::all_free(n_workers),
-            counts: vec![wpp as u32; n_part],
-            internal: (0..n_part)
-                .map(|p| spec.gm_of_partition(crate::cluster::PartitionId(p as u32)) == g)
-                .collect(),
-            rr: if cfg.shuffle_workers { g * n_part / n_gm } else { 0 },
-            queue: VecDeque::new(),
-            in_queue: vec![false; trace.n_jobs()],
-            scan_rot: if cfg.shuffle_workers { g * wpp / n_gm } else { 0 },
-            applied: vec![u64::MAX; n_lm],
-        })
-        .collect();
-    let mut lms: Vec<Lm> = (0..n_lm)
-        .map(|_| Lm {
-            state: AvailMap::all_free(n_workers),
-            version: 0,
-        })
-        .collect();
-    let mut jobs: Vec<JobState> = trace
-        .jobs
-        .iter()
-        .map(|j| JobState {
-            pending: (0..j.n_tasks() as u32).collect(),
-            enq: j.submit,
-        })
-        .collect();
-
-    let mut tracker = JobTracker::new(trace, cfg.sim.short_threshold);
-    let mut out = RunOutcome::default();
-    let mut q: EventQueue<Ev> = EventQueue::new();
-
-    for (i, j) in trace.jobs.iter().enumerate() {
-        q.push(j.submit, Ev::Arrival(i as u32));
-    }
-    for lm in 0..n_lm {
-        q.push(cfg.heartbeat, Ev::Heartbeat { lm: lm as u32 });
-    }
-    if let Some(f) = failure {
-        assert!(f.gm < n_gm);
-        q.push(f.at, Ev::GmFail { gm: f.gm as u32 });
-    }
-
-    while let Some((now, ev)) = q.pop() {
-        match ev {
-            Ev::Arrival(jidx) => {
-                let gm_id = jidx as usize % n_gm;
-                jobs[jidx as usize].enq = now;
-                gms[gm_id].queue.push_back(jidx);
-                gms[gm_id].in_queue[jidx as usize] = true;
-                try_schedule(
-                    gm_id, &mut gms[gm_id], &mut jobs, trace, &spec, cfg, planner,
-                    &mut q, &mut out, &mut rng, now,
-                );
-            }
-            Ev::LmVerify { lm, gm, maps } => {
-                out.messages += 1;
-                let lm_entry = &mut lms[lm as usize];
-                let lm_state = &mut lm_entry.state;
-                let mut invalid: Vec<(u32, u32)> = Vec::new();
-                for m in maps {
-                    if lm_state.is_free(m.worker as usize) {
-                        lm_state.set_busy(m.worker as usize);
-                        lm_entry.version += 1;
-                        out.tasks += 1;
-                        q.push(now + m.dur, Ev::TaskFinish {
-                            lm,
-                            gm,
-                            job: m.job,
-                            worker: m.worker,
-                        });
-                    } else {
-                        invalid.push((m.job, m.task));
-                    }
-                }
-                if !invalid.is_empty() {
-                    out.inconsistencies += invalid.len() as u64;
-                    out.breakdown.comm_s +=
-                        invalid.len() as f64 * 2.0 * net_s(cfg, &mut rng);
-                    let snap = Rc::new(Snapshot {
-                        lm,
-                        version: lm_entry.version,
-                        state: lm_state.clone(),
-                    });
-                    let d = net(cfg, &mut rng);
-                    q.push(now + d, Ev::GmReply { gm, invalid, snap });
-                }
-            }
-            Ev::GmReply { gm, invalid, snap } => {
-                out.messages += 1;
-                let gm_id = gm as usize;
-                apply_snapshot(&mut gms[gm_id], &snap, &spec);
-                // re-queue invalid tasks at the front (§3.4.1)
-                for &(job, task) in invalid.iter().rev() {
-                    jobs[job as usize].pending.push_front(task);
-                    jobs[job as usize].enq = now;
-                    if !gms[gm_id].in_queue[job as usize] {
-                        gms[gm_id].queue.push_front(job);
-                        gms[gm_id].in_queue[job as usize] = true;
-                    }
-                }
-                try_schedule(
-                    gm_id, &mut gms[gm_id], &mut jobs, trace, &spec, cfg, planner,
-                    &mut q, &mut out, &mut rng, now,
-                );
-            }
-            Ev::TaskFinish { lm, gm, job, worker } => {
-                lms[lm as usize].state.set_free(worker as usize);
-                lms[lm as usize].version += 1;
-                let owner = spec.owner_gm_of_worker(crate::cluster::WorkerId(worker));
-                let reuse = owner == gm as usize;
-                let d = net(cfg, &mut rng);
-                out.breakdown.comm_s += net_s(cfg, &mut rng);
-                q.push(now + d, Ev::GmTaskDone { gm, job, worker, reuse });
-                if !reuse {
-                    // aperiodic update to the owner: its worker is free again
-                    let d2 = net(cfg, &mut rng);
-                    q.push(now + d2, Ev::GmWorkerFreed {
-                        gm: owner as u32,
-                        worker,
-                    });
-                }
-            }
-            Ev::GmWorkerFreed { gm, worker } => {
-                out.messages += 1;
-                let gm_id = gm as usize;
-                gms[gm_id].mark_free(&spec, worker as usize);
-                try_schedule(
-                    gm_id, &mut gms[gm_id], &mut jobs, trace, &spec, cfg, planner,
-                    &mut q, &mut out, &mut rng, now,
-                );
-            }
-            Ev::GmTaskDone { gm, job, worker, reuse } => {
-                out.messages += 1;
-                let gm_id = gm as usize;
-                tracker.task_done(trace, job as usize, now);
-                if reuse {
-                    // §3.4: the GM may map a queued task straight onto the
-                    // freed internal worker.
-                    gms[gm_id].mark_free(&spec, worker as usize);
-                }
-                try_schedule(
-                    gm_id, &mut gms[gm_id], &mut jobs, trace, &spec, cfg, planner,
-                    &mut q, &mut out, &mut rng, now,
-                );
-            }
-            Ev::Heartbeat { lm } => {
-                // one shared snapshot per heartbeat: Rc avoids cloning the
-                // full bitmap once per GM (section Perf, L3 iteration 2)
-                let snap = Rc::new(Snapshot {
-                    lm,
-                    version: lms[lm as usize].version,
-                    state: lms[lm as usize].state.clone(),
-                });
-                for gm in 0..n_gm {
-                    let d = net(cfg, &mut rng);
-                    q.push(now + d, Ev::GmHeartbeat {
-                        gm: gm as u32,
-                        snap: snap.clone(),
-                    });
-                }
-                if !tracker.all_done() {
-                    q.push(now + cfg.heartbeat, Ev::Heartbeat { lm });
-                }
-            }
-            Ev::GmHeartbeat { gm, snap } => {
-                out.messages += 1;
-                let gm_id = gm as usize;
-                apply_snapshot(&mut gms[gm_id], &snap, &spec);
-                try_schedule(
-                    gm_id, &mut gms[gm_id], &mut jobs, trace, &spec, cfg, planner,
-                    &mut q, &mut out, &mut rng, now,
-                );
-            }
-            Ev::GmFail { gm } => {
-                // §3.5: GMs are stateless — model a crash-restart as losing
-                // the global view entirely. Heartbeats rebuild it; pending
-                // jobs are preserved in the durable job store.
-                let gm_id = gm as usize;
-                gms[gm_id].state = AvailMap::all_busy(n_workers);
-                gms[gm_id].counts.iter_mut().for_each(|c| *c = 0);
-            }
-        }
-    }
-
-    debug_assert!(tracker.all_done(), "megha lost jobs");
-    let makespan = q.now();
-    let mut outcome = tracker.into_outcome(makespan);
-    outcome.inconsistencies = out.inconsistencies;
-    outcome.tasks = out.tasks;
-    outcome.messages = out.messages;
-    outcome.decisions = out.decisions;
-    outcome.breakdown = out.breakdown;
-    outcome
+    let mut sched = MeghaSim::new(cfg, trace, planner, failure);
+    driver::run(&mut sched, &cfg.sim, trace)
 }
 
-fn net(cfg: &MeghaConfig, rng: &mut Rng) -> SimTime {
-    cfg.sim.net.delay(rng)
-}
-
-fn net_s(cfg: &MeghaConfig, rng: &mut Rng) -> f64 {
-    cfg.sim.net.delay(rng).as_secs()
-}
-
-fn apply_snapshot(gm: &mut Gm, snap: &Snapshot, spec: &crate::cluster::ClusterSpec) {
+fn apply_snapshot(gm: &mut Gm, snap: &Snapshot, spec: &ClusterSpec) {
     // skip if this exact LM state was already applied (no change since):
     // during long straggler tails most heartbeats carry unchanged state
     APPLY_TOTAL.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -362,20 +403,17 @@ fn apply_snapshot(gm: &mut Gm, snap: &Snapshot, spec: &crate::cluster::ClusterSp
 /// The GM scheduling loop: process the job queue FIFO while the global
 /// state shows capacity (§3.2). One `planner.plan` call per job batch —
 /// this is the hot path the XLA engine accelerates.
-#[allow(clippy::too_many_arguments)]
 fn try_schedule(
     gm_id: usize,
     gm: &mut Gm,
     jobs: &mut [JobState],
-    trace: &Trace,
-    spec: &crate::cluster::ClusterSpec,
+    spec: &ClusterSpec,
     cfg: &MeghaConfig,
     planner: &mut dyn MatchPlanner,
-    q: &mut EventQueue<Ev>,
-    out: &mut RunOutcome,
-    rng: &mut Rng,
-    now: SimTime,
+    ctx: &mut SimCtx<'_, Ev>,
 ) {
+    let trace = ctx.trace;
+    let now = ctx.now();
     let n_part = spec.n_partitions();
     loop {
         let Some(&jidx) = gm.queue.front() else { break };
@@ -399,11 +437,11 @@ fn try_schedule(
         // Materialize mappings and batch them per LM (§3.4.1).
         let mut batches: Vec<Vec<Mapping>> = vec![Vec::new(); spec.n_lm];
         let mut last_part = gm.rr;
-        out.breakdown.queue_scheduler_s +=
+        ctx.out.breakdown.queue_scheduler_s +=
             (now - js.enq).as_secs().max(0.0) * plan.iter().map(|&(_, k)| k).sum::<usize>() as f64;
         for (part, k) in plan {
             last_part = part;
-            let pid = crate::cluster::PartitionId(part as u32);
+            let pid = PartitionId(part as u32);
             let r = spec.worker_range(pid);
             let lm = spec.lm_of_partition(pid);
             for _ in 0..k {
@@ -418,7 +456,7 @@ fn try_schedule(
                     .expect("plan promised a free worker");
                 gm.counts[part] -= 1;
                 let task = js.pending.pop_front().expect("plan larger than job");
-                out.decisions += 1;
+                ctx.out.decisions += 1;
                 batches[lm].push(Mapping {
                     job: jidx,
                     task,
@@ -436,9 +474,9 @@ fn try_schedule(
             // cap batch size (§3.4.1): oversized batches split into
             // multiple messages to bound LM processing latency
             for chunk in maps.chunks(cfg.max_batch) {
-                let d = net(cfg, rng);
-                out.breakdown.comm_s += chunk.len() as f64 * d.as_secs();
-                q.push(now + d, Ev::LmVerify {
+                let d = ctx.net_delay();
+                ctx.out.breakdown.comm_s += chunk.len() as f64 * d.as_secs();
+                ctx.push_after(d, Ev::LmVerify {
                     lm: lm as u32,
                     gm: gm_id as u32,
                     maps: chunk.to_vec(),

@@ -23,4 +23,4 @@
 
 pub mod engine;
 
-pub use engine::{simulate, simulate_with, FailurePlan};
+pub use engine::{simulate, simulate_with, FailurePlan, MeghaSim};

@@ -1,4 +1,6 @@
-//! Scheduling architectures.
+//! Scheduling architectures. All four simulated systems implement
+//! [`crate::sim::driver::Scheduler`] and run on the shared simulation
+//! driver; shared worker-state machinery lives in [`common`].
 //!
 //! * [`megha`] — the paper's contribution: federated GM/LM scheduling on
 //!   an eventually-consistent global state (§3).

@@ -17,20 +17,19 @@
 //! The signature weakness Megha fixes: once tasks are split to a group,
 //! they can never migrate, so a hot group queues tasks while other
 //! groups idle.
+//!
+//! Runs on the shared [`crate::sim::driver`].
 
 use std::collections::VecDeque;
 
 use crate::cluster::AvailMap;
 use crate::config::PigeonConfig;
 use crate::metrics::RunOutcome;
-use crate::sched::common::JobTracker;
-use crate::sim::event::EventQueue;
+use crate::sim::driver::{self, Scheduler, SimCtx};
 use crate::sim::time::SimTime;
-use crate::util::rng::Rng;
 use crate::workload::{JobClass, Trace};
 
-enum Ev {
-    Arrival(u32),
+pub enum Ev {
     /// distributor → coordinator: a slice of a job's tasks
     CoordRecv { group: u32, job: u32, durs: Vec<SimTime>, high: bool },
     Finish { group: u32, worker: u32, job: u32 },
@@ -48,91 +47,102 @@ struct Group {
     hi_streak: usize,
 }
 
-pub fn simulate(cfg: &PigeonConfig, trace: &Trace) -> RunOutcome {
-    let n_groups = cfg.n_groups;
-    let per_group = cfg.workers / n_groups;
-    assert!(per_group >= 1, "more groups than workers");
-    let reserved_per_group = ((per_group as f64) * cfg.reserved_frac).round() as usize;
-    let general_per_group = per_group - reserved_per_group;
+pub struct Pigeon<'a> {
+    cfg: &'a PigeonConfig,
+    general_per_group: usize,
+    groups: Vec<Group>,
+}
 
-    let mut rng = Rng::new(cfg.sim.seed);
-    let mut groups: Vec<Group> = (0..n_groups)
-        .map(|_| Group {
-            general: AvailMap::all_free(general_per_group),
-            reserved: AvailMap::all_free(reserved_per_group),
-            hi_q: VecDeque::new(),
-            lo_q: VecDeque::new(),
-            hi_streak: 0,
-        })
-        .collect();
+impl<'a> Pigeon<'a> {
+    pub fn new(cfg: &'a PigeonConfig) -> Pigeon<'a> {
+        let n_groups = cfg.n_groups;
+        let per_group = cfg.workers / n_groups;
+        assert!(per_group >= 1, "more groups than workers");
+        let reserved_per_group = ((per_group as f64) * cfg.reserved_frac).round() as usize;
+        let general_per_group = per_group - reserved_per_group;
+        Pigeon {
+            cfg,
+            general_per_group,
+            groups: (0..n_groups)
+                .map(|_| Group {
+                    general: AvailMap::all_free(general_per_group),
+                    reserved: AvailMap::all_free(reserved_per_group),
+                    hi_q: VecDeque::new(),
+                    lo_q: VecDeque::new(),
+                    hi_streak: 0,
+                })
+                .collect(),
+        }
+    }
+}
 
-    let mut tracker = JobTracker::new(trace, cfg.sim.short_threshold);
-    let mut out = RunOutcome::default();
-    let mut q: EventQueue<Ev> = EventQueue::new();
-    for (i, j) in trace.jobs.iter().enumerate() {
-        q.push(j.submit, Ev::Arrival(i as u32));
+impl Scheduler for Pigeon<'_> {
+    type Ev = Ev;
+
+    fn name(&self) -> &'static str {
+        "pigeon"
     }
 
-    while let Some((now, ev)) = q.pop() {
-        match ev {
-            Ev::Arrival(jidx) => {
-                let job = &trace.jobs[jidx as usize];
-                let high = job.class(cfg.sim.short_threshold) == JobClass::Short;
-                // split evenly over all coordinators, rotating the start
-                // group so remainders spread uniformly
-                let start = jidx as usize % n_groups;
-                let mut slices: Vec<Vec<SimTime>> = vec![Vec::new(); n_groups];
-                for (t, &d) in job.durations.iter().enumerate() {
-                    slices[(start + t) % n_groups].push(d);
-                }
-                for (g, durs) in slices.into_iter().enumerate() {
-                    if durs.is_empty() {
-                        continue;
-                    }
-                    let d = cfg.sim.net.delay(&mut rng);
-                    out.messages += 1;
-                    q.push(now + d, Ev::CoordRecv {
-                        group: g as u32,
-                        job: jidx,
-                        durs,
-                        high,
-                    });
-                }
+    fn on_arrival(&mut self, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
+        let n_groups = self.cfg.n_groups;
+        let job = &ctx.trace.jobs[jidx as usize];
+        let high = job.class(self.cfg.sim.short_threshold) == JobClass::Short;
+        // split evenly over all coordinators, rotating the start
+        // group so remainders spread uniformly
+        let start = jidx as usize % n_groups;
+        let mut slices: Vec<Vec<SimTime>> = vec![Vec::new(); n_groups];
+        for (t, &d) in job.durations.iter().enumerate() {
+            slices[(start + t) % n_groups].push(d);
+        }
+        for (g, durs) in slices.into_iter().enumerate() {
+            if durs.is_empty() {
+                continue;
             }
+            ctx.send(Ev::CoordRecv {
+                group: g as u32,
+                job: jidx,
+                durs,
+                high,
+            });
+        }
+    }
+
+    fn on_event(&mut self, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
+        match ev {
             Ev::CoordRecv { group, job, durs, high } => {
-                let g = &mut groups[group as usize];
+                let general_per_group = self.general_per_group;
+                let g = &mut self.groups[group as usize];
                 for dur in durs {
                     if high {
                         // general pool first, then the reserved pool
                         if let Some(w) = g.general.pop_free_in(0, g.general.len()) {
-                            launch(&mut q, cfg, &mut rng, &mut out, group, w as u32, job, dur, now);
-                        } else if let Some(w) =
-                            g.reserved.pop_free_in(0, g.reserved.len())
-                        {
+                            launch(ctx, group, w as u32, job, dur);
+                        } else if let Some(w) = g.reserved.pop_free_in(0, g.reserved.len()) {
                             let w = (general_per_group + w) as u32;
-                            launch(&mut q, cfg, &mut rng, &mut out, group, w, job, dur, now);
+                            launch(ctx, group, w, job, dur);
                         } else {
                             g.hi_q.push_back((job, dur));
                         }
                     } else if let Some(w) = g.general.pop_free_in(0, g.general.len()) {
-                        launch(&mut q, cfg, &mut rng, &mut out, group, w as u32, job, dur, now);
+                        launch(ctx, group, w as u32, job, dur);
                     } else {
                         g.lo_q.push_back((job, dur));
                     }
                 }
             }
             Ev::Finish { group, worker, job } => {
-                let d = cfg.sim.net.delay(&mut rng);
-                out.breakdown.comm_s += d.as_secs();
-                q.push(now + d, Ev::Done { job });
-                let g = &mut groups[group as usize];
+                let d = ctx.net_delay();
+                ctx.out.breakdown.comm_s += d.as_secs();
+                ctx.push_after(d, Ev::Done { job });
+                let general_per_group = self.general_per_group;
+                let g = &mut self.groups[group as usize];
                 let w = worker as usize;
                 let is_reserved = w >= general_per_group;
                 // weighted fair dequeue for the freed worker
                 let next = if is_reserved {
                     g.hi_q.pop_front()
                 } else if !g.lo_q.is_empty()
-                    && (g.hi_streak >= cfg.wfq_weight || g.hi_q.is_empty())
+                    && (g.hi_streak >= self.cfg.wfq_weight || g.hi_q.is_empty())
                 {
                     g.hi_streak = 0;
                     g.lo_q.pop_front()
@@ -144,7 +154,7 @@ pub fn simulate(cfg: &PigeonConfig, trace: &Trace) -> RunOutcome {
                 };
                 match next {
                     Some((job, dur)) => {
-                        launch(&mut q, cfg, &mut rng, &mut out, group, worker, job, dur, now);
+                        launch(ctx, group, worker, job, dur);
                     }
                     None => {
                         if is_reserved {
@@ -156,37 +166,23 @@ pub fn simulate(cfg: &PigeonConfig, trace: &Trace) -> RunOutcome {
                 }
             }
             Ev::Done { job } => {
-                out.messages += 1;
-                tracker.task_done(trace, job as usize, now);
+                ctx.out.messages += 1;
+                ctx.task_done(job);
             }
         }
     }
-
-    debug_assert!(tracker.all_done(), "pigeon lost jobs");
-    let makespan = q.now();
-    let mut outcome = tracker.into_outcome(makespan);
-    outcome.tasks = out.tasks;
-    outcome.messages = out.messages;
-    outcome.decisions = out.decisions;
-    outcome.breakdown = out.breakdown;
-    outcome
 }
 
-#[allow(clippy::too_many_arguments)]
-fn launch(
-    q: &mut EventQueue<Ev>,
-    _cfg: &PigeonConfig,
-    _rng: &mut Rng,
-    out: &mut RunOutcome,
-    group: u32,
-    worker: u32,
-    job: u32,
-    dur: SimTime,
-    now: SimTime,
-) {
-    out.tasks += 1;
-    out.decisions += 1;
-    q.push(now + dur, Ev::Finish { group, worker, job });
+pub fn simulate(cfg: &PigeonConfig, trace: &Trace) -> RunOutcome {
+    let mut sched = Pigeon::new(cfg);
+    driver::run(&mut sched, &cfg.sim, trace)
+}
+
+/// Start a task on a (known-free) worker of `group`.
+fn launch(ctx: &mut SimCtx<'_, Ev>, group: u32, worker: u32, job: u32, dur: SimTime) {
+    ctx.out.tasks += 1;
+    ctx.out.decisions += 1;
+    ctx.push_after(dur, Ev::Finish { group, worker, job });
 }
 
 #[cfg(test)]

@@ -8,19 +8,18 @@
 //! rest. No scheduler-side queue exists; all queuing happens at workers —
 //! which is exactly the pathology (random probes queue behind busy
 //! workers while free workers exist elsewhere) that Megha removes.
-
-use std::collections::VecDeque;
+//!
+//! Runs on the shared [`crate::sim::driver`]; worker state and the
+//! late-binding cursor come from [`crate::sched::common`].
 
 use crate::config::SparrowConfig;
 use crate::metrics::RunOutcome;
-use crate::sched::common::JobTracker;
-use crate::sim::event::EventQueue;
+use crate::sched::common::{ProbeWorker, TaskCursor, WState};
+use crate::sim::driver::{self, Scheduler, SimCtx};
 use crate::sim::time::SimTime;
-use crate::util::rng::Rng;
 use crate::workload::Trace;
 
-enum Ev {
-    Arrival(u32),
+pub enum Ev {
     /// scheduler → worker: enqueue a reservation for `job`.
     Reserve { worker: u32, job: u32 },
     /// worker → scheduler: reservation reached the head; request a task.
@@ -33,145 +32,110 @@ enum Ev {
     Done { job: u32 },
 }
 
-#[derive(Clone, Copy, PartialEq)]
-enum WState {
-    Idle,
-    /// sent a Ready RPC, waiting for the scheduler's response
-    Waiting,
-    Busy,
+/// Sparrow's simulation state: a fleet of probe workers (reservation
+/// payload = job index) and one late-binding cursor per job.
+pub struct Sparrow<'a> {
+    cfg: &'a SparrowConfig,
+    workers: Vec<ProbeWorker<u32>>,
+    jobs: Vec<TaskCursor>,
 }
 
-struct Worker {
-    queue: VecDeque<u32>, // job reservations (late binding: no task yet)
-    state: WState,
+impl<'a> Sparrow<'a> {
+    pub fn new(cfg: &'a SparrowConfig, trace: &Trace) -> Sparrow<'a> {
+        Sparrow {
+            cfg,
+            workers: ProbeWorker::fleet(cfg.workers),
+            jobs: TaskCursor::for_trace(trace),
+        }
+    }
 }
 
-struct JobSched {
-    next_task: u32,  // next unlaunched task index
-    n_tasks: u32,
-}
+impl Scheduler for Sparrow<'_> {
+    type Ev = Ev;
 
-pub fn simulate(cfg: &SparrowConfig, trace: &Trace) -> RunOutcome {
-    let n_workers = cfg.workers;
-    let mut rng = Rng::new(cfg.sim.seed);
-    let mut workers: Vec<Worker> = (0..n_workers)
-        .map(|_| Worker {
-            queue: VecDeque::new(),
-            state: WState::Idle,
-        })
-        .collect();
-    let mut jobs: Vec<JobSched> = trace
-        .jobs
-        .iter()
-        .map(|j| JobSched {
-            next_task: 0,
-            n_tasks: j.n_tasks() as u32,
-        })
-        .collect();
-
-    let mut tracker = JobTracker::new(trace, cfg.sim.short_threshold);
-    let mut out = RunOutcome::default();
-    let mut q: EventQueue<Ev> = EventQueue::new();
-    for (i, j) in trace.jobs.iter().enumerate() {
-        q.push(j.submit, Ev::Arrival(i as u32));
+    fn name(&self) -> &'static str {
+        "sparrow"
     }
 
-    while let Some((now, ev)) = q.pop() {
-        match ev {
-            Ev::Arrival(jidx) => {
-                // batch sampling: d·n probes per job — d distinct workers
-                // per task, duplicates allowed across tasks (a worker may
-                // hold several reservations for one job)
-                let n = jobs[jidx as usize].n_tasks as usize;
-                let d_per_task = cfg.probe_ratio.min(n_workers);
-                for _ in 0..n {
-                    for w in rng.sample_distinct(n_workers, d_per_task) {
-                        let d = cfg.sim.net.delay(&mut rng);
-                        out.messages += 1;
-                        q.push(now + d, Ev::Reserve {
-                            worker: w as u32,
-                            job: jidx,
-                        });
-                    }
-                }
-            }
-            Ev::Reserve { worker, job } => {
-                let w = &mut workers[worker as usize];
-                w.queue.push_back(job);
-                if w.state == WState::Idle {
-                    advance_worker(worker, &mut workers, &mut q, cfg, &mut rng, &mut out);
-                }
-            }
-            Ev::Ready { job, worker } => {
-                out.messages += 1;
-                let js = &mut jobs[job as usize];
-                let dur = if js.next_task < js.n_tasks {
-                    let t = js.next_task as usize;
-                    js.next_task += 1;
-                    out.decisions += 1;
-                    Some(trace.jobs[job as usize].durations[t])
-                } else {
-                    None // proactive cancellation: all tasks already bound
-                };
-                let d = cfg.sim.net.delay(&mut rng);
-                out.messages += 1;
-                q.push(now + d, Ev::Launch { worker, job, dur });
-            }
-            Ev::Launch { worker, job, dur } => {
-                let w = &mut workers[worker as usize];
-                debug_assert!(w.state == WState::Waiting);
-                match dur {
-                    Some(dur) => {
-                        w.state = WState::Busy;
-                        out.tasks += 1;
-                        q.push(now + dur, Ev::Finish { worker, job });
-                    }
-                    None => {
-                        w.state = WState::Idle;
-                        advance_worker(worker, &mut workers, &mut q, cfg, &mut rng, &mut out);
-                    }
-                }
-            }
-            Ev::Finish { worker, job } => {
-                let d = cfg.sim.net.delay(&mut rng);
-                out.breakdown.comm_s += d.as_secs();
-                q.push(now + d, Ev::Done { job });
-                workers[worker as usize].state = WState::Idle;
-                advance_worker(worker, &mut workers, &mut q, cfg, &mut rng, &mut out);
-            }
-            Ev::Done { job } => {
-                out.messages += 1;
-                tracker.task_done(trace, job as usize, now);
+    fn on_arrival(&mut self, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
+        // batch sampling: d·n probes per job — d distinct workers
+        // per task, duplicates allowed across tasks (a worker may
+        // hold several reservations for one job)
+        let n_workers = self.cfg.workers;
+        let n = self.jobs[jidx as usize].n_tasks as usize;
+        let d_per_task = self.cfg.probe_ratio.min(n_workers);
+        for _ in 0..n {
+            for w in ctx.rng.sample_distinct(n_workers, d_per_task) {
+                ctx.send(Ev::Reserve {
+                    worker: w as u32,
+                    job: jidx,
+                });
             }
         }
     }
 
-    debug_assert!(tracker.all_done(), "sparrow lost jobs");
-    let makespan = q.now();
-    let mut outcome = tracker.into_outcome(makespan);
-    outcome.tasks = out.tasks;
-    outcome.messages = out.messages;
-    outcome.decisions = out.decisions;
-    outcome.breakdown = out.breakdown;
-    outcome
+    fn on_event(&mut self, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
+        match ev {
+            Ev::Reserve { worker, job } => {
+                let w = &mut self.workers[worker as usize];
+                w.queue.push_back(job);
+                if w.state == WState::Idle {
+                    advance_worker(worker, &mut self.workers, ctx);
+                }
+            }
+            Ev::Ready { job, worker } => {
+                ctx.out.messages += 1;
+                let dur = match self.jobs[job as usize].bind_next(&ctx.trace.jobs[job as usize]) {
+                    Some((_, dur)) => {
+                        ctx.out.decisions += 1;
+                        Some(dur)
+                    }
+                    None => None, // proactive cancellation: all tasks already bound
+                };
+                ctx.send(Ev::Launch { worker, job, dur });
+            }
+            Ev::Launch { worker, job, dur } => {
+                let w = &mut self.workers[worker as usize];
+                debug_assert!(w.state == WState::Waiting);
+                match dur {
+                    Some(dur) => {
+                        w.state = WState::Busy { long: false };
+                        ctx.out.tasks += 1;
+                        ctx.push_after(dur, Ev::Finish { worker, job });
+                    }
+                    None => {
+                        w.state = WState::Idle;
+                        advance_worker(worker, &mut self.workers, ctx);
+                    }
+                }
+            }
+            Ev::Finish { worker, job } => {
+                let d = ctx.net_delay();
+                ctx.out.breakdown.comm_s += d.as_secs();
+                ctx.push_after(d, Ev::Done { job });
+                self.workers[worker as usize].state = WState::Idle;
+                advance_worker(worker, &mut self.workers, ctx);
+            }
+            Ev::Done { job } => {
+                ctx.out.messages += 1;
+                ctx.task_done(job);
+            }
+        }
+    }
+}
+
+pub fn simulate(cfg: &SparrowConfig, trace: &Trace) -> RunOutcome {
+    let mut sched = Sparrow::new(cfg, trace);
+    driver::run(&mut sched, &cfg.sim, trace)
 }
 
 /// Idle worker pops its next reservation and RPCs the owning scheduler.
-fn advance_worker(
-    worker: u32,
-    workers: &mut [Worker],
-    q: &mut EventQueue<Ev>,
-    cfg: &SparrowConfig,
-    rng: &mut Rng,
-    out: &mut RunOutcome,
-) {
+fn advance_worker(worker: u32, workers: &mut [ProbeWorker<u32>], ctx: &mut SimCtx<'_, Ev>) {
     let w = &mut workers[worker as usize];
     debug_assert!(w.state == WState::Idle);
     if let Some(job) = w.queue.pop_front() {
         w.state = WState::Waiting;
-        let d = cfg.sim.net.delay(rng);
-        out.messages += 1;
-        q.push_after(d, Ev::Ready { job, worker });
+        ctx.send(Ev::Ready { job, worker });
     }
 }
 

@@ -1,0 +1,232 @@
+//! Shared simulation driver: the one event loop all schedulers run on.
+//!
+//! Before this layer existed every scheduler hand-rolled the same loop:
+//! push trace arrivals, pop events, thread `(queue, rng, tracker, out)`
+//! through every handler, then merge counters into a [`RunOutcome`]. The
+//! driver owns that plumbing; a scheduler only supplies its event payload
+//! type and the per-event logic via the [`Scheduler`] trait.
+//!
+//! Determinism contract: the driver injects one [`DriverEv::Arrival`] per
+//! trace job *before* calling [`Scheduler::init`], so arrival events
+//! occupy the same `(time, seq)` slots the hand-rolled loops gave them,
+//! and the single [`Rng`] (seeded from `SimParams::seed`) is handed to
+//! handlers through [`SimCtx`] in event order. A port of a hand-rolled
+//! loop that draws randomness and pushes events in the same order is
+//! therefore *bit-identical* to its pre-driver behavior — the golden
+//! tests in `tests/driver_invariants.rs` pin this down.
+
+use crate::config::SimParams;
+use crate::metrics::RunOutcome;
+use crate::sched::common::JobTracker;
+use crate::sim::event::EventQueue;
+use crate::sim::net::NetModel;
+use crate::sim::time::SimTime;
+use crate::util::rng::Rng;
+use crate::workload::Trace;
+
+/// Driver-level event: trace arrivals are injected by the driver itself;
+/// everything else is the scheduler's own payload type.
+pub enum DriverEv<E> {
+    /// Job `.0` (trace index) reaches its scheduler.
+    Arrival(u32),
+    /// A scheduler-defined event.
+    Sched(E),
+}
+
+/// Everything a scheduler may touch during one event: the clock, the
+/// event queue (wrapped so schedulers can only push their own payloads),
+/// the run's RNG and network model, the trace, completion bookkeeping,
+/// and the run-wide counters.
+pub struct SimCtx<'a, E> {
+    q: &'a mut EventQueue<DriverEv<E>>,
+    /// The run's single deterministic RNG (draw order = event order).
+    pub rng: &'a mut Rng,
+    net: &'a NetModel,
+    tracker: &'a mut JobTracker,
+    /// The workload being scheduled (read-only).
+    pub trace: &'a Trace,
+    /// Run-wide counters; merged into the final [`RunOutcome`].
+    pub out: &'a mut RunOutcome,
+}
+
+impl<E> SimCtx<'_, E> {
+    /// Current simulated time (the timestamp of the event being handled).
+    pub fn now(&self) -> SimTime {
+        self.q.now()
+    }
+
+    /// Schedule `ev` at absolute time `at`.
+    pub fn push(&mut self, at: SimTime, ev: E) {
+        self.q.push(at, DriverEv::Sched(ev));
+    }
+
+    /// Schedule `ev` after a delay from now.
+    pub fn push_after(&mut self, delay: SimTime, ev: E) {
+        self.q.push_after(delay, DriverEv::Sched(ev));
+    }
+
+    /// Draw one network latency from the run's model.
+    pub fn net_delay(&mut self) -> SimTime {
+        self.net.delay(self.rng)
+    }
+
+    /// Send `ev` over the network: one latency draw, one message counted,
+    /// delivery scheduled after the drawn delay.
+    pub fn send(&mut self, ev: E) {
+        let d = self.net_delay();
+        self.out.messages += 1;
+        self.push_after(d, ev);
+    }
+
+    /// Record one finished task of `job`; returns true if the job is done.
+    pub fn task_done(&mut self, job: u32) -> bool {
+        let now = self.q.now();
+        self.tracker.task_done(self.trace, job as usize, now)
+    }
+
+    /// Whether every job in the trace has completed.
+    pub fn all_done(&self) -> bool {
+        self.tracker.all_done()
+    }
+}
+
+/// A scheduling architecture, expressed as reactions to events.
+///
+/// The driver calls [`init`](Scheduler::init) once (after arrival
+/// injection — initial events get queue positions *after* all arrivals),
+/// then dispatches every popped event to [`on_arrival`](Scheduler::on_arrival)
+/// or [`on_event`](Scheduler::on_event) until the queue drains.
+pub trait Scheduler {
+    /// The scheduler's own event payload type.
+    type Ev;
+
+    /// Architecture name (for diagnostics and sweep tables).
+    fn name(&self) -> &'static str;
+
+    /// One-time setup: push recurring events (heartbeats), failure
+    /// injections, etc. Default: nothing.
+    fn init(&mut self, _ctx: &mut SimCtx<'_, Self::Ev>) {}
+
+    /// A job from the trace arrived (index into `ctx.trace.jobs`).
+    fn on_arrival(&mut self, job: u32, ctx: &mut SimCtx<'_, Self::Ev>);
+
+    /// A scheduler-defined event fired.
+    fn on_event(&mut self, ev: Self::Ev, ctx: &mut SimCtx<'_, Self::Ev>);
+}
+
+/// Run `sched` over `trace` to completion and collect the outcome.
+///
+/// Panics (via [`JobTracker::into_outcome`]) if the scheduler loses
+/// tasks — a scheduler that strands work is a bug, not a statistic.
+pub fn run<S: Scheduler>(sched: &mut S, params: &SimParams, trace: &Trace) -> RunOutcome {
+    let mut rng = Rng::new(params.seed);
+    let mut tracker = JobTracker::new(trace, params.short_threshold);
+    let mut out = RunOutcome::default();
+    let mut q: EventQueue<DriverEv<S::Ev>> = EventQueue::new();
+
+    for (i, j) in trace.jobs.iter().enumerate() {
+        q.push(j.submit, DriverEv::Arrival(i as u32));
+    }
+    {
+        let mut ctx = SimCtx {
+            q: &mut q,
+            rng: &mut rng,
+            net: &params.net,
+            tracker: &mut tracker,
+            trace,
+            out: &mut out,
+        };
+        sched.init(&mut ctx);
+    }
+
+    while let Some((_, ev)) = q.pop() {
+        let mut ctx = SimCtx {
+            q: &mut q,
+            rng: &mut rng,
+            net: &params.net,
+            tracker: &mut tracker,
+            trace,
+            out: &mut out,
+        };
+        match ev {
+            DriverEv::Arrival(j) => sched.on_arrival(j, &mut ctx),
+            DriverEv::Sched(e) => sched.on_event(e, &mut ctx),
+        }
+    }
+
+    debug_assert!(tracker.all_done(), "{} lost jobs", sched.name());
+    let makespan = q.now();
+    let mut outcome = tracker.into_outcome(makespan);
+    outcome.inconsistencies = out.inconsistencies;
+    outcome.tasks = out.tasks;
+    outcome.messages = out.messages;
+    outcome.decisions = out.decisions;
+    outcome.breakdown = out.breakdown;
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::synthetic::synthetic_fixed;
+
+    /// Toy scheduler: runs every task immediately on arrival (infinite
+    /// DC), completion after one network hop.
+    struct Immediate;
+
+    enum ToyEv {
+        Done { job: u32 },
+    }
+
+    impl Scheduler for Immediate {
+        type Ev = ToyEv;
+
+        fn name(&self) -> &'static str {
+            "immediate"
+        }
+
+        fn on_arrival(&mut self, job: u32, ctx: &mut SimCtx<'_, ToyEv>) {
+            let durs = ctx.trace.jobs[job as usize].durations.clone();
+            for dur in durs {
+                ctx.out.tasks += 1;
+                ctx.out.decisions += 1;
+                let d = ctx.net_delay();
+                ctx.push_after(dur + d, ToyEv::Done { job });
+            }
+        }
+
+        fn on_event(&mut self, ev: ToyEv, ctx: &mut SimCtx<'_, ToyEv>) {
+            match ev {
+                ToyEv::Done { job } => {
+                    ctx.out.messages += 1;
+                    ctx.task_done(job);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn driver_completes_all_jobs() {
+        let trace = synthetic_fixed(5, 10, 1.0, 0.5, 100, 1);
+        let params = SimParams::default();
+        let out = run(&mut Immediate, &params, &trace);
+        assert_eq!(out.jobs.len(), 10);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+        assert_eq!(out.messages as usize, trace.n_tasks());
+        // every job finishes one hop after its longest task
+        for (r, j) in out.jobs.iter().zip(trace.jobs.iter()) {
+            assert_eq!(r.complete, j.submit + j.ideal_jct() + SimTime::from_millis(0.5));
+        }
+    }
+
+    #[test]
+    fn driver_is_deterministic() {
+        let trace = synthetic_fixed(8, 12, 1.0, 0.7, 80, 2);
+        let mut params = SimParams::default();
+        params.seed = 9;
+        let a = run(&mut Immediate, &params, &trace);
+        let b = run(&mut Immediate, &params, &trace);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.messages, b.messages);
+    }
+}

@@ -2,13 +2,18 @@
 //!
 //! All four schedulers (Megha, Sparrow, Eagle, Pigeon) run on this engine:
 //! a totally-ordered event queue ([`event::EventQueue`]), microsecond
-//! simulated time ([`time::SimTime`]), and the paper's constant-latency
-//! network model ([`net::NetModel`], 0.5 ms per message, §4.1).
+//! simulated time ([`time::SimTime`]), the paper's constant-latency
+//! network model ([`net::NetModel`], 0.5 ms per message, §4.1), and the
+//! shared simulation driver ([`driver`]) that owns the event loop,
+//! arrival injection, RNG, and completion bookkeeping for every
+//! architecture implementing [`driver::Scheduler`].
 
+pub mod driver;
 pub mod event;
 pub mod net;
 pub mod time;
 
+pub use driver::{Scheduler, SimCtx};
 pub use event::EventQueue;
 pub use net::NetModel;
 pub use time::SimTime;

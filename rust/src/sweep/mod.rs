@@ -1,0 +1,563 @@
+//! Parallel multi-seed / multi-scenario sweep harness.
+//!
+//! One *sweep* fans a single experiment out over `frameworks × scenarios
+//! × seeds` runs across OS threads. Every run is an independent, fully
+//! deterministic simulation (the unified [`crate::sim::driver`] makes
+//! all four architectures pure functions of `(config, trace, seed)`), so
+//! the sweep is embarrassingly parallel and its aggregate output is
+//! bit-identical regardless of thread count or completion order.
+//!
+//! Seeding: the per-run seed is [`run_seed`]`(base, scenario, rep)` — a
+//! SplitMix64-style mix, so seeds are decorrelated across the grid but
+//! *shared across frameworks*: every architecture sees the same trace
+//! for a given (scenario, rep), which is what makes cross-framework
+//! comparisons paired rather than noise-on-noise.
+//!
+//! The underlying thread-pool primitive, [`parallel_map`], is exported
+//! for the experiment harness (Fig. 2/3, Table 1 regeneration run their
+//! independent cells through it).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::config::{EagleConfig, MeghaConfig, PigeonConfig, SparrowConfig};
+use crate::metrics::{summarize_jobs, DelaySummary, RunOutcome};
+use crate::runtime::match_engine::RustMatchEngine;
+use crate::sched;
+use crate::sched::megha::FailurePlan;
+use crate::sim::net::NetModel;
+use crate::sim::time::SimTime;
+use crate::util::stats::{mean, percentile};
+use crate::workload::{synthetic, Trace};
+
+/// The four simulated architectures, in canonical reporting order.
+pub const FRAMEWORKS: [&str; 4] = ["megha", "sparrow", "eagle", "pigeon"];
+
+/// Resolve a thread-count request: `0` means one thread per available
+/// core.
+pub fn effective_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+/// Apply `f` to every item on a pool of `threads` OS threads (0 = one
+/// per core), returning results in input order. Work is distributed by
+/// atomic index-stealing, so heterogeneous run times load-balance.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = effective_threads(threads).min(n);
+    if threads <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("item taken twice");
+                let r = f(item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("worker exited before producing a result")
+        })
+        .collect()
+}
+
+/// Deterministic per-run seed: a SplitMix64-style mix of the sweep's
+/// base seed, the scenario index, and the repetition index. Independent
+/// of framework (paired traces) and of thread scheduling.
+pub fn run_seed(base: u64, scenario: u64, rep: u64) -> u64 {
+    let mut z = base
+        ^ scenario.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ rep.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Which synthetic workload generator a scenario draws from.
+#[derive(Clone, Debug)]
+pub enum WorkloadKind {
+    /// Heavy-tailed Yahoo-like trace (§4.1).
+    Yahoo,
+    /// Google-like sub-trace (§4.1).
+    Google,
+    /// The paper's synthetic workload: jobs of `tasks_per_job` × 1 s tasks.
+    Fixed { tasks_per_job: usize },
+}
+
+impl WorkloadKind {
+    pub fn parse(s: &str, tasks_per_job: usize) -> Option<WorkloadKind> {
+        match s {
+            "yahoo" => Some(WorkloadKind::Yahoo),
+            "google" => Some(WorkloadKind::Google),
+            "fixed" => Some(WorkloadKind::Fixed { tasks_per_job }),
+            _ => None,
+        }
+    }
+}
+
+/// One cell of the sweep grid: a DC size, an offered load, a workload
+/// shape, a network model (constant vs jittered), and optional GM
+/// failure injection (Megha only; §3.5).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub workload: WorkloadKind,
+    pub workers: usize,
+    pub jobs: usize,
+    pub load: f64,
+    pub net: NetModel,
+    /// Fail GM 0 at this many simulated seconds (Megha runs only).
+    pub gm_fail_at: Option<f64>,
+}
+
+impl Scenario {
+    pub fn make_trace(&self, seed: u64) -> Trace {
+        match self.workload {
+            WorkloadKind::Yahoo => synthetic::yahoo_like(self.jobs, self.workers, self.load, seed),
+            WorkloadKind::Google => {
+                synthetic::google_like(self.jobs, self.workers, self.load, seed)
+            }
+            WorkloadKind::Fixed { tasks_per_job } => synthetic::synthetic_fixed(
+                tasks_per_job,
+                self.jobs,
+                1.0,
+                self.load,
+                self.workers,
+                seed,
+            ),
+        }
+    }
+}
+
+/// Build the `workers × loads` scenario grid for one workload/net choice.
+pub fn scenario_grid(
+    workload: &WorkloadKind,
+    workers_list: &[usize],
+    loads: &[f64],
+    jobs: usize,
+    net: &NetModel,
+    gm_fail_at: Option<f64>,
+) -> Vec<Scenario> {
+    let kind = match workload {
+        WorkloadKind::Yahoo => "yahoo",
+        WorkloadKind::Google => "google",
+        WorkloadKind::Fixed { .. } => "fixed",
+    };
+    let mut out = Vec::new();
+    for &workers in workers_list {
+        for &load in loads {
+            out.push(Scenario {
+                name: format!("{kind}-w{workers}-l{load:.2}"),
+                workload: workload.clone(),
+                workers,
+                jobs,
+                load,
+                net: net.clone(),
+                gm_fail_at,
+            });
+        }
+    }
+    out
+}
+
+/// The one dispatch table from framework name to simulation: paper-shaped
+/// config for `workers`, with the run's seed, an explicit network model,
+/// and optional GM failure injection (Megha only; ignored by baselines).
+/// `fig3::run_framework`, [`run_one`] and the cross-scheduler tests all
+/// route through here.
+pub fn run_framework_with(
+    framework: &str,
+    workers: usize,
+    seed: u64,
+    net: &NetModel,
+    gm_fail_at: Option<f64>,
+    trace: &Trace,
+) -> RunOutcome {
+    match framework {
+        "megha" => {
+            let mut cfg = MeghaConfig::for_workers(workers);
+            cfg.sim.seed = seed;
+            cfg.sim.net = net.clone();
+            let failure = gm_fail_at.map(|at| FailurePlan {
+                at: SimTime::from_secs(at),
+                gm: 0,
+            });
+            sched::megha::simulate_with(&cfg, trace, &mut RustMatchEngine, failure)
+        }
+        "sparrow" => {
+            let mut cfg = SparrowConfig::for_workers(workers);
+            cfg.sim.seed = seed;
+            cfg.sim.net = net.clone();
+            sched::sparrow::simulate(&cfg, trace)
+        }
+        "eagle" => {
+            let mut cfg = EagleConfig::for_workers(workers);
+            cfg.sim.seed = seed;
+            cfg.sim.net = net.clone();
+            sched::eagle::simulate(&cfg, trace)
+        }
+        "pigeon" => {
+            let mut cfg = PigeonConfig::for_workers(workers);
+            cfg.sim.seed = seed;
+            cfg.sim.net = net.clone();
+            sched::pigeon::simulate(&cfg, trace)
+        }
+        other => panic!("unknown framework '{other}'"),
+    }
+}
+
+/// [`run_framework_with`] on the paper-default network model.
+pub fn run_framework(framework: &str, workers: usize, seed: u64, trace: &Trace) -> RunOutcome {
+    run_framework_with(framework, workers, seed, &NetModel::paper_default(), None, trace)
+}
+
+/// Run one (framework, scenario, seed) cell through the unified driver.
+pub fn run_one(framework: &str, sc: &Scenario, seed: u64) -> RunOutcome {
+    let trace = sc.make_trace(seed);
+    run_framework_with(framework, sc.workers, seed, &sc.net, sc.gm_fail_at, &trace)
+}
+
+/// The full sweep request.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub frameworks: Vec<String>,
+    pub scenarios: Vec<Scenario>,
+    /// Repetitions per cell (seed indices 0..seeds).
+    pub seeds: u64,
+    pub base_seed: u64,
+    /// OS threads (0 = one per core).
+    pub threads: usize,
+}
+
+/// One completed run of the sweep.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub framework: String,
+    pub scenario: usize,
+    pub rep: u64,
+    pub seed: u64,
+    pub summary: DelaySummary,
+    pub inconsistency_ratio: f64,
+    pub messages: u64,
+    pub makespan_s: f64,
+    /// Wall-clock of this run on its worker thread.
+    pub wall_s: f64,
+}
+
+/// All records plus timing. `cpu_s` is the sum of per-run simulation
+/// wall times and `wall_s` the parallel elapsed time of the *run phase
+/// only* (trace synthesis is timed separately as `gen_s`, so the two
+/// sides of the speedup ratio measure the same work). `cpu_s / wall_s`
+/// estimates the speedup over running the same cells sequentially — an
+/// *upper bound*, since concurrent runs contend for cores/caches and so
+/// each run's measured time is itself inflated versus a solo run. For
+/// an honest baseline, re-run the identical sweep with `threads: 1`
+/// (results are bit-identical) and compare the two `wall_s` values.
+pub struct SweepResult {
+    pub records: Vec<RunRecord>,
+    /// Elapsed wall-clock of the simulation phase.
+    pub wall_s: f64,
+    /// Elapsed wall-clock of (parallel) trace generation.
+    pub gen_s: f64,
+    pub cpu_s: f64,
+    pub threads: usize,
+}
+
+impl SweepResult {
+    /// Estimated parallel speedup (see the struct docs for its bias).
+    pub fn speedup(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.cpu_s / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Execute every `(framework, scenario, rep)` cell in parallel.
+///
+/// Traces are generated once per (scenario, rep) — all frameworks share
+/// the same trace by construction ([`run_seed`] ignores the framework),
+/// so regenerating per run would only quadruple the workload-synthesis
+/// cost for byte-identical inputs.
+pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
+    let n_rep = spec.seeds as usize;
+    let mut cell_keys: Vec<(usize, u64)> = Vec::new();
+    for si in 0..spec.scenarios.len() {
+        for rep in 0..spec.seeds {
+            cell_keys.push((si, rep));
+        }
+    }
+    let mut keys: Vec<(usize, usize, u64)> = Vec::new();
+    for fi in 0..spec.frameworks.len() {
+        for &(si, rep) in &cell_keys {
+            keys.push((fi, si, rep));
+        }
+    }
+    let threads = effective_threads(spec.threads).min(keys.len().max(1));
+    let t_gen = Instant::now();
+    let traces: Vec<Trace> = parallel_map(cell_keys, threads, |(si, rep)| {
+        spec.scenarios[si].make_trace(run_seed(spec.base_seed, si as u64, rep))
+    });
+    let gen_s = t_gen.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let records = parallel_map(keys, threads, |(fi, si, rep)| {
+        let framework = &spec.frameworks[fi];
+        let sc = &spec.scenarios[si];
+        let seed = run_seed(spec.base_seed, si as u64, rep);
+        let trace = &traces[si * n_rep + rep as usize];
+        let r0 = Instant::now();
+        let out = run_framework_with(framework, sc.workers, seed, &sc.net, sc.gm_fail_at, trace);
+        RunRecord {
+            framework: framework.clone(),
+            scenario: si,
+            rep,
+            seed,
+            summary: summarize_jobs(&out.jobs),
+            inconsistency_ratio: out.inconsistency_ratio(),
+            messages: out.messages,
+            makespan_s: out.makespan.as_secs(),
+            wall_s: r0.elapsed().as_secs_f64(),
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let cpu_s = records.iter().map(|r| r.wall_s).sum();
+    SweepResult {
+        records,
+        wall_s,
+        gen_s,
+        cpu_s,
+        threads,
+    }
+}
+
+/// Per-(scenario, framework) aggregate over seeds: percentile table of
+/// the per-run delay summaries.
+#[derive(Clone, Debug)]
+pub struct AggRow {
+    pub framework: String,
+    pub scenario: usize,
+    pub runs: usize,
+    /// Median across seeds of the per-run median delay.
+    pub median_p50: f64,
+    pub median_min: f64,
+    pub median_max: f64,
+    /// Median / 95th percentile across seeds of the per-run p95 delay.
+    pub p95_p50: f64,
+    pub p95_p95: f64,
+    /// Mean of per-run mean delays.
+    pub mean: f64,
+    pub inconsistency: f64,
+}
+
+pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
+    // one grouping pass (records from foreign specs are ignored), then
+    // rows emitted in spec order: scenario-major, framework-minor
+    let nf = spec.frameworks.len();
+    let mut groups: Vec<Vec<&RunRecord>> = vec![Vec::new(); spec.scenarios.len() * nf];
+    for r in records {
+        if r.scenario >= spec.scenarios.len() {
+            continue;
+        }
+        if let Some(fi) = spec.frameworks.iter().position(|f| f == &r.framework) {
+            groups[r.scenario * nf + fi].push(r);
+        }
+    }
+    let mut rows = Vec::new();
+    for si in 0..spec.scenarios.len() {
+        for (fi, fw) in spec.frameworks.iter().enumerate() {
+            let rs = &groups[si * nf + fi];
+            if rs.is_empty() {
+                continue;
+            }
+            let medians: Vec<f64> = rs.iter().map(|r| r.summary.median).collect();
+            let p95s: Vec<f64> = rs.iter().map(|r| r.summary.p95).collect();
+            let means: Vec<f64> = rs.iter().map(|r| r.summary.mean).collect();
+            let incons: Vec<f64> = rs.iter().map(|r| r.inconsistency_ratio).collect();
+            rows.push(AggRow {
+                framework: fw.clone(),
+                scenario: si,
+                runs: rs.len(),
+                median_p50: percentile(&medians, 50.0),
+                median_min: medians.iter().copied().fold(f64::INFINITY, f64::min),
+                median_max: medians.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+                p95_p50: percentile(&p95s, 50.0),
+                p95_p95: percentile(&p95s, 95.0),
+                mean: mean(&means),
+                inconsistency: mean(&incons),
+            });
+        }
+    }
+    rows
+}
+
+/// Print the aggregate percentile table plus the speedup line.
+pub fn print_result(spec: &SweepSpec, result: &SweepResult) {
+    println!(
+        "\n=== sweep: {} framework(s) x {} scenario(s) x {} seed(s) = {} runs on {} threads ===",
+        spec.frameworks.len(),
+        spec.scenarios.len(),
+        spec.seeds,
+        result.records.len(),
+        result.threads
+    );
+    println!(
+        "{:<22} {:<9} {:>4} {:>10} {:>21} {:>10} {:>10} {:>10} {:>12}",
+        "scenario",
+        "framework",
+        "runs",
+        "med(s)",
+        "med range",
+        "p95(s)",
+        "p95^95",
+        "mean(s)",
+        "incons/task"
+    );
+    let rows = aggregate(spec, &result.records);
+    for r in &rows {
+        println!(
+            "{:<22} {:<9} {:>4} {:>10.4} [{:>9.4},{:>9.4}] {:>10.3} {:>10.3} {:>10.3} {:>12.5}",
+            spec.scenarios[r.scenario].name,
+            r.framework,
+            r.runs,
+            r.median_p50,
+            r.median_min,
+            r.median_max,
+            r.p95_p50,
+            r.p95_p95,
+            r.mean,
+            r.inconsistency
+        );
+    }
+    println!(
+        "trace-gen {:.2}s | run wall-clock {:.2}s | summed run time {:.2}s | \
+         est. speedup {:.2}x ({} threads; rerun with --threads 1 for an exact \
+         sequential baseline)",
+        result.gen_s,
+        result.wall_s,
+        result.cpu_s,
+        result.speedup(),
+        result.threads
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(threads: usize) -> SweepSpec {
+        SweepSpec {
+            frameworks: vec!["megha".into(), "sparrow".into()],
+            scenarios: scenario_grid(
+                &WorkloadKind::Fixed { tasks_per_job: 10 },
+                &[120],
+                &[0.4, 0.8],
+                12,
+                &NetModel::paper_default(),
+                None,
+            ),
+            seeds: 3,
+            base_seed: 42,
+            threads,
+        }
+    }
+
+    #[test]
+    fn run_seed_is_deterministic_and_decorrelated() {
+        assert_eq!(run_seed(1, 2, 3), run_seed(1, 2, 3));
+        let mut seen = std::collections::HashSet::new();
+        for sc in 0..8u64 {
+            for rep in 0..8u64 {
+                assert!(seen.insert(run_seed(7, sc, rep)), "collision at {sc}/{rep}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let xs: Vec<usize> = (0..100).collect();
+        let ys = parallel_map(xs.clone(), 4, |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+        // single-threaded path agrees
+        let zs = parallel_map(xs.clone(), 1, |x| x * 2);
+        assert_eq!(ys, zs);
+    }
+
+    #[test]
+    fn sweep_covers_the_grid() {
+        let spec = tiny_spec(2);
+        let res = run_sweep(&spec);
+        assert_eq!(res.records.len(), 2 * 2 * 3);
+        // paired seeding: same (scenario, rep) → same seed across frameworks
+        for r in &res.records {
+            assert_eq!(r.seed, run_seed(spec.base_seed, r.scenario as u64, r.rep));
+            assert!(r.summary.n > 0, "empty summary for {}", r.framework);
+        }
+        let rows = aggregate(&spec, &res.records);
+        assert_eq!(rows.len(), 2 * 2);
+        assert!(rows.iter().all(|r| r.runs == 3));
+    }
+
+    #[test]
+    fn sweep_results_independent_of_thread_count() {
+        let a = run_sweep(&tiny_spec(1));
+        let b = run_sweep(&tiny_spec(4));
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(b.records.iter()) {
+            assert_eq!(x.framework, y.framework);
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.makespan_s, y.makespan_s);
+            assert_eq!(x.messages, y.messages);
+            assert_eq!(x.summary.median, y.summary.median);
+            assert_eq!(x.summary.p95, y.summary.p95);
+        }
+    }
+
+    #[test]
+    fn jittered_net_and_failure_scenarios_complete() {
+        let sc = Scenario {
+            name: "jitter-fail".into(),
+            workload: WorkloadKind::Fixed { tasks_per_job: 8 },
+            workers: 100,
+            jobs: 10,
+            load: 0.6,
+            net: NetModel::Jittered {
+                base: SimTime::from_millis(0.3),
+                jitter: SimTime::from_millis(0.4),
+            },
+            gm_fail_at: Some(2.0),
+        };
+        for fw in FRAMEWORKS {
+            let out = run_one(fw, &sc, 5);
+            assert_eq!(out.jobs.len(), 10, "{fw} lost jobs");
+        }
+    }
+}
