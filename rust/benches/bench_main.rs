@@ -9,7 +9,13 @@
 //!    simulator event throughput, bitmap scans, wire codec.
 //!
 //! Run with `cargo bench` (or `cargo bench -- fig3 match` to filter).
+//! Flags: `--quick` shrinks the per-bench budget (the CI smoke mode);
+//! `--json` additionally writes `BENCH_PR2.json` (per-bench median
+//! ns/unit, experiment totals in seconds) at the repo root to seed the
+//! perf trajectory.
 
+use std::cell::RefCell;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use megha::cluster::AvailMap;
@@ -19,17 +25,30 @@ use megha::proto::messages::{MapReq, Msg};
 use megha::runtime::match_engine::{MatchPlanner, RustMatchEngine};
 use megha::runtime::pjrt::{artifacts_available, XlaMatchEngine};
 use megha::sched;
+use megha::sim::time::SimTime;
+use megha::sim::{EventQueue, HeapEventQueue};
 use megha::util::json::Json;
 use megha::util::rng::Rng;
 use megha::workload::synthetic::{synthetic_fixed, yahoo_like};
 
 struct Bench {
     filter: Vec<String>,
+    budget: Duration,
+    max_samples: usize,
+    /// (name, median ns/unit) for `time` benches, collected for --json.
+    unit_results: RefCell<Vec<(String, f64)>>,
+    /// (name, total seconds) for `once` benches.
+    total_results: RefCell<Vec<(String, f64)>>,
 }
 
 impl Bench {
     fn enabled(&self, name: &str) -> bool {
         self.filter.is_empty() || self.filter.iter().any(|f| name.contains(f.as_str()))
+    }
+
+    /// Opt-in benches run only when the filter names them explicitly.
+    fn explicitly_enabled(&self, name: &str) -> bool {
+        self.filter.iter().any(|f| name.contains(f.as_str()))
     }
 
     /// Time `f` (called with an iteration counter), reporting per-op cost.
@@ -40,9 +59,8 @@ impl Bench {
         // warmup
         let mut units = f();
         let mut samples = Vec::new();
-        let budget = Duration::from_secs(2);
         let start = Instant::now();
-        while start.elapsed() < budget && samples.len() < 15 {
+        while start.elapsed() < self.budget && samples.len() < self.max_samples {
             let t0 = Instant::now();
             units = f();
             samples.push(t0.elapsed().as_secs_f64());
@@ -57,6 +75,9 @@ impl Bench {
             units,
             samples.len()
         );
+        self.unit_results
+            .borrow_mut()
+            .push((name.to_string(), per_unit * 1e9));
     }
 
     /// Time a whole-experiment regeneration once.
@@ -66,16 +87,75 @@ impl Bench {
         }
         let t0 = Instant::now();
         f();
-        println!("bench {name:<42} {:>10.3} s total", t0.elapsed().as_secs_f64());
+        let total = t0.elapsed().as_secs_f64();
+        println!("bench {name:<42} {total:>10.3} s total");
+        self.total_results.borrow_mut().push((name.to_string(), total));
+    }
+
+    /// Write `BENCH_PR2.json` at the repo root (next to `rust/`),
+    /// merging over any existing file so successive filtered runs
+    /// (`-- queue --json` then `-- scale10 --json`) accumulate instead
+    /// of clobbering each other. A fresh run of a bench name replaces
+    /// its previous entry.
+    fn write_json(&self) {
+        let root = std::env::var("CARGO_MANIFEST_DIR")
+            .map(std::path::PathBuf::from)
+            .ok()
+            .and_then(|p| p.parent().map(|q| q.to_path_buf()))
+            .unwrap_or_else(|| std::path::PathBuf::from("."));
+        let path = root.join("BENCH_PR2.json");
+        let mut bench: BTreeMap<String, Json> = BTreeMap::new();
+        let mut totals: BTreeMap<String, Json> = BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(old) = Json::parse(&text) {
+                if let Some(Json::Obj(m)) = old.get("bench") {
+                    bench = m.clone();
+                }
+                if let Some(Json::Obj(m)) = old.get("experiments_total_s") {
+                    totals = m.clone();
+                }
+            }
+        }
+        for (n, v) in self.unit_results.borrow().iter() {
+            bench.insert(n.clone(), Json::num(*v));
+        }
+        for (n, v) in self.total_results.borrow().iter() {
+            totals.insert(n.clone(), Json::num(*v));
+        }
+        let doc = Json::obj(vec![
+            ("unit", Json::str("ns_per_unit")),
+            ("bench", Json::Obj(bench)),
+            ("experiments_total_s", Json::Obj(totals)),
+        ]);
+        match std::fs::write(&path, doc.encode()) {
+            Ok(()) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+        }
     }
 }
 
 fn main() {
+    let flags: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| a.starts_with("--"))
+        .collect();
+    let quick = flags.iter().any(|a| a == "--quick");
+    let json = flags.iter().any(|a| a == "--json");
     let filter: Vec<String> = std::env::args()
         .skip(1)
         .filter(|a| !a.starts_with("--"))
         .collect();
-    let b = Bench { filter };
+    let b = Bench {
+        filter,
+        budget: if quick {
+            Duration::from_millis(250)
+        } else {
+            Duration::from_secs(2)
+        },
+        max_samples: if quick { 5 } else { 15 },
+        unit_results: RefCell::new(Vec::new()),
+        total_results: RefCell::new(Vec::new()),
+    };
     println!("== megha bench suite ==");
 
     // ---- 1. paper regeneration (smoke scale) ----
@@ -105,11 +185,166 @@ fn main() {
     bench_match_engines(&b);
     bench_sim_throughput(&b);
     bench_bitmap(&b);
+    bench_queue(&b);
+    bench_snapshot(&b);
     bench_codec(&b);
     bench_ablation_batching(&b);
     bench_ablation_shuffle(&b);
     bench_sweep_speedup(&b);
+    bench_scale10(&b);
+    if json {
+        b.write_json();
+    }
     println!("== done ==");
+}
+
+/// Event-queue family: the bucketed calendar queue vs the retained
+/// `BinaryHeap` oracle, on (a) bulk fill-then-drain and (b) the classic
+/// DES *hold* pattern (pop one, push one at a random future offset) —
+/// the access pattern of a running simulation.
+fn bench_queue(b: &Bench) {
+    const N: usize = 100_000;
+    const HOLD_OPS: usize = 200_000;
+    b.time("queue/bucketed_fill_drain_100k", || {
+        let mut rng = Rng::new(1);
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..N {
+            q.push(SimTime::from_micros(rng.below(10_000_000) as u64), i as u32);
+        }
+        while q.pop().is_some() {}
+        std::hint::black_box(q.popped());
+        2 * N as u64
+    });
+    b.time("queue/heap_oracle_fill_drain_100k", || {
+        let mut rng = Rng::new(1);
+        let mut q: HeapEventQueue<u32> = HeapEventQueue::new();
+        for i in 0..N {
+            q.push(SimTime::from_micros(rng.below(10_000_000) as u64), i as u32);
+        }
+        while q.pop().is_some() {}
+        std::hint::black_box(q.popped());
+        2 * N as u64
+    });
+    b.time("queue/bucketed_hold_50k", || {
+        let mut rng = Rng::new(2);
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..50_000 {
+            q.push(SimTime::from_micros(rng.below(5_000_000) as u64), i);
+        }
+        for _ in 0..HOLD_OPS {
+            let (_, e) = q.pop().expect("queue kept at steady size");
+            q.push_after(SimTime::from_micros(rng.below(5_000_000) as u64 + 1), e);
+        }
+        while q.pop().is_some() {}
+        std::hint::black_box(q.popped());
+        2 * HOLD_OPS as u64
+    });
+    b.time("queue/heap_oracle_hold_50k", || {
+        let mut rng = Rng::new(2);
+        let mut q: HeapEventQueue<u32> = HeapEventQueue::new();
+        for i in 0..50_000 {
+            q.push(SimTime::from_micros(rng.below(5_000_000) as u64), i);
+        }
+        for _ in 0..HOLD_OPS {
+            let (_, e) = q.pop().expect("queue kept at steady size");
+            q.push_after(SimTime::from_micros(rng.below(5_000_000) as u64 + 1), e);
+        }
+        while q.pop().is_some() {}
+        std::hint::black_box(q.popped());
+        2 * HOLD_OPS as u64
+    });
+}
+
+/// Snapshot family: the old shape (full-width clone + ranged overwrite)
+/// vs the delta shape (range-word export + `apply_words`), plus the
+/// masked fast path, at a 100k-worker DC with 10k-worker LM ranges.
+fn bench_snapshot(b: &Bench) {
+    const N: usize = 100_000;
+    const LO: usize = 40_000;
+    const HI: usize = 50_000;
+    let mut rng = Rng::new(3);
+    let mut lm = AvailMap::all_free(N);
+    for _ in 0..N / 2 {
+        lm.set_busy(rng.below(N));
+    }
+    let mut gm = AvailMap::all_free(N);
+    for _ in 0..N / 2 {
+        gm.set_busy(rng.below(N));
+    }
+    b.time("snapshot/full_clone_apply_100k", || {
+        let mut acc = 0usize;
+        for _ in 0..200 {
+            let snap = lm.clone(); // the old wire shape: whole DC
+            let mut view = gm.clone();
+            view.copy_range_from(&snap, LO, HI);
+            acc += view.free_count();
+        }
+        std::hint::black_box(acc);
+        200
+    });
+    let mut words = Vec::new();
+    b.time("snapshot/delta_export_apply_100k", || {
+        let mut acc = 0usize;
+        let mut changed = Vec::new();
+        for _ in 0..200 {
+            lm.copy_words_into(LO, HI, &mut words); // delta wire shape
+            let mut view = gm.clone();
+            view.apply_words(LO, HI, &words, None, &mut changed);
+            acc += view.free_count();
+        }
+        std::hint::black_box(acc);
+        200
+    });
+    lm.copy_words_into(LO, HI, &mut words);
+    // sparse dirty mask: ~1 word in 16 marked changed
+    let mut mask = vec![0u64; words.len().div_ceil(64)];
+    for i in (0..words.len()).step_by(16) {
+        mask[i / 64] |= 1 << (i % 64);
+    }
+    b.time("snapshot/delta_masked_apply_100k", || {
+        let mut acc = 0usize;
+        let mut changed = Vec::new();
+        for _ in 0..200 {
+            let mut view = gm.clone();
+            view.apply_words(LO, HI, &words, Some(&mask), &mut changed);
+            acc += view.free_count();
+        }
+        std::hint::black_box(acc);
+        200
+    });
+}
+
+/// The ISSUE-2 acceptance scenario: fig3a Yahoo at 10× jobs and 10×
+/// workers through the sweep harness. Heavyweight, so opt-in: run with
+/// `cargo bench -- scale10`.
+fn bench_scale10(b: &Bench) {
+    if !b.explicitly_enabled("scale10") {
+        return;
+    }
+    let spec = megha::sweep::SweepSpec {
+        frameworks: vec!["megha".into(), "sparrow".into()],
+        scenarios: megha::sweep::preset("scale10", &megha::sim::net::NetModel::paper_default())
+            .expect("scale10 preset"),
+        seeds: 1,
+        base_seed: 0,
+        threads: 0,
+    };
+    let t0 = Instant::now();
+    let res = megha::sweep::run_sweep(&spec);
+    let total = t0.elapsed().as_secs_f64();
+    for r in &res.records {
+        println!(
+            "bench sweep/scale10/{:<28} {:>10.3} s  {:>12.0} events/s  ({} events)",
+            r.framework,
+            r.wall_s,
+            r.events_per_sec(),
+            r.events
+        );
+        b.total_results
+            .borrow_mut()
+            .push((format!("sweep/scale10/{}", r.framework), r.wall_s));
+    }
+    println!("bench sweep/scale10_total                        {total:>10.3} s total");
 }
 
 /// Parallel sweep harness: the same 4×2×4 grid executed with one thread
@@ -235,6 +470,20 @@ fn bench_bitmap(b: &Bench) {
             }
         }
         10_000
+    });
+    b.time("bitmap/pop_k64_claim_release", || {
+        // the ISSUE-2 one-pass pop_k_in fix: k claims in one scan
+        let mut claimed = 0u64;
+        for i in 0..1_000 {
+            let lo = (i * 613) % 40_000;
+            let ws = m.pop_k_in(lo, lo + 4_096, 64);
+            claimed += ws.len() as u64;
+            for w in ws {
+                m.set_free(w);
+            }
+        }
+        std::hint::black_box(claimed);
+        1_000
     });
 }
 

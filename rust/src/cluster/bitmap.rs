@@ -134,11 +134,18 @@ impl AvailMap {
     }
 
     /// Claim up to `k` free workers in [lo, hi); returns the claimed ids.
+    /// One forward pass: each claim resumes from the previous one
+    /// (everything at or below it is already busy), instead of rescanning
+    /// from `lo` per claim.
     pub fn pop_k_in(&mut self, lo: usize, hi: usize, k: usize) -> Vec<usize> {
         let mut out = Vec::with_capacity(k.min(16));
+        let mut cur = lo;
         while out.len() < k {
-            match self.pop_free_in(lo, hi) {
-                Some(i) => out.push(i),
+            match self.pop_free_in(cur, hi) {
+                Some(i) => {
+                    out.push(i);
+                    cur = i + 1;
+                }
                 None => break,
             }
         }
@@ -170,6 +177,76 @@ impl AvailMap {
                     - (old & mask).count_ones() as isize;
                 self.free = (self.free as isize + added) as usize;
                 self.words[w] = new;
+            }
+        }
+    }
+
+    /// Export the words covering [lo, hi) into `out` (cleared first;
+    /// `out[0]` is word `lo/64` of this map). This is the delta
+    /// snapshot's wire payload: an LM clones only its own range —
+    /// `O(range)` instead of the `O(cluster)` full-map clone it replaced
+    /// (§Perf iteration 5).
+    pub fn copy_words_into(&self, lo: usize, hi: usize, out: &mut Vec<u64>) {
+        debug_assert!(lo <= hi && hi <= self.n);
+        out.clear();
+        if lo >= hi {
+            return;
+        }
+        let (lw, hw) = (lo / 64, (hi - 1) / 64);
+        out.extend_from_slice(&self.words[lw..=hw]);
+    }
+
+    /// Overwrite [lo, hi) from `src`, a word slice as exported by
+    /// [`copy_words_into`](Self::copy_words_into) for the same range
+    /// (`src[0]` = word `lo/64`). Bit-for-bit the same result as
+    /// [`copy_range_from`](Self::copy_range_from) on a full-width map.
+    ///
+    /// `skip_clean`: a dirty-word mask (bit `i` ⇒ `src[i]` changed since
+    /// the snapshot's predecessor). When given, clean words are skipped
+    /// *without reading them* — only sound if the caller knows this
+    /// map's words equal the predecessor snapshot in that range.
+    ///
+    /// `changed` (cleared here) gets bit `i` set for every word `i` this
+    /// call actually modified, so callers can rescope follow-up work
+    /// (e.g. per-partition recounts) to what moved.
+    pub fn apply_words(
+        &mut self,
+        lo: usize,
+        hi: usize,
+        src: &[u64],
+        skip_clean: Option<&[u64]>,
+        changed: &mut Vec<u64>,
+    ) {
+        debug_assert!(lo <= hi && hi <= self.n);
+        changed.clear();
+        if lo >= hi {
+            return;
+        }
+        let (lw, hw) = (lo / 64, (hi - 1) / 64);
+        debug_assert_eq!(src.len(), hw - lw + 1);
+        changed.resize(src.len().div_ceil(64), 0);
+        for w in lw..=hw {
+            let i = w - lw;
+            if let Some(m) = skip_clean {
+                if m[i / 64] >> (i % 64) & 1 == 0 {
+                    continue;
+                }
+            }
+            let mut mask = !0u64;
+            if w == lw {
+                mask &= !0u64 << (lo % 64);
+            }
+            if w == hw && hi % 64 != 0 {
+                mask &= (1u64 << (hi % 64)) - 1;
+            }
+            let old = self.words[w];
+            let new = (old & !mask) | (src[i] & mask);
+            if old != new {
+                let added = (new & mask).count_ones() as isize
+                    - (old & mask).count_ones() as isize;
+                self.free = (self.free as isize + added) as usize;
+                self.words[w] = new;
+                changed[i / 64] |= 1 << (i % 64);
             }
         }
     }
@@ -271,6 +348,111 @@ mod tests {
         dst.copy_range_from(&src, 32, 96);
         assert_eq!(dst.free_count(), 64);
         assert!(!dst.is_free(31) && dst.is_free(32) && dst.is_free(95) && !dst.is_free(96));
+    }
+
+    #[test]
+    fn pop_k_one_pass_matches_rescan_semantics() {
+        // randomized: pop_k_in must claim exactly the first k free ids
+        let mut r = Rng::new(33);
+        for _ in 0..50 {
+            let mut m = AvailMap::all_busy(300);
+            let mut free = vec![];
+            for _ in 0..60 {
+                let i = r.below(300);
+                if m.set_free(i) {
+                    free.push(i);
+                }
+            }
+            free.sort_unstable();
+            let lo = r.below(150);
+            let hi = lo + r.below(300 - lo + 1);
+            let k = r.below(20) + 1;
+            let expect: Vec<usize> = free
+                .iter()
+                .copied()
+                .filter(|&i| i >= lo && i < hi)
+                .take(k)
+                .collect();
+            assert_eq!(m.pop_k_in(lo, hi, k), expect, "lo={lo} hi={hi} k={k}");
+            for &i in &expect {
+                assert!(!m.is_free(i));
+            }
+        }
+    }
+
+    #[test]
+    fn export_apply_words_matches_copy_range() {
+        let mut r = Rng::new(71);
+        for _ in 0..40 {
+            let n = 64 * r.below(8) + r.below(130) + 10;
+            let mut src = AvailMap::all_busy(n);
+            let mut a = AvailMap::all_free(n);
+            for _ in 0..n / 2 {
+                src.set_free(r.below(n));
+                a.set_busy(r.below(n));
+            }
+            let mut b = a.clone();
+            let lo = r.below(n);
+            let hi = lo + r.below(n - lo + 1);
+            // oracle: full-width copy_range_from
+            a.copy_range_from(&src, lo, hi);
+            // delta path: export range words, apply them
+            let mut words = Vec::new();
+            src.copy_words_into(lo, hi, &mut words);
+            let mut changed = Vec::new();
+            b.apply_words(lo, hi, &words, None, &mut changed);
+            assert_eq!(a, b, "n={n} lo={lo} hi={hi}");
+            assert_eq!(a.free_count(), b.free_count());
+        }
+    }
+
+    #[test]
+    fn apply_words_masked_skips_clean_words_exactly() {
+        let n = 500;
+        let mut r = Rng::new(13);
+        let mut base = AvailMap::all_free(n);
+        for _ in 0..200 {
+            base.set_busy(r.below(n));
+        }
+        // lm evolves from base; gm starts equal to base
+        let mut lm = base.clone();
+        let mut gm = base.clone();
+        for _ in 0..40 {
+            let i = r.below(n);
+            if r.next_u64() & 1 == 0 {
+                lm.set_busy(i);
+            } else {
+                lm.set_free(i);
+            }
+        }
+        let (lo, hi) = (64, 450);
+        let mut new_words = Vec::new();
+        lm.copy_words_into(lo, hi, &mut new_words);
+        let mut old_words = Vec::new();
+        base.copy_words_into(lo, hi, &mut old_words);
+        let mask: Vec<u64> = {
+            let mut m = vec![0u64; new_words.len().div_ceil(64)];
+            for (i, (a, b)) in new_words.iter().zip(old_words.iter()).enumerate() {
+                if a != b {
+                    m[i / 64] |= 1 << (i % 64);
+                }
+            }
+            m
+        };
+        let mut full = gm.clone();
+        let mut changed_full = Vec::new();
+        full.apply_words(lo, hi, &new_words, None, &mut changed_full);
+        let mut changed_masked = Vec::new();
+        gm.apply_words(lo, hi, &new_words, Some(&mask), &mut changed_masked);
+        assert_eq!(full, gm);
+        assert_eq!(changed_full, changed_masked);
+        // changed bits only where the range actually moved
+        for (i, (a, b)) in new_words.iter().zip(old_words.iter()).enumerate() {
+            let bit = changed_full[i / 64] >> (i % 64) & 1;
+            if a == b {
+                assert_eq!(bit, 0, "clean word {i} flagged changed");
+            }
+        }
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //!             [--base-seed S] [--workers N1,N2,...] [--loads X1,X2,...]
 //!             [--workload yahoo|google|fixed] [--jobs N] [--tasks-per-job N]
 //!             [--net constant|jittered] [--net-ms X] [--jitter-ms X]
-//!             [--fail-gm-at T] [--threads K]
+//!             [--fail-gm-at T] [--threads K] [--preset scale10]
 //! megha trace gen --workload yahoo|google|fixed --jobs N --workers N
 //!                 [--load X] [--seed N] --out FILE
 //! megha trace stats --file FILE
@@ -204,16 +204,28 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     } else {
         None
     };
-    let spec = sweep::SweepSpec {
-        frameworks,
-        scenarios: sweep::scenario_grid(
+    let scenarios = if let Some(p) = args.get("preset") {
+        // a preset fixes the whole scenario grid: reject flags it would
+        // silently override
+        for flag in ["workload", "workers", "loads", "jobs", "tasks-per-job", "fail-gm-at"] {
+            if args.get(flag).is_some() {
+                bail!("--preset {p} fixes the scenario grid; drop --{flag}");
+            }
+        }
+        sweep::preset(p, &net).with_context(|| format!("unknown --preset '{p}' (try scale10)"))?
+    } else {
+        sweep::scenario_grid(
             &workload,
             &args.usize_list("workers", &[600]),
             &args.f64_list("loads", &[0.5, 0.8]),
             args.usize("jobs", 100),
             &net,
             gm_fail_at,
-        ),
+        )
+    };
+    let spec = sweep::SweepSpec {
+        frameworks,
+        scenarios,
         seeds: args.u64("seeds", 8),
         base_seed: args.u64("base-seed", 0),
         threads: args.usize("threads", 0),

@@ -66,6 +66,13 @@ pub struct RunOutcome {
     /// Simulated makespan.
     pub makespan: SimTime,
     pub breakdown: DelayBreakdown,
+    /// Simulation events processed (event-queue pops; 0 for the TCP
+    /// prototype, which has no event queue).
+    pub events: u64,
+    /// Host wall-clock seconds spent in the event loop. Not
+    /// deterministic — never compare it across runs; it only feeds
+    /// throughput reporting ([`events_per_sec`](Self::events_per_sec)).
+    pub sim_wall_s: f64,
 }
 
 impl RunOutcome {
@@ -75,6 +82,17 @@ impl RunOutcome {
             0.0
         } else {
             self.inconsistencies as f64 / self.tasks as f64
+        }
+    }
+
+    /// Simulation events processed per host wall-clock second — the
+    /// harness-throughput number the sweep tables surface so event-loop
+    /// regressions show up in normal runs.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.sim_wall_s > 0.0 {
+            self.events as f64 / self.sim_wall_s
+        } else {
+            0.0
         }
     }
 

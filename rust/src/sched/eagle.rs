@@ -128,12 +128,15 @@ impl Scheduler for Eagle<'_> {
             }
             JobClass::Short => {
                 // d·n probes: d distinct workers per task, duplicates
-                // allowed across tasks (as in Sparrow's batch sampling)
+                // allowed across tasks (as in Sparrow's batch sampling);
+                // the probe vector is pooled, sampling allocation-free
                 let n_workers = self.cfg.workers;
                 let n = self.jobs[jidx as usize].n_tasks as usize;
                 let d_per_task = self.cfg.probe_ratio.min(n_workers);
+                let mut probes: Vec<usize> = ctx.pool.take();
                 for _ in 0..n {
-                    for w in ctx.rng.sample_distinct(n_workers, d_per_task) {
+                    ctx.rng.sample_distinct_into(n_workers, d_per_task, &mut probes);
+                    for &w in &probes {
                         ctx.send(Ev::Probe {
                             worker: w as u32,
                             job: jidx,
@@ -141,6 +144,7 @@ impl Scheduler for Eagle<'_> {
                         });
                     }
                 }
+                ctx.pool.give(probes);
             }
         }
     }

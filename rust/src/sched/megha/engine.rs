@@ -24,6 +24,8 @@ pub struct Mapping {
 }
 
 /// Simulation events. Message events model one-way network hops.
+/// Payload vectors (`maps`, `invalid`) are pooled: handlers drain them
+/// and give the buffers back to [`SimCtx::pool`](crate::sim::driver::BufPools).
 /// (Trace arrivals are injected by the driver as `DriverEv::Arrival`.)
 pub enum Ev {
     /// GM→LM: verify-and-launch a batch of mappings (§3.4.1).
@@ -48,20 +50,87 @@ pub enum Ev {
     GmFail { gm: u32 },
 }
 
-/// A copy of one LM's authoritative cluster state as of send time.
-/// `version` counts LM state changes: a GM that already applied this
-/// version skips the (hot) bitmap overwrite — §Perf L3 iteration 4.
+/// A range-scoped **delta snapshot** of one LM's authoritative state as
+/// of send time (§Perf iteration 5 — the wire shape is documented in
+/// DESIGN.md).
+///
+/// Where previous iterations cloned the *global-width* bitmap per
+/// snapshot, this carries only the LM's own worker range `[lo, hi)` as
+/// raw words, plus a dirty mask relative to the LM's previous emission:
+/// `prev` is that emission's version and `mask` bit `i` says word `i`
+/// changed since it. A GM whose view of the range still equals the
+/// predecessor (it applied exactly `prev` and has not speculated on the
+/// range since) applies only masked words; everyone else falls back to
+/// a full-range word compare. `version` counts LM state changes: a GM
+/// that already applied this version skips entirely (§Perf iteration 4).
 #[derive(Clone)]
 pub struct Snapshot {
     lm: u32,
     version: u64,
-    state: AvailMap, // global-indexed; only the LM's range is meaningful
+    /// Version of this LM's previous snapshot (`u64::MAX` for the
+    /// first, whose implicit predecessor is the all-free initial state).
+    prev: u64,
+    /// Covered worker range (the LM's cluster).
+    lo: u32,
+    hi: u32,
+    /// Bitmap words of the range (`words[0]` = global word `lo/64`).
+    words: Vec<u64>,
+    /// Dirty-word mask vs the predecessor snapshot (bit `i` ⇒ `words[i]`
+    /// differs from it).
+    mask: Vec<u64>,
 }
 
-/// LM-side authoritative cluster state + change counter.
+/// LM-side authoritative cluster state + change counter + the delta-
+/// snapshot base (words of the last snapshot emitted, any kind).
 struct Lm {
     state: AvailMap,
     version: u64,
+    /// Worker range of this LM's cluster.
+    lo: usize,
+    hi: usize,
+    id: u32,
+    /// Words of the last snapshot emitted — the next snapshot's mask base.
+    last_words: Vec<u64>,
+    /// Version at the last emission (`u64::MAX` before the first).
+    last_version: u64,
+    /// The last snapshot, reused while `version` is unchanged (long
+    /// straggler tails heartbeat the same state over and over).
+    cached: Option<Rc<Snapshot>>,
+    /// Scratch for building the next snapshot's words.
+    scratch: Vec<u64>,
+}
+
+impl Lm {
+    /// Build (or reuse) the snapshot of the current state. Updates the
+    /// mask base, so every emission chains on the one before it.
+    fn snapshot(&mut self) -> Rc<Snapshot> {
+        if let Some(s) = &self.cached {
+            if s.version == self.version {
+                return s.clone();
+            }
+        }
+        self.state.copy_words_into(self.lo, self.hi, &mut self.scratch);
+        let mut mask = vec![0u64; self.scratch.len().div_ceil(64)];
+        for (i, (&new, &old)) in self.scratch.iter().zip(self.last_words.iter()).enumerate() {
+            if new != old {
+                mask[i / 64] |= 1 << (i % 64);
+            }
+        }
+        let snap = Rc::new(Snapshot {
+            lm: self.id,
+            version: self.version,
+            prev: self.last_version,
+            lo: self.lo as u32,
+            hi: self.hi as u32,
+            words: self.scratch.clone(),
+            mask,
+        });
+        self.last_words.clear();
+        self.last_words.extend_from_slice(&self.scratch);
+        self.last_version = self.version;
+        self.cached = Some(snap.clone());
+        snap
+    }
 }
 
 /// Per-GM state: the eventually-consistent global view + job queue.
@@ -79,6 +148,13 @@ struct Gm {
     in_queue: Vec<bool>,
     scan_rot: usize,          // per-GM worker shuffle (§3.3)
     applied: Vec<u64>,        // last snapshot version applied, per LM
+    /// Per LM: has this GM touched the LM's range (speculative claims,
+    /// frees, or a state-losing failure) since the last snapshot apply?
+    /// While false, the GM's range words still equal the last applied
+    /// snapshot, so the next chained snapshot may apply masked.
+    touched: Vec<bool>,
+    /// Scratch: words changed by the last `apply_words` call.
+    changed: Vec<u64>,
 }
 
 impl Gm {
@@ -86,15 +162,26 @@ impl Gm {
         if self.state.set_free(worker) {
             let p = spec.partition_of_worker(WorkerId(worker as u32));
             self.counts[p.0 as usize] += 1;
+            self.touched[spec.lm_of_partition(p)] = true;
         }
     }
 
-    /// Re-derive the counts of one LM's partitions after a snapshot.
-    fn recount_cluster(&mut self, spec: &ClusterSpec, lm: usize) {
+    /// Re-derive the counts of LM `lm`'s partitions whose words the last
+    /// `apply_words` call actually changed (`self.changed`); untouched
+    /// partitions already have exact counts because `counts` mirrors
+    /// `state` incrementally everywhere else.
+    fn recount_changed(&mut self, spec: &ClusterSpec, lm: usize, base_word: usize) {
         for p in spec.partitions_of_lm(lm) {
             let r = spec.worker_range(p);
-            self.counts[p.0 as usize] =
-                self.state.count_free_in(r.start as usize, r.end as usize) as u32;
+            let (lw, hw) = (r.start as usize / 64, (r.end as usize - 1) / 64);
+            let dirty = (lw..=hw).any(|w| {
+                let i = w - base_word;
+                self.changed[i / 64] >> (i % 64) & 1 == 1
+            });
+            if dirty {
+                self.counts[p.0 as usize] =
+                    self.state.count_free_in(r.start as usize, r.end as usize) as u32;
+            }
         }
     }
 }
@@ -127,6 +214,12 @@ pub struct MeghaSim<'a> {
     gms: Vec<Gm>,
     lms: Vec<Lm>,
     jobs: Vec<JobState>,
+    /// Per-LM batch scratch reused across `try_schedule` calls.
+    batches: Vec<Vec<Mapping>>,
+    /// Allow the masked snapshot-apply fast path (default). Tests turn
+    /// it off via [`set_masked_applies`](Self::set_masked_applies) to
+    /// pin that masked and full applies are bit-identical.
+    masked_applies: bool,
 }
 
 impl<'a> MeghaSim<'a> {
@@ -159,12 +252,29 @@ impl<'a> MeghaSim<'a> {
                     in_queue: vec![false; trace.n_jobs()],
                     scan_rot: if cfg.shuffle_workers { g * wpp / n_gm } else { 0 },
                     applied: vec![u64::MAX; n_lm],
+                    touched: vec![false; n_lm],
+                    changed: Vec::new(),
                 })
                 .collect(),
             lms: (0..n_lm)
-                .map(|_| Lm {
-                    state: AvailMap::all_free(n_workers),
-                    version: 0,
+                .map(|l| {
+                    let r = spec.cluster_worker_range(l);
+                    let state = AvailMap::all_free(n_workers);
+                    // mask base of the first snapshot: the all-free
+                    // initial range, which every GM's view starts from
+                    let mut last_words = Vec::new();
+                    state.copy_words_into(r.start as usize, r.end as usize, &mut last_words);
+                    Lm {
+                        state,
+                        version: 0,
+                        lo: r.start as usize,
+                        hi: r.end as usize,
+                        id: l as u32,
+                        last_words,
+                        last_version: u64::MAX,
+                        cached: None,
+                        scratch: Vec::new(),
+                    }
                 })
                 .collect(),
             jobs: trace
@@ -175,7 +285,17 @@ impl<'a> MeghaSim<'a> {
                     enq: j.submit,
                 })
                 .collect(),
+            batches: vec![Vec::new(); n_lm],
+            masked_applies: true,
         }
+    }
+
+    /// Enable/disable the masked snapshot-apply fast path. With it off,
+    /// every apply compares all range words — the reference behavior the
+    /// masked path must match bit-for-bit (pinned by
+    /// `tests/driver_invariants.rs`).
+    pub fn set_masked_applies(&mut self, on: bool) {
+        self.masked_applies = on;
     }
 }
 
@@ -205,6 +325,7 @@ impl Scheduler for MeghaSim<'_> {
             gm_id,
             &mut self.gms[gm_id],
             &mut self.jobs,
+            &mut self.batches,
             &self.spec,
             self.cfg,
             self.planner,
@@ -214,35 +335,35 @@ impl Scheduler for MeghaSim<'_> {
 
     fn on_event(&mut self, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
         match ev {
-            Ev::LmVerify { lm, gm, maps } => {
+            Ev::LmVerify { lm, gm, mut maps } => {
                 ctx.out.messages += 1;
-                let lm_entry = &mut self.lms[lm as usize];
-                let mut invalid: Vec<(u32, u32)> = Vec::new();
-                for m in maps {
-                    if lm_entry.state.is_free(m.worker as usize) {
-                        lm_entry.state.set_busy(m.worker as usize);
-                        lm_entry.version += 1;
-                        ctx.out.tasks += 1;
-                        ctx.push_after(m.dur, Ev::TaskFinish {
-                            lm,
-                            gm,
-                            job: m.job,
-                            worker: m.worker,
-                        });
-                    } else {
-                        invalid.push((m.job, m.task));
+                let mut invalid: Vec<(u32, u32)> = ctx.pool.take();
+                {
+                    let lm_entry = &mut self.lms[lm as usize];
+                    for m in maps.drain(..) {
+                        if lm_entry.state.is_free(m.worker as usize) {
+                            lm_entry.state.set_busy(m.worker as usize);
+                            lm_entry.version += 1;
+                            ctx.out.tasks += 1;
+                            ctx.push_after(m.dur, Ev::TaskFinish {
+                                lm,
+                                gm,
+                                job: m.job,
+                                worker: m.worker,
+                            });
+                        } else {
+                            invalid.push((m.job, m.task));
+                        }
                     }
                 }
-                if !invalid.is_empty() {
+                ctx.pool.give(maps);
+                if invalid.is_empty() {
+                    ctx.pool.give(invalid);
+                } else {
                     ctx.out.inconsistencies += invalid.len() as u64;
                     let retry_comm = ctx.net_delay().as_secs();
                     ctx.out.breakdown.comm_s += invalid.len() as f64 * 2.0 * retry_comm;
-                    let lm_entry = &self.lms[lm as usize];
-                    let snap = Rc::new(Snapshot {
-                        lm,
-                        version: lm_entry.version,
-                        state: lm_entry.state.clone(),
-                    });
+                    let snap = self.lms[lm as usize].snapshot();
                     let d = ctx.net_delay();
                     ctx.push_after(d, Ev::GmReply { gm, invalid, snap });
                 }
@@ -251,7 +372,7 @@ impl Scheduler for MeghaSim<'_> {
                 ctx.out.messages += 1;
                 let gm_id = gm as usize;
                 let now = ctx.now();
-                apply_snapshot(&mut self.gms[gm_id], &snap, &self.spec);
+                apply_snapshot(&mut self.gms[gm_id], &snap, &self.spec, self.masked_applies);
                 // re-queue invalid tasks at the front (§3.4.1)
                 for &(job, task) in invalid.iter().rev() {
                     self.jobs[job as usize].pending.push_front(task);
@@ -261,10 +382,12 @@ impl Scheduler for MeghaSim<'_> {
                         self.gms[gm_id].in_queue[job as usize] = true;
                     }
                 }
+                ctx.pool.give(invalid);
                 try_schedule(
                     gm_id,
                     &mut self.gms[gm_id],
                     &mut self.jobs,
+                    &mut self.batches,
                     &self.spec,
                     self.cfg,
                     self.planner,
@@ -297,6 +420,7 @@ impl Scheduler for MeghaSim<'_> {
                     gm_id,
                     &mut self.gms[gm_id],
                     &mut self.jobs,
+                    &mut self.batches,
                     &self.spec,
                     self.cfg,
                     self.planner,
@@ -316,6 +440,7 @@ impl Scheduler for MeghaSim<'_> {
                     gm_id,
                     &mut self.gms[gm_id],
                     &mut self.jobs,
+                    &mut self.batches,
                     &self.spec,
                     self.cfg,
                     self.planner,
@@ -323,14 +448,10 @@ impl Scheduler for MeghaSim<'_> {
                 );
             }
             Ev::Heartbeat { lm } => {
-                // one shared snapshot per heartbeat: Rc avoids cloning the
-                // full bitmap once per GM (section Perf, L3 iteration 2)
-                let lm_entry = &self.lms[lm as usize];
-                let snap = Rc::new(Snapshot {
-                    lm,
-                    version: lm_entry.version,
-                    state: lm_entry.state.clone(),
-                });
+                // one shared snapshot per heartbeat: the Rc is shared by
+                // all GMs, and the Lm caches it across heartbeats while
+                // its version is unchanged (§Perf iterations 2 and 5)
+                let snap = self.lms[lm as usize].snapshot();
                 for gm in 0..self.spec.n_gm {
                     let d = ctx.net_delay();
                     ctx.push_after(d, Ev::GmHeartbeat {
@@ -345,11 +466,12 @@ impl Scheduler for MeghaSim<'_> {
             Ev::GmHeartbeat { gm, snap } => {
                 ctx.out.messages += 1;
                 let gm_id = gm as usize;
-                apply_snapshot(&mut self.gms[gm_id], &snap, &self.spec);
+                apply_snapshot(&mut self.gms[gm_id], &snap, &self.spec, self.masked_applies);
                 try_schedule(
                     gm_id,
                     &mut self.gms[gm_id],
                     &mut self.jobs,
+                    &mut self.batches,
                     &self.spec,
                     self.cfg,
                     self.planner,
@@ -359,10 +481,20 @@ impl Scheduler for MeghaSim<'_> {
             Ev::GmFail { gm } => {
                 // §3.5: GMs are stateless — model a crash-restart as losing
                 // the global view entirely. Heartbeats rebuild it; pending
-                // jobs are preserved in the durable job store.
+                // jobs are preserved in the durable job store. The view no
+                // longer matches any applied snapshot, so masked applies
+                // are off until each LM's next full apply.
+                //
+                // Known modeling gap (pre-dates this refactor, preserved
+                // for bit-identity): `applied` versions are kept, so a
+                // *quiescent* LM — one whose state never changes again —
+                // keeps being version-skipped and its range stays all-busy
+                // at this GM forever. Real Megha would rebuild from the
+                // first post-restart heartbeat. Tracked in ROADMAP.md.
                 let gm_id = gm as usize;
                 self.gms[gm_id].state = AvailMap::all_busy(self.spec.n_workers());
                 self.gms[gm_id].counts.iter_mut().for_each(|c| *c = 0);
+                self.gms[gm_id].touched.iter_mut().for_each(|t| *t = true);
             }
         }
     }
@@ -385,28 +517,45 @@ pub fn simulate_with(
     driver::run(&mut sched, &cfg.sim, trace)
 }
 
-fn apply_snapshot(gm: &mut Gm, snap: &Snapshot, spec: &ClusterSpec) {
+fn apply_snapshot(gm: &mut Gm, snap: &Snapshot, spec: &ClusterSpec, allow_masked: bool) {
     // skip if this exact LM state was already applied (no change since):
     // during long straggler tails most heartbeats carry unchanged state
     APPLY_TOTAL.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-    if gm.applied[snap.lm as usize] == snap.version {
+    let l = snap.lm as usize;
+    if gm.applied[l] == snap.version {
         APPLY_SKIP.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         return;
     }
-    gm.applied[snap.lm as usize] = snap.version;
-    let r = spec.cluster_worker_range(snap.lm as usize);
-    gm.state
-        .copy_range_from(&snap.state, r.start as usize, r.end as usize);
-    gm.recount_cluster(spec, snap.lm as usize);
+    // Masked apply is exact only while the GM's range words still equal
+    // the snapshot's predecessor: it applied exactly `prev` and has not
+    // speculated on the range since. Otherwise compare every range word
+    // (which is still bit-for-bit what the full-width overwrite did).
+    let masked = allow_masked && !gm.touched[l] && gm.applied[l] == snap.prev;
+    let mut changed = std::mem::take(&mut gm.changed);
+    gm.state.apply_words(
+        snap.lo as usize,
+        snap.hi as usize,
+        &snap.words,
+        if masked { Some(&snap.mask) } else { None },
+        &mut changed,
+    );
+    gm.changed = changed;
+    gm.applied[l] = snap.version;
+    gm.touched[l] = false;
+    gm.recount_changed(spec, l, snap.lo as usize / 64);
 }
 
 /// The GM scheduling loop: process the job queue FIFO while the global
 /// state shows capacity (§3.2). One `planner.plan` call per job batch —
-/// this is the hot path the XLA engine accelerates.
+/// this is the hot path the XLA engine accelerates. `batches` is the
+/// caller's per-LM scratch (cleared on use); outgoing `LmVerify`
+/// payloads come from the driver's buffer pool.
+#[allow(clippy::too_many_arguments)]
 fn try_schedule(
     gm_id: usize,
     gm: &mut Gm,
     jobs: &mut [JobState],
+    batches: &mut [Vec<Mapping>],
     spec: &ClusterSpec,
     cfg: &MeghaConfig,
     planner: &mut dyn MatchPlanner,
@@ -435,7 +584,6 @@ fn try_schedule(
         }
 
         // Materialize mappings and batch them per LM (§3.4.1).
-        let mut batches: Vec<Vec<Mapping>> = vec![Vec::new(); spec.n_lm];
         let mut last_part = gm.rr;
         ctx.out.breakdown.queue_scheduler_s +=
             (now - js.enq).as_secs().max(0.0) * plan.iter().map(|&(_, k)| k).sum::<usize>() as f64;
@@ -444,6 +592,7 @@ fn try_schedule(
             let pid = PartitionId(part as u32);
             let r = spec.worker_range(pid);
             let lm = spec.lm_of_partition(pid);
+            gm.touched[lm] = true; // speculative claims below
             for _ in 0..k {
                 // rotated first-free scan: each GM starts at a different
                 // slot so GMs pick different workers (§3.3 shuffle)
@@ -467,21 +616,24 @@ fn try_schedule(
         }
         gm.rr = (last_part + 1) % n_part;
 
-        for (lm, maps) in batches.into_iter().enumerate() {
-            if maps.is_empty() {
+        for (lm, batch) in batches.iter_mut().enumerate() {
+            if batch.is_empty() {
                 continue;
             }
             // cap batch size (§3.4.1): oversized batches split into
             // multiple messages to bound LM processing latency
-            for chunk in maps.chunks(cfg.max_batch) {
+            for chunk in batch.chunks(cfg.max_batch) {
+                let mut maps: Vec<Mapping> = ctx.pool.take();
+                maps.extend_from_slice(chunk);
                 let d = ctx.net_delay();
                 ctx.out.breakdown.comm_s += chunk.len() as f64 * d.as_secs();
                 ctx.push_after(d, Ev::LmVerify {
                     lm: lm as u32,
                     gm: gm_id as u32,
-                    maps: chunk.to_vec(),
+                    maps,
                 });
             }
+            batch.clear();
         }
 
         if !jobs[jidx as usize].pending.is_empty() {

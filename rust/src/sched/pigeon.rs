@@ -88,16 +88,18 @@ impl Scheduler for Pigeon<'_> {
         let job = &ctx.trace.jobs[jidx as usize];
         let high = job.class(self.cfg.sim.short_threshold) == JobClass::Short;
         // split evenly over all coordinators, rotating the start
-        // group so remainders spread uniformly
+        // group so remainders spread uniformly: group g gets tasks
+        // t ≡ g − start (mod n_groups), in task order, with a pooled
+        // payload vector per non-empty slice
         let start = jidx as usize % n_groups;
-        let mut slices: Vec<Vec<SimTime>> = vec![Vec::new(); n_groups];
-        for (t, &d) in job.durations.iter().enumerate() {
-            slices[(start + t) % n_groups].push(d);
-        }
-        for (g, durs) in slices.into_iter().enumerate() {
-            if durs.is_empty() {
+        let n_tasks = job.durations.len();
+        for g in 0..n_groups {
+            let first = (g + n_groups - start) % n_groups;
+            if first >= n_tasks {
                 continue;
             }
+            let mut durs: Vec<SimTime> = ctx.pool.take();
+            durs.extend(job.durations[first..].iter().step_by(n_groups).copied());
             ctx.send(Ev::CoordRecv {
                 group: g as u32,
                 job: jidx,
@@ -109,10 +111,10 @@ impl Scheduler for Pigeon<'_> {
 
     fn on_event(&mut self, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
         match ev {
-            Ev::CoordRecv { group, job, durs, high } => {
+            Ev::CoordRecv { group, job, mut durs, high } => {
                 let general_per_group = self.general_per_group;
                 let g = &mut self.groups[group as usize];
-                for dur in durs {
+                for dur in durs.drain(..) {
                     if high {
                         // general pool first, then the reserved pool
                         if let Some(w) = g.general.pop_free_in(0, g.general.len()) {
@@ -129,6 +131,7 @@ impl Scheduler for Pigeon<'_> {
                         g.lo_q.push_back((job, dur));
                     }
                 }
+                ctx.pool.give(durs);
             }
             Ev::Finish { group, worker, job } => {
                 let d = ctx.net_delay();

@@ -60,18 +60,22 @@ impl Scheduler for Sparrow<'_> {
     fn on_arrival(&mut self, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
         // batch sampling: d·n probes per job — d distinct workers
         // per task, duplicates allowed across tasks (a worker may
-        // hold several reservations for one job)
+        // hold several reservations for one job); the probe vector is
+        // pooled so sampling is allocation-free
         let n_workers = self.cfg.workers;
         let n = self.jobs[jidx as usize].n_tasks as usize;
         let d_per_task = self.cfg.probe_ratio.min(n_workers);
+        let mut probes: Vec<usize> = ctx.pool.take();
         for _ in 0..n {
-            for w in ctx.rng.sample_distinct(n_workers, d_per_task) {
+            ctx.rng.sample_distinct_into(n_workers, d_per_task, &mut probes);
+            for &w in &probes {
                 ctx.send(Ev::Reserve {
                     worker: w as u32,
                     job: jidx,
                 });
             }
         }
+        ctx.pool.give(probes);
     }
 
     fn on_event(&mut self, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {

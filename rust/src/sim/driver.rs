@@ -15,6 +15,9 @@
 //! therefore *bit-identical* to its pre-driver behavior — the golden
 //! tests in `tests/driver_invariants.rs` pin this down.
 
+use std::any::{Any, TypeId};
+use std::time::Instant;
+
 use crate::config::SimParams;
 use crate::metrics::RunOutcome;
 use crate::sched::common::JobTracker;
@@ -23,6 +26,92 @@ use crate::sim::net::NetModel;
 use crate::sim::time::SimTime;
 use crate::util::rng::Rng;
 use crate::workload::Trace;
+
+/// Per-pool cap on retained buffers of one element type.
+const POOL_CAP: usize = 64;
+
+/// Recycled `Vec<T>` buffers, keyed by element type.
+///
+/// Message payloads (`Vec<Mapping>` verification batches, `Vec<(u32,
+/// u32)>` inconsistency replies, probe/duration vectors) used to be
+/// malloc-per-message on the hot path. Handlers instead [`take`] a
+/// cleared buffer (reusing a previous message's capacity) and [`give`]
+/// it back once the payload is consumed. Pooling never touches the RNG
+/// or event order, so it is behavior-neutral by construction —
+/// `tests/driver_invariants.rs` pins bit-identity against
+/// [`BufPools::disabled`], where `take` always allocates fresh.
+///
+/// [`take`]: BufPools::take
+/// [`give`]: BufPools::give
+pub struct BufPools {
+    /// One stack of spare buffers per element type seen so far. The
+    /// linear scan is over a handful of entries (one per payload type a
+    /// scheduler uses), far cheaper than hashing.
+    slots: Vec<(TypeId, Box<dyn Any>)>,
+    enabled: bool,
+}
+
+impl Default for BufPools {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufPools {
+    pub fn new() -> BufPools {
+        BufPools {
+            slots: Vec::new(),
+            enabled: true,
+        }
+    }
+
+    /// A pass-through pool: `take` always allocates and `give` drops.
+    /// Tests run schedulers on this to prove pooling changes nothing.
+    pub fn disabled() -> BufPools {
+        BufPools {
+            slots: Vec::new(),
+            enabled: false,
+        }
+    }
+
+    /// Get a cleared buffer, reusing a recycled one when available.
+    pub fn take<T: 'static>(&mut self) -> Vec<T> {
+        if self.enabled {
+            let id = TypeId::of::<T>();
+            for (tid, stack) in &mut self.slots {
+                if *tid == id {
+                    let stack = stack
+                        .downcast_mut::<Vec<Vec<T>>>()
+                        .expect("pool slot holds its keyed type");
+                    return stack.pop().unwrap_or_default();
+                }
+            }
+        }
+        Vec::new()
+    }
+
+    /// Return a buffer for reuse (cleared here; contents are dropped).
+    pub fn give<T: 'static>(&mut self, mut v: Vec<T>) {
+        if !self.enabled || v.capacity() == 0 {
+            return;
+        }
+        v.clear();
+        let id = TypeId::of::<T>();
+        for (tid, stack) in &mut self.slots {
+            if *tid == id {
+                let stack = stack
+                    .downcast_mut::<Vec<Vec<T>>>()
+                    .expect("pool slot holds its keyed type");
+                if stack.len() < POOL_CAP {
+                    stack.push(v);
+                }
+                return;
+            }
+        }
+        let stack: Vec<Vec<T>> = vec![v];
+        self.slots.push((id, Box::new(stack)));
+    }
+}
 
 /// Driver-level event: trace arrivals are injected by the driver itself;
 /// everything else is the scheduler's own payload type.
@@ -47,6 +136,8 @@ pub struct SimCtx<'a, E> {
     pub trace: &'a Trace,
     /// Run-wide counters; merged into the final [`RunOutcome`].
     pub out: &'a mut RunOutcome,
+    /// Recycled message-payload buffers (see [`BufPools`]).
+    pub pool: &'a mut BufPools,
 }
 
 impl<E> SimCtx<'_, E> {
@@ -119,6 +210,18 @@ pub trait Scheduler {
 /// Panics (via [`JobTracker::into_outcome`]) if the scheduler loses
 /// tasks — a scheduler that strands work is a bug, not a statistic.
 pub fn run<S: Scheduler>(sched: &mut S, params: &SimParams, trace: &Trace) -> RunOutcome {
+    run_with_pools(sched, params, trace, BufPools::new())
+}
+
+/// [`run`] with an explicit buffer pool. Production always pools; tests
+/// pass [`BufPools::disabled`] to pin that pooling is behavior-neutral.
+pub fn run_with_pools<S: Scheduler>(
+    sched: &mut S,
+    params: &SimParams,
+    trace: &Trace,
+    mut pools: BufPools,
+) -> RunOutcome {
+    let t0 = Instant::now();
     let mut rng = Rng::new(params.seed);
     let mut tracker = JobTracker::new(trace, params.short_threshold);
     let mut out = RunOutcome::default();
@@ -135,6 +238,7 @@ pub fn run<S: Scheduler>(sched: &mut S, params: &SimParams, trace: &Trace) -> Ru
             tracker: &mut tracker,
             trace,
             out: &mut out,
+            pool: &mut pools,
         };
         sched.init(&mut ctx);
     }
@@ -147,12 +251,17 @@ pub fn run<S: Scheduler>(sched: &mut S, params: &SimParams, trace: &Trace) -> Ru
             tracker: &mut tracker,
             trace,
             out: &mut out,
+            pool: &mut pools,
         };
         match ev {
             DriverEv::Arrival(j) => sched.on_arrival(j, &mut ctx),
             DriverEv::Sched(e) => sched.on_event(e, &mut ctx),
         }
     }
+
+    // capture before summarization so events/s measures the loop, not
+    // the O(jobs) outcome collection below
+    let sim_wall_s = t0.elapsed().as_secs_f64();
 
     debug_assert!(tracker.all_done(), "{} lost jobs", sched.name());
     let makespan = q.now();
@@ -162,6 +271,8 @@ pub fn run<S: Scheduler>(sched: &mut S, params: &SimParams, trace: &Trace) -> Ru
     outcome.messages = out.messages;
     outcome.decisions = out.decisions;
     outcome.breakdown = out.breakdown;
+    outcome.events = q.popped();
+    outcome.sim_wall_s = sim_wall_s;
     outcome
 }
 
@@ -217,6 +328,45 @@ mod tests {
         for (r, j) in out.jobs.iter().zip(trace.jobs.iter()) {
             assert_eq!(r.complete, j.submit + j.ideal_jct() + SimTime::from_millis(0.5));
         }
+    }
+
+    #[test]
+    fn pools_recycle_buffers() {
+        let mut p = BufPools::new();
+        let mut v: Vec<u32> = p.take();
+        v.extend([1, 2, 3]);
+        let cap = v.capacity();
+        p.give(v);
+        let v2: Vec<u32> = p.take();
+        assert!(v2.is_empty());
+        assert_eq!(v2.capacity(), cap);
+        // distinct element types pool independently
+        let mut w: Vec<(u32, u32)> = p.take();
+        w.push((1, 2));
+        p.give(w);
+        let w2: Vec<(u32, u32)> = p.take();
+        assert!(w2.is_empty());
+        assert!(w2.capacity() >= 1);
+    }
+
+    #[test]
+    fn disabled_pools_always_allocate_fresh() {
+        let mut p = BufPools::disabled();
+        let mut v: Vec<u32> = p.take();
+        v.extend([1, 2, 3]);
+        p.give(v);
+        let v2: Vec<u32> = p.take();
+        assert_eq!(v2.capacity(), 0);
+    }
+
+    #[test]
+    fn run_reports_event_throughput() {
+        let trace = synthetic_fixed(5, 10, 1.0, 0.5, 100, 1);
+        let params = SimParams::default();
+        let out = run(&mut Immediate, &params, &trace);
+        // every arrival plus every task completion is one event
+        assert_eq!(out.events as usize, trace.n_jobs() + trace.n_tasks());
+        assert!(out.sim_wall_s >= 0.0);
     }
 
     #[test]

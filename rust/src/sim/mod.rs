@@ -13,7 +13,7 @@ pub mod event;
 pub mod net;
 pub mod time;
 
-pub use driver::{Scheduler, SimCtx};
-pub use event::EventQueue;
+pub use driver::{BufPools, Scheduler, SimCtx};
+pub use event::{EventQueue, HeapEventQueue};
 pub use net::NetModel;
 pub use time::SimTime;

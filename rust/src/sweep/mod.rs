@@ -157,6 +157,25 @@ impl Scenario {
     }
 }
 
+/// Named scenario presets. `scale10` is the ISSUE-2 trace-replay
+/// target: the fig3a Yahoo smoke shape at 10× jobs and 10× workers —
+/// the grid the hot-path overhaul (bucketed queue, pooled payloads,
+/// delta snapshots) exists to make routine.
+pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
+    match name {
+        "scale10" => Some(vec![Scenario {
+            name: "scale10-yahoo-w6000".into(),
+            workload: WorkloadKind::Yahoo,
+            workers: 6_000,
+            jobs: 1_500,
+            load: 0.85,
+            net: net.clone(),
+            gm_fail_at: None,
+        }]),
+        _ => None,
+    }
+}
+
 /// Build the `workers × loads` scenario grid for one workload/net choice.
 pub fn scenario_grid(
     workload: &WorkloadKind,
@@ -268,8 +287,27 @@ pub struct RunRecord {
     pub inconsistency_ratio: f64,
     pub messages: u64,
     pub makespan_s: f64,
-    /// Wall-clock of this run on its worker thread.
+    /// Simulation events the run processed (deterministic).
+    pub events: u64,
+    /// Wall-clock of the event loop only ([`RunOutcome::sim_wall_s`]) —
+    /// the events/s denominator, excluding scheduler construction and
+    /// summarization.
+    pub sim_wall_s: f64,
+    /// Wall-clock of the whole run on its worker thread (construction +
+    /// event loop + summaries); feeds the sweep's cpu_s/speedup report.
     pub wall_s: f64,
+}
+
+impl RunRecord {
+    /// Event-loop throughput of this run (events per host second),
+    /// same definition as [`RunOutcome::events_per_sec`].
+    pub fn events_per_sec(&self) -> f64 {
+        if self.sim_wall_s > 0.0 {
+            self.events as f64 / self.sim_wall_s
+        } else {
+            0.0
+        }
+    }
 }
 
 /// All records plus timing. `cpu_s` is the sum of per-run simulation
@@ -345,6 +383,8 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
             inconsistency_ratio: out.inconsistency_ratio(),
             messages: out.messages,
             makespan_s: out.makespan.as_secs(),
+            events: out.events,
+            sim_wall_s: out.sim_wall_s,
             wall_s: r0.elapsed().as_secs_f64(),
         }
     });
@@ -376,6 +416,9 @@ pub struct AggRow {
     /// Mean of per-run mean delays.
     pub mean: f64,
     pub inconsistency: f64,
+    /// Mean event-loop throughput (events/s) over the cell's runs, so
+    /// harness regressions are visible in normal sweep output.
+    pub events_per_sec: f64,
 }
 
 pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
@@ -402,6 +445,7 @@ pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
             let p95s: Vec<f64> = rs.iter().map(|r| r.summary.p95).collect();
             let means: Vec<f64> = rs.iter().map(|r| r.summary.mean).collect();
             let incons: Vec<f64> = rs.iter().map(|r| r.inconsistency_ratio).collect();
+            let eps: Vec<f64> = rs.iter().map(|r| r.events_per_sec()).collect();
             rows.push(AggRow {
                 framework: fw.clone(),
                 scenario: si,
@@ -413,6 +457,7 @@ pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
                 p95_p95: percentile(&p95s, 95.0),
                 mean: mean(&means),
                 inconsistency: mean(&incons),
+                events_per_sec: mean(&eps),
             });
         }
     }
@@ -430,7 +475,7 @@ pub fn print_result(spec: &SweepSpec, result: &SweepResult) {
         result.threads
     );
     println!(
-        "{:<22} {:<9} {:>4} {:>10} {:>21} {:>10} {:>10} {:>10} {:>12}",
+        "{:<22} {:<9} {:>4} {:>10} {:>21} {:>10} {:>10} {:>10} {:>12} {:>11}",
         "scenario",
         "framework",
         "runs",
@@ -439,12 +484,13 @@ pub fn print_result(spec: &SweepSpec, result: &SweepResult) {
         "p95(s)",
         "p95^95",
         "mean(s)",
-        "incons/task"
+        "incons/task",
+        "events/s"
     );
     let rows = aggregate(spec, &result.records);
     for r in &rows {
         println!(
-            "{:<22} {:<9} {:>4} {:>10.4} [{:>9.4},{:>9.4}] {:>10.3} {:>10.3} {:>10.3} {:>12.5}",
+            "{:<22} {:<9} {:>4} {:>10.4} [{:>9.4},{:>9.4}] {:>10.3} {:>10.3} {:>10.3} {:>12.5} {:>11.0}",
             spec.scenarios[r.scenario].name,
             r.framework,
             r.runs,
@@ -454,7 +500,8 @@ pub fn print_result(spec: &SweepSpec, result: &SweepResult) {
             r.p95_p50,
             r.p95_p95,
             r.mean,
-            r.inconsistency
+            r.inconsistency,
+            r.events_per_sec
         );
     }
     println!(
@@ -520,6 +567,7 @@ mod tests {
         for r in &res.records {
             assert_eq!(r.seed, run_seed(spec.base_seed, r.scenario as u64, r.rep));
             assert!(r.summary.n > 0, "empty summary for {}", r.framework);
+            assert!(r.events > 0, "no events recorded for {}", r.framework);
         }
         let rows = aggregate(&spec, &res.records);
         assert_eq!(rows.len(), 2 * 2);
@@ -536,9 +584,20 @@ mod tests {
             assert_eq!(x.seed, y.seed);
             assert_eq!(x.makespan_s, y.makespan_s);
             assert_eq!(x.messages, y.messages);
+            assert_eq!(x.events, y.events);
             assert_eq!(x.summary.median, y.summary.median);
             assert_eq!(x.summary.p95, y.summary.p95);
         }
+    }
+
+    #[test]
+    fn scale10_preset_resolves() {
+        let net = NetModel::paper_default();
+        let scs = preset("scale10", &net).expect("scale10 preset");
+        assert_eq!(scs.len(), 1);
+        assert_eq!(scs[0].workers, 6_000);
+        assert_eq!(scs[0].jobs, 1_500);
+        assert!(preset("nope", &net).is_none());
     }
 
     #[test]

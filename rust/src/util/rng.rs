@@ -111,21 +111,32 @@ impl Rng {
 
     /// Sample `k` distinct indices from [0, n) (k << n fast path).
     pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
-        assert!(k <= n);
-        if k * 4 >= n {
-            let mut all: Vec<usize> = (0..n).collect();
-            self.shuffle(&mut all);
-            all.truncate(k);
-            return all;
-        }
         let mut out = Vec::with_capacity(k);
+        self.sample_distinct_into(n, k, &mut out);
+        out
+    }
+
+    /// [`sample_distinct`](Self::sample_distinct) into a caller-provided
+    /// buffer (cleared first). The draw sequence is identical, so
+    /// swapping one for the other is bit-neutral; this is the
+    /// allocation-free hot path the probe schedulers use with pooled
+    /// buffers.
+    pub fn sample_distinct_into(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
+        assert!(k <= n);
+        out.clear();
+        if k * 4 >= n {
+            out.extend(0..n);
+            self.shuffle(out);
+            out.truncate(k);
+            return;
+        }
+        out.reserve(k);
         while out.len() < k {
             let c = self.below(n);
             if !out.contains(&c) {
                 out.push(c);
             }
         }
-        out
     }
 }
 
@@ -208,6 +219,19 @@ mod tests {
             d.dedup();
             assert_eq!(d.len(), k, "duplicates for n={n} k={k}");
             assert!(s.iter().all(|&x| x < n));
+        }
+    }
+
+    #[test]
+    fn sample_distinct_into_matches_alloc_path() {
+        for &(n, k) in &[(10usize, 10usize), (1000, 5), (50, 30), (64, 2)] {
+            let mut a = Rng::new(77);
+            let mut b = Rng::new(77);
+            let fresh = a.sample_distinct(n, k);
+            let mut buf = vec![999, 999]; // stale contents must be cleared
+            b.sample_distinct_into(n, k, &mut buf);
+            assert_eq!(fresh, buf, "n={n} k={k}");
+            assert_eq!(a.next_u64(), b.next_u64(), "draw streams diverged");
         }
     }
 

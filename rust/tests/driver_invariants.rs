@@ -12,7 +12,14 @@
 //! `(framework, seed) → (makespan, messages, median)` tuples from a
 //! known-good build and pin them here.
 
+use megha::config::{EagleConfig, MeghaConfig, PigeonConfig, SparrowConfig};
 use megha::metrics::{summarize_jobs, RunOutcome};
+use megha::runtime::match_engine::RustMatchEngine;
+use megha::sched::eagle::Eagle;
+use megha::sched::megha::MeghaSim;
+use megha::sched::pigeon::Pigeon;
+use megha::sched::sparrow::Sparrow;
+use megha::sim::driver::{self, BufPools};
 use megha::sim::net::NetModel;
 use megha::sim::time::SimTime;
 use megha::sweep::{self, Scenario, SweepSpec, WorkloadKind};
@@ -50,6 +57,7 @@ fn assert_outcomes_identical(name: &str, a: &RunOutcome, b: &RunOutcome) {
         a.breakdown.comm_s, b.breakdown.comm_s,
         "{name}: comm breakdown drifted"
     );
+    assert_eq!(a.events, b.events, "{name}: event count drifted");
 }
 
 #[test]
@@ -75,6 +83,124 @@ fn same_seed_runs_are_bit_identical() {
         let a = run_by_name(name, workers, 7, &trace);
         let b = run_by_name(name, workers, 7, &trace);
         assert_outcomes_identical(name, &a, &b);
+    }
+}
+
+/// Golden for the pooled-payload port (ISSUE 2): running every scheduler
+/// with [`BufPools::disabled`] — i.e. the pre-port malloc-per-message
+/// behavior — must be bit-identical to the pooled production path.
+/// Pooling only recycles buffer capacity; it never touches the RNG,
+/// event order, or payload contents.
+#[test]
+fn pooled_payloads_are_bit_identical_to_unpooled() {
+    let workers = 400;
+    let seed = 17;
+    let trace = synthetic_fixed(30, 35, 1.0, 0.85, workers, seed);
+
+    let run_pair = |pooled: RunOutcome, unpooled: RunOutcome, name: &str| {
+        assert_outcomes_identical(name, &pooled, &unpooled);
+    };
+
+    {
+        let cfg = {
+            let mut c = MeghaConfig::for_workers(workers);
+            c.sim.seed = seed;
+            c
+        };
+        let pooled = {
+            let mut planner = RustMatchEngine;
+            let mut s = MeghaSim::new(&cfg, &trace, &mut planner, None);
+            driver::run_with_pools(&mut s, &cfg.sim, &trace, BufPools::new())
+        };
+        let unpooled = {
+            let mut planner = RustMatchEngine;
+            let mut s = MeghaSim::new(&cfg, &trace, &mut planner, None);
+            driver::run_with_pools(&mut s, &cfg.sim, &trace, BufPools::disabled())
+        };
+        run_pair(pooled, unpooled, "megha");
+    }
+    {
+        let cfg = {
+            let mut c = SparrowConfig::for_workers(workers);
+            c.sim.seed = seed;
+            c
+        };
+        let pooled = {
+            let mut s = Sparrow::new(&cfg, &trace);
+            driver::run_with_pools(&mut s, &cfg.sim, &trace, BufPools::new())
+        };
+        let unpooled = {
+            let mut s = Sparrow::new(&cfg, &trace);
+            driver::run_with_pools(&mut s, &cfg.sim, &trace, BufPools::disabled())
+        };
+        run_pair(pooled, unpooled, "sparrow");
+    }
+    {
+        let cfg = {
+            let mut c = EagleConfig::for_workers(workers);
+            c.sim.seed = seed;
+            c
+        };
+        let pooled = {
+            let mut s = Eagle::new(&cfg, &trace);
+            driver::run_with_pools(&mut s, &cfg.sim, &trace, BufPools::new())
+        };
+        let unpooled = {
+            let mut s = Eagle::new(&cfg, &trace);
+            driver::run_with_pools(&mut s, &cfg.sim, &trace, BufPools::disabled())
+        };
+        run_pair(pooled, unpooled, "eagle");
+    }
+    {
+        let cfg = {
+            let mut c = PigeonConfig::for_workers(workers);
+            c.sim.seed = seed;
+            c
+        };
+        let pooled = {
+            let mut s = Pigeon::new(&cfg);
+            driver::run_with_pools(&mut s, &cfg.sim, &trace, BufPools::new())
+        };
+        let unpooled = {
+            let mut s = Pigeon::new(&cfg);
+            driver::run_with_pools(&mut s, &cfg.sim, &trace, BufPools::disabled())
+        };
+        run_pair(pooled, unpooled, "pigeon");
+    }
+}
+
+/// Golden for the delta-snapshot rewrite (ISSUE 2): the masked
+/// snapshot-apply fast path must be bit-identical to full-range
+/// word-compare applies (the reference behavior equivalent to the old
+/// full-width overwrite). Runs Megha at high load (plenty of
+/// inconsistency replies + heartbeats) and with GM failure injection,
+/// since failure is what invalidates the masked-apply precondition.
+#[test]
+fn masked_snapshot_applies_are_bit_identical_to_full() {
+    let workers = 400;
+    for (seed, fail_at) in [(23u64, None), (29u64, Some(4.0f64))] {
+        let cfg = {
+            let mut c = MeghaConfig::for_workers(workers);
+            c.sim.seed = seed;
+            c
+        };
+        let trace = synthetic_fixed(40, 40, 1.0, 0.92, workers, seed + 1);
+        let failure = fail_at.map(|at| megha::sched::megha::FailurePlan {
+            at: SimTime::from_secs(at),
+            gm: 0,
+        });
+        let masked = {
+            let mut planner = RustMatchEngine;
+            let mut s = MeghaSim::new(&cfg, &trace, &mut planner, failure);
+            driver::run(&mut s, &cfg.sim, &trace)
+        };
+        let full = {
+            let mut planner = RustMatchEngine;
+            let mut s = MeghaSim::new(&cfg, &trace, &mut planner, failure);
+            s.set_masked_applies(false);
+            driver::run(&mut s, &cfg.sim, &trace)
+        };
+        assert_outcomes_identical("megha masked-vs-full", &masked, &full);
     }
 }
 
