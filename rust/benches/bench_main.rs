@@ -10,9 +10,10 @@
 //!
 //! Run with `cargo bench` (or `cargo bench -- fig3 match` to filter).
 //! Flags: `--quick` shrinks the per-bench budget (the CI smoke mode);
-//! `--json` additionally writes `BENCH_PR2.json` (per-bench median
-//! ns/unit, experiment totals in seconds) at the repo root to seed the
-//! perf trajectory.
+//! `--json` additionally writes `BENCH_PR3.json` (per-bench median
+//! ns/unit, experiment totals in seconds) at the repo root — the
+//! current PR's perf artifact (`BENCH_PR2.json` is the frozen PR-2
+//! snapshot, still pending a hardware regeneration).
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -92,7 +93,7 @@ impl Bench {
         self.total_results.borrow_mut().push((name.to_string(), total));
     }
 
-    /// Write `BENCH_PR2.json` at the repo root (next to `rust/`),
+    /// Write `BENCH_PR3.json` at the repo root (next to `rust/`),
     /// merging over any existing file so successive filtered runs
     /// (`-- queue --json` then `-- scale10 --json`) accumulate instead
     /// of clobbering each other. A fresh run of a bench name replaces
@@ -103,7 +104,7 @@ impl Bench {
             .ok()
             .and_then(|p| p.parent().map(|q| q.to_path_buf()))
             .unwrap_or_else(|| std::path::PathBuf::from("."));
-        let path = root.join("BENCH_PR2.json");
+        let path = root.join("BENCH_PR3.json");
         let mut bench: BTreeMap<String, Json> = BTreeMap::new();
         let mut totals: BTreeMap<String, Json> = BTreeMap::new();
         if let Ok(text) = std::fs::read_to_string(&path) {
@@ -183,6 +184,7 @@ fn main() {
 
     // ---- 2. microbenches ----
     bench_match_engines(&b);
+    bench_constraint_match(&b);
     bench_sim_throughput(&b);
     bench_bitmap(&b);
     bench_queue(&b);
@@ -363,6 +365,7 @@ fn bench_sweep_speedup(b: &Bench) {
             40,
             &megha::sim::net::NetModel::paper_default(),
             None,
+            None,
         ),
         seeds: 4,
         base_seed: 1,
@@ -419,6 +422,68 @@ fn bench_match_engines(b: &Bench) {
     } else {
         println!("bench match/xla_plan_1024p                       SKIPPED (run `make artifacts`)");
     }
+}
+
+/// Constraint matching at fig3 scale: the catalog's word-wise masked
+/// scans (AND of state word × attribute/capacity masks) vs a naive
+/// per-worker filter (`is_free && slot_matches`). The masked path is
+/// what Megha's `constrained_plan` runs per scheduling round.
+fn bench_constraint_match(b: &Bench) {
+    use megha::cluster::NodeCatalog;
+    use megha::workload::Demand;
+    const N: usize = 6_400; // fig3-scale DC
+    let catalog = NodeCatalog::bimodal_gpu(N, 0.0625);
+    let rd = catalog
+        .resolve(&Demand::attrs(&["gpu"]))
+        .expect("gpu resolves");
+    let mut state = AvailMap::all_free(N);
+    let mut rng = Rng::new(17);
+    for _ in 0..N / 2 {
+        state.set_busy(rng.below(N));
+    }
+    const RANGE: usize = 800; // one LM-cluster-sized scan window
+    b.time("match/masked_count_6400w", || {
+        let mut acc = 0usize;
+        for i in 0..1000 {
+            let lo = (i * 613) % (N - RANGE);
+            acc += catalog.count_matching_free(&state, lo, lo + RANGE, &rd);
+        }
+        std::hint::black_box(acc);
+        1000
+    });
+    b.time("match/naive_count_6400w", || {
+        let mut acc = 0usize;
+        for i in 0..1000 {
+            let lo = (i * 613) % (N - RANGE);
+            acc += (lo..lo + RANGE)
+                .filter(|&s| state.is_free(s) && catalog.slot_matches(s, &rd))
+                .count();
+        }
+        std::hint::black_box(acc);
+        1000
+    });
+    b.time("match/masked_first_free_6400w", || {
+        let mut acc = 0usize;
+        for i in 0..1000 {
+            let lo = (i * 613) % (N - RANGE);
+            acc += catalog
+                .first_matching_free(&state, lo, lo + RANGE, &rd)
+                .unwrap_or(0);
+        }
+        std::hint::black_box(acc);
+        1000
+    });
+    b.time("match/naive_first_free_6400w", || {
+        let mut acc = 0usize;
+        for i in 0..1000 {
+            let lo = (i * 613) % (N - RANGE);
+            acc += (lo..lo + RANGE)
+                .find(|&s| state.is_free(s) && catalog.slot_matches(s, &rd))
+                .unwrap_or(0);
+        }
+        std::hint::black_box(acc);
+        1000
+    });
 }
 
 /// Simulator throughput: events/s and scheduling decisions/s.

@@ -251,6 +251,20 @@ impl AvailMap {
         }
     }
 
+    /// Raw bitmap word `i`. Padding bits past [`len`](Self::len) are
+    /// always zero, so word-wise consumers (the hetero catalog's masked
+    /// matching) never see phantom workers.
+    #[inline]
+    pub fn word(&self, i: usize) -> u64 {
+        self.words[i]
+    }
+
+    /// Number of backing words (`len().div_ceil(64)`).
+    #[inline]
+    pub fn n_words(&self) -> usize {
+        self.words.len()
+    }
+
     /// Iterate indices of free workers (ascending).
     pub fn iter_free(&self) -> impl Iterator<Item = usize> + '_ {
         self.words.iter().enumerate().flat_map(move |(wi, &w)| {

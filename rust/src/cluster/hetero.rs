@@ -1,0 +1,608 @@
+//! Heterogeneous-cluster catalog: per-node capacities and attribute
+//! labels, packed for constraint-aware placement.
+//!
+//! The simulator's scheduling unit stays the worker *slot* (one bit of
+//! an [`AvailMap`]); the catalog groups slots into physical *nodes* — a
+//! node of capacity `c` contributes `c` consecutive slots — and tags
+//! slots with attribute labels (`gpu`, `ssd`, ...). Each attribute is
+//! stored as an [`AvailMap`] reused as a plain bitset (bit set ⇔ slot
+//! has the attribute), so "free AND matches the demand" stays a
+//! word-wise AND over the existing bitmap machinery instead of a
+//! per-slot filter.
+//!
+//! A task's [`Demand`] resolves against a catalog once, at simulation
+//! setup, into a [`ResolvedDemand`] (attribute mask ids + a capacity
+//! mask): `required_attrs` become per-attribute masks and `slots`
+//! becomes a "hosted on a node of capacity ≥ slots" mask. (The task
+//! itself still occupies one slot; co-scheduling several slots of one
+//! node is future work — `slots` models the *big-node class* the task
+//! must land on.)
+//!
+//! **Bit-identity contract**: a [`uniform`](NodeCatalog::uniform)
+//! (trivial) catalog plus a demand-free trace must leave every
+//! scheduler's behavior bit-for-bit unchanged — schedulers only consult
+//! the catalog for jobs that carry a demand, and the goldens in
+//! `tests/driver_invariants.rs` pin a non-trivial catalog with an
+//! unconstrained trace against the trivial one.
+
+use super::bitmap::AvailMap;
+use crate::workload::constraints::Demand;
+use crate::workload::Trace;
+
+/// Stripe period of the built-in profiles: attribute/capacity layout
+/// repeats every `STRIPE` slots, so scarcity is spread uniformly over
+/// every partition/group regardless of the framework's topology.
+pub const STRIPE: usize = 32;
+
+/// Rack size of the `rack-tiered` profile (two bitmap words).
+pub const RACK: usize = 64;
+
+/// A [`Demand`] resolved against one catalog: attribute mask indices
+/// plus an optional capacity-class mask index.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ResolvedDemand {
+    attr_ids: Vec<usize>,
+    cap_idx: Option<usize>,
+}
+
+impl ResolvedDemand {
+    /// True when the demand constrains nothing (no attributes, slots ≤ 1).
+    pub fn is_unconstrained(&self) -> bool {
+        self.attr_ids.is_empty() && self.cap_idx.is_none()
+    }
+}
+
+/// Per-slot node/attribute catalog of one DC (see the module docs).
+#[derive(Clone, Debug)]
+pub struct NodeCatalog {
+    n_slots: usize,
+    /// Attribute labels; index = attribute id.
+    attrs: Vec<String>,
+    /// Per-attribute slot bitset (bit set ⇔ slot has the attribute).
+    masks: Vec<AvailMap>,
+    /// Physical node of each slot (empty when trivial: node == slot).
+    node_of_slot: Vec<u32>,
+    /// Capacity (slot count) per node (empty when trivial: all 1).
+    node_capacity: Vec<u32>,
+    /// For each distinct capacity `c > 1` (ascending): bitset of slots
+    /// hosted on nodes with capacity ≥ `c`.
+    cap_masks: Vec<(u32, AvailMap)>,
+    trivial: bool,
+}
+
+impl NodeCatalog {
+    /// The homogeneous catalog: every slot its own capacity-1 node, no
+    /// attributes. This is the default in every scheduler config and
+    /// the identity of the bit-identity contract.
+    pub fn uniform(n_slots: usize) -> NodeCatalog {
+        NodeCatalog {
+            n_slots,
+            attrs: Vec::new(),
+            masks: Vec::new(),
+            node_of_slot: Vec::new(),
+            node_capacity: Vec::new(),
+            cap_masks: Vec::new(),
+            trivial: true,
+        }
+    }
+
+    /// Build a catalog from an ordered node list: each `(capacity,
+    /// attrs)` entry becomes one node of `capacity` consecutive slots
+    /// carrying every label in `attrs`. Labels are interned in first-use
+    /// order.
+    pub fn from_nodes<I, S>(nodes: I) -> NodeCatalog
+    where
+        I: IntoIterator<Item = (u32, Vec<S>)>,
+        S: Into<String>,
+    {
+        let mut entries: Vec<(u32, Vec<String>)> = Vec::new();
+        let mut n_slots = 0usize;
+        let mut trivial = true;
+        for (cap, labels) in nodes {
+            assert!(cap >= 1, "node capacity must be >= 1");
+            let labels: Vec<String> = labels.into_iter().map(Into::into).collect();
+            if cap > 1 || !labels.is_empty() {
+                trivial = false;
+            }
+            n_slots += cap as usize;
+            entries.push((cap, labels));
+        }
+        if trivial {
+            return NodeCatalog::uniform(n_slots);
+        }
+        let mut attrs: Vec<String> = Vec::new();
+        let mut masks: Vec<AvailMap> = Vec::new();
+        let mut node_of_slot = Vec::with_capacity(n_slots);
+        let mut node_capacity = Vec::with_capacity(entries.len());
+        let mut slot = 0usize;
+        for (node, (cap, labels)) in entries.iter().enumerate() {
+            node_capacity.push(*cap);
+            let ids: Vec<usize> = labels
+                .iter()
+                .map(|l| {
+                    attrs.iter().position(|a| a == l).unwrap_or_else(|| {
+                        attrs.push(l.clone());
+                        masks.push(AvailMap::all_busy(n_slots));
+                        attrs.len() - 1
+                    })
+                })
+                .collect();
+            for _ in 0..*cap {
+                node_of_slot.push(node as u32);
+                for &a in &ids {
+                    masks[a].set_free(slot);
+                }
+                slot += 1;
+            }
+        }
+        let mut caps: Vec<u32> = node_capacity.iter().copied().filter(|&c| c > 1).collect();
+        caps.sort_unstable();
+        caps.dedup();
+        let cap_masks = caps
+            .into_iter()
+            .map(|c| {
+                let mut m = AvailMap::all_busy(n_slots);
+                for (s, &node) in node_of_slot.iter().enumerate() {
+                    if node_capacity[node as usize] >= c {
+                        m.set_free(s);
+                    }
+                }
+                (c, m)
+            })
+            .collect();
+        NodeCatalog {
+            n_slots,
+            attrs,
+            masks,
+            node_of_slot,
+            node_capacity,
+            cap_masks,
+            trivial: false,
+        }
+    }
+
+    /// Named catalog profile over `n_slots` slots. `scarcity` tunes how
+    /// rare the profile's scarce resource is (fraction of slots for
+    /// `bimodal-gpu`, the `nvme` rack fraction for `rack-tiered`).
+    pub fn profile(name: &str, n_slots: usize, scarcity: f64) -> Option<NodeCatalog> {
+        match name {
+            "uniform" => Some(NodeCatalog::uniform(n_slots)),
+            "bimodal-gpu" => Some(NodeCatalog::bimodal_gpu(n_slots, scarcity)),
+            "rack-tiered" => Some(NodeCatalog::rack_tiered(n_slots, scarcity)),
+            _ => None,
+        }
+    }
+
+    /// Profile names accepted by [`profile`](Self::profile).
+    pub fn profile_names() -> &'static [&'static str] {
+        &["uniform", "bimodal-gpu", "rack-tiered"]
+    }
+
+    /// `bimodal-gpu`: in every [`STRIPE`]-slot stripe the last
+    /// `round(STRIPE · scarcity)` (≥ 1) slots are GPU slots carrying
+    /// attr `gpu`, paired into capacity-2 nodes (the capacity-skew
+    /// axis); all other slots are plain capacity-1 nodes.
+    pub fn bimodal_gpu(n_slots: usize, scarcity: f64) -> NodeCatalog {
+        assert!((0.0..=1.0).contains(&scarcity), "scarcity in [0,1]");
+        let per_stripe = ((STRIPE as f64 * scarcity).round() as usize).clamp(1, STRIPE);
+        let mut nodes: Vec<(u32, Vec<&str>)> = Vec::new();
+        let mut s = 0usize;
+        while s < n_slots {
+            let stripe = (n_slots - s).min(STRIPE);
+            let gpu = per_stripe.min(stripe);
+            for _ in 0..stripe - gpu {
+                nodes.push((1, vec![]));
+            }
+            let mut left = gpu;
+            while left >= 2 {
+                nodes.push((2, vec!["gpu"]));
+                left -= 2;
+            }
+            if left == 1 {
+                nodes.push((1, vec!["gpu"]));
+            }
+            s += stripe;
+        }
+        NodeCatalog::from_nodes(nodes)
+    }
+
+    /// `rack-tiered`: [`RACK`]-slot racks cycle through storage tiers —
+    /// every `round(1/scarcity)`-th rack is `nvme`, the rest alternate
+    /// `ssd`/`hdd` — and each full rack ends in one capacity-4
+    /// `big-mem` node (sharing the rack's tier attr).
+    pub fn rack_tiered(n_slots: usize, scarcity: f64) -> NodeCatalog {
+        assert!(scarcity > 0.0 && scarcity <= 1.0, "scarcity in (0,1]");
+        let period = ((1.0 / scarcity).round() as usize).max(1);
+        let mut nodes: Vec<(u32, Vec<&str>)> = Vec::new();
+        let mut s = 0usize;
+        let mut rack = 0usize;
+        while s < n_slots {
+            let len = (n_slots - s).min(RACK);
+            let tier = if rack % period == 0 {
+                "nvme"
+            } else if rack % 2 == 1 {
+                "ssd"
+            } else {
+                "hdd"
+            };
+            if len >= 8 {
+                for _ in 0..len - 4 {
+                    nodes.push((1, vec![tier]));
+                }
+                nodes.push((4, vec![tier, "big-mem"]));
+            } else {
+                for _ in 0..len {
+                    nodes.push((1, vec![tier]));
+                }
+            }
+            s += len;
+            rack += 1;
+        }
+        NodeCatalog::from_nodes(nodes)
+    }
+
+    /// Total slots (must equal the DC's worker count).
+    pub fn len(&self) -> usize {
+        self.n_slots
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_slots == 0
+    }
+
+    /// True for the homogeneous catalog (no attributes, all capacity 1).
+    pub fn is_trivial(&self) -> bool {
+        self.trivial
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        if self.trivial {
+            self.n_slots
+        } else {
+            self.node_capacity.len()
+        }
+    }
+
+    /// Physical node hosting `slot`.
+    pub fn node_of(&self, slot: usize) -> u32 {
+        debug_assert!(slot < self.n_slots);
+        if self.trivial {
+            slot as u32
+        } else {
+            self.node_of_slot[slot]
+        }
+    }
+
+    pub fn capacity_of_node(&self, node: u32) -> u32 {
+        if self.trivial {
+            1
+        } else {
+            self.node_capacity[node as usize]
+        }
+    }
+
+    /// Attribute labels known to this catalog.
+    pub fn attr_labels(&self) -> &[String] {
+        &self.attrs
+    }
+
+    /// Resolve a demand. Strict: unknown attribute labels and capacity
+    /// classes no node provides are errors, not silent no-matches — a
+    /// demand that can never place would deadlock a simulation.
+    pub fn resolve(&self, d: &Demand) -> Result<ResolvedDemand, String> {
+        if d.slots < 1 {
+            return Err("demand slots must be >= 1".into());
+        }
+        let mut attr_ids = Vec::with_capacity(d.required_attrs.len());
+        for label in &d.required_attrs {
+            let id = self.attrs.iter().position(|a| a == label).ok_or_else(|| {
+                format!(
+                    "unknown attribute '{label}' (catalog has: {})",
+                    if self.attrs.is_empty() {
+                        "none".to_string()
+                    } else {
+                        self.attrs.join(", ")
+                    }
+                )
+            })?;
+            if !attr_ids.contains(&id) {
+                attr_ids.push(id);
+            }
+        }
+        attr_ids.sort_unstable();
+        let cap_idx = if d.slots <= 1 {
+            None
+        } else {
+            // smallest recorded capacity >= slots is exactly the
+            // "capacity >= slots" mask (no distinct capacity in between)
+            let idx = self
+                .cap_masks
+                .iter()
+                .position(|&(c, _)| c >= d.slots)
+                .ok_or_else(|| {
+                    format!(
+                        "no node with capacity >= {} (max capacity {})",
+                        d.slots,
+                        self.cap_masks.last().map(|&(c, _)| c).unwrap_or(1)
+                    )
+                })?;
+            Some(idx)
+        };
+        Ok(ResolvedDemand { attr_ids, cap_idx })
+    }
+
+    /// The demand's combined mask restricted to word `w` (`!0` when the
+    /// demand constrains nothing).
+    #[inline]
+    fn demand_word(&self, rd: &ResolvedDemand, w: usize) -> u64 {
+        let mut m = !0u64;
+        for &a in &rd.attr_ids {
+            m &= self.masks[a].word(w);
+        }
+        if let Some(c) = rd.cap_idx {
+            m &= self.cap_masks[c].1.word(w);
+        }
+        m
+    }
+
+    /// Does `slot` satisfy the demand?
+    pub fn slot_matches(&self, slot: usize, rd: &ResolvedDemand) -> bool {
+        debug_assert!(slot < self.n_slots);
+        self.demand_word(rd, slot / 64) >> (slot % 64) & 1 == 1
+    }
+
+    /// Slots in [lo, hi) matching the demand, regardless of freeness
+    /// (static capacity — feasibility checks).
+    pub fn count_matching(&self, lo: usize, hi: usize, rd: &ResolvedDemand) -> usize {
+        debug_assert!(lo <= hi && hi <= self.n_slots);
+        if lo == hi {
+            return 0;
+        }
+        if rd.is_unconstrained() {
+            return hi - lo;
+        }
+        let (lw, hw) = (lo / 64, (hi - 1) / 64);
+        let mut total = 0usize;
+        for w in lw..=hw {
+            let word = self.demand_word(rd, w) & range_word_mask(w, lw, hw, lo, hi);
+            total += word.count_ones() as usize;
+        }
+        total
+    }
+
+    /// Free slots of `state` in [lo, hi) matching the demand — one
+    /// word-wise AND per word, the constraint-matching hot path.
+    pub fn count_matching_free(
+        &self,
+        state: &AvailMap,
+        lo: usize,
+        hi: usize,
+        rd: &ResolvedDemand,
+    ) -> usize {
+        debug_assert!(lo <= hi && hi <= self.n_slots && state.len() == self.n_slots);
+        if lo == hi {
+            return 0;
+        }
+        let (lw, hw) = (lo / 64, (hi - 1) / 64);
+        let mut total = 0usize;
+        for w in lw..=hw {
+            let word =
+                state.word(w) & self.demand_word(rd, w) & range_word_mask(w, lw, hw, lo, hi);
+            total += word.count_ones() as usize;
+        }
+        total
+    }
+
+    /// First free slot of `state` in [lo, hi) matching the demand.
+    pub fn first_matching_free(
+        &self,
+        state: &AvailMap,
+        lo: usize,
+        hi: usize,
+        rd: &ResolvedDemand,
+    ) -> Option<usize> {
+        debug_assert!(lo <= hi && hi <= self.n_slots && state.len() == self.n_slots);
+        if lo == hi {
+            return None;
+        }
+        let (lw, hw) = (lo / 64, (hi - 1) / 64);
+        for w in lw..=hw {
+            let word =
+                state.word(w) & self.demand_word(rd, w) & range_word_mask(w, lw, hw, lo, hi);
+            if word != 0 {
+                return Some(w * 64 + word.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// Find-and-claim: first matching free slot in [lo, hi), marked busy.
+    pub fn pop_matching_free(
+        &self,
+        state: &mut AvailMap,
+        lo: usize,
+        hi: usize,
+        rd: &ResolvedDemand,
+    ) -> Option<usize> {
+        let s = self.first_matching_free(state, lo, hi, rd)?;
+        state.set_busy(s);
+        Some(s)
+    }
+}
+
+/// Word mask selecting the bits of word `w` inside [lo, hi) (given the
+/// word span `[lw, hw]` of the range) — the same edge masking
+/// `AvailMap`'s ranged scans use.
+#[inline]
+fn range_word_mask(w: usize, lw: usize, hw: usize, lo: usize, hi: usize) -> u64 {
+    let mut mask = !0u64;
+    if w == lw {
+        mask &= !0u64 << (lo % 64);
+    }
+    if w == hw && hi % 64 != 0 {
+        mask &= (1u64 << (hi % 64)) - 1;
+    }
+    mask
+}
+
+/// Resolve every job's demand against `catalog`, strictly: resolution
+/// errors and demands matching zero slots panic at setup instead of
+/// deadlocking the event loop later.
+pub fn resolve_trace(catalog: &NodeCatalog, trace: &Trace) -> Vec<Option<ResolvedDemand>> {
+    trace
+        .jobs
+        .iter()
+        .map(|j| {
+            j.demand.as_ref().map(|d| {
+                let rd = catalog
+                    .resolve(d)
+                    .unwrap_or_else(|e| panic!("job {}: {e}", j.id));
+                assert!(
+                    catalog.count_matching(0, catalog.len(), &rd) > 0,
+                    "job {}: demand matches no slot in the catalog",
+                    j.id
+                );
+                rd
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu_demand() -> Demand {
+        Demand::attrs(&["gpu"])
+    }
+
+    #[test]
+    fn uniform_is_trivial_and_matchless() {
+        let c = NodeCatalog::uniform(100);
+        assert!(c.is_trivial());
+        assert_eq!(c.len(), 100);
+        assert_eq!(c.n_nodes(), 100);
+        assert_eq!(c.node_of(42), 42);
+        assert_eq!(c.capacity_of_node(42), 1);
+        // attribute demands cannot resolve against a trivial catalog
+        assert!(c.resolve(&gpu_demand()).is_err());
+        assert!(c.resolve(&Demand::new(2, vec![])).is_err());
+        // but an unconstrained demand does, and matches everything
+        let rd = c.resolve(&Demand::new(1, vec![])).unwrap();
+        assert!(rd.is_unconstrained());
+        assert_eq!(c.count_matching(10, 90, &rd), 80);
+    }
+
+    #[test]
+    fn from_nodes_lays_out_slots_and_attrs() {
+        let c = NodeCatalog::from_nodes(vec![
+            (1u32, vec!["ssd"]),
+            (2, vec!["gpu"]),
+            (1, vec![]),
+            (4, vec!["gpu", "ssd"]),
+        ]);
+        assert_eq!(c.len(), 8);
+        assert_eq!(c.n_nodes(), 4);
+        assert!(!c.is_trivial());
+        assert_eq!(c.node_of(0), 0);
+        assert_eq!(c.node_of(1), 1);
+        assert_eq!(c.node_of(2), 1);
+        assert_eq!(c.node_of(3), 2);
+        assert_eq!(c.node_of(7), 3);
+        assert_eq!(c.capacity_of_node(3), 4);
+        let gpu = c.resolve(&gpu_demand()).unwrap();
+        assert_eq!(c.count_matching(0, 8, &gpu), 6);
+        assert!(!c.slot_matches(0, &gpu) && c.slot_matches(1, &gpu) && c.slot_matches(4, &gpu));
+        // slots:3 selects only the capacity-4 node's slots
+        let big = c.resolve(&Demand::new(3, vec![])).unwrap();
+        assert_eq!(c.count_matching(0, 8, &big), 4);
+        assert!(c.slot_matches(4, &big) && !c.slot_matches(1, &big));
+        // combined: gpu + capacity>=2 → nodes 1 and 3
+        let both = c.resolve(&Demand::new(2, vec!["gpu".into()])).unwrap();
+        assert_eq!(c.count_matching(0, 8, &both), 6);
+        // capacity beyond any node is a strict error
+        assert!(c.resolve(&Demand::new(5, vec![])).is_err());
+        assert!(c.resolve(&Demand::attrs(&["tpu"])).is_err());
+    }
+
+    #[test]
+    fn matching_free_agrees_with_naive_filter() {
+        let c = NodeCatalog::bimodal_gpu(300, 0.1);
+        let rd = c.resolve(&gpu_demand()).unwrap();
+        let mut state = AvailMap::all_free(300);
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..150 {
+            state.set_busy(rng.below(300));
+        }
+        for &(lo, hi) in &[(0usize, 300usize), (7, 130), (64, 128), (63, 65), (10, 10)] {
+            let naive: Vec<usize> = (lo..hi)
+                .filter(|&s| state.is_free(s) && c.slot_matches(s, &rd))
+                .collect();
+            assert_eq!(c.count_matching_free(&state, lo, hi, &rd), naive.len());
+            assert_eq!(
+                c.first_matching_free(&state, lo, hi, &rd),
+                naive.first().copied(),
+                "[{lo},{hi})"
+            );
+        }
+        // pop claims exactly the first match
+        let first = c.first_matching_free(&state, 0, 300, &rd);
+        let popped = c.pop_matching_free(&mut state, 0, 300, &rd);
+        assert_eq!(first, popped);
+        assert!(!state.is_free(popped.unwrap()));
+    }
+
+    #[test]
+    fn bimodal_gpu_scarcity_and_capacity() {
+        let c = NodeCatalog::bimodal_gpu(640, 0.0625); // 2 gpu slots per 32
+        let rd = c.resolve(&gpu_demand()).unwrap();
+        assert_eq!(c.count_matching(0, 640, &rd), 40);
+        // gpu slots pair into capacity-2 nodes
+        let cap2 = c.resolve(&Demand::new(2, vec![])).unwrap();
+        assert_eq!(c.count_matching(0, 640, &cap2), 40);
+        // every stripe contains gpu capacity (uniform spread)
+        for s in (0..640).step_by(STRIPE) {
+            assert!(c.count_matching(s, s + STRIPE, &rd) > 0, "stripe {s}");
+        }
+    }
+
+    #[test]
+    fn rack_tiered_tiers_cover_all_slots() {
+        let c = NodeCatalog::rack_tiered(500, 0.25);
+        let mut covered = 0;
+        for tier in ["nvme", "ssd", "hdd"] {
+            let rd = c.resolve(&Demand::attrs(&[tier])).unwrap();
+            covered += c.count_matching(0, 500, &rd);
+        }
+        assert_eq!(covered, 500);
+        let big = c.resolve(&Demand::new(4, vec![])).unwrap();
+        assert!(c.count_matching(0, 500, &big) >= 4);
+        let nvme = c.resolve(&Demand::attrs(&["nvme"])).unwrap();
+        let n = c.count_matching(0, 500, &nvme);
+        assert!(n > 0 && n < 250, "nvme should be the scarce tier, got {n}");
+    }
+
+    #[test]
+    fn resolve_trace_strictness() {
+        use crate::sim::time::SimTime;
+        use crate::workload::{Job, Trace};
+        let c = NodeCatalog::bimodal_gpu(64, 0.1);
+        let ok = Trace::new(
+            "ok",
+            vec![
+                Job::new(0, SimTime::ZERO, vec![SimTime::from_secs(1.0)]),
+                Job::new(1, SimTime::ZERO, vec![SimTime::from_secs(1.0)])
+                    .with_demand(gpu_demand()),
+            ],
+        );
+        let rds = resolve_trace(&c, &ok);
+        assert!(rds[0].is_none() && rds[1].is_some());
+        let bad = Trace::new(
+            "bad",
+            vec![Job::new(0, SimTime::ZERO, vec![SimTime::from_secs(1.0)])
+                .with_demand(Demand::attrs(&["tpu"]))],
+        );
+        let r = std::panic::catch_unwind(|| resolve_trace(&c, &bad));
+        assert!(r.is_err(), "unknown attribute must panic at setup");
+    }
+}

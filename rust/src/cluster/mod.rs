@@ -10,8 +10,10 @@
 //! ([`AvailMap`]) can represent any entity's view of the whole DC.
 
 pub mod bitmap;
+pub mod hetero;
 
 pub use bitmap::AvailMap;
+pub use hetero::{NodeCatalog, ResolvedDemand};
 
 /// A worker node's global index.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]

@@ -5,7 +5,7 @@
 
 pub mod file;
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, NodeCatalog};
 use crate::sim::net::NetModel;
 use crate::sim::time::SimTime;
 
@@ -45,6 +45,10 @@ pub struct MeghaConfig {
     pub shuffle_workers: bool,
     /// Use the XLA (PJRT) match engine instead of the Rust fallback.
     pub use_xla_match: bool,
+    /// Per-worker capacity/attribute catalog (`cluster::hetero`). The
+    /// default is the trivial uniform catalog, which is guaranteed
+    /// bit-identical to the pre-hetero behavior.
+    pub catalog: NodeCatalog,
 }
 
 impl MeghaConfig {
@@ -53,13 +57,15 @@ impl MeghaConfig {
         // paper's prototype uses 3 GMs; simulations use more at scale
         let n_gm = if workers <= 1000 { 3 } else { 8 };
         let n_lm = if workers <= 1000 { 3 } else { 10 };
+        let spec = ClusterSpec::for_workers(workers, n_gm, n_lm);
         MeghaConfig {
-            spec: ClusterSpec::for_workers(workers, n_gm, n_lm),
+            spec,
             sim: SimParams::default(),
             heartbeat: SimTime::from_secs(5.0),
             max_batch: 64,
             shuffle_workers: true,
             use_xla_match: false,
+            catalog: NodeCatalog::uniform(spec.n_workers()),
         }
     }
 }
@@ -72,6 +78,9 @@ pub struct SparrowConfig {
     /// Probe ratio d: d·n probes per n-task job (paper/Sparrow: d = 2).
     pub probe_ratio: usize,
     pub sim: SimParams,
+    /// See [`MeghaConfig::catalog`]. Probes stay blind to it; it is
+    /// consulted only to *verify* constraints at probed nodes.
+    pub catalog: NodeCatalog,
 }
 
 impl SparrowConfig {
@@ -81,6 +90,7 @@ impl SparrowConfig {
             n_schedulers: 8,
             probe_ratio: 2,
             sim: SimParams::default(),
+            catalog: NodeCatalog::uniform(workers),
         }
     }
 }
@@ -96,6 +106,10 @@ pub struct EagleConfig {
     /// confined to the complement).
     pub short_partition_frac: f64,
     pub sim: SimParams,
+    /// See [`SparrowConfig::catalog`]: short-job probes verify at the
+    /// node; only the *centralized* long-job scheduler places
+    /// constraint-aware.
+    pub catalog: NodeCatalog,
 }
 
 impl EagleConfig {
@@ -106,6 +120,7 @@ impl EagleConfig {
             probe_ratio: 2,
             short_partition_frac: 0.09, // Eagle paper's default split
             sim: SimParams::default(),
+            catalog: NodeCatalog::uniform(workers),
         }
     }
 }
@@ -122,6 +137,10 @@ pub struct PigeonConfig {
     /// Weighted fair queuing: 1 low-priority task per `wfq_weight` high.
     pub wfq_weight: usize,
     pub sim: SimParams,
+    /// See [`SparrowConfig::catalog`]: distributors route constrained
+    /// tasks only to groups with matching nodes (static knowledge);
+    /// coordinators verify against live state.
+    pub catalog: NodeCatalog,
 }
 
 impl PigeonConfig {
@@ -133,6 +152,7 @@ impl PigeonConfig {
             reserved_frac: 0.04, // Pigeon paper: ~3.5-4% reserved
             wfq_weight: 10,
             sim: SimParams::default(),
+            catalog: NodeCatalog::uniform(workers),
         }
     }
 }

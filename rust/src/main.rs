@@ -5,28 +5,37 @@
 //! megha simulate --scheduler megha|sparrow|eagle|pigeon
 //!                (--trace FILE | --workload yahoo|google|fixed --jobs N)
 //!                [--workers N] [--load X] [--seed N] [--xla]
+//!                [--hetero uniform|bimodal-gpu|rack-tiered] [--scarcity X]
+//!                [--constrained-frac X] [--require a,b] [--demand-slots K]
 //! megha prototype --scheduler megha|pigeon [--jobs N] [--time-scale X] [--xla]
 //! megha sweep [--schedulers megha,sparrow,eagle,pigeon] [--seeds N]
 //!             [--base-seed S] [--workers N1,N2,...] [--loads X1,X2,...]
 //!             [--workload yahoo|google|fixed] [--jobs N] [--tasks-per-job N]
 //!             [--net constant|jittered] [--net-ms X] [--jitter-ms X]
-//!             [--fail-gm-at T] [--threads K] [--preset scale10]
+//!             [--fail-gm-at T] [--threads K] [--preset NAME]
+//!             [--hetero PROFILE] [--scarcity X] [--constrained-frac X]
+//!             [--require a,b] [--demand-slots K]
 //! megha trace gen --workload yahoo|google|fixed --jobs N --workers N
 //!                 [--load X] [--seed N] --out FILE
+//!                 [--constrained-frac X] [--require a,b] [--demand-slots K]
 //! megha trace stats --file FILE
 //! ```
 
 use anyhow::{bail, Context, Result};
+use megha::cluster::NodeCatalog;
 use megha::config::MeghaConfig;
 use megha::experiments::{self, Scale};
-use megha::metrics::{summarize_class, summarize_jobs, RunOutcome};
+use megha::metrics::{
+    summarize_class, summarize_constrained, summarize_constraint_wait, summarize_jobs, RunOutcome,
+};
 use megha::proto::{driver, ProtoConfig};
 use megha::runtime::match_engine::RustMatchEngine;
 use megha::sim::net::NetModel;
 use megha::sim::time::SimTime;
 use megha::sweep;
 use megha::util::args::Args;
-use megha::workload::{synthetic, trace as tracefile, JobClass, Trace};
+use megha::workload::constraints::{apply_constraints, valid_label, CONSTRAIN_SEED};
+use megha::workload::{synthetic, trace as tracefile, Demand, JobClass, Trace};
 
 const FLAGS: &[&str] = &["xla", "help", "short-only"];
 
@@ -61,11 +70,76 @@ fn print_usage() {
         .map(|l| l.trim_start_matches("//! ").trim_start_matches("//!"))
         .collect::<Vec<_>>()
         .join("\n"));
+    println!(
+        "\nsweep presets: {}\nhetero profiles: {}",
+        sweep::preset_names().join(", "),
+        NodeCatalog::profile_names().join(", ")
+    );
 }
 
 fn scale_of(args: &Args) -> Result<Scale> {
     let s = args.get_or("scale", "default");
     Scale::parse(&s).with_context(|| format!("bad --scale '{s}'"))
+}
+
+/// Parse `--require a,b` + `--demand-slots K` into a [`Demand`].
+fn demand_of(args: &Args) -> Result<Demand> {
+    let attrs: Vec<String> = args
+        .get_or("require", "gpu")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    for a in &attrs {
+        if !valid_label(a) {
+            bail!("--require: bad attribute label '{a}'");
+        }
+    }
+    let slots = args.u64("demand-slots", 1);
+    if slots == 0 {
+        bail!("--demand-slots must be >= 1");
+    }
+    Ok(Demand::new(slots as u32, attrs))
+}
+
+/// Parse the heterogeneity flags into a sweep [`sweep::HeteroSpec`]
+/// (None when `--hetero` is absent).
+fn hetero_of(args: &Args) -> Result<Option<sweep::HeteroSpec>> {
+    let Some(profile) = args.get("hetero") else {
+        return Ok(None);
+    };
+    let scarcity = args.f64("scarcity", 0.1);
+    if !(0.0..=1.0).contains(&scarcity) || scarcity == 0.0 {
+        bail!("--scarcity must be in (0, 1]");
+    }
+    // a representative catalog (size is irrelevant for label checks, as
+    // long as it spans several stripes/racks) both validates the profile
+    // name and lets demand typos fail as CLI errors instead of panics
+    let Some(probe) = NodeCatalog::profile(profile, 4096, scarcity) else {
+        bail!(
+            "unknown --hetero profile '{profile}' (available: {})",
+            NodeCatalog::profile_names().join(", ")
+        );
+    };
+    let constrained_frac = args.f64("constrained-frac", 0.2);
+    if !(0.0..=1.0).contains(&constrained_frac) {
+        bail!("--constrained-frac must be in [0, 1]");
+    }
+    let demand = demand_of(args)?;
+    if constrained_frac > 0.0 {
+        if let Err(e) = probe.resolve(&demand) {
+            bail!(
+                "--require/--demand-slots do not fit profile '{profile}': {e} \
+                 (rack-tiered offers nvme/ssd/hdd/big-mem; bimodal-gpu offers gpu)"
+            );
+        }
+    }
+    Ok(Some(sweep::HeteroSpec {
+        profile: profile.to_string(),
+        scarcity,
+        constrained_frac,
+        demand,
+    }))
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
@@ -117,28 +191,72 @@ fn print_outcome(name: &str, out: &RunOutcome, short_only: bool) {
         out.inconsistency_ratio(),
         out.sdps()
     );
+    let cs = summarize_constrained(&out.jobs);
+    if cs.n > 0 {
+        let cw = summarize_constraint_wait(&out.jobs);
+        println!(
+            "  constrained: {} jobs | delay p50 {:.4}s p99 {:.3}s | \
+             constraint_wait p50 {:.4}s p99 {:.3}s | rejections {}",
+            cs.n, cs.median, cs.p99, cw.median, cw.p99, out.constraint_rejections
+        );
+    }
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let workers = args.usize("workers", 3_000);
     let seed = args.u64("seed", 0);
-    let trace = make_workload(args, workers)?;
+    let mut trace = make_workload(args, workers)?;
     let scheduler = args.get_or("scheduler", "megha");
+    let hetero = hetero_of(args)?;
+    if let Some(h) = &hetero {
+        // a v2 trace file may already carry demands; only synthesized /
+        // demand-free traces get decorated here
+        if h.constrained_frac > 0.0 && trace.jobs.iter().all(|j| j.demand.is_none()) {
+            // same seed tweak as the sweep/generators: `simulate --seed S`
+            // reproduces a sweep cell's constrained job set exactly
+            trace = apply_constraints(
+                trace,
+                h.constrained_frac,
+                h.demand.clone(),
+                seed ^ CONSTRAIN_SEED,
+            );
+        }
+    }
+    let n_constrained = trace.jobs.iter().filter(|j| j.demand.is_some()).count();
     println!(
-        "simulating {scheduler} on '{}' ({} jobs / {} tasks, {} workers)",
+        "simulating {scheduler} on '{}' ({} jobs / {} tasks, {} workers{})",
         trace.name,
         trace.n_jobs(),
         trace.n_tasks(),
-        workers
+        workers,
+        if let Some(h) = &hetero {
+            format!(
+                ", hetero {} scarcity {} — {} constrained jobs",
+                h.profile, h.scarcity, n_constrained
+            )
+        } else {
+            String::new()
+        }
     );
     let out = if scheduler == "megha" && args.flag("xla") {
+        if hetero.is_some() {
+            bail!("--xla does not support --hetero yet (the AOT match kernel is unconstrained)");
+        }
         let mut cfg = MeghaConfig::for_workers(workers);
         cfg.sim.seed = seed;
         let mut eng = megha::runtime::pjrt::XlaMatchEngine::load_default()
             .context("run `make artifacts` first")?;
         megha::sched::megha::simulate_with(&cfg, &trace, &mut eng, None)
     } else {
-        megha::experiments::fig3::run_framework(&scheduler, workers, seed, &trace)
+        sweep::run_framework_hetero(
+            &scheduler,
+            workers,
+            seed,
+            &NetModel::paper_default(),
+            None,
+            hetero.as_ref(),
+            &trace,
+        )
     };
     let _ = RustMatchEngine; // default engine, referenced for docs
     print_outcome(&scheduler, &out, args.flag("short-only"));
@@ -207,13 +325,31 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let scenarios = if let Some(p) = args.get("preset") {
         // a preset fixes the whole scenario grid: reject flags it would
         // silently override
-        for flag in ["workload", "workers", "loads", "jobs", "tasks-per-job", "fail-gm-at"] {
+        for flag in [
+            "workload",
+            "workers",
+            "loads",
+            "jobs",
+            "tasks-per-job",
+            "fail-gm-at",
+            "hetero",
+            "scarcity",
+            "constrained-frac",
+            "require",
+            "demand-slots",
+        ] {
             if args.get(flag).is_some() {
                 bail!("--preset {p} fixes the scenario grid; drop --{flag}");
             }
         }
-        sweep::preset(p, &net).with_context(|| format!("unknown --preset '{p}' (try scale10)"))?
+        sweep::preset(p, &net).with_context(|| {
+            format!(
+                "unknown --preset '{p}' (available: {})",
+                sweep::preset_names().join(", ")
+            )
+        })?
     } else {
+        let hetero = hetero_of(args)?;
         sweep::scenario_grid(
             &workload,
             &args.usize_list("workers", &[600]),
@@ -221,6 +357,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             args.usize("jobs", 100),
             &net,
             gm_fail_at,
+            hetero.as_ref(),
         )
     };
     let spec = sweep::SweepSpec {
@@ -242,14 +379,29 @@ fn cmd_trace(args: &Args) -> Result<()> {
     match args.positional.get(1).map(|s| s.as_str()) {
         Some("gen") => {
             let workers = args.usize("workers", 3_000);
-            let trace = make_workload(args, workers)?;
+            let mut trace = make_workload(args, workers)?;
+            if args.get("constrained-frac").is_some() {
+                let frac = args.f64("constrained-frac", 0.0);
+                if !(0.0..=1.0).contains(&frac) {
+                    bail!("--constrained-frac must be in [0, 1]");
+                }
+                trace = apply_constraints(
+                    trace,
+                    frac,
+                    demand_of(args)?,
+                    args.u64("seed", 0) ^ CONSTRAIN_SEED,
+                );
+            }
             let out = args.get("out").context("--out FILE required")?;
             tracefile::save(&trace, std::path::Path::new(out))?;
+            let n_con = trace.jobs.iter().filter(|j| j.demand.is_some()).count();
             println!(
-                "wrote {} ({} jobs / {} tasks)",
+                "wrote {} ({} jobs / {} tasks, {} constrained — {})",
                 out,
                 trace.n_jobs(),
-                trace.n_tasks()
+                trace.n_tasks(),
+                n_con,
+                if n_con > 0 { "v2 format" } else { "v1 format" }
             );
             Ok(())
         }

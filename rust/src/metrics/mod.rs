@@ -19,6 +19,13 @@ pub struct JobRecord {
     pub ideal_jct: SimTime,
     pub n_tasks: usize,
     pub class: JobClass,
+    /// Whether the job carried a placement [`Demand`](crate::workload::Demand).
+    pub constrained: bool,
+    /// Seconds the job spent *constraint-blocked*: intervals from a
+    /// constraint-caused placement failure (a free-but-unmatching
+    /// worker was all the scheduler could see/probe) until the job's
+    /// next successful task launch. Zero for unconstrained jobs.
+    pub constraint_wait_s: f64,
 }
 
 impl JobRecord {
@@ -63,6 +70,12 @@ pub struct RunOutcome {
     pub messages: u64,
     /// Scheduling decisions made (SDPS numerator).
     pub decisions: u64,
+    /// Constraint-caused placement rejections: probe verifications that
+    /// failed at the probed node (Sparrow/Eagle), queue entries/skips a
+    /// free-but-unmatching worker forced (Pigeon), or scheduling rounds
+    /// a constrained job head could not place despite visible free
+    /// capacity (Megha). Always 0 for unconstrained workloads.
+    pub constraint_rejections: u64,
     /// Simulated makespan.
     pub makespan: SimTime,
     pub breakdown: DelayBreakdown,
@@ -162,6 +175,29 @@ pub fn summarize_class(jobs: &[JobRecord], class: JobClass) -> DelaySummary {
     summarize(&d)
 }
 
+/// Summary restricted to constrained jobs (Eq. 2 delays) — the hetero
+/// sweep's headline comparison: how much constraint-aware placement
+/// shrinks constrained-job completion delay.
+pub fn summarize_constrained(jobs: &[JobRecord]) -> DelaySummary {
+    let d: Vec<f64> = jobs
+        .iter()
+        .filter(|j| j.constrained)
+        .map(|j| j.delay())
+        .collect();
+    summarize(&d)
+}
+
+/// Percentiles of the per-job `constraint_wait` breakdown, over
+/// constrained jobs only.
+pub fn summarize_constraint_wait(jobs: &[JobRecord]) -> DelaySummary {
+    let d: Vec<f64> = jobs
+        .iter()
+        .filter(|j| j.constrained)
+        .map(|j| j.constraint_wait_s)
+        .collect();
+    summarize(&d)
+}
+
 /// Job delays as a plain vector (for CDFs / the XLA stats path).
 pub fn delays(jobs: &[JobRecord]) -> Vec<f64> {
     jobs.iter().map(|j| j.delay()).collect()
@@ -179,6 +215,8 @@ mod tests {
             ideal_jct: SimTime::from_secs(ideal),
             n_tasks: 1,
             class: JobClass::Short,
+            constrained: false,
+            constraint_wait_s: 0.0,
         }
     }
 
@@ -234,6 +272,30 @@ mod tests {
         };
         assert!((o.inconsistency_ratio() - 0.005).abs() < 1e-12);
         assert!((o.sdps() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constrained_summaries_filter() {
+        let mut jobs = vec![rec(0, 0.0, 2.0, 1.0)]; // unconstrained, delay 1
+        jobs.push(JobRecord {
+            constrained: true,
+            constraint_wait_s: 2.5,
+            ..rec(1, 0.0, 6.0, 1.0) // delay 5
+        });
+        jobs.push(JobRecord {
+            constrained: true,
+            constraint_wait_s: 0.5,
+            ..rec(2, 0.0, 4.0, 1.0) // delay 3
+        });
+        let cd = summarize_constrained(&jobs);
+        assert_eq!(cd.n, 2);
+        assert!((cd.max - 5.0).abs() < 1e-9);
+        let cw = summarize_constraint_wait(&jobs);
+        assert_eq!(cw.n, 2);
+        assert!((cw.max - 2.5).abs() < 1e-9);
+        assert!((cw.mean - 1.5).abs() < 1e-9);
+        // no constrained jobs → empty summaries
+        assert_eq!(summarize_constrained(&jobs[..1]).n, 0);
     }
 
     #[test]

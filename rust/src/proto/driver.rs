@@ -224,6 +224,8 @@ fn to_record(
         ideal_jct: j.ideal_jct(),
         n_tasks: j.n_tasks(),
         class: j.class(cfg.short_threshold),
+        constrained: j.demand.is_some(),
+        constraint_wait_s: 0.0, // prototype runs are unconstrained
     }
 }
 

@@ -8,6 +8,9 @@
 //! saturating each before moving on — §3.4.1), then *external* partitions
 //! (repartition, §3.3), stopping when tasks or capacity run out.
 
+use crate::cluster::hetero::{NodeCatalog, ResolvedDemand};
+use crate::cluster::AvailMap;
+
 /// An ordered placement plan: `(partition index, tasks allocated)`.
 pub type Plan = Vec<(usize, usize)>;
 
@@ -52,6 +55,53 @@ impl MatchPlanner for RustMatchEngine {
     fn name(&self) -> &'static str {
         "rust"
     }
+}
+
+/// Constraint-aware match: the same ordering contract as
+/// [`MatchPlanner::plan`] (internal partitions first, round-robin from
+/// `rr`, saturate-then-advance, then external partitions), but counting
+/// only free workers that *match the demand* — a word-wise AND of the
+/// GM's eventually-consistent global map with the catalog's attribute
+/// and capacity masks ([`NodeCatalog::count_matching_free`]). This is
+/// the placement the probe-based baselines structurally cannot make:
+/// it requires a (possibly stale) view of the whole DC.
+///
+/// `part_range(p)` maps a partition index to its worker range.
+pub fn constrained_plan(
+    state: &AvailMap,
+    catalog: &NodeCatalog,
+    rd: &ResolvedDemand,
+    internal: &[bool],
+    rr: usize,
+    n_tasks: usize,
+    mut part_range: impl FnMut(usize) -> (usize, usize),
+) -> Plan {
+    let p = internal.len();
+    if p == 0 || n_tasks == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut left = n_tasks;
+    for want_internal in [true, false] {
+        for off in 0..p {
+            if left == 0 {
+                break;
+            }
+            let part = (rr + off) % p;
+            if internal[part] != want_internal {
+                continue;
+            }
+            let (lo, hi) = part_range(part);
+            let avail = catalog.count_matching_free(state, lo, hi, rd);
+            if avail == 0 {
+                continue;
+            }
+            let k = left.min(avail);
+            out.push((part, k));
+            left -= k;
+        }
+    }
+    out
 }
 
 /// XLA-backed engine executing the AOT artifact. Constructed in
@@ -100,6 +150,39 @@ mod tests {
     fn zero_tasks_or_empty() {
         assert!(plan(&[1, 2], &[true, false], 0, 0).is_empty());
         assert!(plan(&[], &[], 0, 5).is_empty());
+    }
+
+    #[test]
+    fn constrained_plan_mirrors_unconstrained_contract() {
+        use crate::workload::Demand;
+        // 4 partitions x 8 workers; gpu slots striped by the catalog
+        let catalog = NodeCatalog::bimodal_gpu(32, 0.25);
+        let rd = catalog.resolve(&Demand::attrs(&["gpu"])).unwrap();
+        let state = AvailMap::all_free(32);
+        let internal = [false, true, false, true];
+        let range = |p: usize| (p * 8, p * 8 + 8);
+        let plan = constrained_plan(&state, &catalog, &rd, &internal, 2, 100, range);
+        // derive per-partition matching capacity from the catalog
+        let per_part: Vec<usize> = (0..4)
+            .map(|p| catalog.count_matching(p * 8, p * 8 + 8, &rd))
+            .collect();
+        let total: usize = per_part.iter().sum();
+        assert_eq!(plan_total(&plan), total.min(100));
+        // internal-first: partition 3 (internal) must come before any
+        // external partition that appears
+        if let (Some(int_pos), Some(ext_pos)) = (
+            plan.iter().position(|&(p, _)| internal[p]),
+            plan.iter().position(|&(p, _)| !internal[p]),
+        ) {
+            assert!(int_pos < ext_pos, "{plan:?}");
+        }
+        for &(p, k) in &plan {
+            assert!(k <= per_part[p], "{plan:?} vs {per_part:?}");
+        }
+        // an unconstrained-equivalent demand reduces to the free counts
+        let any = catalog.resolve(&Demand::new(1, vec![])).unwrap();
+        let plan2 = constrained_plan(&state, &catalog, &any, &internal, 0, 100, range);
+        assert_eq!(plan_total(&plan2), 32);
     }
 
     #[test]

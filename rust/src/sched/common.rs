@@ -84,12 +84,20 @@ impl TaskCursor {
     }
 }
 
-/// Tracks per-job task completion and builds [`JobRecord`]s.
+/// Tracks per-job task completion and builds [`JobRecord`]s. Also owns
+/// the per-job *constraint clock*: schedulers mark a job
+/// constraint-blocked when a placement fails purely because of its
+/// demand ([`constraint_block`](Self::constraint_block)) and unblock it
+/// on the next successful launch; the accumulated seconds surface as
+/// [`JobRecord::constraint_wait_s`].
 pub struct JobTracker {
     remaining: Vec<u32>,
     records: Vec<Option<JobRecord>>,
     short_threshold: SimTime,
     done: usize,
+    constrained: Vec<bool>,
+    cwait_s: Vec<f64>,
+    cblocked_since: Vec<Option<SimTime>>,
 }
 
 impl JobTracker {
@@ -99,6 +107,24 @@ impl JobTracker {
             records: vec![None; trace.jobs.len()],
             short_threshold,
             done: 0,
+            constrained: trace.jobs.iter().map(|j| j.demand.is_some()).collect(),
+            cwait_s: vec![0.0; trace.jobs.len()],
+            cblocked_since: vec![None; trace.jobs.len()],
+        }
+    }
+
+    /// Start (idempotently) the job's constraint-blocked interval.
+    pub fn constraint_block(&mut self, job_idx: usize, now: SimTime) {
+        if self.cblocked_since[job_idx].is_none() {
+            self.cblocked_since[job_idx] = Some(now);
+        }
+    }
+
+    /// Close the job's constraint-blocked interval, accruing its length.
+    /// No-op when the job is not blocked.
+    pub fn constraint_unblock(&mut self, job_idx: usize, now: SimTime) {
+        if let Some(t0) = self.cblocked_since[job_idx].take() {
+            self.cwait_s[job_idx] += now.saturating_sub(t0).as_secs();
         }
     }
 
@@ -107,6 +133,8 @@ impl JobTracker {
         debug_assert!(self.remaining[job_idx] > 0, "job {job_idx} over-completed");
         self.remaining[job_idx] -= 1;
         if self.remaining[job_idx] == 0 {
+            // a still-open constraint interval ends at completion
+            self.constraint_unblock(job_idx, now);
             let j = &trace.jobs[job_idx];
             self.records[job_idx] = Some(JobRecord {
                 job_id: j.id,
@@ -115,6 +143,8 @@ impl JobTracker {
                 ideal_jct: j.ideal_jct(),
                 n_tasks: j.n_tasks(),
                 class: j.class(self.short_threshold),
+                constrained: self.constrained[job_idx],
+                constraint_wait_s: self.cwait_s[job_idx],
             });
             self.done += 1;
             true
@@ -169,6 +199,30 @@ mod tests {
         let out = t.into_outcome(SimTime::from_secs(4.0));
         assert_eq!(out.jobs.len(), 2);
         assert_eq!(out.jobs[0].complete, SimTime::from_secs(2.0));
+    }
+
+    #[test]
+    fn constraint_clock_accrues_blocked_intervals() {
+        use crate::workload::{Demand, Job, Trace};
+        let trace = Trace::new(
+            "c",
+            vec![Job::new(0, SimTime::ZERO, vec![SimTime::from_secs(1.0); 2])
+                .with_demand(Demand::attrs(&["gpu"]))],
+        );
+        let mut t = JobTracker::new(&trace, SimTime::from_secs(90.0));
+        // blocked [1, 3), double-block is idempotent
+        t.constraint_block(0, SimTime::from_secs(1.0));
+        t.constraint_block(0, SimTime::from_secs(2.0));
+        t.constraint_unblock(0, SimTime::from_secs(3.0));
+        // unblock without a block is a no-op
+        t.constraint_unblock(0, SimTime::from_secs(4.0));
+        // an open interval [5, 6) is closed by completion
+        t.constraint_block(0, SimTime::from_secs(5.0));
+        t.task_done(&trace, 0, SimTime::from_secs(5.5));
+        assert!(t.task_done(&trace, 0, SimTime::from_secs(6.0)));
+        let out = t.into_outcome(SimTime::from_secs(6.0));
+        assert!(out.jobs[0].constrained);
+        assert!((out.jobs[0].constraint_wait_s - 3.0).abs() < 1e-9);
     }
 
     #[test]

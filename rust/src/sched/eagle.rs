@@ -23,6 +23,7 @@
 
 use std::collections::VecDeque;
 
+use crate::cluster::hetero::{self, ResolvedDemand};
 use crate::cluster::AvailMap;
 use crate::config::EagleConfig;
 use crate::metrics::RunOutcome;
@@ -68,38 +69,80 @@ pub struct Eagle<'a> {
     /// authoritative "currently executing a long task" set (for SSS
     /// replies); bit set = long-busy
     long_busy: AvailMap,
+    /// Per-job demands resolved against `cfg.catalog` at setup. Short
+    /// jobs verify them only at probed nodes (blind sampling, as in
+    /// Sparrow); the *centralized* long-job scheduler places
+    /// constraint-aware against its own (possibly stale) view — the one
+    /// place Eagle's architecture can exploit a catalog.
+    demands: Vec<Option<ResolvedDemand>>,
 }
 
 impl<'a> Eagle<'a> {
     pub fn new(cfg: &'a EagleConfig, trace: &Trace) -> Eagle<'a> {
         let n_workers = cfg.workers;
+        assert_eq!(
+            cfg.catalog.len(),
+            n_workers,
+            "catalog covers {} slots but the DC has {} workers",
+            cfg.catalog.len(),
+            n_workers
+        );
         let short_cut = ((n_workers as f64) * cfg.short_partition_frac) as usize;
         let mut central_free = AvailMap::all_free(n_workers);
         for w in 0..short_cut {
             central_free.set_busy(w); // short partition is off-limits for long
+        }
+        let classes: Vec<JobClass> = trace
+            .jobs
+            .iter()
+            .map(|j| j.class(cfg.sim.short_threshold))
+            .collect();
+        let demands = hetero::resolve_trace(&cfg.catalog, trace);
+        // strict feasibility: a constrained long job must be satisfiable
+        // inside the long partition, or its FIFO queue would deadlock
+        for (i, rd) in demands.iter().enumerate() {
+            if let (Some(rd), JobClass::Long) = (rd, classes[i]) {
+                assert!(
+                    cfg.catalog.count_matching(short_cut, n_workers, rd) > 0,
+                    "job {i}: demand matches nothing in Eagle's long partition"
+                );
+            }
         }
         Eagle {
             cfg,
             short_cut,
             workers: ProbeWorker::fleet(n_workers),
             jobs: TaskCursor::for_trace(trace),
-            classes: trace
-                .jobs
-                .iter()
-                .map(|j| j.class(cfg.sim.short_threshold))
-                .collect(),
+            classes,
             central_free,
             long_q: VecDeque::new(),
             long_busy: AvailMap::all_busy(n_workers),
+            demands,
         }
     }
 
     fn drain_long(&mut self, ctx: &mut SimCtx<'_, Ev>) {
-        while !self.long_q.is_empty() {
-            let Some(w) = self.central_free.pop_free_in(0, self.central_free.len()) else {
+        while let Some(&(job, dur)) = self.long_q.front() {
+            let rd = self.demands[job as usize].as_ref();
+            let len = self.central_free.len();
+            let w = match rd {
+                None => self.central_free.pop_free_in(0, len),
+                // centralized: the long-job scheduler owns a global view
+                // and may match constraints against it directly
+                Some(rd) => self.cfg.catalog.pop_matching_free(&mut self.central_free, 0, len, rd),
+            };
+            let Some(w) = w else {
+                if rd.is_some() && self.central_free.free_count() > 0 {
+                    // free long-partition capacity exists, none matches
+                    ctx.out.constraint_rejections += 1;
+                    ctx.constraint_block(job);
+                }
                 break;
             };
-            let (job, dur) = self.long_q.pop_front().unwrap();
+            self.long_q.pop_front();
+            if rd.is_some() {
+                ctx.constraint_unblock(job);
+            }
             ctx.out.decisions += 1;
             ctx.send(Ev::LongPlace {
                 worker: w as u32,
@@ -197,9 +240,31 @@ impl Scheduler for Eagle<'_> {
             }
             Ev::Ready { job, worker } => {
                 ctx.out.messages += 1;
+                if let Some(rd) = &self.demands[job as usize] {
+                    // a fully-bound job's leftover reservations are NOT
+                    // constraint misses — they fall through to the normal
+                    // proactive-cancellation no-op below
+                    if !self.jobs[job as usize].exhausted()
+                        && !self.cfg.catalog.slot_matches(worker as usize, rd)
+                    {
+                        // constraint verified at the probed node — and
+                        // failed: no-op the worker, re-probe blind (as in
+                        // Sparrow; SSS only tracks long-occupancy, not
+                        // attributes)
+                        ctx.out.constraint_rejections += 1;
+                        ctx.constraint_block(job);
+                        ctx.send(Ev::Launch { worker, job, dur: None });
+                        let w = ctx.rng.below(self.cfg.workers) as u32;
+                        ctx.send(Ev::Probe { worker: w, job, retry: 0 });
+                        return;
+                    }
+                }
                 let dur = match self.jobs[job as usize].bind_next(&ctx.trace.jobs[job as usize]) {
                     Some((_, dur)) => {
                         ctx.out.decisions += 1;
+                        if self.demands[job as usize].is_some() {
+                            ctx.constraint_unblock(job);
+                        }
                         Some(dur)
                     }
                     None => None,
@@ -251,10 +316,15 @@ impl Scheduler for Eagle<'_> {
                     self.long_busy.set_busy(worker as usize);
                     advance_worker(worker, &mut self.workers, ctx);
                 } else {
-                    // sticky batch probing: same job first
+                    // sticky batch probing: same job first (the worker
+                    // just ran a task of this job, so it matches any
+                    // demand the job carries — no re-verification)
                     match self.jobs[job as usize].bind_next(&ctx.trace.jobs[job as usize]) {
                         Some((_, dur)) => {
                             ctx.out.decisions += 1;
+                            if self.demands[job as usize].is_some() {
+                                ctx.constraint_unblock(job);
+                            }
                             self.workers[worker as usize].state = WState::Busy { long: false };
                             ctx.out.tasks += 1;
                             ctx.push_after(dur, Ev::Finish {
@@ -368,6 +438,33 @@ mod tests {
                 l.median
             );
         }
+    }
+
+    #[test]
+    fn constrained_short_and_long_jobs_complete() {
+        use crate::cluster::NodeCatalog;
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        // short constrained jobs: blind probes + verify-at-node
+        let mut cfg = EagleConfig::for_workers(320);
+        cfg.sim.seed = 13;
+        cfg.catalog = NodeCatalog::bimodal_gpu(320, 0.125);
+        let trace =
+            synthetic_fixed_constrained(15, 30, 1.0, 0.6, 320, 14, 0.3, Demand::attrs(&["gpu"]));
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 30);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+        assert!(out.constraint_rejections > 0, "no probe ever missed");
+        // long constrained jobs: the central scheduler places them
+        // constraint-aware inside the long partition
+        let mut cfg2 = EagleConfig::for_workers(320);
+        cfg2.sim.seed = 15;
+        cfg2.sim.short_threshold = SimTime::from_secs(0.5); // everything long
+        cfg2.catalog = NodeCatalog::bimodal_gpu(320, 0.125);
+        let trace2 =
+            synthetic_fixed_constrained(10, 15, 2.0, 0.5, 320, 16, 0.3, Demand::attrs(&["gpu"]));
+        let out2 = simulate(&cfg2, &trace2);
+        assert_eq!(out2.jobs.len(), 15);
     }
 
     #[test]

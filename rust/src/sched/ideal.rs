@@ -18,6 +18,8 @@ pub fn simulate(params: &SimParams, trace: &Trace) -> RunOutcome {
             ideal_jct: j.ideal_jct(),
             n_tasks: j.n_tasks(),
             class: j.class(params.short_threshold),
+            constrained: j.demand.is_some(),
+            constraint_wait_s: 0.0, // omniscient placement never waits
         })
         .collect();
     let makespan = jobs

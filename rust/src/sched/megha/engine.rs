@@ -4,10 +4,11 @@
 use std::collections::VecDeque;
 use std::rc::Rc;
 
+use crate::cluster::hetero::{self, NodeCatalog, ResolvedDemand};
 use crate::cluster::{AvailMap, ClusterSpec, PartitionId, WorkerId};
 use crate::config::MeghaConfig;
 use crate::metrics::RunOutcome;
-use crate::runtime::match_engine::{MatchPlanner, RustMatchEngine};
+use crate::runtime::match_engine::{constrained_plan, MatchPlanner, RustMatchEngine};
 use crate::sim::driver::{self, Scheduler, SimCtx};
 use crate::sim::time::SimTime;
 use crate::workload::Trace;
@@ -214,6 +215,9 @@ pub struct MeghaSim<'a> {
     gms: Vec<Gm>,
     lms: Vec<Lm>,
     jobs: Vec<JobState>,
+    /// Per-job demands resolved against `cfg.catalog` at setup (strict;
+    /// `None` = unconstrained, taking the exact pre-hetero code path).
+    demands: Vec<Option<ResolvedDemand>>,
     /// Per-LM batch scratch reused across `try_schedule` calls.
     batches: Vec<Vec<Mapping>>,
     /// Allow the masked snapshot-apply fast path (default). Tests turn
@@ -235,6 +239,14 @@ impl<'a> MeghaSim<'a> {
         let n_part = spec.n_partitions();
         let wpp = spec.workers_per_partition;
         let n_workers = spec.n_workers();
+        assert_eq!(
+            cfg.catalog.len(),
+            n_workers,
+            "catalog covers {} slots but the DC has {} workers",
+            cfg.catalog.len(),
+            n_workers
+        );
+        let demands = hetero::resolve_trace(&cfg.catalog, trace);
         MeghaSim {
             cfg,
             spec,
@@ -285,6 +297,7 @@ impl<'a> MeghaSim<'a> {
                     enq: j.submit,
                 })
                 .collect(),
+            demands,
             batches: vec![Vec::new(); n_lm],
             masked_applies: true,
         }
@@ -325,6 +338,8 @@ impl Scheduler for MeghaSim<'_> {
             gm_id,
             &mut self.gms[gm_id],
             &mut self.jobs,
+            &self.demands,
+            &self.cfg.catalog,
             &mut self.batches,
             &self.spec,
             self.cfg,
@@ -387,6 +402,8 @@ impl Scheduler for MeghaSim<'_> {
                     gm_id,
                     &mut self.gms[gm_id],
                     &mut self.jobs,
+                    &self.demands,
+                    &self.cfg.catalog,
                     &mut self.batches,
                     &self.spec,
                     self.cfg,
@@ -420,6 +437,8 @@ impl Scheduler for MeghaSim<'_> {
                     gm_id,
                     &mut self.gms[gm_id],
                     &mut self.jobs,
+                    &self.demands,
+                    &self.cfg.catalog,
                     &mut self.batches,
                     &self.spec,
                     self.cfg,
@@ -440,6 +459,8 @@ impl Scheduler for MeghaSim<'_> {
                     gm_id,
                     &mut self.gms[gm_id],
                     &mut self.jobs,
+                    &self.demands,
+                    &self.cfg.catalog,
                     &mut self.batches,
                     &self.spec,
                     self.cfg,
@@ -471,6 +492,8 @@ impl Scheduler for MeghaSim<'_> {
                     gm_id,
                     &mut self.gms[gm_id],
                     &mut self.jobs,
+                    &self.demands,
+                    &self.cfg.catalog,
                     &mut self.batches,
                     &self.spec,
                     self.cfg,
@@ -483,17 +506,17 @@ impl Scheduler for MeghaSim<'_> {
                 // the global view entirely. Heartbeats rebuild it; pending
                 // jobs are preserved in the durable job store. The view no
                 // longer matches any applied snapshot, so masked applies
-                // are off until each LM's next full apply.
-                //
-                // Known modeling gap (pre-dates this refactor, preserved
-                // for bit-identity): `applied` versions are kept, so a
-                // *quiescent* LM — one whose state never changes again —
-                // keeps being version-skipped and its range stays all-busy
-                // at this GM forever. Real Megha would rebuild from the
-                // first post-restart heartbeat. Tracked in ROADMAP.md.
+                // are off until each LM's next full apply, and the per-LM
+                // `applied` versions reset to the sentinel: a restarted GM
+                // has applied *nothing*, so even a quiescent LM's next
+                // heartbeat (same version as before the crash) must be
+                // applied, not version-skipped. (This was the pre-PR-3
+                // modeling bug tracked in ROADMAP.md: keeping `applied`
+                // left a never-changing LM's range all-busy forever.)
                 let gm_id = gm as usize;
                 self.gms[gm_id].state = AvailMap::all_busy(self.spec.n_workers());
                 self.gms[gm_id].counts.iter_mut().for_each(|c| *c = 0);
+                self.gms[gm_id].applied.iter_mut().for_each(|a| *a = u64::MAX);
                 self.gms[gm_id].touched.iter_mut().for_each(|t| *t = true);
             }
         }
@@ -547,14 +570,19 @@ fn apply_snapshot(gm: &mut Gm, snap: &Snapshot, spec: &ClusterSpec, allow_masked
 
 /// The GM scheduling loop: process the job queue FIFO while the global
 /// state shows capacity (§3.2). One `planner.plan` call per job batch —
-/// this is the hot path the XLA engine accelerates. `batches` is the
-/// caller's per-LM scratch (cleared on use); outgoing `LmVerify`
-/// payloads come from the driver's buffer pool.
+/// this is the hot path the XLA engine accelerates. Constrained jobs
+/// instead match against the masked global map
+/// ([`constrained_plan`]) — the placement only a (stale) *global* view
+/// can make. `batches` is the caller's per-LM scratch (cleared on
+/// use); outgoing `LmVerify` payloads come from the driver's buffer
+/// pool.
 #[allow(clippy::too_many_arguments)]
 fn try_schedule(
     gm_id: usize,
     gm: &mut Gm,
     jobs: &mut [JobState],
+    demands: &[Option<ResolvedDemand>],
+    catalog: &NodeCatalog,
     batches: &mut [Vec<Mapping>],
     spec: &ClusterSpec,
     cfg: &MeghaConfig,
@@ -578,8 +606,29 @@ fn try_schedule(
 
         // ---- the match operation (L1/L2 hot-spot) ----
         // free counts are maintained incrementally in gm.counts (§Perf)
-        let plan = planner.plan(&gm.counts, &gm.internal, gm.rr, js.pending.len());
+        let rd = demands[jidx as usize].as_ref();
+        let plan = match rd {
+            None => planner.plan(&gm.counts, &gm.internal, gm.rr, js.pending.len()),
+            Some(rd) => constrained_plan(
+                &gm.state,
+                catalog,
+                rd,
+                &gm.internal,
+                gm.rr,
+                js.pending.len(),
+                |p| {
+                    let r = spec.worker_range(PartitionId(p as u32));
+                    (r.start as usize, r.end as usize)
+                },
+            ),
+        };
         if plan.is_empty() {
+            if rd.is_some() {
+                // capacity is visible (free_count > 0 above) but none
+                // of it matches the demand: constraint-blocked
+                ctx.out.constraint_rejections += 1;
+                ctx.constraint_block(jidx);
+            }
             break;
         }
 
@@ -595,14 +644,20 @@ fn try_schedule(
             gm.touched[lm] = true; // speculative claims below
             for _ in 0..k {
                 // rotated first-free scan: each GM starts at a different
-                // slot so GMs pick different workers (§3.3 shuffle)
+                // slot so GMs pick different workers (§3.3 shuffle);
+                // constrained claims additionally AND the demand masks
                 let (lo, hi) = (r.start as usize, r.end as usize);
                 let start = lo + gm.scan_rot % (hi - lo);
-                let w = gm
-                    .state
-                    .pop_free_in(start, hi)
-                    .or_else(|| gm.state.pop_free_in(lo, start))
-                    .expect("plan promised a free worker");
+                let w = match rd {
+                    None => gm
+                        .state
+                        .pop_free_in(start, hi)
+                        .or_else(|| gm.state.pop_free_in(lo, start)),
+                    Some(rd) => catalog
+                        .pop_matching_free(&mut gm.state, start, hi, rd)
+                        .or_else(|| catalog.pop_matching_free(&mut gm.state, lo, start, rd)),
+                }
+                .expect("plan promised a free worker");
                 gm.counts[part] -= 1;
                 let task = js.pending.pop_front().expect("plan larger than job");
                 ctx.out.decisions += 1;
@@ -615,6 +670,11 @@ fn try_schedule(
             }
         }
         gm.rr = (last_part + 1) % n_part;
+        if rd.is_some() {
+            // the plan placed at least one task: close any open
+            // constraint-blocked interval
+            ctx.constraint_unblock(jidx);
+        }
 
         for (lm, batch) in batches.iter_mut().enumerate() {
             if batch.is_empty() {
@@ -719,6 +779,104 @@ mod tests {
         assert_eq!(
             summarize_jobs(&a.jobs).p95,
             summarize_jobs(&b.jobs).p95
+        );
+    }
+
+    #[test]
+    fn constrained_jobs_complete_on_matching_capacity() {
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        let mut cfg = small_cfg(300, 21);
+        let n = cfg.spec.n_workers();
+        cfg.catalog = NodeCatalog::bimodal_gpu(n, 0.25);
+        let trace =
+            synthetic_fixed_constrained(20, 30, 1.0, 0.6, n, 22, 0.3, Demand::attrs(&["gpu"]));
+        assert!(trace.jobs.iter().any(|j| j.demand.is_some()));
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 30);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+        for (r, j) in out.jobs.iter().zip(trace.jobs.iter()) {
+            assert_eq!(r.constrained, j.demand.is_some());
+            if !r.constrained {
+                assert_eq!(r.constraint_wait_s, 0.0);
+            }
+        }
+        // capacity-class demands (big nodes) work too
+        let trace2 =
+            synthetic_fixed_constrained(10, 20, 1.0, 0.5, n, 23, 0.3, Demand::new(2, vec![]));
+        let out2 = simulate(&cfg, &trace2);
+        assert_eq!(out2.jobs.len(), 20);
+    }
+
+    #[test]
+    fn scarce_constraints_induce_constraint_wait() {
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        // gpu capacity ~6%, constrained work far above it: constrained
+        // jobs must queue on the scarce slots and the breakdown must
+        // attribute that wait to constraints
+        let mut cfg = small_cfg(300, 31);
+        let n = cfg.spec.n_workers();
+        cfg.catalog = NodeCatalog::bimodal_gpu(n, 0.0625);
+        let trace =
+            synthetic_fixed_constrained(30, 40, 1.0, 0.9, n, 32, 0.4, Demand::attrs(&["gpu"]));
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 40);
+        assert!(out.constraint_rejections > 0, "no rejections recorded");
+        let cw = crate::metrics::summarize_constraint_wait(&out.jobs);
+        assert!(cw.n > 0 && cw.max > 0.0, "constraint_wait never accrued");
+    }
+
+    #[test]
+    fn uniform_catalog_is_bit_identical_to_default() {
+        // the bit-identity contract at the engine level: an explicitly
+        // built uniform catalog changes nothing
+        let cfg_a = small_cfg(300, 9);
+        let mut cfg_b = small_cfg(300, 9);
+        cfg_b.catalog = NodeCatalog::profile("uniform", cfg_b.spec.n_workers(), 0.5).unwrap();
+        let trace = yahoo_like(60, cfg_a.spec.n_workers(), 0.8, 10);
+        let a = simulate(&cfg_a, &trace);
+        let b = simulate(&cfg_b, &trace);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.inconsistencies, b.inconsistencies);
+    }
+
+    #[test]
+    fn gm_failure_rebuilds_view_of_quiescent_lms() {
+        use crate::workload::Job;
+        // Regression for the pre-PR-3 modeling bug (ROADMAP): after
+        // GmFail the GM kept its per-LM `applied` versions, so a
+        // *quiescent* LM — one whose state never changes after the
+        // crash — was version-skipped forever and its range stayed
+        // all-busy at the failed GM. A job arriving after the failure
+        // then never scheduled (this test would hang). With `applied`
+        // reset to the sentinel, the first post-failure heartbeat
+        // rebuilds the range.
+        let mut cfg = small_cfg(90, 17);
+        cfg.heartbeat = SimTime::from_secs(1.0);
+        let mut jobs: Vec<Job> = (0..3)
+            .map(|i| Job::new(i, SimTime::ZERO, vec![SimTime::from_secs(1.0); 5]))
+            .collect();
+        // job index 3 → GM 0 (3 % n_gm == 0), arriving well after the
+        // failure, once every LM is quiescent again
+        jobs.push(Job::new(3, SimTime::from_secs(8.0), vec![SimTime::from_secs(1.0); 5]));
+        let trace = Trace::new("quiesce", jobs);
+        let out = simulate_with(
+            &cfg,
+            &trace,
+            &mut RustMatchEngine,
+            Some(FailurePlan {
+                at: SimTime::from_secs(4.5),
+                gm: 0,
+            }),
+        );
+        assert_eq!(out.jobs.len(), 4);
+        let late = out.jobs.iter().find(|r| r.job_id == 3).unwrap();
+        assert!(
+            late.delay() < 3.0,
+            "post-failure job stalled {}s on a stale-busy range",
+            late.delay()
         );
     }
 

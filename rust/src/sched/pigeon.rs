@@ -18,10 +18,20 @@
 //! they can never migrate, so a hot group queues tasks while other
 //! groups idle.
 //!
+//! Heterogeneity: group `g` owns the global worker slots
+//! `[g·per_group, (g+1)·per_group)` (general slots first, reserved
+//! after). Distributors know the *static* catalog, so constrained tasks
+//! are split evenly over the groups that contain matching nodes — but
+//! inside a group the constraint is verified against live state only:
+//! a queued constrained task is passed over whenever the freed worker
+//! does not match it, and (the Megha asymmetry again) it can never
+//! migrate to another group where matching capacity idles.
+//!
 //! Runs on the shared [`crate::sim::driver`].
 
 use std::collections::VecDeque;
 
+use crate::cluster::hetero::{self, NodeCatalog, ResolvedDemand};
 use crate::cluster::AvailMap;
 use crate::config::PigeonConfig;
 use crate::metrics::RunOutcome;
@@ -49,19 +59,64 @@ struct Group {
 
 pub struct Pigeon<'a> {
     cfg: &'a PigeonConfig,
+    per_group: usize,
     general_per_group: usize,
     groups: Vec<Group>,
+    /// Per-job demands resolved against `cfg.catalog` at setup.
+    demands: Vec<Option<ResolvedDemand>>,
+    /// For each constrained job: the groups holding at least one
+    /// matching slot it may use (distributors know the static catalog).
+    /// `None` for unconstrained jobs — those split over all groups.
+    eligible: Vec<Option<Vec<u32>>>,
+    /// `0..n_groups`, the unconstrained split target list.
+    all_groups: Vec<u32>,
 }
 
 impl<'a> Pigeon<'a> {
-    pub fn new(cfg: &'a PigeonConfig) -> Pigeon<'a> {
+    pub fn new(cfg: &'a PigeonConfig, trace: &Trace) -> Pigeon<'a> {
         let n_groups = cfg.n_groups;
         let per_group = cfg.workers / n_groups;
         assert!(per_group >= 1, "more groups than workers");
+        assert_eq!(
+            cfg.catalog.len(),
+            cfg.workers,
+            "catalog covers {} slots but the DC has {} workers",
+            cfg.catalog.len(),
+            cfg.workers
+        );
         let reserved_per_group = ((per_group as f64) * cfg.reserved_frac).round() as usize;
         let general_per_group = per_group - reserved_per_group;
+        let demands = hetero::resolve_trace(&cfg.catalog, trace);
+        let eligible: Vec<Option<Vec<u32>>> = demands
+            .iter()
+            .enumerate()
+            .map(|(i, rd)| {
+                rd.as_ref().map(|rd| {
+                    let high = trace.jobs[i].class(cfg.sim.short_threshold) == JobClass::Short;
+                    let gs: Vec<u32> = (0..n_groups)
+                        .filter(|&g| {
+                            let base = g * per_group;
+                            let gen_hi = base + general_per_group;
+                            let in_general = cfg.catalog.count_matching(base, gen_hi, rd) > 0;
+                            // reserved slots serve high-priority only
+                            let in_reserved = high
+                                && cfg.catalog.count_matching(gen_hi, base + per_group, rd) > 0;
+                            in_general || in_reserved
+                        })
+                        .map(|g| g as u32)
+                        .collect();
+                    assert!(
+                        !gs.is_empty(),
+                        "job {i}: demand matches no pigeon group (catalog too scarce \
+                         for this group layout)"
+                    );
+                    gs
+                })
+            })
+            .collect();
         Pigeon {
             cfg,
+            per_group,
             general_per_group,
             groups: (0..n_groups)
                 .map(|_| Group {
@@ -72,8 +127,59 @@ impl<'a> Pigeon<'a> {
                     hi_streak: 0,
                 })
                 .collect(),
+            demands,
+            eligible,
+            all_groups: (0..n_groups as u32).collect(),
         }
     }
+}
+
+/// First-fit over a group-local free map with live constraint
+/// verification: the first free slot whose *global* id (`base` +
+/// local index) matches the demand, claimed. Unconstrained claims take
+/// the word-scan fast path (bit-identical to the pre-hetero code).
+fn claim(
+    map: &mut AvailMap,
+    catalog: &NodeCatalog,
+    rd: Option<&ResolvedDemand>,
+    base: usize,
+) -> Option<usize> {
+    match rd {
+        None => map.pop_free_in(0, map.len()),
+        Some(rd) => {
+            // group-local maps are not word-aligned with the global
+            // catalog, so verify per free slot (groups are small)
+            let found = map.iter_free().find(|&w| catalog.slot_matches(base + w, rd));
+            if let Some(w) = found {
+                map.set_busy(w);
+            }
+            found
+        }
+    }
+}
+
+/// Remove the first queued task the freed worker can serve; jobs passed
+/// over (their demand does not match this worker) are collected into
+/// `skipped` for constraint accounting. Equivalent to `pop_front` when
+/// nothing is constrained.
+fn pop_first_matching(
+    q: &mut VecDeque<(u32, SimTime)>,
+    demands: &[Option<ResolvedDemand>],
+    catalog: &NodeCatalog,
+    gw: usize,
+    skipped: &mut Vec<u32>,
+) -> Option<(u32, SimTime)> {
+    let idx = q.iter().position(|&(job, _)| {
+        demands[job as usize]
+            .as_ref()
+            .is_none_or(|rd| catalog.slot_matches(gw, rd))
+    });
+    let scanned = idx.unwrap_or(q.len());
+    for &(job, _) in q.iter().take(scanned) {
+        // only constrained entries can fail the match above
+        skipped.push(job);
+    }
+    q.remove(idx?)
 }
 
 impl Scheduler for Pigeon<'_> {
@@ -84,24 +190,29 @@ impl Scheduler for Pigeon<'_> {
     }
 
     fn on_arrival(&mut self, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
-        let n_groups = self.cfg.n_groups;
         let job = &ctx.trace.jobs[jidx as usize];
         let high = job.class(self.cfg.sim.short_threshold) == JobClass::Short;
-        // split evenly over all coordinators, rotating the start
-        // group so remainders spread uniformly: group g gets tasks
-        // t ≡ g − start (mod n_groups), in task order, with a pooled
-        // payload vector per non-empty slice
-        let start = jidx as usize % n_groups;
+        // split evenly over the eligible coordinators (all of them for
+        // unconstrained jobs; the matching groups for constrained ones),
+        // rotating the start so remainders spread uniformly: target i
+        // gets tasks t ≡ i − start (mod n_targets), in task order, with
+        // a pooled payload vector per non-empty slice
         let n_tasks = job.durations.len();
-        for g in 0..n_groups {
-            let first = (g + n_groups - start) % n_groups;
+        let targets: &[u32] = match &self.eligible[jidx as usize] {
+            None => &self.all_groups,
+            Some(gs) => gs,
+        };
+        let n_targets = targets.len();
+        let start = jidx as usize % n_targets;
+        for (i, &g) in targets.iter().enumerate() {
+            let first = (i + n_targets - start) % n_targets;
             if first >= n_tasks {
                 continue;
             }
             let mut durs: Vec<SimTime> = ctx.pool.take();
-            durs.extend(job.durations[first..].iter().step_by(n_groups).copied());
+            durs.extend(job.durations[first..].iter().step_by(n_targets).copied());
             ctx.send(Ev::CoordRecv {
-                group: g as u32,
+                group: g,
                 job: jidx,
                 durs,
                 high,
@@ -112,22 +223,56 @@ impl Scheduler for Pigeon<'_> {
     fn on_event(&mut self, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
         match ev {
             Ev::CoordRecv { group, job, mut durs, high } => {
-                let general_per_group = self.general_per_group;
-                let g = &mut self.groups[group as usize];
+                let Pigeon {
+                    cfg,
+                    per_group,
+                    general_per_group,
+                    groups,
+                    demands,
+                    ..
+                } = self;
+                let (per_group, general_per_group) = (*per_group, *general_per_group);
+                let catalog = &cfg.catalog;
+                let rd = demands[job as usize].as_ref();
+                let base = group as usize * per_group;
+                let g = &mut groups[group as usize];
                 for dur in durs.drain(..) {
                     if high {
                         // general pool first, then the reserved pool
-                        if let Some(w) = g.general.pop_free_in(0, g.general.len()) {
+                        if let Some(w) = claim(&mut g.general, catalog, rd, base) {
+                            if rd.is_some() {
+                                ctx.constraint_unblock(job);
+                            }
                             launch(ctx, group, w as u32, job, dur);
-                        } else if let Some(w) = g.reserved.pop_free_in(0, g.reserved.len()) {
+                        } else if let Some(w) =
+                            claim(&mut g.reserved, catalog, rd, base + general_per_group)
+                        {
+                            if rd.is_some() {
+                                ctx.constraint_unblock(job);
+                            }
                             let w = (general_per_group + w) as u32;
                             launch(ctx, group, w, job, dur);
                         } else {
+                            if rd.is_some()
+                                && (g.general.free_count() > 0 || g.reserved.free_count() > 0)
+                            {
+                                // free workers exist in the group but
+                                // none matches: constraint-caused queuing
+                                ctx.out.constraint_rejections += 1;
+                                ctx.constraint_block(job);
+                            }
                             g.hi_q.push_back((job, dur));
                         }
-                    } else if let Some(w) = g.general.pop_free_in(0, g.general.len()) {
+                    } else if let Some(w) = claim(&mut g.general, catalog, rd, base) {
+                        if rd.is_some() {
+                            ctx.constraint_unblock(job);
+                        }
                         launch(ctx, group, w as u32, job, dur);
                     } else {
+                        if rd.is_some() && g.general.free_count() > 0 {
+                            ctx.out.constraint_rejections += 1;
+                            ctx.constraint_block(job);
+                        }
                         g.lo_q.push_back((job, dur));
                     }
                 }
@@ -137,26 +282,67 @@ impl Scheduler for Pigeon<'_> {
                 let d = ctx.net_delay();
                 ctx.out.breakdown.comm_s += d.as_secs();
                 ctx.push_after(d, Ev::Done { job });
-                let general_per_group = self.general_per_group;
-                let g = &mut self.groups[group as usize];
+                let Pigeon {
+                    cfg,
+                    per_group,
+                    general_per_group,
+                    groups,
+                    demands,
+                    ..
+                } = self;
+                let (per_group, general_per_group) = (*per_group, *general_per_group);
+                let catalog = &cfg.catalog;
+                let g = &mut groups[group as usize];
                 let w = worker as usize;
+                let gw = group as usize * per_group + w;
                 let is_reserved = w >= general_per_group;
-                // weighted fair dequeue for the freed worker
+                // weighted fair dequeue for the freed worker, skipping
+                // queued tasks whose demand this worker cannot serve
+                // (reduces to plain pop_front when nothing is constrained)
+                let mut skipped: Vec<u32> = Vec::new();
                 let next = if is_reserved {
-                    g.hi_q.pop_front()
-                } else if !g.lo_q.is_empty()
-                    && (g.hi_streak >= self.cfg.wfq_weight || g.hi_q.is_empty())
-                {
-                    g.hi_streak = 0;
-                    g.lo_q.pop_front()
-                } else if let Some(t) = g.hi_q.pop_front() {
-                    g.hi_streak += 1;
-                    Some(t)
+                    pop_first_matching(&mut g.hi_q, demands, catalog, gw, &mut skipped)
                 } else {
-                    g.lo_q.pop_front()
+                    let prefer_lo = !g.lo_q.is_empty()
+                        && (g.hi_streak >= cfg.wfq_weight || g.hi_q.is_empty());
+                    let (first, second) = if prefer_lo {
+                        (&mut g.lo_q, &mut g.hi_q)
+                    } else {
+                        (&mut g.hi_q, &mut g.lo_q)
+                    };
+                    // `first` may be non-empty yet hold nothing this
+                    // worker matches; fall through to the other queue
+                    if let Some(t) = pop_first_matching(first, demands, catalog, gw, &mut skipped)
+                    {
+                        if prefer_lo {
+                            g.hi_streak = 0;
+                        } else {
+                            g.hi_streak += 1;
+                        }
+                        Some(t)
+                    } else if let Some(t) =
+                        pop_first_matching(second, demands, catalog, gw, &mut skipped)
+                    {
+                        if prefer_lo {
+                            g.hi_streak += 1;
+                        } else {
+                            g.hi_streak = 0;
+                        }
+                        Some(t)
+                    } else {
+                        None
+                    }
                 };
+                for job in skipped {
+                    // a free worker was passed over purely on constraints
+                    ctx.out.constraint_rejections += 1;
+                    ctx.constraint_block(job);
+                }
                 match next {
                     Some((job, dur)) => {
+                        if demands[job as usize].is_some() {
+                            ctx.constraint_unblock(job);
+                        }
                         launch(ctx, group, worker, job, dur);
                     }
                     None => {
@@ -177,7 +363,7 @@ impl Scheduler for Pigeon<'_> {
 }
 
 pub fn simulate(cfg: &PigeonConfig, trace: &Trace) -> RunOutcome {
-    let mut sched = Pigeon::new(cfg);
+    let mut sched = Pigeon::new(cfg, trace);
     driver::run(&mut sched, &cfg.sim, trace)
 }
 
@@ -256,6 +442,25 @@ mod tests {
         let trace = crate::workload::Trace::new("starve", jobs);
         let outc = simulate(&cfg, &trace);
         assert_eq!(outc.jobs.len(), 200); // the long job completed too
+    }
+
+    #[test]
+    fn constrained_tasks_stay_in_matching_groups_and_complete() {
+        use crate::cluster::NodeCatalog;
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        let mut cfg = PigeonConfig::for_workers(300);
+        cfg.sim.seed = 11;
+        cfg.catalog = NodeCatalog::bimodal_gpu(300, 0.125);
+        let trace =
+            synthetic_fixed_constrained(30, 40, 1.0, 0.85, 300, 12, 0.3, Demand::attrs(&["gpu"]));
+        assert!(trace.jobs.iter().any(|j| j.demand.is_some()));
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 40);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+        // at 85% load with 12.5% matching slots, some constrained task
+        // must have queued past a free-but-unmatching worker
+        assert!(out.constraint_rejections > 0, "no constraint event recorded");
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! Runs on the shared [`crate::sim::driver`]; worker state and the
 //! late-binding cursor come from [`crate::sched::common`].
 
+use crate::cluster::hetero::{self, ResolvedDemand};
 use crate::config::SparrowConfig;
 use crate::metrics::RunOutcome;
 use crate::sched::common::{ProbeWorker, TaskCursor, WState};
@@ -34,18 +35,35 @@ pub enum Ev {
 
 /// Sparrow's simulation state: a fleet of probe workers (reservation
 /// payload = job index) and one late-binding cursor per job.
+///
+/// Heterogeneity: probes are placed *blind* — a distributed sampler
+/// keeps no node-attribute directory — and a job's demand is verified
+/// only when a probed worker surfaces its reservation (`Ev::Ready`). A
+/// mismatch no-ops that worker and sends one replacement probe to
+/// another random node, which is exactly the structural asymmetry the
+/// paper's global-state argument predicts.
 pub struct Sparrow<'a> {
     cfg: &'a SparrowConfig,
     workers: Vec<ProbeWorker<u32>>,
     jobs: Vec<TaskCursor>,
+    /// Per-job demands resolved against `cfg.catalog` at setup.
+    demands: Vec<Option<ResolvedDemand>>,
 }
 
 impl<'a> Sparrow<'a> {
     pub fn new(cfg: &'a SparrowConfig, trace: &Trace) -> Sparrow<'a> {
+        assert_eq!(
+            cfg.catalog.len(),
+            cfg.workers,
+            "catalog covers {} slots but the DC has {} workers",
+            cfg.catalog.len(),
+            cfg.workers
+        );
         Sparrow {
             cfg,
             workers: ProbeWorker::fleet(cfg.workers),
             jobs: TaskCursor::for_trace(trace),
+            demands: hetero::resolve_trace(&cfg.catalog, trace),
         }
     }
 }
@@ -89,9 +107,30 @@ impl Scheduler for Sparrow<'_> {
             }
             Ev::Ready { job, worker } => {
                 ctx.out.messages += 1;
+                if let Some(rd) = &self.demands[job as usize] {
+                    // a fully-bound job's leftover reservations are NOT
+                    // constraint misses — they fall through to the normal
+                    // proactive-cancellation no-op below
+                    if !self.jobs[job as usize].exhausted()
+                        && !self.cfg.catalog.slot_matches(worker as usize, rd)
+                    {
+                        // constraint verified at the probed node — and
+                        // failed: no-op this worker, re-probe blind (the
+                        // sampler cannot steer toward matching nodes)
+                        ctx.out.constraint_rejections += 1;
+                        ctx.constraint_block(job);
+                        ctx.send(Ev::Launch { worker, job, dur: None });
+                        let w = ctx.rng.below(self.cfg.workers) as u32;
+                        ctx.send(Ev::Reserve { worker: w, job });
+                        return;
+                    }
+                }
                 let dur = match self.jobs[job as usize].bind_next(&ctx.trace.jobs[job as usize]) {
                     Some((_, dur)) => {
                         ctx.out.decisions += 1;
+                        if self.demands[job as usize].is_some() {
+                            ctx.constraint_unblock(job);
+                        }
                         Some(dur)
                     }
                     None => None, // proactive cancellation: all tasks already bound
@@ -177,6 +216,27 @@ mod tests {
             summarize_jobs(&simulate(&cfg, &trace).jobs).p95
         };
         assert!(run(0.9) > run(0.2), "p95 must grow with load");
+    }
+
+    #[test]
+    fn constrained_jobs_complete_via_blind_reprobing() {
+        use crate::cluster::NodeCatalog;
+        use crate::metrics::summarize_constraint_wait;
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        let mut cfg = SparrowConfig::for_workers(320);
+        cfg.sim.seed = 9;
+        cfg.catalog = NodeCatalog::bimodal_gpu(320, 0.0625);
+        let trace =
+            synthetic_fixed_constrained(20, 30, 1.0, 0.6, 320, 10, 0.3, Demand::attrs(&["gpu"]));
+        assert!(trace.jobs.iter().any(|j| j.demand.is_some()));
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 30);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+        // blind probes onto a 6% match population must miss sometimes
+        assert!(out.constraint_rejections > 0, "no probe ever missed");
+        let cw = summarize_constraint_wait(&out.jobs);
+        assert!(cw.n > 0 && cw.max > 0.0, "constraint_wait never accrued");
     }
 
     #[test]

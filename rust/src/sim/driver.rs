@@ -175,6 +175,20 @@ impl<E> SimCtx<'_, E> {
         self.tracker.task_done(self.trace, job as usize, now)
     }
 
+    /// Mark `job` constraint-blocked as of now (idempotent): a placement
+    /// failed purely because of the job's demand. Feeds the per-job
+    /// `constraint_wait` breakdown (see [`JobTracker::constraint_block`]).
+    pub fn constraint_block(&mut self, job: u32) {
+        let now = self.q.now();
+        self.tracker.constraint_block(job as usize, now);
+    }
+
+    /// Close `job`'s constraint-blocked interval (no-op when not blocked).
+    pub fn constraint_unblock(&mut self, job: u32) {
+        let now = self.q.now();
+        self.tracker.constraint_unblock(job as usize, now);
+    }
+
     /// Whether every job in the trace has completed.
     pub fn all_done(&self) -> bool {
         self.tracker.all_done()
@@ -270,6 +284,7 @@ pub fn run_with_pools<S: Scheduler>(
     outcome.tasks = out.tasks;
     outcome.messages = out.messages;
     outcome.decisions = out.decisions;
+    outcome.constraint_rejections = out.constraint_rejections;
     outcome.breakdown = out.breakdown;
     outcome.events = q.popped();
     outcome.sim_wall_s = sim_wall_s;

@@ -21,15 +21,19 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::cluster::NodeCatalog;
 use crate::config::{EagleConfig, MeghaConfig, PigeonConfig, SparrowConfig};
-use crate::metrics::{summarize_jobs, DelaySummary, RunOutcome};
+use crate::metrics::{
+    summarize_constrained, summarize_constraint_wait, summarize_jobs, DelaySummary, RunOutcome,
+};
 use crate::runtime::match_engine::RustMatchEngine;
 use crate::sched;
 use crate::sched::megha::FailurePlan;
 use crate::sim::net::NetModel;
 use crate::sim::time::SimTime;
 use crate::util::stats::{mean, percentile};
-use crate::workload::{synthetic, Trace};
+use crate::workload::constraints::{apply_constraints, CONSTRAIN_SEED};
+use crate::workload::{synthetic, Demand, Trace};
 
 /// The four simulated architectures, in canonical reporting order.
 pub const FRAMEWORKS: [&str; 4] = ["megha", "sparrow", "eagle", "pigeon"];
@@ -123,9 +127,42 @@ impl WorkloadKind {
     }
 }
 
+/// Heterogeneity axis of a scenario: which catalog profile every
+/// framework's DC is built from, how scarce its scarce resource is, and
+/// which demand a fraction of the trace's jobs carry.
+///
+/// Each framework builds the profile over its *own* worker count (they
+/// round DC sizes differently), so the comparable quantity is the
+/// scarcity fraction, not absolute slot ids; the trace (and therefore
+/// the constrained job set) is shared verbatim across frameworks, as
+/// always.
+#[derive(Clone, Debug)]
+pub struct HeteroSpec {
+    /// Catalog profile name (see [`NodeCatalog::profile`]).
+    pub profile: String,
+    /// Profile scarcity knob (e.g. GPU slot fraction).
+    pub scarcity: f64,
+    /// Fraction of jobs carrying `demand`.
+    pub constrained_frac: f64,
+    pub demand: Demand,
+}
+
+impl HeteroSpec {
+    /// Build this spec's catalog for a DC of `workers` slots.
+    pub fn catalog(&self, workers: usize) -> NodeCatalog {
+        NodeCatalog::profile(&self.profile, workers, self.scarcity).unwrap_or_else(|| {
+            panic!(
+                "unknown hetero profile '{}' (available: {})",
+                self.profile,
+                NodeCatalog::profile_names().join(", ")
+            )
+        })
+    }
+}
+
 /// One cell of the sweep grid: a DC size, an offered load, a workload
-/// shape, a network model (constant vs jittered), and optional GM
-/// failure injection (Megha only; §3.5).
+/// shape, a network model (constant vs jittered), optional GM failure
+/// injection (Megha only; §3.5), and an optional heterogeneity axis.
 #[derive(Clone, Debug)]
 pub struct Scenario {
     pub name: String,
@@ -136,11 +173,13 @@ pub struct Scenario {
     pub net: NetModel,
     /// Fail GM 0 at this many simulated seconds (Megha runs only).
     pub gm_fail_at: Option<f64>,
+    /// Heterogeneous catalog + constrained jobs (None = homogeneous).
+    pub hetero: Option<HeteroSpec>,
 }
 
 impl Scenario {
     pub fn make_trace(&self, seed: u64) -> Trace {
-        match self.workload {
+        let trace = match self.workload {
             WorkloadKind::Yahoo => synthetic::yahoo_like(self.jobs, self.workers, self.load, seed),
             WorkloadKind::Google => {
                 synthetic::google_like(self.jobs, self.workers, self.load, seed)
@@ -153,14 +192,37 @@ impl Scenario {
                 self.workers,
                 seed,
             ),
+        };
+        match &self.hetero {
+            Some(h) if h.constrained_frac > 0.0 => apply_constraints(
+                trace,
+                h.constrained_frac,
+                h.demand.clone(),
+                seed ^ CONSTRAIN_SEED,
+            ),
+            _ => trace,
         }
     }
 }
 
-/// Named scenario presets. `scale10` is the ISSUE-2 trace-replay
-/// target: the fig3a Yahoo smoke shape at 10× jobs and 10× workers —
-/// the grid the hot-path overhaul (bucketed queue, pooled payloads,
-/// delta snapshots) exists to make routine.
+/// Preset names accepted by [`preset`] (surfaced by `--help` and by the
+/// unknown-preset error).
+pub fn preset_names() -> &'static [&'static str] {
+    &["scale10", "hetero"]
+}
+
+/// Named scenario presets.
+///
+/// * `scale10` — the ISSUE-2 trace-replay target: the fig3a Yahoo smoke
+///   shape at 10× jobs and 10× workers, the grid the hot-path overhaul
+///   (bucketed queue, pooled payloads, delta snapshots) exists to make
+///   routine.
+/// * `hetero` — the ISSUE-3 heterogeneity grid: attribute-scarcity ×
+///   load on a bimodal-GPU catalog, plus one rack-tiered scenario. The
+///   constrained fraction is calibrated so the *constrained sub-load*
+///   (constrained work ÷ matching capacity) stays below 1 on the rich
+///   cells and pushes toward saturation only on the scarce ones, while
+///   the overall Eq.-6 offered load is untouched by construction.
 pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
     match name {
         "scale10" => Some(vec![Scenario {
@@ -171,12 +233,52 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
             load: 0.85,
             net: net.clone(),
             gm_fail_at: None,
+            hetero: None,
         }]),
+        "hetero" => {
+            let gpu = |scarcity: f64, frac: f64| HeteroSpec {
+                profile: "bimodal-gpu".into(),
+                scarcity,
+                constrained_frac: frac,
+                demand: Demand::attrs(&["gpu"]),
+            };
+            let cell = |tag: &str, load: f64, h: HeteroSpec| Scenario {
+                name: format!("hetero-{tag}-l{load:.2}"),
+                workload: WorkloadKind::Yahoo,
+                workers: 600,
+                jobs: 200,
+                load,
+                net: net.clone(),
+                gm_fail_at: None,
+                hetero: Some(h),
+            };
+            Some(vec![
+                // scarce: ~6% GPU slots, ~5% of jobs demand them
+                cell("gpu-scarce", 0.5, gpu(0.0625, 0.05)),
+                cell("gpu-scarce", 0.85, gpu(0.0625, 0.05)),
+                // rich: ~25% GPU slots, 15% of jobs demand them
+                cell("gpu-rich", 0.5, gpu(0.25, 0.15)),
+                cell("gpu-rich", 0.85, gpu(0.25, 0.15)),
+                // storage tiers: nvme racks at 1-in-4, 10% of jobs pinned
+                cell(
+                    "rack-nvme",
+                    0.7,
+                    HeteroSpec {
+                        profile: "rack-tiered".into(),
+                        scarcity: 0.25,
+                        constrained_frac: 0.1,
+                        demand: Demand::attrs(&["nvme"]),
+                    },
+                ),
+            ])
+        }
         _ => None,
     }
 }
 
-/// Build the `workers × loads` scenario grid for one workload/net choice.
+/// Build the `workers × loads` scenario grid for one workload/net
+/// choice; `hetero`, when given, applies to every cell.
+#[allow(clippy::too_many_arguments)]
 pub fn scenario_grid(
     workload: &WorkloadKind,
     workers_list: &[usize],
@@ -184,6 +286,7 @@ pub fn scenario_grid(
     jobs: usize,
     net: &NetModel,
     gm_fail_at: Option<f64>,
+    hetero: Option<&HeteroSpec>,
 ) -> Vec<Scenario> {
     let kind = match workload {
         WorkloadKind::Yahoo => "yahoo",
@@ -201,6 +304,7 @@ pub fn scenario_grid(
                 load,
                 net: net.clone(),
                 gm_fail_at,
+                hetero: hetero.cloned(),
             });
         }
     }
@@ -209,15 +313,17 @@ pub fn scenario_grid(
 
 /// The one dispatch table from framework name to simulation: paper-shaped
 /// config for `workers`, with the run's seed, an explicit network model,
-/// and optional GM failure injection (Megha only; ignored by baselines).
-/// `fig3::run_framework`, [`run_one`] and the cross-scheduler tests all
-/// route through here.
-pub fn run_framework_with(
+/// optional GM failure injection (Megha only; ignored by baselines), and
+/// an optional heterogeneity spec (each framework builds the catalog
+/// over its own DC size). `fig3::run_framework`, [`run_one`] and the
+/// cross-scheduler tests all route through here.
+pub fn run_framework_hetero(
     framework: &str,
     workers: usize,
     seed: u64,
     net: &NetModel,
     gm_fail_at: Option<f64>,
+    hetero: Option<&HeteroSpec>,
     trace: &Trace,
 ) -> RunOutcome {
     match framework {
@@ -225,6 +331,9 @@ pub fn run_framework_with(
             let mut cfg = MeghaConfig::for_workers(workers);
             cfg.sim.seed = seed;
             cfg.sim.net = net.clone();
+            if let Some(h) = hetero {
+                cfg.catalog = h.catalog(cfg.spec.n_workers());
+            }
             let failure = gm_fail_at.map(|at| FailurePlan {
                 at: SimTime::from_secs(at),
                 gm: 0,
@@ -235,22 +344,43 @@ pub fn run_framework_with(
             let mut cfg = SparrowConfig::for_workers(workers);
             cfg.sim.seed = seed;
             cfg.sim.net = net.clone();
+            if let Some(h) = hetero {
+                cfg.catalog = h.catalog(cfg.workers);
+            }
             sched::sparrow::simulate(&cfg, trace)
         }
         "eagle" => {
             let mut cfg = EagleConfig::for_workers(workers);
             cfg.sim.seed = seed;
             cfg.sim.net = net.clone();
+            if let Some(h) = hetero {
+                cfg.catalog = h.catalog(cfg.workers);
+            }
             sched::eagle::simulate(&cfg, trace)
         }
         "pigeon" => {
             let mut cfg = PigeonConfig::for_workers(workers);
             cfg.sim.seed = seed;
             cfg.sim.net = net.clone();
+            if let Some(h) = hetero {
+                cfg.catalog = h.catalog(cfg.workers);
+            }
             sched::pigeon::simulate(&cfg, trace)
         }
         other => panic!("unknown framework '{other}'"),
     }
+}
+
+/// [`run_framework_hetero`] without a heterogeneity spec.
+pub fn run_framework_with(
+    framework: &str,
+    workers: usize,
+    seed: u64,
+    net: &NetModel,
+    gm_fail_at: Option<f64>,
+    trace: &Trace,
+) -> RunOutcome {
+    run_framework_hetero(framework, workers, seed, net, gm_fail_at, None, trace)
 }
 
 /// [`run_framework_with`] on the paper-default network model.
@@ -261,7 +391,15 @@ pub fn run_framework(framework: &str, workers: usize, seed: u64, trace: &Trace) 
 /// Run one (framework, scenario, seed) cell through the unified driver.
 pub fn run_one(framework: &str, sc: &Scenario, seed: u64) -> RunOutcome {
     let trace = sc.make_trace(seed);
-    run_framework_with(framework, sc.workers, seed, &sc.net, sc.gm_fail_at, &trace)
+    run_framework_hetero(
+        framework,
+        sc.workers,
+        seed,
+        &sc.net,
+        sc.gm_fail_at,
+        sc.hetero.as_ref(),
+        &trace,
+    )
 }
 
 /// The full sweep request.
@@ -284,6 +422,12 @@ pub struct RunRecord {
     pub rep: u64,
     pub seed: u64,
     pub summary: DelaySummary,
+    /// Eq. 2 delays of *constrained* jobs only (n = 0 when the scenario
+    /// has no heterogeneity axis).
+    pub constrained: DelaySummary,
+    /// Per-job `constraint_wait` percentiles (constrained jobs only).
+    pub constraint_wait: DelaySummary,
+    pub constraint_rejections: u64,
     pub inconsistency_ratio: f64,
     pub messages: u64,
     pub makespan_s: f64,
@@ -373,13 +517,24 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
         let seed = run_seed(spec.base_seed, si as u64, rep);
         let trace = &traces[si * n_rep + rep as usize];
         let r0 = Instant::now();
-        let out = run_framework_with(framework, sc.workers, seed, &sc.net, sc.gm_fail_at, trace);
+        let out = run_framework_hetero(
+            framework,
+            sc.workers,
+            seed,
+            &sc.net,
+            sc.gm_fail_at,
+            sc.hetero.as_ref(),
+            trace,
+        );
         RunRecord {
             framework: framework.clone(),
             scenario: si,
             rep,
             seed,
             summary: summarize_jobs(&out.jobs),
+            constrained: summarize_constrained(&out.jobs),
+            constraint_wait: summarize_constraint_wait(&out.jobs),
+            constraint_rejections: out.constraint_rejections,
             inconsistency_ratio: out.inconsistency_ratio(),
             messages: out.messages,
             makespan_s: out.makespan.as_secs(),
@@ -416,6 +571,14 @@ pub struct AggRow {
     /// Mean of per-run mean delays.
     pub mean: f64,
     pub inconsistency: f64,
+    /// Constrained jobs per run (0 ⇒ homogeneous cell; the constraint
+    /// columns below are then all zero).
+    pub constrained_n: usize,
+    /// Median across seeds of the per-run constrained-job p99 delay.
+    pub constrained_p99: f64,
+    /// Median across seeds of the per-run `constraint_wait` p50 / p99.
+    pub cwait_p50: f64,
+    pub cwait_p99: f64,
     /// Mean event-loop throughput (events/s) over the cell's runs, so
     /// harness regressions are visible in normal sweep output.
     pub events_per_sec: f64,
@@ -446,6 +609,9 @@ pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
             let means: Vec<f64> = rs.iter().map(|r| r.summary.mean).collect();
             let incons: Vec<f64> = rs.iter().map(|r| r.inconsistency_ratio).collect();
             let eps: Vec<f64> = rs.iter().map(|r| r.events_per_sec()).collect();
+            let con_p99s: Vec<f64> = rs.iter().map(|r| r.constrained.p99).collect();
+            let cw_p50s: Vec<f64> = rs.iter().map(|r| r.constraint_wait.median).collect();
+            let cw_p99s: Vec<f64> = rs.iter().map(|r| r.constraint_wait.p99).collect();
             rows.push(AggRow {
                 framework: fw.clone(),
                 scenario: si,
@@ -457,6 +623,10 @@ pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
                 p95_p95: percentile(&p95s, 95.0),
                 mean: mean(&means),
                 inconsistency: mean(&incons),
+                constrained_n: rs.iter().map(|r| r.constrained.n).max().unwrap_or(0),
+                constrained_p99: percentile(&con_p99s, 50.0),
+                cwait_p50: percentile(&cw_p50s, 50.0),
+                cwait_p99: percentile(&cw_p99s, 50.0),
                 events_per_sec: mean(&eps),
             });
         }
@@ -504,6 +674,25 @@ pub fn print_result(spec: &SweepSpec, result: &SweepResult) {
             r.events_per_sec
         );
     }
+    if rows.iter().any(|r| r.constrained_n > 0) {
+        println!("\n--- constrained jobs (per-framework constraint_wait percentiles) ---");
+        println!(
+            "{:<22} {:<9} {:>6} {:>12} {:>13} {:>13}",
+            "scenario", "framework", "jobs", "delay-p99(s)", "cwait-p50(s)", "cwait-p99(s)"
+        );
+        for r in rows.iter().filter(|r| r.constrained_n > 0) {
+            println!(
+                "{:<22} {:<9} {:>6} {:>12.3} {:>13.4} {:>13.3}",
+                spec.scenarios[r.scenario].name,
+                r.framework,
+                r.constrained_n,
+                r.constrained_p99,
+                r.cwait_p50,
+                r.cwait_p99
+            );
+        }
+        println!();
+    }
     println!(
         "trace-gen {:.2}s | run wall-clock {:.2}s | summed run time {:.2}s | \
          est. speedup {:.2}x ({} threads; rerun with --threads 1 for an exact \
@@ -529,6 +718,7 @@ mod tests {
                 &[0.4, 0.8],
                 12,
                 &NetModel::paper_default(),
+                None,
                 None,
             ),
             seeds: 3,
@@ -598,6 +788,61 @@ mod tests {
         assert_eq!(scs[0].workers, 6_000);
         assert_eq!(scs[0].jobs, 1_500);
         assert!(preset("nope", &net).is_none());
+        for name in preset_names() {
+            assert!(preset(name, &net).is_some(), "preset '{name}' missing");
+        }
+    }
+
+    #[test]
+    fn hetero_preset_resolves_and_constrains_traces() {
+        let net = NetModel::paper_default();
+        let scs = preset("hetero", &net).expect("hetero preset");
+        assert!(scs.len() >= 4);
+        for sc in &scs {
+            let h = sc.hetero.as_ref().expect("hetero scenario");
+            // profile resolves against any DC size the frameworks pick
+            let cat = h.catalog(sc.workers);
+            assert!(!cat.is_trivial());
+            let trace = sc.make_trace(run_seed(1, 0, 0));
+            let n = trace.jobs.iter().filter(|j| j.demand.is_some()).count();
+            assert!(n > 0, "{}: no constrained jobs", sc.name);
+            // offered load is untouched by constraint decoration (wide
+            // tolerance: 200-job synthesis has sampling noise)
+            assert!(
+                (trace.offered_load(sc.workers) - sc.load).abs() < 0.3,
+                "{}: load drifted",
+                sc.name
+            );
+        }
+    }
+
+    #[test]
+    fn hetero_cells_run_all_frameworks() {
+        // one tiny hetero cell end-to-end per framework (the full
+        // preset runs in CI via `sweep --preset hetero`)
+        let sc = Scenario {
+            name: "hetero-tiny".into(),
+            workload: WorkloadKind::Fixed { tasks_per_job: 10 },
+            workers: 160,
+            jobs: 24,
+            load: 0.6,
+            net: NetModel::paper_default(),
+            gm_fail_at: None,
+            hetero: Some(HeteroSpec {
+                profile: "bimodal-gpu".into(),
+                scarcity: 0.125,
+                constrained_frac: 0.5,
+                demand: Demand::attrs(&["gpu"]),
+            }),
+        };
+        for fw in FRAMEWORKS {
+            let out = run_one(fw, &sc, 3);
+            assert_eq!(out.jobs.len(), 24, "{fw} lost jobs");
+            assert!(
+                out.jobs.iter().any(|j| j.constrained),
+                "{fw}: no constrained job records"
+            );
+        }
     }
 
     #[test]
@@ -613,6 +858,7 @@ mod tests {
                 jitter: SimTime::from_millis(0.4),
             },
             gm_fail_at: Some(2.0),
+            hetero: None,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 5);

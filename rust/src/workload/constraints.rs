@@ -1,0 +1,213 @@
+//! Task placement constraints: the [`Demand`] a job's tasks carry, the
+//! trace-file constraint column (the `v2` format's extra field), and
+//! helpers for decorating synthetic traces with constrained jobs.
+//!
+//! A demand is resolved against a [`crate::cluster::NodeCatalog`] at
+//! simulation setup; see `cluster::hetero` for the matching semantics
+//! (`slots` = minimum capacity of the hosting node, `required_attrs` =
+//! labels the node must carry).
+//!
+//! Constraints never change a job's durations or arrival times, so a
+//! constrained variant of a trace has *exactly* the same offered load
+//! (Eq. 6) as its unconstrained original — scarcity only redistributes
+//! where the same work may run.
+
+use anyhow::{bail, Result};
+
+use super::Trace;
+use crate::util::rng::Rng;
+
+/// Canonical seed tweak separating the constraint-assignment RNG stream
+/// from the trace-synthesis stream. Every entry point that decorates a
+/// trace (the synthetic `*_constrained` generators, the sweep's
+/// `HeteroSpec`, the CLI) XORs its base seed with this same constant,
+/// so "same seed ⇒ same constrained job set" holds across all of them.
+pub const CONSTRAIN_SEED: u64 = 0xC0_57_41_7B;
+
+/// What every task of a job requires of its hosting node.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Demand {
+    /// Minimum capacity (slot count) of the hosting node (≥ 1; 1 = any).
+    pub slots: u32,
+    /// Attribute labels the node must carry (empty = any).
+    pub required_attrs: Vec<String>,
+}
+
+impl Demand {
+    pub fn new(slots: u32, required_attrs: Vec<String>) -> Demand {
+        assert!(slots >= 1, "demand slots must be >= 1");
+        Demand {
+            slots,
+            required_attrs,
+        }
+    }
+
+    /// Attribute-only demand (`slots = 1`).
+    pub fn attrs(labels: &[&str]) -> Demand {
+        Demand::new(1, labels.iter().map(|s| s.to_string()).collect())
+    }
+}
+
+/// Is `s` a well-formed attribute label? (What the trace format and the
+/// CLI accept: non-empty ASCII alphanumerics plus `-`/`_`.)
+pub fn valid_label(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+}
+
+/// Parse one trace constraint column: `-` (unconstrained) or a
+/// `;`-separated list of `slots:<n>` / `attrs:<a>+<b>+...` fields.
+/// Strict: unknown keys, duplicate keys, `slots:0`, empty labels and
+/// malformed numbers are errors, never silently ignored.
+pub fn parse_spec(s: &str) -> Result<Option<Demand>> {
+    if s == "-" {
+        return Ok(None);
+    }
+    if s.is_empty() {
+        bail!("empty constraint spec (use '-' for unconstrained)");
+    }
+    let mut slots: Option<u32> = None;
+    let mut attrs: Option<Vec<String>> = None;
+    for field in s.split(';') {
+        let Some((key, value)) = field.split_once(':') else {
+            bail!("bad constraint field '{field}' (expected key:value)");
+        };
+        match key {
+            "slots" => {
+                if slots.is_some() {
+                    bail!("duplicate 'slots' in constraint spec '{s}'");
+                }
+                let n: u32 = value
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad slots value '{value}'"))?;
+                if n == 0 {
+                    bail!("slots must be >= 1 in constraint spec '{s}'");
+                }
+                slots = Some(n);
+            }
+            "attrs" => {
+                if attrs.is_some() {
+                    bail!("duplicate 'attrs' in constraint spec '{s}'");
+                }
+                let labels: Vec<String> = value.split('+').map(|a| a.to_string()).collect();
+                for a in &labels {
+                    if !valid_label(a) {
+                        bail!("bad attribute label '{a}' in constraint spec '{s}'");
+                    }
+                }
+                attrs = Some(labels);
+            }
+            other => bail!("unknown constraint key '{other}' in spec '{s}'"),
+        }
+    }
+    Ok(Some(Demand::new(
+        slots.unwrap_or(1),
+        attrs.unwrap_or_default(),
+    )))
+}
+
+/// Encode a constraint column ([`parse_spec`]'s inverse).
+pub fn encode_spec(d: Option<&Demand>) -> String {
+    match d {
+        None => "-".to_string(),
+        Some(d) => {
+            let mut parts = Vec::new();
+            if d.slots > 1 {
+                parts.push(format!("slots:{}", d.slots));
+            }
+            if !d.required_attrs.is_empty() {
+                parts.push(format!("attrs:{}", d.required_attrs.join("+")));
+            }
+            if parts.is_empty() {
+                // slots:1, no attrs — still a demand; keep it explicit
+                parts.push("slots:1".to_string());
+            }
+            parts.join(";")
+        }
+    }
+}
+
+/// Decorate a fraction of `trace`'s jobs with `demand`, deterministically
+/// from `seed` (one Bernoulli draw per job, in job order). Durations and
+/// arrivals are untouched, so the offered load (Eq. 6) is unchanged.
+pub fn apply_constraints(mut trace: Trace, frac: f64, demand: Demand, seed: u64) -> Trace {
+    assert!((0.0..=1.0).contains(&frac), "frac in [0,1]");
+    let mut rng = Rng::new(seed);
+    for job in &mut trace.jobs {
+        if rng.f64() < frac {
+            job.demand = Some(demand.clone());
+        }
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::SimTime;
+    use crate::workload::Job;
+
+    #[test]
+    fn spec_roundtrip() {
+        for d in [
+            None,
+            Some(Demand::attrs(&["gpu"])),
+            Some(Demand::attrs(&["gpu", "ssd-fast"])),
+            Some(Demand::new(4, vec![])),
+            Some(Demand::new(2, vec!["big_mem".into()])),
+            Some(Demand::new(1, vec![])),
+        ] {
+            let enc = encode_spec(d.as_ref());
+            let back = parse_spec(&enc).unwrap();
+            assert_eq!(back, d, "spec '{enc}'");
+        }
+    }
+
+    #[test]
+    fn malformed_specs_rejected() {
+        for bad in [
+            "",
+            "slots:0",
+            "slots:abc",
+            "slots:",
+            "attrs:",
+            "attrs:gpu+",
+            "attrs:g pu",
+            "attrs:gpu;attrs:ssd",
+            "slots:1;slots:2",
+            "cores:4",
+            "slots=2",
+            "gpu",
+        ] {
+            assert!(parse_spec(bad).is_err(), "'{bad}' should be rejected");
+        }
+        assert_eq!(parse_spec("-").unwrap(), None);
+    }
+
+    #[test]
+    fn apply_constraints_is_deterministic_and_load_neutral() {
+        let jobs: Vec<Job> = (0..200)
+            .map(|i| {
+                Job::new(
+                    i,
+                    SimTime::from_secs(i as f64 * 0.1),
+                    vec![SimTime::from_secs(1.0); 4],
+                )
+            })
+            .collect();
+        let t = Trace::new("t", jobs);
+        let load0 = t.offered_load(100);
+        let a = apply_constraints(t.clone(), 0.3, Demand::attrs(&["gpu"]), 7);
+        let b = apply_constraints(t.clone(), 0.3, Demand::attrs(&["gpu"]), 7);
+        let n: usize = a.jobs.iter().filter(|j| j.demand.is_some()).count();
+        assert!((30..90).contains(&n), "got {n} constrained of 200");
+        for (x, y) in a.jobs.iter().zip(b.jobs.iter()) {
+            assert_eq!(x.demand, y.demand);
+        }
+        assert_eq!(a.offered_load(100), load0, "constraints must not move Eq. 6");
+        // frac 0 leaves the trace untouched
+        let c = apply_constraints(t, 0.0, Demand::attrs(&["gpu"]), 7);
+        assert!(c.jobs.iter().all(|j| j.demand.is_none()));
+    }
+}

@@ -4,9 +4,12 @@
 //! independent tasks with known durations (the paper's model — tasks are
 //! the scheduling unit, one worker slot each, Eq. 6 defines load).
 
+pub mod constraints;
 pub mod stats;
 pub mod synthetic;
 pub mod trace;
+
+pub use constraints::Demand;
 
 use crate::sim::time::SimTime;
 
@@ -19,12 +22,16 @@ pub enum JobClass {
 }
 
 /// One job: submitted at `submit`, `durations[i]` is task i's ideal
-/// execution time on an unloaded worker.
+/// execution time on an unloaded worker. `demand`, when present,
+/// constrains where every task of the job may run (see
+/// [`constraints`]); `None` (the default) is the paper's unconstrained
+/// model.
 #[derive(Clone, Debug)]
 pub struct Job {
     pub id: u32,
     pub submit: SimTime,
     pub durations: Vec<SimTime>,
+    pub demand: Option<Demand>,
 }
 
 impl Job {
@@ -34,7 +41,14 @@ impl Job {
             id,
             submit,
             durations,
+            demand: None,
         }
+    }
+
+    /// Builder: attach a placement demand to every task of this job.
+    pub fn with_demand(mut self, demand: Demand) -> Job {
+        self.demand = Some(demand);
+        self
     }
 
     pub fn n_tasks(&self) -> usize {

@@ -8,6 +8,7 @@
 //! observe (arrival, width, durations), so these marginals drive the
 //! dynamics of Figs. 2–4. See DESIGN.md "Substitutions".
 
+use super::constraints::{apply_constraints, Demand, CONSTRAIN_SEED};
 use super::{Job, Trace};
 use crate::sim::time::SimTime;
 use crate::util::rng::Rng;
@@ -161,6 +162,65 @@ fn sample_width(rng: &mut Rng, mix: &[(f64, f64, f64)]) -> usize {
     rng.log_uniform(lo, hi).round().max(1.0) as usize
 }
 
+/// Constrained variant of [`yahoo_like`]: a `frac` fraction of jobs
+/// additionally carry `demand`. Durations and arrivals are those of the
+/// unconstrained trace at the same seed, so the offered load (Eq. 6) is
+/// *identical* — scarcity changes where work may run, not how much
+/// arrives (see `workload::constraints`).
+pub fn yahoo_like_constrained(
+    n_jobs: usize,
+    workers: usize,
+    load: f64,
+    seed: u64,
+    frac: f64,
+    demand: Demand,
+) -> Trace {
+    apply_constraints(
+        yahoo_like(n_jobs, workers, load, seed),
+        frac,
+        demand,
+        seed ^ CONSTRAIN_SEED,
+    )
+}
+
+/// Constrained variant of [`google_like`] (see [`yahoo_like_constrained`]).
+pub fn google_like_constrained(
+    n_jobs: usize,
+    workers: usize,
+    load: f64,
+    seed: u64,
+    frac: f64,
+    demand: Demand,
+) -> Trace {
+    apply_constraints(
+        google_like(n_jobs, workers, load, seed),
+        frac,
+        demand,
+        seed ^ CONSTRAIN_SEED,
+    )
+}
+
+/// Constrained variant of [`synthetic_fixed`] (see
+/// [`yahoo_like_constrained`]).
+#[allow(clippy::too_many_arguments)]
+pub fn synthetic_fixed_constrained(
+    tasks_per_job: usize,
+    n_jobs: usize,
+    dur_s: f64,
+    load: f64,
+    workers: usize,
+    seed: u64,
+    frac: f64,
+    demand: Demand,
+) -> Trace {
+    apply_constraints(
+        synthetic_fixed(tasks_per_job, n_jobs, dur_s, load, workers, seed),
+        frac,
+        demand,
+        seed ^ CONSTRAIN_SEED,
+    )
+}
+
 /// Down-sample for the prototype runs (§4.2): keep each job with
 /// probability `job_keep`, shrink its width by `task_factor` (ceil), and
 /// re-draw arrivals as a Poisson process with mean inter-arrival
@@ -262,6 +322,28 @@ mod tests {
         let span = d.makespan_lower_bound().as_secs();
         let mean_iat = span / d.n_jobs() as f64;
         assert!((0.6..1.6).contains(&mean_iat), "iat {mean_iat}");
+    }
+
+    #[test]
+    fn constrained_variants_preserve_load_and_shape() {
+        let base = yahoo_like(500, 3000, 0.8, 13);
+        let cons = yahoo_like_constrained(500, 3000, 0.8, 13, 0.3, Demand::attrs(&["gpu"]));
+        assert_eq!(base.n_jobs(), cons.n_jobs());
+        assert_eq!(base.n_tasks(), cons.n_tasks());
+        assert_eq!(base.offered_load(3000), cons.offered_load(3000));
+        for (a, b) in base.jobs.iter().zip(cons.jobs.iter()) {
+            assert_eq!(a.submit, b.submit);
+            assert_eq!(a.durations, b.durations);
+        }
+        let n = cons.jobs.iter().filter(|j| j.demand.is_some()).count();
+        assert!(
+            (80..220).contains(&n),
+            "~30% of 500 jobs should be constrained, got {n}"
+        );
+        // fixed variant too
+        let f = synthetic_fixed_constrained(10, 50, 1.0, 0.5, 500, 3, 0.5, Demand::attrs(&["gpu"]));
+        assert!(f.jobs.iter().any(|j| j.demand.is_some()));
+        assert!(f.jobs.iter().any(|j| j.demand.is_none()));
     }
 
     #[test]

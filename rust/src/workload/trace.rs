@@ -1,23 +1,44 @@
-//! Trace file format (text, one job per line):
+//! Trace file formats (text, one job per line).
+//!
+//! **v1** (the original, mirroring the Sparrow/Eagle simulator inputs):
 //!
 //! ```text
 //! # comment
 //! <submit_time_s> <job_id> <n_tasks> <dur_1_s> ... <dur_n_s>
 //! ```
 //!
-//! This mirrors the input format of the Sparrow/Eagle simulators the
-//! paper builds on. Parsing is strict: malformed lines are errors, not
-//! warnings, so workload bugs cannot silently skew experiments.
+//! **v2** (backward-compatible extension): the first line is the magic
+//! header `#v2`, and every job row carries exactly one extra
+//! *constraint column* after its durations — `-` for an unconstrained
+//! job, else a spec like `slots:2;attrs:gpu+ssd` (see
+//! [`constraints::parse_spec`]):
+//!
+//! ```text
+//! #v2
+//! <submit_time_s> <job_id> <n_tasks> <dur_1_s> ... <dur_n_s> <constraint>
+//! ```
+//!
+//! [`encode`] emits v1 whenever no job carries a demand, so existing
+//! traces (and their byte-exact goldens) are untouched; it switches to
+//! v2 only when a demand is present. Parsing is strict in both
+//! versions: malformed lines — including malformed constraint specs
+//! and missing/extra columns — are errors, not warnings, so workload
+//! bugs cannot silently skew experiments. (A v2 file fed to a v1-only
+//! parser fails loudly: the constraint column is not a valid duration.)
 
 use std::fmt::Write as _;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::{Job, Trace};
+use super::{constraints, Job, Trace};
 use crate::sim::time::SimTime;
 
+/// Magic first line of the v2 format.
+pub const V2_HEADER: &str = "#v2";
+
 pub fn parse(name: &str, text: &str) -> Result<Trace> {
+    let v2 = text.lines().next().map(str::trim) == Some(V2_HEADER);
     let mut jobs = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
@@ -40,33 +61,71 @@ pub fn parse(name: &str, text: &str) -> Result<Trace> {
             .context("missing task count")?
             .parse()
             .with_context(|| format!("line {}: bad task count", lineno + 1))?;
-        let durs: Vec<SimTime> = it
-            .map(|d| d.parse::<f64>().map(SimTime::from_secs))
-            .collect::<Result<_, _>>()
-            .with_context(|| format!("line {}: bad duration", lineno + 1))?;
-        if durs.len() != n {
-            bail!(
-                "line {}: declared {} tasks but found {} durations",
-                lineno + 1,
-                n,
-                durs.len()
-            );
-        }
         if n == 0 {
             bail!("line {}: job with zero tasks", lineno + 1);
         }
-        jobs.push(Job::new(id, SimTime::from_secs(submit), durs));
+        let (durs, demand) = if v2 {
+            // exactly n durations, then exactly one constraint column
+            let durs: Vec<SimTime> = it
+                .by_ref()
+                .take(n)
+                .map(|d| d.parse::<f64>().map(SimTime::from_secs))
+                .collect::<Result<_, _>>()
+                .with_context(|| format!("line {}: bad duration", lineno + 1))?;
+            if durs.len() != n {
+                bail!(
+                    "line {}: declared {} tasks but found {} durations",
+                    lineno + 1,
+                    n,
+                    durs.len()
+                );
+            }
+            let spec = it
+                .next()
+                .with_context(|| format!("line {}: missing constraint column (v2)", lineno + 1))?;
+            let demand = constraints::parse_spec(spec)
+                .with_context(|| format!("line {}: bad constraint spec", lineno + 1))?;
+            if let Some(extra) = it.next() {
+                bail!("line {}: unexpected trailing token '{extra}'", lineno + 1);
+            }
+            (durs, demand)
+        } else {
+            let durs: Vec<SimTime> = it
+                .map(|d| d.parse::<f64>().map(SimTime::from_secs))
+                .collect::<Result<_, _>>()
+                .with_context(|| format!("line {}: bad duration", lineno + 1))?;
+            if durs.len() != n {
+                bail!(
+                    "line {}: declared {} tasks but found {} durations",
+                    lineno + 1,
+                    n,
+                    durs.len()
+                );
+            }
+            (durs, None)
+        };
+        let mut job = Job::new(id, SimTime::from_secs(submit), durs);
+        job.demand = demand;
+        jobs.push(job);
     }
     Ok(Trace::new(name, jobs))
 }
 
 pub fn encode(trace: &Trace) -> String {
+    let v2 = trace.jobs.iter().any(|j| j.demand.is_some());
     let mut out = String::new();
+    if v2 {
+        out.push_str(V2_HEADER);
+        out.push('\n');
+    }
     let _ = writeln!(out, "# trace: {} ({} jobs)", trace.name, trace.n_jobs());
     for j in &trace.jobs {
         let _ = write!(out, "{} {} {}", j.submit.as_secs(), j.id, j.n_tasks());
         for d in &j.durations {
             let _ = write!(out, " {}", d.as_secs());
+        }
+        if v2 {
+            let _ = write!(out, " {}", constraints::encode_spec(j.demand.as_ref()));
         }
         out.push('\n');
     }
@@ -91,6 +150,7 @@ pub fn save(trace: &Trace, path: &Path) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::Demand;
 
     #[test]
     fn roundtrip() {
@@ -106,10 +166,12 @@ mod tests {
             ],
         );
         let enc = encode(&t);
+        assert!(!enc.starts_with(V2_HEADER), "demand-free trace stays v1");
         let back = parse("rt", &enc).unwrap();
         assert_eq!(back.n_jobs(), 2);
         assert_eq!(back.jobs[1].durations, t.jobs[1].durations);
         assert_eq!(back.jobs[0].submit, t.jobs[0].submit);
+        assert!(back.jobs.iter().all(|j| j.demand.is_none()));
     }
 
     #[test]
@@ -125,5 +187,60 @@ mod tests {
         assert!(parse("x", "0.0 1 3 1.0 2.0").is_err());
         assert!(parse("x", "0.0 1 0").is_err());
         assert!(parse("x", "abc 1 1 1.0").is_err());
+    }
+
+    #[test]
+    fn v2_roundtrip_with_and_without_constraints() {
+        let t = Trace::new(
+            "v2",
+            vec![
+                Job::new(0, SimTime::from_secs(0.5), vec![SimTime::from_secs(1.0)]),
+                Job::new(
+                    1,
+                    SimTime::from_secs(1.0),
+                    vec![SimTime::from_secs(2.0), SimTime::from_secs(0.5)],
+                )
+                .with_demand(Demand::attrs(&["gpu"])),
+                Job::new(2, SimTime::from_secs(2.0), vec![SimTime::from_secs(1.0)])
+                    .with_demand(Demand::new(4, vec!["big-mem".into()])),
+            ],
+        );
+        let enc = encode(&t);
+        assert!(enc.starts_with(V2_HEADER), "demand-bearing trace must be v2");
+        let back = parse("v2", &enc).unwrap();
+        assert_eq!(back.n_jobs(), 3);
+        assert_eq!(back.jobs[0].demand, None);
+        assert_eq!(back.jobs[1].demand, Some(Demand::attrs(&["gpu"])));
+        assert_eq!(
+            back.jobs[2].demand,
+            Some(Demand::new(4, vec!["big-mem".into()]))
+        );
+        assert_eq!(back.jobs[1].durations, t.jobs[1].durations);
+        // re-encoding is stable
+        assert_eq!(encode(&back), enc);
+    }
+
+    #[test]
+    fn v2_parses_unconstrained_column() {
+        let t = parse("x", "#v2\n0.0 7 2 3.5 1.0 -\n").unwrap();
+        assert_eq!(t.jobs[0].demand, None);
+        let t = parse("x", "#v2\n0.0 7 1 3.5 attrs:gpu\n").unwrap();
+        assert_eq!(t.jobs[0].demand, Some(Demand::attrs(&["gpu"])));
+    }
+
+    #[test]
+    fn v2_strictness() {
+        // missing constraint column
+        assert!(parse("x", "#v2\n0.0 1 2 1.0 2.0\n").is_err());
+        // malformed specs
+        assert!(parse("x", "#v2\n0.0 1 1 1.0 slots:0\n").is_err());
+        assert!(parse("x", "#v2\n0.0 1 1 1.0 attrs:\n").is_err());
+        assert!(parse("x", "#v2\n0.0 1 1 1.0 cores:4\n").is_err());
+        // trailing junk after the constraint column
+        assert!(parse("x", "#v2\n0.0 1 1 1.0 - extra\n").is_err());
+        // v2 file without the header read as v1: constraint column is
+        // not a valid duration → loud failure, never silent skew
+        assert!(parse("x", "0.0 1 1 1.0 attrs:gpu\n").is_err());
+        assert!(parse("x", "0.0 1 1 1.0 -\n").is_err());
     }
 }

@@ -255,6 +255,121 @@ fn partition_iterators_consistent_with_ranges() {
 }
 
 #[test]
+fn catalog_masked_matching_agrees_with_naive_filter() {
+    // ISSUE-3 satellite: NodeCatalog attribute/capacity masks AND'd with
+    // an AvailMap must agree with a naive per-worker filter
+    // (is_free && slot_matches), for counts, first-match, and claims.
+    use megha::cluster::NodeCatalog;
+    use megha::workload::Demand;
+    check("catalog-masked-vs-naive", 120, |g| {
+        let mut rng = Rng::new(g.seed ^ 0x4E0D);
+        // random node list: capacities 1..4, attrs drawn from a pool
+        let pool = ["gpu", "ssd", "fpga", "big-mem"];
+        let n_nodes = g.usize_in(1, 60);
+        let nodes: Vec<(u32, Vec<String>)> = (0..n_nodes)
+            .map(|_| {
+                let cap = rng.below(4) as u32 + 1;
+                let attrs: Vec<String> = pool
+                    .iter()
+                    .filter(|_| rng.below(3) == 0)
+                    .map(|s| s.to_string())
+                    .collect();
+                (cap, attrs)
+            })
+            .collect();
+        let catalog = NodeCatalog::from_nodes(nodes);
+        let n = catalog.len();
+        let mut state = AvailMap::all_free(n);
+        for _ in 0..n / 2 {
+            state.set_busy(rng.below(n));
+        }
+        // random demand: 0-2 attrs from the pool + a capacity class
+        let n_attrs = rng.below(3);
+        let attrs: Vec<String> = (0..n_attrs)
+            .map(|_| pool[rng.below(pool.len())].to_string())
+            .collect();
+        let slots = rng.below(4) as u32 + 1;
+        let demand = Demand::new(slots, attrs);
+        let Ok(rd) = catalog.resolve(&demand) else {
+            // unknown attr / impossible capacity for this catalog: the
+            // strict-resolution path, fine
+            return Ok(());
+        };
+        let lo = rng.below(n);
+        let hi = lo + rng.below(n - lo + 1);
+        let naive: Vec<usize> = (lo..hi)
+            .filter(|&s| state.is_free(s) && catalog.slot_matches(s, &rd))
+            .collect();
+        if catalog.count_matching_free(&state, lo, hi, &rd) != naive.len() {
+            return Err(format!("count mismatch in [{lo},{hi})"));
+        }
+        if catalog.first_matching_free(&state, lo, hi, &rd) != naive.first().copied() {
+            return Err(format!("first mismatch in [{lo},{hi})"));
+        }
+        // static matching ignores freeness
+        let naive_static = (lo..hi).filter(|&s| catalog.slot_matches(s, &rd)).count();
+        if catalog.count_matching(lo, hi, &rd) != naive_static {
+            return Err("static count mismatch".into());
+        }
+        // pop claims exactly the first match and nothing else
+        let before = state.free_count();
+        let popped = catalog.pop_matching_free(&mut state, lo, hi, &rd);
+        if popped != naive.first().copied() {
+            return Err("pop mismatch".into());
+        }
+        if let Some(w) = popped {
+            if state.is_free(w) || state.free_count() != before - 1 {
+                return Err("pop did not claim exactly one slot".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn trace_v2_roundtrips_random_constrained_traces() {
+    use megha::sim::time::SimTime;
+    use megha::workload::{trace as tracefile, Demand, Job, Trace};
+    check("trace-v2-roundtrip", 60, |g| {
+        let mut rng = Rng::new(g.seed ^ 0x2B);
+        let n = g.usize_in(1, 30);
+        let mut t = 0.0;
+        let jobs: Vec<Job> = (0..n as u32)
+            .map(|id| {
+                t += rng.uniform(0.0, 3.0);
+                let w = rng.range(1, 20);
+                let durs: Vec<SimTime> = (0..w)
+                    .map(|_| SimTime::from_secs(rng.uniform(0.05, 200.0)))
+                    .collect();
+                let job = Job::new(id, SimTime::from_secs(t), durs);
+                match rng.below(4) {
+                    0 => job.with_demand(Demand::attrs(&["gpu"])),
+                    1 => job.with_demand(Demand::new(rng.below(4) as u32 + 2, vec![])),
+                    2 => job.with_demand(Demand::new(2, vec!["ssd".into(), "big-mem".into()])),
+                    _ => job,
+                }
+            })
+            .collect();
+        let any_demand = jobs.iter().any(|j| j.demand.is_some());
+        let trace = Trace::new("prop-v2", jobs);
+        let enc = tracefile::encode(&trace);
+        if any_demand != enc.starts_with("#v2") {
+            return Err("format version does not track demand presence".into());
+        }
+        let back = tracefile::parse("prop-v2", &enc).map_err(|e| e.to_string())?;
+        if back.n_jobs() != trace.n_jobs() || back.n_tasks() != trace.n_tasks() {
+            return Err("job/task count drift".into());
+        }
+        for (a, b) in trace.jobs.iter().zip(&back.jobs) {
+            if a.submit != b.submit || a.durations != b.durations || a.demand != b.demand {
+                return Err(format!("job {} drifted", a.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn trace_format_roundtrips_random_traces() {
     use megha::sim::time::SimTime;
     use megha::workload::{trace as tracefile, Job, Trace};
