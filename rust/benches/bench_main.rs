@@ -98,6 +98,12 @@ impl Bench {
     /// (`-- queue --json` then `-- scale10 --json`) accumulate instead
     /// of clobbering each other. A fresh run of a bench name replaces
     /// its previous entry.
+    ///
+    /// The document carries a `"measured"` flag: `true` once any run
+    /// has actually contributed samples (and sticky from then on),
+    /// `false` when the file holds no measurements — so stubs committed
+    /// from toolchain-less containers can never be mistaken for
+    /// measured numbers by readers or report tooling.
     fn write_json(&self) {
         let root = std::env::var("CARGO_MANIFEST_DIR")
             .map(std::path::PathBuf::from)
@@ -107,6 +113,7 @@ impl Bench {
         let path = root.join("BENCH_PR3.json");
         let mut bench: BTreeMap<String, Json> = BTreeMap::new();
         let mut totals: BTreeMap<String, Json> = BTreeMap::new();
+        let mut measured = false;
         if let Ok(text) = std::fs::read_to_string(&path) {
             if let Ok(old) = Json::parse(&text) {
                 if let Some(Json::Obj(m)) = old.get("bench") {
@@ -115,8 +122,13 @@ impl Bench {
                 if let Some(Json::Obj(m)) = old.get("experiments_total_s") {
                     totals = m.clone();
                 }
+                if let Some(Json::Bool(b)) = old.get("measured") {
+                    measured = *b;
+                }
             }
         }
+        measured |= !self.unit_results.borrow().is_empty()
+            || !self.total_results.borrow().is_empty();
         for (n, v) in self.unit_results.borrow().iter() {
             bench.insert(n.clone(), Json::num(*v));
         }
@@ -125,6 +137,7 @@ impl Bench {
         }
         let doc = Json::obj(vec![
             ("unit", Json::str("ns_per_unit")),
+            ("measured", Json::Bool(measured)),
             ("bench", Json::Obj(bench)),
             ("experiments_total_s", Json::Obj(totals)),
         ]);
@@ -185,6 +198,7 @@ fn main() {
     // ---- 2. microbenches ----
     bench_match_engines(&b);
     bench_constraint_match(&b);
+    bench_gang_queries(&b);
     bench_sim_throughput(&b);
     bench_bitmap(&b);
     bench_queue(&b);
@@ -480,6 +494,63 @@ fn bench_constraint_match(b: &Bench) {
             acc += (lo..lo + RANGE)
                 .find(|&s| state.is_free(s) && catalog.slot_matches(s, &rd))
                 .unwrap_or(0);
+        }
+        std::hint::black_box(acc);
+        1000
+    });
+}
+
+/// Gang placement at fig3 scale: the word-wise node scan
+/// (`find_node_with_free` / `count_gangs_free`) vs a naive per-node
+/// filter over the same occupancy. This is what `gang_plan` and the
+/// claim path run per scheduling round for multi-slot demands.
+fn bench_gang_queries(b: &Bench) {
+    use megha::cluster::NodeCatalog;
+    use megha::workload::Demand;
+    const N: usize = 6_400;
+    let catalog = NodeCatalog::bimodal_gpu(N, 0.25);
+    let rd = catalog
+        .resolve(&Demand::new(2, vec!["gpu".into()]))
+        .expect("gpu pairs resolve");
+    let mut state = AvailMap::all_free(N);
+    let mut rng = Rng::new(23);
+    for _ in 0..N / 2 {
+        state.set_busy(rng.below(N));
+    }
+    const RANGE: usize = 800;
+    b.time("gang/find_node_6400w", || {
+        let mut acc = 0usize;
+        for i in 0..1000 {
+            let lo = (i * 613) % (N - RANGE);
+            acc += catalog
+                .find_node_with_free(&state, lo, lo + RANGE, &rd, 2)
+                .unwrap_or(0) as usize;
+        }
+        std::hint::black_box(acc);
+        1000
+    });
+    b.time("gang/naive_find_node_6400w", || {
+        let mut acc = 0usize;
+        for i in 0..1000 {
+            let lo = (i * 613) % (N - RANGE);
+            let hi = lo + RANGE;
+            let found = (0..catalog.n_nodes() as u32).find(|&n| {
+                let (nlo, nhi) = catalog.node_range(n);
+                nlo >= lo
+                    && nhi <= hi
+                    && catalog.slot_matches(nlo, &rd)
+                    && (nlo..nhi).filter(|&s| state.is_free(s)).count() >= 2
+            });
+            acc += found.unwrap_or(0) as usize;
+        }
+        std::hint::black_box(acc);
+        1000
+    });
+    b.time("gang/count_gangs_6400w", || {
+        let mut acc = 0usize;
+        for i in 0..1000 {
+            let lo = (i * 613) % (N - RANGE);
+            acc += catalog.count_gangs_free(&state, lo, lo + RANGE, &rd);
         }
         std::hint::black_box(acc);
         1000

@@ -104,6 +104,36 @@ impl AvailMap {
         total
     }
 
+    /// Are at least `k` workers free in [lo, hi)? Early-exits as soon as
+    /// the running popcount reaches `k` — the per-node occupancy check
+    /// of the gang-placement path, where node ranges are a handful of
+    /// words at most.
+    pub fn has_k_free_in(&self, lo: usize, hi: usize, k: usize) -> bool {
+        debug_assert!(lo <= hi && hi <= self.n);
+        if k == 0 {
+            return true;
+        }
+        if lo == hi {
+            return false;
+        }
+        let (lw, hw) = (lo / 64, (hi - 1) / 64);
+        let mut total = 0usize;
+        for w in lw..=hw {
+            let mut word = self.words[w];
+            if w == lw {
+                word &= !0u64 << (lo % 64);
+            }
+            if w == hw && hi % 64 != 0 {
+                word &= (1u64 << (hi % 64)) - 1;
+            }
+            total += word.count_ones() as usize;
+            if total >= k {
+                return true;
+            }
+        }
+        false
+    }
+
     /// First free worker in [lo, hi), if any.
     pub fn first_free_in(&self, lo: usize, hi: usize) -> Option<usize> {
         debug_assert!(lo <= hi && hi <= self.n);
@@ -329,6 +359,20 @@ mod tests {
         assert_eq!(m.count_free_in(64, 128), 2);
         assert_eq!(m.count_free_in(128, 129), 1);
         assert_eq!(m.count_free_in(10, 10), 0);
+    }
+
+    #[test]
+    fn has_k_free_matches_count() {
+        let mut m = AvailMap::all_busy(200);
+        for i in [3usize, 64, 65, 130, 199] {
+            m.set_free(i);
+        }
+        for &(lo, hi) in &[(0usize, 200usize), (4, 130), (64, 66), (10, 10)] {
+            let c = m.count_free_in(lo, hi);
+            for k in 0..=c + 2 {
+                assert_eq!(m.has_k_free_in(lo, hi, k), k <= c, "[{lo},{hi}) k={k}");
+            }
+        }
     }
 
     #[test]

@@ -12,11 +12,19 @@
 //!
 //! A task's [`Demand`] resolves against a catalog once, at simulation
 //! setup, into a [`ResolvedDemand`] (attribute mask ids + a capacity
-//! mask): `required_attrs` become per-attribute masks and `slots`
-//! becomes a "hosted on a node of capacity ≥ slots" mask. (The task
-//! itself still occupies one slot; co-scheduling several slots of one
-//! node is future work — `slots` models the *big-node class* the task
-//! must land on.)
+//! mask + the gang width): `required_attrs` become per-attribute masks
+//! and `slots = k` means the task is a **gang** of `k` slots
+//! co-resident on one hosting node, atomically acquired and atomically
+//! released (the capacity mask "hosted on a node of capacity ≥ k" is
+//! a necessary precondition the word-wise scans exploit; the gang
+//! queries below add the *live* co-residency requirement). `k = 1` is
+//! the classic one-slot task and takes exactly the pre-gang code paths.
+//!
+//! Gang queries operate on nodes *fully contained* in the queried slot
+//! range: a node straddling a partition/group boundary belongs to no
+//! single manager and is never used for gangs inside that range
+//! (schedulers assert placeability at setup, so a demand that fits
+//! nowhere fails loudly instead of deadlocking the event loop).
 //!
 //! **Bit-identity contract**: a [`uniform`](NodeCatalog::uniform)
 //! (trivial) catalog plus a demand-free trace must leave every
@@ -38,17 +46,29 @@ pub const STRIPE: usize = 32;
 pub const RACK: usize = 64;
 
 /// A [`Demand`] resolved against one catalog: attribute mask indices
-/// plus an optional capacity-class mask index.
+/// plus an optional capacity-class mask index and the gang width.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ResolvedDemand {
     attr_ids: Vec<usize>,
     cap_idx: Option<usize>,
+    /// `Demand::slots`: slots co-resident on one node per task (≥ 1).
+    gang: u32,
 }
 
 impl ResolvedDemand {
     /// True when the demand constrains nothing (no attributes, slots ≤ 1).
     pub fn is_unconstrained(&self) -> bool {
         self.attr_ids.is_empty() && self.cap_idx.is_none()
+    }
+
+    /// Slots each task occupies, co-resident on one node (`Demand::slots`).
+    pub fn gang_width(&self) -> u32 {
+        self.gang
+    }
+
+    /// True for multi-slot (gang) demands.
+    pub fn is_gang(&self) -> bool {
+        self.gang > 1
     }
 }
 
@@ -64,6 +84,8 @@ pub struct NodeCatalog {
     node_of_slot: Vec<u32>,
     /// Capacity (slot count) per node (empty when trivial: all 1).
     node_capacity: Vec<u32>,
+    /// First slot of each node (empty when trivial: node == slot).
+    node_start: Vec<u32>,
     /// For each distinct capacity `c > 1` (ascending): bitset of slots
     /// hosted on nodes with capacity ≥ `c`.
     cap_masks: Vec<(u32, AvailMap)>,
@@ -81,6 +103,7 @@ impl NodeCatalog {
             masks: Vec::new(),
             node_of_slot: Vec::new(),
             node_capacity: Vec::new(),
+            node_start: Vec::new(),
             cap_masks: Vec::new(),
             trivial: true,
         }
@@ -114,9 +137,11 @@ impl NodeCatalog {
         let mut masks: Vec<AvailMap> = Vec::new();
         let mut node_of_slot = Vec::with_capacity(n_slots);
         let mut node_capacity = Vec::with_capacity(entries.len());
+        let mut node_start = Vec::with_capacity(entries.len());
         let mut slot = 0usize;
         for (node, (cap, labels)) in entries.iter().enumerate() {
             node_capacity.push(*cap);
+            node_start.push(slot as u32);
             let ids: Vec<usize> = labels
                 .iter()
                 .map(|l| {
@@ -156,6 +181,7 @@ impl NodeCatalog {
             masks,
             node_of_slot,
             node_capacity,
+            node_start,
             cap_masks,
             trivial: false,
         }
@@ -281,6 +307,16 @@ impl NodeCatalog {
         }
     }
 
+    /// Slot range `[lo, hi)` hosted on `node` (consecutive by layout).
+    pub fn node_range(&self, node: u32) -> (usize, usize) {
+        if self.trivial {
+            (node as usize, node as usize + 1)
+        } else {
+            let lo = self.node_start[node as usize] as usize;
+            (lo, lo + self.node_capacity[node as usize] as usize)
+        }
+    }
+
     /// Attribute labels known to this catalog.
     pub fn attr_labels(&self) -> &[String] {
         &self.attrs
@@ -328,7 +364,11 @@ impl NodeCatalog {
                 })?;
             Some(idx)
         };
-        Ok(ResolvedDemand { attr_ids, cap_idx })
+        Ok(ResolvedDemand {
+            attr_ids,
+            cap_idx,
+            gang: d.slots,
+        })
     }
 
     /// The demand's combined mask restricted to word `w` (`!0` when the
@@ -427,6 +467,155 @@ impl NodeCatalog {
         let s = self.first_matching_free(state, lo, hi, rd)?;
         state.set_busy(s);
         Some(s)
+    }
+
+    /// First slot in [lo, hi) matching the demand regardless of freeness
+    /// (the static counterpart of [`first_matching_free`](Self::first_matching_free)).
+    pub fn first_matching(&self, lo: usize, hi: usize, rd: &ResolvedDemand) -> Option<usize> {
+        debug_assert!(lo <= hi && hi <= self.n_slots);
+        if lo == hi {
+            return None;
+        }
+        if rd.is_unconstrained() {
+            return Some(lo);
+        }
+        let (lw, hw) = (lo / 64, (hi - 1) / 64);
+        for w in lw..=hw {
+            let word = self.demand_word(rd, w) & range_word_mask(w, lw, hw, lo, hi);
+            if word != 0 {
+                return Some(w * 64 + word.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    // ---- gang placement (multi-slot co-resident tasks) ----
+    //
+    // All gang queries share one shape: word-wise scan for the next free
+    // (or statically matching) slot via the masked-AND machinery above,
+    // identify its hosting node, check full containment in [lo, hi) and
+    // the per-node free-slot count, then jump past the node. Nodes are
+    // consecutive slot runs, so the scan visits each candidate node once.
+
+    /// First node *fully contained* in [lo, hi) holding at least `k`
+    /// free slots matching the demand. With `k <= 1` this reduces to the
+    /// node of [`first_matching_free`](Self::first_matching_free).
+    pub fn find_node_with_free(
+        &self,
+        state: &AvailMap,
+        lo: usize,
+        hi: usize,
+        rd: &ResolvedDemand,
+        k: usize,
+    ) -> Option<u32> {
+        if k <= 1 {
+            return self.first_matching_free(state, lo, hi, rd).map(|s| self.node_of(s));
+        }
+        debug_assert!(!self.trivial, "gang demands cannot resolve on a trivial catalog");
+        let mut s = lo;
+        while s < hi {
+            let slot = self.first_matching_free(state, s, hi, rd)?;
+            let node = self.node_of(slot);
+            let (nlo, nhi) = self.node_range(node);
+            if nlo >= lo && nhi <= hi && state.has_k_free_in(nlo, nhi, k) {
+                return Some(node);
+            }
+            s = nhi.max(slot + 1);
+        }
+        None
+    }
+
+    /// Atomically claim one gang for the demand in [lo, hi): `rd.gang`
+    /// free slots co-resident on one fully-contained node, appended to
+    /// `out` (global ids, ascending) and marked busy. All-or-nothing —
+    /// on `false`, `state` and `out` are untouched.
+    pub fn pop_gang_free(
+        &self,
+        state: &mut AvailMap,
+        lo: usize,
+        hi: usize,
+        rd: &ResolvedDemand,
+        out: &mut Vec<u32>,
+    ) -> bool {
+        let k = rd.gang as usize;
+        if k <= 1 {
+            match self.pop_matching_free(state, lo, hi, rd) {
+                Some(w) => {
+                    out.push(w as u32);
+                    true
+                }
+                None => false,
+            }
+        } else {
+            let Some(node) = self.find_node_with_free(state, lo, hi, rd, k) else {
+                return false;
+            };
+            let (nlo, nhi) = self.node_range(node);
+            for _ in 0..k {
+                let w = self
+                    .pop_matching_free(state, nlo, nhi, rd)
+                    .expect("find_node_with_free promised k free slots");
+                out.push(w as u32);
+            }
+            true
+        }
+    }
+
+    /// How many gangs of the demand fit in [lo, hi) *right now*:
+    /// Σ over fully-contained matching nodes of ⌊free slots / k⌋. With
+    /// `k <= 1` this is exactly
+    /// [`count_matching_free`](Self::count_matching_free) — the gang
+    /// planner degenerates to the constrained planner.
+    pub fn count_gangs_free(
+        &self,
+        state: &AvailMap,
+        lo: usize,
+        hi: usize,
+        rd: &ResolvedDemand,
+    ) -> usize {
+        let k = rd.gang as usize;
+        if k <= 1 {
+            return self.count_matching_free(state, lo, hi, rd);
+        }
+        let mut total = 0usize;
+        let mut s = lo;
+        while s < hi {
+            let Some(slot) = self.first_matching_free(state, s, hi, rd) else {
+                break;
+            };
+            let node = self.node_of(slot);
+            let (nlo, nhi) = self.node_range(node);
+            if nlo >= lo && nhi <= hi {
+                total += state.count_free_in(nlo, nhi) / k;
+            }
+            s = nhi.max(slot + 1);
+        }
+        total
+    }
+
+    /// Static gang capacity of [lo, hi): Σ over fully-contained matching
+    /// nodes of ⌊capacity / k⌋, ignoring freeness. Schedulers assert
+    /// this is > 0 for every gang demand's reachable range at setup, so
+    /// an unplaceable gang fails loudly instead of deadlocking.
+    pub fn gangs_possible(&self, lo: usize, hi: usize, rd: &ResolvedDemand) -> usize {
+        let k = rd.gang as usize;
+        if k <= 1 {
+            return self.count_matching(lo, hi, rd);
+        }
+        let mut total = 0usize;
+        let mut s = lo;
+        while s < hi {
+            let Some(slot) = self.first_matching(s, hi, rd) else {
+                break;
+            };
+            let node = self.node_of(slot);
+            let (nlo, nhi) = self.node_range(node);
+            if nlo >= lo && nhi <= hi {
+                total += (nhi - nlo) / k;
+            }
+            s = nhi.max(slot + 1);
+        }
+        total
     }
 }
 
@@ -580,6 +769,112 @@ mod tests {
         let nvme = c.resolve(&Demand::attrs(&["nvme"])).unwrap();
         let n = c.count_matching(0, 500, &nvme);
         assert!(n > 0 && n < 250, "nvme should be the scarce tier, got {n}");
+    }
+
+    #[test]
+    fn gang_node_ranges_cover_layout() {
+        let c = NodeCatalog::from_nodes(vec![
+            (1u32, vec!["ssd"]),
+            (2, vec!["gpu"]),
+            (1, vec![]),
+            (4, vec!["gpu", "ssd"]),
+        ]);
+        assert_eq!(c.node_range(0), (0, 1));
+        assert_eq!(c.node_range(1), (1, 3));
+        assert_eq!(c.node_range(2), (3, 4));
+        assert_eq!(c.node_range(3), (4, 8));
+        let u = NodeCatalog::uniform(5);
+        assert_eq!(u.node_range(3), (3, 4));
+    }
+
+    #[test]
+    fn gang_find_claim_and_counts() {
+        let c = NodeCatalog::from_nodes(vec![
+            (1u32, vec!["gpu"]), // slot 0
+            (2, vec!["gpu"]),    // 1..3
+            (1, vec![]),         // 3
+            (4, vec!["gpu"]),    // 4..8
+            (2, vec![]),         // 8..10
+        ]);
+        let rd = c.resolve(&Demand::new(2, vec!["gpu".into()])).unwrap();
+        assert_eq!(rd.gang_width(), 2);
+        assert!(rd.is_gang());
+        let mut state = AvailMap::all_free(10);
+        // static capacity: node1 (1 gang) + node3 (2 gangs); node0 is
+        // capacity-1 (filtered by the cap mask), node4 lacks gpu
+        assert_eq!(c.gangs_possible(0, 10, &rd), 3);
+        // first gang-capable node in the full range
+        assert_eq!(c.find_node_with_free(&state, 0, 10, &rd, 2), Some(1));
+        assert_eq!(c.count_gangs_free(&state, 0, 10, &rd), 3);
+        // containment: range [2, 10) cuts node 1 in half — only node 3
+        assert_eq!(c.find_node_with_free(&state, 2, 10, &rd, 2), Some(3));
+        assert_eq!(c.count_gangs_free(&state, 2, 10, &rd), 2);
+        assert_eq!(c.gangs_possible(2, 10, &rd), 2);
+        // claim is atomic and ascending
+        let mut out = Vec::new();
+        assert!(c.pop_gang_free(&mut state, 0, 10, &rd, &mut out));
+        assert_eq!(out, vec![1, 2]);
+        assert!(!state.is_free(1) && !state.is_free(2));
+        // node 1 is now full: two gangs remain, both on node 3
+        assert_eq!(c.count_gangs_free(&state, 0, 10, &rd), 2);
+        out.clear();
+        assert!(c.pop_gang_free(&mut state, 0, 10, &rd, &mut out));
+        assert_eq!(out, vec![4, 5]);
+        out.clear();
+        assert!(c.pop_gang_free(&mut state, 0, 10, &rd, &mut out));
+        assert_eq!(out, vec![6, 7]);
+        // nothing co-resident left: all-or-nothing leaves state untouched
+        out.clear();
+        let before = state.clone();
+        assert!(!c.pop_gang_free(&mut state, 0, 10, &rd, &mut out));
+        assert!(out.is_empty());
+        assert_eq!(state, before);
+    }
+
+    #[test]
+    fn gang_fragmentation_blocks_placement() {
+        // a capacity-4 node with alternating busy slots: 2 free slots
+        // co-resident, so a gang of 3 cannot place even though 2+ free
+        let c = NodeCatalog::from_nodes(vec![(4u32, Vec::<&str>::new()), (1, vec![])]);
+        let rd3 = c.resolve(&Demand::new(3, vec![])).unwrap();
+        let mut state = AvailMap::all_free(5);
+        state.set_busy(1);
+        state.set_busy(3);
+        assert_eq!(c.count_matching_free(&state, 0, 5, &rd3), 2);
+        assert_eq!(c.find_node_with_free(&state, 0, 5, &rd3, 3), None);
+        assert_eq!(c.count_gangs_free(&state, 0, 5, &rd3), 0);
+        state.set_free(1);
+        assert_eq!(c.find_node_with_free(&state, 0, 5, &rd3, 3), Some(0));
+    }
+
+    #[test]
+    fn gang_width_one_reduces_to_scalar_queries() {
+        let c = NodeCatalog::bimodal_gpu(256, 0.25);
+        let rd = c.resolve(&Demand::attrs(&["gpu"])).unwrap();
+        assert_eq!(rd.gang_width(), 1);
+        let mut state = AvailMap::all_free(256);
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..128 {
+            state.set_busy(rng.below(256));
+        }
+        for &(lo, hi) in &[(0usize, 256usize), (13, 200), (64, 128)] {
+            assert_eq!(
+                c.count_gangs_free(&state, lo, hi, &rd),
+                c.count_matching_free(&state, lo, hi, &rd)
+            );
+            assert_eq!(c.gangs_possible(lo, hi, &rd), c.count_matching(lo, hi, &rd));
+            assert_eq!(
+                c.find_node_with_free(&state, lo, hi, &rd, 1),
+                c.first_matching_free(&state, lo, hi, &rd).map(|s| c.node_of(s))
+            );
+        }
+        let mut a = state.clone();
+        let mut b = state.clone();
+        let mut out = Vec::new();
+        let popped = c.pop_matching_free(&mut a, 0, 256, &rd);
+        assert!(c.pop_gang_free(&mut b, 0, 256, &rd, &mut out));
+        assert_eq!(out, vec![popped.unwrap() as u32]);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //!                (--trace FILE | --workload yahoo|google|fixed --jobs N)
 //!                [--workers N] [--load X] [--seed N] [--xla]
 //!                [--hetero uniform|bimodal-gpu|rack-tiered] [--scarcity X]
-//!                [--constrained-frac X] [--require a,b] [--demand-slots K]
+//!                [--constrained-frac X] [--require a,b] [--gang K]
 //! megha prototype --scheduler megha|pigeon [--jobs N] [--time-scale X] [--xla]
 //! megha sweep [--schedulers megha,sparrow,eagle,pigeon] [--seeds N]
 //!             [--base-seed S] [--workers N1,N2,...] [--loads X1,X2,...]
@@ -14,19 +14,25 @@
 //!             [--net constant|jittered] [--net-ms X] [--jitter-ms X]
 //!             [--fail-gm-at T] [--threads K] [--preset NAME]
 //!             [--hetero PROFILE] [--scarcity X] [--constrained-frac X]
-//!             [--require a,b] [--demand-slots K]
+//!             [--require a,b] [--gang K]
 //! megha trace gen --workload yahoo|google|fixed --jobs N --workers N
 //!                 [--load X] [--seed N] --out FILE
-//!                 [--constrained-frac X] [--require a,b] [--demand-slots K]
+//!                 [--constrained-frac X] [--require a,b] [--gang K]
 //! megha trace stats --file FILE
 //! ```
+//!
+//! `--gang K` (alias: `--demand-slots K`) makes every constrained job's
+//! tasks gangs of K slots, co-resident on one node and atomically
+//! acquired/released (K > 1 needs a `--hetero` profile with nodes of
+//! capacity >= K).
 
 use anyhow::{bail, Context, Result};
 use megha::cluster::NodeCatalog;
 use megha::config::MeghaConfig;
 use megha::experiments::{self, Scale};
 use megha::metrics::{
-    summarize_class, summarize_constrained, summarize_constraint_wait, summarize_jobs, RunOutcome,
+    summarize_class, summarize_constrained, summarize_constraint_wait, summarize_gang,
+    summarize_gang_wait, summarize_jobs, RunOutcome,
 };
 use megha::proto::{driver, ProtoConfig};
 use megha::runtime::match_engine::RustMatchEngine;
@@ -82,7 +88,9 @@ fn scale_of(args: &Args) -> Result<Scale> {
     Scale::parse(&s).with_context(|| format!("bad --scale '{s}'"))
 }
 
-/// Parse `--require a,b` + `--demand-slots K` into a [`Demand`].
+/// Parse `--require a,b` + `--gang K` (alias `--demand-slots K`) into a
+/// [`Demand`]. `slots = K > 1` means every task is a gang of K slots
+/// co-resident on one node, atomically acquired and released.
 fn demand_of(args: &Args) -> Result<Demand> {
     let attrs: Vec<String> = args
         .get_or("require", "gpu")
@@ -95,9 +103,16 @@ fn demand_of(args: &Args) -> Result<Demand> {
             bail!("--require: bad attribute label '{a}'");
         }
     }
-    let slots = args.u64("demand-slots", 1);
+    if args.get("gang").is_some() && args.get("demand-slots").is_some() {
+        bail!("--gang and --demand-slots are aliases; give only one");
+    }
+    let slots = if args.get("gang").is_some() {
+        args.u64("gang", 1)
+    } else {
+        args.u64("demand-slots", 1)
+    };
     if slots == 0 {
-        bail!("--demand-slots must be >= 1");
+        bail!("--gang/--demand-slots must be >= 1");
     }
     Ok(Demand::new(slots as u32, attrs))
 }
@@ -129,8 +144,9 @@ fn hetero_of(args: &Args) -> Result<Option<sweep::HeteroSpec>> {
     if constrained_frac > 0.0 {
         if let Err(e) = probe.resolve(&demand) {
             bail!(
-                "--require/--demand-slots do not fit profile '{profile}': {e} \
-                 (rack-tiered offers nvme/ssd/hdd/big-mem; bimodal-gpu offers gpu)"
+                "--require/--gang do not fit profile '{profile}': {e} \
+                 (rack-tiered offers nvme/ssd/hdd/big-mem and capacity-4 nodes; \
+                 bimodal-gpu offers gpu on capacity-2 nodes)"
             );
         }
     }
@@ -198,6 +214,15 @@ fn print_outcome(name: &str, out: &RunOutcome, short_only: bool) {
             "  constrained: {} jobs | delay p50 {:.4}s p99 {:.3}s | \
              constraint_wait p50 {:.4}s p99 {:.3}s | rejections {}",
             cs.n, cs.median, cs.p99, cw.median, cw.p99, out.constraint_rejections
+        );
+    }
+    let gs = summarize_gang(&out.jobs);
+    if gs.n > 0 {
+        let gw = summarize_gang_wait(&out.jobs);
+        println!(
+            "  gang: {} jobs | delay p50 {:.4}s p99 {:.3}s | \
+             gang_wait p50 {:.4}s p99 {:.3}s | gang rejections {}",
+            gs.n, gs.median, gs.p99, gw.median, gw.p99, out.gang_rejections
         );
     }
 }
@@ -337,6 +362,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             "constrained-frac",
             "require",
             "demand-slots",
+            "gang",
         ] {
             if args.get(flag).is_some() {
                 bail!("--preset {p} fixes the scenario grid; drop --{flag}");

@@ -26,6 +26,15 @@ pub struct JobRecord {
     /// worker was all the scheduler could see/probe) until the job's
     /// next successful task launch. Zero for unconstrained jobs.
     pub constraint_wait_s: f64,
+    /// Whether the job's tasks are gangs (`Demand::slots > 1`: multiple
+    /// slots co-resident on one node, atomically acquired/released).
+    pub gang: bool,
+    /// Seconds the job spent *gang-blocked*: matching free capacity was
+    /// visible/probed but never `slots` co-resident slots on one node,
+    /// from the failure until the next successful gang launch. Zero for
+    /// non-gang jobs; disjoint from `constraint_wait_s` (which covers
+    /// "no matching capacity at all").
+    pub gang_wait_s: f64,
 }
 
 impl JobRecord {
@@ -76,6 +85,12 @@ pub struct RunOutcome {
     /// a constrained job head could not place despite visible free
     /// capacity (Megha). Always 0 for unconstrained workloads.
     pub constraint_rejections: u64,
+    /// Gang-caused placement rejections: LM all-or-nothing verifications
+    /// that failed on partial fit (Megha), probes that surfaced on a
+    /// node without `slots` co-resident free slots (Sparrow/Eagle), and
+    /// queue passes/skips forced by insufficient co-residency (Eagle
+    /// central, Pigeon). Always 0 when no job has `Demand::slots > 1`.
+    pub gang_rejections: u64,
     /// Simulated makespan.
     pub makespan: SimTime,
     pub breakdown: DelayBreakdown,
@@ -198,6 +213,24 @@ pub fn summarize_constraint_wait(jobs: &[JobRecord]) -> DelaySummary {
     summarize(&d)
 }
 
+/// Summary restricted to gang jobs (Eq. 2 delays) — the gang sweep's
+/// headline comparison: how much one-shot co-resident placement from a
+/// global view shrinks gang-job completion delay versus probing.
+pub fn summarize_gang(jobs: &[JobRecord]) -> DelaySummary {
+    let d: Vec<f64> = jobs.iter().filter(|j| j.gang).map(|j| j.delay()).collect();
+    summarize(&d)
+}
+
+/// Percentiles of the per-job `gang_wait` breakdown, over gang jobs only.
+pub fn summarize_gang_wait(jobs: &[JobRecord]) -> DelaySummary {
+    let d: Vec<f64> = jobs
+        .iter()
+        .filter(|j| j.gang)
+        .map(|j| j.gang_wait_s)
+        .collect();
+    summarize(&d)
+}
+
 /// Job delays as a plain vector (for CDFs / the XLA stats path).
 pub fn delays(jobs: &[JobRecord]) -> Vec<f64> {
     jobs.iter().map(|j| j.delay()).collect()
@@ -217,6 +250,8 @@ mod tests {
             class: JobClass::Short,
             constrained: false,
             constraint_wait_s: 0.0,
+            gang: false,
+            gang_wait_s: 0.0,
         }
     }
 
@@ -296,6 +331,30 @@ mod tests {
         assert!((cw.mean - 1.5).abs() < 1e-9);
         // no constrained jobs → empty summaries
         assert_eq!(summarize_constrained(&jobs[..1]).n, 0);
+    }
+
+    #[test]
+    fn gang_summaries_filter() {
+        let mut jobs = vec![rec(0, 0.0, 2.0, 1.0)]; // not a gang job
+        jobs.push(JobRecord {
+            constrained: true,
+            gang: true,
+            gang_wait_s: 1.5,
+            ..rec(1, 0.0, 7.0, 1.0) // delay 6
+        });
+        jobs.push(JobRecord {
+            constrained: true,
+            gang: true,
+            gang_wait_s: 0.0,
+            ..rec(2, 0.0, 3.0, 1.0) // delay 2
+        });
+        let gd = summarize_gang(&jobs);
+        assert_eq!(gd.n, 2);
+        assert!((gd.max - 6.0).abs() < 1e-9);
+        let gw = summarize_gang_wait(&jobs);
+        assert_eq!(gw.n, 2);
+        assert!((gw.max - 1.5).abs() < 1e-9);
+        assert_eq!(summarize_gang(&jobs[..1]).n, 0);
     }
 
     #[test]

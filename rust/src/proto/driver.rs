@@ -226,6 +226,8 @@ fn to_record(
         class: j.class(cfg.short_threshold),
         constrained: j.demand.is_some(),
         constraint_wait_s: 0.0, // prototype runs are unconstrained
+        gang: j.demand.as_ref().is_some_and(|d| d.slots > 1),
+        gang_wait_s: 0.0,
     }
 }
 

@@ -104,6 +104,52 @@ pub fn constrained_plan(
     out
 }
 
+/// Gang-aware match: the same ordering contract as
+/// [`MatchPlanner::plan`] and [`constrained_plan`] (internal partitions
+/// first, round-robin from `rr`, saturate-then-advance, then external
+/// partitions), but a partition's capacity is the number of *gangs* of
+/// the demand it can host right now
+/// ([`NodeCatalog::count_gangs_free`]: fully-contained nodes with
+/// `rd.gang_width()` co-resident free matching slots). Each planned
+/// unit is one gang task, i.e. `gang_width()` slots claimed atomically.
+/// With `gang_width() <= 1` this is exactly [`constrained_plan`].
+pub fn gang_plan(
+    state: &AvailMap,
+    catalog: &NodeCatalog,
+    rd: &ResolvedDemand,
+    internal: &[bool],
+    rr: usize,
+    n_tasks: usize,
+    mut part_range: impl FnMut(usize) -> (usize, usize),
+) -> Plan {
+    let p = internal.len();
+    if p == 0 || n_tasks == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut left = n_tasks;
+    for want_internal in [true, false] {
+        for off in 0..p {
+            if left == 0 {
+                break;
+            }
+            let part = (rr + off) % p;
+            if internal[part] != want_internal {
+                continue;
+            }
+            let (lo, hi) = part_range(part);
+            let avail = catalog.count_gangs_free(state, lo, hi, rd);
+            if avail == 0 {
+                continue;
+            }
+            let k = left.min(avail);
+            out.push((part, k));
+            left -= k;
+        }
+    }
+    out
+}
+
 /// XLA-backed engine executing the AOT artifact. Constructed in
 /// `pjrt.rs`-land; re-exported here so call sites only see the trait.
 pub use super::pjrt::XlaMatchEngine;
@@ -183,6 +229,41 @@ mod tests {
         let any = catalog.resolve(&Demand::new(1, vec![])).unwrap();
         let plan2 = constrained_plan(&state, &catalog, &any, &internal, 0, 100, range);
         assert_eq!(plan_total(&plan2), 32);
+    }
+
+    #[test]
+    fn gang_plan_counts_gangs_and_keeps_contract() {
+        use crate::workload::Demand;
+        // 4 partitions x 8 slots over bimodal-gpu: every 32-slot stripe
+        // ends in gpu pairs, so with scarcity 0.25 each partition's 8
+        // slots either contain a full capacity-2 gpu node or none
+        let catalog = NodeCatalog::bimodal_gpu(32, 0.25);
+        let rd = catalog.resolve(&Demand::new(2, vec!["gpu".into()])).unwrap();
+        let state = AvailMap::all_free(32);
+        let internal = [false, true, false, true];
+        let range = |p: usize| (p * 8, p * 8 + 8);
+        let plan = gang_plan(&state, &catalog, &rd, &internal, 1, 100, range);
+        let per_part: Vec<usize> = (0..4)
+            .map(|p| catalog.count_gangs_free(&state, p * 8, p * 8 + 8, &rd))
+            .collect();
+        let total: usize = per_part.iter().sum();
+        assert!(total > 0, "profile must offer gpu pairs: {per_part:?}");
+        assert_eq!(plan_total(&plan), total.min(100));
+        for &(p, k) in &plan {
+            assert!(k <= per_part[p], "{plan:?} vs {per_part:?}");
+        }
+        // internal-first ordering holds
+        if let (Some(i), Some(e)) = (
+            plan.iter().position(|&(p, _)| internal[p]),
+            plan.iter().position(|&(p, _)| !internal[p]),
+        ) {
+            assert!(i < e, "{plan:?}");
+        }
+        // width-1 demand: gang_plan ≡ constrained_plan
+        let rd1 = catalog.resolve(&Demand::attrs(&["gpu"])).unwrap();
+        let a = gang_plan(&state, &catalog, &rd1, &internal, 2, 10, range);
+        let b = constrained_plan(&state, &catalog, &rd1, &internal, 2, 10, range);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -84,48 +84,94 @@ impl TaskCursor {
     }
 }
 
+/// A per-job open-interval clock: [`block`](Self::block) starts an
+/// interval idempotently, [`unblock`](Self::unblock) closes it and
+/// accrues its length. Backs both the constraint clock and the gang
+/// clock of [`JobTracker`].
+struct BlockClock {
+    since: Vec<Option<SimTime>>,
+    acc_s: Vec<f64>,
+}
+
+impl BlockClock {
+    fn new(n: usize) -> BlockClock {
+        BlockClock {
+            since: vec![None; n],
+            acc_s: vec![0.0; n],
+        }
+    }
+
+    fn block(&mut self, job_idx: usize, now: SimTime) {
+        if self.since[job_idx].is_none() {
+            self.since[job_idx] = Some(now);
+        }
+    }
+
+    fn unblock(&mut self, job_idx: usize, now: SimTime) {
+        if let Some(t0) = self.since[job_idx].take() {
+            self.acc_s[job_idx] += now.saturating_sub(t0).as_secs();
+        }
+    }
+}
+
 /// Tracks per-job task completion and builds [`JobRecord`]s. Also owns
-/// the per-job *constraint clock*: schedulers mark a job
-/// constraint-blocked when a placement fails purely because of its
-/// demand ([`constraint_block`](Self::constraint_block)) and unblock it
-/// on the next successful launch; the accumulated seconds surface as
-/// [`JobRecord::constraint_wait_s`].
+/// the per-job *constraint clock* and *gang clock*: schedulers mark a
+/// job constraint-blocked when a placement fails purely because of its
+/// demand ([`constraint_block`](Self::constraint_block)) and
+/// gang-blocked when matching capacity was visible but never
+/// `Demand::slots` co-resident free slots on one node
+/// ([`gang_block`](Self::gang_block)); each clock unblocks on the next
+/// successful launch, and the accumulated seconds surface as
+/// [`JobRecord::constraint_wait_s`] / [`JobRecord::gang_wait_s`].
 pub struct JobTracker {
     remaining: Vec<u32>,
     records: Vec<Option<JobRecord>>,
     short_threshold: SimTime,
     done: usize,
     constrained: Vec<bool>,
-    cwait_s: Vec<f64>,
-    cblocked_since: Vec<Option<SimTime>>,
+    gang: Vec<bool>,
+    cclock: BlockClock,
+    gclock: BlockClock,
 }
 
 impl JobTracker {
     pub fn new(trace: &Trace, short_threshold: SimTime) -> JobTracker {
+        let n = trace.jobs.len();
         JobTracker {
             remaining: trace.jobs.iter().map(|j| j.n_tasks() as u32).collect(),
-            records: vec![None; trace.jobs.len()],
+            records: vec![None; n],
             short_threshold,
             done: 0,
             constrained: trace.jobs.iter().map(|j| j.demand.is_some()).collect(),
-            cwait_s: vec![0.0; trace.jobs.len()],
-            cblocked_since: vec![None; trace.jobs.len()],
+            gang: trace
+                .jobs
+                .iter()
+                .map(|j| j.demand.as_ref().is_some_and(|d| d.slots > 1))
+                .collect(),
+            cclock: BlockClock::new(n),
+            gclock: BlockClock::new(n),
         }
     }
 
     /// Start (idempotently) the job's constraint-blocked interval.
     pub fn constraint_block(&mut self, job_idx: usize, now: SimTime) {
-        if self.cblocked_since[job_idx].is_none() {
-            self.cblocked_since[job_idx] = Some(now);
-        }
+        self.cclock.block(job_idx, now);
     }
 
     /// Close the job's constraint-blocked interval, accruing its length.
     /// No-op when the job is not blocked.
     pub fn constraint_unblock(&mut self, job_idx: usize, now: SimTime) {
-        if let Some(t0) = self.cblocked_since[job_idx].take() {
-            self.cwait_s[job_idx] += now.saturating_sub(t0).as_secs();
-        }
+        self.cclock.unblock(job_idx, now);
+    }
+
+    /// Start (idempotently) the job's gang-blocked interval.
+    pub fn gang_block(&mut self, job_idx: usize, now: SimTime) {
+        self.gclock.block(job_idx, now);
+    }
+
+    /// Close the job's gang-blocked interval (no-op when not blocked).
+    pub fn gang_unblock(&mut self, job_idx: usize, now: SimTime) {
+        self.gclock.unblock(job_idx, now);
     }
 
     /// Record one finished task; returns true if this completed the job.
@@ -133,8 +179,9 @@ impl JobTracker {
         debug_assert!(self.remaining[job_idx] > 0, "job {job_idx} over-completed");
         self.remaining[job_idx] -= 1;
         if self.remaining[job_idx] == 0 {
-            // a still-open constraint interval ends at completion
+            // still-open constraint/gang intervals end at completion
             self.constraint_unblock(job_idx, now);
+            self.gang_unblock(job_idx, now);
             let j = &trace.jobs[job_idx];
             self.records[job_idx] = Some(JobRecord {
                 job_id: j.id,
@@ -144,7 +191,9 @@ impl JobTracker {
                 n_tasks: j.n_tasks(),
                 class: j.class(self.short_threshold),
                 constrained: self.constrained[job_idx],
-                constraint_wait_s: self.cwait_s[job_idx],
+                constraint_wait_s: self.cclock.acc_s[job_idx],
+                gang: self.gang[job_idx],
+                gang_wait_s: self.gclock.acc_s[job_idx],
             });
             self.done += 1;
             true
@@ -223,6 +272,57 @@ mod tests {
         let out = t.into_outcome(SimTime::from_secs(6.0));
         assert!(out.jobs[0].constrained);
         assert!((out.jobs[0].constraint_wait_s - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gang_clock_accrues_blocked_intervals() {
+        use crate::workload::{Demand, Job, Trace};
+        let trace = Trace::new(
+            "g",
+            vec![Job::new(0, SimTime::ZERO, vec![SimTime::from_secs(1.0); 2])
+                .with_demand(Demand::new(2, vec!["gpu".into()]))],
+        );
+        let mut t = JobTracker::new(&trace, SimTime::from_secs(90.0));
+        // gang-blocked [1, 4), double-block idempotent; the constraint
+        // clock is independent
+        t.gang_block(0, SimTime::from_secs(1.0));
+        t.gang_block(0, SimTime::from_secs(2.0));
+        t.constraint_block(0, SimTime::from_secs(2.0));
+        t.constraint_unblock(0, SimTime::from_secs(3.0));
+        t.gang_unblock(0, SimTime::from_secs(4.0));
+        // unblock without a block is a no-op
+        t.gang_unblock(0, SimTime::from_secs(5.0));
+        // an open gang interval [6, 7) is closed by completion
+        t.gang_block(0, SimTime::from_secs(6.0));
+        t.task_done(&trace, 0, SimTime::from_secs(6.5));
+        assert!(t.task_done(&trace, 0, SimTime::from_secs(7.0)));
+        let out = t.into_outcome(SimTime::from_secs(7.0));
+        assert!(out.jobs[0].constrained && out.jobs[0].gang);
+        assert!((out.jobs[0].gang_wait_s - 4.0).abs() < 1e-9);
+        assert!((out.jobs[0].constraint_wait_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gang_flag_tracks_demand_width() {
+        use crate::workload::{Demand, Job, Trace};
+        let trace = Trace::new(
+            "gf",
+            vec![
+                Job::new(0, SimTime::ZERO, vec![SimTime::from_secs(1.0)]),
+                Job::new(1, SimTime::ZERO, vec![SimTime::from_secs(1.0)])
+                    .with_demand(Demand::attrs(&["gpu"])),
+                Job::new(2, SimTime::ZERO, vec![SimTime::from_secs(1.0)])
+                    .with_demand(Demand::new(3, vec![])),
+            ],
+        );
+        let mut t = JobTracker::new(&trace, SimTime::from_secs(90.0));
+        for j in 0..3 {
+            t.task_done(&trace, j, SimTime::from_secs(1.0));
+        }
+        let out = t.into_outcome(SimTime::from_secs(1.0));
+        assert!(!out.jobs[0].constrained && !out.jobs[0].gang);
+        assert!(out.jobs[1].constrained && !out.jobs[1].gang);
+        assert!(out.jobs[2].constrained && out.jobs[2].gang);
     }
 
     #[test]

@@ -41,18 +41,44 @@ pub enum Ev {
     Ready { job: u32, worker: u32 },
     /// scheduler → worker: short task assignment (None = no-op)
     Launch { worker: u32, job: u32, dur: Option<SimTime> },
+    /// scheduler → node: start a short *gang* task on `workers`
+    /// (co-resident slots of one node; `workers[0]` is the probed
+    /// anchor, the rest idle co-residents reserved at bind time)
+    GangLaunch { job: u32, workers: Vec<u32>, dur: SimTime },
     /// central scheduler → worker: long task (eager, carries duration)
     LongPlace { worker: u32, job: u32, dur: SimTime },
+    /// central scheduler → node: long *gang* task, placed whole against
+    /// the central view; members racing a short task queue a gang hold
+    /// at the worker and the gang starts when the last member frees
+    GangPlace { job: u32, workers: Vec<u32>, dur: SimTime },
     Finish { worker: u32, job: u32, long: bool },
-    /// completion notice to the tracker (and central view update)
+    /// gang execution finished: all member slots free atomically
+    GangFinish { workers: Vec<u32>, job: u32, long: bool },
     Done { job: u32, worker: u32, long: bool },
+    /// gang completion notice (central view frees all members)
+    GangDone { job: u32, workers: Vec<u32>, long: bool },
 }
 
-/// Reservation-queue payload: a late-bound short reservation or an
-/// eagerly-bound long task that raced with a short one.
+/// Reservation-queue payload: a late-bound short reservation, an
+/// eagerly-bound long task that raced with a short one, or a hold for
+/// one member slot of a racing long gang.
 enum QItem {
     Reservation(u32), // short job id (late binding)
     LongTask { job: u32, dur: SimTime },
+    /// Member hold of long gang `gangs[gang]`: the worker joins the
+    /// gang when this surfaces, and the gang starts when all members
+    /// have joined.
+    GangHold { gang: u32 },
+}
+
+/// A long gang placed by the central scheduler whose members are not
+/// all free yet (whole-or-queue at the node).
+struct GangState {
+    job: u32,
+    dur: SimTime,
+    workers: Vec<u32>,
+    /// Members still executing something else (holds outstanding).
+    need: u32,
 }
 
 pub struct Eagle<'a> {
@@ -75,6 +101,13 @@ pub struct Eagle<'a> {
     /// constraint-aware against its own (possibly stale) view — the one
     /// place Eagle's architecture can exploit a catalog.
     demands: Vec<Option<ResolvedDemand>>,
+    /// Long gangs placed whole but waiting for racing members
+    /// (`None` once started); indexed by `QItem::GangHold::gang`.
+    gangs: Vec<Option<GangState>>,
+    /// Recyclable `None` slots of `gangs`, so the table is bounded by
+    /// the number of *concurrently waiting* gangs, not the total raced
+    /// over a run.
+    free_gangs: Vec<u32>,
 }
 
 impl<'a> Eagle<'a> {
@@ -99,13 +132,49 @@ impl<'a> Eagle<'a> {
             .collect();
         let demands = hetero::resolve_trace(&cfg.catalog, trace);
         // strict feasibility: a constrained long job must be satisfiable
-        // inside the long partition, or its FIFO queue would deadlock
+        // inside the long partition, or its FIFO queue would deadlock;
+        // gang demands additionally need a node with enough co-resident
+        // slots the central view could ever offer (the short partition
+        // is permanently busy in it)
+        let long_probe = {
+            let mut m = AvailMap::all_free(n_workers);
+            for w in 0..short_cut {
+                m.set_busy(w);
+            }
+            m
+        };
         for (i, rd) in demands.iter().enumerate() {
-            if let (Some(rd), JobClass::Long) = (rd, classes[i]) {
-                assert!(
-                    cfg.catalog.count_matching(short_cut, n_workers, rd) > 0,
-                    "job {i}: demand matches nothing in Eagle's long partition"
-                );
+            match (rd, classes[i]) {
+                (Some(rd), JobClass::Long) => {
+                    if rd.is_gang() {
+                        assert!(
+                            cfg.catalog
+                                .find_node_with_free(
+                                    &long_probe,
+                                    0,
+                                    n_workers,
+                                    rd,
+                                    rd.gang_width() as usize
+                                )
+                                .is_some(),
+                            "job {i}: gang of {} fits on no node of Eagle's long partition",
+                            rd.gang_width()
+                        );
+                    } else {
+                        assert!(
+                            cfg.catalog.count_matching(short_cut, n_workers, rd) > 0,
+                            "job {i}: demand matches nothing in Eagle's long partition"
+                        );
+                    }
+                }
+                (Some(rd), JobClass::Short) if rd.is_gang() => {
+                    assert!(
+                        cfg.catalog.gangs_possible(0, n_workers, rd) > 0,
+                        "job {i}: gang of {} fits on no node of the catalog",
+                        rd.gang_width()
+                    );
+                }
+                _ => {}
             }
         }
         Eagle {
@@ -118,6 +187,8 @@ impl<'a> Eagle<'a> {
             long_q: VecDeque::new(),
             long_busy: AvailMap::all_busy(n_workers),
             demands,
+            gangs: Vec::new(),
+            free_gangs: Vec::new(),
         }
     }
 
@@ -125,6 +196,45 @@ impl<'a> Eagle<'a> {
         while let Some(&(job, dur)) = self.long_q.front() {
             let rd = self.demands[job as usize].as_ref();
             let len = self.central_free.len();
+            if let Some(rd) = rd.filter(|rd| rd.is_gang()) {
+                // gang: claim gang_width() co-resident slots whole
+                // against the central view, or keep the gang queued
+                // (whole-or-queue — never a partial placement)
+                let mut slots: Vec<u32> = ctx.pool.take();
+                if self
+                    .cfg
+                    .catalog
+                    .pop_gang_free(&mut self.central_free, 0, len, rd, &mut slots)
+                {
+                    self.long_q.pop_front();
+                    ctx.constraint_unblock(job);
+                    ctx.gang_unblock(job);
+                    ctx.out.decisions += 1;
+                    ctx.send(Ev::GangPlace {
+                        job,
+                        workers: slots,
+                        dur,
+                    });
+                    continue;
+                }
+                ctx.pool.give(slots);
+                if self.central_free.free_count() > 0 {
+                    if self
+                        .cfg
+                        .catalog
+                        .count_matching_free(&self.central_free, 0, len, rd)
+                        > 0
+                    {
+                        // matching capacity visible, never co-resident
+                        ctx.out.gang_rejections += 1;
+                        ctx.gang_block(job);
+                    } else {
+                        ctx.out.constraint_rejections += 1;
+                        ctx.constraint_block(job);
+                    }
+                }
+                break;
+            }
             let w = match rd {
                 None => self.central_free.pop_free_in(0, len),
                 // centralized: the long-job scheduler owns a global view
@@ -208,7 +318,14 @@ impl Scheduler for Eagle<'_> {
                     let w = &mut self.workers[worker as usize];
                     w.queue.push_back(QItem::Reservation(job));
                     if w.state == WState::Idle {
-                        advance_worker(worker, &mut self.workers, ctx);
+                        advance_worker(
+                            worker,
+                            &mut self.workers,
+                            &mut self.gangs,
+                            &mut self.free_gangs,
+                            &mut self.long_busy,
+                            ctx,
+                        );
                     }
                 }
             }
@@ -244,19 +361,57 @@ impl Scheduler for Eagle<'_> {
                     // a fully-bound job's leftover reservations are NOT
                     // constraint misses — they fall through to the normal
                     // proactive-cancellation no-op below
-                    if !self.jobs[job as usize].exhausted()
-                        && !self.cfg.catalog.slot_matches(worker as usize, rd)
-                    {
-                        // constraint verified at the probed node — and
-                        // failed: no-op the worker, re-probe blind (as in
-                        // Sparrow; SSS only tracks long-occupancy, not
-                        // attributes)
-                        ctx.out.constraint_rejections += 1;
-                        ctx.constraint_block(job);
-                        ctx.send(Ev::Launch { worker, job, dur: None });
-                        let w = ctx.rng.below(self.cfg.workers) as u32;
-                        ctx.send(Ev::Probe { worker: w, job, retry: 0 });
-                        return;
+                    if !self.jobs[job as usize].exhausted() {
+                        if !self.cfg.catalog.slot_matches(worker as usize, rd) {
+                            // constraint verified at the probed node — and
+                            // failed: no-op the worker, re-probe blind (as in
+                            // Sparrow; SSS only tracks long-occupancy, not
+                            // attributes)
+                            ctx.out.constraint_rejections += 1;
+                            ctx.constraint_block(job);
+                            ctx.send(Ev::Launch { worker, job, dur: None });
+                            let w = ctx.rng.below(self.cfg.workers) as u32;
+                            ctx.send(Ev::Probe { worker: w, job, retry: 0 });
+                            return;
+                        }
+                        if rd.is_gang() {
+                            // gang: only the probed node's occupancy is
+                            // discoverable — bind the probed slot plus
+                            // idle co-residents, or no-op and re-probe
+                            // blind on a partial fit (as in Sparrow)
+                            let k = rd.gang_width() as usize;
+                            let mut members: Vec<u32> = ctx.pool.take();
+                            if !crate::sched::sparrow::idle_coresidents(
+                                &self.workers,
+                                &self.cfg.catalog,
+                                worker,
+                                k,
+                                &mut members,
+                            ) {
+                                ctx.pool.give(members);
+                                ctx.out.gang_rejections += 1;
+                                ctx.gang_block(job);
+                                ctx.send(Ev::Launch { worker, job, dur: None });
+                                let w = ctx.rng.below(self.cfg.workers) as u32;
+                                ctx.send(Ev::Probe { worker: w, job, retry: 0 });
+                                return;
+                            }
+                            let (_, dur) = self.jobs[job as usize]
+                                .bind_next(&ctx.trace.jobs[job as usize])
+                                .expect("gang bind after exhaustion check");
+                            ctx.out.decisions += 1;
+                            ctx.constraint_unblock(job);
+                            ctx.gang_unblock(job);
+                            for &w in &members[1..] {
+                                self.workers[w as usize].state = WState::Busy { long: false };
+                            }
+                            ctx.send(Ev::GangLaunch {
+                                job,
+                                workers: members,
+                                dur,
+                            });
+                            return;
+                        }
                     }
                 }
                 let dur = match self.jobs[job as usize].bind_next(&ctx.trace.jobs[job as usize]) {
@@ -271,6 +426,98 @@ impl Scheduler for Eagle<'_> {
                 };
                 ctx.send(Ev::Launch { worker, job, dur });
             }
+            Ev::GangLaunch { job, workers, dur } => {
+                debug_assert!(self.workers[workers[0] as usize].state == WState::Waiting);
+                for &w in &workers {
+                    self.workers[w as usize].state = WState::Busy { long: false };
+                }
+                ctx.out.tasks += 1;
+                ctx.push_after(dur, Ev::GangFinish {
+                    workers,
+                    job,
+                    long: false,
+                });
+            }
+            Ev::GangPlace { job, workers, dur } => {
+                // whole-or-queue at the node: idle members commit
+                // immediately; members racing a short task get a gang
+                // hold queued and join when they free (the head-of-line
+                // blocking SSS cannot dodge for eagerly-bound work)
+                let gid = self
+                    .free_gangs
+                    .last()
+                    .copied()
+                    .unwrap_or(self.gangs.len() as u32);
+                let mut need = 0u32;
+                for &w in &workers {
+                    let ws = &mut self.workers[w as usize];
+                    if ws.state == WState::Idle {
+                        ws.state = WState::Busy { long: true };
+                        self.long_busy.set_free(w as usize);
+                    } else {
+                        ws.queue.push_back(QItem::GangHold { gang: gid });
+                        need += 1;
+                    }
+                }
+                if need == 0 {
+                    ctx.out.tasks += 1;
+                    ctx.push_after(dur, Ev::GangFinish {
+                        workers,
+                        job,
+                        long: true,
+                    });
+                } else {
+                    let state = Some(GangState {
+                        job,
+                        dur,
+                        workers,
+                        need,
+                    });
+                    if self.free_gangs.pop().is_some() {
+                        self.gangs[gid as usize] = state; // recycled slot
+                    } else {
+                        self.gangs.push(state);
+                    }
+                }
+            }
+            Ev::GangFinish { workers, job, long } => {
+                let mut members: Vec<u32> = ctx.pool.take();
+                members.extend_from_slice(&workers);
+                let d = ctx.net_delay();
+                ctx.out.breakdown.comm_s += d.as_secs();
+                ctx.push_after(d, Ev::GangDone { job, workers, long });
+                // atomic release: all member slots free together
+                for &w in &members {
+                    self.workers[w as usize].state = WState::Idle;
+                    if long {
+                        self.long_busy.set_busy(w as usize);
+                    }
+                }
+                for &w in &members {
+                    advance_worker(
+                        w,
+                        &mut self.workers,
+                        &mut self.gangs,
+                        &mut self.free_gangs,
+                        &mut self.long_busy,
+                        ctx,
+                    );
+                }
+                ctx.pool.give(members);
+            }
+            Ev::GangDone { job, workers, long } => {
+                ctx.out.messages += 1;
+                ctx.task_done(job);
+                if long {
+                    for &w in &workers {
+                        self.central_free.set_free(w as usize);
+                    }
+                    ctx.pool.give(workers);
+                    self.drain_long(ctx);
+                } else {
+                    ctx.pool.give(workers);
+                }
+            }
             Ev::Launch { worker, job, dur } => {
                 match dur {
                     Some(dur) => {
@@ -284,7 +531,14 @@ impl Scheduler for Eagle<'_> {
                     }
                     None => {
                         self.workers[worker as usize].state = WState::Idle;
-                        advance_worker(worker, &mut self.workers, ctx);
+                        advance_worker(
+                            worker,
+                            &mut self.workers,
+                            &mut self.gangs,
+                            &mut self.free_gangs,
+                            &mut self.long_busy,
+                            ctx,
+                        );
                     }
                 }
             }
@@ -314,7 +568,14 @@ impl Scheduler for Eagle<'_> {
                 self.workers[worker as usize].state = WState::Idle;
                 if long {
                     self.long_busy.set_busy(worker as usize);
-                    advance_worker(worker, &mut self.workers, ctx);
+                    advance_worker(
+                        worker,
+                        &mut self.workers,
+                        &mut self.gangs,
+                        &mut self.free_gangs,
+                        &mut self.long_busy,
+                        ctx,
+                    );
                 } else {
                     // sticky batch probing: same job first (the worker
                     // just ran a task of this job, so it matches any
@@ -334,7 +595,14 @@ impl Scheduler for Eagle<'_> {
                             });
                         }
                         None => {
-                            advance_worker(worker, &mut self.workers, ctx);
+                            advance_worker(
+                                worker,
+                                &mut self.workers,
+                                &mut self.gangs,
+                                &mut self.free_gangs,
+                                &mut self.long_busy,
+                                ctx,
+                            );
                         }
                     }
                 }
@@ -357,9 +625,18 @@ pub fn simulate(cfg: &EagleConfig, trace: &Trace) -> RunOutcome {
 }
 
 /// Idle worker surfaces its reservation queue: a short reservation turns
-/// into a Ready RPC; a queued long task starts executing immediately.
-/// (long_busy bookkeeping for queued long tasks happens in Finish.)
-fn advance_worker(worker: u32, workers: &mut [ProbeWorker<QItem>], ctx: &mut SimCtx<'_, Ev>) {
+/// into a Ready RPC; a queued long task starts executing immediately; a
+/// gang hold joins its long gang, which starts once the last member has
+/// joined. (long_busy bookkeeping for queued long tasks happens in
+/// Finish.)
+fn advance_worker(
+    worker: u32,
+    workers: &mut [ProbeWorker<QItem>],
+    gangs: &mut [Option<GangState>],
+    free_gangs: &mut Vec<u32>,
+    long_busy: &mut AvailMap,
+    ctx: &mut SimCtx<'_, Ev>,
+) {
     let w = &mut workers[worker as usize];
     if w.state != WState::Idle {
         return;
@@ -377,6 +654,26 @@ fn advance_worker(worker: u32, workers: &mut [ProbeWorker<QItem>], ctx: &mut Sim
                 job,
                 long: true,
             });
+        }
+        Some(QItem::GangHold { gang }) => {
+            w.state = WState::Busy { long: true };
+            long_busy.set_free(worker as usize); // bit set = long-busy
+            let slot = &mut gangs[gang as usize];
+            let need = {
+                let g = slot.as_mut().expect("gang hold after gang start");
+                g.need -= 1;
+                g.need
+            };
+            if need == 0 {
+                let g = slot.take().expect("last hold just joined");
+                free_gangs.push(gang);
+                ctx.out.tasks += 1;
+                ctx.push_after(g.dur, Ev::GangFinish {
+                    workers: g.workers,
+                    job: g.job,
+                    long: true,
+                });
+            }
         }
         None => {}
     }
@@ -465,6 +762,82 @@ mod tests {
             synthetic_fixed_constrained(10, 15, 2.0, 0.5, 320, 16, 0.3, Demand::attrs(&["gpu"]));
         let out2 = simulate(&cfg2, &trace2);
         assert_eq!(out2.jobs.len(), 15);
+    }
+
+    #[test]
+    fn gang_short_jobs_complete_via_probe_discovery() {
+        use crate::cluster::NodeCatalog;
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        let mut cfg = EagleConfig::for_workers(320);
+        cfg.sim.seed = 23;
+        cfg.catalog = NodeCatalog::bimodal_gpu(320, 0.25);
+        // 1 s tasks: short class — gangs bind probed slot + idle
+        // co-residents, partial fits re-probe blind
+        let trace = synthetic_fixed_constrained(
+            10,
+            30,
+            1.0,
+            0.7,
+            320,
+            24,
+            0.3,
+            Demand::new(2, vec!["gpu".into()]),
+        );
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 30);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+    }
+
+    #[test]
+    fn gang_long_jobs_place_whole_or_queue_centrally() {
+        use crate::cluster::NodeCatalog;
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        let mut cfg = EagleConfig::for_workers(320);
+        cfg.sim.seed = 25;
+        cfg.sim.short_threshold = SimTime::from_secs(0.5); // everything long
+        cfg.catalog = NodeCatalog::rack_tiered(320, 0.25);
+        let trace =
+            synthetic_fixed_constrained(6, 15, 2.0, 0.5, 320, 26, 0.3, Demand::new(4, vec![]));
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 15);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+    }
+
+    #[test]
+    fn gang_mixed_short_long_with_races_completes() {
+        use crate::cluster::NodeCatalog;
+        use crate::workload::{Demand, Job};
+        // hand-built: long gangs and short scalar jobs contending for
+        // the same capacity-4 nodes, forcing GangPlace races that queue
+        // holds at workers
+        let mut cfg = EagleConfig::for_workers(128);
+        cfg.sim.seed = 27;
+        cfg.sim.short_threshold = SimTime::from_secs(1.5);
+        cfg.catalog = NodeCatalog::rack_tiered(128, 0.5);
+        let mut jobs = Vec::new();
+        for i in 0..40u32 {
+            jobs.push(Job::new(
+                i,
+                SimTime::from_secs(i as f64 * 0.02),
+                vec![SimTime::from_secs(1.0); 8],
+            ));
+        }
+        for i in 40..46u32 {
+            jobs.push(
+                Job::new(
+                    i,
+                    SimTime::from_secs((i - 40) as f64 * 0.5),
+                    vec![SimTime::from_secs(2.0); 3],
+                )
+                .with_demand(Demand::new(4, vec![])),
+            );
+        }
+        let trace = Trace::new("gang-race", jobs);
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 46);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
     }
 
     #[test]

@@ -20,6 +20,8 @@ pub fn simulate(params: &SimParams, trace: &Trace) -> RunOutcome {
             class: j.class(params.short_threshold),
             constrained: j.demand.is_some(),
             constraint_wait_s: 0.0, // omniscient placement never waits
+            gang: j.demand.as_ref().is_some_and(|d| d.slots > 1),
+            gang_wait_s: 0.0,
         })
         .collect();
     let makespan = jobs

@@ -8,7 +8,7 @@ use crate::cluster::hetero::{self, NodeCatalog, ResolvedDemand};
 use crate::cluster::{AvailMap, ClusterSpec, PartitionId, WorkerId};
 use crate::config::MeghaConfig;
 use crate::metrics::RunOutcome;
-use crate::runtime::match_engine::{constrained_plan, MatchPlanner, RustMatchEngine};
+use crate::runtime::match_engine::{constrained_plan, gang_plan, MatchPlanner, RustMatchEngine};
 use crate::sim::driver::{self, Scheduler, SimCtx};
 use crate::sim::time::SimTime;
 use crate::workload::Trace;
@@ -22,6 +22,11 @@ pub struct Mapping {
     task: u32,  // task index within the job
     worker: u32,
     dur: SimTime,
+    /// Gang mappings (`Demand::slots > 1`): the exact co-resident slots
+    /// the GM reserved, ascending, all on one node (`worker` is the
+    /// first). Empty for single-slot tasks — the scalar path carries no
+    /// extra bytes and no allocation.
+    gang: Vec<u32>,
 }
 
 /// Simulation events. Message events model one-way network hops.
@@ -42,6 +47,15 @@ pub enum Ev {
     /// (§3.3: "aperiodic LM state updates"; the borrower may not reuse
     /// it, so the owner is told it is available again).
     GmWorkerFreed { gm: u32, worker: u32 },
+    /// Worker finished a *gang* task: all `workers` free atomically
+    /// (local to the LM: no network hop).
+    GangFinish { lm: u32, gm: u32, job: u32, workers: Vec<u32> },
+    /// LM→GM: gang-completion notice (§3.4, gang form of `GmTaskDone`).
+    GmGangDone { gm: u32, job: u32, workers: Vec<u32>, reuse: bool },
+    /// LM→GM (owner): a borrowed gang's slots freed (gang form of
+    /// `GmWorkerFreed`; one message for the whole gang — the slots are
+    /// co-resident, so they share a partition and an owner).
+    GmGangFreed { gm: u32, workers: Vec<u32> },
     /// LM heartbeat tick: broadcast snapshots to all GMs (§3.3).
     Heartbeat { lm: u32 },
     /// LM→GM: heartbeat snapshot delivery.
@@ -247,6 +261,27 @@ impl<'a> MeghaSim<'a> {
             n_workers
         );
         let demands = hetero::resolve_trace(&cfg.catalog, trace);
+        // gang feasibility: every gang demand must fit inside at least
+        // one partition (a gang's node must be fully owned by one
+        // GM/LM pair), or the job could never place — fail at setup,
+        // not as an event-loop deadlock
+        for (i, rd) in demands.iter().enumerate() {
+            if let Some(rd) = rd {
+                if rd.is_gang() {
+                    let ok = (0..n_part).any(|p| {
+                        let r = spec.worker_range(PartitionId(p as u32));
+                        cfg.catalog.gangs_possible(r.start as usize, r.end as usize, rd) > 0
+                    });
+                    assert!(
+                        ok,
+                        "job {i}: gang of {} fits in no partition (no matching node \
+                         of capacity >= {} fully inside a partition range)",
+                        rd.gang_width(),
+                        rd.gang_width()
+                    );
+                }
+            }
+        }
         MeghaSim {
             cfg,
             spec,
@@ -356,18 +391,42 @@ impl Scheduler for MeghaSim<'_> {
                 {
                     let lm_entry = &mut self.lms[lm as usize];
                     for m in maps.drain(..) {
-                        if lm_entry.state.is_free(m.worker as usize) {
-                            lm_entry.state.set_busy(m.worker as usize);
-                            lm_entry.version += 1;
-                            ctx.out.tasks += 1;
-                            ctx.push_after(m.dur, Ev::TaskFinish {
-                                lm,
-                                gm,
-                                job: m.job,
-                                worker: m.worker,
-                            });
+                        if m.gang.is_empty() {
+                            if lm_entry.state.is_free(m.worker as usize) {
+                                lm_entry.state.set_busy(m.worker as usize);
+                                lm_entry.version += 1;
+                                ctx.out.tasks += 1;
+                                ctx.push_after(m.dur, Ev::TaskFinish {
+                                    lm,
+                                    gm,
+                                    job: m.job,
+                                    worker: m.worker,
+                                });
+                            } else {
+                                invalid.push((m.job, m.task));
+                            }
                         } else {
-                            invalid.push((m.job, m.task));
+                            // gang verify is all-or-nothing: every
+                            // reserved slot must still be free, or the
+                            // whole mapping rolls back (nothing is
+                            // claimed) and the task is invalidated
+                            let ok = m.gang.iter().all(|&w| lm_entry.state.is_free(w as usize));
+                            if ok {
+                                for &w in &m.gang {
+                                    lm_entry.state.set_busy(w as usize);
+                                }
+                                lm_entry.version += 1;
+                                ctx.out.tasks += 1;
+                                ctx.push_after(m.dur, Ev::GangFinish {
+                                    lm,
+                                    gm,
+                                    job: m.job,
+                                    workers: m.gang,
+                                });
+                            } else {
+                                ctx.out.gang_rejections += 1;
+                                invalid.push((m.job, m.task));
+                            }
                         }
                     }
                 }
@@ -428,6 +487,78 @@ impl Scheduler for MeghaSim<'_> {
                         worker,
                     });
                 }
+            }
+            Ev::GangFinish { lm, gm, job, workers } => {
+                // atomic release: all slots of the gang free together
+                let lm_entry = &mut self.lms[lm as usize];
+                for &w in &workers {
+                    lm_entry.state.set_free(w as usize);
+                }
+                lm_entry.version += 1;
+                // co-resident slots share a partition, hence one owner
+                let owner = self.spec.owner_gm_of_worker(WorkerId(workers[0]));
+                let reuse = owner == gm as usize;
+                let freed: Option<Vec<u32>> = if reuse {
+                    None
+                } else {
+                    let mut ws: Vec<u32> = ctx.pool.take();
+                    ws.extend_from_slice(&workers);
+                    Some(ws)
+                };
+                let d = ctx.net_delay();
+                let comm = ctx.net_delay().as_secs();
+                ctx.out.breakdown.comm_s += comm;
+                ctx.push_after(d, Ev::GmGangDone { gm, job, workers, reuse });
+                if let Some(ws) = freed {
+                    let d2 = ctx.net_delay();
+                    ctx.push_after(d2, Ev::GmGangFreed {
+                        gm: owner as u32,
+                        workers: ws,
+                    });
+                }
+            }
+            Ev::GmGangDone { gm, job, workers, reuse } => {
+                ctx.out.messages += 1;
+                let gm_id = gm as usize;
+                ctx.task_done(job);
+                if reuse {
+                    for &w in &workers {
+                        self.gms[gm_id].mark_free(&self.spec, w as usize);
+                    }
+                }
+                ctx.pool.give(workers);
+                try_schedule(
+                    gm_id,
+                    &mut self.gms[gm_id],
+                    &mut self.jobs,
+                    &self.demands,
+                    &self.cfg.catalog,
+                    &mut self.batches,
+                    &self.spec,
+                    self.cfg,
+                    self.planner,
+                    ctx,
+                );
+            }
+            Ev::GmGangFreed { gm, workers } => {
+                ctx.out.messages += 1;
+                let gm_id = gm as usize;
+                for &w in &workers {
+                    self.gms[gm_id].mark_free(&self.spec, w as usize);
+                }
+                ctx.pool.give(workers);
+                try_schedule(
+                    gm_id,
+                    &mut self.gms[gm_id],
+                    &mut self.jobs,
+                    &self.demands,
+                    &self.cfg.catalog,
+                    &mut self.batches,
+                    &self.spec,
+                    self.cfg,
+                    self.planner,
+                    ctx,
+                );
             }
             Ev::GmWorkerFreed { gm, worker } => {
                 ctx.out.messages += 1;
@@ -609,7 +740,22 @@ fn try_schedule(
         let rd = demands[jidx as usize].as_ref();
         let plan = match rd {
             None => planner.plan(&gm.counts, &gm.internal, gm.rr, js.pending.len()),
-            Some(rd) => constrained_plan(
+            Some(rd) if !rd.is_gang() => constrained_plan(
+                &gm.state,
+                catalog,
+                rd,
+                &gm.internal,
+                gm.rr,
+                js.pending.len(),
+                |p| {
+                    let r = spec.worker_range(PartitionId(p as u32));
+                    (r.start as usize, r.end as usize)
+                },
+            ),
+            // gang demands: each planned unit is `gang_width()` slots
+            // co-resident on one node of the partition — the one-shot
+            // placement only a (stale but) global view can make
+            Some(rd) => gang_plan(
                 &gm.state,
                 catalog,
                 rd,
@@ -623,11 +769,21 @@ fn try_schedule(
             ),
         };
         if plan.is_empty() {
-            if rd.is_some() {
-                // capacity is visible (free_count > 0 above) but none
-                // of it matches the demand: constraint-blocked
-                ctx.out.constraint_rejections += 1;
-                ctx.constraint_block(jidx);
+            if let Some(rd) = rd {
+                if rd.is_gang()
+                    && catalog.count_matching_free(&gm.state, 0, gm.state.len(), rd) > 0
+                {
+                    // matching free capacity is visible, just never
+                    // gang_width() co-resident slots on one fully-owned
+                    // node: gang-blocked, not constraint-blocked
+                    ctx.out.gang_rejections += 1;
+                    ctx.gang_block(jidx);
+                } else {
+                    // capacity is visible (free_count > 0 above) but
+                    // none of it matches the demand: constraint-blocked
+                    ctx.out.constraint_rejections += 1;
+                    ctx.constraint_block(jidx);
+                }
             }
             break;
         }
@@ -643,10 +799,33 @@ fn try_schedule(
             let lm = spec.lm_of_partition(pid);
             gm.touched[lm] = true; // speculative claims below
             for _ in 0..k {
+                let (lo, hi) = (r.start as usize, r.end as usize);
+                if let Some(rd) = rd.filter(|rd| rd.is_gang()) {
+                    // gang claim: gang_width() co-resident slots on one
+                    // node of the partition, reserved atomically against
+                    // the GM's view. Deterministic first-fit from the
+                    // partition start — gang-capable nodes are scarce,
+                    // so the §3.3 scan rotation is not applied (a node
+                    // straddling the rotation point would be invisible
+                    // to both scan halves).
+                    let mut slots: Vec<u32> = Vec::with_capacity(rd.gang_width() as usize);
+                    let ok = catalog.pop_gang_free(&mut gm.state, lo, hi, rd, &mut slots);
+                    assert!(ok, "gang plan promised a free node");
+                    gm.counts[part] -= slots.len() as u32;
+                    let task = js.pending.pop_front().expect("plan larger than job");
+                    ctx.out.decisions += 1;
+                    batches[lm].push(Mapping {
+                        job: jidx,
+                        task,
+                        worker: slots[0],
+                        dur: trace.jobs[jidx as usize].durations[task as usize],
+                        gang: slots,
+                    });
+                    continue;
+                }
                 // rotated first-free scan: each GM starts at a different
                 // slot so GMs pick different workers (§3.3 shuffle);
                 // constrained claims additionally AND the demand masks
-                let (lo, hi) = (r.start as usize, r.end as usize);
                 let start = lo + gm.scan_rot % (hi - lo);
                 let w = match rd {
                     None => gm
@@ -666,14 +845,18 @@ fn try_schedule(
                     task,
                     worker: w as u32,
                     dur: trace.jobs[jidx as usize].durations[task as usize],
+                    gang: Vec::new(),
                 });
             }
         }
         gm.rr = (last_part + 1) % n_part;
-        if rd.is_some() {
+        if let Some(rd) = rd {
             // the plan placed at least one task: close any open
-            // constraint-blocked interval
+            // constraint/gang-blocked interval
             ctx.constraint_unblock(jidx);
+            if rd.is_gang() {
+                ctx.gang_unblock(jidx);
+            }
         }
 
         for (lm, batch) in batches.iter_mut().enumerate() {
@@ -825,6 +1008,98 @@ mod tests {
         assert!(out.constraint_rejections > 0, "no rejections recorded");
         let cw = crate::metrics::summarize_constraint_wait(&out.jobs);
         assert!(cw.n > 0 && cw.max > 0.0, "constraint_wait never accrued");
+    }
+
+    #[test]
+    fn gang_jobs_complete_with_atomic_slots() {
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        let mut cfg = small_cfg(300, 51);
+        let n = cfg.spec.n_workers();
+        cfg.catalog = NodeCatalog::bimodal_gpu(n, 0.25);
+        // 30% of jobs need gpu pairs: 2 slots co-resident per task
+        let trace = synthetic_fixed_constrained(
+            10,
+            30,
+            1.0,
+            0.6,
+            n,
+            52,
+            0.3,
+            Demand::new(2, vec!["gpu".into()]),
+        );
+        assert!(trace.jobs.iter().any(|j| j.demand.is_some()));
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 30);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+        for (r, j) in out.jobs.iter().zip(trace.jobs.iter()) {
+            assert_eq!(r.gang, j.demand.as_ref().is_some_and(|d| d.slots > 1));
+            if !r.gang {
+                assert_eq!(r.gang_wait_s, 0.0);
+            }
+        }
+        // capacity-4 gangs on a rack-tiered catalog work too
+        let mut cfg2 = small_cfg(300, 53);
+        cfg2.catalog = NodeCatalog::rack_tiered(n, 0.25);
+        let trace2 =
+            synthetic_fixed_constrained(8, 20, 1.0, 0.5, n, 54, 0.25, Demand::new(4, vec![]));
+        let out2 = simulate(&cfg2, &trace2);
+        assert_eq!(out2.jobs.len(), 20);
+        assert_eq!(out2.tasks as usize, trace2.n_tasks());
+    }
+
+    #[test]
+    fn gang_scarcity_induces_gang_wait() {
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        // gpu-pair capacity ~6% of slots, gang demand far above it at
+        // high load: gangs must queue on the scarce pairs and the
+        // breakdown must attribute the wait to gangs
+        let mut cfg = small_cfg(300, 61);
+        let n = cfg.spec.n_workers();
+        cfg.catalog = NodeCatalog::bimodal_gpu(n, 0.0625);
+        let trace = synthetic_fixed_constrained(
+            20,
+            40,
+            1.0,
+            0.9,
+            n,
+            62,
+            0.3,
+            Demand::new(2, vec!["gpu".into()]),
+        );
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 40);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+        let gw = crate::metrics::summarize_gang_wait(&out.jobs);
+        assert!(gw.n > 0, "no gang jobs in the trace");
+        assert!(
+            out.gang_rejections > 0 || gw.max > 0.0,
+            "scarce gangs never blocked: rejections={} gw.max={}",
+            out.gang_rejections,
+            gw.max
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "fits in no partition")]
+    fn gang_infeasible_for_every_partition_panics_at_setup() {
+        use crate::workload::{Demand, Job};
+        let cfg = {
+            let mut c = small_cfg(90, 1);
+            // one giant node spanning the whole DC: capacity 90 >= any
+            // gang, but it straddles every partition boundary (wpp=10),
+            // so no partition fully owns it
+            c.catalog = NodeCatalog::from_nodes(vec![(c.spec.n_workers() as u32, vec!["big"])]);
+            c
+        };
+        let trace = Trace::new(
+            "infeasible",
+            vec![Job::new(0, SimTime::ZERO, vec![SimTime::from_secs(1.0)])
+                .with_demand(Demand::new(20, vec![]))],
+        );
+        let mut planner = RustMatchEngine;
+        let _ = MeghaSim::new(&cfg, &trace, &mut planner, None);
     }
 
     #[test]

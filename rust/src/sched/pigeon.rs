@@ -43,6 +43,9 @@ pub enum Ev {
     /// distributor → coordinator: a slice of a job's tasks
     CoordRecv { group: u32, job: u32, durs: Vec<SimTime>, high: bool },
     Finish { group: u32, worker: u32, job: u32 },
+    /// a gang task finished: all member slots (group-local general ids)
+    /// free atomically
+    GangFinish { group: u32, workers: Vec<u32>, job: u32 },
     Done { job: u32 },
 }
 
@@ -97,6 +100,12 @@ impl<'a> Pigeon<'a> {
                         .filter(|&g| {
                             let base = g * per_group;
                             let gen_hi = base + general_per_group;
+                            if rd.is_gang() {
+                                // gangs run on general slots only, on
+                                // nodes fully inside the group's
+                                // general slice
+                                return cfg.catalog.gangs_possible(base, gen_hi, rd) > 0;
+                            }
                             let in_general = cfg.catalog.count_matching(base, gen_hi, rd) > 0;
                             // reserved slots serve high-priority only
                             let in_reserved = high
@@ -107,8 +116,9 @@ impl<'a> Pigeon<'a> {
                         .collect();
                     assert!(
                         !gs.is_empty(),
-                        "job {i}: demand matches no pigeon group (catalog too scarce \
-                         for this group layout)"
+                        "job {i}: demand {}matches no pigeon group (catalog too scarce \
+                         for this group layout)",
+                        if rd.is_gang() { "(gang) " } else { "" }
                     );
                     gs
                 })
@@ -158,28 +168,121 @@ fn claim(
     }
 }
 
+/// First-fit gang claim over a group's general pool: the first node
+/// fully inside the group's general slice holding `gang_width()` free
+/// matching slots, claimed atomically into `out` (group-local ids,
+/// ascending; `out` is a caller-pooled buffer). All-or-nothing — on
+/// `false` the pool and `out` are untouched.
+fn claim_gang(
+    general: &mut AvailMap,
+    catalog: &NodeCatalog,
+    rd: &ResolvedDemand,
+    base: usize,
+    out: &mut Vec<u32>,
+) -> bool {
+    let k = rd.gang_width() as usize;
+    let glen = general.len();
+    let mut s = 0usize;
+    while s < glen {
+        let Some(w) = general.first_free_in(s, glen) else {
+            return false;
+        };
+        let gw = base + w;
+        let (nlo, nhi) = catalog.node_range(catalog.node_of(gw));
+        let contained = nlo >= base && nhi <= base + glen;
+        if contained
+            && catalog.slot_matches(gw, rd)
+            && general.has_k_free_in(nlo - base, nhi - base, k)
+        {
+            let (llo, lhi) = (nlo - base, nhi - base);
+            for _ in 0..k {
+                let c = general.pop_free_in(llo, lhi).expect("node promised k free");
+                out.push(c as u32);
+            }
+            return true;
+        }
+        s = if contained { (nhi - base).max(w + 1) } else { w + 1 };
+    }
+    false
+}
+
+/// A dequeued task a freed worker can serve: the job, its duration, and
+/// (for gang entries) the extra co-resident group-local slots claimed
+/// alongside the freed worker.
+struct Serve {
+    job: u32,
+    dur: SimTime,
+    extra: Vec<u32>,
+}
+
 /// Remove the first queued task the freed worker can serve; jobs passed
-/// over (their demand does not match this worker) are collected into
-/// `skipped` for constraint accounting. Equivalent to `pop_front` when
-/// nothing is constrained.
-fn pop_first_matching(
+/// over are collected into `skipped` as `(job, was_gang_skip)` for
+/// constraint/gang accounting. Equivalent to `pop_front` when nothing
+/// is constrained. Gang entries are servable only by a non-reserved
+/// worker whose node (fully inside the general slice) still holds
+/// `gang_width() - 1` more free slots — those are claimed here, so a
+/// `Serve` with non-empty `extra` is already fully reserved.
+#[allow(clippy::too_many_arguments)]
+fn pop_first_servable(
     q: &mut VecDeque<(u32, SimTime)>,
+    general: &mut AvailMap,
     demands: &[Option<ResolvedDemand>],
     catalog: &NodeCatalog,
+    base: usize,
     gw: usize,
-    skipped: &mut Vec<u32>,
-) -> Option<(u32, SimTime)> {
-    let idx = q.iter().position(|&(job, _)| {
-        demands[job as usize]
-            .as_ref()
-            .is_none_or(|rd| catalog.slot_matches(gw, rd))
-    });
-    let scanned = idx.unwrap_or(q.len());
-    for &(job, _) in q.iter().take(scanned) {
-        // only constrained entries can fail the match above
-        skipped.push(job);
+    is_reserved: bool,
+    skipped: &mut Vec<(u32, bool)>,
+) -> Option<Serve> {
+    let glen = general.len();
+    let mut found: Option<(usize, Vec<u32>)> = None;
+    for (i, &(job, _)) in q.iter().enumerate() {
+        match demands[job as usize].as_ref() {
+            None => {
+                found = Some((i, Vec::new()));
+                break;
+            }
+            Some(rd) if !rd.is_gang() => {
+                if catalog.slot_matches(gw, rd) {
+                    found = Some((i, Vec::new()));
+                    break;
+                }
+                skipped.push((job, false));
+            }
+            Some(rd) => {
+                // attribute/capacity mismatch of the freed worker is a
+                // *constraint* skip; only "matching, but no co-resident
+                // slots behind it" is a *gang* skip — the two waits are
+                // disjoint by definition (gang_wait = fragmentation)
+                if !catalog.slot_matches(gw, rd) {
+                    skipped.push((job, false));
+                    continue;
+                }
+                let k = rd.gang_width() as usize;
+                if !is_reserved {
+                    let (nlo, nhi) = catalog.node_range(catalog.node_of(gw));
+                    // the freed worker itself is not marked free, so the
+                    // node must hold the other k-1 slots
+                    if nlo >= base
+                        && nhi <= base + glen
+                        && general.has_k_free_in(nlo - base, nhi - base, k - 1)
+                    {
+                        let (llo, lhi) = (nlo - base, nhi - base);
+                        let mut extra = Vec::with_capacity(k - 1);
+                        for _ in 0..k - 1 {
+                            let c = general.pop_free_in(llo, lhi).expect("node promised k-1 free");
+                            extra.push(c as u32);
+                        }
+                        found = Some((i, extra));
+                        break;
+                    }
+                }
+                skipped.push((job, true));
+            }
+        }
     }
-    q.remove(idx?)
+    let (i, extra) = found?;
+    let (job, dur) = q.remove(i).expect("index from scan");
+    Some(Serve { job, dur, extra })
 }
 
 impl Scheduler for Pigeon<'_> {
@@ -236,7 +339,57 @@ impl Scheduler for Pigeon<'_> {
                 let rd = demands[job as usize].as_ref();
                 let base = group as usize * per_group;
                 let g = &mut groups[group as usize];
+                // Once one gang claim fails, the rest of this burst must
+                // fail too (the pool only shrinks within the handler):
+                // classify the failure once and reuse it per task.
+                let mut gang_failed: Option<Option<bool>> = None;
                 for dur in durs.drain(..) {
+                    if let Some(rd) = rd.filter(|rd| rd.is_gang()) {
+                        // gang task: gang_width() co-resident general
+                        // slots of one node, claimed whole — or queued
+                        // whole (it can never migrate to another group
+                        // where a node idles: the Megha asymmetry again)
+                        let mut members: Vec<u32> = ctx.pool.take();
+                        if gang_failed.is_none()
+                            && claim_gang(&mut g.general, catalog, rd, base, &mut members)
+                        {
+                            ctx.constraint_unblock(job);
+                            ctx.gang_unblock(job);
+                            launch_gang(ctx, group, members, job, dur);
+                        } else {
+                            ctx.pool.give(members);
+                            // None while free capacity exists: compute the
+                            // verdict (Some(any_matching)) on first failure
+                            let verdict = *gang_failed.get_or_insert_with(|| {
+                                if g.general.free_count() == 0 {
+                                    None
+                                } else {
+                                    Some((0..g.general.len()).any(|w| {
+                                        g.general.is_free(w)
+                                            && catalog.slot_matches(base + w, rd)
+                                    }))
+                                }
+                            });
+                            match verdict {
+                                Some(true) => {
+                                    // matching free slots, none co-resident
+                                    ctx.out.gang_rejections += 1;
+                                    ctx.gang_block(job);
+                                }
+                                Some(false) => {
+                                    ctx.out.constraint_rejections += 1;
+                                    ctx.constraint_block(job);
+                                }
+                                None => {}
+                            }
+                            if high {
+                                g.hi_q.push_back((job, dur));
+                            } else {
+                                g.lo_q.push_back((job, dur));
+                            }
+                        }
+                        continue;
+                    }
                     if high {
                         // general pool first, then the reserved pool
                         if let Some(w) = claim(&mut g.general, catalog, rd, base) {
@@ -282,81 +435,139 @@ impl Scheduler for Pigeon<'_> {
                 let d = ctx.net_delay();
                 ctx.out.breakdown.comm_s += d.as_secs();
                 ctx.push_after(d, Ev::Done { job });
-                let Pigeon {
-                    cfg,
-                    per_group,
-                    general_per_group,
-                    groups,
-                    demands,
-                    ..
-                } = self;
-                let (per_group, general_per_group) = (*per_group, *general_per_group);
-                let catalog = &cfg.catalog;
-                let g = &mut groups[group as usize];
-                let w = worker as usize;
-                let gw = group as usize * per_group + w;
-                let is_reserved = w >= general_per_group;
-                // weighted fair dequeue for the freed worker, skipping
-                // queued tasks whose demand this worker cannot serve
-                // (reduces to plain pop_front when nothing is constrained)
-                let mut skipped: Vec<u32> = Vec::new();
-                let next = if is_reserved {
-                    pop_first_matching(&mut g.hi_q, demands, catalog, gw, &mut skipped)
-                } else {
-                    let prefer_lo = !g.lo_q.is_empty()
-                        && (g.hi_streak >= cfg.wfq_weight || g.hi_q.is_empty());
-                    let (first, second) = if prefer_lo {
-                        (&mut g.lo_q, &mut g.hi_q)
-                    } else {
-                        (&mut g.hi_q, &mut g.lo_q)
-                    };
-                    // `first` may be non-empty yet hold nothing this
-                    // worker matches; fall through to the other queue
-                    if let Some(t) = pop_first_matching(first, demands, catalog, gw, &mut skipped)
-                    {
-                        if prefer_lo {
-                            g.hi_streak = 0;
-                        } else {
-                            g.hi_streak += 1;
-                        }
-                        Some(t)
-                    } else if let Some(t) =
-                        pop_first_matching(second, demands, catalog, gw, &mut skipped)
-                    {
-                        if prefer_lo {
-                            g.hi_streak += 1;
-                        } else {
-                            g.hi_streak = 0;
-                        }
-                        Some(t)
-                    } else {
-                        None
-                    }
-                };
-                for job in skipped {
-                    // a free worker was passed over purely on constraints
-                    ctx.out.constraint_rejections += 1;
-                    ctx.constraint_block(job);
-                }
-                match next {
-                    Some((job, dur)) => {
-                        if demands[job as usize].is_some() {
-                            ctx.constraint_unblock(job);
-                        }
-                        launch(ctx, group, worker, job, dur);
-                    }
-                    None => {
-                        if is_reserved {
-                            g.reserved.set_free(w - general_per_group);
-                        } else {
-                            g.general.set_free(w);
-                        }
+                self.dispatch_freed(group, worker, ctx);
+            }
+            Ev::GangFinish { group, workers, job } => {
+                let d = ctx.net_delay();
+                ctx.out.breakdown.comm_s += d.as_secs();
+                ctx.push_after(d, Ev::Done { job });
+                // atomic release: all member slots free together, then
+                // one redispatch pass per freed slot — a freed slot may
+                // complete the co-residency a queued gang was missing
+                {
+                    let g = &mut self.groups[group as usize];
+                    for &w in &workers {
+                        g.general.set_free(w as usize);
                     }
                 }
+                for &w in &workers {
+                    // a slot may already be claimed again by a gang
+                    // dispatched for an earlier member of this pass
+                    if !self.groups[group as usize].general.is_free(w as usize) {
+                        continue;
+                    }
+                    self.groups[group as usize].general.set_busy(w as usize);
+                    self.dispatch_freed(group, w, ctx);
+                }
+                ctx.pool.give(workers);
             }
             Ev::Done { job } => {
                 ctx.out.messages += 1;
                 ctx.task_done(job);
+            }
+        }
+    }
+}
+
+impl Pigeon<'_> {
+    /// Weighted fair dequeue for a freed (still marked busy) worker:
+    /// serve the first queued task the worker can host — claiming gang
+    /// co-residents atomically — or mark it free. Skipped queue entries
+    /// feed the constraint/gang accounting. This is the scalar `Finish`
+    /// path verbatim when nothing queued is a gang.
+    fn dispatch_freed(&mut self, group: u32, worker: u32, ctx: &mut SimCtx<'_, Ev>) {
+        let Pigeon {
+            cfg,
+            per_group,
+            general_per_group,
+            groups,
+            demands,
+            ..
+        } = self;
+        let (per_group, general_per_group) = (*per_group, *general_per_group);
+        let catalog = &cfg.catalog;
+        let g = &mut groups[group as usize];
+        let w = worker as usize;
+        let base = group as usize * per_group;
+        let gw = base + w;
+        let is_reserved = w >= general_per_group;
+        // weighted fair dequeue for the freed worker, skipping
+        // queued tasks whose demand this worker cannot serve
+        // (reduces to plain pop_front when nothing is constrained)
+        let mut skipped: Vec<(u32, bool)> = Vec::new();
+        let Group {
+            general,
+            reserved,
+            hi_q,
+            lo_q,
+            hi_streak,
+        } = g;
+        let next = if is_reserved {
+            pop_first_servable(hi_q, general, demands, catalog, base, gw, true, &mut skipped)
+        } else {
+            let prefer_lo = !lo_q.is_empty() && (*hi_streak >= cfg.wfq_weight || hi_q.is_empty());
+            let (first, second) = if prefer_lo {
+                (lo_q, hi_q)
+            } else {
+                (hi_q, lo_q)
+            };
+            // `first` may be non-empty yet hold nothing this
+            // worker matches; fall through to the other queue
+            if let Some(t) =
+                pop_first_servable(first, general, demands, catalog, base, gw, false, &mut skipped)
+            {
+                if prefer_lo {
+                    *hi_streak = 0;
+                } else {
+                    *hi_streak += 1;
+                }
+                Some(t)
+            } else if let Some(t) =
+                pop_first_servable(second, general, demands, catalog, base, gw, false, &mut skipped)
+            {
+                if prefer_lo {
+                    *hi_streak += 1;
+                } else {
+                    *hi_streak = 0;
+                }
+                Some(t)
+            } else {
+                None
+            }
+        };
+        for (job, gang_skip) in skipped {
+            // a free worker was passed over purely on placement rules
+            if gang_skip {
+                ctx.out.gang_rejections += 1;
+                ctx.gang_block(job);
+            } else {
+                ctx.out.constraint_rejections += 1;
+                ctx.constraint_block(job);
+            }
+        }
+        match next {
+            Some(Serve { job, dur, extra }) => {
+                if let Some(rd) = demands[job as usize].as_ref() {
+                    ctx.constraint_unblock(job);
+                    if rd.is_gang() {
+                        ctx.gang_unblock(job);
+                    }
+                }
+                if extra.is_empty() {
+                    launch(ctx, group, worker, job, dur);
+                } else {
+                    let mut members: Vec<u32> = ctx.pool.take();
+                    members.push(worker);
+                    members.extend(extra);
+                    launch_gang(ctx, group, members, job, dur);
+                }
+            }
+            None => {
+                if is_reserved {
+                    reserved.set_free(w - general_per_group);
+                } else {
+                    general.set_free(w);
+                }
             }
         }
     }
@@ -372,6 +583,13 @@ fn launch(ctx: &mut SimCtx<'_, Ev>, group: u32, worker: u32, job: u32, dur: SimT
     ctx.out.tasks += 1;
     ctx.out.decisions += 1;
     ctx.push_after(dur, Ev::Finish { group, worker, job });
+}
+
+/// Start a gang on known-claimed general workers of `group` (local ids).
+fn launch_gang(ctx: &mut SimCtx<'_, Ev>, group: u32, workers: Vec<u32>, job: u32, dur: SimTime) {
+    ctx.out.tasks += 1;
+    ctx.out.decisions += 1;
+    ctx.push_after(dur, Ev::GangFinish { group, workers, job });
 }
 
 #[cfg(test)]
@@ -461,6 +679,51 @@ mod tests {
         // at 85% load with 12.5% matching slots, some constrained task
         // must have queued past a free-but-unmatching worker
         assert!(out.constraint_rejections > 0, "no constraint event recorded");
+    }
+
+    #[test]
+    fn gang_tasks_place_whole_or_queue_in_groups() {
+        use crate::cluster::NodeCatalog;
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        let mut cfg = PigeonConfig::for_workers(300);
+        cfg.sim.seed = 13;
+        cfg.catalog = NodeCatalog::bimodal_gpu(300, 0.25);
+        let trace = synthetic_fixed_constrained(
+            12,
+            40,
+            1.0,
+            0.85,
+            300,
+            14,
+            0.3,
+            Demand::new(2, vec!["gpu".into()]),
+        );
+        assert!(trace.jobs.iter().any(|j| j.demand.is_some()));
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 40);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+        for (r, j) in out.jobs.iter().zip(trace.jobs.iter()) {
+            assert_eq!(r.gang, j.demand.as_ref().is_some_and(|d| d.slots > 1));
+            if !r.gang {
+                assert_eq!(r.gang_wait_s, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn gang_capacity4_on_rack_tiered_completes() {
+        use crate::cluster::NodeCatalog;
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        let mut cfg = PigeonConfig::for_workers(600);
+        cfg.sim.seed = 15;
+        cfg.catalog = NodeCatalog::rack_tiered(600, 0.25);
+        let trace =
+            synthetic_fixed_constrained(8, 30, 1.0, 0.6, 600, 16, 0.2, Demand::new(4, vec![]));
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 30);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
     }
 
     #[test]

@@ -27,8 +27,14 @@ pub enum Ev {
     Ready { job: u32, worker: u32 },
     /// scheduler → worker: concrete task (Some) or no-op (None).
     Launch { worker: u32, job: u32, dur: Option<SimTime> },
+    /// scheduler → node: start a gang task on `workers` (co-resident
+    /// slots of one node; `workers[0]` is the probed anchor, the rest
+    /// were idle co-residents reserved at bind time).
+    GangLaunch { job: u32, workers: Vec<u32>, dur: SimTime },
     /// task execution finished at the worker.
     Finish { worker: u32, job: u32 },
+    /// gang execution finished: all member slots free atomically.
+    GangFinish { workers: Vec<u32>, job: u32 },
     /// worker → scheduler: completion notice.
     Done { job: u32 },
 }
@@ -59,13 +65,53 @@ impl<'a> Sparrow<'a> {
             cfg.catalog.len(),
             cfg.workers
         );
+        let demands = hetero::resolve_trace(&cfg.catalog, trace);
+        // gang feasibility: probes can land anywhere, so a gang demand
+        // just needs one node with enough matching slots somewhere
+        for (i, rd) in demands.iter().enumerate() {
+            if let Some(rd) = rd {
+                if rd.is_gang() {
+                    assert!(
+                        cfg.catalog.gangs_possible(0, cfg.workers, rd) > 0,
+                        "job {i}: gang of {} fits on no node of the catalog",
+                        rd.gang_width()
+                    );
+                }
+            }
+        }
         Sparrow {
             cfg,
             workers: ProbeWorker::fleet(cfg.workers),
             jobs: TaskCursor::for_trace(trace),
-            demands: hetero::resolve_trace(&cfg.catalog, trace),
+            demands,
         }
     }
+}
+
+/// Idle co-residents of `worker` on its node, in slot order: the
+/// candidates a gang probe can bind alongside the probed slot. This is
+/// the per-node occupancy a probe-based scheduler *can* discover — the
+/// probed node's own state, nothing beyond it. (Shared with Eagle's
+/// short-job path, which probes exactly like Sparrow.)
+pub(crate) fn idle_coresidents<Q>(
+    workers: &[ProbeWorker<Q>],
+    catalog: &crate::cluster::NodeCatalog,
+    worker: u32,
+    k: usize,
+    out: &mut Vec<u32>,
+) -> bool {
+    out.clear();
+    out.push(worker);
+    let (nlo, nhi) = catalog.node_range(catalog.node_of(worker as usize));
+    for w in nlo..nhi {
+        if out.len() >= k {
+            break;
+        }
+        if w as u32 != worker && workers[w].state == WState::Idle {
+            out.push(w as u32);
+        }
+    }
+    out.len() >= k
 }
 
 impl Scheduler for Sparrow<'_> {
@@ -111,18 +157,60 @@ impl Scheduler for Sparrow<'_> {
                     // a fully-bound job's leftover reservations are NOT
                     // constraint misses — they fall through to the normal
                     // proactive-cancellation no-op below
-                    if !self.jobs[job as usize].exhausted()
-                        && !self.cfg.catalog.slot_matches(worker as usize, rd)
-                    {
-                        // constraint verified at the probed node — and
-                        // failed: no-op this worker, re-probe blind (the
-                        // sampler cannot steer toward matching nodes)
-                        ctx.out.constraint_rejections += 1;
-                        ctx.constraint_block(job);
-                        ctx.send(Ev::Launch { worker, job, dur: None });
-                        let w = ctx.rng.below(self.cfg.workers) as u32;
-                        ctx.send(Ev::Reserve { worker: w, job });
-                        return;
+                    if !self.jobs[job as usize].exhausted() {
+                        if !self.cfg.catalog.slot_matches(worker as usize, rd) {
+                            // constraint verified at the probed node — and
+                            // failed: no-op this worker, re-probe blind (the
+                            // sampler cannot steer toward matching nodes)
+                            ctx.out.constraint_rejections += 1;
+                            ctx.constraint_block(job);
+                            ctx.send(Ev::Launch { worker, job, dur: None });
+                            let w = ctx.rng.below(self.cfg.workers) as u32;
+                            ctx.send(Ev::Reserve { worker: w, job });
+                            return;
+                        }
+                        if rd.is_gang() {
+                            // gang: the probe discovers *this node's*
+                            // occupancy only — the probed slot plus
+                            // enough idle co-residents, or a partial fit
+                            // that forces a blind re-probe (the
+                            // structural asymmetry vs Megha's one-shot
+                            // global placement)
+                            let k = rd.gang_width() as usize;
+                            let mut members: Vec<u32> = ctx.pool.take();
+                            if !idle_coresidents(
+                                &self.workers,
+                                &self.cfg.catalog,
+                                worker,
+                                k,
+                                &mut members,
+                            ) {
+                                ctx.out.gang_rejections += 1;
+                                ctx.gang_block(job);
+                                ctx.send(Ev::Launch { worker, job, dur: None });
+                                let w = ctx.rng.below(self.cfg.workers) as u32;
+                                ctx.send(Ev::Reserve { worker: w, job });
+                                return;
+                            }
+                            let (_, dur) = self.jobs[job as usize]
+                                .bind_next(&ctx.trace.jobs[job as usize])
+                                .expect("gang bind after exhaustion check");
+                            ctx.out.decisions += 1;
+                            ctx.constraint_unblock(job);
+                            ctx.gang_unblock(job);
+                            // reserve the idle co-residents now (the
+                            // node agent holds them for the gang); the
+                            // probed anchor flips on launch arrival
+                            for &w in &members[1..] {
+                                self.workers[w as usize].state = WState::Busy { long: false };
+                            }
+                            ctx.send(Ev::GangLaunch {
+                                job,
+                                workers: members,
+                                dur,
+                            });
+                            return;
+                        }
                     }
                 }
                 let dur = match self.jobs[job as usize].bind_next(&ctx.trace.jobs[job as usize]) {
@@ -136,6 +224,27 @@ impl Scheduler for Sparrow<'_> {
                     None => None, // proactive cancellation: all tasks already bound
                 };
                 ctx.send(Ev::Launch { worker, job, dur });
+            }
+            Ev::GangLaunch { job, workers, dur } => {
+                debug_assert!(self.workers[workers[0] as usize].state == WState::Waiting);
+                for &w in &workers {
+                    self.workers[w as usize].state = WState::Busy { long: false };
+                }
+                ctx.out.tasks += 1;
+                ctx.push_after(dur, Ev::GangFinish { workers, job });
+            }
+            Ev::GangFinish { workers, job } => {
+                let d = ctx.net_delay();
+                ctx.out.breakdown.comm_s += d.as_secs();
+                ctx.push_after(d, Ev::Done { job });
+                // atomic release: all member slots free together
+                for &w in &workers {
+                    self.workers[w as usize].state = WState::Idle;
+                }
+                for &w in &workers {
+                    advance_worker(w, &mut self.workers, ctx);
+                }
+                ctx.pool.give(workers);
             }
             Ev::Launch { worker, job, dur } => {
                 let w = &mut self.workers[worker as usize];
@@ -237,6 +346,39 @@ mod tests {
         assert!(out.constraint_rejections > 0, "no probe ever missed");
         let cw = summarize_constraint_wait(&out.jobs);
         assert!(cw.n > 0 && cw.max > 0.0, "constraint_wait never accrued");
+    }
+
+    #[test]
+    fn gang_jobs_complete_via_per_node_discovery() {
+        use crate::cluster::NodeCatalog;
+        use crate::metrics::summarize_gang_wait;
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        let mut cfg = SparrowConfig::for_workers(320);
+        cfg.sim.seed = 19;
+        cfg.catalog = NodeCatalog::bimodal_gpu(320, 0.25);
+        let trace = synthetic_fixed_constrained(
+            10,
+            30,
+            1.0,
+            0.7,
+            320,
+            20,
+            0.3,
+            Demand::new(2, vec!["gpu".into()]),
+        );
+        assert!(trace.jobs.iter().any(|j| j.demand.is_some()));
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 30);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+        let gw = summarize_gang_wait(&out.jobs);
+        assert!(gw.n > 0, "no gang jobs in the trace");
+        for (r, j) in out.jobs.iter().zip(trace.jobs.iter()) {
+            assert_eq!(r.gang, j.demand.as_ref().is_some_and(|d| d.slots > 1));
+            if !r.gang {
+                assert_eq!(r.gang_wait_s, 0.0);
+            }
+        }
     }
 
     #[test]

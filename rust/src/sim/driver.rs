@@ -189,6 +189,21 @@ impl<E> SimCtx<'_, E> {
         self.tracker.constraint_unblock(job as usize, now);
     }
 
+    /// Mark `job` gang-blocked as of now (idempotent): matching free
+    /// capacity was visible/probed, but never `Demand::slots` co-resident
+    /// free slots on one node. Feeds the per-job `gang_wait` breakdown
+    /// (see [`JobTracker::gang_block`]).
+    pub fn gang_block(&mut self, job: u32) {
+        let now = self.q.now();
+        self.tracker.gang_block(job as usize, now);
+    }
+
+    /// Close `job`'s gang-blocked interval (no-op when not blocked).
+    pub fn gang_unblock(&mut self, job: u32) {
+        let now = self.q.now();
+        self.tracker.gang_unblock(job as usize, now);
+    }
+
     /// Whether every job in the trace has completed.
     pub fn all_done(&self) -> bool {
         self.tracker.all_done()
@@ -285,6 +300,7 @@ pub fn run_with_pools<S: Scheduler>(
     outcome.messages = out.messages;
     outcome.decisions = out.decisions;
     outcome.constraint_rejections = out.constraint_rejections;
+    outcome.gang_rejections = out.gang_rejections;
     outcome.breakdown = out.breakdown;
     outcome.events = q.popped();
     outcome.sim_wall_s = sim_wall_s;

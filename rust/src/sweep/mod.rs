@@ -24,7 +24,8 @@ use std::time::Instant;
 use crate::cluster::NodeCatalog;
 use crate::config::{EagleConfig, MeghaConfig, PigeonConfig, SparrowConfig};
 use crate::metrics::{
-    summarize_constrained, summarize_constraint_wait, summarize_jobs, DelaySummary, RunOutcome,
+    summarize_constrained, summarize_constraint_wait, summarize_gang, summarize_gang_wait,
+    summarize_jobs, DelaySummary, RunOutcome,
 };
 use crate::runtime::match_engine::RustMatchEngine;
 use crate::sched;
@@ -208,7 +209,7 @@ impl Scenario {
 /// Preset names accepted by [`preset`] (surfaced by `--help` and by the
 /// unknown-preset error).
 pub fn preset_names() -> &'static [&'static str] {
-    &["scale10", "hetero"]
+    &["scale10", "hetero", "gang"]
 }
 
 /// Named scenario presets.
@@ -223,6 +224,11 @@ pub fn preset_names() -> &'static [&'static str] {
 ///   (constrained work ÷ matching capacity) stays below 1 on the rich
 ///   cells and pushes toward saturation only on the scarce ones, while
 ///   the overall Eq.-6 offered load is untouched by construction.
+/// * `gang` — the ISSUE-4 gang-placement grid: gang-size × load. Width-2
+///   gangs target the bimodal profile's gpu pairs, width-4 gangs the
+///   rack-tiered capacity-4 nodes; the constrained fraction is kept
+///   modest so gangs contend for co-residency (the effect under test)
+///   rather than for raw matching capacity.
 pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
     match name {
         "scale10" => Some(vec![Scenario {
@@ -270,6 +276,38 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
                         demand: Demand::attrs(&["nvme"]),
                     },
                 ),
+            ])
+        }
+        "gang" => {
+            let cell = |tag: &str, load: f64, h: HeteroSpec| Scenario {
+                name: format!("gang-{tag}-l{load:.2}"),
+                workload: WorkloadKind::Yahoo,
+                workers: 600,
+                jobs: 200,
+                load,
+                net: net.clone(),
+                gm_fail_at: None,
+                hetero: Some(h),
+            };
+            let gang2 = || HeteroSpec {
+                profile: "bimodal-gpu".into(),
+                scarcity: 0.25,
+                constrained_frac: 0.15,
+                demand: Demand::new(2, vec!["gpu".into()]),
+            };
+            let gang4 = || HeteroSpec {
+                profile: "rack-tiered".into(),
+                scarcity: 0.25,
+                constrained_frac: 0.1,
+                demand: Demand::new(4, vec![]),
+            };
+            Some(vec![
+                // width-2 gangs on gpu pairs (capacity-skew axis)
+                cell("g2-gpu", 0.5, gang2()),
+                cell("g2-gpu", 0.85, gang2()),
+                // width-4 gangs on rack-end big-mem nodes
+                cell("g4-big", 0.5, gang4()),
+                cell("g4-big", 0.85, gang4()),
             ])
         }
         _ => None,
@@ -428,6 +466,12 @@ pub struct RunRecord {
     /// Per-job `constraint_wait` percentiles (constrained jobs only).
     pub constraint_wait: DelaySummary,
     pub constraint_rejections: u64,
+    /// Eq. 2 delays of *gang* jobs only (n = 0 when no job has
+    /// `Demand::slots > 1`).
+    pub gang: DelaySummary,
+    /// Per-job `gang_wait` percentiles (gang jobs only).
+    pub gang_wait: DelaySummary,
+    pub gang_rejections: u64,
     pub inconsistency_ratio: f64,
     pub messages: u64,
     pub makespan_s: f64,
@@ -535,6 +579,9 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
             constrained: summarize_constrained(&out.jobs),
             constraint_wait: summarize_constraint_wait(&out.jobs),
             constraint_rejections: out.constraint_rejections,
+            gang: summarize_gang(&out.jobs),
+            gang_wait: summarize_gang_wait(&out.jobs),
+            gang_rejections: out.gang_rejections,
             inconsistency_ratio: out.inconsistency_ratio(),
             messages: out.messages,
             makespan_s: out.makespan.as_secs(),
@@ -579,6 +626,15 @@ pub struct AggRow {
     /// Median across seeds of the per-run `constraint_wait` p50 / p99.
     pub cwait_p50: f64,
     pub cwait_p99: f64,
+    /// Gang jobs per run (0 ⇒ no gang demands in the cell).
+    pub gang_n: usize,
+    /// Median across seeds of the per-run gang-job p99 delay.
+    pub gang_p99: f64,
+    /// Median across seeds of the per-run `gang_wait` p50 / p99.
+    pub gwait_p50: f64,
+    pub gwait_p99: f64,
+    /// Mean gang rejections per run.
+    pub gang_rejections: f64,
     /// Mean event-loop throughput (events/s) over the cell's runs, so
     /// harness regressions are visible in normal sweep output.
     pub events_per_sec: f64,
@@ -612,6 +668,10 @@ pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
             let con_p99s: Vec<f64> = rs.iter().map(|r| r.constrained.p99).collect();
             let cw_p50s: Vec<f64> = rs.iter().map(|r| r.constraint_wait.median).collect();
             let cw_p99s: Vec<f64> = rs.iter().map(|r| r.constraint_wait.p99).collect();
+            let g_p99s: Vec<f64> = rs.iter().map(|r| r.gang.p99).collect();
+            let gw_p50s: Vec<f64> = rs.iter().map(|r| r.gang_wait.median).collect();
+            let gw_p99s: Vec<f64> = rs.iter().map(|r| r.gang_wait.p99).collect();
+            let g_rejs: Vec<f64> = rs.iter().map(|r| r.gang_rejections as f64).collect();
             rows.push(AggRow {
                 framework: fw.clone(),
                 scenario: si,
@@ -627,6 +687,11 @@ pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
                 constrained_p99: percentile(&con_p99s, 50.0),
                 cwait_p50: percentile(&cw_p50s, 50.0),
                 cwait_p99: percentile(&cw_p99s, 50.0),
+                gang_n: rs.iter().map(|r| r.gang.n).max().unwrap_or(0),
+                gang_p99: percentile(&g_p99s, 50.0),
+                gwait_p50: percentile(&gw_p50s, 50.0),
+                gwait_p99: percentile(&gw_p99s, 50.0),
+                gang_rejections: mean(&g_rejs),
                 events_per_sec: mean(&eps),
             });
         }
@@ -689,6 +754,32 @@ pub fn print_result(spec: &SweepSpec, result: &SweepResult) {
                 r.constrained_p99,
                 r.cwait_p50,
                 r.cwait_p99
+            );
+        }
+        println!();
+    }
+    if rows.iter().any(|r| r.gang_n > 0) {
+        println!("\n--- gang jobs (multi-slot co-resident placement, per framework) ---");
+        println!(
+            "{:<22} {:<9} {:>6} {:>12} {:>13} {:>13} {:>11}",
+            "scenario",
+            "framework",
+            "jobs",
+            "delay-p99(s)",
+            "gwait-p50(s)",
+            "gwait-p99(s)",
+            "gang-rej"
+        );
+        for r in rows.iter().filter(|r| r.gang_n > 0) {
+            println!(
+                "{:<22} {:<9} {:>6} {:>12.3} {:>13.4} {:>13.3} {:>11.1}",
+                spec.scenarios[r.scenario].name,
+                r.framework,
+                r.gang_n,
+                r.gang_p99,
+                r.gwait_p50,
+                r.gwait_p99,
+                r.gang_rejections
             );
         }
         println!();
@@ -812,6 +903,59 @@ mod tests {
                 (trace.offered_load(sc.workers) - sc.load).abs() < 0.3,
                 "{}: load drifted",
                 sc.name
+            );
+        }
+    }
+
+    #[test]
+    fn gang_preset_resolves_and_decorates_traces() {
+        let net = NetModel::paper_default();
+        let scs = preset("gang", &net).expect("gang preset");
+        assert_eq!(scs.len(), 4);
+        for sc in &scs {
+            let h = sc.hetero.as_ref().expect("gang scenario is heterogeneous");
+            assert!(h.demand.slots > 1, "{}: not a gang demand", sc.name);
+            let cat = h.catalog(sc.workers);
+            assert!(!cat.is_trivial());
+            // the demand must resolve as a gang against the profile
+            let rd = cat.resolve(&h.demand).expect("gang demand resolves");
+            assert!(rd.is_gang());
+            assert!(cat.gangs_possible(0, cat.len(), &rd) > 0);
+            let trace = sc.make_trace(run_seed(1, 0, 0));
+            let n = trace
+                .jobs
+                .iter()
+                .filter(|j| j.demand.as_ref().is_some_and(|d| d.slots > 1))
+                .count();
+            assert!(n > 0, "{}: no gang jobs", sc.name);
+        }
+    }
+
+    #[test]
+    fn gang_cells_run_all_frameworks() {
+        // one tiny gang cell end-to-end per framework (the full preset
+        // runs in CI via `sweep --preset gang`)
+        let sc = Scenario {
+            name: "gang-tiny".into(),
+            workload: WorkloadKind::Fixed { tasks_per_job: 8 },
+            workers: 192,
+            jobs: 20,
+            load: 0.6,
+            net: NetModel::paper_default(),
+            gm_fail_at: None,
+            hetero: Some(HeteroSpec {
+                profile: "bimodal-gpu".into(),
+                scarcity: 0.25,
+                constrained_frac: 0.4,
+                demand: Demand::new(2, vec!["gpu".into()]),
+            }),
+        };
+        for fw in FRAMEWORKS {
+            let out = run_one(fw, &sc, 7);
+            assert_eq!(out.jobs.len(), 20, "{fw} lost jobs");
+            assert!(
+                out.jobs.iter().any(|j| j.gang),
+                "{fw}: no gang job records"
             );
         }
     }

@@ -27,7 +27,9 @@ pub const CONSTRAIN_SEED: u64 = 0xC0_57_41_7B;
 /// What every task of a job requires of its hosting node.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Demand {
-    /// Minimum capacity (slot count) of the hosting node (≥ 1; 1 = any).
+    /// Slots each task occupies, co-resident on one node and atomically
+    /// acquired/released (≥ 1; 1 = a classic single-slot task, > 1 = a
+    /// *gang*, which also implies the hosting node's capacity ≥ slots).
     pub slots: u32,
     /// Attribute labels the node must carry (empty = any).
     pub required_attrs: Vec<String>,
@@ -56,11 +58,22 @@ pub fn valid_label(s: &str) -> bool {
             .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
 }
 
-/// Parse one trace constraint column: `-` (unconstrained) or a
-/// `;`-separated list of `slots:<n>` / `attrs:<a>+<b>+...` fields.
-/// Strict: unknown keys, duplicate keys, `slots:0`, empty labels and
-/// malformed numbers are errors, never silently ignored.
+/// Parse one trace constraint column in the **v2** grammar: `-`
+/// (unconstrained) or a `;`-separated list of `slots:<n>` /
+/// `attrs:<a>+<b>+...` fields. Strict: unknown keys (including the v3
+/// `gang:` key), duplicate keys, `slots:0`, empty labels and malformed
+/// numbers are errors, never silently ignored.
 pub fn parse_spec(s: &str) -> Result<Option<Demand>> {
+    parse_spec_ext(s, false)
+}
+
+/// [`parse_spec`] with the version switch: `gang_ok = true` is the
+/// **v3** grammar, which adds `gang:<k>` (k ≥ 2, the gang width — maps
+/// to [`Demand::slots`]) and *rejects* `slots:<n>` for n > 1 (in v3 a
+/// multi-slot demand must be spelled `gang:` so the co-resident
+/// semantics are explicit in the file). In a v2 spec `gang:` is an
+/// unknown key, so a v3 constraint fed to the v2 parser fails loudly.
+pub fn parse_spec_ext(s: &str, gang_ok: bool) -> Result<Option<Demand>> {
     if s == "-" {
         return Ok(None);
     }
@@ -68,6 +81,7 @@ pub fn parse_spec(s: &str) -> Result<Option<Demand>> {
         bail!("empty constraint spec (use '-' for unconstrained)");
     }
     let mut slots: Option<u32> = None;
+    let mut gang: Option<u32> = None;
     let mut attrs: Option<Vec<String>> = None;
     for field in s.split(';') {
         let Some((key, value)) = field.split_once(':') else {
@@ -84,7 +98,22 @@ pub fn parse_spec(s: &str) -> Result<Option<Demand>> {
                 if n == 0 {
                     bail!("slots must be >= 1 in constraint spec '{s}'");
                 }
+                if gang_ok && n > 1 {
+                    bail!("in #v3 use 'gang:{n}' for multi-slot demands, not 'slots:{n}'");
+                }
                 slots = Some(n);
+            }
+            "gang" if gang_ok => {
+                if gang.is_some() {
+                    bail!("duplicate 'gang' in constraint spec '{s}'");
+                }
+                let k: u32 = value
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad gang value '{value}'"))?;
+                if k < 2 {
+                    bail!("gang width must be >= 2 in constraint spec '{s}' (use slots:1 or omit)");
+                }
+                gang = Some(k);
             }
             "attrs" => {
                 if attrs.is_some() {
@@ -101,20 +130,26 @@ pub fn parse_spec(s: &str) -> Result<Option<Demand>> {
             other => bail!("unknown constraint key '{other}' in spec '{s}'"),
         }
     }
+    if gang.is_some() && slots.is_some() {
+        bail!("constraint spec '{s}' has both 'gang' and 'slots' (gang implies the slot count)");
+    }
     Ok(Some(Demand::new(
-        slots.unwrap_or(1),
+        gang.or(slots).unwrap_or(1),
         attrs.unwrap_or_default(),
     )))
 }
 
-/// Encode a constraint column ([`parse_spec`]'s inverse).
+/// Encode a constraint column ([`parse_spec_ext`]'s inverse). Gang
+/// demands (`slots > 1`) encode as `gang:<k>`, which only the v3
+/// grammar accepts — `workload::trace::encode` switches the file header
+/// to `#v3` whenever one is present.
 pub fn encode_spec(d: Option<&Demand>) -> String {
     match d {
         None => "-".to_string(),
         Some(d) => {
             let mut parts = Vec::new();
             if d.slots > 1 {
-                parts.push(format!("slots:{}", d.slots));
+                parts.push(format!("gang:{}", d.slots));
             }
             if !d.required_attrs.is_empty() {
                 parts.push(format!("attrs:{}", d.required_attrs.join("+")));
@@ -150,18 +185,30 @@ mod tests {
 
     #[test]
     fn spec_roundtrip() {
+        // width-1 demands roundtrip through the v2 grammar...
         for d in [
             None,
             Some(Demand::attrs(&["gpu"])),
             Some(Demand::attrs(&["gpu", "ssd-fast"])),
-            Some(Demand::new(4, vec![])),
-            Some(Demand::new(2, vec!["big_mem".into()])),
             Some(Demand::new(1, vec![])),
         ] {
             let enc = encode_spec(d.as_ref());
             let back = parse_spec(&enc).unwrap();
             assert_eq!(back, d, "spec '{enc}'");
         }
+        // ...and every demand, gangs included, through the v3 grammar
+        for d in [
+            None,
+            Some(Demand::attrs(&["gpu"])),
+            Some(Demand::new(4, vec![])),
+            Some(Demand::new(2, vec!["big_mem".into()])),
+            Some(Demand::new(1, vec![])),
+        ] {
+            let enc = encode_spec(d.as_ref());
+            let back = parse_spec_ext(&enc, true).unwrap();
+            assert_eq!(back, d, "v3 spec '{enc}'");
+        }
+        assert_eq!(encode_spec(Some(&Demand::new(4, vec![]))), "gang:4");
     }
 
     #[test]
@@ -183,6 +230,41 @@ mod tests {
             assert!(parse_spec(bad).is_err(), "'{bad}' should be rejected");
         }
         assert_eq!(parse_spec("-").unwrap(), None);
+    }
+
+    #[test]
+    fn gang_spec_grammar_is_v3_only_and_strict() {
+        // the v2 grammar rejects gang: outright (unknown key)
+        assert!(parse_spec("gang:2").is_err());
+        assert!(parse_spec("gang:2;attrs:gpu").is_err());
+        // v2 still accepts multi-slot 'slots:' (pre-gang files parse
+        // unchanged; the engine now gives them gang semantics)
+        assert_eq!(parse_spec("slots:4").unwrap(), Some(Demand::new(4, vec![])));
+        // v3 accepts gang: and maps it onto Demand::slots
+        assert_eq!(
+            parse_spec_ext("gang:2;attrs:gpu", true).unwrap(),
+            Some(Demand::new(2, vec!["gpu".into()]))
+        );
+        assert_eq!(
+            parse_spec_ext("slots:1", true).unwrap(),
+            Some(Demand::new(1, vec![]))
+        );
+        // v3 strictness: malformed/ambiguous gang columns are errors
+        for bad in [
+            "gang:0",
+            "gang:1",
+            "gang:abc",
+            "gang:",
+            "gang:2;gang:3",
+            "gang:2;slots:1",
+            "slots:4", // multi-slot must be spelled gang: in v3
+            "slots:2;attrs:gpu",
+        ] {
+            assert!(
+                parse_spec_ext(bad, true).is_err(),
+                "v3 '{bad}' should be rejected"
+            );
+        }
     }
 
     #[test]

@@ -18,13 +18,24 @@
 //! <submit_time_s> <job_id> <n_tasks> <dur_1_s> ... <dur_n_s> <constraint>
 //! ```
 //!
-//! [`encode`] emits v1 whenever no job carries a demand, so existing
-//! traces (and their byte-exact goldens) are untouched; it switches to
-//! v2 only when a demand is present. Parsing is strict in both
-//! versions: malformed lines — including malformed constraint specs
-//! and missing/extra columns — are errors, not warnings, so workload
-//! bugs cannot silently skew experiments. (A v2 file fed to a v1-only
-//! parser fails loudly: the constraint column is not a valid duration.)
+//! **v3** (backward-compatible extension): same row shape as v2 under a
+//! `#v3` header, with the constraint grammar extended by `gang:<k>`
+//! (k ≥ 2): every task of the job is a *gang* of k slots co-resident on
+//! one node, atomically acquired and released. In v3, multi-slot
+//! demands must be spelled `gang:` — `slots:<n>` with n > 1 is a
+//! line-numbered error pointing at the right key — so a file can never
+//! be ambiguous about co-resident semantics; `gang:` in a v2 file is
+//! likewise a loud unknown-key error (see
+//! [`constraints::parse_spec_ext`]).
+//!
+//! [`encode`] emits v1 whenever no job carries a demand, v2 when
+//! demands exist but none is a gang, and v3 only when a gang demand is
+//! present — so existing traces (and their byte-exact goldens) are
+//! untouched. Parsing is strict in all versions: malformed lines —
+//! including malformed constraint/gang specs and missing/extra
+//! columns — are errors, not warnings, so workload bugs cannot silently
+//! skew experiments. (A v2/v3 file fed to a v1-only parser fails
+//! loudly: the constraint column is not a valid duration.)
 
 use std::fmt::Write as _;
 use std::path::Path;
@@ -37,8 +48,13 @@ use crate::sim::time::SimTime;
 /// Magic first line of the v2 format.
 pub const V2_HEADER: &str = "#v2";
 
+/// Magic first line of the v3 format (adds the `gang:` constraint key).
+pub const V3_HEADER: &str = "#v3";
+
 pub fn parse(name: &str, text: &str) -> Result<Trace> {
-    let v2 = text.lines().next().map(str::trim) == Some(V2_HEADER);
+    let first = text.lines().next().map(str::trim);
+    let v3 = first == Some(V3_HEADER);
+    let v2 = v3 || first == Some(V2_HEADER);
     let mut jobs = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
@@ -80,10 +96,14 @@ pub fn parse(name: &str, text: &str) -> Result<Trace> {
                     durs.len()
                 );
             }
-            let spec = it
-                .next()
-                .with_context(|| format!("line {}: missing constraint column (v2)", lineno + 1))?;
-            let demand = constraints::parse_spec(spec)
+            let spec = it.next().with_context(|| {
+                format!(
+                    "line {}: missing constraint column ({})",
+                    lineno + 1,
+                    if v3 { "v3" } else { "v2" }
+                )
+            })?;
+            let demand = constraints::parse_spec_ext(spec, v3)
                 .with_context(|| format!("line {}: bad constraint spec", lineno + 1))?;
             if let Some(extra) = it.next() {
                 bail!("line {}: unexpected trailing token '{extra}'", lineno + 1);
@@ -113,8 +133,15 @@ pub fn parse(name: &str, text: &str) -> Result<Trace> {
 
 pub fn encode(trace: &Trace) -> String {
     let v2 = trace.jobs.iter().any(|j| j.demand.is_some());
+    let v3 = trace
+        .jobs
+        .iter()
+        .any(|j| j.demand.as_ref().is_some_and(|d| d.slots > 1));
     let mut out = String::new();
-    if v2 {
+    if v3 {
+        out.push_str(V3_HEADER);
+        out.push('\n');
+    } else if v2 {
         out.push_str(V2_HEADER);
         out.push('\n');
     }
@@ -202,22 +229,88 @@ mod tests {
                 )
                 .with_demand(Demand::attrs(&["gpu"])),
                 Job::new(2, SimTime::from_secs(2.0), vec![SimTime::from_secs(1.0)])
-                    .with_demand(Demand::new(4, vec!["big-mem".into()])),
+                    .with_demand(Demand::attrs(&["big-mem"])),
             ],
         );
         let enc = encode(&t);
-        assert!(enc.starts_with(V2_HEADER), "demand-bearing trace must be v2");
+        assert!(
+            enc.starts_with(V2_HEADER),
+            "gang-free demand-bearing trace must stay v2"
+        );
         let back = parse("v2", &enc).unwrap();
         assert_eq!(back.n_jobs(), 3);
+        assert_eq!(back.jobs[0].demand, None);
+        assert_eq!(back.jobs[1].demand, Some(Demand::attrs(&["gpu"])));
+        assert_eq!(back.jobs[2].demand, Some(Demand::attrs(&["big-mem"])));
+        assert_eq!(back.jobs[1].durations, t.jobs[1].durations);
+        // re-encoding is stable
+        assert_eq!(encode(&back), enc);
+    }
+
+    #[test]
+    fn gang_v3_roundtrip_and_header_selection() {
+        let t = Trace::new(
+            "v3",
+            vec![
+                Job::new(0, SimTime::from_secs(0.5), vec![SimTime::from_secs(1.0)]),
+                Job::new(1, SimTime::from_secs(1.0), vec![SimTime::from_secs(2.0)])
+                    .with_demand(Demand::attrs(&["gpu"])),
+                Job::new(2, SimTime::from_secs(2.0), vec![SimTime::from_secs(1.0)])
+                    .with_demand(Demand::new(4, vec!["big-mem".into()])),
+                Job::new(3, SimTime::from_secs(3.0), vec![SimTime::from_secs(1.0)])
+                    .with_demand(Demand::new(2, vec![])),
+            ],
+        );
+        let enc = encode(&t);
+        assert!(enc.starts_with(V3_HEADER), "gang-bearing trace must be v3");
+        assert!(enc.contains("gang:4;attrs:big-mem"));
+        assert!(enc.contains(" gang:2\n"));
+        let back = parse("v3", &enc).unwrap();
+        assert_eq!(back.n_jobs(), 4);
         assert_eq!(back.jobs[0].demand, None);
         assert_eq!(back.jobs[1].demand, Some(Demand::attrs(&["gpu"])));
         assert_eq!(
             back.jobs[2].demand,
             Some(Demand::new(4, vec!["big-mem".into()]))
         );
-        assert_eq!(back.jobs[1].durations, t.jobs[1].durations);
+        assert_eq!(back.jobs[3].demand, Some(Demand::new(2, vec![])));
         // re-encoding is stable
         assert_eq!(encode(&back), enc);
+    }
+
+    #[test]
+    fn gang_v3_strictness() {
+        // gang column only under the #v3 header
+        assert!(parse("x", "#v2\n0.0 1 1 1.0 gang:2\n").is_err());
+        assert!(parse("x", "0.0 1 1 1.0 gang:2\n").is_err());
+        // malformed gang columns are line-numbered errors
+        for bad in ["gang:0", "gang:1", "gang:abc", "gang:2;gang:3", "slots:4"] {
+            let text = format!("#v3\n0.0 1 1 1.0 -\n1.0 2 1 1.0 {bad}\n");
+            let err = parse("x", &text).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("line 3"),
+                "error for '{bad}' must name line 3: {err:#}"
+            );
+        }
+        // v3 parses v2-style width-1 specs and '-' unchanged
+        let t = parse("x", "#v3\n0.0 7 1 3.5 attrs:gpu\n1.0 8 1 1.0 -\n").unwrap();
+        assert_eq!(t.jobs[0].demand, Some(Demand::attrs(&["gpu"])));
+        assert_eq!(t.jobs[1].demand, None);
+    }
+
+    #[test]
+    fn gang_v1_v2_parse_results_unchanged_and_stable() {
+        // v1: no constraint column; re-encode is byte-stable
+        let v1 = "# trace: legacy (2 jobs)\n0.5 0 1 1\n1.25 1 2 0.1 2\n";
+        let t = parse("legacy", v1).unwrap();
+        assert!(t.jobs.iter().all(|j| j.demand.is_none()));
+        assert_eq!(encode(&t), v1);
+        // v2: width-1 constraint columns; re-encode is byte-stable
+        let v2 = "#v2\n# trace: legacy (2 jobs)\n0.5 0 1 1 attrs:gpu\n1.25 1 1 2 -\n";
+        let t2 = parse("legacy", v2).unwrap();
+        assert_eq!(t2.jobs[0].demand, Some(Demand::attrs(&["gpu"])));
+        assert_eq!(t2.jobs[1].demand, None);
+        assert_eq!(encode(&t2), v2);
     }
 
     #[test]

@@ -1,0 +1,357 @@
+//! Occupancy-oracle differential harness for gang placement (ISSUE 4
+//! archetype satellite).
+//!
+//! A naive per-node occupancy model (`Vec<bool>` busy flags + per-node
+//! free counts, all scans per-slot) is driven by the *same*
+//! acquire/release stream as the word-wise bitmap fast path
+//! (`NodeCatalog::{find_node_with_free, pop_gang_free}` over
+//! `AvailMap`), and the two are compared after every operation.
+//!
+//! Invariants pinned, each over ≥ 1024 proptest cases:
+//! * **no double-booking** — an acquire only ever returns slots the
+//!   oracle says are free, and the two models agree slot-for-slot;
+//! * **free counts conserved** — global and per-node free counts match
+//!   the oracle after every operation;
+//! * **release restores the exact pre-acquire state** — acquire +
+//!   release is an identity on the bitmap (word-exact, count-exact);
+//! * **gang atomicity** — an acquire yields exactly `k` co-resident
+//!   slots on one node or nothing at all; a failed acquire leaves the
+//!   state untouched (never `k' < k` slots held).
+
+use megha::cluster::{AvailMap, NodeCatalog, ResolvedDemand};
+use megha::util::proptest::check;
+use megha::util::rng::Rng;
+use megha::workload::Demand;
+
+const ATTR_POOL: [&str; 3] = ["gpu", "ssd", "big-mem"];
+
+/// Build a random catalog: 1–40 nodes, capacities 1–5, random labels.
+/// One capacity-4 gpu node is always present so gang demands resolve.
+fn random_catalog(rng: &mut Rng) -> NodeCatalog {
+    let n_nodes = rng.range(1, 40);
+    let mut nodes: Vec<(u32, Vec<String>)> = (0..n_nodes)
+        .map(|_| {
+            let cap = rng.below(5) as u32 + 1;
+            let attrs: Vec<String> = ATTR_POOL
+                .iter()
+                .filter(|_| rng.below(3) == 0)
+                .map(|s| s.to_string())
+                .collect();
+            (cap, attrs)
+        })
+        .collect();
+    nodes.insert(rng.below(nodes.len() + 1), (4, vec!["gpu".to_string()]));
+    NodeCatalog::from_nodes(nodes)
+}
+
+/// A random demand that resolves against the catalog (gang widths 1–4).
+fn random_demand(rng: &mut Rng, catalog: &NodeCatalog) -> Option<ResolvedDemand> {
+    let slots = rng.below(4) as u32 + 1;
+    let attrs: Vec<String> = (0..rng.below(2))
+        .map(|_| ATTR_POOL[rng.below(ATTR_POOL.len())].to_string())
+        .collect();
+    catalog.resolve(&Demand::new(slots, attrs)).ok()
+}
+
+/// The naive oracle: per-slot busy flags and per-node free counts,
+/// updated per slot — no words, no masks, no early exits.
+struct Oracle {
+    busy: Vec<bool>,
+    node_free: Vec<usize>,
+}
+
+impl Oracle {
+    fn new(catalog: &NodeCatalog) -> Oracle {
+        Oracle {
+            busy: vec![false; catalog.len()],
+            node_free: (0..catalog.n_nodes())
+                .map(|n| {
+                    let (lo, hi) = catalog.node_range(n as u32);
+                    hi - lo
+                })
+                .collect(),
+        }
+    }
+
+    /// The oracle's placement: first node (in slot order) fully inside
+    /// [lo, hi) that statically matches the demand and holds ≥ k free
+    /// slots; the first k free slots of that node, ascending. Width-1
+    /// demands take the first free matching slot.
+    fn place(
+        &self,
+        catalog: &NodeCatalog,
+        lo: usize,
+        hi: usize,
+        rd: &ResolvedDemand,
+    ) -> Option<Vec<u32>> {
+        let k = rd.gang_width() as usize;
+        if k <= 1 {
+            return (lo..hi)
+                .find(|&s| !self.busy[s] && catalog.slot_matches(s, rd))
+                .map(|s| vec![s as u32]);
+        }
+        for node in 0..catalog.n_nodes() as u32 {
+            let (nlo, nhi) = catalog.node_range(node);
+            if nlo < lo || nhi > hi || !catalog.slot_matches(nlo, rd) {
+                continue;
+            }
+            let free: Vec<u32> = (nlo..nhi)
+                .filter(|&s| !self.busy[s])
+                .map(|s| s as u32)
+                .collect();
+            if free.len() >= k {
+                return Some(free[..k].to_vec());
+            }
+        }
+        None
+    }
+
+    fn acquire(&mut self, catalog: &NodeCatalog, slots: &[u32]) -> Result<(), String> {
+        for &s in slots {
+            if self.busy[s as usize] {
+                return Err(format!("slot {s} double-booked"));
+            }
+            self.busy[s as usize] = true;
+            self.node_free[catalog.node_of(s as usize) as usize] -= 1;
+        }
+        Ok(())
+    }
+
+    fn release(&mut self, catalog: &NodeCatalog, slots: &[u32]) -> Result<(), String> {
+        for &s in slots {
+            if !self.busy[s as usize] {
+                return Err(format!("slot {s} released while free"));
+            }
+            self.busy[s as usize] = false;
+            self.node_free[catalog.node_of(s as usize) as usize] += 1;
+        }
+        Ok(())
+    }
+
+    fn free_count(&self) -> usize {
+        self.busy.iter().filter(|&&b| !b).count()
+    }
+}
+
+/// Compare bitmap and oracle slot-for-slot and count-for-count
+/// (global + per node).
+fn assert_models_agree(
+    catalog: &NodeCatalog,
+    state: &AvailMap,
+    oracle: &Oracle,
+) -> Result<(), String> {
+    if state.free_count() != oracle.free_count() {
+        return Err(format!(
+            "global free count drifted: bitmap {} vs oracle {}",
+            state.free_count(),
+            oracle.free_count()
+        ));
+    }
+    for (s, &busy) in oracle.busy.iter().enumerate() {
+        if state.is_free(s) == busy {
+            return Err(format!("slot {s} freeness drifted"));
+        }
+    }
+    for n in 0..catalog.n_nodes() as u32 {
+        let (lo, hi) = catalog.node_range(n);
+        if state.count_free_in(lo, hi) != oracle.node_free[n as usize] {
+            return Err(format!("node {n} free count drifted"));
+        }
+    }
+    Ok(())
+}
+
+/// One random op on both models: acquire a random demand in a random
+/// range (comparing the fast path's choice against the oracle's), or
+/// release a random held claim. Returns an error on any divergence.
+fn random_op(
+    rng: &mut Rng,
+    catalog: &NodeCatalog,
+    state: &mut AvailMap,
+    oracle: &mut Oracle,
+    held: &mut Vec<Vec<u32>>,
+) -> Result<(), String> {
+    let n = catalog.len();
+    let release = !held.is_empty() && rng.below(3) == 0;
+    if release {
+        let claim = held.swap_remove(rng.below(held.len()));
+        for &s in &claim {
+            if !state.set_free(s as usize) {
+                return Err(format!("bitmap slot {s} released while free"));
+            }
+        }
+        oracle.release(catalog, &claim)?;
+        return Ok(());
+    }
+    let Some(rd) = random_demand(rng, catalog) else {
+        return Ok(());
+    };
+    // whole-range or random sub-range acquire
+    let (lo, hi) = if rng.below(2) == 0 {
+        (0, n)
+    } else {
+        let lo = rng.below(n);
+        (lo, lo + rng.below(n - lo + 1))
+    };
+    let expect = oracle.place(catalog, lo, hi, &rd);
+    let mut got: Vec<u32> = Vec::new();
+    let ok = catalog.pop_gang_free(state, lo, hi, &rd, &mut got);
+    match (&expect, ok) {
+        (None, false) => {
+            if !got.is_empty() {
+                return Err("failed acquire pushed slots".into());
+            }
+        }
+        (Some(e), true) => {
+            if *e != got {
+                return Err(format!("placement diverged: oracle {e:?} vs bitmap {got:?}"));
+            }
+            oracle.acquire(catalog, &got)?;
+            held.push(got);
+        }
+        (e, ok) => {
+            return Err(format!(
+                "placeability diverged in [{lo},{hi}): oracle {e:?} vs bitmap ok={ok}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn gang_oracle_differential_no_double_booking() {
+    check("gang-oracle-no-double-booking", 1024, |g| {
+        let mut rng = Rng::new(g.seed ^ 0x6A46);
+        let catalog = random_catalog(&mut rng);
+        let mut state = AvailMap::all_free(catalog.len());
+        let mut oracle = Oracle::new(&catalog);
+        let mut held: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..32 {
+            random_op(&mut rng, &catalog, &mut state, &mut oracle, &mut held)?;
+        }
+        assert_models_agree(&catalog, &state, &oracle)
+    });
+}
+
+#[test]
+fn gang_oracle_free_counts_conserved() {
+    check("gang-oracle-free-counts", 1024, |g| {
+        let mut rng = Rng::new(g.seed ^ 0xC0_4275);
+        let catalog = random_catalog(&mut rng);
+        let mut state = AvailMap::all_free(catalog.len());
+        let mut oracle = Oracle::new(&catalog);
+        let mut held: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..24 {
+            random_op(&mut rng, &catalog, &mut state, &mut oracle, &mut held)?;
+            // conservation: free + held = total, on both models
+            let held_slots: usize = held.iter().map(|c| c.len()).sum();
+            if state.free_count() + held_slots != catalog.len() {
+                return Err(format!(
+                    "bitmap leaked slots: free {} + held {held_slots} != {}",
+                    state.free_count(),
+                    catalog.len()
+                ));
+            }
+            assert_models_agree(&catalog, &state, &oracle)?;
+        }
+        // release everything: both models return to all-free
+        for claim in held.drain(..) {
+            for &s in &claim {
+                state.set_free(s as usize);
+            }
+            oracle.release(&catalog, &claim)?;
+        }
+        if state.free_count() != catalog.len() {
+            return Err("full release did not restore all-free".into());
+        }
+        assert_models_agree(&catalog, &state, &oracle)
+    });
+}
+
+#[test]
+fn gang_oracle_release_restores_exact_state() {
+    check("gang-oracle-release-identity", 1024, |g| {
+        let mut rng = Rng::new(g.seed ^ 0x4E1E);
+        let catalog = random_catalog(&mut rng);
+        let n = catalog.len();
+        let mut state = AvailMap::all_free(n);
+        // random pre-existing occupancy
+        for _ in 0..n / 2 {
+            state.set_busy(rng.below(n));
+        }
+        let Some(rd) = random_demand(&mut rng, &catalog) else {
+            return Ok(());
+        };
+        let before = state.clone();
+        let mut got: Vec<u32> = Vec::new();
+        if catalog.pop_gang_free(&mut state, 0, n, &rd, &mut got) {
+            if state.free_count() + got.len() != before.free_count() {
+                return Err("acquire claimed a wrong number of slots".into());
+            }
+            for &s in &got {
+                if !state.set_free(s as usize) {
+                    return Err(format!("slot {s} was not held at release"));
+                }
+            }
+        }
+        if state != before {
+            return Err("acquire+release is not an identity".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gang_oracle_atomicity_never_partial() {
+    check("gang-oracle-atomicity", 1024, |g| {
+        let mut rng = Rng::new(g.seed ^ 0xA70_717C);
+        let catalog = random_catalog(&mut rng);
+        let n = catalog.len();
+        let mut state = AvailMap::all_free(n);
+        // fragment the state so partial fits are common
+        for _ in 0..n {
+            if rng.below(2) == 0 {
+                state.set_busy(rng.below(n));
+            }
+        }
+        for _ in 0..8 {
+            let Some(rd) = random_demand(&mut rng, &catalog) else {
+                continue;
+            };
+            let k = rd.gang_width() as usize;
+            let before = state.clone();
+            let mut got: Vec<u32> = Vec::new();
+            let ok = catalog.pop_gang_free(&mut state, 0, n, &rd, &mut got);
+            if !ok {
+                // all-or-nothing: a failed acquire holds zero slots
+                if !got.is_empty() || state != before {
+                    return Err("failed gang acquire left residue".into());
+                }
+                continue;
+            }
+            // exactly k slots, all co-resident on one node, all newly busy
+            if got.len() != k {
+                return Err(format!("gang of {k} returned {} slots", got.len()));
+            }
+            let node = catalog.node_of(got[0] as usize);
+            for &s in &got {
+                if catalog.node_of(s as usize) != node {
+                    return Err("gang slots span nodes".into());
+                }
+                if !before.is_free(s as usize) {
+                    return Err(format!("slot {s} was already busy"));
+                }
+                if state.is_free(s as usize) {
+                    return Err(format!("slot {s} not claimed"));
+                }
+                if !catalog.slot_matches(s as usize, &rd) {
+                    return Err(format!("slot {s} does not match the demand"));
+                }
+            }
+            if before.free_count() - state.free_count() != k {
+                return Err("acquire changed unrelated slots".into());
+            }
+        }
+        Ok(())
+    });
+}

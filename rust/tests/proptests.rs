@@ -327,10 +327,10 @@ fn catalog_masked_matching_agrees_with_naive_filter() {
 }
 
 #[test]
-fn trace_v2_roundtrips_random_constrained_traces() {
+fn gang_trace_v2_v3_roundtrips_random_constrained_traces() {
     use megha::sim::time::SimTime;
     use megha::workload::{trace as tracefile, Demand, Job, Trace};
-    check("trace-v2-roundtrip", 60, |g| {
+    check("trace-v2v3-roundtrip", 60, |g| {
         let mut rng = Rng::new(g.seed ^ 0x2B);
         let n = g.usize_in(1, 30);
         let mut t = 0.0;
@@ -351,10 +351,20 @@ fn trace_v2_roundtrips_random_constrained_traces() {
             })
             .collect();
         let any_demand = jobs.iter().any(|j| j.demand.is_some());
+        let any_gang = jobs
+            .iter()
+            .any(|j| j.demand.as_ref().is_some_and(|d| d.slots > 1));
         let trace = Trace::new("prop-v2", jobs);
         let enc = tracefile::encode(&trace);
-        if any_demand != enc.starts_with("#v2") {
-            return Err("format version does not track demand presence".into());
+        let header_ok = if any_gang {
+            enc.starts_with("#v3")
+        } else if any_demand {
+            enc.starts_with("#v2")
+        } else {
+            !enc.starts_with('#') || enc.starts_with("# ")
+        };
+        if !header_ok {
+            return Err("format version does not track demand/gang presence".into());
         }
         let back = tracefile::parse("prop-v2", &enc).map_err(|e| e.to_string())?;
         if back.n_jobs() != trace.n_jobs() || back.n_tasks() != trace.n_tasks() {
