@@ -10,10 +10,10 @@
 //!
 //! Run with `cargo bench` (or `cargo bench -- fig3 match` to filter).
 //! Flags: `--quick` shrinks the per-bench budget (the CI smoke mode);
-//! `--json` additionally writes `BENCH_PR3.json` (per-bench median
+//! `--json` additionally writes `BENCH_PR5.json` (per-bench median
 //! ns/unit, experiment totals in seconds) at the repo root — the
-//! current PR's perf artifact (`BENCH_PR2.json` is the frozen PR-2
-//! snapshot, still pending a hardware regeneration).
+//! current PR's perf artifact (`BENCH_PR2.json` / `BENCH_PR3.json` are
+//! the frozen earlier snapshots, still pending hardware regeneration).
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -93,7 +93,7 @@ impl Bench {
         self.total_results.borrow_mut().push((name.to_string(), total));
     }
 
-    /// Write `BENCH_PR3.json` at the repo root (next to `rust/`),
+    /// Write `BENCH_PR5.json` at the repo root (next to `rust/`),
     /// merging over any existing file so successive filtered runs
     /// (`-- queue --json` then `-- scale10 --json`) accumulate instead
     /// of clobbering each other. A fresh run of a bench name replaces
@@ -110,7 +110,7 @@ impl Bench {
             .ok()
             .and_then(|p| p.parent().map(|q| q.to_path_buf()))
             .unwrap_or_else(|| std::path::PathBuf::from("."));
-        let path = root.join("BENCH_PR3.json");
+        let path = root.join("BENCH_PR5.json");
         let mut bench: BTreeMap<String, Json> = BTreeMap::new();
         let mut totals: BTreeMap<String, Json> = BTreeMap::new();
         let mut measured = false;
@@ -199,6 +199,7 @@ fn main() {
     bench_match_engines(&b);
     bench_constraint_match(&b);
     bench_gang_queries(&b);
+    bench_index(&b);
     bench_sim_throughput(&b);
     bench_bitmap(&b);
     bench_queue(&b);
@@ -555,6 +556,89 @@ fn bench_gang_queries(b: &Bench) {
         std::hint::black_box(acc);
         1000
     });
+}
+
+/// The occupancy-index family (ISSUE 5): summary/block/counter-guided
+/// queries (`index/*`) vs the retained flat scans (`index/flat_*`) on a
+/// 100k-slot DC at 50/90/99% utilization — exactly where the flat scans
+/// degrade (at 90%+ almost every word is zero and a flat `first_free`
+/// walks them all). The acceptance target is ≥2× for `first_free` and
+/// `gangs_free` at 90%+ utilization; both sides compute bit-identical
+/// results (the flat side is the same map with `set_use_index(false)`).
+fn bench_index(b: &Bench) {
+    use megha::cluster::NodeCatalog;
+    use megha::workload::Demand;
+    const N: usize = 100_000;
+    const RANGE: usize = 10_000; // one LM-range-sized scan window
+    let catalog = NodeCatalog::bimodal_gpu(N, 0.25);
+    let rd = catalog
+        .resolve(&Demand::new(2, vec!["gpu".into()]))
+        .expect("gpu pairs resolve");
+    for &(tag, util) in &[("u50", 50usize), ("u90", 90), ("u99", 99)] {
+        let mut rng = Rng::new(29 + util as u64);
+        let mut state = AvailMap::all_free(N);
+        catalog.attach_index(&mut state);
+        let free_target = N - N * util / 100;
+        while state.free_count() > free_target {
+            state.set_busy(rng.below(N));
+        }
+        let mut flat = state.clone();
+        flat.set_use_index(false);
+        b.time(&format!("index/first_free_{tag}"), || {
+            let mut acc = 0usize;
+            for i in 0..1000 {
+                let lo = (i * 613) % (N - RANGE);
+                acc += state.first_free_in(lo, lo + RANGE).unwrap_or(0);
+            }
+            std::hint::black_box(acc);
+            1000
+        });
+        b.time(&format!("index/flat_first_free_{tag}"), || {
+            let mut acc = 0usize;
+            for i in 0..1000 {
+                let lo = (i * 613) % (N - RANGE);
+                acc += flat.first_free_in(lo, lo + RANGE).unwrap_or(0);
+            }
+            std::hint::black_box(acc);
+            1000
+        });
+        b.time(&format!("index/count_range_{tag}"), || {
+            let mut acc = 0usize;
+            for i in 0..1000 {
+                let lo = (i * 613) % (N - RANGE);
+                acc += state.count_free_in(lo, lo + RANGE);
+            }
+            std::hint::black_box(acc);
+            1000
+        });
+        b.time(&format!("index/flat_count_range_{tag}"), || {
+            let mut acc = 0usize;
+            for i in 0..1000 {
+                let lo = (i * 613) % (N - RANGE);
+                acc += flat.count_free_in(lo, lo + RANGE);
+            }
+            std::hint::black_box(acc);
+            1000
+        });
+        b.time(&format!("index/gangs_free_{tag}"), || {
+            let mut acc = 0usize;
+            for i in 0..200 {
+                let lo = (i * 613) % (N - RANGE);
+                acc += catalog.count_gangs_free(&state, lo, lo + RANGE, &rd);
+            }
+            std::hint::black_box(acc);
+            200
+        });
+        b.time(&format!("index/flat_gangs_free_{tag}"), || {
+            let mut acc = 0usize;
+            for i in 0..200 {
+                let lo = (i * 613) % (N - RANGE);
+                acc += catalog.count_gangs_free(&flat, lo, lo + RANGE, &rd);
+            }
+            std::hint::black_box(acc);
+            200
+        });
+    }
 }
 
 /// Simulator throughput: events/s and scheduling decisions/s.

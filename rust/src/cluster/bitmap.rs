@@ -4,14 +4,95 @@
 //! state and each GM's eventually-consistent *global* state, and the
 //! input to the match engine (`runtime::match_engine`). Word-level scans
 //! (trailing_zeros / popcount) keep the hot path branch-light.
+//!
+//! # The occupancy index
+//!
+//! At high utilization almost every word is zero, so flat word scans
+//! (`first_free_in`, `count_free_in`, `has_k_free_in`) walk long runs of
+//! nothing. The map therefore maintains a two-level **occupancy index**
+//! incrementally on every mutation:
+//!
+//! * `summary` — one bit per word: set ⇔ the word has any free slot.
+//!   Searches walk the summary and touch only non-empty words, making
+//!   them O(free regions) instead of O(words).
+//! * `block_free` — free-slot popcount per 64-word block (the span of
+//!   one summary word). Ranged counts take whole blocks from here and
+//!   only popcount words in the partial edge blocks.
+//! * optionally, per-node free counters (see
+//!   [`attach_node_index`](AvailMap::attach_node_index)): the hetero
+//!   catalog's gang queries replace their per-node range rescans with a
+//!   counter lookup.
+//!
+//! The index never changes results — only how they are computed. The
+//! pre-index flat scans survive as `naive_*` oracles (mirroring the
+//! `HeapEventQueue` pattern), and
+//! [`set_use_index(false)`](AvailMap::set_use_index) routes every query
+//! back onto them, which `tests/index_oracle.rs` uses to pin
+//! bit-identity under differential proptests and full-sweep goldens.
+
+use std::sync::Arc;
+
+/// Words per summary word / per popcount block (one summary word covers
+/// one block of 64 bitmap words = 4096 slots).
+const BLOCK: usize = 64;
+
+/// Mask the summary word of the block starting at bitmap-word `blo` to
+/// the word-index range `[a, b)` — the one edge-masking rule every
+/// summary-guided scan (here and in the hetero catalog) shares.
+/// Callers guarantee the block intersects the range
+/// (`blo <= b - 1` and `blo + 64 > a`), so both shifts stay in 1..=63.
+#[inline]
+pub(crate) fn summary_bits_in(mut bits: u64, blo: usize, a: usize, b: usize) -> u64 {
+    if blo < a {
+        bits &= !0u64 << (a - blo);
+    }
+    if blo + BLOCK > b {
+        bits &= (1u64 << (b - blo)) - 1;
+    }
+    bits
+}
+
+/// Per-node free counters riding on a map (see
+/// [`AvailMap::attach_node_index`]). `node_of[slot]` is the (map-local)
+/// node id of each slot; `free[node]` mirrors `count_free_in` over that
+/// node's slot range, delta-updated by every mutation path.
+#[derive(Clone, Debug)]
+struct NodeIndex {
+    node_of: Arc<[u32]>,
+    free: Vec<u32>,
+}
 
 /// Fixed-size bitmap over worker slots. Bit set = worker free.
-#[derive(Clone, Debug, PartialEq, Eq)]
+///
+/// Equality compares the *semantic* state (bit content and length)
+/// only; the occupancy index is derived data and the `use_index`
+/// routing flag is configuration, so neither participates.
+#[derive(Clone, Debug)]
 pub struct AvailMap {
     words: Vec<u64>,
     n: usize,
     free: usize,
+    /// Occupancy summary: bit `w % 64` of `summary[w / 64]` set ⇔
+    /// `words[w] != 0`. Invariant holds after every mutation.
+    summary: Vec<u64>,
+    /// Free slots per 64-word block: `block_free[b]` = Σ popcount of
+    /// `words[64b .. 64b + 64]`. Invariant holds after every mutation.
+    block_free: Vec<u32>,
+    /// Query routing: `true` (default) = summary/block/counter-guided,
+    /// `false` = the flat `naive_*` scans. The index itself stays
+    /// maintained either way, so the flag can be flipped at any time.
+    use_index: bool,
+    /// Optional per-node free counters.
+    nodes: Option<NodeIndex>,
 }
+
+impl PartialEq for AvailMap {
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n && self.free == other.free && self.words == other.words
+    }
+}
+
+impl Eq for AvailMap {}
 
 impl AvailMap {
     /// All workers free.
@@ -22,15 +103,44 @@ impl AvailMap {
             // clear the padding bits in the last word
             words[n_words - 1] = (1u64 << (n % 64)) - 1;
         }
-        AvailMap { words, n, free: n }
+        let mut m = AvailMap {
+            words,
+            n,
+            free: n,
+            summary: Vec::new(),
+            block_free: Vec::new(),
+            use_index: true,
+            nodes: None,
+        };
+        m.rebuild_index();
+        m
     }
 
     /// All workers busy.
     pub fn all_busy(n: usize) -> AvailMap {
+        let n_words = n.div_ceil(64);
         AvailMap {
-            words: vec![0u64; n.div_ceil(64)],
+            words: vec![0u64; n_words],
             n,
             free: 0,
+            summary: vec![0u64; n_words.div_ceil(BLOCK)],
+            block_free: vec![0u32; n_words.div_ceil(BLOCK)],
+            use_index: true,
+            nodes: None,
+        }
+    }
+
+    /// Recompute `summary` and `block_free` from `words` (constructors
+    /// and bulk resets; everything else maintains them incrementally).
+    fn rebuild_index(&mut self) {
+        let nb = self.words.len().div_ceil(BLOCK);
+        self.summary = vec![0u64; nb];
+        self.block_free = vec![0u32; nb];
+        for (w, &word) in self.words.iter().enumerate() {
+            if word != 0 {
+                self.summary[w / BLOCK] |= 1 << (w % BLOCK);
+                self.block_free[w / BLOCK] += word.count_ones();
+            }
         }
     }
 
@@ -47,6 +157,99 @@ impl AvailMap {
         self.free
     }
 
+    /// Route queries through the occupancy index (`true`, the default)
+    /// or through the flat `naive_*` scans (`false`). Results are
+    /// bit-identical either way — the flag exists for the differential
+    /// goldens and the `--no-index` debug mode.
+    pub fn set_use_index(&mut self, on: bool) {
+        self.use_index = on;
+    }
+
+    /// Current query routing (see [`set_use_index`](Self::set_use_index)).
+    pub fn index_enabled(&self) -> bool {
+        self.use_index
+    }
+
+    /// Summary word `s`: bit `i` set ⇔ bitmap word `s * 64 + i` has any
+    /// free slot. Word-wise consumers (the hetero catalog's
+    /// summary-guided masked matching) AND these across maps.
+    #[inline]
+    pub fn summary_word(&self, s: usize) -> u64 {
+        self.summary[s]
+    }
+
+    /// Attach per-node free counters: `node_of[slot]` is the node id of
+    /// each slot (ids dense in `0..n_nodes`). Counters are computed once
+    /// here and delta-updated by every mutation from then on;
+    /// [`node_free_count`](Self::node_free_count) exposes them. Nodes
+    /// must be consecutive slot runs only in the *catalog's* sense —
+    /// this map just counts bits per id.
+    pub fn attach_node_index(&mut self, node_of: Arc<[u32]>, n_nodes: usize) {
+        assert_eq!(node_of.len(), self.n, "node table must cover the map");
+        let mut free = vec![0u32; n_nodes];
+        for s in self.iter_free() {
+            free[node_of[s] as usize] += 1;
+        }
+        self.nodes = Some(NodeIndex { node_of, free });
+    }
+
+    /// Free slots of node `node`, if counters are attached *and* the
+    /// index is enabled (`None` routes callers to their flat scan).
+    #[inline]
+    pub fn node_free_count(&self, node: u32) -> Option<usize> {
+        if !self.use_index {
+            return None;
+        }
+        self.nodes.as_ref().map(|nx| nx.free[node as usize] as usize)
+    }
+
+    /// Free slots of the node hosting `slot` (see
+    /// [`node_free_count`](Self::node_free_count)).
+    #[inline]
+    pub fn node_free_at(&self, slot: usize) -> Option<usize> {
+        if !self.use_index {
+            return None;
+        }
+        self.nodes
+            .as_ref()
+            .map(|nx| nx.free[nx.node_of[slot] as usize] as usize)
+    }
+
+    /// Does node `node` (whose slot range is `[nlo, nhi)`) hold at least
+    /// `k` free slots? **The** counter-or-scan contract, shared by every
+    /// gang occupancy check: a counter lookup when the node index is
+    /// attached and enabled, the ranged popcount otherwise.
+    #[inline]
+    pub fn node_has_k_free(&self, node: u32, nlo: usize, nhi: usize, k: usize) -> bool {
+        match self.node_free_count(node) {
+            Some(f) => f >= k,
+            None => self.has_k_free_in(nlo, nhi, k),
+        }
+    }
+
+    /// [`node_has_k_free`](Self::node_has_k_free) addressed by a slot of
+    /// the node instead of its id (Pigeon's slice-local tables).
+    #[inline]
+    pub fn node_has_k_free_at(&self, slot: usize, nlo: usize, nhi: usize, k: usize) -> bool {
+        match self.node_free_at(slot) {
+            Some(f) => f >= k,
+            None => self.has_k_free_in(nlo, nhi, k),
+        }
+    }
+
+    /// Reset every slot to busy in place, preserving the index
+    /// attachment and routing flag (a GM losing its state on failure,
+    /// not a reallocation).
+    pub fn clear_to_busy(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+        self.free = 0;
+        self.summary.iter_mut().for_each(|s| *s = 0);
+        self.block_free.iter_mut().for_each(|b| *b = 0);
+        if let Some(nx) = &mut self.nodes {
+            nx.free.iter_mut().for_each(|f| *f = 0);
+        }
+    }
+
     #[inline]
     pub fn is_free(&self, idx: usize) -> bool {
         debug_assert!(idx < self.n);
@@ -58,14 +261,17 @@ impl AvailMap {
     pub fn set_free(&mut self, idx: usize) -> bool {
         debug_assert!(idx < self.n);
         let (w, b) = (idx / 64, idx % 64);
-        let was = self.words[w] >> b & 1;
-        self.words[w] |= 1 << b;
-        if was == 0 {
-            self.free += 1;
-            true
-        } else {
-            false
+        if self.words[w] >> b & 1 == 1 {
+            return false;
         }
+        self.words[w] |= 1 << b;
+        self.free += 1;
+        self.summary[w / BLOCK] |= 1 << (w % BLOCK);
+        self.block_free[w / BLOCK] += 1;
+        if let Some(nx) = &mut self.nodes {
+            nx.free[nx.node_of[idx] as usize] += 1;
+        }
+        true
     }
 
     /// Mark busy; returns whether the bit changed.
@@ -73,18 +279,185 @@ impl AvailMap {
     pub fn set_busy(&mut self, idx: usize) -> bool {
         debug_assert!(idx < self.n);
         let (w, b) = (idx / 64, idx % 64);
-        let was = self.words[w] >> b & 1;
+        if self.words[w] >> b & 1 == 0 {
+            return false;
+        }
         self.words[w] &= !(1 << b);
-        if was == 1 {
-            self.free -= 1;
-            true
+        self.free -= 1;
+        if self.words[w] == 0 {
+            self.summary[w / BLOCK] &= !(1 << (w % BLOCK));
+        }
+        self.block_free[w / BLOCK] -= 1;
+        if let Some(nx) = &mut self.nodes {
+            nx.free[nx.node_of[idx] as usize] -= 1;
+        }
+        true
+    }
+
+    /// Replace word `w` with `new`, updating `free`, the summary bit,
+    /// the block popcount, and (when attached) the node counters from
+    /// the changed bits. The word-granular mutation paths
+    /// (`copy_range_from`, `apply_words`) funnel through here.
+    #[inline]
+    fn retire_word(&mut self, w: usize, old: u64, new: u64) {
+        debug_assert_ne!(old, new);
+        self.words[w] = new;
+        let added = new.count_ones() as isize - old.count_ones() as isize;
+        self.free = (self.free as isize + added) as usize;
+        if new == 0 {
+            self.summary[w / BLOCK] &= !(1 << (w % BLOCK));
         } else {
-            false
+            self.summary[w / BLOCK] |= 1 << (w % BLOCK);
+        }
+        let b = w / BLOCK;
+        self.block_free[b] = (self.block_free[b] as isize + added) as u32;
+        if let Some(nx) = &mut self.nodes {
+            let mut d = old ^ new;
+            while d != 0 {
+                let bit = d.trailing_zeros() as usize;
+                let node = nx.node_of[w * 64 + bit] as usize;
+                if new >> bit & 1 == 1 {
+                    nx.free[node] += 1;
+                } else {
+                    nx.free[node] -= 1;
+                }
+                d &= d - 1;
+            }
         }
     }
 
+    // ---- ranged queries: indexed fast paths + flat naive_* oracles ----
+
     /// Free workers within [lo, hi).
     pub fn count_free_in(&self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi && hi <= self.n);
+        if !self.use_index {
+            return self.naive_count_free_in(lo, hi);
+        }
+        self.indexed_count(lo, hi, usize::MAX)
+    }
+
+    /// Are at least `k` workers free in [lo, hi)? Early-exits as soon as
+    /// the running count reaches `k`.
+    pub fn has_k_free_in(&self, lo: usize, hi: usize, k: usize) -> bool {
+        debug_assert!(lo <= hi && hi <= self.n);
+        if k == 0 {
+            return true;
+        }
+        if lo == hi {
+            return false;
+        }
+        if !self.use_index {
+            return self.naive_has_k_free_in(lo, hi, k);
+        }
+        if self.free < k {
+            return false;
+        }
+        self.indexed_count(lo, hi, k) >= k
+    }
+
+    /// Summary-guided ranged popcount, stopping early once `cap` is
+    /// reached (the returned value is then `>= cap`, not exact; pass
+    /// `usize::MAX` for an exact count). Edge words are popcounted
+    /// directly; interior words come from whole-block counts where the
+    /// range covers a full block and from summary-guided word popcounts
+    /// in the partial edge blocks.
+    fn indexed_count(&self, lo: usize, hi: usize, cap: usize) -> usize {
+        if lo >= hi {
+            return 0;
+        }
+        let (lw, hw) = (lo / 64, (hi - 1) / 64);
+        if lw == hw {
+            let mut word = self.words[lw] & (!0u64 << (lo % 64));
+            if hi % 64 != 0 {
+                word &= (1u64 << (hi % 64)) - 1;
+            }
+            return word.count_ones() as usize;
+        }
+        let mut total = (self.words[lw] & (!0u64 << (lo % 64))).count_ones() as usize;
+        let hi_mask = if hi % 64 == 0 {
+            !0u64
+        } else {
+            (1u64 << (hi % 64)) - 1
+        };
+        total += (self.words[hw] & hi_mask).count_ones() as usize;
+        // interior words [a, b), whole words only
+        let (a, b) = (lw + 1, hw);
+        if a >= b || total >= cap {
+            return total;
+        }
+        let mut s = a / BLOCK;
+        let send = (b - 1) / BLOCK;
+        while s <= send {
+            let blo = s * BLOCK;
+            if a <= blo && blo + BLOCK <= b {
+                total += self.block_free[s] as usize;
+            } else {
+                let mut bits = summary_bits_in(self.summary[s], blo, a, b);
+                while bits != 0 {
+                    let i = bits.trailing_zeros() as usize;
+                    total += self.words[blo + i].count_ones() as usize;
+                    bits &= bits - 1;
+                }
+            }
+            if total >= cap {
+                return total;
+            }
+            s += 1;
+        }
+        total
+    }
+
+    /// First free worker in [lo, hi), if any.
+    pub fn first_free_in(&self, lo: usize, hi: usize) -> Option<usize> {
+        debug_assert!(lo <= hi && hi <= self.n);
+        if lo == hi {
+            return None;
+        }
+        if !self.use_index {
+            return self.naive_first_free_in(lo, hi);
+        }
+        let (lw, hw) = (lo / 64, (hi - 1) / 64);
+        let mut word = self.words[lw] & (!0u64 << (lo % 64));
+        if lw == hw && hi % 64 != 0 {
+            word &= (1u64 << (hi % 64)) - 1;
+        }
+        if word != 0 {
+            return Some(lw * 64 + word.trailing_zeros() as usize);
+        }
+        if lw == hw {
+            return None;
+        }
+        // summary-guided scan of words (lw, hw]
+        let (a, b) = (lw + 1, hw + 1);
+        let mut s = a / BLOCK;
+        let send = (b - 1) / BLOCK;
+        while s <= send {
+            let blo = s * BLOCK;
+            let bits = summary_bits_in(self.summary[s], blo, a, b);
+            if bits != 0 {
+                let w = blo + bits.trailing_zeros() as usize;
+                let mut word = self.words[w];
+                if w == hw && hi % 64 != 0 {
+                    word &= (1u64 << (hi % 64)) - 1;
+                }
+                // the only maskable hit is hw, the last candidate: a
+                // zero there means every free bit sits past `hi`
+                return if word != 0 {
+                    Some(w * 64 + word.trailing_zeros() as usize)
+                } else {
+                    None
+                };
+            }
+            s += 1;
+        }
+        None
+    }
+
+    /// Flat-scan oracle for [`count_free_in`](Self::count_free_in): the
+    /// pre-index word loop, exercised directly by the differential
+    /// tests and by [`set_use_index(false)`](Self::set_use_index).
+    pub fn naive_count_free_in(&self, lo: usize, hi: usize) -> usize {
         debug_assert!(lo <= hi && hi <= self.n);
         if lo == hi {
             return 0;
@@ -104,11 +477,8 @@ impl AvailMap {
         total
     }
 
-    /// Are at least `k` workers free in [lo, hi)? Early-exits as soon as
-    /// the running popcount reaches `k` — the per-node occupancy check
-    /// of the gang-placement path, where node ranges are a handful of
-    /// words at most.
-    pub fn has_k_free_in(&self, lo: usize, hi: usize, k: usize) -> bool {
+    /// Flat-scan oracle for [`has_k_free_in`](Self::has_k_free_in).
+    pub fn naive_has_k_free_in(&self, lo: usize, hi: usize, k: usize) -> bool {
         debug_assert!(lo <= hi && hi <= self.n);
         if k == 0 {
             return true;
@@ -134,8 +504,8 @@ impl AvailMap {
         false
     }
 
-    /// First free worker in [lo, hi), if any.
-    pub fn first_free_in(&self, lo: usize, hi: usize) -> Option<usize> {
+    /// Flat-scan oracle for [`first_free_in`](Self::first_free_in).
+    pub fn naive_first_free_in(&self, lo: usize, hi: usize) -> Option<usize> {
         debug_assert!(lo <= hi && hi <= self.n);
         if lo == hi {
             return None;
@@ -203,10 +573,7 @@ impl AvailMap {
             let old = self.words[w];
             let new = (old & !mask) | (src.words[w] & mask);
             if old != new {
-                let added = (new & mask).count_ones() as isize
-                    - (old & mask).count_ones() as isize;
-                self.free = (self.free as isize + added) as usize;
-                self.words[w] = new;
+                self.retire_word(w, old, new);
             }
         }
     }
@@ -238,7 +605,7 @@ impl AvailMap {
     ///
     /// `changed` (cleared here) gets bit `i` set for every word `i` this
     /// call actually modified, so callers can rescope follow-up work
-    /// (e.g. per-partition recounts) to what moved.
+    /// to what moved.
     pub fn apply_words(
         &mut self,
         lo: usize,
@@ -252,9 +619,35 @@ impl AvailMap {
         if lo >= hi {
             return;
         }
+        let lw = lo / 64;
+        changed.resize(src.len().div_ceil(64), 0);
+        self.apply_words_with(lo, hi, src, skip_clean, |w, _, _| {
+            let i = w - lw;
+            changed[i / 64] |= 1 << (i % 64);
+        });
+    }
+
+    /// [`apply_words`](Self::apply_words) with a per-word mutation hook
+    /// instead of a changed-word mask: `hook(w, old, new)` fires for
+    /// every *global* word index `w` this call modifies, with the word's
+    /// masked before/after values — the changed bits are exactly
+    /// `old ^ new`, and no mask is materialized. Megha reconciles its
+    /// delta-maintained per-partition free counters through this hook
+    /// instead of recounting partition ranges after each apply.
+    pub fn apply_words_with(
+        &mut self,
+        lo: usize,
+        hi: usize,
+        src: &[u64],
+        skip_clean: Option<&[u64]>,
+        mut hook: impl FnMut(usize, u64, u64),
+    ) {
+        debug_assert!(lo <= hi && hi <= self.n);
+        if lo >= hi {
+            return;
+        }
         let (lw, hw) = (lo / 64, (hi - 1) / 64);
         debug_assert_eq!(src.len(), hw - lw + 1);
-        changed.resize(src.len().div_ceil(64), 0);
         for w in lw..=hw {
             let i = w - lw;
             if let Some(m) = skip_clean {
@@ -272,11 +665,8 @@ impl AvailMap {
             let old = self.words[w];
             let new = (old & !mask) | (src[i] & mask);
             if old != new {
-                let added = (new & mask).count_ones() as isize
-                    - (old & mask).count_ones() as isize;
-                self.free = (self.free as isize + added) as usize;
-                self.words[w] = new;
-                changed[i / 64] |= 1 << (i % 64);
+                self.retire_word(w, old, new);
+                hook(w, old, new);
             }
         }
     }
@@ -329,14 +719,44 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
+    /// The index invariants, checked from first principles.
+    fn assert_index_consistent(m: &AvailMap) {
+        let mut free = 0usize;
+        for w in 0..m.n_words() {
+            let word = m.word(w);
+            free += word.count_ones() as usize;
+            assert_eq!(
+                m.summary[w / BLOCK] >> (w % BLOCK) & 1 == 1,
+                word != 0,
+                "summary bit of word {w} drifted"
+            );
+        }
+        assert_eq!(m.free_count(), free, "free count drifted");
+        for (b, &bf) in m.block_free.iter().enumerate() {
+            let lo = b * BLOCK;
+            let hi = (lo + BLOCK).min(m.n_words());
+            let want: u32 = (lo..hi).map(|w| m.word(w).count_ones()).sum();
+            assert_eq!(bf, want, "block {b} popcount drifted");
+        }
+        if let Some(nx) = &m.nodes {
+            let mut want = vec![0u32; nx.free.len()];
+            for s in m.iter_free() {
+                want[nx.node_of[s] as usize] += 1;
+            }
+            assert_eq!(nx.free, want, "node counters drifted");
+        }
+    }
+
     #[test]
     fn all_free_and_busy() {
         let m = AvailMap::all_free(100);
         assert_eq!(m.free_count(), 100);
         assert!(m.is_free(99));
+        assert_index_consistent(&m);
         let b = AvailMap::all_busy(100);
         assert_eq!(b.free_count(), 0);
         assert!(!b.is_free(0));
+        assert_index_consistent(&b);
     }
 
     #[test]
@@ -359,6 +779,7 @@ mod tests {
         assert_eq!(m.count_free_in(64, 128), 2);
         assert_eq!(m.count_free_in(128, 129), 1);
         assert_eq!(m.count_free_in(10, 10), 0);
+        assert_index_consistent(&m);
     }
 
     #[test]
@@ -406,6 +827,7 @@ mod tests {
         dst.copy_range_from(&src, 32, 96);
         assert_eq!(dst.free_count(), 64);
         assert!(!dst.is_free(31) && dst.is_free(32) && dst.is_free(95) && !dst.is_free(96));
+        assert_index_consistent(&dst);
     }
 
     #[test]
@@ -461,6 +883,8 @@ mod tests {
             b.apply_words(lo, hi, &words, None, &mut changed);
             assert_eq!(a, b, "n={n} lo={lo} hi={hi}");
             assert_eq!(a.free_count(), b.free_count());
+            assert_index_consistent(&a);
+            assert_index_consistent(&b);
         }
     }
 
@@ -514,6 +938,148 @@ mod tests {
     }
 
     #[test]
+    fn apply_words_hook_reports_exact_deltas() {
+        let n = 400;
+        let mut r = Rng::new(91);
+        let mut src = AvailMap::all_busy(n);
+        let mut dst = AvailMap::all_free(n);
+        for _ in 0..n {
+            src.set_free(r.below(n));
+            dst.set_busy(r.below(n));
+        }
+        let before = dst.clone();
+        let (lo, hi) = (37, 391);
+        let mut words = Vec::new();
+        src.copy_words_into(lo, hi, &mut words);
+        let mut delta = 0isize;
+        let mut hooked_words = Vec::new();
+        dst.apply_words_with(lo, hi, &words, None, |w, old, new| {
+            assert_ne!(old, new, "hook fired on an unchanged word");
+            delta += new.count_ones() as isize - old.count_ones() as isize;
+            hooked_words.push(w);
+        });
+        // hook deltas reconcile the free count exactly
+        assert_eq!(
+            dst.free_count() as isize - before.free_count() as isize,
+            delta
+        );
+        // the hooked path lands on the same state as the masked variant,
+        // and the hook fired exactly for the words apply_words flags
+        let mut twin = before.clone();
+        let mut changed = Vec::new();
+        twin.apply_words(lo, hi, &words, None, &mut changed);
+        assert_eq!(dst, twin);
+        let flagged: Vec<usize> = (0..words.len())
+            .filter(|i| changed[i / 64] >> (i % 64) & 1 == 1)
+            .map(|i| i + lo / 64)
+            .collect();
+        assert_eq!(hooked_words, flagged);
+        assert_index_consistent(&dst);
+    }
+
+    #[test]
+    fn indexed_queries_match_naive_oracles() {
+        // the tentpole's own differential: random occupancy at several
+        // fill levels, every ranged query vs its flat oracle
+        let mut r = Rng::new(57);
+        for &n in &[1usize, 63, 64, 65, 300, 5000] {
+            for &fill in &[0usize, n / 20, n / 2, n.saturating_sub(1), n] {
+                let mut m = AvailMap::all_busy(n);
+                for _ in 0..fill {
+                    m.set_free(r.below(n));
+                }
+                assert_index_consistent(&m);
+                for _ in 0..40 {
+                    let lo = r.below(n + 1);
+                    let hi = lo + r.below(n - lo + 1);
+                    assert_eq!(
+                        m.count_free_in(lo, hi),
+                        m.naive_count_free_in(lo, hi),
+                        "count [{lo},{hi}) n={n}"
+                    );
+                    assert_eq!(
+                        m.first_free_in(lo, hi),
+                        m.naive_first_free_in(lo, hi),
+                        "first [{lo},{hi}) n={n}"
+                    );
+                    let k = r.below(6);
+                    assert_eq!(
+                        m.has_k_free_in(lo, hi, k),
+                        m.naive_has_k_free_in(lo, hi, k),
+                        "has_k [{lo},{hi}) k={k} n={n}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn use_index_toggle_is_behavior_neutral() {
+        let mut r = Rng::new(58);
+        let n = 1000;
+        let mut a = AvailMap::all_free(n);
+        let mut b = AvailMap::all_free(n);
+        b.set_use_index(false);
+        for _ in 0..4000 {
+            let i = r.below(n);
+            if r.next_u64() & 1 == 0 {
+                assert_eq!(a.set_busy(i), b.set_busy(i));
+            } else {
+                assert_eq!(a.set_free(i), b.set_free(i));
+            }
+            if r.below(16) == 0 {
+                let lo = r.below(n);
+                let hi = lo + r.below(n - lo + 1);
+                assert_eq!(a.first_free_in(lo, hi), b.first_free_in(lo, hi));
+                assert_eq!(a.count_free_in(lo, hi), b.count_free_in(lo, hi));
+                assert_eq!(a.pop_free_in(lo, hi), b.pop_free_in(lo, hi));
+            }
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn node_counters_attach_and_track() {
+        // 3 nodes: [0,4) / [4,6) / [6,11)
+        let node_of: Arc<[u32]> = (0..11u32)
+            .map(|s| match s {
+                0..=3 => 0u32,
+                4..=5 => 1,
+                _ => 2,
+            })
+            .collect::<Vec<_>>()
+            .into();
+        let mut m = AvailMap::all_free(11);
+        m.set_busy(2);
+        m.attach_node_index(node_of, 3);
+        assert_eq!(m.node_free_count(0), Some(3));
+        assert_eq!(m.node_free_count(1), Some(2));
+        assert_eq!(m.node_free_count(2), Some(5));
+        assert_eq!(m.node_free_at(4), Some(2));
+        m.set_busy(4);
+        m.set_busy(5);
+        assert_eq!(m.node_free_count(1), Some(0));
+        m.set_free(4);
+        assert_eq!(m.node_free_count(1), Some(1));
+        // word-granular path keeps the counters exact too
+        let src = AvailMap::all_busy(11);
+        m.copy_range_from(&src, 0, 11);
+        assert_eq!(m.node_free_count(0), Some(0));
+        assert_eq!(m.node_free_count(2), Some(0));
+        assert_index_consistent(&m);
+        // disabling the index hides the counters (flat routing)
+        m.set_use_index(false);
+        assert_eq!(m.node_free_count(0), None);
+        m.set_use_index(true);
+        // clear_to_busy zeroes but preserves the attachment
+        m.set_free(7);
+        m.clear_to_busy();
+        assert_eq!(m.free_count(), 0);
+        assert_eq!(m.node_free_count(2), Some(0));
+        assert_index_consistent(&m);
+    }
+
+    #[test]
     fn iter_free_matches_is_free() {
         let mut m = AvailMap::all_busy(300);
         let mut r = Rng::new(11);
@@ -563,5 +1129,6 @@ mod tests {
             m.count_free_in(lo, hi),
             model[lo..hi].iter().filter(|&&x| x).count()
         );
+        assert_index_consistent(&m);
     }
 }

@@ -33,7 +33,9 @@
 //! `tests/driver_invariants.rs` pin a non-trivial catalog with an
 //! unconstrained trace against the trivial one.
 
-use super::bitmap::AvailMap;
+use std::sync::Arc;
+
+use super::bitmap::{summary_bits_in, AvailMap};
 use crate::workload::constraints::Demand;
 use crate::workload::Trace;
 
@@ -79,9 +81,14 @@ pub struct NodeCatalog {
     /// Attribute labels; index = attribute id.
     attrs: Vec<String>,
     /// Per-attribute slot bitset (bit set ⇔ slot has the attribute).
+    /// Being `AvailMap`s, each carries its own (static) occupancy
+    /// summary — the per-attribute summaries the summary-guided masked
+    /// scans AND against the live state's summary.
     masks: Vec<AvailMap>,
     /// Physical node of each slot (empty when trivial: node == slot).
-    node_of_slot: Vec<u32>,
+    /// Shared (`Arc`) with every state map that attaches per-node free
+    /// counters via [`attach_index`](Self::attach_index).
+    node_of_slot: Arc<[u32]>,
     /// Capacity (slot count) per node (empty when trivial: all 1).
     node_capacity: Vec<u32>,
     /// First slot of each node (empty when trivial: node == slot).
@@ -101,7 +108,7 @@ impl NodeCatalog {
             n_slots,
             attrs: Vec::new(),
             masks: Vec::new(),
-            node_of_slot: Vec::new(),
+            node_of_slot: Vec::<u32>::new().into(),
             node_capacity: Vec::new(),
             node_start: Vec::new(),
             cap_masks: Vec::new(),
@@ -179,7 +186,7 @@ impl NodeCatalog {
             n_slots,
             attrs,
             masks,
-            node_of_slot,
+            node_of_slot: node_of_slot.into(),
             node_capacity,
             node_start,
             cap_masks,
@@ -322,6 +329,20 @@ impl NodeCatalog {
         &self.attrs
     }
 
+    /// Attach this catalog's per-node free counters to a state map (the
+    /// mutation hook threaded through [`AvailMap`]): from here on every
+    /// `set_busy`/`set_free`/`apply_words` on `state` delta-updates one
+    /// counter per node, and the gang queries below replace their
+    /// per-node range rescans with counter lookups. No-op on a trivial
+    /// catalog (node == slot: the bit already is the counter).
+    pub fn attach_index(&self, state: &mut AvailMap) {
+        if self.trivial || self.n_slots == 0 {
+            return;
+        }
+        debug_assert_eq!(state.len(), self.n_slots);
+        state.attach_node_index(self.node_of_slot.clone(), self.node_capacity.len());
+    }
+
     /// Resolve a demand. Strict: unknown attribute labels and capacity
     /// classes no node provides are errors, not silent no-matches — a
     /// demand that can never place would deadlock a simulation.
@@ -385,6 +406,24 @@ impl NodeCatalog {
         m
     }
 
+    /// The demand's combined *static summary* for summary word `s`: bit
+    /// `i` can only be set if bitmap word `s * 64 + i` holds at least
+    /// one slot per attribute/capacity mask. ANDed with the state's
+    /// occupancy summary, this lets constrained scans skip words with no
+    /// matching slots at all — conservative (a surviving bit may still
+    /// AND to zero at word level), never lossy.
+    #[inline]
+    fn demand_summary_word(&self, rd: &ResolvedDemand, s: usize) -> u64 {
+        let mut m = !0u64;
+        for &a in &rd.attr_ids {
+            m &= self.masks[a].summary_word(s);
+        }
+        if let Some(c) = rd.cap_idx {
+            m &= self.cap_masks[c].1.summary_word(s);
+        }
+        m
+    }
+
     /// Does `slot` satisfy the demand?
     pub fn slot_matches(&self, slot: usize, rd: &ResolvedDemand) -> bool {
         debug_assert!(slot < self.n_slots);
@@ -410,9 +449,53 @@ impl NodeCatalog {
         total
     }
 
-    /// Free slots of `state` in [lo, hi) matching the demand — one
-    /// word-wise AND per word, the constraint-matching hot path.
+    /// Free slots of `state` in [lo, hi) matching the demand — the
+    /// constraint-matching hot path. Summary-guided: only words whose
+    /// occupancy summary ANDs non-zero with the demand's static
+    /// summaries are touched at all (the flat per-word loop survives as
+    /// [`naive_count_matching_free`](Self::naive_count_matching_free)).
     pub fn count_matching_free(
+        &self,
+        state: &AvailMap,
+        lo: usize,
+        hi: usize,
+        rd: &ResolvedDemand,
+    ) -> usize {
+        debug_assert!(lo <= hi && hi <= self.n_slots && state.len() == self.n_slots);
+        if lo == hi {
+            return 0;
+        }
+        if rd.is_unconstrained() {
+            return state.count_free_in(lo, hi);
+        }
+        if !state.index_enabled() {
+            return self.naive_count_matching_free(state, lo, hi, rd);
+        }
+        let (lw, hw) = (lo / 64, (hi - 1) / 64);
+        let mut total = 0usize;
+        let mut s = lw / 64;
+        let send = hw / 64;
+        while s <= send {
+            let blo = s * 64;
+            let combined = state.summary_word(s) & self.demand_summary_word(rd, s);
+            let mut bits = summary_bits_in(combined, blo, lw, hw + 1);
+            while bits != 0 {
+                let w = blo + bits.trailing_zeros() as usize;
+                let word =
+                    state.word(w) & self.demand_word(rd, w) & range_word_mask(w, lw, hw, lo, hi);
+                total += word.count_ones() as usize;
+                bits &= bits - 1;
+            }
+            s += 1;
+        }
+        total
+    }
+
+    /// Flat-scan oracle for
+    /// [`count_matching_free`](Self::count_matching_free): the pre-index
+    /// word loop, used by the differential tests and by states with
+    /// `set_use_index(false)`.
+    pub fn naive_count_matching_free(
         &self,
         state: &AvailMap,
         lo: usize,
@@ -434,7 +517,49 @@ impl NodeCatalog {
     }
 
     /// First free slot of `state` in [lo, hi) matching the demand.
+    /// Summary-guided like
+    /// [`count_matching_free`](Self::count_matching_free).
     pub fn first_matching_free(
+        &self,
+        state: &AvailMap,
+        lo: usize,
+        hi: usize,
+        rd: &ResolvedDemand,
+    ) -> Option<usize> {
+        debug_assert!(lo <= hi && hi <= self.n_slots && state.len() == self.n_slots);
+        if lo == hi {
+            return None;
+        }
+        if rd.is_unconstrained() {
+            return state.first_free_in(lo, hi);
+        }
+        if !state.index_enabled() {
+            return self.naive_first_matching_free(state, lo, hi, rd);
+        }
+        let (lw, hw) = (lo / 64, (hi - 1) / 64);
+        let mut s = lw / 64;
+        let send = hw / 64;
+        while s <= send {
+            let blo = s * 64;
+            let combined = state.summary_word(s) & self.demand_summary_word(rd, s);
+            let mut bits = summary_bits_in(combined, blo, lw, hw + 1);
+            while bits != 0 {
+                let w = blo + bits.trailing_zeros() as usize;
+                let word =
+                    state.word(w) & self.demand_word(rd, w) & range_word_mask(w, lw, hw, lo, hi);
+                if word != 0 {
+                    return Some(w * 64 + word.trailing_zeros() as usize);
+                }
+                bits &= bits - 1;
+            }
+            s += 1;
+        }
+        None
+    }
+
+    /// Flat-scan oracle for
+    /// [`first_matching_free`](Self::first_matching_free).
+    pub fn naive_first_matching_free(
         &self,
         state: &AvailMap,
         lo: usize,
@@ -497,6 +622,38 @@ impl NodeCatalog {
     // the per-node free-slot count, then jump past the node. Nodes are
     // consecutive slot runs, so the scan visits each candidate node once.
 
+    /// Node-scan worker shared by the plain and rotated entry points:
+    /// walk matching free slots in `[scan_lo, scan_hi)` (summary-guided
+    /// via [`first_matching_free`](Self::first_matching_free)), but
+    /// check node containment against the *full* `[lo, hi)` — so a node
+    /// straddling a rotation point is still visible to whichever scan
+    /// half reaches one of its free matching slots. Per-node occupancy
+    /// is a counter lookup when the state carries the node index, a
+    /// ranged popcount otherwise.
+    #[allow(clippy::too_many_arguments)]
+    fn find_node_with_free_scan(
+        &self,
+        state: &AvailMap,
+        scan_lo: usize,
+        scan_hi: usize,
+        lo: usize,
+        hi: usize,
+        rd: &ResolvedDemand,
+        k: usize,
+    ) -> Option<u32> {
+        let mut s = scan_lo;
+        while s < scan_hi {
+            let slot = self.first_matching_free(state, s, scan_hi, rd)?;
+            let node = self.node_of(slot);
+            let (nlo, nhi) = self.node_range(node);
+            if nlo >= lo && nhi <= hi && state.node_has_k_free(node, nlo, nhi, k) {
+                return Some(node);
+            }
+            s = nhi.max(slot + 1);
+        }
+        None
+    }
+
     /// First node *fully contained* in [lo, hi) holding at least `k`
     /// free slots matching the demand. With `k <= 1` this reduces to the
     /// node of [`first_matching_free`](Self::first_matching_free).
@@ -512,23 +669,48 @@ impl NodeCatalog {
             return self.first_matching_free(state, lo, hi, rd).map(|s| self.node_of(s));
         }
         debug_assert!(!self.trivial, "gang demands cannot resolve on a trivial catalog");
-        let mut s = lo;
-        while s < hi {
-            let slot = self.first_matching_free(state, s, hi, rd)?;
-            let node = self.node_of(slot);
-            let (nlo, nhi) = self.node_range(node);
-            if nlo >= lo && nhi <= hi && state.has_k_free_in(nlo, nhi, k) {
-                return Some(node);
-            }
-            s = nhi.max(slot + 1);
+        self.find_node_with_free_scan(state, lo, hi, lo, hi, rd, k)
+    }
+
+    /// [`find_node_with_free`](Self::find_node_with_free) with the §3.3
+    /// worker-shuffle rotation: the scan starts at slot
+    /// `lo + rot % (hi - lo)` and wraps, so different GMs (different
+    /// rotations) start their gang search on different nodes. `rot = 0`
+    /// is exactly the unrotated scan. A node straddling the rotation
+    /// point stays visible: the first half finds it through any free
+    /// matching slot at or past the start, the wrap half through any
+    /// slot before it (containment is always checked against the full
+    /// `[lo, hi)`).
+    pub fn find_node_with_free_rot(
+        &self,
+        state: &AvailMap,
+        lo: usize,
+        hi: usize,
+        rd: &ResolvedDemand,
+        k: usize,
+        rot: usize,
+    ) -> Option<u32> {
+        if lo >= hi {
+            return None;
         }
-        None
+        let start = lo + rot % (hi - lo);
+        if k <= 1 {
+            return self
+                .first_matching_free(state, start, hi, rd)
+                .or_else(|| self.first_matching_free(state, lo, start, rd))
+                .map(|s| self.node_of(s));
+        }
+        debug_assert!(!self.trivial, "gang demands cannot resolve on a trivial catalog");
+        self.find_node_with_free_scan(state, start, hi, lo, hi, rd, k)
+            .or_else(|| self.find_node_with_free_scan(state, lo, start, lo, hi, rd, k))
     }
 
     /// Atomically claim one gang for the demand in [lo, hi): `rd.gang`
     /// free slots co-resident on one fully-contained node, appended to
     /// `out` (global ids, ascending) and marked busy. All-or-nothing —
-    /// on `false`, `state` and `out` are untouched.
+    /// on `false`, `state` and `out` are untouched. First-fit from `lo`
+    /// (the `rot = 0` case of
+    /// [`pop_gang_free_rot`](Self::pop_gang_free_rot)).
     pub fn pop_gang_free(
         &self,
         state: &mut AvailMap,
@@ -537,9 +719,33 @@ impl NodeCatalog {
         rd: &ResolvedDemand,
         out: &mut Vec<u32>,
     ) -> bool {
+        self.pop_gang_free_rot(state, lo, hi, rd, 0, out)
+    }
+
+    /// [`pop_gang_free`](Self::pop_gang_free) through the §3.3 rotating
+    /// cursor: node search starts at `lo + rot % (hi - lo)` and wraps
+    /// (see [`find_node_with_free_rot`](Self::find_node_with_free_rot));
+    /// width-1 demands mirror the scalar claim's rotation exactly
+    /// (`pop_matching_free` over `[start, hi)` then `[lo, start)`).
+    pub fn pop_gang_free_rot(
+        &self,
+        state: &mut AvailMap,
+        lo: usize,
+        hi: usize,
+        rd: &ResolvedDemand,
+        rot: usize,
+        out: &mut Vec<u32>,
+    ) -> bool {
+        if lo >= hi {
+            return false;
+        }
         let k = rd.gang as usize;
         if k <= 1 {
-            match self.pop_matching_free(state, lo, hi, rd) {
+            let start = lo + rot % (hi - lo);
+            let w = self
+                .pop_matching_free(state, start, hi, rd)
+                .or_else(|| self.pop_matching_free(state, lo, start, rd));
+            match w {
                 Some(w) => {
                     out.push(w as u32);
                     true
@@ -547,7 +753,7 @@ impl NodeCatalog {
                 None => false,
             }
         } else {
-            let Some(node) = self.find_node_with_free(state, lo, hi, rd, k) else {
+            let Some(node) = self.find_node_with_free_rot(state, lo, hi, rd, k, rot) else {
                 return false;
             };
             let (nlo, nhi) = self.node_range(node);
@@ -565,7 +771,9 @@ impl NodeCatalog {
     /// Σ over fully-contained matching nodes of ⌊free slots / k⌋. With
     /// `k <= 1` this is exactly
     /// [`count_matching_free`](Self::count_matching_free) — the gang
-    /// planner degenerates to the constrained planner.
+    /// planner degenerates to the constrained planner. Per-node free
+    /// counts come from the state's node counters when attached (one
+    /// lookup per candidate node instead of a range rescan per call).
     pub fn count_gangs_free(
         &self,
         state: &AvailMap,
@@ -586,7 +794,10 @@ impl NodeCatalog {
             let node = self.node_of(slot);
             let (nlo, nhi) = self.node_range(node);
             if nlo >= lo && nhi <= hi {
-                total += state.count_free_in(nlo, nhi) / k;
+                let f = state
+                    .node_free_count(node)
+                    .unwrap_or_else(|| state.count_free_in(nlo, nhi));
+                total += f / k;
             }
             s = nhi.max(slot + 1);
         }
@@ -875,6 +1086,117 @@ mod tests {
         assert!(c.pop_gang_free(&mut b, 0, 256, &rd, &mut out));
         assert_eq!(out, vec![popped.unwrap() as u32]);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn summary_guided_matching_equals_naive() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        for profile in ["bimodal-gpu", "rack-tiered"] {
+            let c = NodeCatalog::profile(profile, 900, 0.25).unwrap();
+            let demands: Vec<ResolvedDemand> = c
+                .attr_labels()
+                .to_vec()
+                .iter()
+                .map(|a| c.resolve(&Demand::attrs(&[a.as_str()])).unwrap())
+                .collect();
+            for fill in [0usize, 450, 860, 900] {
+                let mut state = AvailMap::all_free(900);
+                c.attach_index(&mut state);
+                for _ in 0..fill {
+                    state.set_busy(rng.below(900));
+                }
+                let mut flat = state.clone();
+                flat.set_use_index(false);
+                for rd in &demands {
+                    for _ in 0..25 {
+                        let lo = rng.below(900);
+                        let hi = lo + rng.below(900 - lo + 1);
+                        let naive = c.naive_count_matching_free(&state, lo, hi, rd);
+                        assert_eq!(c.count_matching_free(&state, lo, hi, rd), naive);
+                        assert_eq!(c.count_matching_free(&flat, lo, hi, rd), naive);
+                        let nf = c.naive_first_matching_free(&state, lo, hi, rd);
+                        assert_eq!(c.first_matching_free(&state, lo, hi, rd), nf);
+                        assert_eq!(c.first_matching_free(&flat, lo, hi, rd), nf);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn node_counters_match_flat_gang_queries() {
+        use crate::util::rng::Rng;
+        let c = NodeCatalog::bimodal_gpu(640, 0.25);
+        let rd = c.resolve(&Demand::new(2, vec!["gpu".into()])).unwrap();
+        let mut rng = Rng::new(83);
+        let mut indexed = AvailMap::all_free(640);
+        c.attach_index(&mut indexed);
+        let mut flat = AvailMap::all_free(640);
+        flat.set_use_index(false);
+        for _ in 0..2000 {
+            let i = rng.below(640);
+            if rng.next_u64() & 1 == 0 {
+                indexed.set_busy(i);
+                flat.set_busy(i);
+            } else {
+                indexed.set_free(i);
+                flat.set_free(i);
+            }
+            if rng.below(8) == 0 {
+                let lo = rng.below(640);
+                let hi = lo + rng.below(640 - lo + 1);
+                assert_eq!(
+                    c.count_gangs_free(&indexed, lo, hi, &rd),
+                    c.count_gangs_free(&flat, lo, hi, &rd),
+                    "[{lo},{hi})"
+                );
+                assert_eq!(
+                    c.find_node_with_free(&indexed, lo, hi, &rd, 2),
+                    c.find_node_with_free(&flat, lo, hi, &rd, 2),
+                    "[{lo},{hi})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gang_rotation_spreads_first_claims() {
+        // 5 identical gang-capable nodes of capacity 2: rotation must
+        // start the claim scan at the node covering the rotated slot,
+        // wrapping; rot = 0 must equal the unrotated first-fit.
+        let c = NodeCatalog::from_nodes(vec![(2u32, vec!["gpu"]); 5]);
+        let rd = c.resolve(&Demand::new(2, vec!["gpu".into()])).unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for rot in 0..10 {
+            let mut state = AvailMap::all_free(10);
+            let mut out = Vec::new();
+            assert!(c.pop_gang_free_rot(&mut state, 0, 10, &rd, rot, &mut out));
+            // the claimed node is the one hosting the rotated slot
+            let expect = c.node_of(rot);
+            assert_eq!(c.node_of(out[0] as usize), expect, "rot={rot}");
+            assert_eq!(out.len(), 2);
+            seen.insert(expect);
+        }
+        assert_eq!(seen.len(), 5, "rotation never left the first node");
+        // rot = 0 is bit-identical to the unrotated claim
+        let mut a = AvailMap::all_free(10);
+        let mut b = AvailMap::all_free(10);
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        assert!(c.pop_gang_free_rot(&mut a, 0, 10, &rd, 0, &mut oa));
+        assert!(c.pop_gang_free(&mut b, 0, 10, &rd, &mut ob));
+        assert_eq!(oa, ob);
+        assert_eq!(a, b);
+        // a node whose free slots all sit before the rotation point is
+        // found by the wrap half: start at slot 6 with only node 2
+        // ([4, 6)) still free — the forward scan [6, 10) sees nothing
+        let mut state = AvailMap::all_free(10);
+        for s in [0usize, 1, 2, 3, 6, 7, 8, 9] {
+            state.set_busy(s);
+        }
+        let mut out = Vec::new();
+        assert!(c.pop_gang_free_rot(&mut state, 0, 10, &rd, 6, &mut out));
+        assert_eq!(out, vec![4, 5]);
     }
 
     #[test]

@@ -19,6 +19,12 @@ pub struct SimParams {
     pub short_threshold: SimTime,
     /// RNG seed; every run is a pure function of (config, trace, seed).
     pub seed: u64,
+    /// Route bitmap queries through the occupancy index (summary bitmap
+    /// + block popcounts + per-node counters; `cluster::bitmap`). The
+    /// index is bit-identity-gated, so `false` only selects the flat
+    /// `naive_*` scans — the `--no-index` debug mode and the
+    /// differential goldens in `tests/index_oracle.rs`.
+    pub use_index: bool,
 }
 
 impl Default for SimParams {
@@ -27,6 +33,7 @@ impl Default for SimParams {
             net: NetModel::paper_default(),
             short_threshold: SimTime::from_secs(90.0),
             seed: 0,
+            use_index: true,
         }
     }
 }

@@ -4,7 +4,7 @@
 //! megha experiment <id> [--scale smoke|default|paper] [--seed N]
 //! megha simulate --scheduler megha|sparrow|eagle|pigeon
 //!                (--trace FILE | --workload yahoo|google|fixed --jobs N)
-//!                [--workers N] [--load X] [--seed N] [--xla]
+//!                [--workers N] [--load X] [--seed N] [--xla] [--no-index]
 //!                [--hetero uniform|bimodal-gpu|rack-tiered] [--scarcity X]
 //!                [--constrained-frac X] [--require a,b] [--gang K]
 //! megha prototype --scheduler megha|pigeon [--jobs N] [--time-scale X] [--xla]
@@ -12,7 +12,7 @@
 //!             [--base-seed S] [--workers N1,N2,...] [--loads X1,X2,...]
 //!             [--workload yahoo|google|fixed] [--jobs N] [--tasks-per-job N]
 //!             [--net constant|jittered] [--net-ms X] [--jitter-ms X]
-//!             [--fail-gm-at T] [--threads K] [--preset NAME]
+//!             [--fail-gm-at T] [--threads K] [--preset NAME] [--no-index]
 //!             [--hetero PROFILE] [--scarcity X] [--constrained-frac X]
 //!             [--require a,b] [--gang K]
 //! megha trace gen --workload yahoo|google|fixed --jobs N --workers N
@@ -25,6 +25,9 @@
 //! tasks gangs of K slots, co-resident on one node and atomically
 //! acquired/released (K > 1 needs a `--hetero` profile with nodes of
 //! capacity >= K).
+//!
+//! `--no-index` routes all bitmap queries onto the flat scans instead of
+//! the occupancy index (debug/A-B mode; results are bit-identical).
 
 use anyhow::{bail, Context, Result};
 use megha::cluster::NodeCatalog;
@@ -43,7 +46,7 @@ use megha::util::args::Args;
 use megha::workload::constraints::{apply_constraints, valid_label, CONSTRAIN_SEED};
 use megha::workload::{synthetic, trace as tracefile, Demand, JobClass, Trace};
 
-const FLAGS: &[&str] = &["xla", "help", "short-only"];
+const FLAGS: &[&str] = &["xla", "help", "short-only", "no-index"];
 
 fn main() {
     let args = Args::from_env(FLAGS);
@@ -269,6 +272,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         }
         let mut cfg = MeghaConfig::for_workers(workers);
         cfg.sim.seed = seed;
+        cfg.sim.use_index = !args.flag("no-index");
         let mut eng = megha::runtime::pjrt::XlaMatchEngine::load_default()
             .context("run `make artifacts` first")?;
         megha::sched::megha::simulate_with(&cfg, &trace, &mut eng, None)
@@ -280,6 +284,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             &NetModel::paper_default(),
             None,
             hetero.as_ref(),
+            !args.flag("no-index"),
             &trace,
         )
     };
@@ -385,6 +390,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             gm_fail_at,
             hetero.as_ref(),
         )
+    };
+    let scenarios = if args.flag("no-index") {
+        scenarios.into_iter().map(|sc| sc.with_index(false)).collect()
+    } else {
+        scenarios
     };
     let spec = sweep::SweepSpec {
         frameworks,

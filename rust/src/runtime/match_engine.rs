@@ -110,9 +110,12 @@ pub fn constrained_plan(
 /// partitions), but a partition's capacity is the number of *gangs* of
 /// the demand it can host right now
 /// ([`NodeCatalog::count_gangs_free`]: fully-contained nodes with
-/// `rd.gang_width()` co-resident free matching slots). Each planned
-/// unit is one gang task, i.e. `gang_width()` slots claimed atomically.
-/// With `gang_width() <= 1` this is exactly [`constrained_plan`].
+/// `rd.gang_width()` co-resident free matching slots — a summary-guided
+/// node walk plus one per-node *counter lookup* when the state carries
+/// the occupancy index, so the per-partition counts this planner takes
+/// every round stop rescanning node ranges). Each planned unit is one
+/// gang task, i.e. `gang_width()` slots claimed atomically. With
+/// `gang_width() <= 1` this is exactly [`constrained_plan`].
 pub fn gang_plan(
     state: &AvailMap,
     catalog: &NodeCatalog,

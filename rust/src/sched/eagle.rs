@@ -121,7 +121,12 @@ impl<'a> Eagle<'a> {
             n_workers
         );
         let short_cut = ((n_workers as f64) * cfg.short_partition_frac) as usize;
+        // the central long-job view carries the occupancy index: its
+        // constrained scans and gang claims (`drain_long`) are
+        // summary-guided with per-node counters on non-trivial catalogs
         let mut central_free = AvailMap::all_free(n_workers);
+        central_free.set_use_index(cfg.sim.use_index);
+        cfg.catalog.attach_index(&mut central_free);
         for w in 0..short_cut {
             central_free.set_busy(w); // short partition is off-limits for long
         }
@@ -138,6 +143,9 @@ impl<'a> Eagle<'a> {
         // is permanently busy in it)
         let long_probe = {
             let mut m = AvailMap::all_free(n_workers);
+            // honor --no-index here too: the flat-scan debug mode must
+            // cover the setup feasibility queries, not just the run
+            m.set_use_index(cfg.sim.use_index);
             for w in 0..short_cut {
                 m.set_busy(w);
             }

@@ -168,8 +168,6 @@ struct Gm {
     /// While false, the GM's range words still equal the last applied
     /// snapshot, so the next chained snapshot may apply masked.
     touched: Vec<bool>,
-    /// Scratch: words changed by the last `apply_words` call.
-    changed: Vec<u64>,
 }
 
 impl Gm {
@@ -178,25 +176,6 @@ impl Gm {
             let p = spec.partition_of_worker(WorkerId(worker as u32));
             self.counts[p.0 as usize] += 1;
             self.touched[spec.lm_of_partition(p)] = true;
-        }
-    }
-
-    /// Re-derive the counts of LM `lm`'s partitions whose words the last
-    /// `apply_words` call actually changed (`self.changed`); untouched
-    /// partitions already have exact counts because `counts` mirrors
-    /// `state` incrementally everywhere else.
-    fn recount_changed(&mut self, spec: &ClusterSpec, lm: usize, base_word: usize) {
-        for p in spec.partitions_of_lm(lm) {
-            let r = spec.worker_range(p);
-            let (lw, hw) = (r.start as usize / 64, (r.end as usize - 1) / 64);
-            let dirty = (lw..=hw).any(|w| {
-                let i = w - base_word;
-                self.changed[i / 64] >> (i % 64) & 1 == 1
-            });
-            if dirty {
-                self.counts[p.0 as usize] =
-                    self.state.count_free_in(r.start as usize, r.end as usize) as u32;
-            }
         }
     }
 }
@@ -288,25 +267,33 @@ impl<'a> MeghaSim<'a> {
             planner,
             failure,
             gms: (0..n_gm)
-                .map(|g| Gm {
-                    state: AvailMap::all_free(n_workers),
-                    counts: vec![wpp as u32; n_part],
-                    internal: (0..n_part)
-                        .map(|p| spec.gm_of_partition(PartitionId(p as u32)) == g)
-                        .collect(),
-                    rr: if cfg.shuffle_workers { g * n_part / n_gm } else { 0 },
-                    queue: VecDeque::new(),
-                    in_queue: vec![false; trace.n_jobs()],
-                    scan_rot: if cfg.shuffle_workers { g * wpp / n_gm } else { 0 },
-                    applied: vec![u64::MAX; n_lm],
-                    touched: vec![false; n_lm],
-                    changed: Vec::new(),
+                .map(|g| {
+                    // the GM's global view carries the occupancy index:
+                    // summary-guided scans plus (non-trivial catalogs)
+                    // per-node free counters for the gang queries
+                    let mut state = AvailMap::all_free(n_workers);
+                    state.set_use_index(cfg.sim.use_index);
+                    cfg.catalog.attach_index(&mut state);
+                    Gm {
+                        state,
+                        counts: vec![wpp as u32; n_part],
+                        internal: (0..n_part)
+                            .map(|p| spec.gm_of_partition(PartitionId(p as u32)) == g)
+                            .collect(),
+                        rr: if cfg.shuffle_workers { g * n_part / n_gm } else { 0 },
+                        queue: VecDeque::new(),
+                        in_queue: vec![false; trace.n_jobs()],
+                        scan_rot: if cfg.shuffle_workers { g * wpp / n_gm } else { 0 },
+                        applied: vec![u64::MAX; n_lm],
+                        touched: vec![false; n_lm],
+                    }
                 })
                 .collect(),
             lms: (0..n_lm)
                 .map(|l| {
                     let r = spec.cluster_worker_range(l);
-                    let state = AvailMap::all_free(n_workers);
+                    let mut state = AvailMap::all_free(n_workers);
+                    state.set_use_index(cfg.sim.use_index);
                     // mask base of the first snapshot: the all-free
                     // initial range, which every GM's view starts from
                     let mut last_words = Vec::new();
@@ -645,7 +632,9 @@ impl Scheduler for MeghaSim<'_> {
                 // modeling bug tracked in ROADMAP.md: keeping `applied`
                 // left a never-changing LM's range all-busy forever.)
                 let gm_id = gm as usize;
-                self.gms[gm_id].state = AvailMap::all_busy(self.spec.n_workers());
+                // in place: the occupancy-index attachment and routing
+                // flag survive the crash (they are config, not state)
+                self.gms[gm_id].state.clear_to_busy();
                 self.gms[gm_id].counts.iter_mut().for_each(|c| *c = 0);
                 self.gms[gm_id].applied.iter_mut().for_each(|a| *a = u64::MAX);
                 self.gms[gm_id].touched.iter_mut().for_each(|t| *t = true);
@@ -685,18 +674,34 @@ fn apply_snapshot(gm: &mut Gm, snap: &Snapshot, spec: &ClusterSpec, allow_masked
     // speculated on the range since. Otherwise compare every range word
     // (which is still bit-for-bit what the full-width overwrite did).
     let masked = allow_masked && !gm.touched[l] && gm.applied[l] == snap.prev;
-    let mut changed = std::mem::take(&mut gm.changed);
-    gm.state.apply_words(
+    // Per-partition counts are delta-maintained straight through the
+    // apply: the mutation hook attributes every flipped bit to its
+    // partition, replacing the post-apply range recounts (`counts`
+    // mirrors `state` incrementally everywhere else, so the deltas are
+    // exact by induction).
+    let wpp = spec.workers_per_partition;
+    let counts = &mut gm.counts;
+    gm.state.apply_words_with(
         snap.lo as usize,
         snap.hi as usize,
         &snap.words,
         if masked { Some(&snap.mask) } else { None },
-        &mut changed,
+        |w, old, new| {
+            let mut d = old ^ new;
+            while d != 0 {
+                let b = d.trailing_zeros() as usize;
+                let p = (w * 64 + b) / wpp;
+                if new >> b & 1 == 1 {
+                    counts[p] += 1;
+                } else {
+                    counts[p] -= 1;
+                }
+                d &= d - 1;
+            }
+        },
     );
-    gm.changed = changed;
     gm.applied[l] = snap.version;
     gm.touched[l] = false;
-    gm.recount_changed(spec, l, snap.lo as usize / 64);
 }
 
 /// The GM scheduling loop: process the job queue FIFO while the global
@@ -803,13 +808,22 @@ fn try_schedule(
                 if let Some(rd) = rd.filter(|rd| rd.is_gang()) {
                     // gang claim: gang_width() co-resident slots on one
                     // node of the partition, reserved atomically against
-                    // the GM's view. Deterministic first-fit from the
-                    // partition start — gang-capable nodes are scarce,
-                    // so the §3.3 scan rotation is not applied (a node
-                    // straddling the rotation point would be invisible
-                    // to both scan halves).
+                    // the GM's view, through the same §3.3 rotating
+                    // cursor as the scalar path (different GMs start
+                    // their node search on different nodes, so they
+                    // collide less on scarce gang capacity; a node
+                    // straddling the rotation point stays visible —
+                    // containment is checked against the whole
+                    // partition, not the scan half).
                     let mut slots: Vec<u32> = Vec::with_capacity(rd.gang_width() as usize);
-                    let ok = catalog.pop_gang_free(&mut gm.state, lo, hi, rd, &mut slots);
+                    let ok = catalog.pop_gang_free_rot(
+                        &mut gm.state,
+                        lo,
+                        hi,
+                        rd,
+                        gm.scan_rot,
+                        &mut slots,
+                    );
                     assert!(ok, "gang plan promised a free node");
                     gm.counts[part] -= slots.len() as u32;
                     let task = js.pending.pop_front().expect("plan larger than job");
@@ -1079,6 +1093,37 @@ mod tests {
             out.gang_rejections,
             gw.max
         );
+    }
+
+    #[test]
+    fn gang_shuffle_rotates_claims_and_completes() {
+        // §3.3 gang-aware shuffle: with shuffle on, GM g starts its
+        // gang node search at scan_rot = g·wpp/n_gm instead of the
+        // partition start (the exact rotation semantics are pinned at
+        // the catalog level by
+        // cluster::hetero::tests::gang_rotation_spreads_first_claims).
+        // Both settings must drain the same gang trace completely.
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        for shuffle in [true, false] {
+            let mut cfg = small_cfg(300, 71);
+            cfg.shuffle_workers = shuffle;
+            let n = cfg.spec.n_workers();
+            cfg.catalog = NodeCatalog::bimodal_gpu(n, 0.25);
+            let trace = synthetic_fixed_constrained(
+                12,
+                30,
+                1.0,
+                0.8,
+                n,
+                72,
+                0.3,
+                Demand::new(2, vec!["gpu".into()]),
+            );
+            let out = simulate(&cfg, &trace);
+            assert_eq!(out.jobs.len(), 30, "shuffle={shuffle}");
+            assert_eq!(out.tasks as usize, trace.n_tasks(), "shuffle={shuffle}");
+        }
     }
 
     #[test]

@@ -129,12 +129,36 @@ impl<'a> Pigeon<'a> {
             per_group,
             general_per_group,
             groups: (0..n_groups)
-                .map(|_| Group {
-                    general: AvailMap::all_free(general_per_group),
-                    reserved: AvailMap::all_free(reserved_per_group),
-                    hi_q: VecDeque::new(),
-                    lo_q: VecDeque::new(),
-                    hi_streak: 0,
+                .map(|g| {
+                    let mut general = AvailMap::all_free(general_per_group);
+                    general.set_use_index(cfg.sim.use_index);
+                    if !cfg.catalog.is_trivial() && general_per_group > 0 {
+                        // per-group node index over the general slice:
+                        // catalog node ids are dense and ascending by
+                        // slot, so offsetting by the slice's first node
+                        // yields dense local ids directly — the gang
+                        // co-residency checks below become counter
+                        // lookups instead of per-node range rescans.
+                        // Nodes only partially inside the slice get a
+                        // (never-queried) clipped counter — the claim
+                        // paths check full containment first.
+                        let base = g * per_group;
+                        let first = cfg.catalog.node_of(base);
+                        let node_of: Vec<u32> = (0..general_per_group)
+                            .map(|w| cfg.catalog.node_of(base + w) - first)
+                            .collect();
+                        let n_nodes = (node_of[general_per_group - 1] + 1) as usize;
+                        general.attach_node_index(node_of.into(), n_nodes);
+                    }
+                    let mut reserved = AvailMap::all_free(reserved_per_group);
+                    reserved.set_use_index(cfg.sim.use_index);
+                    Group {
+                        general,
+                        reserved,
+                        hi_q: VecDeque::new(),
+                        lo_q: VecDeque::new(),
+                        hi_streak: 0,
+                    }
                 })
                 .collect(),
             demands,
@@ -172,7 +196,9 @@ fn claim(
 /// fully inside the group's general slice holding `gang_width()` free
 /// matching slots, claimed atomically into `out` (group-local ids,
 /// ascending; `out` is a caller-pooled buffer). All-or-nothing — on
-/// `false` the pool and `out` are untouched.
+/// `false` the pool and `out` are untouched. Per-node occupancy is a
+/// counter lookup (the group's node index) when attached, a ranged
+/// popcount otherwise.
 fn claim_gang(
     general: &mut AvailMap,
     catalog: &NodeCatalog,
@@ -192,7 +218,7 @@ fn claim_gang(
         let contained = nlo >= base && nhi <= base + glen;
         if contained
             && catalog.slot_matches(gw, rd)
-            && general.has_k_free_in(nlo - base, nhi - base, k)
+            && general.node_has_k_free_at(w, nlo - base, nhi - base, k)
         {
             let (llo, lhi) = (nlo - base, nhi - base);
             for _ in 0..k {
@@ -261,10 +287,11 @@ fn pop_first_servable(
                 if !is_reserved {
                     let (nlo, nhi) = catalog.node_range(catalog.node_of(gw));
                     // the freed worker itself is not marked free, so the
-                    // node must hold the other k-1 slots
+                    // node must hold the other k-1 slots (counter lookup
+                    // when the group's node index is attached)
                     if nlo >= base
                         && nhi <= base + glen
-                        && general.has_k_free_in(nlo - base, nhi - base, k - 1)
+                        && general.node_has_k_free_at(gw - base, nlo - base, nhi - base, k - 1)
                     {
                         let (llo, lhi) = (nlo - base, nhi - base);
                         let mut extra = Vec::with_capacity(k - 1);

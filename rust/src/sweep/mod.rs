@@ -176,9 +176,21 @@ pub struct Scenario {
     pub gm_fail_at: Option<f64>,
     /// Heterogeneous catalog + constrained jobs (None = homogeneous).
     pub hetero: Option<HeteroSpec>,
+    /// Route bitmap queries through the occupancy index (`true`, the
+    /// default everywhere). `false` selects the flat `naive_*` scans —
+    /// the CLI `--no-index` debug mode and the bit-identity sweep
+    /// goldens in `tests/index_oracle.rs`.
+    pub use_index: bool,
 }
 
 impl Scenario {
+    /// This scenario with the occupancy index toggled (see
+    /// [`use_index`](Scenario::use_index)).
+    pub fn with_index(mut self, on: bool) -> Scenario {
+        self.use_index = on;
+        self
+    }
+
     pub fn make_trace(&self, seed: u64) -> Trace {
         let trace = match self.workload {
             WorkloadKind::Yahoo => synthetic::yahoo_like(self.jobs, self.workers, self.load, seed),
@@ -240,6 +252,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
             net: net.clone(),
             gm_fail_at: None,
             hetero: None,
+            use_index: true,
         }]),
         "hetero" => {
             let gpu = |scarcity: f64, frac: f64| HeteroSpec {
@@ -257,6 +270,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
                 net: net.clone(),
                 gm_fail_at: None,
                 hetero: Some(h),
+                use_index: true,
             };
             Some(vec![
                 // scarce: ~6% GPU slots, ~5% of jobs demand them
@@ -288,6 +302,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
                 net: net.clone(),
                 gm_fail_at: None,
                 hetero: Some(h),
+                use_index: true,
             };
             let gang2 = || HeteroSpec {
                 profile: "bimodal-gpu".into(),
@@ -343,6 +358,7 @@ pub fn scenario_grid(
                 net: net.clone(),
                 gm_fail_at,
                 hetero: hetero.cloned(),
+                use_index: true,
             });
         }
     }
@@ -351,10 +367,12 @@ pub fn scenario_grid(
 
 /// The one dispatch table from framework name to simulation: paper-shaped
 /// config for `workers`, with the run's seed, an explicit network model,
-/// optional GM failure injection (Megha only; ignored by baselines), and
-/// an optional heterogeneity spec (each framework builds the catalog
-/// over its own DC size). `fig3::run_framework`, [`run_one`] and the
-/// cross-scheduler tests all route through here.
+/// optional GM failure injection (Megha only; ignored by baselines), an
+/// optional heterogeneity spec (each framework builds the catalog
+/// over its own DC size), and the occupancy-index routing flag.
+/// `fig3::run_framework`, [`run_one`] and the cross-scheduler tests all
+/// route through here.
+#[allow(clippy::too_many_arguments)]
 pub fn run_framework_hetero(
     framework: &str,
     workers: usize,
@@ -362,6 +380,7 @@ pub fn run_framework_hetero(
     net: &NetModel,
     gm_fail_at: Option<f64>,
     hetero: Option<&HeteroSpec>,
+    use_index: bool,
     trace: &Trace,
 ) -> RunOutcome {
     match framework {
@@ -369,6 +388,7 @@ pub fn run_framework_hetero(
             let mut cfg = MeghaConfig::for_workers(workers);
             cfg.sim.seed = seed;
             cfg.sim.net = net.clone();
+            cfg.sim.use_index = use_index;
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.spec.n_workers());
             }
@@ -382,6 +402,7 @@ pub fn run_framework_hetero(
             let mut cfg = SparrowConfig::for_workers(workers);
             cfg.sim.seed = seed;
             cfg.sim.net = net.clone();
+            cfg.sim.use_index = use_index;
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.workers);
             }
@@ -391,6 +412,7 @@ pub fn run_framework_hetero(
             let mut cfg = EagleConfig::for_workers(workers);
             cfg.sim.seed = seed;
             cfg.sim.net = net.clone();
+            cfg.sim.use_index = use_index;
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.workers);
             }
@@ -400,6 +422,7 @@ pub fn run_framework_hetero(
             let mut cfg = PigeonConfig::for_workers(workers);
             cfg.sim.seed = seed;
             cfg.sim.net = net.clone();
+            cfg.sim.use_index = use_index;
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.workers);
             }
@@ -418,7 +441,7 @@ pub fn run_framework_with(
     gm_fail_at: Option<f64>,
     trace: &Trace,
 ) -> RunOutcome {
-    run_framework_hetero(framework, workers, seed, net, gm_fail_at, None, trace)
+    run_framework_hetero(framework, workers, seed, net, gm_fail_at, None, true, trace)
 }
 
 /// [`run_framework_with`] on the paper-default network model.
@@ -436,6 +459,7 @@ pub fn run_one(framework: &str, sc: &Scenario, seed: u64) -> RunOutcome {
         &sc.net,
         sc.gm_fail_at,
         sc.hetero.as_ref(),
+        sc.use_index,
         &trace,
     )
 }
@@ -568,6 +592,7 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
             &sc.net,
             sc.gm_fail_at,
             sc.hetero.as_ref(),
+            sc.use_index,
             trace,
         );
         RunRecord {
@@ -949,6 +974,7 @@ mod tests {
                 constrained_frac: 0.4,
                 demand: Demand::new(2, vec!["gpu".into()]),
             }),
+            use_index: true,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 7);
@@ -978,6 +1004,7 @@ mod tests {
                 constrained_frac: 0.5,
                 demand: Demand::attrs(&["gpu"]),
             }),
+            use_index: true,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 3);
@@ -1003,6 +1030,7 @@ mod tests {
             },
             gm_fail_at: Some(2.0),
             hetero: None,
+            use_index: true,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 5);

@@ -314,6 +314,7 @@ fn megha_beats_probe_baselines_on_scarce_attributes() {
             constrained_frac: 0.2,
             demand: Demand::attrs(&["gpu"]),
         }),
+        use_index: true,
     };
     let megha_out = sweep::run_one("megha", &sc, 41);
     let sparrow_out = sweep::run_one("sparrow", &sc, 41);
@@ -379,9 +380,9 @@ fn gang_slots1_path_is_bit_identical_and_inert() {
     let net = NetModel::Constant(SimTime::from_millis(0.5));
     let h = Some(&hetero);
     for name in sweep::FRAMEWORKS {
-        let a = sweep::run_framework_hetero(name, workers, seed, &net, None, h, &trace);
-        let b = sweep::run_framework_hetero(name, workers, seed, &net, None, h, &trace);
-        let c = sweep::run_framework_hetero(name, workers, seed, &net, None, h, &reparsed);
+        let a = sweep::run_framework_hetero(name, workers, seed, &net, None, h, true, &trace);
+        let b = sweep::run_framework_hetero(name, workers, seed, &net, None, h, true, &trace);
+        let c = sweep::run_framework_hetero(name, workers, seed, &net, None, h, true, &reparsed);
         assert_outcomes_identical(name, &a, &b);
         assert_outcomes_identical(name, &a, &c);
         assert_eq!(a.gang_rejections, 0, "{name}: gang machinery engaged at slots=1");
@@ -415,6 +416,7 @@ fn gang_megha_beats_probe_baselines_on_scarce_gangs() {
             constrained_frac: 0.2,
             demand: Demand::new(2, vec!["gpu".into()]),
         }),
+        use_index: true,
     };
     let megha_out = sweep::run_one("megha", &sc, 47);
     let sparrow_out = sweep::run_one("sparrow", &sc, 47);
@@ -486,6 +488,7 @@ fn sweep_matches_direct_execution() {
         net: NetModel::Constant(SimTime::from_millis(0.5)),
         gm_fail_at: None,
         hetero: None,
+        use_index: true,
     };
     let spec = SweepSpec {
         frameworks: vec!["megha".into(), "pigeon".into()],
@@ -517,6 +520,7 @@ fn gm_failure_scenario_still_completes_through_sweep() {
         net: NetModel::Constant(SimTime::from_millis(0.5)),
         gm_fail_at: Some(3.0),
         hetero: None,
+        use_index: true,
     };
     let out = sweep::run_one("megha", &sc, 13);
     assert_eq!(out.jobs.len(), 20, "GM failure lost jobs");

@@ -1,0 +1,355 @@
+//! Differential harness for the occupancy index (ISSUE 5 tentpole).
+//!
+//! The two-level index (`cluster::bitmap`: summary bitmap + per-block
+//! popcounts + optional per-node counters; `cluster::hetero`:
+//! summary-guided masked matching + counter-backed gang queries) must be
+//! **bit-identical by construction** to the flat scans it replaces. Two
+//! layers of evidence:
+//!
+//! 1. *Operation-level proptests* (≥ 1024 cases each): random
+//!    interleavings of `set_busy` / `set_free` / `apply_words` (full and
+//!    masked) / gang pops drive an indexed map and a flat-routed twin
+//!    (`set_use_index(false)`) in lockstep, and after **every step** each
+//!    indexed query is compared against its `naive_*` flat oracle and
+//!    against the twin.
+//! 2. *Full-sweep goldens*: the `hetero` and `gang` preset grids, every
+//!    framework, indexed vs index-disabled, record-for-record identical —
+//!    plus a Megha GM-failure run (the crash path resets the view in
+//!    place and must preserve the attachment and the delta-maintained
+//!    per-partition counts).
+
+use megha::cluster::{AvailMap, NodeCatalog, ResolvedDemand};
+use megha::config::MeghaConfig;
+use megha::metrics::RunOutcome;
+use megha::runtime::match_engine::RustMatchEngine;
+use megha::sched::megha::{simulate_with, FailurePlan};
+use megha::sim::net::NetModel;
+use megha::sim::time::SimTime;
+use megha::sweep::{self, SweepSpec};
+use megha::util::proptest::check;
+use megha::util::rng::Rng;
+use megha::workload::synthetic::synthetic_fixed_constrained;
+use megha::workload::Demand;
+
+const ATTR_POOL: [&str; 3] = ["gpu", "ssd", "big-mem"];
+
+/// Random catalog: 1–40 nodes, capacities 1–5, random labels; one
+/// capacity-4 gpu node is always present so gang demands resolve (the
+/// same shape as `tests/gang_oracle.rs`).
+fn random_catalog(rng: &mut Rng) -> NodeCatalog {
+    let n_nodes = rng.range(1, 40);
+    let mut nodes: Vec<(u32, Vec<String>)> = (0..n_nodes)
+        .map(|_| {
+            let cap = rng.below(5) as u32 + 1;
+            let attrs: Vec<String> = ATTR_POOL
+                .iter()
+                .filter(|_| rng.below(3) == 0)
+                .map(|s| s.to_string())
+                .collect();
+            (cap, attrs)
+        })
+        .collect();
+    nodes.insert(rng.below(nodes.len() + 1), (4, vec!["gpu".to_string()]));
+    NodeCatalog::from_nodes(nodes)
+}
+
+/// A random demand that resolves against the catalog (gang widths 1–4).
+fn random_demand(rng: &mut Rng, catalog: &NodeCatalog) -> Option<ResolvedDemand> {
+    let slots = rng.below(4) as u32 + 1;
+    let attrs: Vec<String> = (0..rng.below(2))
+        .map(|_| ATTR_POOL[rng.below(ATTR_POOL.len())].to_string())
+        .collect();
+    catalog.resolve(&Demand::new(slots, attrs)).ok()
+}
+
+/// Every indexed query of `state` vs its flat oracle and vs the
+/// flat-routed `twin`, over a handful of random ranges.
+fn assert_queries_agree(
+    rng: &mut Rng,
+    catalog: &NodeCatalog,
+    state: &AvailMap,
+    twin: &AvailMap,
+    rd: Option<&ResolvedDemand>,
+) -> Result<(), String> {
+    if state != twin {
+        return Err("indexed map and flat twin diverged bit-wise".into());
+    }
+    let n = state.len();
+    for _ in 0..4 {
+        let lo = rng.below(n + 1);
+        let hi = lo + rng.below(n - lo + 1);
+        if state.count_free_in(lo, hi) != state.naive_count_free_in(lo, hi) {
+            return Err(format!("count_free_in diverged in [{lo},{hi})"));
+        }
+        if state.first_free_in(lo, hi) != state.naive_first_free_in(lo, hi) {
+            return Err(format!("first_free_in diverged in [{lo},{hi})"));
+        }
+        let k = rng.below(6);
+        if state.has_k_free_in(lo, hi, k) != state.naive_has_k_free_in(lo, hi, k) {
+            return Err(format!("has_k_free_in diverged in [{lo},{hi}) k={k}"));
+        }
+        if let Some(rd) = rd {
+            let a = catalog.count_matching_free(state, lo, hi, rd);
+            if a != catalog.naive_count_matching_free(state, lo, hi, rd) {
+                return Err(format!("count_matching_free diverged in [{lo},{hi})"));
+            }
+            if a != catalog.count_matching_free(twin, lo, hi, rd) {
+                return Err(format!("count_matching_free(twin) diverged in [{lo},{hi})"));
+            }
+            let f = catalog.first_matching_free(state, lo, hi, rd);
+            if f != catalog.naive_first_matching_free(state, lo, hi, rd) {
+                return Err(format!("first_matching_free diverged in [{lo},{hi})"));
+            }
+            if catalog.count_gangs_free(state, lo, hi, rd)
+                != catalog.count_gangs_free(twin, lo, hi, rd)
+            {
+                return Err(format!("count_gangs_free diverged in [{lo},{hi})"));
+            }
+            let k = rd.gang_width() as usize;
+            if catalog.find_node_with_free(state, lo, hi, rd, k)
+                != catalog.find_node_with_free(twin, lo, hi, rd, k)
+            {
+                return Err(format!("find_node_with_free diverged in [{lo},{hi})"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One random mutation applied identically to the indexed map and the
+/// flat twin: a bit flip, a word-range `apply_words` (occasionally with
+/// a random skip mask — both sides get the same mask, so identity must
+/// hold regardless of its contents), or a gang pop (plain or rotated).
+fn random_op(
+    rng: &mut Rng,
+    catalog: &NodeCatalog,
+    state: &mut AvailMap,
+    twin: &mut AvailMap,
+) -> Result<(), String> {
+    let n = catalog.len();
+    match rng.below(4) {
+        0 => {
+            let i = rng.below(n);
+            if state.set_busy(i) != twin.set_busy(i) {
+                return Err(format!("set_busy({i}) return diverged"));
+            }
+        }
+        1 => {
+            let i = rng.below(n);
+            if state.set_free(i) != twin.set_free(i) {
+                return Err(format!("set_free({i}) return diverged"));
+            }
+        }
+        2 => {
+            // snapshot-style overwrite from a random source map
+            let mut src = AvailMap::all_busy(n);
+            for _ in 0..n / 2 {
+                src.set_free(rng.below(n));
+            }
+            let lo = rng.below(n);
+            let hi = lo + rng.below(n - lo + 1);
+            let mut words = Vec::new();
+            src.copy_words_into(lo, hi, &mut words);
+            let mask: Option<Vec<u64>> = if rng.below(2) == 0 {
+                Some(
+                    (0..words.len().div_ceil(64))
+                        .map(|_| rng.next_u64())
+                        .collect(),
+                )
+            } else {
+                None
+            };
+            let mut changed_a = Vec::new();
+            let mut changed_b = Vec::new();
+            state.apply_words(lo, hi, &words, mask.as_deref(), &mut changed_a);
+            twin.apply_words(lo, hi, &words, mask.as_deref(), &mut changed_b);
+            if changed_a != changed_b {
+                return Err(format!("apply_words changed-masks diverged in [{lo},{hi})"));
+            }
+        }
+        _ => {
+            let Some(rd) = random_demand(rng, catalog) else {
+                return Ok(());
+            };
+            let lo = rng.below(n);
+            let hi = lo + rng.below(n - lo + 1);
+            let rot = rng.below(n + 1);
+            let (mut got_a, mut got_b) = (Vec::new(), Vec::new());
+            let (ok_a, ok_b) = if rng.below(2) == 0 {
+                (
+                    catalog.pop_gang_free(state, lo, hi, &rd, &mut got_a),
+                    catalog.pop_gang_free(twin, lo, hi, &rd, &mut got_b),
+                )
+            } else {
+                (
+                    catalog.pop_gang_free_rot(state, lo, hi, &rd, rot, &mut got_a),
+                    catalog.pop_gang_free_rot(twin, lo, hi, &rd, rot, &mut got_b),
+                )
+            };
+            if ok_a != ok_b || got_a != got_b {
+                return Err(format!(
+                    "gang pop diverged in [{lo},{hi}): {ok_a}/{got_a:?} vs {ok_b}/{got_b:?}"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn index_oracle_random_interleavings() {
+    check("index-oracle-interleavings", 1024, |g| {
+        let mut rng = Rng::new(g.seed ^ 0x1DE_5A01);
+        let catalog = random_catalog(&mut rng);
+        let mut state = AvailMap::all_free(catalog.len());
+        catalog.attach_index(&mut state);
+        let mut twin = state.clone();
+        twin.set_use_index(false);
+        let rd = random_demand(&mut rng, &catalog);
+        for _ in 0..16 {
+            random_op(&mut rng, &catalog, &mut state, &mut twin)?;
+            assert_queries_agree(&mut rng, &catalog, &state, &twin, rd.as_ref())?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn index_oracle_dense_occupancy_edge() {
+    // the index's raison d'être — and its riskiest regime: ~full maps
+    // where whole summary words are zero and first_free must skip them
+    check("index-oracle-dense", 1024, |g| {
+        let mut rng = Rng::new(g.seed ^ 0xDE_4253);
+        let catalog = random_catalog(&mut rng);
+        let n = catalog.len();
+        let mut state = AvailMap::all_free(n);
+        catalog.attach_index(&mut state);
+        // drive to near-total occupancy, leaving a few scattered holes
+        for s in 0..n {
+            state.set_busy(s);
+        }
+        for _ in 0..rng.below(4) {
+            state.set_free(rng.below(n));
+        }
+        let mut twin = state.clone();
+        twin.set_use_index(false);
+        let rd = random_demand(&mut rng, &catalog);
+        for _ in 0..8 {
+            random_op(&mut rng, &catalog, &mut state, &mut twin)?;
+            assert_queries_agree(&mut rng, &catalog, &state, &twin, rd.as_ref())?;
+        }
+        Ok(())
+    });
+}
+
+/// Record-level bit-equality of two sweep results.
+fn assert_sweeps_identical(tag: &str, a: &sweep::SweepResult, b: &sweep::SweepResult) {
+    assert_eq!(a.records.len(), b.records.len(), "{tag}: run count");
+    for (x, y) in a.records.iter().zip(b.records.iter()) {
+        let who = format!("{tag}/{}/{}", x.framework, x.scenario);
+        assert_eq!(x.framework, y.framework, "{who}: order");
+        assert_eq!(x.seed, y.seed, "{who}: seed");
+        assert_eq!(x.makespan_s, y.makespan_s, "{who}: makespan");
+        assert_eq!(x.messages, y.messages, "{who}: messages");
+        assert_eq!(x.events, y.events, "{who}: events");
+        assert_eq!(x.summary.median, y.summary.median, "{who}: median");
+        assert_eq!(x.summary.p95, y.summary.p95, "{who}: p95");
+        assert_eq!(
+            x.constraint_rejections, y.constraint_rejections,
+            "{who}: constraint rejections"
+        );
+        assert_eq!(x.gang_rejections, y.gang_rejections, "{who}: gang rejections");
+        assert_eq!(
+            x.inconsistency_ratio, y.inconsistency_ratio,
+            "{who}: inconsistency ratio"
+        );
+        assert_eq!(x.gang_wait.p99, y.gang_wait.p99, "{who}: gang_wait p99");
+        assert_eq!(
+            x.constraint_wait.p99, y.constraint_wait.p99,
+            "{who}: constraint_wait p99"
+        );
+    }
+}
+
+#[test]
+fn index_full_sweep_bit_identity_on_hetero_and_gang_presets() {
+    // the full preset grids — every cell, every framework — indexed vs
+    // index-disabled, record-for-record identical. Job counts are
+    // CI-sized (bit-identity is load-shape-independent; the full-size
+    // presets run indexed in the CI sweep smokes).
+    let net = NetModel::paper_default();
+    for preset_name in ["hetero", "gang"] {
+        let scenarios: Vec<sweep::Scenario> = sweep::preset(preset_name, &net)
+            .expect("preset resolves")
+            .into_iter()
+            .map(|mut sc| {
+                sc.jobs = 80;
+                sc
+            })
+            .collect();
+        let spec = |scs: Vec<sweep::Scenario>| SweepSpec {
+            frameworks: sweep::FRAMEWORKS.iter().map(|s| s.to_string()).collect(),
+            scenarios: scs,
+            seeds: 1,
+            base_seed: 5,
+            threads: 0,
+        };
+        let on = sweep::run_sweep(&spec(scenarios.clone()));
+        let off = sweep::run_sweep(&spec(
+            scenarios.into_iter().map(|sc| sc.with_index(false)).collect(),
+        ));
+        assert_sweeps_identical(preset_name, &on, &off);
+    }
+}
+
+/// Field-by-field equality of two Megha outcomes (floats are derived
+/// deterministically, so exact comparison is correct).
+fn assert_outcomes_identical(tag: &str, a: &RunOutcome, b: &RunOutcome) {
+    assert_eq!(a.makespan, b.makespan, "{tag}: makespan");
+    assert_eq!(a.tasks, b.tasks, "{tag}: tasks");
+    assert_eq!(a.messages, b.messages, "{tag}: messages");
+    assert_eq!(a.decisions, b.decisions, "{tag}: decisions");
+    assert_eq!(a.inconsistencies, b.inconsistencies, "{tag}: inconsistencies");
+    assert_eq!(a.events, b.events, "{tag}: events");
+    assert_eq!(a.jobs.len(), b.jobs.len(), "{tag}: job count");
+    for (x, y) in a.jobs.iter().zip(b.jobs.iter()) {
+        assert_eq!(x.complete, y.complete, "{tag}: job {} completion", x.job_id);
+    }
+}
+
+#[test]
+fn index_bit_identity_survives_gm_failure_with_gangs() {
+    // GmFail resets the GM view in place (clear_to_busy): the node-index
+    // attachment, the summary/block state, and the hook-maintained
+    // per-partition counts must all stay exact through the
+    // crash-rebuild path — with gang demands exercising the counters.
+    let workers = 300;
+    let mut cfg_on = MeghaConfig::for_workers(workers);
+    cfg_on.sim.seed = 13;
+    cfg_on.catalog = NodeCatalog::bimodal_gpu(cfg_on.spec.n_workers(), 0.25);
+    let mut cfg_off = cfg_on.clone();
+    cfg_off.sim.use_index = false;
+    let trace = synthetic_fixed_constrained(
+        15,
+        30,
+        1.0,
+        0.85,
+        cfg_on.spec.n_workers(),
+        14,
+        0.3,
+        Demand::new(2, vec!["gpu".into()]),
+    );
+    let failure = Some(FailurePlan {
+        at: SimTime::from_secs(4.0),
+        gm: 0,
+    });
+    let a = {
+        let mut planner = RustMatchEngine;
+        simulate_with(&cfg_on, &trace, &mut planner, failure)
+    };
+    let b = {
+        let mut planner = RustMatchEngine;
+        simulate_with(&cfg_off, &trace, &mut planner, failure)
+    };
+    assert_outcomes_identical("megha gm-fail gangs", &a, &b);
+}
