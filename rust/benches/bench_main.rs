@@ -10,9 +10,9 @@
 //!
 //! Run with `cargo bench` (or `cargo bench -- fig3 match` to filter).
 //! Flags: `--quick` shrinks the per-bench budget (the CI smoke mode);
-//! `--json` additionally writes `BENCH_PR5.json` (per-bench median
+//! `--json` additionally writes `BENCH_PR6.json` (per-bench median
 //! ns/unit, experiment totals in seconds) at the repo root — the
-//! current PR's perf artifact (`BENCH_PR2.json` / `BENCH_PR3.json` are
+//! current PR's perf artifact (`BENCH_PR2.json` … `BENCH_PR5.json` are
 //! the frozen earlier snapshots, still pending hardware regeneration).
 
 use std::cell::RefCell;
@@ -93,7 +93,7 @@ impl Bench {
         self.total_results.borrow_mut().push((name.to_string(), total));
     }
 
-    /// Write `BENCH_PR5.json` at the repo root (next to `rust/`),
+    /// Write `BENCH_PR6.json` at the repo root (next to `rust/`),
     /// merging over any existing file so successive filtered runs
     /// (`-- queue --json` then `-- scale10 --json`) accumulate instead
     /// of clobbering each other. A fresh run of a bench name replaces
@@ -110,7 +110,7 @@ impl Bench {
             .ok()
             .and_then(|p| p.parent().map(|q| q.to_path_buf()))
             .unwrap_or_else(|| std::path::PathBuf::from("."));
-        let path = root.join("BENCH_PR5.json");
+        let path = root.join("BENCH_PR6.json");
         let mut bench: BTreeMap<String, Json> = BTreeMap::new();
         let mut totals: BTreeMap<String, Json> = BTreeMap::new();
         let mut measured = false;
@@ -209,6 +209,8 @@ fn main() {
     bench_ablation_shuffle(&b);
     bench_sweep_speedup(&b);
     bench_scale10(&b);
+    bench_shard(&b);
+    bench_scale100(&b);
     if json {
         b.write_json();
     }
@@ -362,6 +364,94 @@ fn bench_scale10(b: &Bench) {
             .push((format!("sweep/scale10/{}", r.framework), r.wall_s));
     }
     println!("bench sweep/scale10_total                        {total:>10.3} s total");
+}
+
+/// The ISSUE-6 sharded-execution family: one Megha run at shard counts
+/// 1/2/4/8 (same trace; each shard count is its own deterministic
+/// schedule), reporting events/s scaling of the threaded driver, plus
+/// the sequential reference of the widest schedule so the epoch/barrier
+/// machinery's single-thread overhead is visible. Heavyweight, so
+/// opt-in: `cargo bench -- shard`.
+fn bench_shard(b: &Bench) {
+    if !b.explicitly_enabled("shard") {
+        return;
+    }
+    let trace = yahoo_like(2_000, 20_000, 0.85, 11);
+    for &shards in &[1usize, 2, 4, 8] {
+        let mut cfg = MeghaConfig::for_workers(20_000);
+        cfg.sim.seed = 11;
+        cfg.sim.shards = shards;
+        let t0 = Instant::now();
+        let out = sched::megha::simulate(&cfg, &trace);
+        let total = t0.elapsed().as_secs_f64();
+        println!(
+            "bench shard/megha_yahoo2k_s{shards:<2}                     {:>10.3} s  {:>12.0} events/s  ({} events, {} shards)",
+            total,
+            out.events_per_sec(),
+            out.events,
+            out.shards
+        );
+        b.total_results
+            .borrow_mut()
+            .push((format!("shard/megha_yahoo2k_s{shards}"), total));
+    }
+    {
+        let mut cfg = MeghaConfig::for_workers(20_000);
+        cfg.sim.seed = 11;
+        cfg.sim.shards = 8;
+        let t0 = Instant::now();
+        let out = sched::megha::simulate_sharded_reference(&cfg, &trace, None);
+        let total = t0.elapsed().as_secs_f64();
+        println!(
+            "bench shard/megha_yahoo2k_s8_reference           {:>10.3} s  {:>12.0} events/s  (sequential lanes)",
+            total,
+            out.events_per_sec()
+        );
+        b.total_results
+            .borrow_mut()
+            .push(("shard/megha_yahoo2k_s8_reference".into(), total));
+    }
+}
+
+/// The ISSUE-6 acceptance scenario: the `scale100` preset (~1M worker
+/// slots, 8 shards) through the sweep harness. Very heavy, so opt-in:
+/// `cargo bench -- scale100` (add `--quick` to get the `--smoke`-sized
+/// rendition the CI step runs).
+fn bench_scale100(b: &Bench) {
+    if !b.explicitly_enabled("scale100") {
+        return;
+    }
+    let quick = b.budget < Duration::from_secs(1);
+    let scenarios: Vec<megha::sweep::Scenario> =
+        megha::sweep::preset("scale100", &megha::sim::net::NetModel::paper_default())
+            .expect("scale100 preset")
+            .into_iter()
+            .map(|sc| if quick { sc.smoke() } else { sc })
+            .collect();
+    let spec = megha::sweep::SweepSpec {
+        frameworks: vec!["megha".into()],
+        scenarios,
+        seeds: 1,
+        base_seed: 0,
+        threads: 0,
+    };
+    let t0 = Instant::now();
+    let res = megha::sweep::run_sweep(&spec);
+    let total = t0.elapsed().as_secs_f64();
+    for r in &res.records {
+        println!(
+            "bench sweep/scale100/{:<27} {:>10.3} s  {:>12.0} events/s  ({} events, {} shards)",
+            r.framework,
+            r.wall_s,
+            r.events_per_sec(),
+            r.events,
+            r.shards
+        );
+        b.total_results
+            .borrow_mut()
+            .push((format!("sweep/scale100/{}", r.framework), r.wall_s));
+    }
+    println!("bench sweep/scale100_total                       {total:>10.3} s total");
 }
 
 /// Parallel sweep harness: the same 4×2×4 grid executed with one thread

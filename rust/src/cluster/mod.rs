@@ -11,6 +11,7 @@
 
 pub mod bitmap;
 pub mod hetero;
+pub mod shard;
 
 pub use bitmap::AvailMap;
 pub use hetero::{NodeCatalog, ResolvedDemand};

@@ -1,0 +1,188 @@
+//! Partitioning of one run's cluster state into execution shards.
+//!
+//! The sharded driver (`sim::driver::run_sharded`) gives each shard its
+//! own event queue, RNG stream and counters; this module decides *what*
+//! each shard owns. A [`ShardPlan`] cuts the federation into contiguous
+//! blocks: shard `s` owns a block of LMs (and, because
+//! [`ClusterSpec::cluster_worker_range`] is contiguous and ascending, a
+//! contiguous range of workers) plus a block of GMs. Contiguity is what
+//! lets a shard wrap plain slices of the per-LM/per-GM state vectors
+//! instead of scatter/gather views, and it keeps every
+//! `AvailMap`/`NodeCatalog` word range shard-local.
+//!
+//! [`ShardedState`] is the generic carrier: it splits a cluster-wide
+//! `Vec<T>` of per-LM (or per-GM) values into per-shard blocks and hands
+//! them out for the shard constructors to own.
+
+use super::ClusterSpec;
+use std::ops::Range;
+
+/// How one run's federation is cut into execution shards.
+///
+/// The shard count is clamped to `min(n_gm, n_lm)` so every shard owns
+/// at least one GM and one LM; blocks are balanced to within one
+/// element (the first `n % shards` blocks get the extra one).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    n_gm: usize,
+    n_lm: usize,
+    /// Block start indices, length `shards + 1` (CSR-style bounds).
+    gm_lo: Vec<usize>,
+    lm_lo: Vec<usize>,
+}
+
+/// Balanced CSR bounds: cut `n` items into `k` contiguous blocks.
+fn cuts(n: usize, k: usize) -> Vec<usize> {
+    (0..=k).map(|i| i * n / k).collect()
+}
+
+impl ShardPlan {
+    /// Plan `shards` execution shards over `spec`'s federation. `shards`
+    /// is clamped to `[1, min(n_gm, n_lm)]`; callers that need to know
+    /// the effective count read [`shards`](Self::shards) back.
+    pub fn new(spec: &ClusterSpec, shards: usize) -> ShardPlan {
+        let k = shards.clamp(1, spec.n_gm.min(spec.n_lm));
+        ShardPlan {
+            n_gm: spec.n_gm,
+            n_lm: spec.n_lm,
+            gm_lo: cuts(spec.n_gm, k),
+            lm_lo: cuts(spec.n_lm, k),
+        }
+    }
+
+    /// Effective shard count after clamping.
+    pub fn shards(&self) -> usize {
+        self.gm_lo.len() - 1
+    }
+
+    /// The shard owning global manager `gm`.
+    pub fn shard_of_gm(&self, gm: usize) -> usize {
+        debug_assert!(gm < self.n_gm);
+        // blocks are near-uniform; a partition-point scan over <= shards
+        // entries is branch-predictable and never worth a binary search
+        self.gm_lo.iter().skip(1).position(|&lo| gm < lo).unwrap()
+    }
+
+    /// The shard owning local manager `lm`.
+    pub fn shard_of_lm(&self, lm: usize) -> usize {
+        debug_assert!(lm < self.n_lm);
+        self.lm_lo.iter().skip(1).position(|&lo| lm < lo).unwrap()
+    }
+
+    /// Global managers owned by shard `s`.
+    pub fn gm_range(&self, s: usize) -> Range<usize> {
+        self.gm_lo[s]..self.gm_lo[s + 1]
+    }
+
+    /// Local managers owned by shard `s`.
+    pub fn lm_range(&self, s: usize) -> Range<usize> {
+        self.lm_lo[s]..self.lm_lo[s + 1]
+    }
+}
+
+/// A cluster-wide per-entity state vector cut into per-shard blocks.
+///
+/// Built once from the full vector plus the CSR bounds of a
+/// [`ShardPlan`] axis; [`take_block`](Self::take_block) moves each
+/// shard's contiguous slice out for that shard to own (blocks must be
+/// taken in shard order, each exactly once).
+pub struct ShardedState<T> {
+    blocks: Vec<Option<Vec<T>>>,
+}
+
+impl<T> ShardedState<T> {
+    /// Split `full` (length = the axis size of `plan`'s federation) by
+    /// `bounds`, the CSR cut points of the matching [`ShardPlan`] axis.
+    fn split(mut full: Vec<T>, bounds: &[usize]) -> ShardedState<T> {
+        assert_eq!(full.len(), *bounds.last().unwrap());
+        let mut blocks: Vec<Option<Vec<T>>> = Vec::with_capacity(bounds.len() - 1);
+        // split back-to-front so each split_off is O(block)
+        for w in bounds.windows(2).rev() {
+            blocks.push(Some(full.split_off(w[0])));
+        }
+        blocks.reverse();
+        ShardedState { blocks }
+    }
+
+    /// Cut a per-GM vector by `plan`'s GM blocks.
+    pub fn per_gm(full: Vec<T>, plan: &ShardPlan) -> ShardedState<T> {
+        ShardedState::split(full, &plan.gm_lo)
+    }
+
+    /// Cut a per-LM vector by `plan`'s LM blocks.
+    pub fn per_lm(full: Vec<T>, plan: &ShardPlan) -> ShardedState<T> {
+        ShardedState::split(full, &plan.lm_lo)
+    }
+
+    /// Move shard `s`'s block out (panics if taken twice).
+    pub fn take_block(&mut self, s: usize) -> Vec<T> {
+        self.blocks[s].take().expect("shard block taken twice")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(n_gm: usize, n_lm: usize) -> ClusterSpec {
+        ClusterSpec {
+            n_gm,
+            n_lm,
+            workers_per_partition: 4,
+        }
+    }
+
+    #[test]
+    fn clamps_to_federation() {
+        assert_eq!(ShardPlan::new(&spec(3, 3), 8).shards(), 3);
+        assert_eq!(ShardPlan::new(&spec(8, 10), 4).shards(), 4);
+        assert_eq!(ShardPlan::new(&spec(8, 10), 0).shards(), 1);
+    }
+
+    #[test]
+    fn blocks_partition_both_axes() {
+        let p = ShardPlan::new(&spec(8, 10), 3);
+        let mut gms = Vec::new();
+        let mut lms = Vec::new();
+        for s in 0..p.shards() {
+            for g in p.gm_range(s) {
+                assert_eq!(p.shard_of_gm(g), s);
+                gms.push(g);
+            }
+            for l in p.lm_range(s) {
+                assert_eq!(p.shard_of_lm(l), s);
+                lms.push(l);
+            }
+        }
+        assert_eq!(gms, (0..8).collect::<Vec<_>>());
+        assert_eq!(lms, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn blocks_are_balanced() {
+        let p = ShardPlan::new(&spec(8, 10), 3);
+        for s in 0..3 {
+            assert!(p.gm_range(s).len() >= 8 / 3);
+            assert!(p.gm_range(s).len() <= 8 / 3 + 1);
+            assert!(p.lm_range(s).len() >= 10 / 3);
+            assert!(p.lm_range(s).len() <= 10 / 3 + 1);
+        }
+    }
+
+    #[test]
+    fn single_shard_owns_everything() {
+        let p = ShardPlan::new(&spec(8, 10), 1);
+        assert_eq!(p.gm_range(0), 0..8);
+        assert_eq!(p.lm_range(0), 0..10);
+    }
+
+    #[test]
+    fn sharded_state_splits_and_takes() {
+        let p = ShardPlan::new(&spec(8, 10), 3);
+        let mut st = ShardedState::per_lm((0..10u32).collect(), &p);
+        for s in 0..3 {
+            let block = st.take_block(s);
+            assert_eq!(block, p.lm_range(s).map(|x| x as u32).collect::<Vec<_>>());
+        }
+    }
+}

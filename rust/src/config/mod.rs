@@ -25,6 +25,13 @@ pub struct SimParams {
     /// `naive_*` scans — the `--no-index` debug mode and the
     /// differential goldens in `tests/index_oracle.rs`.
     pub use_index: bool,
+    /// Execution shards for one run (`--shards N`). 1 = the classic
+    /// sequential driver. N > 1 partitions the cluster state into N
+    /// shards and drains events in network-lookahead epochs, either on N
+    /// threads or serially — the two are bit-identical by construction
+    /// (`tests/shard_identity.rs`). Megha only; the probe baselines fall
+    /// back to 1.
+    pub shards: usize,
 }
 
 impl Default for SimParams {
@@ -34,6 +41,7 @@ impl Default for SimParams {
             short_threshold: SimTime::from_secs(90.0),
             seed: 0,
             use_index: true,
+            shards: 1,
         }
     }
 }

@@ -5,6 +5,7 @@
 //! megha simulate --scheduler megha|sparrow|eagle|pigeon
 //!                (--trace FILE | --workload yahoo|google|fixed --jobs N)
 //!                [--workers N] [--load X] [--seed N] [--xla] [--no-index]
+//!                [--shards N]
 //!                [--hetero uniform|bimodal-gpu|rack-tiered] [--scarcity X]
 //!                [--constrained-frac X] [--require a,b] [--gang K]
 //! megha prototype --scheduler megha|pigeon [--jobs N] [--time-scale X] [--xla]
@@ -13,6 +14,7 @@
 //!             [--workload yahoo|google|fixed] [--jobs N] [--tasks-per-job N]
 //!             [--net constant|jittered] [--net-ms X] [--jitter-ms X]
 //!             [--fail-gm-at T] [--threads K] [--preset NAME] [--no-index]
+//!             [--shards N] [--smoke]
 //!             [--hetero PROFILE] [--scarcity X] [--constrained-frac X]
 //!             [--require a,b] [--gang K]
 //! megha trace gen --workload yahoo|google|fixed --jobs N --workers N
@@ -28,6 +30,13 @@
 //!
 //! `--no-index` routes all bitmap queries onto the flat scans instead of
 //! the occupancy index (debug/A-B mode; results are bit-identical).
+//!
+//! `--shards N` runs each Megha simulation sharded across N threads
+//! (deterministic: threaded and sequential execution of the same sharded
+//! schedule are bit-identical; baselines always run sequentially). The
+//! sweep divides its across-run thread budget by N. `--smoke` shrinks
+//! every sweep scenario ~10x (workers and jobs) for CI-sized runs, e.g.
+//! `megha sweep --preset scale100 --smoke`.
 
 use anyhow::{bail, Context, Result};
 use megha::cluster::NodeCatalog;
@@ -46,7 +55,7 @@ use megha::util::args::Args;
 use megha::workload::constraints::{apply_constraints, valid_label, CONSTRAIN_SEED};
 use megha::workload::{synthetic, trace as tracefile, Demand, JobClass, Trace};
 
-const FLAGS: &[&str] = &["xla", "help", "short-only", "no-index"];
+const FLAGS: &[&str] = &["xla", "help", "short-only", "no-index", "smoke"];
 
 fn main() {
     let args = Args::from_env(FLAGS);
@@ -285,6 +294,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             None,
             hetero.as_ref(),
             !args.flag("no-index"),
+            args.usize("shards", 1),
             &trace,
         )
     };
@@ -393,6 +403,22 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     };
     let scenarios = if args.flag("no-index") {
         scenarios.into_iter().map(|sc| sc.with_index(false)).collect()
+    } else {
+        scenarios
+    };
+    // --shards overrides per-scenario shard counts (presets may set
+    // their own, e.g. scale100); --smoke shrinks every cell ~10x
+    let scenarios = if args.get("shards").is_some() {
+        let n = args.usize("shards", 1);
+        scenarios
+            .into_iter()
+            .map(|sc: sweep::Scenario| sc.with_shards(n))
+            .collect()
+    } else {
+        scenarios
+    };
+    let scenarios: Vec<sweep::Scenario> = if args.flag("smoke") {
+        scenarios.into_iter().map(|sc| sc.smoke()).collect()
     } else {
         scenarios
     };

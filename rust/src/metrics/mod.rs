@@ -101,6 +101,9 @@ pub struct RunOutcome {
     /// deterministic — never compare it across runs; it only feeds
     /// throughput reporting ([`events_per_sec`](Self::events_per_sec)).
     pub sim_wall_s: f64,
+    /// Execution shards the run used (1 = sequential driver; 0 for
+    /// paths with no event loop, e.g. the TCP prototype).
+    pub shards: u32,
 }
 
 impl RunOutcome {

@@ -225,6 +225,39 @@ impl JobTracker {
             ..Default::default()
         }
     }
+
+    /// Merge per-shard trackers that partitioned job ownership into one
+    /// outcome. The sharded driver gives every shard a full-width
+    /// tracker but routes each job's completions to exactly one owning
+    /// shard, so the per-job records are disjoint across trackers; this
+    /// re-assembles them in job order (panics like
+    /// [`into_outcome`](Self::into_outcome) if any job never completed,
+    /// or if two shards completed the same job).
+    pub fn merge_into_outcome(trackers: Vec<JobTracker>, makespan: SimTime) -> RunOutcome {
+        let mut merged: Vec<Option<JobRecord>> = Vec::new();
+        for t in trackers {
+            if merged.is_empty() {
+                merged = vec![None; t.records.len()];
+            }
+            assert_eq!(merged.len(), t.records.len(), "trackers cover different traces");
+            for (slot, r) in merged.iter_mut().zip(t.records) {
+                if let Some(r) = r {
+                    assert!(slot.is_none(), "job {} completed in two shards", r.job_id);
+                    *slot = Some(r);
+                }
+            }
+        }
+        let jobs: Vec<JobRecord> = merged
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| r.unwrap_or_else(|| panic!("job {i} never completed")))
+            .collect();
+        RunOutcome {
+            jobs,
+            makespan,
+            ..Default::default()
+        }
+    }
 }
 
 #[cfg(test)]

@@ -2,7 +2,7 @@
 //! [`crate::sim::driver`] (see `DESIGN.md` for the driver contract).
 
 use std::collections::VecDeque;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::cluster::hetero::{self, NodeCatalog, ResolvedDemand};
 use crate::cluster::{AvailMap, ClusterSpec, PartitionId, WorkerId};
@@ -37,7 +37,7 @@ pub enum Ev {
     /// GM→LM: verify-and-launch a batch of mappings (§3.4.1).
     LmVerify { lm: u32, gm: u32, maps: Vec<Mapping> },
     /// LM→GM: batched inconsistency reply + piggybacked cluster snapshot.
-    GmReply { gm: u32, invalid: Vec<(u32, u32)>, snap: Rc<Snapshot> },
+    GmReply { gm: u32, invalid: Vec<(u32, u32)>, snap: Arc<Snapshot> },
     /// Worker finished a task (local to the LM: no network hop).
     TaskFinish { lm: u32, gm: u32, job: u32, worker: u32 },
     /// LM→GM: task-completion notice (§3.4). `reuse` = worker is internal
@@ -59,7 +59,7 @@ pub enum Ev {
     /// LM heartbeat tick: broadcast snapshots to all GMs (§3.3).
     Heartbeat { lm: u32 },
     /// LM→GM: heartbeat snapshot delivery.
-    GmHeartbeat { gm: u32, snap: Rc<Snapshot> },
+    GmHeartbeat { gm: u32, snap: Arc<Snapshot> },
     /// Failure injection (§3.5): the GM loses its in-memory global state
     /// and must rebuild from subsequent LM updates.
     GmFail { gm: u32 },
@@ -97,7 +97,11 @@ pub struct Snapshot {
 
 /// LM-side authoritative cluster state + change counter + the delta-
 /// snapshot base (words of the last snapshot emitted, any kind).
-struct Lm {
+/// (`pub(super)` so `sharded` can own per-shard blocks of these; all
+/// behavior stays in this module. Snapshots ride in `Arc`s — shared
+/// within one shard exactly like the old `Rc`, and `Send` so they can
+/// cross shard queues.)
+pub(super) struct Lm {
     state: AvailMap,
     version: u64,
     /// Worker range of this LM's cluster.
@@ -110,7 +114,7 @@ struct Lm {
     last_version: u64,
     /// The last snapshot, reused while `version` is unchanged (long
     /// straggler tails heartbeat the same state over and over).
-    cached: Option<Rc<Snapshot>>,
+    cached: Option<Arc<Snapshot>>,
     /// Scratch for building the next snapshot's words.
     scratch: Vec<u64>,
 }
@@ -118,7 +122,7 @@ struct Lm {
 impl Lm {
     /// Build (or reuse) the snapshot of the current state. Updates the
     /// mask base, so every emission chains on the one before it.
-    fn snapshot(&mut self) -> Rc<Snapshot> {
+    fn snapshot(&mut self) -> Arc<Snapshot> {
         if let Some(s) = &self.cached {
             if s.version == self.version {
                 return s.clone();
@@ -131,7 +135,7 @@ impl Lm {
                 mask[i / 64] |= 1 << (i % 64);
             }
         }
-        let snap = Rc::new(Snapshot {
+        let snap = Arc::new(Snapshot {
             lm: self.id,
             version: self.version,
             prev: self.last_version,
@@ -154,7 +158,7 @@ impl Lm {
 /// the match operation reads it directly instead of rescanning the
 /// bitmap per job (the §Perf L3 optimization: ~4.8 µs → ~1 µs per task
 /// on the Fig. 3 Yahoo workload).
-struct Gm {
+pub(super) struct Gm {
     state: AvailMap,
     counts: Vec<u32>,         // per-partition free workers (mirror of state)
     internal: Vec<bool>,      // per-partition ownership mask (constant)
@@ -181,7 +185,7 @@ impl Gm {
 }
 
 /// Per-job scheduling state at its GM.
-struct JobState {
+pub(super) struct JobState {
     pending: VecDeque<u32>, // tasks not yet validly launched
     enq: SimTime,           // when the head tasks became schedulable
 }
@@ -227,100 +231,17 @@ impl<'a> MeghaSim<'a> {
         failure: Option<FailurePlan>,
     ) -> MeghaSim<'a> {
         let spec = cfg.spec;
-        let n_gm = spec.n_gm;
-        let n_lm = spec.n_lm;
-        let n_part = spec.n_partitions();
-        let wpp = spec.workers_per_partition;
-        let n_workers = spec.n_workers();
-        assert_eq!(
-            cfg.catalog.len(),
-            n_workers,
-            "catalog covers {} slots but the DC has {} workers",
-            cfg.catalog.len(),
-            n_workers
-        );
-        let demands = hetero::resolve_trace(&cfg.catalog, trace);
-        // gang feasibility: every gang demand must fit inside at least
-        // one partition (a gang's node must be fully owned by one
-        // GM/LM pair), or the job could never place — fail at setup,
-        // not as an event-loop deadlock
-        for (i, rd) in demands.iter().enumerate() {
-            if let Some(rd) = rd {
-                if rd.is_gang() {
-                    let ok = (0..n_part).any(|p| {
-                        let r = spec.worker_range(PartitionId(p as u32));
-                        cfg.catalog.gangs_possible(r.start as usize, r.end as usize, rd) > 0
-                    });
-                    assert!(
-                        ok,
-                        "job {i}: gang of {} fits in no partition (no matching node \
-                         of capacity >= {} fully inside a partition range)",
-                        rd.gang_width(),
-                        rd.gang_width()
-                    );
-                }
-            }
-        }
+        let demands = resolve_and_check(cfg, trace);
         MeghaSim {
             cfg,
             spec,
             planner,
             failure,
-            gms: (0..n_gm)
-                .map(|g| {
-                    // the GM's global view carries the occupancy index:
-                    // summary-guided scans plus (non-trivial catalogs)
-                    // per-node free counters for the gang queries
-                    let mut state = AvailMap::all_free(n_workers);
-                    state.set_use_index(cfg.sim.use_index);
-                    cfg.catalog.attach_index(&mut state);
-                    Gm {
-                        state,
-                        counts: vec![wpp as u32; n_part],
-                        internal: (0..n_part)
-                            .map(|p| spec.gm_of_partition(PartitionId(p as u32)) == g)
-                            .collect(),
-                        rr: if cfg.shuffle_workers { g * n_part / n_gm } else { 0 },
-                        queue: VecDeque::new(),
-                        in_queue: vec![false; trace.n_jobs()],
-                        scan_rot: if cfg.shuffle_workers { g * wpp / n_gm } else { 0 },
-                        applied: vec![u64::MAX; n_lm],
-                        touched: vec![false; n_lm],
-                    }
-                })
-                .collect(),
-            lms: (0..n_lm)
-                .map(|l| {
-                    let r = spec.cluster_worker_range(l);
-                    let mut state = AvailMap::all_free(n_workers);
-                    state.set_use_index(cfg.sim.use_index);
-                    // mask base of the first snapshot: the all-free
-                    // initial range, which every GM's view starts from
-                    let mut last_words = Vec::new();
-                    state.copy_words_into(r.start as usize, r.end as usize, &mut last_words);
-                    Lm {
-                        state,
-                        version: 0,
-                        lo: r.start as usize,
-                        hi: r.end as usize,
-                        id: l as u32,
-                        last_words,
-                        last_version: u64::MAX,
-                        cached: None,
-                        scratch: Vec::new(),
-                    }
-                })
-                .collect(),
-            jobs: trace
-                .jobs
-                .iter()
-                .map(|j| JobState {
-                    pending: (0..j.n_tasks() as u32).collect(),
-                    enq: j.submit,
-                })
-                .collect(),
+            gms: (0..spec.n_gm).map(|g| build_gm(cfg, g, trace.n_jobs())).collect(),
+            lms: (0..spec.n_lm).map(|l| build_lm(cfg, l)).collect(),
+            jobs: build_jobs(trace),
             demands,
-            batches: vec![Vec::new(); n_lm],
+            batches: vec![Vec::new(); spec.n_lm],
             masked_applies: true,
         }
     }
@@ -332,6 +253,125 @@ impl<'a> MeghaSim<'a> {
     pub fn set_masked_applies(&mut self, on: bool) {
         self.masked_applies = on;
     }
+
+    fn view(&mut self) -> MeghaView<'_> {
+        MeghaView {
+            cfg: self.cfg,
+            spec: self.spec,
+            planner: &mut *self.planner,
+            gms: &mut self.gms,
+            lms: &mut self.lms,
+            jobs: &mut self.jobs,
+            demands: &self.demands,
+            batches: &mut self.batches,
+            masked_applies: self.masked_applies,
+            gm_lo: 0,
+            lm_lo: 0,
+        }
+    }
+}
+
+/// Setup-time demand resolution + feasibility checks, shared by the
+/// unsharded engine and the sharded shard builder.
+pub(super) fn resolve_and_check(
+    cfg: &MeghaConfig,
+    trace: &Trace,
+) -> Vec<Option<ResolvedDemand>> {
+    let spec = cfg.spec;
+    let n_part = spec.n_partitions();
+    assert_eq!(
+        cfg.catalog.len(),
+        spec.n_workers(),
+        "catalog covers {} slots but the DC has {} workers",
+        cfg.catalog.len(),
+        spec.n_workers()
+    );
+    let demands = hetero::resolve_trace(&cfg.catalog, trace);
+    // gang feasibility: every gang demand must fit inside at least
+    // one partition (a gang's node must be fully owned by one
+    // GM/LM pair), or the job could never place — fail at setup,
+    // not as an event-loop deadlock
+    for (i, rd) in demands.iter().enumerate() {
+        if let Some(rd) = rd {
+            if rd.is_gang() {
+                let ok = (0..n_part).any(|p| {
+                    let r = spec.worker_range(PartitionId(p as u32));
+                    cfg.catalog.gangs_possible(r.start as usize, r.end as usize, rd) > 0
+                });
+                assert!(
+                    ok,
+                    "job {i}: gang of {} fits in no partition (no matching node \
+                     of capacity >= {} fully inside a partition range)",
+                    rd.gang_width(),
+                    rd.gang_width()
+                );
+            }
+        }
+    }
+    demands
+}
+
+/// Build GM `g`'s initial state — identical whether it ends up owned by
+/// the unsharded engine or by one shard of the sharded executor.
+pub(super) fn build_gm(cfg: &MeghaConfig, g: usize, n_jobs: usize) -> Gm {
+    let spec = cfg.spec;
+    let n_gm = spec.n_gm;
+    let n_part = spec.n_partitions();
+    let wpp = spec.workers_per_partition;
+    // the GM's global view carries the occupancy index:
+    // summary-guided scans plus (non-trivial catalogs)
+    // per-node free counters for the gang queries
+    let mut state = AvailMap::all_free(spec.n_workers());
+    state.set_use_index(cfg.sim.use_index);
+    cfg.catalog.attach_index(&mut state);
+    Gm {
+        state,
+        counts: vec![wpp as u32; n_part],
+        internal: (0..n_part)
+            .map(|p| spec.gm_of_partition(PartitionId(p as u32)) == g)
+            .collect(),
+        rr: if cfg.shuffle_workers { g * n_part / n_gm } else { 0 },
+        queue: VecDeque::new(),
+        in_queue: vec![false; n_jobs],
+        scan_rot: if cfg.shuffle_workers { g * wpp / n_gm } else { 0 },
+        applied: vec![u64::MAX; spec.n_lm],
+        touched: vec![false; spec.n_lm],
+    }
+}
+
+/// Build LM `l`'s initial state (see [`build_gm`] on sharing).
+pub(super) fn build_lm(cfg: &MeghaConfig, l: usize) -> Lm {
+    let spec = cfg.spec;
+    let r = spec.cluster_worker_range(l);
+    let mut state = AvailMap::all_free(spec.n_workers());
+    state.set_use_index(cfg.sim.use_index);
+    // mask base of the first snapshot: the all-free
+    // initial range, which every GM's view starts from
+    let mut last_words = Vec::new();
+    state.copy_words_into(r.start as usize, r.end as usize, &mut last_words);
+    Lm {
+        state,
+        version: 0,
+        lo: r.start as usize,
+        hi: r.end as usize,
+        id: l as u32,
+        last_words,
+        last_version: u64::MAX,
+        cached: None,
+        scratch: Vec::new(),
+    }
+}
+
+/// Initial per-job scheduling state for every trace job.
+pub(super) fn build_jobs(trace: &Trace) -> Vec<JobState> {
+    trace
+        .jobs
+        .iter()
+        .map(|j| JobState {
+            pending: (0..j.n_tasks() as u32).collect(),
+            enq: j.submit,
+        })
+        .collect()
 }
 
 impl Scheduler for MeghaSim<'_> {
@@ -352,299 +392,350 @@ impl Scheduler for MeghaSim<'_> {
     }
 
     fn on_arrival(&mut self, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
-        let gm_id = jidx as usize % self.spec.n_gm;
-        self.jobs[jidx as usize].enq = ctx.now();
-        self.gms[gm_id].queue.push_back(jidx);
-        self.gms[gm_id].in_queue[jidx as usize] = true;
-        try_schedule(
-            gm_id,
-            &mut self.gms[gm_id],
-            &mut self.jobs,
-            &self.demands,
-            &self.cfg.catalog,
-            &mut self.batches,
-            &self.spec,
-            self.cfg,
-            self.planner,
-            ctx,
-        );
+        handle_arrival(&mut self.view(), jidx, ctx);
     }
 
     fn on_event(&mut self, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
-        match ev {
-            Ev::LmVerify { lm, gm, mut maps } => {
-                ctx.out.messages += 1;
-                let mut invalid: Vec<(u32, u32)> = ctx.pool.take();
-                {
-                    let lm_entry = &mut self.lms[lm as usize];
-                    for m in maps.drain(..) {
-                        if m.gang.is_empty() {
-                            if lm_entry.state.is_free(m.worker as usize) {
-                                lm_entry.state.set_busy(m.worker as usize);
-                                lm_entry.version += 1;
-                                ctx.out.tasks += 1;
-                                ctx.push_after(m.dur, Ev::TaskFinish {
-                                    lm,
-                                    gm,
-                                    job: m.job,
-                                    worker: m.worker,
-                                });
-                            } else {
-                                invalid.push((m.job, m.task));
-                            }
+        handle_event(&mut self.view(), ev, ctx);
+    }
+}
+
+/// A borrowed window onto (part of) the federation for the shared
+/// protocol handlers. The unsharded engine views *all* of its state
+/// with zero offsets; a shard of the sharded executor views its own
+/// GM/LM blocks with the blocks' start offsets. Either way the handler
+/// code below is the single copy of the protocol logic — which is what
+/// makes sharded execution trivially bit-compatible per event.
+pub(super) struct MeghaView<'v> {
+    pub(super) cfg: &'v MeghaConfig,
+    pub(super) spec: ClusterSpec,
+    pub(super) planner: &'v mut dyn MatchPlanner,
+    /// Owned GM block; global GM id `g` lives at `gms[g - gm_lo]`.
+    pub(super) gms: &'v mut [Gm],
+    /// Owned LM block; global LM id `l` lives at `lms[l - lm_lo]`.
+    pub(super) lms: &'v mut [Lm],
+    /// Full trace width (a view only touches jobs homed on its GMs).
+    pub(super) jobs: &'v mut [JobState],
+    pub(super) demands: &'v [Option<ResolvedDemand>],
+    /// Full `n_lm` width — `try_schedule` batches by *global* LM id.
+    pub(super) batches: &'v mut [Vec<Mapping>],
+    pub(super) masked_applies: bool,
+    pub(super) gm_lo: usize,
+    pub(super) lm_lo: usize,
+}
+
+/// [`Scheduler::on_arrival`] body, shared with the sharded executor.
+pub(super) fn handle_arrival(v: &mut MeghaView<'_>, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
+    let gm_id = jidx as usize % v.spec.n_gm;
+    v.jobs[jidx as usize].enq = ctx.now();
+    let gm = &mut v.gms[gm_id - v.gm_lo];
+    gm.queue.push_back(jidx);
+    gm.in_queue[jidx as usize] = true;
+    try_schedule(
+        gm_id,
+        gm,
+        v.jobs,
+        v.demands,
+        &v.cfg.catalog,
+        v.batches,
+        &v.spec,
+        v.cfg,
+        &mut *v.planner,
+        ctx,
+    );
+}
+
+/// [`Scheduler::on_event`] body, shared with the sharded executor. Every
+/// `gms`/`lms` access is offset by the view's block start; all ids on
+/// the wire (event fields, `Mapping`s, `try_schedule`'s `gm_id`) stay
+/// global.
+pub(super) fn handle_event(v: &mut MeghaView<'_>, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
+    match ev {
+        Ev::LmVerify { lm, gm, mut maps } => {
+            ctx.out.messages += 1;
+            let mut invalid: Vec<(u32, u32)> = ctx.pool.take();
+            {
+                let lm_entry = &mut v.lms[lm as usize - v.lm_lo];
+                for m in maps.drain(..) {
+                    if m.gang.is_empty() {
+                        if lm_entry.state.is_free(m.worker as usize) {
+                            lm_entry.state.set_busy(m.worker as usize);
+                            lm_entry.version += 1;
+                            ctx.out.tasks += 1;
+                            ctx.push_after(m.dur, Ev::TaskFinish {
+                                lm,
+                                gm,
+                                job: m.job,
+                                worker: m.worker,
+                            });
                         } else {
-                            // gang verify is all-or-nothing: every
-                            // reserved slot must still be free, or the
-                            // whole mapping rolls back (nothing is
-                            // claimed) and the task is invalidated
-                            let ok = m.gang.iter().all(|&w| lm_entry.state.is_free(w as usize));
-                            if ok {
-                                for &w in &m.gang {
-                                    lm_entry.state.set_busy(w as usize);
-                                }
-                                lm_entry.version += 1;
-                                ctx.out.tasks += 1;
-                                ctx.push_after(m.dur, Ev::GangFinish {
-                                    lm,
-                                    gm,
-                                    job: m.job,
-                                    workers: m.gang,
-                                });
-                            } else {
-                                ctx.out.gang_rejections += 1;
-                                invalid.push((m.job, m.task));
+                            invalid.push((m.job, m.task));
+                        }
+                    } else {
+                        // gang verify is all-or-nothing: every
+                        // reserved slot must still be free, or the
+                        // whole mapping rolls back (nothing is
+                        // claimed) and the task is invalidated
+                        let ok = m.gang.iter().all(|&w| lm_entry.state.is_free(w as usize));
+                        if ok {
+                            for &w in &m.gang {
+                                lm_entry.state.set_busy(w as usize);
                             }
+                            lm_entry.version += 1;
+                            ctx.out.tasks += 1;
+                            ctx.push_after(m.dur, Ev::GangFinish {
+                                lm,
+                                gm,
+                                job: m.job,
+                                workers: m.gang,
+                            });
+                        } else {
+                            ctx.out.gang_rejections += 1;
+                            invalid.push((m.job, m.task));
                         }
                     }
                 }
-                ctx.pool.give(maps);
-                if invalid.is_empty() {
-                    ctx.pool.give(invalid);
-                } else {
-                    ctx.out.inconsistencies += invalid.len() as u64;
-                    let retry_comm = ctx.net_delay().as_secs();
-                    ctx.out.breakdown.comm_s += invalid.len() as f64 * 2.0 * retry_comm;
-                    let snap = self.lms[lm as usize].snapshot();
-                    let d = ctx.net_delay();
-                    ctx.push_after(d, Ev::GmReply { gm, invalid, snap });
-                }
             }
-            Ev::GmReply { gm, invalid, snap } => {
-                ctx.out.messages += 1;
-                let gm_id = gm as usize;
-                let now = ctx.now();
-                apply_snapshot(&mut self.gms[gm_id], &snap, &self.spec, self.masked_applies);
-                // re-queue invalid tasks at the front (§3.4.1)
-                for &(job, task) in invalid.iter().rev() {
-                    self.jobs[job as usize].pending.push_front(task);
-                    self.jobs[job as usize].enq = now;
-                    if !self.gms[gm_id].in_queue[job as usize] {
-                        self.gms[gm_id].queue.push_front(job);
-                        self.gms[gm_id].in_queue[job as usize] = true;
-                    }
-                }
+            ctx.pool.give(maps);
+            if invalid.is_empty() {
                 ctx.pool.give(invalid);
-                try_schedule(
-                    gm_id,
-                    &mut self.gms[gm_id],
-                    &mut self.jobs,
-                    &self.demands,
-                    &self.cfg.catalog,
-                    &mut self.batches,
-                    &self.spec,
-                    self.cfg,
-                    self.planner,
-                    ctx,
-                );
-            }
-            Ev::TaskFinish { lm, gm, job, worker } => {
-                self.lms[lm as usize].state.set_free(worker as usize);
-                self.lms[lm as usize].version += 1;
-                let owner = self.spec.owner_gm_of_worker(WorkerId(worker));
-                let reuse = owner == gm as usize;
+            } else {
+                ctx.out.inconsistencies += invalid.len() as u64;
+                let retry_comm = ctx.net_delay().as_secs();
+                ctx.out.breakdown.comm_s += invalid.len() as f64 * 2.0 * retry_comm;
+                let snap = v.lms[lm as usize - v.lm_lo].snapshot();
                 let d = ctx.net_delay();
-                let comm = ctx.net_delay().as_secs();
-                ctx.out.breakdown.comm_s += comm;
-                ctx.push_after(d, Ev::GmTaskDone { gm, job, worker, reuse });
-                if !reuse {
-                    // aperiodic update to the owner: its worker is free again
-                    let d2 = ctx.net_delay();
-                    ctx.push_after(d2, Ev::GmWorkerFreed {
-                        gm: owner as u32,
-                        worker,
-                    });
+                ctx.push_after(d, Ev::GmReply { gm, invalid, snap });
+            }
+        }
+        Ev::GmReply { gm, invalid, snap } => {
+            ctx.out.messages += 1;
+            let gm_id = gm as usize;
+            let now = ctx.now();
+            let gm_entry = &mut v.gms[gm_id - v.gm_lo];
+            apply_snapshot(gm_entry, &snap, &v.spec, v.masked_applies);
+            // re-queue invalid tasks at the front (§3.4.1)
+            for &(job, task) in invalid.iter().rev() {
+                v.jobs[job as usize].pending.push_front(task);
+                v.jobs[job as usize].enq = now;
+                if !gm_entry.in_queue[job as usize] {
+                    gm_entry.queue.push_front(job);
+                    gm_entry.in_queue[job as usize] = true;
                 }
             }
-            Ev::GangFinish { lm, gm, job, workers } => {
-                // atomic release: all slots of the gang free together
-                let lm_entry = &mut self.lms[lm as usize];
+            ctx.pool.give(invalid);
+            try_schedule(
+                gm_id,
+                gm_entry,
+                v.jobs,
+                v.demands,
+                &v.cfg.catalog,
+                v.batches,
+                &v.spec,
+                v.cfg,
+                &mut *v.planner,
+                ctx,
+            );
+        }
+        Ev::TaskFinish { lm, gm, job, worker } => {
+            let lm_entry = &mut v.lms[lm as usize - v.lm_lo];
+            lm_entry.state.set_free(worker as usize);
+            lm_entry.version += 1;
+            let owner = v.spec.owner_gm_of_worker(WorkerId(worker));
+            let reuse = owner == gm as usize;
+            let d = ctx.net_delay();
+            let comm = ctx.net_delay().as_secs();
+            ctx.out.breakdown.comm_s += comm;
+            ctx.push_after(d, Ev::GmTaskDone { gm, job, worker, reuse });
+            if !reuse {
+                // aperiodic update to the owner: its worker is free again
+                let d2 = ctx.net_delay();
+                ctx.push_after(d2, Ev::GmWorkerFreed {
+                    gm: owner as u32,
+                    worker,
+                });
+            }
+        }
+        Ev::GangFinish { lm, gm, job, workers } => {
+            // atomic release: all slots of the gang free together
+            let lm_entry = &mut v.lms[lm as usize - v.lm_lo];
+            for &w in &workers {
+                lm_entry.state.set_free(w as usize);
+            }
+            lm_entry.version += 1;
+            // co-resident slots share a partition, hence one owner
+            let owner = v.spec.owner_gm_of_worker(WorkerId(workers[0]));
+            let reuse = owner == gm as usize;
+            let freed: Option<Vec<u32>> = if reuse {
+                None
+            } else {
+                let mut ws: Vec<u32> = ctx.pool.take();
+                ws.extend_from_slice(&workers);
+                Some(ws)
+            };
+            let d = ctx.net_delay();
+            let comm = ctx.net_delay().as_secs();
+            ctx.out.breakdown.comm_s += comm;
+            ctx.push_after(d, Ev::GmGangDone { gm, job, workers, reuse });
+            if let Some(ws) = freed {
+                let d2 = ctx.net_delay();
+                ctx.push_after(d2, Ev::GmGangFreed {
+                    gm: owner as u32,
+                    workers: ws,
+                });
+            }
+        }
+        Ev::GmGangDone { gm, job, workers, reuse } => {
+            ctx.out.messages += 1;
+            let gm_id = gm as usize;
+            ctx.task_done(job);
+            let gm_entry = &mut v.gms[gm_id - v.gm_lo];
+            if reuse {
                 for &w in &workers {
-                    lm_entry.state.set_free(w as usize);
+                    gm_entry.mark_free(&v.spec, w as usize);
                 }
-                lm_entry.version += 1;
-                // co-resident slots share a partition, hence one owner
-                let owner = self.spec.owner_gm_of_worker(WorkerId(workers[0]));
-                let reuse = owner == gm as usize;
-                let freed: Option<Vec<u32>> = if reuse {
-                    None
-                } else {
-                    let mut ws: Vec<u32> = ctx.pool.take();
-                    ws.extend_from_slice(&workers);
-                    Some(ws)
-                };
+            }
+            ctx.pool.give(workers);
+            try_schedule(
+                gm_id,
+                gm_entry,
+                v.jobs,
+                v.demands,
+                &v.cfg.catalog,
+                v.batches,
+                &v.spec,
+                v.cfg,
+                &mut *v.planner,
+                ctx,
+            );
+        }
+        Ev::GmGangFreed { gm, workers } => {
+            ctx.out.messages += 1;
+            let gm_id = gm as usize;
+            let gm_entry = &mut v.gms[gm_id - v.gm_lo];
+            for &w in &workers {
+                gm_entry.mark_free(&v.spec, w as usize);
+            }
+            ctx.pool.give(workers);
+            try_schedule(
+                gm_id,
+                gm_entry,
+                v.jobs,
+                v.demands,
+                &v.cfg.catalog,
+                v.batches,
+                &v.spec,
+                v.cfg,
+                &mut *v.planner,
+                ctx,
+            );
+        }
+        Ev::GmWorkerFreed { gm, worker } => {
+            ctx.out.messages += 1;
+            let gm_id = gm as usize;
+            let gm_entry = &mut v.gms[gm_id - v.gm_lo];
+            gm_entry.mark_free(&v.spec, worker as usize);
+            try_schedule(
+                gm_id,
+                gm_entry,
+                v.jobs,
+                v.demands,
+                &v.cfg.catalog,
+                v.batches,
+                &v.spec,
+                v.cfg,
+                &mut *v.planner,
+                ctx,
+            );
+        }
+        Ev::GmTaskDone { gm, job, worker, reuse } => {
+            ctx.out.messages += 1;
+            let gm_id = gm as usize;
+            ctx.task_done(job);
+            let gm_entry = &mut v.gms[gm_id - v.gm_lo];
+            if reuse {
+                // §3.4: the GM may map a queued task straight onto the
+                // freed internal worker.
+                gm_entry.mark_free(&v.spec, worker as usize);
+            }
+            try_schedule(
+                gm_id,
+                gm_entry,
+                v.jobs,
+                v.demands,
+                &v.cfg.catalog,
+                v.batches,
+                &v.spec,
+                v.cfg,
+                &mut *v.planner,
+                ctx,
+            );
+        }
+        Ev::Heartbeat { lm } => {
+            // one shared snapshot per heartbeat: the Arc is shared by
+            // all GMs, and the Lm caches it across heartbeats while
+            // its version is unchanged (§Perf iterations 2 and 5)
+            let snap = v.lms[lm as usize - v.lm_lo].snapshot();
+            for gm in 0..v.spec.n_gm {
                 let d = ctx.net_delay();
-                let comm = ctx.net_delay().as_secs();
-                ctx.out.breakdown.comm_s += comm;
-                ctx.push_after(d, Ev::GmGangDone { gm, job, workers, reuse });
-                if let Some(ws) = freed {
-                    let d2 = ctx.net_delay();
-                    ctx.push_after(d2, Ev::GmGangFreed {
-                        gm: owner as u32,
-                        workers: ws,
-                    });
-                }
+                ctx.push_after(d, Ev::GmHeartbeat {
+                    gm: gm as u32,
+                    snap: snap.clone(),
+                });
             }
-            Ev::GmGangDone { gm, job, workers, reuse } => {
-                ctx.out.messages += 1;
-                let gm_id = gm as usize;
-                ctx.task_done(job);
-                if reuse {
-                    for &w in &workers {
-                        self.gms[gm_id].mark_free(&self.spec, w as usize);
-                    }
-                }
-                ctx.pool.give(workers);
-                try_schedule(
-                    gm_id,
-                    &mut self.gms[gm_id],
-                    &mut self.jobs,
-                    &self.demands,
-                    &self.cfg.catalog,
-                    &mut self.batches,
-                    &self.spec,
-                    self.cfg,
-                    self.planner,
-                    ctx,
-                );
+            if !ctx.all_done() {
+                ctx.push_after(v.cfg.heartbeat, Ev::Heartbeat { lm });
             }
-            Ev::GmGangFreed { gm, workers } => {
-                ctx.out.messages += 1;
-                let gm_id = gm as usize;
-                for &w in &workers {
-                    self.gms[gm_id].mark_free(&self.spec, w as usize);
-                }
-                ctx.pool.give(workers);
-                try_schedule(
-                    gm_id,
-                    &mut self.gms[gm_id],
-                    &mut self.jobs,
-                    &self.demands,
-                    &self.cfg.catalog,
-                    &mut self.batches,
-                    &self.spec,
-                    self.cfg,
-                    self.planner,
-                    ctx,
-                );
-            }
-            Ev::GmWorkerFreed { gm, worker } => {
-                ctx.out.messages += 1;
-                let gm_id = gm as usize;
-                self.gms[gm_id].mark_free(&self.spec, worker as usize);
-                try_schedule(
-                    gm_id,
-                    &mut self.gms[gm_id],
-                    &mut self.jobs,
-                    &self.demands,
-                    &self.cfg.catalog,
-                    &mut self.batches,
-                    &self.spec,
-                    self.cfg,
-                    self.planner,
-                    ctx,
-                );
-            }
-            Ev::GmTaskDone { gm, job, worker, reuse } => {
-                ctx.out.messages += 1;
-                let gm_id = gm as usize;
-                ctx.task_done(job);
-                if reuse {
-                    // §3.4: the GM may map a queued task straight onto the
-                    // freed internal worker.
-                    self.gms[gm_id].mark_free(&self.spec, worker as usize);
-                }
-                try_schedule(
-                    gm_id,
-                    &mut self.gms[gm_id],
-                    &mut self.jobs,
-                    &self.demands,
-                    &self.cfg.catalog,
-                    &mut self.batches,
-                    &self.spec,
-                    self.cfg,
-                    self.planner,
-                    ctx,
-                );
-            }
-            Ev::Heartbeat { lm } => {
-                // one shared snapshot per heartbeat: the Rc is shared by
-                // all GMs, and the Lm caches it across heartbeats while
-                // its version is unchanged (§Perf iterations 2 and 5)
-                let snap = self.lms[lm as usize].snapshot();
-                for gm in 0..self.spec.n_gm {
-                    let d = ctx.net_delay();
-                    ctx.push_after(d, Ev::GmHeartbeat {
-                        gm: gm as u32,
-                        snap: snap.clone(),
-                    });
-                }
-                if !ctx.all_done() {
-                    ctx.push_after(self.cfg.heartbeat, Ev::Heartbeat { lm });
-                }
-            }
-            Ev::GmHeartbeat { gm, snap } => {
-                ctx.out.messages += 1;
-                let gm_id = gm as usize;
-                apply_snapshot(&mut self.gms[gm_id], &snap, &self.spec, self.masked_applies);
-                try_schedule(
-                    gm_id,
-                    &mut self.gms[gm_id],
-                    &mut self.jobs,
-                    &self.demands,
-                    &self.cfg.catalog,
-                    &mut self.batches,
-                    &self.spec,
-                    self.cfg,
-                    self.planner,
-                    ctx,
-                );
-            }
-            Ev::GmFail { gm } => {
-                // §3.5: GMs are stateless — model a crash-restart as losing
-                // the global view entirely. Heartbeats rebuild it; pending
-                // jobs are preserved in the durable job store. The view no
-                // longer matches any applied snapshot, so masked applies
-                // are off until each LM's next full apply, and the per-LM
-                // `applied` versions reset to the sentinel: a restarted GM
-                // has applied *nothing*, so even a quiescent LM's next
-                // heartbeat (same version as before the crash) must be
-                // applied, not version-skipped. (This was the pre-PR-3
-                // modeling bug tracked in ROADMAP.md: keeping `applied`
-                // left a never-changing LM's range all-busy forever.)
-                let gm_id = gm as usize;
-                // in place: the occupancy-index attachment and routing
-                // flag survive the crash (they are config, not state)
-                self.gms[gm_id].state.clear_to_busy();
-                self.gms[gm_id].counts.iter_mut().for_each(|c| *c = 0);
-                self.gms[gm_id].applied.iter_mut().for_each(|a| *a = u64::MAX);
-                self.gms[gm_id].touched.iter_mut().for_each(|t| *t = true);
-            }
+        }
+        Ev::GmHeartbeat { gm, snap } => {
+            ctx.out.messages += 1;
+            let gm_id = gm as usize;
+            let gm_entry = &mut v.gms[gm_id - v.gm_lo];
+            apply_snapshot(gm_entry, &snap, &v.spec, v.masked_applies);
+            try_schedule(
+                gm_id,
+                gm_entry,
+                v.jobs,
+                v.demands,
+                &v.cfg.catalog,
+                v.batches,
+                &v.spec,
+                v.cfg,
+                &mut *v.planner,
+                ctx,
+            );
+        }
+        Ev::GmFail { gm } => {
+            // §3.5: GMs are stateless — model a crash-restart as losing
+            // the global view entirely. Heartbeats rebuild it; pending
+            // jobs are preserved in the durable job store. The view no
+            // longer matches any applied snapshot, so masked applies
+            // are off until each LM's next full apply, and the per-LM
+            // `applied` versions reset to the sentinel: a restarted GM
+            // has applied *nothing*, so even a quiescent LM's next
+            // heartbeat (same version as before the crash) must be
+            // applied, not version-skipped. (This was the pre-PR-3
+            // modeling bug tracked in ROADMAP.md: keeping `applied`
+            // left a never-changing LM's range all-busy forever.)
+            let gm_entry = &mut v.gms[gm as usize - v.gm_lo];
+            // in place: the occupancy-index attachment and routing
+            // flag survive the crash (they are config, not state)
+            gm_entry.state.clear_to_busy();
+            gm_entry.counts.iter_mut().for_each(|c| *c = 0);
+            gm_entry.applied.iter_mut().for_each(|a| *a = u64::MAX);
+            gm_entry.touched.iter_mut().for_each(|t| *t = true);
         }
     }
 }
 
-/// Simulate Megha with the default pure-Rust match engine.
+/// Simulate Megha with the default pure-Rust match engine. With
+/// `cfg.sim.shards > 1` this dispatches to the sharded parallel
+/// executor; [`simulate_with`] (custom planners, e.g. XLA) always runs
+/// the sequential driver.
 pub fn simulate(cfg: &MeghaConfig, trace: &Trace) -> RunOutcome {
+    if cfg.sim.shards > 1 {
+        return super::sharded::simulate_sharded(cfg, trace, None);
+    }
     simulate_with(cfg, trace, &mut RustMatchEngine, None)
 }
 

@@ -22,5 +22,7 @@
 //! entry points.
 
 pub mod engine;
+pub mod sharded;
 
 pub use engine::{simulate, simulate_with, FailurePlan, MeghaSim};
+pub use sharded::{simulate_sharded, simulate_sharded_reference};

@@ -1,0 +1,248 @@
+//! Sharded Megha execution: one run partitioned across cores.
+//!
+//! A [`crate::cluster::shard::ShardPlan`] cuts the federation into
+//! contiguous GM and LM blocks; each shard owns its blocks' state (built
+//! by the exact constructors the unsharded engine uses) plus full-width
+//! job/batch scratch, and runs the *same* handler code
+//! ([`engine::handle_event`]) through a [`MeghaView`] with block
+//! offsets. The driver ([`driver::run_sharded`]) supplies the epoch
+//! machinery: every Megha message between a GM and an LM on different
+//! shards crosses the network, so it is delayed by at least the network
+//! model's minimum delay — the conservative lookahead that lets each
+//! shard drain one epoch window without locks.
+//!
+//! Determinism: threaded and sequential lane execution are bit-identical
+//! (`tests/shard_identity.rs`); a different shard *count* is a different
+//! (equally valid) schedule, like a different seed — each shard draws
+//! from its own RNG stream, so `shards=2` is not comparable bit-for-bit
+//! with `shards=1`. `shards=1` delegates to the classic sequential
+//! driver outright.
+
+use crate::cluster::hetero::ResolvedDemand;
+use crate::cluster::shard::{ShardPlan, ShardedState};
+use crate::config::MeghaConfig;
+use crate::metrics::RunOutcome;
+use crate::runtime::match_engine::RustMatchEngine;
+use crate::sim::driver::{self, ShardSim, SimCtx};
+use crate::sim::time::SimTime;
+use crate::workload::Trace;
+
+use super::engine::{
+    self, build_gm, build_jobs, build_lm, handle_arrival, handle_event, resolve_and_check, Ev,
+    FailurePlan, Gm, JobState, Lm, Mapping, MeghaView,
+};
+
+/// One shard of the federation: a contiguous GM block + a contiguous LM
+/// block (and, by [`crate::cluster::ClusterSpec::cluster_worker_range`]
+/// contiguity, a contiguous worker range), with its own match engine.
+struct MeghaShard<'a> {
+    cfg: &'a MeghaConfig,
+    planner: RustMatchEngine,
+    /// `Some` only on the shard owning the failed GM.
+    failure: Option<FailurePlan>,
+    gms: Vec<Gm>,
+    lms: Vec<Lm>,
+    /// Full trace width; only jobs homed on this shard's GMs are touched.
+    jobs: Vec<JobState>,
+    demands: &'a [Option<ResolvedDemand>],
+    /// Full `n_lm` width (`try_schedule` batches by global LM id).
+    batches: Vec<Vec<Mapping>>,
+    gm_lo: usize,
+    lm_lo: usize,
+}
+
+impl MeghaShard<'_> {
+    fn view(&mut self) -> MeghaView<'_> {
+        MeghaView {
+            cfg: self.cfg,
+            spec: self.cfg.spec,
+            planner: &mut self.planner,
+            gms: &mut self.gms,
+            lms: &mut self.lms,
+            jobs: &mut self.jobs,
+            demands: self.demands,
+            batches: &mut self.batches,
+            masked_applies: true,
+            gm_lo: self.gm_lo,
+            lm_lo: self.lm_lo,
+        }
+    }
+}
+
+impl ShardSim for MeghaShard<'_> {
+    type Ev = Ev;
+
+    fn init(&mut self, ctx: &mut SimCtx<'_, Ev>) {
+        // heartbeats for owned LMs only; GmFail on the owning shard only
+        // (mirrors MeghaSim::init, split by ownership)
+        for lm in self.lm_lo..self.lm_lo + self.lms.len() {
+            ctx.push(self.cfg.heartbeat, Ev::Heartbeat { lm: lm as u32 });
+        }
+        if let Some(f) = self.failure {
+            ctx.push(f.at, Ev::GmFail { gm: f.gm as u32 });
+        }
+    }
+
+    fn on_arrival(&mut self, job: u32, ctx: &mut SimCtx<'_, Ev>) {
+        handle_arrival(&mut self.view(), job, ctx);
+    }
+
+    fn on_event(&mut self, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
+        handle_event(&mut self.view(), ev, ctx);
+    }
+}
+
+/// The shard every event homes on: LM-side events go to the LM's shard,
+/// GM-side events to the GM's. An event whose home is the emitting shard
+/// stays local (it may be sub-window, e.g. `TaskFinish` at `now + dur`);
+/// anything else is a network message with delay >= the lookahead
+/// window, which is exactly the sharded driver's delivery contract.
+fn home_shard(plan: &ShardPlan, ev: &Ev) -> usize {
+    match ev {
+        Ev::LmVerify { lm, .. }
+        | Ev::TaskFinish { lm, .. }
+        | Ev::GangFinish { lm, .. }
+        | Ev::Heartbeat { lm } => plan.shard_of_lm(*lm as usize),
+        Ev::GmReply { gm, .. }
+        | Ev::GmTaskDone { gm, .. }
+        | Ev::GmWorkerFreed { gm, .. }
+        | Ev::GmGangDone { gm, .. }
+        | Ev::GmGangFreed { gm, .. }
+        | Ev::GmHeartbeat { gm, .. }
+        | Ev::GmFail { gm } => plan.shard_of_gm(*gm as usize),
+    }
+}
+
+/// Simulate Megha with `cfg.sim.shards` execution shards on as many
+/// threads. Falls back to the classic sequential driver when the plan
+/// clamps to one shard or the network model has no delay floor (no
+/// lookahead window to shard by).
+pub fn simulate_sharded(
+    cfg: &MeghaConfig,
+    trace: &Trace,
+    failure: Option<FailurePlan>,
+) -> RunOutcome {
+    run_impl(cfg, trace, failure, true)
+}
+
+/// Sequential-reference twin of [`simulate_sharded`]: the same sharded
+/// schedule with the lanes drained serially on one thread.
+/// `tests/shard_identity.rs` pins bit-identity between the two at every
+/// shard count.
+pub fn simulate_sharded_reference(
+    cfg: &MeghaConfig,
+    trace: &Trace,
+    failure: Option<FailurePlan>,
+) -> RunOutcome {
+    run_impl(cfg, trace, failure, false)
+}
+
+fn run_impl(
+    cfg: &MeghaConfig,
+    trace: &Trace,
+    failure: Option<FailurePlan>,
+    threaded: bool,
+) -> RunOutcome {
+    let spec = cfg.spec;
+    let plan = ShardPlan::new(&spec, cfg.sim.shards);
+    if plan.shards() == 1 || cfg.sim.net.min_delay() == SimTime::ZERO {
+        return engine::simulate_with(cfg, trace, &mut RustMatchEngine, failure);
+    }
+    if let Some(f) = failure {
+        assert!(f.gm < spec.n_gm);
+    }
+    let demands = resolve_and_check(cfg, trace);
+    let n = plan.shards();
+    let mut gms = ShardedState::per_gm(
+        (0..spec.n_gm).map(|g| build_gm(cfg, g, trace.n_jobs())).collect(),
+        &plan,
+    );
+    let mut lms =
+        ShardedState::per_lm((0..spec.n_lm).map(|l| build_lm(cfg, l)).collect(), &plan);
+    let shards: Vec<MeghaShard<'_>> = (0..n)
+        .map(|s| MeghaShard {
+            cfg,
+            planner: RustMatchEngine,
+            failure: failure.filter(|f| plan.shard_of_gm(f.gm) == s),
+            gms: gms.take_block(s),
+            lms: lms.take_block(s),
+            jobs: build_jobs(trace),
+            demands: &demands,
+            batches: vec![Vec::new(); spec.n_lm],
+            gm_lo: plan.gm_range(s).start,
+            lm_lo: plan.lm_range(s).start,
+        })
+        .collect();
+    let shard_of = |ev: &Ev| home_shard(&plan, ev);
+    let shard_of_job = |j: u32| plan.shard_of_gm(j as usize % spec.n_gm);
+    driver::run_sharded(shards, &shard_of, &shard_of_job, &cfg.sim, trace, threaded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::synthetic::synthetic_fixed;
+
+    fn cfg_with_shards(workers: usize, seed: u64, shards: usize) -> MeghaConfig {
+        let mut c = MeghaConfig::for_workers(workers);
+        c.sim.seed = seed;
+        c.sim.shards = shards;
+        c
+    }
+
+    #[test]
+    fn sharded_completes_all_jobs() {
+        for shards in [2, 3] {
+            let cfg = cfg_with_shards(300, 7, shards);
+            let trace = synthetic_fixed(20, 30, 1.0, 0.6, cfg.spec.n_workers(), 8);
+            let out = simulate_sharded(&cfg, &trace, None);
+            assert_eq!(out.jobs.len(), 30, "shards={shards}");
+            assert_eq!(out.tasks as usize, trace.n_tasks(), "shards={shards}");
+            assert_eq!(out.shards, shards as u32);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_sequential_reference() {
+        let cfg = cfg_with_shards(300, 11, 3);
+        let trace = synthetic_fixed(30, 40, 1.0, 0.8, cfg.spec.n_workers(), 12);
+        let a = simulate_sharded(&cfg, &trace, None);
+        let b = simulate_sharded_reference(&cfg, &trace, None);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.inconsistencies, b.inconsistencies);
+        assert_eq!(a.events, b.events);
+        for (x, y) in a.jobs.iter().zip(b.jobs.iter()) {
+            assert_eq!(x.complete, y.complete);
+        }
+    }
+
+    #[test]
+    fn one_shard_delegates_to_sequential_driver() {
+        let cfg1 = cfg_with_shards(300, 13, 1);
+        let mut cfg0 = cfg1.clone();
+        cfg0.sim.shards = 1;
+        let trace = synthetic_fixed(20, 30, 1.0, 0.7, cfg1.spec.n_workers(), 14);
+        let a = simulate_sharded(&cfg1, &trace, None);
+        let b = engine::simulate(&cfg0, &trace);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.shards, 1);
+    }
+
+    #[test]
+    fn sharded_survives_gm_failure() {
+        let cfg = cfg_with_shards(2000, 17, 4); // 8 GMs / 10 LMs at this size
+        let trace = synthetic_fixed(40, 30, 1.0, 0.7, cfg.spec.n_workers(), 18);
+        let failure = Some(FailurePlan {
+            at: SimTime::from_secs(5.0),
+            gm: 0,
+        });
+        let a = simulate_sharded(&cfg, &trace, failure);
+        let b = simulate_sharded_reference(&cfg, &trace, failure);
+        assert_eq!(a.jobs.len(), 30);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.inconsistencies, b.inconsistencies);
+    }
+}

@@ -46,8 +46,9 @@ const POOL_CAP: usize = 64;
 pub struct BufPools {
     /// One stack of spare buffers per element type seen so far. The
     /// linear scan is over a handful of entries (one per payload type a
-    /// scheduler uses), far cheaper than hashing.
-    slots: Vec<(TypeId, Box<dyn Any>)>,
+    /// scheduler uses), far cheaper than hashing. (`+ Send` so a pool
+    /// can live on a shard's worker thread — see [`run_sharded`].)
+    slots: Vec<(TypeId, Box<dyn Any + Send>)>,
     enabled: bool,
 }
 
@@ -75,7 +76,7 @@ impl BufPools {
     }
 
     /// Get a cleared buffer, reusing a recycled one when available.
-    pub fn take<T: 'static>(&mut self) -> Vec<T> {
+    pub fn take<T: Send + 'static>(&mut self) -> Vec<T> {
         if self.enabled {
             let id = TypeId::of::<T>();
             for (tid, stack) in &mut self.slots {
@@ -91,7 +92,7 @@ impl BufPools {
     }
 
     /// Return a buffer for reuse (cleared here; contents are dropped).
-    pub fn give<T: 'static>(&mut self, mut v: Vec<T>) {
+    pub fn give<T: Send + 'static>(&mut self, mut v: Vec<T>) {
         if !self.enabled || v.capacity() == 0 {
             return;
         }
@@ -122,6 +123,15 @@ pub enum DriverEv<E> {
     Sched(E),
 }
 
+/// Sharded-mode routing state threaded through [`SimCtx`]: a push whose
+/// event homes on another shard diverts to the epoch's exchange log
+/// instead of the local queue (see [`run_sharded`]).
+struct ShardRoute<'a, E> {
+    my_shard: usize,
+    shard_of: &'a (dyn Fn(&E) -> usize + Sync),
+    outbox: &'a mut Vec<(SimTime, usize, E)>,
+}
+
 /// Everything a scheduler may touch during one event: the clock, the
 /// event queue (wrapped so schedulers can only push their own payloads),
 /// the run's RNG and network model, the trace, completion bookkeeping,
@@ -138,6 +148,13 @@ pub struct SimCtx<'a, E> {
     pub out: &'a mut RunOutcome,
     /// Recycled message-payload buffers (see [`BufPools`]).
     pub pool: &'a mut BufPools,
+    /// `Some` only under [`run_sharded`]: cross-shard pushes divert here.
+    route: Option<ShardRoute<'a, E>>,
+    /// `Some` only under [`run_sharded`]: the epoch-start snapshot of
+    /// global completion, identical across execution modes (a shard's
+    /// local tracker only sees its own jobs, so it cannot answer
+    /// [`all_done`](Self::all_done) itself).
+    done_override: Option<bool>,
 }
 
 impl<E> SimCtx<'_, E> {
@@ -146,14 +163,24 @@ impl<E> SimCtx<'_, E> {
         self.q.now()
     }
 
-    /// Schedule `ev` at absolute time `at`.
+    /// Schedule `ev` at absolute time `at`. Under sharded execution an
+    /// event homed on another shard goes to the exchange log instead and
+    /// reaches its destination queue at the next epoch barrier.
     pub fn push(&mut self, at: SimTime, ev: E) {
+        if let Some(r) = self.route.as_mut() {
+            let dest = (r.shard_of)(&ev);
+            if dest != r.my_shard {
+                r.outbox.push((at, dest, ev));
+                return;
+            }
+        }
         self.q.push(at, DriverEv::Sched(ev));
     }
 
     /// Schedule `ev` after a delay from now.
     pub fn push_after(&mut self, delay: SimTime, ev: E) {
-        self.q.push_after(delay, DriverEv::Sched(ev));
+        let at = self.q.now() + delay;
+        self.push(at, ev);
     }
 
     /// Draw one network latency from the run's model.
@@ -204,9 +231,11 @@ impl<E> SimCtx<'_, E> {
         self.tracker.gang_unblock(job as usize, now);
     }
 
-    /// Whether every job in the trace has completed.
+    /// Whether every job in the trace has completed. Under sharded
+    /// execution this reports the epoch-start snapshot (the same value in
+    /// threaded and sequential mode), refreshed at every barrier.
     pub fn all_done(&self) -> bool {
-        self.tracker.all_done()
+        self.done_override.unwrap_or_else(|| self.tracker.all_done())
     }
 }
 
@@ -268,6 +297,8 @@ pub fn run_with_pools<S: Scheduler>(
             trace,
             out: &mut out,
             pool: &mut pools,
+            route: None,
+            done_override: None,
         };
         sched.init(&mut ctx);
     }
@@ -281,6 +312,8 @@ pub fn run_with_pools<S: Scheduler>(
             trace,
             out: &mut out,
             pool: &mut pools,
+            route: None,
+            done_override: None,
         };
         match ev {
             DriverEv::Arrival(j) => sched.on_arrival(j, &mut ctx),
@@ -304,6 +337,316 @@ pub fn run_with_pools<S: Scheduler>(
     outcome.breakdown = out.breakdown;
     outcome.events = q.popped();
     outcome.sim_wall_s = sim_wall_s;
+    outcome.shards = 1;
+    outcome
+}
+
+/// One shard of a sharded scheduler (see [`run_sharded`]). The shape
+/// mirrors [`Scheduler`] minus `name`, plus `Send` bounds so a shard can
+/// run on its own thread. A shard only ever sees events homed on it;
+/// everything it pushes for other shards is diverted by the driver.
+pub trait ShardSim: Send {
+    /// The scheduler's own event payload type (shared by all shards).
+    type Ev: Send;
+
+    /// One-time setup for this shard (heartbeats for owned LMs, failure
+    /// injection for owned GMs, ...). May push cross-shard events; they
+    /// are delivered through the first epoch barrier.
+    fn init(&mut self, ctx: &mut SimCtx<'_, Self::Ev>);
+
+    /// A job homed on this shard arrived (index into `ctx.trace.jobs`).
+    fn on_arrival(&mut self, job: u32, ctx: &mut SimCtx<'_, Self::Ev>);
+
+    /// An event homed on this shard fired.
+    fn on_event(&mut self, ev: Self::Ev, ctx: &mut SimCtx<'_, Self::Ev>);
+}
+
+/// Per-shard execution lane: the shard itself plus private copies of all
+/// run state the sequential driver keeps singular — queue, RNG stream,
+/// tracker, counters, buffer pools — and the epoch's exchange log.
+struct ShardLane<S: ShardSim> {
+    sim: S,
+    q: EventQueue<DriverEv<S::Ev>>,
+    rng: Rng,
+    tracker: JobTracker,
+    out: RunOutcome,
+    pool: BufPools,
+    outbox: Vec<(SimTime, usize, S::Ev)>,
+}
+
+impl<S: ShardSim> ShardLane<S> {
+    /// Drain this lane's local events strictly below `horizon`. This is
+    /// the *only* code that executes shard events — the threaded and
+    /// sequential modes of [`run_sharded`] both call it, so they cannot
+    /// diverge in per-event behavior, only in lane interleaving (which
+    /// is invisible: lanes share no mutable state between barriers).
+    fn run_epoch(
+        &mut self,
+        my_shard: usize,
+        horizon: SimTime,
+        all_done: bool,
+        shard_of: &(dyn Fn(&S::Ev) -> usize + Sync),
+        net: &NetModel,
+        trace: &Trace,
+    ) {
+        while let Some(t) = self.q.peek_time() {
+            if t >= horizon {
+                break;
+            }
+            let (_, ev) = self.q.pop().expect("peeked event vanished");
+            let mut ctx = SimCtx {
+                q: &mut self.q,
+                rng: &mut self.rng,
+                net,
+                tracker: &mut self.tracker,
+                trace,
+                out: &mut self.out,
+                pool: &mut self.pool,
+                route: Some(ShardRoute {
+                    my_shard,
+                    shard_of,
+                    outbox: &mut self.outbox,
+                }),
+                done_override: Some(all_done),
+            };
+            match ev {
+                DriverEv::Arrival(j) => self.sim.on_arrival(j, &mut ctx),
+                DriverEv::Sched(e) => self.sim.on_event(e, &mut ctx),
+            }
+        }
+    }
+}
+
+/// The per-epoch barrier step shared by both execution modes: replay
+/// every lane's exchange log into the destination queues (shard-major,
+/// push order within a shard — a fixed total order, so the destination
+/// queue's `(time, seq)` keys come out identical no matter how the
+/// previous epoch's lanes interleaved), then pick the next epoch window
+/// and snapshot global completion. Returns `None` when every queue has
+/// drained. Generic over the lane handle so it works on plain `&mut`
+/// lanes (sequential mode) and `MutexGuard`s (threaded mode) alike.
+fn barrier_step<S, L>(
+    lanes: &mut [L],
+    window: SimTime,
+    n_jobs: usize,
+    prev_horizon: Option<SimTime>,
+) -> Option<(SimTime, bool)>
+where
+    S: ShardSim,
+    L: std::ops::DerefMut<Target = ShardLane<S>>,
+{
+    for s in 0..lanes.len() {
+        let mut moved = std::mem::take(&mut lanes[s].outbox);
+        for (at, dest, ev) in moved.drain(..) {
+            // the lookahead contract: anything crossing shards is
+            // net-delayed by >= `window`, so it lands at or beyond the
+            // horizon of the epoch that produced it
+            debug_assert!(
+                prev_horizon.map_or(true, |h| at >= h),
+                "cross-shard event at {at:?} undercuts epoch horizon {prev_horizon:?}"
+            );
+            lanes[dest].q.push(at, DriverEv::Sched(ev));
+        }
+        lanes[s].outbox = moved; // keep the log's capacity across epochs
+    }
+    let t0 = lanes.iter_mut().filter_map(|l| l.q.peek_time()).min()?;
+    let done = lanes.iter().map(|l| l.tracker.done()).sum::<usize>() == n_jobs;
+    Some((t0 + window, done))
+}
+
+/// Run a sharded scheduler over `trace` to completion — the parallel
+/// (`threaded = true`) or sequential-reference counterpart of [`run`].
+///
+/// Conservative lookahead: the epoch window is the network model's
+/// minimum one-way delay. Within an epoch `[t0, t0 + window)` every lane
+/// drains only its local queue; pushes homed on other shards divert to
+/// the lane's exchange log. Because every cross-shard message is
+/// net-delayed by at least the window, a message produced inside an
+/// epoch is always addressed at or beyond that epoch's horizon — no
+/// lane can miss an input for the window it is draining, so per-lane
+/// execution needs no locks and no rollback. At the barrier the logs
+/// are replayed in fixed shard-major order (see [`barrier_step`]), which
+/// makes the two modes bit-identical: `tests/shard_identity.rs` pins
+/// record-level equality across thread counts.
+///
+/// Each lane draws from its own seed-decorrelated RNG stream (a shared
+/// stream would need a global draw order, which parallel execution
+/// cannot reproduce). Shard 0 keeps the run seed, so a 1-shard run is
+/// stream-compatible with the sequential driver.
+pub fn run_sharded<S: ShardSim>(
+    shards: Vec<S>,
+    shard_of: &(dyn Fn(&S::Ev) -> usize + Sync),
+    shard_of_job: &dyn Fn(u32) -> usize,
+    params: &SimParams,
+    trace: &Trace,
+    threaded: bool,
+) -> RunOutcome {
+    let t0 = Instant::now();
+    let n = shards.len();
+    let window = params.net.min_delay();
+    assert!(n >= 1, "run_sharded needs at least one shard");
+    assert!(
+        window > SimTime::ZERO,
+        "sharded execution needs a positive network-delay floor for lookahead"
+    );
+    let n_jobs = trace.n_jobs();
+
+    let mut lanes: Vec<ShardLane<S>> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(s, sim)| ShardLane {
+            sim,
+            q: EventQueue::new(),
+            // decorrelated per-shard streams; the same golden-ratio mix
+            // as Rng::fork, and mix(0) = 0 keeps shard 0 on the run seed
+            rng: Rng::new(params.seed ^ (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            tracker: JobTracker::new(trace, params.short_threshold),
+            out: RunOutcome::default(),
+            pool: BufPools::new(),
+            outbox: Vec::new(),
+        })
+        .collect();
+
+    // arrivals in global trace order, each on its owning shard — within
+    // a shard they keep the same relative (time, seq) order the
+    // sequential driver gives them
+    for (i, j) in trace.jobs.iter().enumerate() {
+        lanes[shard_of_job(i as u32)]
+            .q
+            .push(j.submit, DriverEv::Arrival(i as u32));
+    }
+    for (s, lane) in lanes.iter_mut().enumerate() {
+        let mut ctx = SimCtx {
+            q: &mut lane.q,
+            rng: &mut lane.rng,
+            net: &params.net,
+            tracker: &mut lane.tracker,
+            trace,
+            out: &mut lane.out,
+            pool: &mut lane.pool,
+            route: Some(ShardRoute {
+                my_shard: s,
+                shard_of,
+                outbox: &mut lane.outbox,
+            }),
+            done_override: Some(false),
+        };
+        lane.sim.init(&mut ctx);
+    }
+
+    let mut prev_horizon: Option<SimTime> = None;
+    if threaded && n > 1 {
+        use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+        use std::sync::{Barrier, Mutex};
+
+        // persistent workers (epochs number in the millions — spawning
+        // per epoch would dwarf the event work); two barrier crossings
+        // per epoch: main publishes (horizon, done) and releases the
+        // workers, workers drain their lane and meet main again. The
+        // mutexes are uncontended by barrier discipline — they exist to
+        // hand each lane back and forth between main and its worker.
+        let epoch_barrier = Barrier::new(n + 1);
+        let horizon_us = AtomicU64::new(0);
+        let done_flag = AtomicBool::new(false);
+        let stop = AtomicBool::new(false);
+        let slots: Vec<Mutex<ShardLane<S>>> = lanes.into_iter().map(Mutex::new).collect();
+        std::thread::scope(|scope| {
+            for (s, slot) in slots.iter().enumerate() {
+                let epoch_barrier = &epoch_barrier;
+                let horizon_us = &horizon_us;
+                let done_flag = &done_flag;
+                let stop = &stop;
+                let net = &params.net;
+                scope.spawn(move || loop {
+                    epoch_barrier.wait();
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let horizon = SimTime::from_micros(horizon_us.load(Ordering::Acquire));
+                    let all_done = done_flag.load(Ordering::Acquire);
+                    let mut lane = slot.lock().expect("shard lane poisoned");
+                    lane.run_epoch(s, horizon, all_done, shard_of, net, trace);
+                    drop(lane);
+                    epoch_barrier.wait();
+                });
+            }
+            loop {
+                // between barriers the workers are parked, so these
+                // locks never block
+                let step = {
+                    let mut guards: Vec<_> = slots
+                        .iter()
+                        .map(|m| m.lock().expect("shard lane poisoned"))
+                        .collect();
+                    barrier_step(&mut guards, window, n_jobs, prev_horizon)
+                };
+                let Some((horizon, all_done)) = step else {
+                    stop.store(true, Ordering::Release);
+                    epoch_barrier.wait();
+                    break;
+                };
+                prev_horizon = Some(horizon);
+                horizon_us.store(horizon.as_micros(), Ordering::Release);
+                done_flag.store(all_done, Ordering::Release);
+                epoch_barrier.wait(); // release workers into the epoch
+                epoch_barrier.wait(); // wait for every lane to finish it
+            }
+        });
+        lanes = slots
+            .into_iter()
+            .map(|m| m.into_inner().expect("shard lane poisoned"))
+            .collect();
+    } else {
+        loop {
+            let step = {
+                let mut refs: Vec<&mut ShardLane<S>> = lanes.iter_mut().collect();
+                barrier_step(&mut refs, window, n_jobs, prev_horizon)
+            };
+            let Some((horizon, all_done)) = step else { break };
+            prev_horizon = Some(horizon);
+            for (s, lane) in lanes.iter_mut().enumerate() {
+                lane.run_epoch(s, horizon, all_done, shard_of, &params.net, trace);
+            }
+        }
+    }
+
+    let sim_wall_s = t0.elapsed().as_secs_f64();
+
+    // merge in fixed lane order (identical in both modes; f64 sums are
+    // order-sensitive, so this matters for bit-identity)
+    let makespan = lanes
+        .iter()
+        .map(|l| l.q.now())
+        .max()
+        .unwrap_or(SimTime::ZERO);
+    let events: u64 = lanes.iter().map(|l| l.q.popped()).sum();
+    let mut totals = RunOutcome::default();
+    let mut trackers = Vec::with_capacity(n);
+    for lane in lanes {
+        totals.inconsistencies += lane.out.inconsistencies;
+        totals.tasks += lane.out.tasks;
+        totals.messages += lane.out.messages;
+        totals.decisions += lane.out.decisions;
+        totals.constraint_rejections += lane.out.constraint_rejections;
+        totals.gang_rejections += lane.out.gang_rejections;
+        totals.breakdown.queue_scheduler_s += lane.out.breakdown.queue_scheduler_s;
+        totals.breakdown.proc_s += lane.out.breakdown.proc_s;
+        totals.breakdown.comm_s += lane.out.breakdown.comm_s;
+        totals.breakdown.queue_worker_s += lane.out.breakdown.queue_worker_s;
+        totals.breakdown.exec_s += lane.out.breakdown.exec_s;
+        trackers.push(lane.tracker);
+    }
+    let mut outcome = JobTracker::merge_into_outcome(trackers, makespan);
+    outcome.inconsistencies = totals.inconsistencies;
+    outcome.tasks = totals.tasks;
+    outcome.messages = totals.messages;
+    outcome.decisions = totals.decisions;
+    outcome.constraint_rejections = totals.constraint_rejections;
+    outcome.gang_rejections = totals.gang_rejections;
+    outcome.breakdown = totals.breakdown;
+    outcome.events = events;
+    outcome.sim_wall_s = sim_wall_s;
+    outcome.shards = n as u32;
     outcome
 }
 

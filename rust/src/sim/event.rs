@@ -266,6 +266,24 @@ impl<E> EventQueue<E> {
         }
     }
 
+    /// Timestamp of the earliest pending event without popping it, or
+    /// `None` when the queue is drained. `&mut` because peeking may have
+    /// to advance the calendar window (sort the next bucket), exactly as
+    /// [`pop`](Self::pop) would; the observable state (order, clock,
+    /// counters) is unchanged. The sharded driver uses this to decide
+    /// whether a shard's head event falls inside the current epoch.
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        if self.cur.is_empty() && self.near.is_empty() {
+            self.refill();
+        }
+        match (self.cur.last(), self.near.peek()) {
+            (Some(c), Some(n)) => Some(if n.key() < c.key() { n.time } else { c.time }),
+            (Some(c), None) => Some(c.time),
+            (None, Some(n)) => Some(n.time),
+            (None, None) => None,
+        }
+    }
+
     pub fn now(&self) -> SimTime {
         self.now
     }

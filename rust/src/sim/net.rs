@@ -28,6 +28,18 @@ impl NetModel {
             }
         }
     }
+
+    /// Lower bound on any delay this model can draw. The sharded driver
+    /// uses it as its conservative lookahead window: every cross-shard
+    /// message is delivered at least this far in the future, so events
+    /// inside one epoch window can be executed per-shard without ever
+    /// seeing a message from another shard's same-window activity.
+    pub fn min_delay(&self) -> SimTime {
+        match self {
+            NetModel::Constant(d) => *d,
+            NetModel::Jittered { base, .. } => *base,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -181,6 +181,11 @@ pub struct Scenario {
     /// the CLI `--no-index` debug mode and the bit-identity sweep
     /// goldens in `tests/index_oracle.rs`.
     pub use_index: bool,
+    /// Execution shards per run (`SimParams::shards`): 1 = the classic
+    /// sequential driver; N > 1 runs Megha's event loop on N threads
+    /// (baselines fall back to 1). The sweep divides its across-run
+    /// fan-out by this, so total threads stay within the core budget.
+    pub shards: usize,
 }
 
 impl Scenario {
@@ -188,6 +193,24 @@ impl Scenario {
     /// [`use_index`](Scenario::use_index)).
     pub fn with_index(mut self, on: bool) -> Scenario {
         self.use_index = on;
+        self
+    }
+
+    /// This scenario with `n` execution shards per run (see
+    /// [`shards`](Scenario::shards)).
+    pub fn with_shards(mut self, n: usize) -> Scenario {
+        self.shards = n.max(1);
+        self
+    }
+
+    /// A CI-sized rendition of this scenario: ~10x fewer workers and
+    /// jobs (floored so tiny cells stay meaningful), same everything
+    /// else — the CLI `--smoke` flag, e.g.
+    /// `sweep --preset scale100 --smoke`.
+    pub fn smoke(mut self) -> Scenario {
+        self.workers = (self.workers / 10).max(600);
+        self.jobs = (self.jobs / 10).max(60);
+        self.name.push_str("-smoke");
         self
     }
 
@@ -221,7 +244,7 @@ impl Scenario {
 /// Preset names accepted by [`preset`] (surfaced by `--help` and by the
 /// unknown-preset error).
 pub fn preset_names() -> &'static [&'static str] {
-    &["scale10", "hetero", "gang"]
+    &["scale10", "scale100", "hetero", "gang"]
 }
 
 /// Named scenario presets.
@@ -230,6 +253,11 @@ pub fn preset_names() -> &'static [&'static str] {
 ///   shape at 10× jobs and 10× workers, the grid the hot-path overhaul
 ///   (bucketed queue, pooled payloads, delta snapshots) exists to make
 ///   routine.
+/// * `scale100` — the ISSUE-6 sharded-execution target: the same Yahoo
+///   shape at ~1M worker slots, run with 8 execution shards
+///   (`Scenario::shards`; Megha shards its event loop across that many
+///   threads, baselines fall back to sequential). `--smoke` on the CLI
+///   shrinks it 10× for CI.
 /// * `hetero` — the ISSUE-3 heterogeneity grid: attribute-scarcity ×
 ///   load on a bimodal-GPU catalog, plus one rack-tiered scenario. The
 ///   constrained fraction is calibrated so the *constrained sub-load*
@@ -253,6 +281,19 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
             gm_fail_at: None,
             hetero: None,
             use_index: true,
+            shards: 1,
+        }]),
+        "scale100" => Some(vec![Scenario {
+            name: "scale100-yahoo-w1M".into(),
+            workload: WorkloadKind::Yahoo,
+            workers: 1_000_000,
+            jobs: 25_000,
+            load: 0.85,
+            net: net.clone(),
+            gm_fail_at: None,
+            hetero: None,
+            use_index: true,
+            shards: 8, // clamps to min(n_gm, n_lm) = 8 at this size
         }]),
         "hetero" => {
             let gpu = |scarcity: f64, frac: f64| HeteroSpec {
@@ -271,6 +312,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
                 gm_fail_at: None,
                 hetero: Some(h),
                 use_index: true,
+                shards: 1,
             };
             Some(vec![
                 // scarce: ~6% GPU slots, ~5% of jobs demand them
@@ -303,6 +345,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
                 gm_fail_at: None,
                 hetero: Some(h),
                 use_index: true,
+                shards: 1,
             };
             let gang2 = || HeteroSpec {
                 profile: "bimodal-gpu".into(),
@@ -359,6 +402,7 @@ pub fn scenario_grid(
                 gm_fail_at,
                 hetero: hetero.cloned(),
                 use_index: true,
+                shards: 1,
             });
         }
     }
@@ -369,9 +413,10 @@ pub fn scenario_grid(
 /// config for `workers`, with the run's seed, an explicit network model,
 /// optional GM failure injection (Megha only; ignored by baselines), an
 /// optional heterogeneity spec (each framework builds the catalog
-/// over its own DC size), and the occupancy-index routing flag.
-/// `fig3::run_framework`, [`run_one`] and the cross-scheduler tests all
-/// route through here.
+/// over its own DC size), the occupancy-index routing flag, and the
+/// execution-shard count (Megha only; baselines always run the
+/// sequential driver). `fig3::run_framework`, [`run_one`] and the
+/// cross-scheduler tests all route through here.
 #[allow(clippy::too_many_arguments)]
 pub fn run_framework_hetero(
     framework: &str,
@@ -381,6 +426,7 @@ pub fn run_framework_hetero(
     gm_fail_at: Option<f64>,
     hetero: Option<&HeteroSpec>,
     use_index: bool,
+    shards: usize,
     trace: &Trace,
 ) -> RunOutcome {
     match framework {
@@ -389,6 +435,7 @@ pub fn run_framework_hetero(
             cfg.sim.seed = seed;
             cfg.sim.net = net.clone();
             cfg.sim.use_index = use_index;
+            cfg.sim.shards = shards.max(1);
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.spec.n_workers());
             }
@@ -396,7 +443,11 @@ pub fn run_framework_hetero(
                 at: SimTime::from_secs(at),
                 gm: 0,
             });
-            sched::megha::simulate_with(&cfg, trace, &mut RustMatchEngine, failure)
+            if cfg.sim.shards > 1 {
+                sched::megha::simulate_sharded(&cfg, trace, failure)
+            } else {
+                sched::megha::simulate_with(&cfg, trace, &mut RustMatchEngine, failure)
+            }
         }
         "sparrow" => {
             let mut cfg = SparrowConfig::for_workers(workers);
@@ -441,7 +492,7 @@ pub fn run_framework_with(
     gm_fail_at: Option<f64>,
     trace: &Trace,
 ) -> RunOutcome {
-    run_framework_hetero(framework, workers, seed, net, gm_fail_at, None, true, trace)
+    run_framework_hetero(framework, workers, seed, net, gm_fail_at, None, true, 1, trace)
 }
 
 /// [`run_framework_with`] on the paper-default network model.
@@ -460,6 +511,7 @@ pub fn run_one(framework: &str, sc: &Scenario, seed: u64) -> RunOutcome {
         sc.gm_fail_at,
         sc.hetero.as_ref(),
         sc.use_index,
+        sc.shards,
         &trace,
     )
 }
@@ -501,6 +553,9 @@ pub struct RunRecord {
     pub makespan_s: f64,
     /// Simulation events the run processed (deterministic).
     pub events: u64,
+    /// Execution shards the run actually used ([`RunOutcome::shards`];
+    /// 1 = sequential driver, which is every baseline).
+    pub shards: u32,
     /// Wall-clock of the event loop only ([`RunOutcome::sim_wall_s`]) —
     /// the events/s denominator, excluding scheduler construction and
     /// summarization.
@@ -572,12 +627,23 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
             keys.push((fi, si, rep));
         }
     }
-    let threads = effective_threads(spec.threads).min(keys.len().max(1));
+    let budget = effective_threads(spec.threads).min(keys.len().max(1));
     let t_gen = Instant::now();
-    let traces: Vec<Trace> = parallel_map(cell_keys, threads, |(si, rep)| {
+    let traces: Vec<Trace> = parallel_map(cell_keys, budget, |(si, rep)| {
         spec.scenarios[si].make_trace(run_seed(spec.base_seed, si as u64, rep))
     });
     let gen_s = t_gen.elapsed().as_secs_f64();
+    // A run with `shards` execution shards occupies that many OS threads
+    // on its own; divide the across-run fan-out by the widest scenario so
+    // the sweep's total thread count stays within the core budget rather
+    // than oversubscribing shards x runs threads.
+    let max_shards = spec
+        .scenarios
+        .iter()
+        .map(|s| s.shards.max(1))
+        .max()
+        .unwrap_or(1);
+    let threads = (budget / max_shards).max(1);
     let t0 = Instant::now();
     let records = parallel_map(keys, threads, |(fi, si, rep)| {
         let framework = &spec.frameworks[fi];
@@ -593,6 +659,7 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
             sc.gm_fail_at,
             sc.hetero.as_ref(),
             sc.use_index,
+            sc.shards,
             trace,
         );
         RunRecord {
@@ -611,6 +678,7 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
             messages: out.messages,
             makespan_s: out.makespan.as_secs(),
             events: out.events,
+            shards: out.shards,
             sim_wall_s: out.sim_wall_s,
             wall_s: r0.elapsed().as_secs_f64(),
         }
@@ -663,6 +731,9 @@ pub struct AggRow {
     /// Mean event-loop throughput (events/s) over the cell's runs, so
     /// harness regressions are visible in normal sweep output.
     pub events_per_sec: f64,
+    /// Execution shards the cell's runs used (max over runs; 1 =
+    /// sequential driver).
+    pub shards: u32,
 }
 
 pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
@@ -718,6 +789,7 @@ pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
                 gwait_p99: percentile(&gw_p99s, 50.0),
                 gang_rejections: mean(&g_rejs),
                 events_per_sec: mean(&eps),
+                shards: rs.iter().map(|r| r.shards).max().unwrap_or(1),
             });
         }
     }
@@ -735,7 +807,7 @@ pub fn print_result(spec: &SweepSpec, result: &SweepResult) {
         result.threads
     );
     println!(
-        "{:<22} {:<9} {:>4} {:>10} {:>21} {:>10} {:>10} {:>10} {:>12} {:>11}",
+        "{:<22} {:<9} {:>4} {:>10} {:>21} {:>10} {:>10} {:>10} {:>12} {:>11} {:>6}",
         "scenario",
         "framework",
         "runs",
@@ -745,12 +817,13 @@ pub fn print_result(spec: &SweepSpec, result: &SweepResult) {
         "p95^95",
         "mean(s)",
         "incons/task",
-        "events/s"
+        "events/s",
+        "shards"
     );
     let rows = aggregate(spec, &result.records);
     for r in &rows {
         println!(
-            "{:<22} {:<9} {:>4} {:>10.4} [{:>9.4},{:>9.4}] {:>10.3} {:>10.3} {:>10.3} {:>12.5} {:>11.0}",
+            "{:<22} {:<9} {:>4} {:>10.4} [{:>9.4},{:>9.4}] {:>10.3} {:>10.3} {:>10.3} {:>12.5} {:>11.0} {:>6}",
             spec.scenarios[r.scenario].name,
             r.framework,
             r.runs,
@@ -761,7 +834,8 @@ pub fn print_result(spec: &SweepSpec, result: &SweepResult) {
             r.p95_p95,
             r.mean,
             r.inconsistency,
-            r.events_per_sec
+            r.events_per_sec,
+            r.shards
         );
     }
     if rows.iter().any(|r| r.constrained_n > 0) {
@@ -910,6 +984,54 @@ mod tests {
     }
 
     #[test]
+    fn scale100_preset_is_sharded_at_megascale() {
+        let net = NetModel::paper_default();
+        let scs = preset("scale100", &net).expect("scale100 preset");
+        assert_eq!(scs.len(), 1);
+        assert!(scs[0].workers >= 1_000_000, "~1M worker slots");
+        assert_eq!(scs[0].shards, 8);
+        // every other preset stays on the sequential driver
+        for name in ["scale10", "hetero", "gang"] {
+            for sc in preset(name, &net).unwrap() {
+                assert_eq!(sc.shards, 1, "{}", sc.name);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_scenario_runs_and_divides_thread_budget() {
+        // a sharded Megha cell through the sweep front door: the run
+        // reports its shard count and the across-run pool is divided
+        let sc = Scenario {
+            name: "shard-tiny".into(),
+            workload: WorkloadKind::Fixed { tasks_per_job: 8 },
+            workers: 300,
+            jobs: 20,
+            load: 0.6,
+            net: NetModel::paper_default(),
+            gm_fail_at: None,
+            hetero: None,
+            use_index: true,
+            shards: 2,
+        };
+        let spec = SweepSpec {
+            frameworks: vec!["megha".into(), "sparrow".into()],
+            scenarios: vec![sc],
+            seeds: 2,
+            base_seed: 9,
+            threads: 4,
+        };
+        let res = run_sweep(&spec);
+        assert_eq!(res.threads, 2, "4-thread budget / 2 shards");
+        for r in &res.records {
+            let want = if r.framework == "megha" { 2 } else { 1 };
+            assert_eq!(r.shards, want, "{}", r.framework);
+        }
+        let rows = aggregate(&spec, &res.records);
+        assert!(rows.iter().any(|r| r.shards == 2));
+    }
+
+    #[test]
     fn hetero_preset_resolves_and_constrains_traces() {
         let net = NetModel::paper_default();
         let scs = preset("hetero", &net).expect("hetero preset");
@@ -975,6 +1097,7 @@ mod tests {
                 demand: Demand::new(2, vec!["gpu".into()]),
             }),
             use_index: true,
+            shards: 1,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 7);
@@ -1005,6 +1128,7 @@ mod tests {
                 demand: Demand::attrs(&["gpu"]),
             }),
             use_index: true,
+            shards: 1,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 3);
@@ -1031,6 +1155,7 @@ mod tests {
             gm_fail_at: Some(2.0),
             hetero: None,
             use_index: true,
+            shards: 1,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 5);

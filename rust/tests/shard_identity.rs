@@ -1,0 +1,162 @@
+//! Differential harness for sharded execution (ISSUE 6 tentpole).
+//!
+//! The sharded driver (`sim::driver::run_sharded` + `sched::megha::
+//! sharded`) runs one simulation's event loop on N threads, one lane per
+//! shard, exchanging cross-shard events at epoch barriers. The identity
+//! gate mirrors `tests/index_oracle.rs`: **threaded and sequential
+//! execution of the same sharded schedule must be bit-identical** —
+//! same epochs, same exchange-log replay order, same per-shard RNG
+//! streams, so the thread interleaving can have no observable effect.
+//! (A different shard *count* is a different, equally valid schedule —
+//! like a different seed — so `shards=2` vs `shards=1` is *not* a
+//! bit-identity pair; `shards=1` itself must delegate to the classic
+//! sequential driver unchanged.)
+//!
+//! Grids: the `hetero` and `gang` presets (constraint + gang machinery
+//! under sharding) scaled to a >1000-worker DC so the topology has 8
+//! GMs / 10 LMs and shard counts 2/4/8 are all real (at the presets'
+//! native 600 workers the plan would clamp to the 3-GM topology), plus
+//! a GM-failure run on a gang workload (the crash path must replay
+//! identically whichever shard owns the failed GM).
+
+use megha::cluster::NodeCatalog;
+use megha::config::MeghaConfig;
+use megha::metrics::{
+    summarize_constraint_wait, summarize_gang_wait, summarize_jobs, RunOutcome,
+};
+use megha::sched::megha::{
+    simulate, simulate_sharded, simulate_sharded_reference, FailurePlan,
+};
+use megha::sim::time::SimTime;
+use megha::sweep;
+use megha::workload::synthetic::synthetic_fixed_constrained;
+use megha::workload::Demand;
+
+/// The Megha config `sweep::run_framework_hetero` would build for this
+/// scenario, with an explicit shard count.
+fn megha_cfg(sc: &sweep::Scenario, seed: u64, shards: usize) -> MeghaConfig {
+    let mut cfg = MeghaConfig::for_workers(sc.workers);
+    cfg.sim.seed = seed;
+    cfg.sim.net = sc.net.clone();
+    cfg.sim.use_index = sc.use_index;
+    cfg.sim.shards = shards;
+    if let Some(h) = &sc.hetero {
+        cfg.catalog = h.catalog(cfg.spec.n_workers());
+    }
+    cfg
+}
+
+/// Field-by-field equality of two outcomes, down to per-job records
+/// (floats are derived deterministically, so exact comparison is
+/// correct).
+fn assert_outcomes_identical(tag: &str, a: &RunOutcome, b: &RunOutcome) {
+    assert_eq!(a.makespan, b.makespan, "{tag}: makespan");
+    assert_eq!(a.tasks, b.tasks, "{tag}: tasks");
+    assert_eq!(a.messages, b.messages, "{tag}: messages");
+    assert_eq!(a.decisions, b.decisions, "{tag}: decisions");
+    assert_eq!(a.inconsistencies, b.inconsistencies, "{tag}: inconsistencies");
+    assert_eq!(a.events, b.events, "{tag}: events");
+    assert_eq!(a.shards, b.shards, "{tag}: shard count");
+    assert_eq!(
+        a.constraint_rejections, b.constraint_rejections,
+        "{tag}: constraint rejections"
+    );
+    assert_eq!(a.gang_rejections, b.gang_rejections, "{tag}: gang rejections");
+    let (sa, sb) = (summarize_jobs(&a.jobs), summarize_jobs(&b.jobs));
+    assert_eq!(sa.median, sb.median, "{tag}: delay median");
+    assert_eq!(sa.p95, sb.p95, "{tag}: delay p95");
+    assert_eq!(sa.mean, sb.mean, "{tag}: delay mean");
+    let (ca, cb) = (
+        summarize_constraint_wait(&a.jobs),
+        summarize_constraint_wait(&b.jobs),
+    );
+    assert_eq!(ca.p99, cb.p99, "{tag}: constraint_wait p99");
+    let (ga, gb) = (summarize_gang_wait(&a.jobs), summarize_gang_wait(&b.jobs));
+    assert_eq!(ga.p99, gb.p99, "{tag}: gang_wait p99");
+    assert_eq!(a.jobs.len(), b.jobs.len(), "{tag}: job count");
+    for (x, y) in a.jobs.iter().zip(b.jobs.iter()) {
+        assert_eq!(x.job_id, y.job_id, "{tag}: job order");
+        assert_eq!(x.complete, y.complete, "{tag}: job {} completion", x.job_id);
+    }
+}
+
+/// Preset cells rescaled onto the 8-GM/10-LM topology with CI-sized job
+/// counts (identity is load-shape-independent).
+fn scaled_preset(name: &str) -> Vec<sweep::Scenario> {
+    sweep::preset(name, &megha::sim::net::NetModel::paper_default())
+        .expect("preset resolves")
+        .into_iter()
+        .map(|mut sc| {
+            sc.workers = 2_000;
+            sc.jobs = 80;
+            sc
+        })
+        .collect()
+}
+
+#[test]
+fn shard_threaded_equals_sequential_reference_on_preset_grids() {
+    for preset_name in ["hetero", "gang"] {
+        for (si, sc) in scaled_preset(preset_name).into_iter().enumerate() {
+            let seed = sweep::run_seed(5, si as u64, 0);
+            let trace = sc.make_trace(seed);
+            for shards in [2usize, 4, 8] {
+                let cfg = megha_cfg(&sc, seed, shards);
+                let a = simulate_sharded(&cfg, &trace, None);
+                let b = simulate_sharded_reference(&cfg, &trace, None);
+                let tag = format!("{preset_name}/{}/shards={shards}", sc.name);
+                assert_eq!(a.shards, shards as u32, "{tag}: ran sharded");
+                assert_outcomes_identical(&tag, &a, &b);
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_count_one_delegates_to_the_classic_driver() {
+    // one hetero cell and one gang cell: shards=1 must be the sequential
+    // driver verbatim, not a one-lane epoch loop
+    for preset_name in ["hetero", "gang"] {
+        let sc = scaled_preset(preset_name).remove(0);
+        let seed = sweep::run_seed(7, 0, 0);
+        let trace = sc.make_trace(seed);
+        let cfg = megha_cfg(&sc, seed, 1);
+        let a = simulate_sharded(&cfg, &trace, None);
+        let b = simulate(&cfg, &trace);
+        assert_eq!(a.shards, 1, "{preset_name}: sequential path");
+        assert_outcomes_identical(&format!("{preset_name}/shards=1"), &a, &b);
+    }
+}
+
+#[test]
+fn shard_identity_survives_gm_failure_with_gangs() {
+    // GmFail lands on whichever shard owns GM 0; the reset and the
+    // recovery traffic must replay identically threaded vs sequential
+    let mut base = MeghaConfig::for_workers(2_000); // 8 GMs / 10 LMs
+    base.sim.seed = 13;
+    base.catalog = NodeCatalog::bimodal_gpu(base.spec.n_workers(), 0.25);
+    let trace = synthetic_fixed_constrained(
+        15,
+        30,
+        1.0,
+        0.85,
+        base.spec.n_workers(),
+        14,
+        0.3,
+        Demand::new(2, vec!["gpu".into()]),
+    );
+    let failure = Some(FailurePlan {
+        at: SimTime::from_secs(4.0),
+        gm: 0,
+    });
+    for shards in [2usize, 4, 8] {
+        let mut cfg = base.clone();
+        cfg.sim.shards = shards;
+        let a = simulate_sharded(&cfg, &trace, failure);
+        let b = simulate_sharded_reference(&cfg, &trace, failure);
+        let tag = format!("gm-fail/shards={shards}");
+        assert_eq!(a.shards, shards as u32, "{tag}: ran sharded");
+        assert_outcomes_identical(&tag, &a, &b);
+        assert_eq!(a.jobs.len(), 30, "{tag}: lost jobs");
+    }
+}
