@@ -10,9 +10,9 @@
 //!
 //! Run with `cargo bench` (or `cargo bench -- fig3 match` to filter).
 //! Flags: `--quick` shrinks the per-bench budget (the CI smoke mode);
-//! `--json` additionally writes `BENCH_PR6.json` (per-bench median
+//! `--json` additionally writes `BENCH_PR7.json` (per-bench median
 //! ns/unit, experiment totals in seconds) at the repo root — the
-//! current PR's perf artifact (`BENCH_PR2.json` … `BENCH_PR5.json` are
+//! current PR's perf artifact (`BENCH_PR2.json` … `BENCH_PR6.json` are
 //! the frozen earlier snapshots, still pending hardware regeneration).
 
 use std::cell::RefCell;
@@ -93,7 +93,7 @@ impl Bench {
         self.total_results.borrow_mut().push((name.to_string(), total));
     }
 
-    /// Write `BENCH_PR6.json` at the repo root (next to `rust/`),
+    /// Write `BENCH_PR7.json` at the repo root (next to `rust/`),
     /// merging over any existing file so successive filtered runs
     /// (`-- queue --json` then `-- scale10 --json`) accumulate instead
     /// of clobbering each other. A fresh run of a bench name replaces
@@ -110,7 +110,7 @@ impl Bench {
             .ok()
             .and_then(|p| p.parent().map(|q| q.to_path_buf()))
             .unwrap_or_else(|| std::path::PathBuf::from("."));
-        let path = root.join("BENCH_PR6.json");
+        let path = root.join("BENCH_PR7.json");
         let mut bench: BTreeMap<String, Json> = BTreeMap::new();
         let mut totals: BTreeMap<String, Json> = BTreeMap::new();
         let mut measured = false;
@@ -366,12 +366,13 @@ fn bench_scale10(b: &Bench) {
     println!("bench sweep/scale10_total                        {total:>10.3} s total");
 }
 
-/// The ISSUE-6 sharded-execution family: one Megha run at shard counts
-/// 1/2/4/8 (same trace; each shard count is its own deterministic
-/// schedule), reporting events/s scaling of the threaded driver, plus
-/// the sequential reference of the widest schedule so the epoch/barrier
-/// machinery's single-thread overhead is visible. Heavyweight, so
-/// opt-in: `cargo bench -- shard`.
+/// The ISSUE-6/7 sharded-execution family: Megha and Sparrow runs at
+/// shard counts 1/2/4/8 (same trace; each shard count is its own
+/// deterministic schedule), reporting events/s scaling of the threaded
+/// driver, the sequential reference of the widest schedule so the
+/// epoch/barrier machinery's single-thread overhead is visible, and a
+/// fast-forward on/off pair quantifying what the idle-epoch skip is
+/// worth. Heavyweight, so opt-in: `cargo bench -- shard`.
 fn bench_shard(b: &Bench) {
     if !b.explicitly_enabled("shard") {
         return;
@@ -410,6 +411,69 @@ fn bench_shard(b: &Bench) {
         b.total_results
             .borrow_mut()
             .push(("shard/megha_yahoo2k_s8_reference".into(), total));
+    }
+    // Sparrow on the same trace: probe fan-out is the cross-shard
+    // traffic, so this is the stress case for the exchange matrix
+    for &shards in &[1usize, 2, 4, 8] {
+        let mut cfg = megha::config::SparrowConfig::for_workers(20_000);
+        cfg.sim.seed = 11;
+        cfg.sim.shards = shards;
+        let t0 = Instant::now();
+        let out = if shards > 1 {
+            sched::sparrow_sharded::simulate_sharded(&cfg, &trace)
+        } else {
+            sched::sparrow::simulate(&cfg, &trace)
+        };
+        let total = t0.elapsed().as_secs_f64();
+        println!(
+            "bench shard/sparrow_yahoo2k_s{shards:<2}                   {:>10.3} s  {:>12.0} events/s  ({} events, {} shards)",
+            total,
+            out.events_per_sec(),
+            out.events,
+            out.shards
+        );
+        b.total_results
+            .borrow_mut()
+            .push((format!("shard/sparrow_yahoo2k_s{shards}"), total));
+    }
+    {
+        let mut cfg = megha::config::SparrowConfig::for_workers(20_000);
+        cfg.sim.seed = 11;
+        cfg.sim.shards = 8;
+        let t0 = Instant::now();
+        let out = sched::sparrow_sharded::simulate_sharded_reference(&cfg, &trace);
+        let total = t0.elapsed().as_secs_f64();
+        println!(
+            "bench shard/sparrow_yahoo2k_s8_reference         {:>10.3} s  {:>12.0} events/s  (sequential lanes)",
+            total,
+            out.events_per_sec()
+        );
+        b.total_results
+            .borrow_mut()
+            .push(("shard/sparrow_yahoo2k_s8_reference".into(), total));
+    }
+    // fast-forward on/off: a sparse trace where idle-epoch skipping is
+    // the dominant cost difference (bit-identical outcomes, see
+    // tests/shard_identity.rs)
+    let sparse = yahoo_like(400, 20_000, 0.25, 13);
+    for ff in [true, false] {
+        let mut cfg = megha::config::SparrowConfig::for_workers(20_000);
+        cfg.sim.seed = 13;
+        cfg.sim.shards = 8;
+        cfg.sim.fast_forward = ff;
+        let t0 = Instant::now();
+        let out = sched::sparrow_sharded::simulate_sharded(&cfg, &sparse);
+        let total = t0.elapsed().as_secs_f64();
+        let tag = if ff { "ff_on " } else { "ff_off" };
+        println!(
+            "bench shard/sparrow_sparse_s8_{tag}             {:>10.3} s  {:>12.0} events/s  ({} events)",
+            total,
+            out.events_per_sec(),
+            out.events
+        );
+        b.total_results
+            .borrow_mut()
+            .push((format!("shard/sparrow_sparse_s8_{}", tag.trim()), total));
     }
 }
 

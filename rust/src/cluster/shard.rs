@@ -41,12 +41,23 @@ impl ShardPlan {
     /// is clamped to `[1, min(n_gm, n_lm)]`; callers that need to know
     /// the effective count read [`shards`](Self::shards) back.
     pub fn new(spec: &ClusterSpec, shards: usize) -> ShardPlan {
-        let k = shards.clamp(1, spec.n_gm.min(spec.n_lm));
+        ShardPlan::for_axes(spec.n_gm, spec.n_lm, shards)
+    }
+
+    /// Plan over two generic axes: a *scheduler-side* axis of
+    /// `n_sched` entities (Megha: GMs; Sparrow: schedulers) and a
+    /// *worker-side* axis of `n_nodes` entities (Megha: LMs; Sparrow:
+    /// catalog nodes — cutting at node boundaries is what keeps every
+    /// gang's co-resident slots on one shard). The gm/lm accessor names
+    /// below address the scheduler-side/worker-side axis respectively
+    /// regardless of which architecture the plan serves.
+    pub fn for_axes(n_sched: usize, n_nodes: usize, shards: usize) -> ShardPlan {
+        let k = shards.clamp(1, n_sched.min(n_nodes));
         ShardPlan {
-            n_gm: spec.n_gm,
-            n_lm: spec.n_lm,
-            gm_lo: cuts(spec.n_gm, k),
-            lm_lo: cuts(spec.n_lm, k),
+            n_gm: n_sched,
+            n_lm: n_nodes,
+            gm_lo: cuts(n_sched, k),
+            lm_lo: cuts(n_nodes, k),
         }
     }
 
@@ -102,6 +113,15 @@ impl<T> ShardedState<T> {
         }
         blocks.reverse();
         ShardedState { blocks }
+    }
+
+    /// Split `full` by explicit CSR cut points (`bounds[0] = 0`,
+    /// `bounds.last() = full.len()`). For axes whose blocks are derived
+    /// from a plan rather than being a plan axis themselves — e.g.
+    /// Sparrow's worker fleet, cut at the slot starts of the plan's node
+    /// blocks.
+    pub fn by_bounds(full: Vec<T>, bounds: &[usize]) -> ShardedState<T> {
+        ShardedState::split(full, bounds)
     }
 
     /// Cut a per-GM vector by `plan`'s GM blocks.

@@ -29,9 +29,19 @@ pub struct SimParams {
     /// sequential driver. N > 1 partitions the cluster state into N
     /// shards and drains events in network-lookahead epochs, either on N
     /// threads or serially — the two are bit-identical by construction
-    /// (`tests/shard_identity.rs`). Megha only; the probe baselines fall
-    /// back to 1.
+    /// (`tests/shard_identity.rs`). Megha and Sparrow shard; Eagle and
+    /// Pigeon fall back to 1 with [`crate::metrics::ShardFallback`]
+    /// recorded on the outcome.
     pub shards: usize,
+    /// Idle-epoch fast-forward for sharded runs (default `true`): at
+    /// each barrier the next epoch starts at the *global minimum*
+    /// next-event time instead of tiling the clock in contiguous
+    /// `window`-wide steps, so sparse stretches cost one epoch instead
+    /// of thousands. Computed identically in threaded and sequential
+    /// modes; on constant-delay networks the on/off schedules are
+    /// bit-identical too (`tests/shard_identity.rs` pins this). `false`
+    /// is the dense-grid debug/reference mode.
+    pub fast_forward: bool,
 }
 
 impl Default for SimParams {
@@ -42,6 +52,7 @@ impl Default for SimParams {
             seed: 0,
             use_index: true,
             shards: 1,
+            fast_forward: true,
         }
     }
 }

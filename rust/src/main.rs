@@ -5,7 +5,7 @@
 //! megha simulate --scheduler megha|sparrow|eagle|pigeon
 //!                (--trace FILE | --workload yahoo|google|fixed --jobs N)
 //!                [--workers N] [--load X] [--seed N] [--xla] [--no-index]
-//!                [--shards N]
+//!                [--shards N] [--no-fast-forward]
 //!                [--hetero uniform|bimodal-gpu|rack-tiered] [--scarcity X]
 //!                [--constrained-frac X] [--require a,b] [--gang K]
 //! megha prototype --scheduler megha|pigeon [--jobs N] [--time-scale X] [--xla]
@@ -14,7 +14,7 @@
 //!             [--workload yahoo|google|fixed] [--jobs N] [--tasks-per-job N]
 //!             [--net constant|jittered] [--net-ms X] [--jitter-ms X]
 //!             [--fail-gm-at T] [--threads K] [--preset NAME] [--no-index]
-//!             [--shards N] [--smoke]
+//!             [--shards N] [--no-fast-forward] [--smoke]
 //!             [--hetero PROFILE] [--scarcity X] [--constrained-frac X]
 //!             [--require a,b] [--gang K]
 //! megha trace gen --workload yahoo|google|fixed --jobs N --workers N
@@ -31,11 +31,14 @@
 //! `--no-index` routes all bitmap queries onto the flat scans instead of
 //! the occupancy index (debug/A-B mode; results are bit-identical).
 //!
-//! `--shards N` runs each Megha simulation sharded across N threads
-//! (deterministic: threaded and sequential execution of the same sharded
-//! schedule are bit-identical; baselines always run sequentially). The
-//! sweep divides its across-run thread budget by N. `--smoke` shrinks
-//! every sweep scenario ~10x (workers and jobs) for CI-sized runs, e.g.
+//! `--shards N` runs each Megha or Sparrow simulation sharded across N
+//! threads (deterministic: threaded and sequential execution of the same
+//! sharded schedule are bit-identical; Eagle and Pigeon fall back to the
+//! sequential driver with the reason recorded and warned). The sweep
+//! divides its across-run thread budget by N. `--no-fast-forward`
+//! disables the sharded driver's idle-epoch fast-forward, tiling epochs
+//! densely instead (debug/A-B mode). `--smoke` shrinks every sweep
+//! scenario ~10x (workers and jobs) for CI-sized runs, e.g.
 //! `megha sweep --preset scale100 --smoke`.
 
 use anyhow::{bail, Context, Result};
@@ -55,7 +58,7 @@ use megha::util::args::Args;
 use megha::workload::constraints::{apply_constraints, valid_label, CONSTRAIN_SEED};
 use megha::workload::{synthetic, trace as tracefile, Demand, JobClass, Trace};
 
-const FLAGS: &[&str] = &["xla", "help", "short-only", "no-index", "smoke"];
+const FLAGS: &[&str] = &["xla", "help", "short-only", "no-index", "no-fast-forward", "smoke"];
 
 fn main() {
     let args = Args::from_env(FLAGS);
@@ -295,10 +298,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             hetero.as_ref(),
             !args.flag("no-index"),
             args.usize("shards", 1),
+            !args.flag("no-fast-forward"),
             &trace,
         )
     };
     let _ = RustMatchEngine; // default engine, referenced for docs
+    if let Some(fb) = out.shard_fallback {
+        eprintln!(
+            "warning: --shards {} ran unsharded: {}",
+            args.usize("shards", 1),
+            fb.reason()
+        );
+    }
     print_outcome(&scheduler, &out, args.flag("short-only"));
     Ok(())
 }
@@ -413,6 +424,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         scenarios
             .into_iter()
             .map(|sc: sweep::Scenario| sc.with_shards(n))
+            .collect()
+    } else {
+        scenarios
+    };
+    let scenarios: Vec<sweep::Scenario> = if args.flag("no-fast-forward") {
+        scenarios
+            .into_iter()
+            .map(|mut sc: sweep::Scenario| {
+                sc.fast_forward = false;
+                sc
+            })
             .collect()
     } else {
         scenarios

@@ -67,6 +67,33 @@ impl DelayBreakdown {
     }
 }
 
+/// Why a run requested with `--shards N > 1` executed on the classic
+/// sequential driver instead of `sim::driver::run_sharded`. Recorded in
+/// [`RunOutcome::shard_fallback`] so sweep rows and the CLI can surface
+/// the clamp instead of silently printing `shards = 1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardFallback {
+    /// The shard plan clamped the request to one shard (the federation /
+    /// scheduler-worker topology is too small to cut).
+    PlanClamped,
+    /// `NetModel::min_delay() == 0` (e.g. `Jittered { base: 0 }`): no
+    /// positive delay floor means no conservative-lookahead window.
+    ZeroWindow,
+    /// The scheduler has no sharded port yet (Eagle, Pigeon).
+    Unsupported,
+}
+
+impl ShardFallback {
+    /// Short human-readable reason for tables and warnings.
+    pub fn reason(self) -> &'static str {
+        match self {
+            ShardFallback::PlanClamped => "plan clamped to 1 shard (topology too small)",
+            ShardFallback::ZeroWindow => "net model has no delay floor (no lookahead window)",
+            ShardFallback::Unsupported => "scheduler has no sharded port",
+        }
+    }
+}
+
 /// Everything a scheduler run reports.
 #[derive(Clone, Debug, Default)]
 pub struct RunOutcome {
@@ -104,6 +131,10 @@ pub struct RunOutcome {
     /// Execution shards the run used (1 = sequential driver; 0 for
     /// paths with no event loop, e.g. the TCP prototype).
     pub shards: u32,
+    /// `Some` when more than one shard was requested but the run fell
+    /// back to the classic sequential driver — the effective count is
+    /// [`shards`](Self::shards) (1), this records *why*.
+    pub shard_fallback: Option<ShardFallback>,
 }
 
 impl RunOutcome {

@@ -5,6 +5,7 @@
 
 use std::collections::VecDeque;
 
+use crate::cluster::NodeCatalog;
 use crate::metrics::{JobRecord, RunOutcome};
 use crate::sim::time::SimTime;
 use crate::workload::{Job, Trace};
@@ -41,6 +42,40 @@ impl<Q> ProbeWorker<Q> {
             })
             .collect()
     }
+}
+
+/// Idle co-residents of `worker` on its node, in slot order: the
+/// candidates a gang probe can bind alongside the probed slot. This is
+/// the per-node occupancy a probe-based scheduler *can* discover — the
+/// probed node's own state, nothing beyond it. Shared by Sparrow and
+/// Eagle's short-job path, which probes exactly like Sparrow.
+///
+/// `workers` is an offset-carrying view of a contiguous worker block:
+/// `workers[i]` is global worker `lo + i`. Unsharded schedulers pass the
+/// full fleet with `lo = 0`; the sharded driver hands each shard its
+/// block plus the block's global start. Because shard cuts fall on node
+/// boundaries, a probed node's whole slot range is always in-block.
+pub fn idle_coresidents<Q>(
+    workers: &[ProbeWorker<Q>],
+    lo: usize,
+    catalog: &NodeCatalog,
+    worker: u32,
+    k: usize,
+    out: &mut Vec<u32>,
+) -> bool {
+    out.clear();
+    out.push(worker);
+    let (nlo, nhi) = catalog.node_range(catalog.node_of(worker as usize));
+    debug_assert!(nlo >= lo && nhi <= lo + workers.len(), "node straddles the block");
+    for w in nlo..nhi {
+        if out.len() >= k {
+            break;
+        }
+        if w as u32 != worker && workers[w - lo].state == WState::Idle {
+            out.push(w as u32);
+        }
+    }
+    out.len() >= k
 }
 
 /// Late-binding cursor over one job's tasks: tracks the next unlaunched

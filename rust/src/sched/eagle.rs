@@ -389,8 +389,9 @@ impl Scheduler for Eagle<'_> {
                             // blind on a partial fit (as in Sparrow)
                             let k = rd.gang_width() as usize;
                             let mut members: Vec<u32> = ctx.pool.take();
-                            if !crate::sched::sparrow::idle_coresidents(
+                            if !crate::sched::common::idle_coresidents(
                                 &self.workers,
+                                0,
                                 &self.cfg.catalog,
                                 worker,
                                 k,

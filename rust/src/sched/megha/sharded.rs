@@ -15,8 +15,9 @@
 //! (`tests/shard_identity.rs`); a different shard *count* is a different
 //! (equally valid) schedule, like a different seed — each shard draws
 //! from its own RNG stream, so `shards=2` is not comparable bit-for-bit
-//! with `shards=1`. `shards=1` delegates to the classic sequential
-//! driver outright.
+//! with `shards=1`. `shards=1` and zero-lookahead network models
+//! delegate to the classic sequential driver, with the reason recorded
+//! on [`RunOutcome::shard_fallback`].
 
 use crate::cluster::hetero::ResolvedDemand;
 use crate::cluster::shard::{ShardPlan, ShardedState};
@@ -145,8 +146,10 @@ fn run_impl(
 ) -> RunOutcome {
     let spec = cfg.spec;
     let plan = ShardPlan::new(&spec, cfg.sim.shards);
-    if plan.shards() == 1 || cfg.sim.net.min_delay() == SimTime::ZERO {
-        return engine::simulate_with(cfg, trace, &mut RustMatchEngine, failure);
+    if let Some(reason) = driver::shard_fallback(plan.shards(), &cfg.sim) {
+        let mut out = engine::simulate_with(cfg, trace, &mut RustMatchEngine, failure);
+        out.shard_fallback = Some(reason);
+        return out;
     }
     if let Some(f) = failure {
         assert!(f.gm < spec.n_gm);

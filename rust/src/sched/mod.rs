@@ -4,7 +4,8 @@
 //!
 //! * [`megha`] — the paper's contribution: federated GM/LM scheduling on
 //!   an eventually-consistent global state (§3).
-//! * [`sparrow`] — distributed batch sampling + late binding (§2.2.2).
+//! * [`sparrow`] — distributed batch sampling + late binding (§2.2.2);
+//!   [`sparrow_sharded`] runs the same handlers under the sharded driver.
 //! * [`eagle`] — hybrid centralized/distributed with succinct state
 //!   sharing and sticky batch probing (§2.2.3).
 //! * [`pigeon`] — federated distributors + group coordinators with
@@ -17,3 +18,4 @@ pub mod ideal;
 pub mod megha;
 pub mod pigeon;
 pub mod sparrow;
+pub mod sparrow_sharded;

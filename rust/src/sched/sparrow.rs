@@ -9,13 +9,29 @@
 //! which is exactly the pathology (random probes queue behind busy
 //! workers while free workers exist elsewhere) that Megha removes.
 //!
-//! Runs on the shared [`crate::sim::driver`]; worker state and the
-//! late-binding cursor come from [`crate::sched::common`].
+//! Runs on the shared [`crate::sim::driver`]; worker state, the
+//! late-binding cursor, and the per-node gang discovery
+//! ([`idle_coresidents`]) come from [`crate::sched::common`]. The handler
+//! body is written once over an offset-carrying [`SparrowView`]: the
+//! unsharded [`Scheduler`] impl runs it over the full fleet
+//! (`worker_lo = 0`), and [`crate::sched::sparrow_sharded`] runs the
+//! same code over per-shard worker blocks under
+//! [`crate::sim::driver::run_sharded`].
+//!
+//! Shard-safety shapes the gang protocol: the scheduler owns cursors and
+//! job bookkeeping, workers own worker state, and every message between
+//! the two rides the network. A gang bind therefore cannot inspect (or
+//! reserve) co-resident slots at the scheduler the way a single-state
+//! simulation could — the scheduler binds the task *optimistically* and
+//! sends [`Ev::GangTry`]; the probed node seats the gang against its
+//! live occupancy or refuses with [`Ev::GangNack`], returning the task's
+//! duration for re-binding. Exactly one replacement probe per NACK keeps
+//! tasks from stranding.
 
 use crate::cluster::hetero::{self, ResolvedDemand};
 use crate::config::SparrowConfig;
 use crate::metrics::RunOutcome;
-use crate::sched::common::{ProbeWorker, TaskCursor, WState};
+use crate::sched::common::{idle_coresidents, ProbeWorker, TaskCursor, WState};
 use crate::sim::driver::{self, Scheduler, SimCtx};
 use crate::sim::time::SimTime;
 use crate::workload::Trace;
@@ -27,10 +43,15 @@ pub enum Ev {
     Ready { job: u32, worker: u32 },
     /// scheduler → worker: concrete task (Some) or no-op (None).
     Launch { worker: u32, job: u32, dur: Option<SimTime> },
-    /// scheduler → node: start a gang task on `workers` (co-resident
-    /// slots of one node; `workers[0]` is the probed anchor, the rest
-    /// were idle co-residents reserved at bind time).
-    GangLaunch { job: u32, workers: Vec<u32>, dur: SimTime },
+    /// scheduler → node (via the probed anchor `worker`): try to seat a
+    /// `k`-wide gang task. The scheduler binds optimistically — only the
+    /// node agent sees live occupancy, so the node either starts the
+    /// gang on the anchor plus idle co-residents or answers
+    /// [`Ev::GangNack`].
+    GangTry { worker: u32, job: u32, dur: SimTime, k: u32 },
+    /// node → scheduler: the probed node could not seat the gang; the
+    /// task's duration rides back for re-binding.
+    GangNack { job: u32, dur: SimTime },
     /// task execution finished at the worker.
     Finish { worker: u32, job: u32 },
     /// gang execution finished: all member slots free atomically.
@@ -52,66 +73,262 @@ pub struct Sparrow<'a> {
     cfg: &'a SparrowConfig,
     workers: Vec<ProbeWorker<u32>>,
     jobs: Vec<TaskCursor>,
+    /// Per-job gang durations returned by [`Ev::GangNack`], re-bound
+    /// (LIFO) before the cursor advances further.
+    returned: Vec<Vec<SimTime>>,
     /// Per-job demands resolved against `cfg.catalog` at setup.
     demands: Vec<Option<ResolvedDemand>>,
 }
 
 impl<'a> Sparrow<'a> {
     pub fn new(cfg: &'a SparrowConfig, trace: &Trace) -> Sparrow<'a> {
-        assert_eq!(
-            cfg.catalog.len(),
-            cfg.workers,
-            "catalog covers {} slots but the DC has {} workers",
-            cfg.catalog.len(),
-            cfg.workers
-        );
-        let demands = hetero::resolve_trace(&cfg.catalog, trace);
-        // gang feasibility: probes can land anywhere, so a gang demand
-        // just needs one node with enough matching slots somewhere
-        for (i, rd) in demands.iter().enumerate() {
-            if let Some(rd) = rd {
-                if rd.is_gang() {
-                    assert!(
-                        cfg.catalog.gangs_possible(0, cfg.workers, rd) > 0,
-                        "job {i}: gang of {} fits on no node of the catalog",
-                        rd.gang_width()
-                    );
-                }
-            }
-        }
+        let demands = resolve_and_check(cfg, trace);
         Sparrow {
             cfg,
             workers: ProbeWorker::fleet(cfg.workers),
             jobs: TaskCursor::for_trace(trace),
+            returned: vec![Vec::new(); trace.n_jobs()],
             demands,
+        }
+    }
+
+    fn view(&mut self) -> SparrowView<'_> {
+        SparrowView {
+            cfg: self.cfg,
+            workers: &mut self.workers,
+            worker_lo: 0,
+            jobs: &mut self.jobs,
+            returned: &mut self.returned,
+            demands: &self.demands,
         }
     }
 }
 
-/// Idle co-residents of `worker` on its node, in slot order: the
-/// candidates a gang probe can bind alongside the probed slot. This is
-/// the per-node occupancy a probe-based scheduler *can* discover — the
-/// probed node's own state, nothing beyond it. (Shared with Eagle's
-/// short-job path, which probes exactly like Sparrow.)
-pub(crate) fn idle_coresidents<Q>(
-    workers: &[ProbeWorker<Q>],
-    catalog: &crate::cluster::NodeCatalog,
-    worker: u32,
-    k: usize,
-    out: &mut Vec<u32>,
-) -> bool {
-    out.clear();
-    out.push(worker);
-    let (nlo, nhi) = catalog.node_range(catalog.node_of(worker as usize));
-    for w in nlo..nhi {
-        if out.len() >= k {
-            break;
-        }
-        if w as u32 != worker && workers[w].state == WState::Idle {
-            out.push(w as u32);
+/// Resolve the trace's demands against the catalog and assert the run is
+/// feasible. Shared by the unsharded and sharded entry points.
+pub(crate) fn resolve_and_check(cfg: &SparrowConfig, trace: &Trace) -> Vec<Option<ResolvedDemand>> {
+    assert_eq!(
+        cfg.catalog.len(),
+        cfg.workers,
+        "catalog covers {} slots but the DC has {} workers",
+        cfg.catalog.len(),
+        cfg.workers
+    );
+    let demands = hetero::resolve_trace(&cfg.catalog, trace);
+    // gang feasibility: probes can land anywhere, so a gang demand
+    // just needs one node with enough matching slots somewhere
+    for (i, rd) in demands.iter().enumerate() {
+        if let Some(rd) = rd {
+            if rd.is_gang() {
+                assert!(
+                    cfg.catalog.gangs_possible(0, cfg.workers, rd) > 0,
+                    "job {i}: gang of {} fits on no node of the catalog",
+                    rd.gang_width()
+                );
+            }
         }
     }
-    out.len() >= k
+    demands
+}
+
+/// The offset-carrying execution view: one contiguous worker block plus
+/// full-width scheduler-side state (cursors, NACK-returned durations,
+/// resolved demands). `workers[i]` is global worker `worker_lo + i`; the
+/// unsharded scheduler is the `worker_lo = 0` special case over the
+/// whole fleet. All per-event logic lives in [`handle_arrival`] /
+/// [`handle_event`] over this view, so sharded and unsharded execution
+/// cannot diverge in per-event behavior.
+pub(crate) struct SparrowView<'v> {
+    pub cfg: &'v SparrowConfig,
+    pub workers: &'v mut [ProbeWorker<u32>],
+    pub worker_lo: usize,
+    pub jobs: &'v mut [TaskCursor],
+    pub returned: &'v mut [Vec<SimTime>],
+    pub demands: &'v [Option<ResolvedDemand>],
+}
+
+/// Job arrival at its owning scheduler: batch sampling, `d·n` probes.
+pub(crate) fn handle_arrival(v: &mut SparrowView<'_>, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
+    // d distinct workers per task, duplicates allowed across tasks (a
+    // worker may hold several reservations for one job); the probe
+    // vector is pooled so sampling is allocation-free
+    let n_workers = v.cfg.workers;
+    let n = v.jobs[jidx as usize].n_tasks as usize;
+    let d_per_task = v.cfg.probe_ratio.min(n_workers);
+    let mut probes: Vec<usize> = ctx.pool.take();
+    for _ in 0..n {
+        ctx.rng.sample_distinct_into(n_workers, d_per_task, &mut probes);
+        for &w in &probes {
+            ctx.send(Ev::Reserve {
+                worker: w as u32,
+                job: jidx,
+            });
+        }
+    }
+    ctx.pool.give(probes);
+}
+
+/// The single Sparrow event handler, shared by every execution mode.
+pub(crate) fn handle_event(v: &mut SparrowView<'_>, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
+    match ev {
+        Ev::Reserve { worker, job } => {
+            let w = &mut v.workers[worker as usize - v.worker_lo];
+            w.queue.push_back(job);
+            if w.state == WState::Idle {
+                advance_worker(worker, v.workers, v.worker_lo, ctx);
+            }
+        }
+        Ev::Ready { job, worker } => {
+            ctx.out.messages += 1;
+            let j = job as usize;
+            if let Some(rd) = v.demands[j].as_ref() {
+                // a fully-bound job's leftover reservations are NOT
+                // constraint misses — they fall through to the normal
+                // proactive-cancellation no-op below (a gang job still
+                // has work while NACK-returned durations await
+                // re-binding, even with the cursor exhausted)
+                if !(v.jobs[j].exhausted() && v.returned[j].is_empty()) {
+                    if !v.cfg.catalog.slot_matches(worker as usize, rd) {
+                        // constraint verified at the probed node — and
+                        // failed: no-op this worker, re-probe blind (the
+                        // sampler cannot steer toward matching nodes)
+                        ctx.out.constraint_rejections += 1;
+                        ctx.constraint_block(job);
+                        ctx.send(Ev::Launch { worker, job, dur: None });
+                        let w = ctx.rng.below(v.cfg.workers) as u32;
+                        ctx.send(Ev::Reserve { worker: w, job });
+                        return;
+                    }
+                    if rd.is_gang() {
+                        // the scheduler cannot see the probed node's
+                        // occupancy (it lives across the network, maybe
+                        // on another shard): bind optimistically and let
+                        // the node agent seat or refuse the gang
+                        let dur = v.returned[j].pop().unwrap_or_else(|| {
+                            v.jobs[j]
+                                .bind_next(&ctx.trace.jobs[j])
+                                .expect("gang bind after exhaustion check")
+                                .1
+                        });
+                        ctx.out.decisions += 1;
+                        ctx.constraint_unblock(job);
+                        ctx.gang_unblock(job);
+                        ctx.send(Ev::GangTry {
+                            worker,
+                            job,
+                            dur,
+                            k: rd.gang_width(),
+                        });
+                        return;
+                    }
+                }
+            }
+            let dur = match v.jobs[j].bind_next(&ctx.trace.jobs[j]) {
+                Some((_, dur)) => {
+                    ctx.out.decisions += 1;
+                    if v.demands[j].is_some() {
+                        ctx.constraint_unblock(job);
+                    }
+                    Some(dur)
+                }
+                None => None, // proactive cancellation: all tasks already bound
+            };
+            ctx.send(Ev::Launch { worker, job, dur });
+        }
+        Ev::GangTry { worker, job, dur, k } => {
+            let lw = worker as usize - v.worker_lo;
+            debug_assert!(v.workers[lw].state == WState::Waiting);
+            // gang: the probe discovers *this node's* occupancy only —
+            // the probed anchor plus enough idle co-residents, or a
+            // partial fit that forces a blind re-probe (the structural
+            // asymmetry vs Megha's one-shot global placement)
+            let mut members: Vec<u32> = ctx.pool.take();
+            if idle_coresidents(
+                v.workers,
+                v.worker_lo,
+                &v.cfg.catalog,
+                worker,
+                k as usize,
+                &mut members,
+            ) {
+                for &w in members.iter() {
+                    v.workers[w as usize - v.worker_lo].state = WState::Busy { long: false };
+                }
+                ctx.out.tasks += 1;
+                ctx.push_after(dur, Ev::GangFinish { workers: members, job });
+            } else {
+                // refuse: free the anchor and hand the duration back —
+                // the scheduler re-binds it and sends one replacement
+                // probe, so no task is ever stranded
+                ctx.out.gang_rejections += 1;
+                ctx.pool.give(members);
+                v.workers[lw].state = WState::Idle;
+                advance_worker(worker, v.workers, v.worker_lo, ctx);
+                ctx.send(Ev::GangNack { job, dur });
+            }
+        }
+        Ev::GangNack { job, dur } => {
+            ctx.out.messages += 1;
+            ctx.gang_block(job);
+            v.returned[job as usize].push(dur);
+            let w = ctx.rng.below(v.cfg.workers) as u32;
+            ctx.send(Ev::Reserve { worker: w, job });
+        }
+        Ev::GangFinish { workers, job } => {
+            let d = ctx.net_delay();
+            ctx.out.breakdown.comm_s += d.as_secs();
+            ctx.push_after(d, Ev::Done { job });
+            // atomic release: all member slots free together
+            for &w in &workers {
+                v.workers[w as usize - v.worker_lo].state = WState::Idle;
+            }
+            for &w in &workers {
+                advance_worker(w, v.workers, v.worker_lo, ctx);
+            }
+            ctx.pool.give(workers);
+        }
+        Ev::Launch { worker, job, dur } => {
+            let w = &mut v.workers[worker as usize - v.worker_lo];
+            debug_assert!(w.state == WState::Waiting);
+            match dur {
+                Some(dur) => {
+                    w.state = WState::Busy { long: false };
+                    ctx.out.tasks += 1;
+                    ctx.push_after(dur, Ev::Finish { worker, job });
+                }
+                None => {
+                    w.state = WState::Idle;
+                    advance_worker(worker, v.workers, v.worker_lo, ctx);
+                }
+            }
+        }
+        Ev::Finish { worker, job } => {
+            let d = ctx.net_delay();
+            ctx.out.breakdown.comm_s += d.as_secs();
+            ctx.push_after(d, Ev::Done { job });
+            v.workers[worker as usize - v.worker_lo].state = WState::Idle;
+            advance_worker(worker, v.workers, v.worker_lo, ctx);
+        }
+        Ev::Done { job } => {
+            ctx.out.messages += 1;
+            ctx.task_done(job);
+        }
+    }
+}
+
+/// Idle worker pops its next reservation and RPCs the owning scheduler.
+fn advance_worker(
+    worker: u32,
+    workers: &mut [ProbeWorker<u32>],
+    lo: usize,
+    ctx: &mut SimCtx<'_, Ev>,
+) {
+    let w = &mut workers[worker as usize - lo];
+    debug_assert!(w.state == WState::Idle);
+    if let Some(job) = w.queue.pop_front() {
+        w.state = WState::Waiting;
+        ctx.send(Ev::Ready { job, worker });
+    }
 }
 
 impl Scheduler for Sparrow<'_> {
@@ -122,173 +339,17 @@ impl Scheduler for Sparrow<'_> {
     }
 
     fn on_arrival(&mut self, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
-        // batch sampling: d·n probes per job — d distinct workers
-        // per task, duplicates allowed across tasks (a worker may
-        // hold several reservations for one job); the probe vector is
-        // pooled so sampling is allocation-free
-        let n_workers = self.cfg.workers;
-        let n = self.jobs[jidx as usize].n_tasks as usize;
-        let d_per_task = self.cfg.probe_ratio.min(n_workers);
-        let mut probes: Vec<usize> = ctx.pool.take();
-        for _ in 0..n {
-            ctx.rng.sample_distinct_into(n_workers, d_per_task, &mut probes);
-            for &w in &probes {
-                ctx.send(Ev::Reserve {
-                    worker: w as u32,
-                    job: jidx,
-                });
-            }
-        }
-        ctx.pool.give(probes);
+        handle_arrival(&mut self.view(), jidx, ctx);
     }
 
     fn on_event(&mut self, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
-        match ev {
-            Ev::Reserve { worker, job } => {
-                let w = &mut self.workers[worker as usize];
-                w.queue.push_back(job);
-                if w.state == WState::Idle {
-                    advance_worker(worker, &mut self.workers, ctx);
-                }
-            }
-            Ev::Ready { job, worker } => {
-                ctx.out.messages += 1;
-                if let Some(rd) = &self.demands[job as usize] {
-                    // a fully-bound job's leftover reservations are NOT
-                    // constraint misses — they fall through to the normal
-                    // proactive-cancellation no-op below
-                    if !self.jobs[job as usize].exhausted() {
-                        if !self.cfg.catalog.slot_matches(worker as usize, rd) {
-                            // constraint verified at the probed node — and
-                            // failed: no-op this worker, re-probe blind (the
-                            // sampler cannot steer toward matching nodes)
-                            ctx.out.constraint_rejections += 1;
-                            ctx.constraint_block(job);
-                            ctx.send(Ev::Launch { worker, job, dur: None });
-                            let w = ctx.rng.below(self.cfg.workers) as u32;
-                            ctx.send(Ev::Reserve { worker: w, job });
-                            return;
-                        }
-                        if rd.is_gang() {
-                            // gang: the probe discovers *this node's*
-                            // occupancy only — the probed slot plus
-                            // enough idle co-residents, or a partial fit
-                            // that forces a blind re-probe (the
-                            // structural asymmetry vs Megha's one-shot
-                            // global placement)
-                            let k = rd.gang_width() as usize;
-                            let mut members: Vec<u32> = ctx.pool.take();
-                            if !idle_coresidents(
-                                &self.workers,
-                                &self.cfg.catalog,
-                                worker,
-                                k,
-                                &mut members,
-                            ) {
-                                ctx.out.gang_rejections += 1;
-                                ctx.gang_block(job);
-                                ctx.send(Ev::Launch { worker, job, dur: None });
-                                let w = ctx.rng.below(self.cfg.workers) as u32;
-                                ctx.send(Ev::Reserve { worker: w, job });
-                                return;
-                            }
-                            let (_, dur) = self.jobs[job as usize]
-                                .bind_next(&ctx.trace.jobs[job as usize])
-                                .expect("gang bind after exhaustion check");
-                            ctx.out.decisions += 1;
-                            ctx.constraint_unblock(job);
-                            ctx.gang_unblock(job);
-                            // reserve the idle co-residents now (the
-                            // node agent holds them for the gang); the
-                            // probed anchor flips on launch arrival
-                            for &w in &members[1..] {
-                                self.workers[w as usize].state = WState::Busy { long: false };
-                            }
-                            ctx.send(Ev::GangLaunch {
-                                job,
-                                workers: members,
-                                dur,
-                            });
-                            return;
-                        }
-                    }
-                }
-                let dur = match self.jobs[job as usize].bind_next(&ctx.trace.jobs[job as usize]) {
-                    Some((_, dur)) => {
-                        ctx.out.decisions += 1;
-                        if self.demands[job as usize].is_some() {
-                            ctx.constraint_unblock(job);
-                        }
-                        Some(dur)
-                    }
-                    None => None, // proactive cancellation: all tasks already bound
-                };
-                ctx.send(Ev::Launch { worker, job, dur });
-            }
-            Ev::GangLaunch { job, workers, dur } => {
-                debug_assert!(self.workers[workers[0] as usize].state == WState::Waiting);
-                for &w in &workers {
-                    self.workers[w as usize].state = WState::Busy { long: false };
-                }
-                ctx.out.tasks += 1;
-                ctx.push_after(dur, Ev::GangFinish { workers, job });
-            }
-            Ev::GangFinish { workers, job } => {
-                let d = ctx.net_delay();
-                ctx.out.breakdown.comm_s += d.as_secs();
-                ctx.push_after(d, Ev::Done { job });
-                // atomic release: all member slots free together
-                for &w in &workers {
-                    self.workers[w as usize].state = WState::Idle;
-                }
-                for &w in &workers {
-                    advance_worker(w, &mut self.workers, ctx);
-                }
-                ctx.pool.give(workers);
-            }
-            Ev::Launch { worker, job, dur } => {
-                let w = &mut self.workers[worker as usize];
-                debug_assert!(w.state == WState::Waiting);
-                match dur {
-                    Some(dur) => {
-                        w.state = WState::Busy { long: false };
-                        ctx.out.tasks += 1;
-                        ctx.push_after(dur, Ev::Finish { worker, job });
-                    }
-                    None => {
-                        w.state = WState::Idle;
-                        advance_worker(worker, &mut self.workers, ctx);
-                    }
-                }
-            }
-            Ev::Finish { worker, job } => {
-                let d = ctx.net_delay();
-                ctx.out.breakdown.comm_s += d.as_secs();
-                ctx.push_after(d, Ev::Done { job });
-                self.workers[worker as usize].state = WState::Idle;
-                advance_worker(worker, &mut self.workers, ctx);
-            }
-            Ev::Done { job } => {
-                ctx.out.messages += 1;
-                ctx.task_done(job);
-            }
-        }
+        handle_event(&mut self.view(), ev, ctx);
     }
 }
 
 pub fn simulate(cfg: &SparrowConfig, trace: &Trace) -> RunOutcome {
     let mut sched = Sparrow::new(cfg, trace);
     driver::run(&mut sched, &cfg.sim, trace)
-}
-
-/// Idle worker pops its next reservation and RPCs the owning scheduler.
-fn advance_worker(worker: u32, workers: &mut [ProbeWorker<u32>], ctx: &mut SimCtx<'_, Ev>) {
-    let w = &mut workers[worker as usize];
-    debug_assert!(w.state == WState::Idle);
-    if let Some(job) = w.queue.pop_front() {
-        w.state = WState::Waiting;
-        ctx.send(Ev::Ready { job, worker });
-    }
 }
 
 #[cfg(test)]
@@ -379,6 +440,34 @@ mod tests {
                 assert_eq!(r.gang_wait_s, 0.0);
             }
         }
+    }
+
+    #[test]
+    fn gang_nacks_return_durations_without_losing_tasks() {
+        use crate::cluster::NodeCatalog;
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        // saturated 2-slot gpu nodes with 2-wide gangs: GangTry must
+        // often find the probed node partially busy, so the NACK →
+        // returned duration → replacement probe loop is genuinely
+        // exercised
+        let mut cfg = SparrowConfig::for_workers(240);
+        cfg.sim.seed = 23;
+        cfg.catalog = NodeCatalog::bimodal_gpu(240, 0.25);
+        let trace = synthetic_fixed_constrained(
+            6,
+            40,
+            1.0,
+            0.9,
+            240,
+            24,
+            0.5,
+            Demand::new(2, vec!["gpu".into()]),
+        );
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 40);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+        assert!(out.gang_rejections > 0, "no gang try was ever refused");
     }
 
     #[test]

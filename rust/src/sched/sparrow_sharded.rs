@@ -1,0 +1,239 @@
+//! Sharded Sparrow execution: one run partitioned across cores.
+//!
+//! The `home_shard` pattern from [`crate::sched::megha::sharded`]
+//! generalized to a scheduler/worker topology: a
+//! [`crate::cluster::shard::ShardPlan`] treats Sparrow's
+//! `cfg.n_schedulers` distributed schedulers as the scheduler-side axis
+//! and the catalog's *nodes* as the worker-side axis, so shard cuts fall
+//! on node boundaries and a gang's co-resident slots never straddle
+//! shards. Worker events (reservations, launches, gang tries, finishes)
+//! home on the worker's shard; scheduler events (ready RPCs, gang NACKs,
+//! completion notices) home on the owning scheduler's shard, with jobs
+//! striped over schedulers round-robin. Every one of those messages is
+//! net-delayed, so blind probes, `Ev::Ready` reservations,
+//! constraint-mismatch replacement probes, and gang tries all ride the
+//! exchange log within the driver's lookahead contract — probe fan-out
+//! *is* the cross-shard traffic.
+//!
+//! Each shard executes the exact handler body of the unsharded
+//! scheduler ([`sparrow::handle_event`]) through an offset-carrying
+//! [`sparrow::SparrowView`] over its worker block; threaded and
+//! sequential lane execution are bit-identical
+//! (`tests/shard_identity.rs`). `shards = 1` and zero-lookahead network
+//! models delegate to the classic driver with the reason recorded on
+//! [`RunOutcome::shard_fallback`].
+
+use crate::cluster::hetero::ResolvedDemand;
+use crate::cluster::shard::{ShardPlan, ShardedState};
+use crate::cluster::NodeCatalog;
+use crate::config::SparrowConfig;
+use crate::metrics::RunOutcome;
+use crate::sched::common::{ProbeWorker, TaskCursor};
+use crate::sim::driver::{self, ShardSim, SimCtx};
+use crate::sim::time::SimTime;
+use crate::workload::Trace;
+
+use super::sparrow::{self, Ev, SparrowView};
+
+/// One shard: a contiguous block of workers (whole nodes) plus
+/// full-width scheduler-side state — only jobs homed on this shard's
+/// schedulers ever touch their cursor/returned entries.
+struct SparrowShard<'a> {
+    cfg: &'a SparrowConfig,
+    workers: Vec<ProbeWorker<u32>>,
+    worker_lo: usize,
+    jobs: Vec<TaskCursor>,
+    returned: Vec<Vec<SimTime>>,
+    demands: &'a [Option<ResolvedDemand>],
+}
+
+impl SparrowShard<'_> {
+    fn view(&mut self) -> SparrowView<'_> {
+        SparrowView {
+            cfg: self.cfg,
+            workers: &mut self.workers,
+            worker_lo: self.worker_lo,
+            jobs: &mut self.jobs,
+            returned: &mut self.returned,
+            demands: self.demands,
+        }
+    }
+}
+
+impl ShardSim for SparrowShard<'_> {
+    type Ev = Ev;
+
+    fn init(&mut self, _ctx: &mut SimCtx<'_, Ev>) {
+        // Sparrow has no recurring events — workers react to probes only
+    }
+
+    fn on_arrival(&mut self, job: u32, ctx: &mut SimCtx<'_, Ev>) {
+        sparrow::handle_arrival(&mut self.view(), job, ctx);
+    }
+
+    fn on_event(&mut self, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
+        sparrow::handle_event(&mut self.view(), ev, ctx);
+    }
+}
+
+/// The shard every event homes on: worker-side events go to the shard
+/// owning the worker's node, scheduler-side events to the shard owning
+/// the job's scheduler (`job % n_schedulers`, the same striping as
+/// `shard_of_job`). An event whose home is the emitting shard stays
+/// local (`Finish`/`GangFinish` at `now + dur`); everything else is a
+/// network message delayed by at least the lookahead window.
+fn home_shard(plan: &ShardPlan, catalog: &NodeCatalog, n_schedulers: usize, ev: &Ev) -> usize {
+    match ev {
+        Ev::Reserve { worker, .. }
+        | Ev::Launch { worker, .. }
+        | Ev::GangTry { worker, .. }
+        | Ev::Finish { worker, .. } => plan.shard_of_lm(catalog.node_of(*worker as usize) as usize),
+        Ev::GangFinish { workers, .. } => {
+            plan.shard_of_lm(catalog.node_of(workers[0] as usize) as usize)
+        }
+        Ev::Ready { job, .. } | Ev::GangNack { job, .. } | Ev::Done { job } => {
+            plan.shard_of_gm(*job as usize % n_schedulers)
+        }
+    }
+}
+
+/// Simulate Sparrow with `cfg.sim.shards` execution shards on as many
+/// threads. Falls back to the classic sequential driver — recording the
+/// reason on the outcome — when the plan clamps to one shard or the
+/// network model has no delay floor.
+pub fn simulate_sharded(cfg: &SparrowConfig, trace: &Trace) -> RunOutcome {
+    run_impl(cfg, trace, true)
+}
+
+/// Sequential-reference twin of [`simulate_sharded`]: the same sharded
+/// schedule with the lanes drained serially on one thread.
+/// `tests/shard_identity.rs` pins bit-identity between the two at every
+/// shard count.
+pub fn simulate_sharded_reference(cfg: &SparrowConfig, trace: &Trace) -> RunOutcome {
+    run_impl(cfg, trace, false)
+}
+
+fn run_impl(cfg: &SparrowConfig, trace: &Trace, threaded: bool) -> RunOutcome {
+    let catalog = &cfg.catalog;
+    let plan = ShardPlan::for_axes(cfg.n_schedulers, catalog.n_nodes(), cfg.sim.shards);
+    if let Some(reason) = driver::shard_fallback(plan.shards(), &cfg.sim) {
+        let mut out = sparrow::simulate(cfg, trace);
+        out.shard_fallback = Some(reason);
+        return out;
+    }
+    let demands = sparrow::resolve_and_check(cfg, trace);
+    let n = plan.shards();
+    // worker-block bounds: shard s owns the slots of its node block
+    // (contiguous because node slot ranges are contiguous and ascending)
+    let mut bounds: Vec<usize> = (0..n)
+        .map(|s| catalog.node_range(plan.lm_range(s).start as u32).0)
+        .collect();
+    bounds.push(catalog.len());
+    let mut fleet = ShardedState::by_bounds(ProbeWorker::fleet(cfg.workers), &bounds);
+    let shards: Vec<SparrowShard<'_>> = (0..n)
+        .map(|s| SparrowShard {
+            cfg,
+            workers: fleet.take_block(s),
+            worker_lo: bounds[s],
+            jobs: TaskCursor::for_trace(trace),
+            returned: vec![Vec::new(); trace.n_jobs()],
+            demands: &demands,
+        })
+        .collect();
+    let shard_of = |ev: &Ev| home_shard(&plan, catalog, cfg.n_schedulers, ev);
+    let shard_of_job = |j: u32| plan.shard_of_gm(j as usize % cfg.n_schedulers);
+    driver::run_sharded(shards, &shard_of, &shard_of_job, &cfg.sim, trace, threaded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::ShardFallback;
+    use crate::sim::net::NetModel;
+    use crate::workload::synthetic::synthetic_fixed;
+
+    fn cfg_with_shards(workers: usize, seed: u64, shards: usize) -> SparrowConfig {
+        let mut c = SparrowConfig::for_workers(workers);
+        c.sim.seed = seed;
+        c.sim.shards = shards;
+        c
+    }
+
+    #[test]
+    fn sharded_completes_all_jobs() {
+        for shards in [2, 3] {
+            let cfg = cfg_with_shards(300, 7, shards);
+            let trace = synthetic_fixed(20, 30, 1.0, 0.6, cfg.workers, 8);
+            let out = simulate_sharded(&cfg, &trace);
+            assert_eq!(out.jobs.len(), 30, "shards={shards}");
+            assert_eq!(out.tasks as usize, trace.n_tasks(), "shards={shards}");
+            assert_eq!(out.shards, shards as u32);
+            assert_eq!(out.shard_fallback, None);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_sequential_reference() {
+        let cfg = cfg_with_shards(300, 11, 3);
+        let trace = synthetic_fixed(30, 40, 1.0, 0.8, cfg.workers, 12);
+        let a = simulate_sharded(&cfg, &trace);
+        let b = simulate_sharded_reference(&cfg, &trace);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.events, b.events);
+        for (x, y) in a.jobs.iter().zip(b.jobs.iter()) {
+            assert_eq!(x.complete, y.complete);
+        }
+    }
+
+    #[test]
+    fn sharded_gangs_stay_node_coresident() {
+        use crate::cluster::NodeCatalog;
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        let mut cfg = cfg_with_shards(320, 19, 4);
+        cfg.catalog = NodeCatalog::bimodal_gpu(320, 0.25);
+        let trace = synthetic_fixed_constrained(
+            10,
+            30,
+            1.0,
+            0.7,
+            320,
+            20,
+            0.3,
+            Demand::new(2, vec!["gpu".into()]),
+        );
+        let a = simulate_sharded(&cfg, &trace);
+        let b = simulate_sharded_reference(&cfg, &trace);
+        assert_eq!(a.tasks as usize, trace.n_tasks());
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.gang_rejections, b.gang_rejections);
+    }
+
+    #[test]
+    fn one_shard_delegates_with_recorded_reason() {
+        let cfg1 = cfg_with_shards(300, 13, 1);
+        let trace = synthetic_fixed(20, 30, 1.0, 0.7, cfg1.workers, 14);
+        let a = simulate_sharded(&cfg1, &trace);
+        let b = sparrow::simulate(&cfg1, &trace);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.shards, 1);
+        assert_eq!(a.shard_fallback, Some(ShardFallback::PlanClamped));
+    }
+
+    #[test]
+    fn zero_window_net_delegates_with_recorded_reason() {
+        let mut cfg = cfg_with_shards(300, 17, 4);
+        cfg.sim.net = NetModel::Jittered {
+            base: SimTime::ZERO,
+            jitter: SimTime::from_millis(1.0),
+        };
+        let trace = synthetic_fixed(20, 30, 1.0, 0.6, cfg.workers, 18);
+        let out = simulate_sharded(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 30);
+        assert_eq!(out.shards, 1);
+        assert_eq!(out.shard_fallback, Some(ShardFallback::ZeroWindow));
+    }
+}

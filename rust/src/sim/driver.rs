@@ -19,7 +19,7 @@ use std::any::{Any, TypeId};
 use std::time::Instant;
 
 use crate::config::SimParams;
-use crate::metrics::RunOutcome;
+use crate::metrics::{RunOutcome, ShardFallback};
 use crate::sched::common::JobTracker;
 use crate::sim::event::EventQueue;
 use crate::sim::net::NetModel;
@@ -125,11 +125,14 @@ pub enum DriverEv<E> {
 
 /// Sharded-mode routing state threaded through [`SimCtx`]: a push whose
 /// event homes on another shard diverts to the epoch's exchange log
-/// instead of the local queue (see [`run_sharded`]).
+/// instead of the local queue (see [`run_sharded`]). The log is
+/// bucketed by destination shard at push time, so the barrier replays
+/// straight per-destination runs instead of scanning a mixed log.
 struct ShardRoute<'a, E> {
     my_shard: usize,
     shard_of: &'a (dyn Fn(&E) -> usize + Sync),
-    outbox: &'a mut Vec<(SimTime, usize, E)>,
+    /// One bucket per destination shard (the self-bucket stays empty).
+    outbox: &'a mut [Vec<(SimTime, E)>],
 }
 
 /// Everything a scheduler may touch during one event: the clock, the
@@ -170,7 +173,7 @@ impl<E> SimCtx<'_, E> {
         if let Some(r) = self.route.as_mut() {
             let dest = (r.shard_of)(&ev);
             if dest != r.my_shard {
-                r.outbox.push((at, dest, ev));
+                r.outbox[dest].push((at, ev));
                 return;
             }
         }
@@ -371,7 +374,8 @@ struct ShardLane<S: ShardSim> {
     tracker: JobTracker,
     out: RunOutcome,
     pool: BufPools,
-    outbox: Vec<(SimTime, usize, S::Ev)>,
+    /// Exchange log, bucketed by destination shard (length = shards).
+    outbox: Vec<Vec<(SimTime, S::Ev)>>,
 }
 
 impl<S: ShardSim> ShardLane<S> {
@@ -417,41 +421,70 @@ impl<S: ShardSim> ShardLane<S> {
     }
 }
 
-/// The per-epoch barrier step shared by both execution modes: replay
-/// every lane's exchange log into the destination queues (shard-major,
-/// push order within a shard — a fixed total order, so the destination
-/// queue's `(time, seq)` keys come out identical no matter how the
-/// previous epoch's lanes interleaved), then pick the next epoch window
-/// and snapshot global completion. Returns `None` when every queue has
-/// drained. Generic over the lane handle so it works on plain `&mut`
-/// lanes (sequential mode) and `MutexGuard`s (threaded mode) alike.
-fn barrier_step<S, L>(
-    lanes: &mut [L],
+/// The per-epoch barrier step of the *sequential* mode: replay every
+/// lane's per-destination exchange buckets into the destination queues
+/// (source-major, push order within a source — a fixed total order per
+/// destination, so the queue's `(time, seq)` keys come out identical no
+/// matter how the previous epoch's lanes interleaved), then pick the
+/// next epoch base and snapshot global completion. Returns `None` when
+/// every queue has drained. The threaded mode distributes exactly this
+/// arithmetic across its workers (see [`run_sharded`]); the two stay
+/// bit-identical because replay order, the horizon sequence, and the
+/// completion snapshot are all pure functions of the same inputs.
+fn barrier_step<S: ShardSim>(
+    lanes: &mut [ShardLane<S>],
     window: SimTime,
     n_jobs: usize,
     prev_horizon: Option<SimTime>,
-) -> Option<(SimTime, bool)>
-where
-    S: ShardSim,
-    L: std::ops::DerefMut<Target = ShardLane<S>>,
-{
+    fast_forward: bool,
+) -> Option<(SimTime, bool)> {
     for s in 0..lanes.len() {
-        let mut moved = std::mem::take(&mut lanes[s].outbox);
-        for (at, dest, ev) in moved.drain(..) {
-            // the lookahead contract: anything crossing shards is
-            // net-delayed by >= `window`, so it lands at or beyond the
-            // horizon of the epoch that produced it
-            debug_assert!(
-                prev_horizon.map_or(true, |h| at >= h),
-                "cross-shard event at {at:?} undercuts epoch horizon {prev_horizon:?}"
-            );
-            lanes[dest].q.push(at, DriverEv::Sched(ev));
+        let mut buckets = std::mem::take(&mut lanes[s].outbox);
+        for (d, bucket) in buckets.iter_mut().enumerate() {
+            for (at, ev) in bucket.drain(..) {
+                // the lookahead contract: anything crossing shards is
+                // net-delayed by >= `window`, so it lands at or beyond
+                // the horizon of the epoch that produced it
+                debug_assert!(
+                    prev_horizon.is_none_or(|h| at >= h),
+                    "cross-shard event at {at:?} undercuts epoch horizon {prev_horizon:?}"
+                );
+                lanes[d].q.push(at, DriverEv::Sched(ev));
+            }
         }
-        lanes[s].outbox = moved; // keep the log's capacity across epochs
+        lanes[s].outbox = buckets; // keep the buckets' capacity across epochs
     }
-    let t0 = lanes.iter_mut().filter_map(|l| l.q.peek_time()).min()?;
+    let min_next = lanes.iter_mut().filter_map(|l| l.q.peek_time()).min()?;
+    // idle-epoch fast-forward (default): base the next epoch at the
+    // global minimum next-event time, so a sparse stretch costs one
+    // epoch instead of thousands. Off: tile the clock densely from the
+    // previous horizon — on constant-delay nets the two schedules drain
+    // every event at the same horizon, so they are bit-identical
+    // (pinned by `tests/shard_identity.rs`; argument in DESIGN.md).
+    let t0 = match prev_horizon {
+        Some(h) if !fast_forward => h,
+        _ => min_next,
+    };
     let done = lanes.iter().map(|l| l.tracker.done()).sum::<usize>() == n_jobs;
     Some((t0 + window, done))
+}
+
+/// Why a run configured with `--shards N` must delegate to the classic
+/// sequential driver instead of entering [`run_sharded`]: the plan
+/// clamped to a single shard (topology too small for the requested
+/// count), or the network model has no positive minimum delay — i.e.
+/// no conservative-lookahead window (e.g. `Jittered { base: 0 }`).
+/// Scheduler front-ends call this *before* `run_sharded` (whose asserts
+/// stay as a hard backstop) and record the returned reason on
+/// [`RunOutcome::shard_fallback`] so clamping is never silent.
+pub fn shard_fallback(effective_shards: usize, params: &SimParams) -> Option<ShardFallback> {
+    if effective_shards <= 1 {
+        Some(ShardFallback::PlanClamped)
+    } else if params.net.min_delay() == SimTime::ZERO {
+        Some(ShardFallback::ZeroWindow)
+    } else {
+        None
+    }
 }
 
 /// Run a sharded scheduler over `trace` to completion — the parallel
@@ -460,14 +493,27 @@ where
 /// Conservative lookahead: the epoch window is the network model's
 /// minimum one-way delay. Within an epoch `[t0, t0 + window)` every lane
 /// drains only its local queue; pushes homed on other shards divert to
-/// the lane's exchange log. Because every cross-shard message is
-/// net-delayed by at least the window, a message produced inside an
-/// epoch is always addressed at or beyond that epoch's horizon — no
-/// lane can miss an input for the window it is draining, so per-lane
-/// execution needs no locks and no rollback. At the barrier the logs
-/// are replayed in fixed shard-major order (see [`barrier_step`]), which
-/// makes the two modes bit-identical: `tests/shard_identity.rs` pins
-/// record-level equality across thread counts.
+/// the lane's per-destination exchange buckets. Because every
+/// cross-shard message is net-delayed by at least the window, a message
+/// produced inside an epoch is always addressed at or beyond that
+/// epoch's horizon — no lane can miss an input for the window it is
+/// draining, so per-lane execution needs no locks and no rollback. At
+/// the barrier the buckets are replayed source-major per destination
+/// (see [`barrier_step`]), which makes the two modes bit-identical:
+/// `tests/shard_identity.rs` pins record-level equality across thread
+/// counts.
+///
+/// The threaded mode is SPMD: the main thread seeds shared state and
+/// then the `n` workers run the whole epoch loop themselves against a
+/// `Barrier::new(n)`, an n×n exchange matrix, and triple-buffered
+/// atomic slots carrying each window's (global min next-event, traffic,
+/// completions). An epoch that produced cross-shard traffic is followed
+/// by one replay window — the "second barrier crossing" — in which
+/// every worker drains its matrix column; an epoch with zero traffic
+/// skips it and goes straight to the next drain. Idle-epoch
+/// fast-forward (`SimParams::fast_forward`, default on) bases each
+/// epoch at the global minimum next-event time computed identically in
+/// both modes.
 ///
 /// Each lane draws from its own seed-decorrelated RNG stream (a shared
 /// stream would need a global draw order, which parallel execution
@@ -484,10 +530,13 @@ pub fn run_sharded<S: ShardSim>(
     let t0 = Instant::now();
     let n = shards.len();
     let window = params.net.min_delay();
+    // hard backstop behind the `shard_fallback` pre-check that
+    // scheduler front-ends run (and record) before calling in here
     assert!(n >= 1, "run_sharded needs at least one shard");
     assert!(
         window > SimTime::ZERO,
-        "sharded execution needs a positive network-delay floor for lookahead"
+        "sharded execution needs a positive network-delay floor for lookahead \
+         (callers gate on `shard_fallback` and delegate to the classic driver)"
     );
     let n_jobs = trace.n_jobs();
 
@@ -503,7 +552,7 @@ pub fn run_sharded<S: ShardSim>(
             tracker: JobTracker::new(trace, params.short_threshold),
             out: RunOutcome::default(),
             pool: BufPools::new(),
-            outbox: Vec::new(),
+            outbox: (0..n).map(|_| Vec::new()).collect(),
         })
         .collect();
 
@@ -534,75 +583,177 @@ pub fn run_sharded<S: ShardSim>(
         lane.sim.init(&mut ctx);
     }
 
-    let mut prev_horizon: Option<SimTime> = None;
     if threaded && n > 1 {
-        use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+        use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
         use std::sync::{Barrier, Mutex};
 
-        // persistent workers (epochs number in the millions — spawning
-        // per epoch would dwarf the event work); two barrier crossings
-        // per epoch: main publishes (horizon, done) and releases the
-        // workers, workers drain their lane and meet main again. The
-        // mutexes are uncontended by barrier discipline — they exist to
-        // hand each lane back and forth between main and its worker.
-        let epoch_barrier = Barrier::new(n + 1);
-        let horizon_us = AtomicU64::new(0);
-        let done_flag = AtomicBool::new(false);
-        let stop = AtomicBool::new(false);
-        let slots: Vec<Mutex<ShardLane<S>>> = lanes.into_iter().map(Mutex::new).collect();
-        std::thread::scope(|scope| {
-            for (s, slot) in slots.iter().enumerate() {
-                let epoch_barrier = &epoch_barrier;
-                let horizon_us = &horizon_us;
-                let done_flag = &done_flag;
-                let stop = &stop;
-                let net = &params.net;
-                scope.spawn(move || loop {
-                    epoch_barrier.wait();
-                    if stop.load(Ordering::Acquire) {
-                        break;
-                    }
-                    let horizon = SimTime::from_micros(horizon_us.load(Ordering::Acquire));
-                    let all_done = done_flag.load(Ordering::Acquire);
-                    let mut lane = slot.lock().expect("shard lane poisoned");
-                    lane.run_epoch(s, horizon, all_done, shard_of, net, trace);
-                    drop(lane);
-                    epoch_barrier.wait();
-                });
-            }
-            loop {
-                // between barriers the workers are parked, so these
-                // locks never block
-                let step = {
-                    let mut guards: Vec<_> = slots
-                        .iter()
-                        .map(|m| m.lock().expect("shard lane poisoned"))
-                        .collect();
-                    barrier_step(&mut guards, window, n_jobs, prev_horizon)
-                };
-                let Some((horizon, all_done)) = step else {
-                    stop.store(true, Ordering::Release);
-                    epoch_barrier.wait();
-                    break;
-                };
-                prev_horizon = Some(horizon);
-                horizon_us.store(horizon.as_micros(), Ordering::Release);
-                done_flag.store(all_done, Ordering::Release);
-                epoch_barrier.wait(); // release workers into the epoch
-                epoch_barrier.wait(); // wait for every lane to finish it
-            }
-        });
-        lanes = slots
-            .into_iter()
-            .map(|m| m.into_inner().expect("shard lane poisoned"))
+        // "queue empty" sentinel in the min-next slots
+        const IDLE_MIN: u64 = u64::MAX;
+
+        // SPMD epoch loop: persistent workers own their lanes outright
+        // (epochs number in the millions — spawning or lock-handoff per
+        // epoch would dwarf the event work) and coordinate through one
+        // n-way barrier. Per-window shared values are triple-buffered
+        // by window index: in window k every worker reads slot (k+2)%3
+        // (the previous window's publications), resets slot (k+1)%3 for
+        // the next window, and publishes into slot k%3 — the three
+        // roles always hit three distinct slots, and consecutive
+        // touches of any one slot are separated by a barrier crossing,
+        // so Relaxed atomics suffice (the barrier provides the
+        // happens-before edges).
+        struct EpochSlots {
+            min_next: [AtomicU64; 3], // global min next-event µs, via fetch_min
+            traffic: [AtomicU64; 3],  // cross-shard events produced, via fetch_add
+            done: [AtomicU64; 3],     // newly completed jobs, via fetch_add
+        }
+        let slots = EpochSlots {
+            min_next: [IDLE_MIN; 3].map(AtomicU64::new),
+            traffic: [0; 3].map(AtomicU64::new),
+            done: [0; 3].map(AtomicU64::new),
+        };
+
+        // n×n exchange matrix: cell (s, d) carries events from shard s
+        // to shard d. Barrier discipline makes every cell single-owner
+        // at any instant — written by worker s in drain windows (when
+        // it is empty, so a swap both publishes the bucket and recycles
+        // the cell's capacity), drained by worker d in the replay
+        // window that every traffic-producing window forces next. The
+        // mutexes are therefore uncontended; they exist for the type
+        // system.
+        let cells: Vec<Vec<Mutex<Vec<(SimTime, S::Ev)>>>> = (0..n)
+            .map(|_| (0..n).map(|_| Mutex::new(Vec::new())).collect())
             .collect();
+
+        // seed window 0's read slot ((0+2)%3 = 2) with the post-init
+        // state: deposit init-time cross-shard events into the matrix
+        // and publish their count plus the global min next-event time
+        let mut init_traffic = 0u64;
+        for (s, lane) in lanes.iter_mut().enumerate() {
+            for (d, bucket) in lane.outbox.iter_mut().enumerate() {
+                if !bucket.is_empty() {
+                    init_traffic += bucket.len() as u64;
+                    let mut cell = cells[s][d].lock().expect("exchange cell poisoned");
+                    std::mem::swap(&mut *cell, bucket);
+                }
+            }
+        }
+        let init_min = lanes
+            .iter_mut()
+            .filter_map(|l| l.q.peek_time())
+            .min()
+            .map_or(IDLE_MIN, |t| t.as_micros());
+        slots.min_next[2].store(init_min, Relaxed);
+        slots.traffic[2].store(init_traffic, Relaxed);
+
+        let barrier = Barrier::new(n);
+        let fast_forward = params.fast_forward;
+        lanes = std::thread::scope(|scope| {
+            let handles: Vec<_> = lanes
+                .into_iter()
+                .enumerate()
+                .map(|(me, mut lane)| {
+                    let (barrier, slots, cells) = (&barrier, &slots, &cells);
+                    let net = &params.net;
+                    scope.spawn(move || {
+                        let mut k = 0usize; // window index
+                        let mut prev_horizon: Option<SimTime> = None;
+                        let mut done_cum = 0usize; // completions through window k-1
+                        let mut done_published = 0usize;
+                        loop {
+                            let (read, write, reset) = ((k + 2) % 3, k % 3, (k + 1) % 3);
+                            let traffic_prev = slots.traffic[read].load(Relaxed);
+                            let min_prev = slots.min_next[read].load(Relaxed);
+                            done_cum += slots.done[read].load(Relaxed) as usize;
+                            slots.min_next[reset].store(IDLE_MIN, Relaxed);
+                            slots.traffic[reset].store(0, Relaxed);
+                            slots.done[reset].store(0, Relaxed);
+                            if traffic_prev > 0 {
+                                // replay window — the previous window
+                                // produced cross-shard traffic, so every
+                                // worker drains its matrix column:
+                                // source-major, push order within a
+                                // source, the same per-destination total
+                                // order the sequential replay uses. No
+                                // events run here; this is the "second
+                                // barrier crossing", and zero-traffic
+                                // windows skip it entirely.
+                                for row in cells {
+                                    let mut cell =
+                                        row[me].lock().expect("exchange cell poisoned");
+                                    for (at, ev) in cell.drain(..) {
+                                        debug_assert!(
+                                            prev_horizon.is_none_or(|h| at >= h),
+                                            "cross-shard event at {at:?} undercuts epoch \
+                                             horizon {prev_horizon:?}"
+                                        );
+                                        lane.q.push(at, DriverEv::Sched(ev));
+                                    }
+                                }
+                                if let Some(t) = lane.q.peek_time() {
+                                    slots.min_next[write].fetch_min(t.as_micros(), Relaxed);
+                                }
+                                barrier.wait();
+                                k += 1;
+                                continue;
+                            }
+                            if min_prev == IDLE_MIN {
+                                // every queue drained and nothing in
+                                // flight; all workers read the same pair
+                                // and terminate in the same window
+                                break;
+                            }
+                            // drain window: the same horizon arithmetic
+                            // as the sequential `barrier_step`
+                            let m = SimTime::from_micros(min_prev);
+                            let horizon = match prev_horizon {
+                                Some(h) if !fast_forward => h + window,
+                                _ => m + window,
+                            };
+                            let all_done = done_cum == n_jobs;
+                            lane.run_epoch(me, horizon, all_done, shard_of, net, trace);
+                            let mut traffic = 0u64;
+                            for (d, bucket) in lane.outbox.iter_mut().enumerate() {
+                                if !bucket.is_empty() {
+                                    traffic += bucket.len() as u64;
+                                    let mut cell =
+                                        cells[me][d].lock().expect("exchange cell poisoned");
+                                    debug_assert!(cell.is_empty(), "cell not drained by replay");
+                                    std::mem::swap(&mut *cell, bucket);
+                                }
+                            }
+                            if traffic > 0 {
+                                slots.traffic[write].fetch_add(traffic, Relaxed);
+                            }
+                            if let Some(t) = lane.q.peek_time() {
+                                slots.min_next[write].fetch_min(t.as_micros(), Relaxed);
+                            }
+                            let done_now = lane.tracker.done();
+                            if done_now > done_published {
+                                slots.done[write]
+                                    .fetch_add((done_now - done_published) as u64, Relaxed);
+                                done_published = done_now;
+                            }
+                            prev_horizon = Some(horizon);
+                            barrier.wait();
+                            k += 1;
+                        }
+                        lane
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
     } else {
+        let mut prev_horizon: Option<SimTime> = None;
         loop {
-            let step = {
-                let mut refs: Vec<&mut ShardLane<S>> = lanes.iter_mut().collect();
-                barrier_step(&mut refs, window, n_jobs, prev_horizon)
+            let Some((horizon, all_done)) =
+                barrier_step(&mut lanes, window, n_jobs, prev_horizon, params.fast_forward)
+            else {
+                break;
             };
-            let Some((horizon, all_done)) = step else { break };
             prev_horizon = Some(horizon);
             for (s, lane) in lanes.iter_mut().enumerate() {
                 lane.run_epoch(s, horizon, all_done, shard_of, &params.net, trace);

@@ -25,7 +25,7 @@ use crate::cluster::NodeCatalog;
 use crate::config::{EagleConfig, MeghaConfig, PigeonConfig, SparrowConfig};
 use crate::metrics::{
     summarize_constrained, summarize_constraint_wait, summarize_gang, summarize_gang_wait,
-    summarize_jobs, DelaySummary, RunOutcome,
+    summarize_jobs, DelaySummary, RunOutcome, ShardFallback,
 };
 use crate::runtime::match_engine::RustMatchEngine;
 use crate::sched;
@@ -182,10 +182,16 @@ pub struct Scenario {
     /// goldens in `tests/index_oracle.rs`.
     pub use_index: bool,
     /// Execution shards per run (`SimParams::shards`): 1 = the classic
-    /// sequential driver; N > 1 runs Megha's event loop on N threads
-    /// (baselines fall back to 1). The sweep divides its across-run
+    /// sequential driver; N > 1 runs Megha's or Sparrow's event loop on
+    /// N threads (Eagle and Pigeon fall back to 1, recorded on
+    /// [`RunOutcome::shard_fallback`]). The sweep divides its across-run
     /// fan-out by this, so total threads stay within the core budget.
     pub shards: usize,
+    /// Idle-epoch fast-forward in the sharded driver
+    /// (`SimParams::fast_forward`, default on); `false` selects the
+    /// dense epoch grid — the CLI `--no-fast-forward` debug mode and
+    /// the on/off identity golden in `tests/shard_identity.rs`.
+    pub fast_forward: bool,
 }
 
 impl Scenario {
@@ -282,6 +288,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
             hetero: None,
             use_index: true,
             shards: 1,
+            fast_forward: true,
         }]),
         "scale100" => Some(vec![Scenario {
             name: "scale100-yahoo-w1M".into(),
@@ -294,6 +301,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
             hetero: None,
             use_index: true,
             shards: 8, // clamps to min(n_gm, n_lm) = 8 at this size
+            fast_forward: true,
         }]),
         "hetero" => {
             let gpu = |scarcity: f64, frac: f64| HeteroSpec {
@@ -313,6 +321,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
                 hetero: Some(h),
                 use_index: true,
                 shards: 1,
+                fast_forward: true,
             };
             Some(vec![
                 // scarce: ~6% GPU slots, ~5% of jobs demand them
@@ -346,6 +355,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
                 hetero: Some(h),
                 use_index: true,
                 shards: 1,
+                fast_forward: true,
             };
             let gang2 = || HeteroSpec {
                 profile: "bimodal-gpu".into(),
@@ -403,6 +413,7 @@ pub fn scenario_grid(
                 hetero: hetero.cloned(),
                 use_index: true,
                 shards: 1,
+                fast_forward: true,
             });
         }
     }
@@ -413,10 +424,12 @@ pub fn scenario_grid(
 /// config for `workers`, with the run's seed, an explicit network model,
 /// optional GM failure injection (Megha only; ignored by baselines), an
 /// optional heterogeneity spec (each framework builds the catalog
-/// over its own DC size), the occupancy-index routing flag, and the
-/// execution-shard count (Megha only; baselines always run the
-/// sequential driver). `fig3::run_framework`, [`run_one`] and the
-/// cross-scheduler tests all route through here.
+/// over its own DC size), the occupancy-index routing flag, the
+/// execution-shard count (Megha and Sparrow shard; Eagle and Pigeon run
+/// the sequential driver and record
+/// [`ShardFallback::Unsupported`] when shards were requested), and the
+/// idle-epoch fast-forward toggle. `fig3::run_framework`, [`run_one`]
+/// and the cross-scheduler tests all route through here.
 #[allow(clippy::too_many_arguments)]
 pub fn run_framework_hetero(
     framework: &str,
@@ -427,6 +440,7 @@ pub fn run_framework_hetero(
     hetero: Option<&HeteroSpec>,
     use_index: bool,
     shards: usize,
+    fast_forward: bool,
     trace: &Trace,
 ) -> RunOutcome {
     match framework {
@@ -436,6 +450,7 @@ pub fn run_framework_hetero(
             cfg.sim.net = net.clone();
             cfg.sim.use_index = use_index;
             cfg.sim.shards = shards.max(1);
+            cfg.sim.fast_forward = fast_forward;
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.spec.n_workers());
             }
@@ -454,10 +469,16 @@ pub fn run_framework_hetero(
             cfg.sim.seed = seed;
             cfg.sim.net = net.clone();
             cfg.sim.use_index = use_index;
+            cfg.sim.shards = shards.max(1);
+            cfg.sim.fast_forward = fast_forward;
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.workers);
             }
-            sched::sparrow::simulate(&cfg, trace)
+            if cfg.sim.shards > 1 {
+                sched::sparrow_sharded::simulate_sharded(&cfg, trace)
+            } else {
+                sched::sparrow::simulate(&cfg, trace)
+            }
         }
         "eagle" => {
             let mut cfg = EagleConfig::for_workers(workers);
@@ -467,7 +488,11 @@ pub fn run_framework_hetero(
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.workers);
             }
-            sched::eagle::simulate(&cfg, trace)
+            let mut out = sched::eagle::simulate(&cfg, trace);
+            if shards > 1 {
+                out.shard_fallback = Some(ShardFallback::Unsupported);
+            }
+            out
         }
         "pigeon" => {
             let mut cfg = PigeonConfig::for_workers(workers);
@@ -477,7 +502,11 @@ pub fn run_framework_hetero(
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.workers);
             }
-            sched::pigeon::simulate(&cfg, trace)
+            let mut out = sched::pigeon::simulate(&cfg, trace);
+            if shards > 1 {
+                out.shard_fallback = Some(ShardFallback::Unsupported);
+            }
+            out
         }
         other => panic!("unknown framework '{other}'"),
     }
@@ -492,7 +521,9 @@ pub fn run_framework_with(
     gm_fail_at: Option<f64>,
     trace: &Trace,
 ) -> RunOutcome {
-    run_framework_hetero(framework, workers, seed, net, gm_fail_at, None, true, 1, trace)
+    run_framework_hetero(
+        framework, workers, seed, net, gm_fail_at, None, true, 1, true, trace,
+    )
 }
 
 /// [`run_framework_with`] on the paper-default network model.
@@ -512,6 +543,7 @@ pub fn run_one(framework: &str, sc: &Scenario, seed: u64) -> RunOutcome {
         sc.hetero.as_ref(),
         sc.use_index,
         sc.shards,
+        sc.fast_forward,
         &trace,
     )
 }
@@ -556,6 +588,9 @@ pub struct RunRecord {
     /// Execution shards the run actually used ([`RunOutcome::shards`];
     /// 1 = sequential driver, which is every baseline).
     pub shards: u32,
+    /// Why a shards > 1 request fell back to the sequential driver
+    /// (`None` when sharding was honored or never requested).
+    pub shard_fallback: Option<ShardFallback>,
     /// Wall-clock of the event loop only ([`RunOutcome::sim_wall_s`]) —
     /// the events/s denominator, excluding scheduler construction and
     /// summarization.
@@ -660,6 +695,7 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
             sc.hetero.as_ref(),
             sc.use_index,
             sc.shards,
+            sc.fast_forward,
             trace,
         );
         RunRecord {
@@ -679,6 +715,7 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
             makespan_s: out.makespan.as_secs(),
             events: out.events,
             shards: out.shards,
+            shard_fallback: out.shard_fallback,
             sim_wall_s: out.sim_wall_s,
             wall_s: r0.elapsed().as_secs_f64(),
         }
@@ -806,6 +843,23 @@ pub fn print_result(spec: &SweepSpec, result: &SweepResult) {
         result.records.len(),
         result.threads
     );
+    // sharding fallbacks are recorded per run; surface each distinct
+    // reason exactly once so a clamped `--shards` request is never silent
+    let mut warned: Vec<(&str, ShardFallback)> = Vec::new();
+    for r in &result.records {
+        if let Some(fb) = r.shard_fallback {
+            let key = (r.framework.as_str(), fb);
+            if !warned.contains(&key) {
+                warned.push(key);
+                eprintln!(
+                    "warning: {} ran unsharded in '{}': {}",
+                    r.framework,
+                    spec.scenarios[r.scenario].name,
+                    fb.reason()
+                );
+            }
+        }
+    }
     println!(
         "{:<22} {:<9} {:>4} {:>10} {:>21} {:>10} {:>10} {:>10} {:>12} {:>11} {:>6}",
         "scenario",
@@ -1013,6 +1067,7 @@ mod tests {
             hetero: None,
             use_index: true,
             shards: 2,
+            fast_forward: true,
         };
         let spec = SweepSpec {
             frameworks: vec!["megha".into(), "sparrow".into()],
@@ -1098,6 +1153,7 @@ mod tests {
             }),
             use_index: true,
             shards: 1,
+            fast_forward: true,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 7);
@@ -1129,6 +1185,7 @@ mod tests {
             }),
             use_index: true,
             shards: 1,
+            fast_forward: true,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 3);
@@ -1156,6 +1213,7 @@ mod tests {
             hetero: None,
             use_index: true,
             shards: 1,
+            fast_forward: true,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 5);

@@ -316,6 +316,7 @@ fn megha_beats_probe_baselines_on_scarce_attributes() {
         }),
         use_index: true,
         shards: 1,
+        fast_forward: true,
     };
     let megha_out = sweep::run_one("megha", &sc, 41);
     let sparrow_out = sweep::run_one("sparrow", &sc, 41);
@@ -381,9 +382,13 @@ fn gang_slots1_path_is_bit_identical_and_inert() {
     let net = NetModel::Constant(SimTime::from_millis(0.5));
     let h = Some(&hetero);
     for name in sweep::FRAMEWORKS {
-        let a = sweep::run_framework_hetero(name, workers, seed, &net, None, h, true, 1, &trace);
-        let b = sweep::run_framework_hetero(name, workers, seed, &net, None, h, true, 1, &trace);
-        let c = sweep::run_framework_hetero(name, workers, seed, &net, None, h, true, 1, &reparsed);
+        let a =
+            sweep::run_framework_hetero(name, workers, seed, &net, None, h, true, 1, true, &trace);
+        let b =
+            sweep::run_framework_hetero(name, workers, seed, &net, None, h, true, 1, true, &trace);
+        let c = sweep::run_framework_hetero(
+            name, workers, seed, &net, None, h, true, 1, true, &reparsed,
+        );
         assert_outcomes_identical(name, &a, &b);
         assert_outcomes_identical(name, &a, &c);
         assert_eq!(a.gang_rejections, 0, "{name}: gang machinery engaged at slots=1");
@@ -419,6 +424,7 @@ fn gang_megha_beats_probe_baselines_on_scarce_gangs() {
         }),
         use_index: true,
         shards: 1,
+        fast_forward: true,
     };
     let megha_out = sweep::run_one("megha", &sc, 47);
     let sparrow_out = sweep::run_one("sparrow", &sc, 47);
@@ -492,6 +498,7 @@ fn sweep_matches_direct_execution() {
         hetero: None,
         use_index: true,
         shards: 1,
+        fast_forward: true,
     };
     let spec = SweepSpec {
         frameworks: vec!["megha".into(), "pigeon".into()],
@@ -525,6 +532,7 @@ fn gm_failure_scenario_still_completes_through_sweep() {
         hetero: None,
         use_index: true,
         shards: 1,
+        fast_forward: true,
     };
     let out = sweep::run_one("megha", &sc, 13);
     assert_eq!(out.jobs.len(), 20, "GM failure lost jobs");

@@ -18,18 +18,28 @@
 //! native 600 workers the plan would clamp to the 3-GM topology), plus
 //! a GM-failure run on a gang workload (the crash path must replay
 //! identically whichever shard owns the failed GM).
+//!
+//! Sparrow (PR 7) runs the same gate: its probe/late-binding handlers on
+//! the sharded driver, threaded vs sequential, over the same preset
+//! grids plus a jittered-net run. The idle-epoch fast-forward toggle
+//! gets its own golden — on a constant-delay net, `fast_forward` on and
+//! off must be bit-identical for Sparrow (its handlers never consult
+//! `all_done`, so epoch tiling is unobservable); Megha instead pins
+//! threaded ≡ sequential *within* the dense `fast_forward = false`
+//! grid, whose `all_done` snapshots are tiling-dependent but
+//! mode-independent.
 
 use megha::cluster::NodeCatalog;
-use megha::config::MeghaConfig;
+use megha::config::{MeghaConfig, SparrowConfig};
 use megha::metrics::{
-    summarize_constraint_wait, summarize_gang_wait, summarize_jobs, RunOutcome,
+    summarize_constraint_wait, summarize_gang_wait, summarize_jobs, RunOutcome, ShardFallback,
 };
-use megha::sched::megha::{
-    simulate, simulate_sharded, simulate_sharded_reference, FailurePlan,
-};
+use megha::sched::megha::{simulate, simulate_sharded, simulate_sharded_reference, FailurePlan};
+use megha::sched::sparrow_sharded;
+use megha::sim::net::NetModel;
 use megha::sim::time::SimTime;
 use megha::sweep;
-use megha::workload::synthetic::synthetic_fixed_constrained;
+use megha::workload::synthetic::{synthetic_fixed, synthetic_fixed_constrained};
 use megha::workload::Demand;
 
 /// The Megha config `sweep::run_framework_hetero` would build for this
@@ -42,6 +52,20 @@ fn megha_cfg(sc: &sweep::Scenario, seed: u64, shards: usize) -> MeghaConfig {
     cfg.sim.shards = shards;
     if let Some(h) = &sc.hetero {
         cfg.catalog = h.catalog(cfg.spec.n_workers());
+    }
+    cfg
+}
+
+/// The Sparrow config `sweep::run_framework_hetero` would build for this
+/// scenario, with an explicit shard count.
+fn sparrow_cfg(sc: &sweep::Scenario, seed: u64, shards: usize) -> SparrowConfig {
+    let mut cfg = SparrowConfig::for_workers(sc.workers);
+    cfg.sim.seed = seed;
+    cfg.sim.net = sc.net.clone();
+    cfg.sim.use_index = sc.use_index;
+    cfg.sim.shards = shards;
+    if let Some(h) = &sc.hetero {
+        cfg.catalog = h.catalog(cfg.workers);
     }
     cfg
 }
@@ -159,4 +183,132 @@ fn shard_identity_survives_gm_failure_with_gangs() {
         assert_outcomes_identical(&tag, &a, &b);
         assert_eq!(a.jobs.len(), 30, "{tag}: lost jobs");
     }
+}
+
+#[test]
+fn sparrow_shard_threaded_equals_sequential_on_preset_grids() {
+    // the PR-7 tentpole gate: Sparrow's probe handlers under the sharded
+    // driver, constrained (hetero) and gang cells, shards 2/4/8 — the
+    // scheduler axis has 8 schedulers, so 8 shards is the full cut
+    for preset_name in ["hetero", "gang"] {
+        for (si, sc) in scaled_preset(preset_name).into_iter().enumerate() {
+            let seed = sweep::run_seed(17, si as u64, 0);
+            let trace = sc.make_trace(seed);
+            for shards in [2usize, 4, 8] {
+                let cfg = sparrow_cfg(&sc, seed, shards);
+                let a = sparrow_sharded::simulate_sharded(&cfg, &trace);
+                let b = sparrow_sharded::simulate_sharded_reference(&cfg, &trace);
+                let tag = format!("sparrow/{preset_name}/{}/shards={shards}", sc.name);
+                assert_eq!(a.shards, shards as u32, "{tag}: ran sharded");
+                assert_eq!(a.shard_fallback, None, "{tag}: unexpected fallback");
+                assert_outcomes_identical(&tag, &a, &b);
+            }
+        }
+    }
+}
+
+#[test]
+fn sparrow_shard_identity_survives_net_jitter() {
+    // jitter > 0 randomizes every message delay (per-shard RNG streams);
+    // the lookahead window is the base, and identity must still hold
+    let mut cfg = SparrowConfig::for_workers(1_000);
+    cfg.sim.seed = 31;
+    cfg.sim.shards = 4;
+    cfg.sim.net = NetModel::Jittered {
+        base: SimTime::from_millis(0.4),
+        jitter: SimTime::from_millis(0.6),
+    };
+    let trace = synthetic_fixed(25, 60, 1.0, 0.8, 1_000, 32);
+    let a = sparrow_sharded::simulate_sharded(&cfg, &trace);
+    let b = sparrow_sharded::simulate_sharded_reference(&cfg, &trace);
+    assert_eq!(a.shards, 4, "jitter: ran sharded");
+    assert_eq!(a.shard_fallback, None);
+    assert_outcomes_identical("sparrow/jittered-net", &a, &b);
+}
+
+#[test]
+fn fast_forward_toggle_is_bit_identical_for_sparrow() {
+    // sparse arrivals on a constant-delay net: fast-forward on skips the
+    // idle stretches in one epoch each, off tiles them densely — Sparrow
+    // never observes epoch boundaries (no recurring events, no all_done
+    // reads), so the four runs {on, off} x {threaded, sequential} must
+    // all be bit-identical
+    let mut on = SparrowConfig::for_workers(400);
+    on.sim.seed = 41;
+    on.sim.shards = 4;
+    let mut off = on.clone();
+    off.sim.fast_forward = false;
+    assert!(on.sim.fast_forward, "fast-forward must default on");
+    // load 0.2 -> inter-arrival gaps of hundreds of windows
+    let trace = synthetic_fixed(8, 12, 1.0, 0.2, 400, 42);
+    let on_thr = sparrow_sharded::simulate_sharded(&on, &trace);
+    let on_seq = sparrow_sharded::simulate_sharded_reference(&on, &trace);
+    let off_thr = sparrow_sharded::simulate_sharded(&off, &trace);
+    let off_seq = sparrow_sharded::simulate_sharded_reference(&off, &trace);
+    assert_eq!(on_thr.shards, 4, "ff golden must run sharded");
+    assert_outcomes_identical("ff-on thr vs seq", &on_thr, &on_seq);
+    assert_outcomes_identical("ff-off thr vs seq", &off_thr, &off_seq);
+    assert_outcomes_identical("ff on vs off", &on_thr, &off_thr);
+}
+
+#[test]
+fn megha_dense_grid_threaded_equals_sequential() {
+    // Megha's heartbeats read the per-epoch all_done snapshot, so ff
+    // on/off is not an identity pair for it — but within the dense
+    // (fast_forward = false) grid, threaded and sequential must still
+    // be bit-identical
+    let mut cfg = MeghaConfig::for_workers(2_000);
+    cfg.sim.seed = 43;
+    cfg.sim.shards = 4;
+    cfg.sim.fast_forward = false;
+    let trace = synthetic_fixed(10, 24, 1.0, 0.3, cfg.spec.n_workers(), 44);
+    let a = simulate_sharded(&cfg, &trace, None);
+    let b = simulate_sharded_reference(&cfg, &trace, None);
+    assert_eq!(a.shards, 4, "dense grid must run sharded");
+    assert_outcomes_identical("megha/ff-off thr vs seq", &a, &b);
+}
+
+#[test]
+fn shard_fallbacks_are_recorded_not_silent() {
+    let trace = synthetic_fixed(10, 20, 1.0, 0.5, 1_000, 3);
+    // plan clamp: one shard requested
+    let mut sp1 = SparrowConfig::for_workers(1_000);
+    sp1.sim.seed = 3;
+    sp1.sim.shards = 1;
+    let out = sparrow_sharded::simulate_sharded(&sp1, &trace);
+    assert_eq!(out.shards, 1);
+    assert_eq!(out.shard_fallback, Some(ShardFallback::PlanClamped));
+    // zero lookahead window: jittered net with base 0
+    let mut sp0 = SparrowConfig::for_workers(1_000);
+    sp0.sim.seed = 3;
+    sp0.sim.shards = 4;
+    sp0.sim.net = NetModel::Jittered {
+        base: SimTime::ZERO,
+        jitter: SimTime::from_millis(1.0),
+    };
+    let out = sparrow_sharded::simulate_sharded(&sp0, &trace);
+    assert_eq!(out.shards, 1);
+    assert_eq!(out.shard_fallback, Some(ShardFallback::ZeroWindow));
+    // Megha records the same reasons through its own front-end
+    let mtrace = synthetic_fixed(10, 20, 1.0, 0.5, 2_000, 3);
+    let mut mg = MeghaConfig::for_workers(2_000);
+    mg.sim.seed = 3;
+    mg.sim.shards = 1;
+    let out = simulate_sharded(&mg, &mtrace, None);
+    assert_eq!(out.shard_fallback, Some(ShardFallback::PlanClamped));
+    mg.sim.shards = 4;
+    mg.sim.net = NetModel::Jittered {
+        base: SimTime::ZERO,
+        jitter: SimTime::from_millis(1.0),
+    };
+    let out = simulate_sharded(&mg, &mtrace, None);
+    assert_eq!(out.shards, 1);
+    assert_eq!(out.shard_fallback, Some(ShardFallback::ZeroWindow));
+    // honored sharding records no fallback
+    let mut sp = SparrowConfig::for_workers(1_000);
+    sp.sim.seed = 3;
+    sp.sim.shards = 4;
+    let out = sparrow_sharded::simulate_sharded(&sp, &trace);
+    assert_eq!(out.shards, 4);
+    assert_eq!(out.shard_fallback, None);
 }
