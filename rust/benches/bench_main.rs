@@ -10,9 +10,9 @@
 //!
 //! Run with `cargo bench` (or `cargo bench -- fig3 match` to filter).
 //! Flags: `--quick` shrinks the per-bench budget (the CI smoke mode);
-//! `--json` additionally writes `BENCH_PR7.json` (per-bench median
+//! `--json` additionally writes `BENCH_PR8.json` (per-bench median
 //! ns/unit, experiment totals in seconds) at the repo root — the
-//! current PR's perf artifact (`BENCH_PR2.json` … `BENCH_PR6.json` are
+//! current PR's perf artifact (`BENCH_PR2.json` … `BENCH_PR7.json` are
 //! the frozen earlier snapshots, still pending hardware regeneration).
 
 use std::cell::RefCell;
@@ -93,7 +93,7 @@ impl Bench {
         self.total_results.borrow_mut().push((name.to_string(), total));
     }
 
-    /// Write `BENCH_PR7.json` at the repo root (next to `rust/`),
+    /// Write `BENCH_PR8.json` at the repo root (next to `rust/`),
     /// merging over any existing file so successive filtered runs
     /// (`-- queue --json` then `-- scale10 --json`) accumulate instead
     /// of clobbering each other. A fresh run of a bench name replaces
@@ -110,7 +110,7 @@ impl Bench {
             .ok()
             .and_then(|p| p.parent().map(|q| q.to_path_buf()))
             .unwrap_or_else(|| std::path::PathBuf::from("."));
-        let path = root.join("BENCH_PR7.json");
+        let path = root.join("BENCH_PR8.json");
         let mut bench: BTreeMap<String, Json> = BTreeMap::new();
         let mut totals: BTreeMap<String, Json> = BTreeMap::new();
         let mut measured = false;
@@ -208,6 +208,7 @@ fn main() {
     bench_ablation_batching(&b);
     bench_ablation_shuffle(&b);
     bench_sweep_speedup(&b);
+    bench_flight(&b);
     bench_scale10(&b);
     bench_shard(&b);
     bench_scale100(&b);
@@ -331,6 +332,67 @@ fn bench_snapshot(b: &Bench) {
         std::hint::black_box(acc);
         200
     });
+}
+
+/// The ISSUE-8 flight-recorder family: whole-sim cost with the recorder
+/// off vs on (`flight/megha_yahoo300_off` must match the retained
+/// `sim/megha_yahoo300_tasks` baseline — off is one predictable branch
+/// per instrumented site; on must stay within ~10%), the raw `record`
+/// throughput of the chunked buffer, and the columnar export/read
+/// round-trip on a synthetic log.
+fn bench_flight(b: &Bench) {
+    use megha::obs::flight::{
+        read_columnar, write_columnar, Actor, EvKind, FlightEvent, FlightRecorder, NONE,
+    };
+    let mut cfg = MeghaConfig::for_workers(3_000);
+    cfg.sim.seed = 7;
+    let trace = yahoo_like(300, 3_000, 0.85, 7);
+    let n_tasks = trace.n_tasks() as u64;
+    b.time("flight/megha_yahoo300_off", || {
+        let out = sched::megha::simulate(&cfg, &trace);
+        std::hint::black_box(out.decisions);
+        n_tasks
+    });
+    let mut on = cfg.clone();
+    on.sim.flight = true;
+    b.time("flight/megha_yahoo300_on", || {
+        let out = sched::megha::simulate(&on, &trace);
+        std::hint::black_box(out.flight.map(|f| f.events));
+        n_tasks
+    });
+    b.time("flight/record_1m", || {
+        let mut rec = FlightRecorder::new(true);
+        for i in 0..1_000_000u64 {
+            rec.record(
+                SimTime::from_micros(i),
+                EvKind::GmMatch,
+                Actor::Gm((i % 8) as u32),
+                i as u32,
+                0,
+                i,
+            );
+        }
+        std::hint::black_box(rec.len());
+        1_000_000
+    });
+    let log: Vec<FlightEvent> = (0..200_000u64)
+        .map(|i| FlightEvent {
+            t_us: i,
+            kind: EvKind::ALL[(i % 18) as usize],
+            actor: Actor::Sched((i % 8) as u32).encode(),
+            job: i as u32,
+            task: NONE,
+            payload: i,
+        })
+        .collect();
+    let dir = std::env::temp_dir().join(format!("megha-flight-bench-{}", std::process::id()));
+    b.time("flight/columnar_roundtrip_200k", || {
+        write_columnar(&dir, &log).expect("columnar write");
+        let back = read_columnar(&dir).expect("columnar read");
+        std::hint::black_box(back.len());
+        200_000
+    });
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// The ISSUE-2 acceptance scenario: fig3a Yahoo at 10× jobs and 10×

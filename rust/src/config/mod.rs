@@ -42,6 +42,13 @@ pub struct SimParams {
     /// bit-identical too (`tests/shard_identity.rs` pins this). `false`
     /// is the dense-grid debug/reference mode.
     pub fast_forward: bool,
+    /// Flight recorder (`obs::flight`, CLI `--flight-record`): record
+    /// every scheduler decision into a per-run event log with staleness
+    /// accounting. Off by default; recording is *inert* — the simulated
+    /// schedule is bit-identical on or off (`tests/driver_invariants.rs`)
+    /// and only [`RunOutcome::flight`](crate::metrics::RunOutcome) /
+    /// [`flight_log`](crate::metrics::RunOutcome::flight_log) change.
+    pub flight: bool,
 }
 
 impl Default for SimParams {
@@ -53,6 +60,7 @@ impl Default for SimParams {
             use_index: true,
             shards: 1,
             fast_forward: true,
+            flight: false,
         }
     }
 }

@@ -32,6 +32,7 @@ pub mod cluster;
 pub mod config;
 pub mod experiments;
 pub mod metrics;
+pub mod obs;
 pub mod proto;
 pub mod runtime;
 pub mod sched;

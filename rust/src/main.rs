@@ -6,6 +6,7 @@
 //!                (--trace FILE | --workload yahoo|google|fixed --jobs N)
 //!                [--workers N] [--load X] [--seed N] [--xla] [--no-index]
 //!                [--shards N] [--no-fast-forward]
+//!                [--flight] [--flight-record DIR] [--json]
 //!                [--hetero uniform|bimodal-gpu|rack-tiered] [--scarcity X]
 //!                [--constrained-frac X] [--require a,b] [--gang K]
 //! megha prototype --scheduler megha|pigeon [--jobs N] [--time-scale X] [--xla]
@@ -14,9 +15,10 @@
 //!             [--workload yahoo|google|fixed] [--jobs N] [--tasks-per-job N]
 //!             [--net constant|jittered] [--net-ms X] [--jitter-ms X]
 //!             [--fail-gm-at T] [--threads K] [--preset NAME] [--no-index]
-//!             [--shards N] [--no-fast-forward] [--smoke]
+//!             [--shards N] [--no-fast-forward] [--smoke] [--flight]
 //!             [--hetero PROFILE] [--scarcity X] [--constrained-frac X]
 //!             [--require a,b] [--gang K]
+//! megha flight-verify --dir DIR [--run-json FILE]
 //! megha trace gen --workload yahoo|google|fixed --jobs N --workers N
 //!                 [--load X] [--seed N] --out FILE
 //!                 [--constrained-frac X] [--require a,b] [--gang K]
@@ -40,6 +42,17 @@
 //! densely instead (debug/A-B mode). `--smoke` shrinks every sweep
 //! scenario ~10x (workers and jobs) for CI-sized runs, e.g.
 //! `megha sweep --preset scale100 --smoke`.
+//!
+//! `--flight` turns on the flight recorder (`obs::flight`): every
+//! scheduler decision is logged with staleness accounting, surfaced as
+//! the `flight` block of `--json` output and the sweep's flight columns.
+//! Recording is inert — the simulated schedule is bit-identical on or
+//! off. `simulate --flight-record DIR` implies `--flight` and exports
+//! the log as columnar files + `flight.csv` + a Perfetto `trace.json`;
+//! `flight-verify` cross-checks the three formats (and, with
+//! `--run-json`, a `simulate --json` dump) for the CI smoke. `--json`
+//! prints the run's full `RunOutcome` as JSON on stdout (progress chatter
+//! moves to stderr).
 
 use anyhow::{bail, Context, Result};
 use megha::cluster::NodeCatalog;
@@ -58,7 +71,9 @@ use megha::util::args::Args;
 use megha::workload::constraints::{apply_constraints, valid_label, CONSTRAIN_SEED};
 use megha::workload::{synthetic, trace as tracefile, Demand, JobClass, Trace};
 
-const FLAGS: &[&str] = &["xla", "help", "short-only", "no-index", "no-fast-forward", "smoke"];
+const FLAGS: &[&str] = &[
+    "xla", "help", "short-only", "no-index", "no-fast-forward", "smoke", "flight", "json",
+];
 
 fn main() {
     let args = Args::from_env(FLAGS);
@@ -79,6 +94,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "simulate" => cmd_simulate(args),
         "prototype" => cmd_prototype(args),
         "sweep" => cmd_sweep(args),
+        "flight-verify" => cmd_flight_verify(args),
         "trace" => cmd_trace(args),
         other => bail!("unknown command '{other}' (try --help)"),
     }
@@ -263,7 +279,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         }
     }
     let n_constrained = trace.jobs.iter().filter(|j| j.demand.is_some()).count();
-    println!(
+    let json = args.flag("json");
+    let flight_dir = args.get("flight-record");
+    let flight = flight_dir.is_some() || args.flag("flight");
+    let banner = format!(
         "simulating {scheduler} on '{}' ({} jobs / {} tasks, {} workers{})",
         trace.name,
         trace.n_jobs(),
@@ -278,6 +297,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             String::new()
         }
     );
+    // --json owns stdout: everything informational moves to stderr so
+    // the output stays machine-parseable
+    if json {
+        eprintln!("{banner}");
+    } else {
+        println!("{banner}");
+    }
     let out = if scheduler == "megha" && args.flag("xla") {
         if hetero.is_some() {
             bail!("--xla does not support --hetero yet (the AOT match kernel is unconstrained)");
@@ -285,6 +311,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         let mut cfg = MeghaConfig::for_workers(workers);
         cfg.sim.seed = seed;
         cfg.sim.use_index = !args.flag("no-index");
+        cfg.sim.flight = flight;
         let mut eng = megha::runtime::pjrt::XlaMatchEngine::load_default()
             .context("run `make artifacts` first")?;
         megha::sched::megha::simulate_with(&cfg, &trace, &mut eng, None)
@@ -299,6 +326,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             !args.flag("no-index"),
             args.usize("shards", 1),
             !args.flag("no-fast-forward"),
+            flight,
             &trace,
         )
     };
@@ -310,7 +338,54 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             fb.reason()
         );
     }
-    print_outcome(&scheduler, &out, args.flag("short-only"));
+    if let Some(dir) = flight_dir {
+        let dir = std::path::Path::new(dir);
+        let log: &[megha::obs::flight::FlightEvent] =
+            out.flight_log.as_deref().map(|v| v.as_slice()).unwrap_or(&[]);
+        megha::obs::flight::export(dir, log)
+            .with_context(|| format!("exporting flight log to {}", dir.display()))?;
+        eprintln!("flight: exported {} events to {}", log.len(), dir.display());
+    }
+    if json {
+        println!("{}", out.to_json().encode());
+    } else {
+        print_outcome(&scheduler, &out, args.flag("short-only"));
+    }
+    Ok(())
+}
+
+/// `megha flight-verify`: re-read an exported flight directory and
+/// cross-check the three formats against each other — and, with
+/// `--run-json`, against the `flight.events` count a `simulate --json`
+/// dump claims. Exits non-zero on any mismatch (the CI smoke).
+fn cmd_flight_verify(args: &Args) -> Result<()> {
+    let dir = args.get("dir").context("--dir DIR required")?;
+    let dir = std::path::Path::new(dir);
+    let events = megha::obs::flight::read_columnar(dir)
+        .with_context(|| format!("reading columnar log in {}", dir.display()))?;
+    let n = events.len() as u64;
+    let csv = megha::obs::flight::csv_event_count(&dir.join("flight.csv"))?;
+    if csv != n {
+        bail!("flight.csv has {csv} rows but the columnar log has {n} events");
+    }
+    let perfetto = megha::obs::flight::perfetto_event_count(&dir.join("trace.json"))
+        .map_err(anyhow::Error::msg)?;
+    if perfetto != n {
+        bail!("trace.json has {perfetto} events but the columnar log has {n}");
+    }
+    if let Some(f) = args.get("run-json") {
+        let text = std::fs::read_to_string(f).with_context(|| format!("reading {f}"))?;
+        let doc = megha::util::json::Json::parse(&text).map_err(anyhow::Error::msg)?;
+        let claimed = doc
+            .get("flight")
+            .and_then(|j| j.get("events"))
+            .and_then(|j| j.as_u64())
+            .context("run JSON carries no flight.events (was the run recorded?)")?;
+        if claimed != n {
+            bail!("run JSON claims {claimed} flight events but the exported log has {n}");
+        }
+    }
+    println!("flight-verify ok: {n} events consistent across columnar, CSV, and Perfetto");
     Ok(())
 }
 
@@ -436,6 +511,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 sc
             })
             .collect()
+    } else {
+        scenarios
+    };
+    let scenarios: Vec<sweep::Scenario> = if args.flag("flight") {
+        scenarios.into_iter().map(|sc| sc.with_flight(true)).collect()
     } else {
         scenarios
     };

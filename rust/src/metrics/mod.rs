@@ -5,7 +5,11 @@
 //! (inconsistency events for Fig. 2b, message counts, scheduling
 //! decisions). Summaries are exact (full sort), not sketched.
 
+use std::sync::Arc;
+
+use crate::obs::flight::{FlightEvent, FlightStats};
 use crate::sim::time::SimTime;
+use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
 use crate::workload::JobClass;
 
@@ -135,6 +139,15 @@ pub struct RunOutcome {
     /// back to the classic sequential driver — the effective count is
     /// [`shards`](Self::shards) (1), this records *why*.
     pub shard_fallback: Option<ShardFallback>,
+    /// Aggregate staleness accounting derived from the flight-recorder
+    /// log (`None` unless [`SimParams::flight`](crate::config::SimParams)
+    /// was set). Recording is inert: every other field is bit-identical
+    /// with the recorder on or off (`tests/driver_invariants.rs`).
+    pub flight: Option<FlightStats>,
+    /// The merged per-decision event log itself (`Arc` so cloning a
+    /// `RunOutcome` stays cheap). Export with
+    /// [`obs::flight::export`](crate::obs::flight::export).
+    pub flight_log: Option<Arc<Vec<FlightEvent>>>,
 }
 
 impl RunOutcome {
@@ -168,6 +181,73 @@ impl RunOutcome {
         }
     }
 
+    /// Machine-readable dump for `simulate --json`: run-wide counters,
+    /// delay summaries, the flight-recorder aggregates and the
+    /// `shard_fallback` reason — everything the pretty tables print,
+    /// without scraping. Per-job records are summarized, not inlined.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("jobs", Json::num(self.jobs.len() as f64)),
+            ("delay", summarize_jobs(&self.jobs).to_json()),
+            (
+                "delay_short",
+                summarize_class(&self.jobs, JobClass::Short).to_json(),
+            ),
+            (
+                "delay_long",
+                summarize_class(&self.jobs, JobClass::Long).to_json(),
+            ),
+            (
+                "delay_constrained",
+                summarize_constrained(&self.jobs).to_json(),
+            ),
+            ("delay_gang", summarize_gang(&self.jobs).to_json()),
+            ("inconsistencies", Json::num(self.inconsistencies as f64)),
+            ("inconsistency_ratio", Json::num(self.inconsistency_ratio())),
+            ("tasks", Json::num(self.tasks as f64)),
+            ("messages", Json::num(self.messages as f64)),
+            ("decisions", Json::num(self.decisions as f64)),
+            (
+                "constraint_rejections",
+                Json::num(self.constraint_rejections as f64),
+            ),
+            ("gang_rejections", Json::num(self.gang_rejections as f64)),
+            ("makespan_s", Json::num(self.makespan.as_secs())),
+            ("events", Json::num(self.events as f64)),
+            ("sim_wall_s", Json::num(self.sim_wall_s)),
+            ("events_per_sec", Json::num(self.events_per_sec())),
+            ("sdps", Json::num(self.sdps())),
+            ("shards", Json::num(self.shards as f64)),
+            (
+                "shard_fallback",
+                match self.shard_fallback {
+                    Some(r) => Json::str(r.reason()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "flight",
+                match &self.flight {
+                    Some(s) => s.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "breakdown",
+                Json::obj(vec![
+                    (
+                        "queue_scheduler_s",
+                        Json::num(self.breakdown.queue_scheduler_s),
+                    ),
+                    ("proc_s", Json::num(self.breakdown.proc_s)),
+                    ("comm_s", Json::num(self.breakdown.comm_s)),
+                    ("queue_worker_s", Json::num(self.breakdown.queue_worker_s)),
+                    ("exec_s", Json::num(self.breakdown.exec_s)),
+                ]),
+            ),
+        ])
+    }
+
     /// Mean DC utilization over the run (§2.3.3): executed task-seconds
     /// divided by `workers × makespan`. Lower delays at equal work mean
     /// a shorter makespan and therefore higher utilization — the paper's
@@ -191,6 +271,19 @@ pub struct DelaySummary {
     pub p95: f64,
     pub p99: f64,
     pub max: f64,
+}
+
+impl DelaySummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("mean", Json::num(self.mean)),
+            ("median", Json::num(self.median)),
+            ("p95", Json::num(self.p95)),
+            ("p99", Json::num(self.p99)),
+            ("max", Json::num(self.max)),
+        ])
+    }
 }
 
 pub fn summarize(delays: &[f64]) -> DelaySummary {

@@ -1,0 +1,839 @@
+//! Flight recorder: a pooled, pre-allocated, off-by-default per-decision
+//! event log threaded through [`SimCtx`](crate::sim::driver::SimCtx).
+//!
+//! Every scheduler decision — Megha GM match / LM verify / invalidate /
+//! masked-apply, Sparrow/Eagle probe / bind / re-probe / gang handshake,
+//! Pigeon route / queue / claim — plus driver-level epoch, fast-forward
+//! and fallback events is recorded as a fixed-size [`FlightEvent`] with
+//! sim-timestamp, actor id, job/task id and a per-event payload (for GM
+//! matches: *staleness*, the sim-time since the GM word being matched
+//! was last refreshed by an LM snapshot).
+//!
+//! Determinism contract: per-shard recorders write to lane-private
+//! chunked buffers; at run end the lanes are concatenated in fixed lane
+//! order and stably sorted by timestamp, so threaded and sequential
+//! sharded runs emit *identical* logs (`run_epoch` is the single shared
+//! drain path, so each lane's private log is already bit-identical
+//! across modes).
+//!
+//! Buffering reuses the `BufPools` recycling discipline: events land in
+//! fixed-size pre-allocated chunks; retired chunks go to a capped spare
+//! list and are reissued on [`FlightRecorder::reset`], so steady-state
+//! recording allocates one chunk per [`CHUNK`] events and reuse
+//! allocates nothing.
+//!
+//! Export formats:
+//! - **columnar**: one file per column (`t_us.col`, `kind.col`, …), a
+//!   16-byte header (`MGFC` magic, version, element width, little-endian
+//!   `u64` count) followed by `count` little-endian values;
+//! - **CSV** fallback (`flight.csv`) with symbolic kind names;
+//! - **Perfetto/Chrome** `trace.json` (catapult `traceEvents` format)
+//!   with one track per GM / LM / scheduler / node / group / driver
+//!   lane, loadable in `ui.perfetto.dev` or `chrome://tracing`.
+
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::metrics::RunOutcome;
+use crate::sim::time::SimTime;
+use crate::util::json::Json;
+
+/// Sentinel for "no job / no task" on events that are not tied to one.
+pub const NONE: u32 = u32::MAX;
+
+/// Events per pre-allocated chunk (96 KiB per chunk at 24 B/event).
+pub const CHUNK: usize = 4096;
+
+/// Retired chunks kept for reuse (mirrors `BufPools::POOL_CAP`).
+const SPARE_CAP: usize = 64;
+
+/// What happened. Discriminants are the on-disk encoding (`kind.col`,
+/// one byte per event) — append-only, never renumber.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum EvKind {
+    /// Megha GM matched a scalar task against its (possibly stale)
+    /// global view. Payload = staleness in µs: sim-time since the LM
+    /// word being matched was last refreshed by a snapshot.
+    GmMatch = 1,
+    /// Megha GM matched a gang atomically. Payload = staleness in µs.
+    GmMatchGang = 2,
+    /// Megha LM verified a proposed mapping and launched it.
+    LmVerifyOk = 3,
+    /// Megha LM rejected a proposed mapping (inconsistency). The job
+    /// re-queues at the GM; chains of these per (job, task) measure how
+    /// long stale state chased a placement.
+    LmInvalid = 4,
+    /// Megha GM applied a full LM snapshot. Payload = µs since this LM
+    /// partition was last refreshed (refresh interval).
+    GmApplyFull = 5,
+    /// Megha GM applied a delta snapshot via the masked path.
+    GmApplyMasked = 6,
+    /// Sparrow/Eagle probe enqueued at a worker. Payload = worker id.
+    Probe = 7,
+    /// Task bound to a worker (late binding won). Payload = worker id.
+    Bind = 8,
+    /// Re-probe after a constraint miss or gang refusal. Payload = the
+    /// replacement worker id.
+    Reprobe = 9,
+    /// Gang seat request sent to a node (all-or-nothing). Payload =
+    /// gang width (slots).
+    GangTry = 10,
+    /// Node refused a gang seat (insufficient co-residency).
+    GangNack = 11,
+    /// Eagle centralized scheduler placed a long task. Payload = worker.
+    LongPlace = 12,
+    /// Pigeon distributor routed a job to a group coordinator.
+    /// Payload = group id.
+    Route = 13,
+    /// Pigeon coordinator queued a task (no eligible free worker).
+    /// Payload = 1 for the high-priority queue, 0 for low.
+    Queue = 14,
+    /// Pigeon coordinator claimed a worker for a task. Payload = worker.
+    Claim = 15,
+    /// Sharded driver: a lane drained its first event of an epoch.
+    /// Payload = epoch horizon in µs.
+    DrvEpoch = 16,
+    /// Sharded driver: idle-epoch fast-forward skipped dead time at a
+    /// barrier. Payload = µs skipped.
+    DrvFastForward = 17,
+    /// Run fell back from the sharded to the classic driver. Payload =
+    /// discriminant of [`crate::metrics::ShardFallback`].
+    DrvFallback = 18,
+}
+
+impl EvKind {
+    /// All kinds, in discriminant order (for tests and generators).
+    pub const ALL: [EvKind; 18] = [
+        EvKind::GmMatch,
+        EvKind::GmMatchGang,
+        EvKind::LmVerifyOk,
+        EvKind::LmInvalid,
+        EvKind::GmApplyFull,
+        EvKind::GmApplyMasked,
+        EvKind::Probe,
+        EvKind::Bind,
+        EvKind::Reprobe,
+        EvKind::GangTry,
+        EvKind::GangNack,
+        EvKind::LongPlace,
+        EvKind::Route,
+        EvKind::Queue,
+        EvKind::Claim,
+        EvKind::DrvEpoch,
+        EvKind::DrvFastForward,
+        EvKind::DrvFallback,
+    ];
+
+    /// Symbolic name used in the CSV fallback and Perfetto tracks.
+    pub fn name(self) -> &'static str {
+        match self {
+            EvKind::GmMatch => "gm_match",
+            EvKind::GmMatchGang => "gm_match_gang",
+            EvKind::LmVerifyOk => "lm_verify_ok",
+            EvKind::LmInvalid => "lm_invalid",
+            EvKind::GmApplyFull => "gm_apply_full",
+            EvKind::GmApplyMasked => "gm_apply_masked",
+            EvKind::Probe => "probe",
+            EvKind::Bind => "bind",
+            EvKind::Reprobe => "reprobe",
+            EvKind::GangTry => "gang_try",
+            EvKind::GangNack => "gang_nack",
+            EvKind::LongPlace => "long_place",
+            EvKind::Route => "route",
+            EvKind::Queue => "queue",
+            EvKind::Claim => "claim",
+            EvKind::DrvEpoch => "drv_epoch",
+            EvKind::DrvFastForward => "drv_fast_forward",
+            EvKind::DrvFallback => "drv_fallback",
+        }
+    }
+
+    /// Inverse of the on-disk byte encoding.
+    pub fn from_u8(b: u8) -> Option<EvKind> {
+        EvKind::ALL.get(b.wrapping_sub(1) as usize).copied()
+    }
+}
+
+/// Who acted. Encoded into 32 bits as `tag << 28 | id` so the columnar
+/// actor column stays a single `u32`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Actor {
+    /// Megha global master.
+    Gm(u32),
+    /// Megha local master (partition).
+    Lm(u32),
+    /// Distributed scheduler frontend (Sparrow/Eagle scheduler, Pigeon
+    /// distributor, Eagle's centralized long scheduler as id 0).
+    Sched(u32),
+    /// Worker-side actor (node handling probes / gang seats).
+    Node(u32),
+    /// Pigeon group coordinator.
+    Group(u32),
+    /// Driver lane (shard id; 0 for the classic driver).
+    Driver(u32),
+}
+
+const ACTOR_ID_MASK: u32 = (1 << 28) - 1;
+
+impl Actor {
+    pub fn encode(self) -> u32 {
+        let (tag, id) = match self {
+            Actor::Gm(i) => (1u32, i),
+            Actor::Lm(i) => (2, i),
+            Actor::Sched(i) => (3, i),
+            Actor::Node(i) => (4, i),
+            Actor::Group(i) => (5, i),
+            Actor::Driver(i) => (6, i),
+        };
+        (tag << 28) | (id & ACTOR_ID_MASK)
+    }
+
+    pub fn decode(v: u32) -> Option<Actor> {
+        let id = v & ACTOR_ID_MASK;
+        match v >> 28 {
+            1 => Some(Actor::Gm(id)),
+            2 => Some(Actor::Lm(id)),
+            3 => Some(Actor::Sched(id)),
+            4 => Some(Actor::Node(id)),
+            5 => Some(Actor::Group(id)),
+            6 => Some(Actor::Driver(id)),
+            _ => None,
+        }
+    }
+
+    /// Track label for the Perfetto export (`gm3`, `lm0`, `driver2`, …).
+    pub fn label(self) -> String {
+        match self {
+            Actor::Gm(i) => format!("gm{i}"),
+            Actor::Lm(i) => format!("lm{i}"),
+            Actor::Sched(i) => format!("sched{i}"),
+            Actor::Node(i) => format!("node{i}"),
+            Actor::Group(i) => format!("group{i}"),
+            Actor::Driver(i) => format!("driver{i}"),
+        }
+    }
+}
+
+/// One recorded decision. Fixed-size (`Copy`, 32 B in memory, 24 B on
+/// disk across the six columns); the meaning of `payload` depends on
+/// [`kind`](FlightEvent::kind) — see each [`EvKind`] variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FlightEvent {
+    /// Sim-time of the decision, µs.
+    pub t_us: u64,
+    pub kind: EvKind,
+    /// Encoded [`Actor`].
+    pub actor: u32,
+    /// Job index, or [`NONE`].
+    pub job: u32,
+    /// Task index within the job, or [`NONE`].
+    pub task: u32,
+    pub payload: u64,
+}
+
+/// Lane-private event buffer. Off by default; when disabled,
+/// [`record`](FlightRecorder::record) is a single predictable branch so
+/// instrumented call sites cost nothing measurable (pinned by the
+/// `flight/off` bench).
+#[derive(Debug, Default)]
+pub struct FlightRecorder {
+    enabled: bool,
+    chunks: Vec<Vec<FlightEvent>>,
+    spare: Vec<Vec<FlightEvent>>,
+}
+
+impl FlightRecorder {
+    pub fn new(enabled: bool) -> FlightRecorder {
+        let mut r = FlightRecorder {
+            enabled,
+            chunks: Vec::new(),
+            spare: Vec::new(),
+        };
+        if enabled {
+            // Pre-allocate so the first recorded decision never pays
+            // for the first chunk inside the event loop.
+            r.chunks.push(Vec::with_capacity(CHUNK));
+        }
+        r
+    }
+
+    /// The inert recorder (what every run gets unless `flight` is set).
+    pub fn off() -> FlightRecorder {
+        FlightRecorder::new(false)
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Append one event. No-op (one branch) when disabled.
+    #[inline]
+    pub fn record(
+        &mut self,
+        t: SimTime,
+        kind: EvKind,
+        actor: Actor,
+        job: u32,
+        task: u32,
+        payload: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let need_chunk = match self.chunks.last() {
+            Some(c) => c.len() == CHUNK,
+            None => true,
+        };
+        if need_chunk {
+            let c = self.spare.pop().unwrap_or_else(|| Vec::with_capacity(CHUNK));
+            self.chunks.push(c);
+        }
+        self.chunks.last_mut().unwrap().push(FlightEvent {
+            t_us: t.as_micros(),
+            kind,
+            actor: actor.encode(),
+            job,
+            task,
+            payload,
+        });
+    }
+
+    /// Events recorded so far.
+    pub fn len(&self) -> usize {
+        self.chunks.iter().map(|c| c.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.iter().all(|c| c.is_empty())
+    }
+
+    /// Move all events out, recycling the emptied chunks into the spare
+    /// list (capped, like `BufPools`) so the recorder can be reused
+    /// without reallocating.
+    pub fn drain_into(&mut self, out: &mut Vec<FlightEvent>) {
+        out.reserve(self.len());
+        for mut c in self.chunks.drain(..) {
+            out.extend_from_slice(&c);
+            c.clear();
+            if self.spare.len() < SPARE_CAP {
+                self.spare.push(c);
+            }
+        }
+    }
+
+    /// Discard all events, keeping the chunks for reuse.
+    pub fn reset(&mut self) {
+        for mut c in self.chunks.drain(..) {
+            c.clear();
+            if self.spare.len() < SPARE_CAP {
+                self.spare.push(c);
+            }
+        }
+    }
+}
+
+/// Merge lane-private logs into one run log: concatenate in the given
+/// (fixed) lane order, then stable-sort by timestamp. Both steps are
+/// deterministic, so threaded and sequential sharded runs — whose
+/// per-lane logs are bit-identical because `run_epoch` is the single
+/// shared drain path — produce byte-identical merged logs.
+pub fn merge(lanes: Vec<FlightRecorder>) -> Vec<FlightEvent> {
+    let mut log = Vec::new();
+    for mut lane in lanes {
+        lane.drain_into(&mut log);
+    }
+    log.sort_by_key(|e| e.t_us); // stable: ties keep lane order
+    log
+}
+
+/// Aggregate staleness accounting derived from a merged log, surfaced
+/// on [`RunOutcome::flight`] and as sweep columns.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FlightStats {
+    /// Total recorded events.
+    pub events: u64,
+    /// GM matches (scalar + gang) — the staleness sample count.
+    pub matches: u64,
+    /// Staleness-at-match percentiles, µs (over `GmMatch`/`GmMatchGang`
+    /// payloads): how old the GM word being matched was.
+    pub stale_p50_us: u64,
+    pub stale_p99_us: u64,
+    pub stale_max_us: u64,
+    /// LM invalidations recorded (`LmInvalid` events).
+    pub invalidations: u64,
+    /// Invalidation-chain length percentiles: per (job, task) that was
+    /// invalidated at least once, how many times stale state chased it.
+    pub chain_p50: u64,
+    pub chain_p99: u64,
+    pub chain_max: u64,
+}
+
+/// Index of the q-th percentile (nearest-rank on `(n-1)·q`) — integer
+/// arithmetic so the stats are exactly reproducible.
+fn pct_idx(n: usize, num: usize, den: usize) -> usize {
+    if n == 0 {
+        0
+    } else {
+        (n - 1) * num / den
+    }
+}
+
+/// Derive [`FlightStats`] from a merged log.
+pub fn stats(log: &[FlightEvent]) -> FlightStats {
+    let mut stale: Vec<u64> = log
+        .iter()
+        .filter(|e| matches!(e.kind, EvKind::GmMatch | EvKind::GmMatchGang))
+        .map(|e| e.payload)
+        .collect();
+    stale.sort_unstable();
+    let mut chains: BTreeMap<(u32, u32), u64> = BTreeMap::new();
+    for e in log.iter().filter(|e| e.kind == EvKind::LmInvalid) {
+        *chains.entry((e.job, e.task)).or_insert(0) += 1;
+    }
+    let mut chain: Vec<u64> = chains.into_values().collect();
+    chain.sort_unstable();
+    let at = |v: &Vec<u64>, num, den| {
+        if v.is_empty() {
+            0
+        } else {
+            v[pct_idx(v.len(), num, den)]
+        }
+    };
+    FlightStats {
+        events: log.len() as u64,
+        matches: stale.len() as u64,
+        stale_p50_us: at(&stale, 50, 100),
+        stale_p99_us: at(&stale, 99, 100),
+        stale_max_us: stale.last().copied().unwrap_or(0),
+        invalidations: chain.iter().sum(),
+        chain_p50: at(&chain, 50, 100),
+        chain_p99: at(&chain, 99, 100),
+        chain_max: chain.last().copied().unwrap_or(0),
+    }
+}
+
+impl FlightStats {
+    /// JSON object for `simulate --json` and the CI smoke check.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("events", Json::num(self.events as f64)),
+            ("matches", Json::num(self.matches as f64)),
+            ("stale_p50_us", Json::num(self.stale_p50_us as f64)),
+            ("stale_p99_us", Json::num(self.stale_p99_us as f64)),
+            ("stale_max_us", Json::num(self.stale_max_us as f64)),
+            ("invalidations", Json::num(self.invalidations as f64)),
+            ("chain_p50", Json::num(self.chain_p50 as f64)),
+            ("chain_p99", Json::num(self.chain_p99 as f64)),
+            ("chain_max", Json::num(self.chain_max as f64)),
+        ])
+    }
+}
+
+/// Attach a merged log (and its derived stats) to a run outcome.
+pub fn attach(out: &mut RunOutcome, log: Vec<FlightEvent>) {
+    out.flight = Some(stats(&log));
+    out.flight_log = Some(Arc::new(log));
+}
+
+/// Append a [`EvKind::DrvFallback`] event after a sharded request fell
+/// back to the classic driver (the classic run's log already exists, so
+/// this re-derives the stats to keep counts consistent).
+pub fn record_fallback(out: &mut RunOutcome) {
+    let (Some(reason), Some(arc)) = (out.shard_fallback, out.flight_log.take()) else {
+        return;
+    };
+    let mut log = Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone());
+    let code = match reason {
+        crate::metrics::ShardFallback::PlanClamped => 0u64,
+        crate::metrics::ShardFallback::ZeroWindow => 1,
+        crate::metrics::ShardFallback::Unsupported => 2,
+    };
+    log.push(FlightEvent {
+        t_us: 0,
+        kind: EvKind::DrvFallback,
+        actor: Actor::Driver(0).encode(),
+        job: NONE,
+        task: NONE,
+        payload: code,
+    });
+    log.sort_by_key(|e| e.t_us);
+    attach(out, log);
+}
+
+// ---------------------------------------------------------------------------
+// Columnar export: one file per column, 16-byte header + LE values.
+// ---------------------------------------------------------------------------
+
+const MAGIC: [u8; 4] = *b"MGFC";
+const VERSION: u8 = 1;
+
+/// `(file name, element width in bytes)` for each column, in on-disk
+/// order. `kind` is one byte; ids are `u32`; times/payloads are `u64`.
+pub const COLUMNS: [(&str, u8); 6] = [
+    ("t_us.col", 8),
+    ("kind.col", 1),
+    ("actor.col", 4),
+    ("job.col", 4),
+    ("task.col", 4),
+    ("payload.col", 8),
+];
+
+fn write_column(path: &Path, width: u8, count: u64, body: &[u8]) -> io::Result<()> {
+    let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&MAGIC)?;
+    f.write_all(&[VERSION, width, 0, 0])?;
+    f.write_all(&count.to_le_bytes())?;
+    f.write_all(body)?;
+    f.flush()
+}
+
+fn read_column(path: &Path, want_width: u8) -> io::Result<Vec<u8>> {
+    let mut f = std::fs::File::open(path)?;
+    let mut head = [0u8; 16];
+    f.read_exact(&mut head)?;
+    let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, format!("{path:?}: {msg}"));
+    if head[0..4] != MAGIC {
+        return Err(bad("bad magic"));
+    }
+    if head[4] != VERSION {
+        return Err(bad("unsupported version"));
+    }
+    if head[5] != want_width {
+        return Err(bad("unexpected element width"));
+    }
+    let count = u64::from_le_bytes(head[8..16].try_into().unwrap());
+    let mut body = Vec::new();
+    f.read_to_end(&mut body)?;
+    if body.len() as u64 != count * want_width as u64 {
+        return Err(bad("body length does not match header count"));
+    }
+    Ok(body)
+}
+
+/// Write the six column files under `dir` (created if missing).
+pub fn write_columnar(dir: &Path, log: &[FlightEvent]) -> io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let n = log.len() as u64;
+    let mut body: Vec<u8> = Vec::with_capacity(log.len() * 8);
+    let mut emit = |name: &str, width: u8, fill: &mut dyn FnMut(&mut Vec<u8>)| {
+        body.clear();
+        fill(&mut body);
+        write_column(&dir.join(name), width, n, &body)
+    };
+    emit("t_us.col", 8, &mut |b| {
+        log.iter().for_each(|e| b.extend_from_slice(&e.t_us.to_le_bytes()));
+    })?;
+    emit("kind.col", 1, &mut |b| {
+        log.iter().for_each(|e| b.push(e.kind as u8));
+    })?;
+    emit("actor.col", 4, &mut |b| {
+        log.iter().for_each(|e| b.extend_from_slice(&e.actor.to_le_bytes()));
+    })?;
+    emit("job.col", 4, &mut |b| {
+        log.iter().for_each(|e| b.extend_from_slice(&e.job.to_le_bytes()));
+    })?;
+    emit("task.col", 4, &mut |b| {
+        log.iter().for_each(|e| b.extend_from_slice(&e.task.to_le_bytes()));
+    })?;
+    emit("payload.col", 8, &mut |b| {
+        log.iter().for_each(|e| b.extend_from_slice(&e.payload.to_le_bytes()));
+    })
+}
+
+/// Read the six column files back into an event vector (exact inverse
+/// of [`write_columnar`], pinned by the exporter round-trip proptest).
+pub fn read_columnar(dir: &Path) -> io::Result<Vec<FlightEvent>> {
+    let u64s = |name: &str| -> io::Result<Vec<u64>> {
+        Ok(read_column(&dir.join(name), 8)?
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    };
+    let u32s = |name: &str| -> io::Result<Vec<u32>> {
+        Ok(read_column(&dir.join(name), 4)?
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    };
+    let t_us = u64s("t_us.col")?;
+    let kind_raw = read_column(&dir.join("kind.col"), 1)?;
+    let actor = u32s("actor.col")?;
+    let job = u32s("job.col")?;
+    let task = u32s("task.col")?;
+    let payload = u64s("payload.col")?;
+    let n = t_us.len();
+    if [kind_raw.len(), actor.len(), job.len(), task.len(), payload.len()] != [n; 5] {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "column lengths disagree",
+        ));
+    }
+    let mut log = Vec::with_capacity(n);
+    for i in 0..n {
+        let kind = EvKind::from_u8(kind_raw[i]).ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unknown event kind byte {}", kind_raw[i]),
+            )
+        })?;
+        log.push(FlightEvent {
+            t_us: t_us[i],
+            kind,
+            actor: actor[i],
+            job: job[i],
+            task: task[i],
+            payload: payload[i],
+        });
+    }
+    Ok(log)
+}
+
+// ---------------------------------------------------------------------------
+// CSV fallback.
+// ---------------------------------------------------------------------------
+
+/// Write `dir/flight.csv` (header + one row per event, symbolic kinds).
+pub fn write_csv(dir: &Path, log: &[FlightEvent]) -> io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut f = io::BufWriter::new(std::fs::File::create(dir.join("flight.csv"))?);
+    writeln!(f, "t_us,kind,actor,job,task,payload")?;
+    for e in log {
+        let actor = Actor::decode(e.actor)
+            .map(|a| a.label())
+            .unwrap_or_else(|| format!("raw{}", e.actor));
+        writeln!(
+            f,
+            "{},{},{},{},{},{}",
+            e.t_us,
+            e.kind.name(),
+            actor,
+            e.job,
+            e.task,
+            e.payload
+        )?;
+    }
+    f.flush()
+}
+
+/// Count data rows in a `flight.csv` (for the CI cross-check).
+pub fn csv_event_count(path: &Path) -> io::Result<u64> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(text.lines().skip(1).filter(|l| !l.is_empty()).count() as u64)
+}
+
+// ---------------------------------------------------------------------------
+// Perfetto / Chrome trace-event export.
+// ---------------------------------------------------------------------------
+
+/// Write `dir/trace.json` in the catapult `traceEvents` format: one
+/// instant event per flight event, one track (tid) per distinct actor
+/// with a `thread_name` metadata record, timestamps in µs. Tids are
+/// assigned densely over the sorted distinct actor encodings so the
+/// file is deterministic.
+pub fn write_perfetto(dir: &Path, log: &[FlightEvent]) -> io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut tids: BTreeMap<u32, usize> = BTreeMap::new();
+    for e in log {
+        let next = tids.len();
+        tids.entry(e.actor).or_insert(next);
+    }
+    // Dense tids in sorted-encoding order, not first-seen order.
+    for (i, tid) in tids.values_mut().enumerate() {
+        *tid = i;
+    }
+    let mut events: Vec<Json> = Vec::with_capacity(log.len() + tids.len());
+    for (&actor, &tid) in &tids {
+        let label = Actor::decode(actor)
+            .map(|a| a.label())
+            .unwrap_or_else(|| format!("raw{actor}"));
+        events.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(tid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(&label))])),
+        ]));
+    }
+    for e in log {
+        events.push(Json::obj(vec![
+            ("name", Json::str(e.kind.name())),
+            ("ph", Json::str("i")),
+            ("s", Json::str("t")),
+            ("ts", Json::num(e.t_us as f64)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(tids[&e.actor] as f64)),
+            (
+                "args",
+                Json::obj(vec![
+                    ("job", Json::num(e.job as f64)),
+                    ("task", Json::num(e.task as f64)),
+                    ("payload", Json::num(e.payload as f64)),
+                ]),
+            ),
+        ]));
+    }
+    let doc = Json::obj(vec![("traceEvents", Json::arr(events))]);
+    std::fs::write(dir.join("trace.json"), doc.encode())
+}
+
+/// Count non-metadata events in an exported `trace.json`.
+pub fn perfetto_event_count(path: &Path) -> Result<u64, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+    let doc = Json::parse(&text)?;
+    let evs = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| "trace.json: missing traceEvents array".to_string())?;
+    let n = evs
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) != Some("M"))
+        .count();
+    Ok(n as u64)
+}
+
+/// Export all three formats (columnar + CSV + Perfetto) under `dir`.
+pub fn export(dir: &Path, log: &[FlightEvent]) -> io::Result<()> {
+    write_columnar(dir, log)?;
+    write_csv(dir, log)?;
+    write_perfetto(dir, log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: u64, kind: EvKind, job: u32, payload: u64) -> FlightEvent {
+        FlightEvent {
+            t_us: t,
+            kind,
+            actor: Actor::Gm(0).encode(),
+            job,
+            task: 0,
+            payload,
+        }
+    }
+
+    #[test]
+    fn actor_roundtrip() {
+        for a in [
+            Actor::Gm(0),
+            Actor::Lm(9),
+            Actor::Sched(131),
+            Actor::Node(99_999),
+            Actor::Group(7),
+            Actor::Driver(3),
+        ] {
+            assert_eq!(Actor::decode(a.encode()), Some(a));
+        }
+        assert_eq!(Actor::decode(0), None);
+    }
+
+    #[test]
+    fn kind_byte_roundtrip() {
+        for k in EvKind::ALL {
+            assert_eq!(EvKind::from_u8(k as u8), Some(k));
+        }
+        assert_eq!(EvKind::from_u8(0), None);
+        assert_eq!(EvKind::from_u8(200), None);
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut r = FlightRecorder::off();
+        r.record(SimTime::from_micros(5), EvKind::Probe, Actor::Sched(0), 1, 2, 3);
+        assert!(r.is_empty());
+        assert!(!r.enabled());
+    }
+
+    #[test]
+    fn recorder_spans_chunks_and_recycles() {
+        let mut r = FlightRecorder::new(true);
+        let n = CHUNK * 2 + 17;
+        for i in 0..n {
+            r.record(
+                SimTime::from_micros(i as u64),
+                EvKind::Bind,
+                Actor::Node(1),
+                i as u32,
+                NONE,
+                0,
+            );
+        }
+        assert_eq!(r.len(), n);
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        assert_eq!(out.len(), n);
+        assert!(out.iter().enumerate().all(|(i, e)| e.t_us == i as u64));
+        // chunks recycled: recording again allocates from spare
+        assert!(!r.spare.is_empty());
+        r.record(SimTime::ZERO, EvKind::Bind, Actor::Node(1), 0, NONE, 0);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn merge_is_concat_then_stable_sort() {
+        let mut a = FlightRecorder::new(true);
+        let mut b = FlightRecorder::new(true);
+        a.record(SimTime::from_micros(10), EvKind::Probe, Actor::Sched(0), 0, 0, 0);
+        a.record(SimTime::from_micros(30), EvKind::Bind, Actor::Sched(0), 0, 0, 0);
+        b.record(SimTime::from_micros(10), EvKind::Probe, Actor::Sched(1), 1, 0, 0);
+        b.record(SimTime::from_micros(20), EvKind::Bind, Actor::Sched(1), 1, 0, 0);
+        let log = merge(vec![a, b]);
+        let kinds: Vec<(u64, u32)> = log.iter().map(|e| (e.t_us, e.job)).collect();
+        // tie at t=10 keeps lane order (lane 0 before lane 1)
+        assert_eq!(kinds, vec![(10, 0), (10, 1), (20, 1), (30, 0)]);
+    }
+
+    #[test]
+    fn stats_percentiles_and_chains() {
+        let mut log = Vec::new();
+        for i in 0..100u64 {
+            log.push(ev(i, EvKind::GmMatch, i as u32, i * 10));
+        }
+        // job 7 invalidated 3 times, job 8 once
+        for _ in 0..3 {
+            log.push(ev(200, EvKind::LmInvalid, 7, 0));
+        }
+        log.push(ev(201, EvKind::LmInvalid, 8, 0));
+        let s = stats(&log);
+        assert_eq!(s.events, 104);
+        assert_eq!(s.matches, 100);
+        assert_eq!(s.stale_p50_us, 490); // idx (99*50)/100 = 49
+        assert_eq!(s.stale_p99_us, 980); // idx (99*99)/100 = 98
+        assert_eq!(s.stale_max_us, 990);
+        assert_eq!(s.invalidations, 4);
+        assert_eq!(s.chain_p50, 1);
+        assert_eq!(s.chain_max, 3);
+    }
+
+    #[test]
+    fn columnar_roundtrip_smoke() {
+        let dir = std::env::temp_dir().join(format!("megha-flight-ut-{}", std::process::id()));
+        let log = vec![
+            ev(1, EvKind::GmMatch, 4, 17),
+            ev(2, EvKind::LmInvalid, 4, 0),
+            ev(u64::MAX, EvKind::DrvFallback, NONE, 2),
+        ];
+        export(&dir, &log).unwrap();
+        assert_eq!(read_columnar(&dir).unwrap(), log);
+        assert_eq!(csv_event_count(&dir.join("flight.csv")).unwrap(), 3);
+        assert_eq!(perfetto_event_count(&dir.join("trace.json")).unwrap(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn columnar_rejects_corrupt_header() {
+        let dir = std::env::temp_dir().join(format!("megha-flight-bad-{}", std::process::id()));
+        write_columnar(&dir, &[ev(1, EvKind::Probe, 0, 0)]).unwrap();
+        let p = dir.join("kind.col");
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_columnar(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

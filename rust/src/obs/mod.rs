@@ -1,0 +1,8 @@
+//! Observability: opt-in instrumentation that never perturbs a run.
+//!
+//! Everything under this module is gated so that, when disabled, the
+//! simulated schedule is bit-identical to an uninstrumented build —
+//! the same discipline the rest of the crate applies to pooling,
+//! masked applies and the occupancy index.
+
+pub mod flight;

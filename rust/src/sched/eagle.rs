@@ -27,6 +27,7 @@ use crate::cluster::hetero::{self, ResolvedDemand};
 use crate::cluster::AvailMap;
 use crate::config::EagleConfig;
 use crate::metrics::RunOutcome;
+use crate::obs::flight::{Actor, EvKind, NONE};
 use crate::sched::common::{ProbeWorker, TaskCursor, WState};
 use crate::sim::driver::{self, Scheduler, SimCtx};
 use crate::sim::time::SimTime;
@@ -218,6 +219,15 @@ impl<'a> Eagle<'a> {
                     ctx.constraint_unblock(job);
                     ctx.gang_unblock(job);
                     ctx.out.decisions += 1;
+                    // the central long-job scheduler gets its own actor id
+                    // (n_schedulers), one past the distributed schedulers
+                    ctx.flight(
+                        EvKind::LongPlace,
+                        Actor::Sched(self.cfg.n_schedulers as u32),
+                        job,
+                        NONE,
+                        slots[0] as u64,
+                    );
                     ctx.send(Ev::GangPlace {
                         job,
                         workers: slots,
@@ -262,6 +272,13 @@ impl<'a> Eagle<'a> {
                 ctx.constraint_unblock(job);
             }
             ctx.out.decisions += 1;
+            ctx.flight(
+                EvKind::LongPlace,
+                Actor::Sched(self.cfg.n_schedulers as u32),
+                job,
+                NONE,
+                w as u64,
+            );
             ctx.send(Ev::LongPlace {
                 worker: w as u32,
                 job,
@@ -295,9 +312,11 @@ impl Scheduler for Eagle<'_> {
                 let n = self.jobs[jidx as usize].n_tasks as usize;
                 let d_per_task = self.cfg.probe_ratio.min(n_workers);
                 let mut probes: Vec<usize> = ctx.pool.take();
+                let sched = Actor::Sched(jidx % self.cfg.n_schedulers as u32);
                 for _ in 0..n {
                     ctx.rng.sample_distinct_into(n_workers, d_per_task, &mut probes);
                     for &w in &probes {
+                        ctx.flight(EvKind::Probe, sched, jidx, NONE, w as u64);
                         ctx.send(Ev::Probe {
                             worker: w as u32,
                             job: jidx,
@@ -357,6 +376,13 @@ impl Scheduler for Eagle<'_> {
                     // second rejection: random worker in the short partition
                     ctx.rng.below(short_cut.max(1))
                 };
+                ctx.flight(
+                    EvKind::Reprobe,
+                    Actor::Sched(job % self.cfg.n_schedulers as u32),
+                    job,
+                    NONE,
+                    target as u64,
+                );
                 ctx.send(Ev::Probe {
                     worker: target as u32,
                     job,
@@ -379,6 +405,13 @@ impl Scheduler for Eagle<'_> {
                             ctx.constraint_block(job);
                             ctx.send(Ev::Launch { worker, job, dur: None });
                             let w = ctx.rng.below(self.cfg.workers) as u32;
+                            ctx.flight(
+                                EvKind::Reprobe,
+                                Actor::Sched(job % self.cfg.n_schedulers as u32),
+                                job,
+                                NONE,
+                                w as u64,
+                            );
                             ctx.send(Ev::Probe { worker: w, job, retry: 0 });
                             return;
                         }
@@ -399,16 +432,37 @@ impl Scheduler for Eagle<'_> {
                             ) {
                                 ctx.pool.give(members);
                                 ctx.out.gang_rejections += 1;
+                                ctx.flight(
+                                    EvKind::GangNack,
+                                    Actor::Node(worker),
+                                    job,
+                                    NONE,
+                                    k as u64,
+                                );
                                 ctx.gang_block(job);
                                 ctx.send(Ev::Launch { worker, job, dur: None });
                                 let w = ctx.rng.below(self.cfg.workers) as u32;
+                                ctx.flight(
+                                    EvKind::Reprobe,
+                                    Actor::Sched(job % self.cfg.n_schedulers as u32),
+                                    job,
+                                    NONE,
+                                    w as u64,
+                                );
                                 ctx.send(Ev::Probe { worker: w, job, retry: 0 });
                                 return;
                             }
-                            let (_, dur) = self.jobs[job as usize]
+                            let (t, dur) = self.jobs[job as usize]
                                 .bind_next(&ctx.trace.jobs[job as usize])
                                 .expect("gang bind after exhaustion check");
                             ctx.out.decisions += 1;
+                            ctx.flight(
+                                EvKind::Bind,
+                                Actor::Sched(job % self.cfg.n_schedulers as u32),
+                                job,
+                                t as u32,
+                                worker as u64,
+                            );
                             ctx.constraint_unblock(job);
                             ctx.gang_unblock(job);
                             for &w in &members[1..] {
@@ -424,8 +478,15 @@ impl Scheduler for Eagle<'_> {
                     }
                 }
                 let dur = match self.jobs[job as usize].bind_next(&ctx.trace.jobs[job as usize]) {
-                    Some((_, dur)) => {
+                    Some((t, dur)) => {
                         ctx.out.decisions += 1;
+                        ctx.flight(
+                            EvKind::Bind,
+                            Actor::Sched(job % self.cfg.n_schedulers as u32),
+                            job,
+                            t as u32,
+                            worker as u64,
+                        );
                         if self.demands[job as usize].is_some() {
                             ctx.constraint_unblock(job);
                         }
@@ -590,8 +651,16 @@ impl Scheduler for Eagle<'_> {
                     // just ran a task of this job, so it matches any
                     // demand the job carries — no re-verification)
                     match self.jobs[job as usize].bind_next(&ctx.trace.jobs[job as usize]) {
-                        Some((_, dur)) => {
+                        Some((t, dur)) => {
                             ctx.out.decisions += 1;
+                            // sticky batch: the *node* re-binds itself
+                            ctx.flight(
+                                EvKind::Bind,
+                                Actor::Node(worker),
+                                job,
+                                t as u32,
+                                worker as u64,
+                            );
                             if self.demands[job as usize].is_some() {
                                 ctx.constraint_unblock(job);
                             }

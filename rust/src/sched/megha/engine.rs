@@ -8,6 +8,7 @@ use crate::cluster::hetero::{self, NodeCatalog, ResolvedDemand};
 use crate::cluster::{AvailMap, ClusterSpec, PartitionId, WorkerId};
 use crate::config::MeghaConfig;
 use crate::metrics::RunOutcome;
+use crate::obs::flight::{Actor, EvKind, NONE};
 use crate::runtime::match_engine::{constrained_plan, gang_plan, MatchPlanner, RustMatchEngine};
 use crate::sim::driver::{self, Scheduler, SimCtx};
 use crate::sim::time::SimTime;
@@ -172,6 +173,12 @@ pub(super) struct Gm {
     /// While false, the GM's range words still equal the last applied
     /// snapshot, so the next chained snapshot may apply masked.
     touched: Vec<bool>,
+    /// Per LM: sim-time this GM last heard from the LM (snapshot receipt,
+    /// including version-skipped ones — an unchanged snapshot still
+    /// certifies the view as of its arrival). Maintained unconditionally
+    /// (one store per snapshot); read only by the flight recorder to
+    /// compute staleness-at-match, so it cannot perturb scheduling.
+    refreshed: Vec<SimTime>,
 }
 
 impl Gm {
@@ -336,6 +343,7 @@ pub(super) fn build_gm(cfg: &MeghaConfig, g: usize, n_jobs: usize) -> Gm {
         scan_rot: if cfg.shuffle_workers { g * wpp / n_gm } else { 0 },
         applied: vec![u64::MAX; spec.n_lm],
         touched: vec![false; spec.n_lm],
+        refreshed: vec![SimTime::ZERO; spec.n_lm],
     }
 }
 
@@ -462,6 +470,7 @@ pub(super) fn handle_event(v: &mut MeghaView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
                             lm_entry.state.set_busy(m.worker as usize);
                             lm_entry.version += 1;
                             ctx.out.tasks += 1;
+                            ctx.flight(EvKind::LmVerifyOk, Actor::Lm(lm), m.job, m.task, 1);
                             ctx.push_after(m.dur, Ev::TaskFinish {
                                 lm,
                                 gm,
@@ -469,6 +478,7 @@ pub(super) fn handle_event(v: &mut MeghaView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
                                 worker: m.worker,
                             });
                         } else {
+                            ctx.flight(EvKind::LmInvalid, Actor::Lm(lm), m.job, m.task, 1);
                             invalid.push((m.job, m.task));
                         }
                     } else {
@@ -477,12 +487,14 @@ pub(super) fn handle_event(v: &mut MeghaView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
                         // whole mapping rolls back (nothing is
                         // claimed) and the task is invalidated
                         let ok = m.gang.iter().all(|&w| lm_entry.state.is_free(w as usize));
+                        let width = m.gang.len() as u64;
                         if ok {
                             for &w in &m.gang {
                                 lm_entry.state.set_busy(w as usize);
                             }
                             lm_entry.version += 1;
                             ctx.out.tasks += 1;
+                            ctx.flight(EvKind::LmVerifyOk, Actor::Lm(lm), m.job, m.task, width);
                             ctx.push_after(m.dur, Ev::GangFinish {
                                 lm,
                                 gm,
@@ -491,6 +503,7 @@ pub(super) fn handle_event(v: &mut MeghaView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
                             });
                         } else {
                             ctx.out.gang_rejections += 1;
+                            ctx.flight(EvKind::LmInvalid, Actor::Lm(lm), m.job, m.task, width);
                             invalid.push((m.job, m.task));
                         }
                     }
@@ -513,7 +526,8 @@ pub(super) fn handle_event(v: &mut MeghaView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
             let gm_id = gm as usize;
             let now = ctx.now();
             let gm_entry = &mut v.gms[gm_id - v.gm_lo];
-            apply_snapshot(gm_entry, &snap, &v.spec, v.masked_applies);
+            let applied = apply_snapshot(gm_entry, &snap, &v.spec, v.masked_applies);
+            note_apply(gm, gm_entry, snap.lm as usize, applied, ctx);
             // re-queue invalid tasks at the front (§3.4.1)
             for &(job, task) in invalid.iter().rev() {
                 v.jobs[job as usize].pending.push_front(task);
@@ -691,7 +705,8 @@ pub(super) fn handle_event(v: &mut MeghaView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
             ctx.out.messages += 1;
             let gm_id = gm as usize;
             let gm_entry = &mut v.gms[gm_id - v.gm_lo];
-            apply_snapshot(gm_entry, &snap, &v.spec, v.masked_applies);
+            let applied = apply_snapshot(gm_entry, &snap, &v.spec, v.masked_applies);
+            note_apply(gm, gm_entry, snap.lm as usize, applied, ctx);
             try_schedule(
                 gm_id,
                 gm_entry,
@@ -751,14 +766,21 @@ pub fn simulate_with(
     driver::run(&mut sched, &cfg.sim, trace)
 }
 
-fn apply_snapshot(gm: &mut Gm, snap: &Snapshot, spec: &ClusterSpec, allow_masked: bool) {
+/// Returns what the apply did — `None` for a version-skip, otherwise
+/// `Some(masked)` — so callers can log it to the flight recorder.
+fn apply_snapshot(
+    gm: &mut Gm,
+    snap: &Snapshot,
+    spec: &ClusterSpec,
+    allow_masked: bool,
+) -> Option<bool> {
     // skip if this exact LM state was already applied (no change since):
     // during long straggler tails most heartbeats carry unchanged state
     APPLY_TOTAL.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let l = snap.lm as usize;
     if gm.applied[l] == snap.version {
         APPLY_SKIP.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        return;
+        return None;
     }
     // Masked apply is exact only while the GM's range words still equal
     // the snapshot's predecessor: it applied exactly `prev` and has not
@@ -793,6 +815,30 @@ fn apply_snapshot(gm: &mut Gm, snap: &Snapshot, spec: &ClusterSpec, allow_masked
     );
     gm.applied[l] = snap.version;
     gm.touched[l] = false;
+    Some(masked)
+}
+
+/// Stamp the GM's per-LM refresh time and, when the recorder is on, log
+/// the apply (full vs masked; version-skips are not logged). Shared by
+/// the `GmReply` and `GmHeartbeat` handlers.
+fn note_apply(
+    gm: u32,
+    gm_entry: &mut Gm,
+    lm: usize,
+    applied: Option<bool>,
+    ctx: &mut SimCtx<'_, Ev>,
+) {
+    let now = ctx.now();
+    if let Some(masked) = applied {
+        let kind = if masked {
+            EvKind::GmApplyMasked
+        } else {
+            EvKind::GmApplyFull
+        };
+        let interval = now.saturating_sub(gm_entry.refreshed[lm]).as_micros();
+        ctx.flight(kind, Actor::Gm(gm), NONE, NONE, interval);
+    }
+    gm_entry.refreshed[lm] = now;
 }
 
 /// The GM scheduling loop: process the job queue FIFO while the global
@@ -919,6 +965,13 @@ fn try_schedule(
                     gm.counts[part] -= slots.len() as u32;
                     let task = js.pending.pop_front().expect("plan larger than job");
                     ctx.out.decisions += 1;
+                    ctx.flight(
+                        EvKind::GmMatchGang,
+                        Actor::Gm(gm_id as u32),
+                        jidx,
+                        task,
+                        now.saturating_sub(gm.refreshed[lm]).as_micros(),
+                    );
                     batches[lm].push(Mapping {
                         job: jidx,
                         task,
@@ -945,6 +998,13 @@ fn try_schedule(
                 gm.counts[part] -= 1;
                 let task = js.pending.pop_front().expect("plan larger than job");
                 ctx.out.decisions += 1;
+                ctx.flight(
+                    EvKind::GmMatch,
+                    Actor::Gm(gm_id as u32),
+                    jidx,
+                    task,
+                    now.saturating_sub(gm.refreshed[lm]).as_micros(),
+                );
                 batches[lm].push(Mapping {
                     job: jidx,
                     task,

@@ -149,6 +149,7 @@ fn run_impl(
     if let Some(reason) = driver::shard_fallback(plan.shards(), &cfg.sim) {
         let mut out = engine::simulate_with(cfg, trace, &mut RustMatchEngine, failure);
         out.shard_fallback = Some(reason);
+        crate::obs::flight::record_fallback(&mut out);
         return out;
     }
     if let Some(f) = failure {

@@ -35,6 +35,7 @@ use crate::cluster::hetero::{self, NodeCatalog, ResolvedDemand};
 use crate::cluster::AvailMap;
 use crate::config::PigeonConfig;
 use crate::metrics::RunOutcome;
+use crate::obs::flight::{Actor, EvKind, NONE};
 use crate::sim::driver::{self, Scheduler, SimCtx};
 use crate::sim::time::SimTime;
 use crate::workload::{JobClass, Trace};
@@ -334,6 +335,7 @@ impl Scheduler for Pigeon<'_> {
         };
         let n_targets = targets.len();
         let start = jidx as usize % n_targets;
+        let dist = Actor::Sched(jidx % self.cfg.n_distributors as u32);
         for (i, &g) in targets.iter().enumerate() {
             let first = (i + n_targets - start) % n_targets;
             if first >= n_tasks {
@@ -341,6 +343,7 @@ impl Scheduler for Pigeon<'_> {
             }
             let mut durs: Vec<SimTime> = ctx.pool.take();
             durs.extend(job.durations[first..].iter().step_by(n_targets).copied());
+            ctx.flight(EvKind::Route, dist, jidx, NONE, g as u64);
             ctx.send(Ev::CoordRecv {
                 group: g,
                 job: jidx,
@@ -409,6 +412,7 @@ impl Scheduler for Pigeon<'_> {
                                 }
                                 None => {}
                             }
+                            ctx.flight(EvKind::Queue, Actor::Group(group), job, NONE, high as u64);
                             if high {
                                 g.hi_q.push_back((job, dur));
                             } else {
@@ -441,6 +445,7 @@ impl Scheduler for Pigeon<'_> {
                                 ctx.out.constraint_rejections += 1;
                                 ctx.constraint_block(job);
                             }
+                            ctx.flight(EvKind::Queue, Actor::Group(group), job, NONE, 1);
                             g.hi_q.push_back((job, dur));
                         }
                     } else if let Some(w) = claim(&mut g.general, catalog, rd, base) {
@@ -453,6 +458,7 @@ impl Scheduler for Pigeon<'_> {
                             ctx.out.constraint_rejections += 1;
                             ctx.constraint_block(job);
                         }
+                        ctx.flight(EvKind::Queue, Actor::Group(group), job, NONE, 0);
                         g.lo_q.push_back((job, dur));
                     }
                 }
@@ -609,6 +615,7 @@ pub fn simulate(cfg: &PigeonConfig, trace: &Trace) -> RunOutcome {
 fn launch(ctx: &mut SimCtx<'_, Ev>, group: u32, worker: u32, job: u32, dur: SimTime) {
     ctx.out.tasks += 1;
     ctx.out.decisions += 1;
+    ctx.flight(EvKind::Claim, Actor::Group(group), job, NONE, worker as u64);
     ctx.push_after(dur, Ev::Finish { group, worker, job });
 }
 
@@ -616,6 +623,7 @@ fn launch(ctx: &mut SimCtx<'_, Ev>, group: u32, worker: u32, job: u32, dur: SimT
 fn launch_gang(ctx: &mut SimCtx<'_, Ev>, group: u32, workers: Vec<u32>, job: u32, dur: SimTime) {
     ctx.out.tasks += 1;
     ctx.out.decisions += 1;
+    ctx.flight(EvKind::Claim, Actor::Group(group), job, NONE, workers[0] as u64);
     ctx.push_after(dur, Ev::GangFinish { group, workers, job });
 }
 

@@ -31,6 +31,7 @@
 use crate::cluster::hetero::{self, ResolvedDemand};
 use crate::config::SparrowConfig;
 use crate::metrics::RunOutcome;
+use crate::obs::flight::{Actor, EvKind, NONE};
 use crate::sched::common::{idle_coresidents, ProbeWorker, TaskCursor, WState};
 use crate::sim::driver::{self, Scheduler, SimCtx};
 use crate::sim::time::SimTime;
@@ -156,9 +157,11 @@ pub(crate) fn handle_arrival(v: &mut SparrowView<'_>, jidx: u32, ctx: &mut SimCt
     let n = v.jobs[jidx as usize].n_tasks as usize;
     let d_per_task = v.cfg.probe_ratio.min(n_workers);
     let mut probes: Vec<usize> = ctx.pool.take();
+    let sched = Actor::Sched(jidx % v.cfg.n_schedulers as u32);
     for _ in 0..n {
         ctx.rng.sample_distinct_into(n_workers, d_per_task, &mut probes);
         for &w in &probes {
+            ctx.flight(EvKind::Probe, sched, jidx, NONE, w as u64);
             ctx.send(Ev::Reserve {
                 worker: w as u32,
                 job: jidx,
@@ -196,6 +199,8 @@ pub(crate) fn handle_event(v: &mut SparrowView<'_>, ev: Ev, ctx: &mut SimCtx<'_,
                         ctx.constraint_block(job);
                         ctx.send(Ev::Launch { worker, job, dur: None });
                         let w = ctx.rng.below(v.cfg.workers) as u32;
+                        let sched = Actor::Sched(job % v.cfg.n_schedulers as u32);
+                        ctx.flight(EvKind::Reprobe, sched, job, NONE, w as u64);
                         ctx.send(Ev::Reserve { worker: w, job });
                         return;
                     }
@@ -213,6 +218,8 @@ pub(crate) fn handle_event(v: &mut SparrowView<'_>, ev: Ev, ctx: &mut SimCtx<'_,
                         ctx.out.decisions += 1;
                         ctx.constraint_unblock(job);
                         ctx.gang_unblock(job);
+                        let sched = Actor::Sched(job % v.cfg.n_schedulers as u32);
+                        ctx.flight(EvKind::GangTry, sched, job, NONE, rd.gang_width() as u64);
                         ctx.send(Ev::GangTry {
                             worker,
                             job,
@@ -224,8 +231,10 @@ pub(crate) fn handle_event(v: &mut SparrowView<'_>, ev: Ev, ctx: &mut SimCtx<'_,
                 }
             }
             let dur = match v.jobs[j].bind_next(&ctx.trace.jobs[j]) {
-                Some((_, dur)) => {
+                Some((t, dur)) => {
                     ctx.out.decisions += 1;
+                    let sched = Actor::Sched(job % v.cfg.n_schedulers as u32);
+                    ctx.flight(EvKind::Bind, sched, job, t as u32, worker as u64);
                     if v.demands[j].is_some() {
                         ctx.constraint_unblock(job);
                     }
@@ -255,12 +264,14 @@ pub(crate) fn handle_event(v: &mut SparrowView<'_>, ev: Ev, ctx: &mut SimCtx<'_,
                     v.workers[w as usize - v.worker_lo].state = WState::Busy { long: false };
                 }
                 ctx.out.tasks += 1;
+                ctx.flight(EvKind::Bind, Actor::Node(worker), job, NONE, k as u64);
                 ctx.push_after(dur, Ev::GangFinish { workers: members, job });
             } else {
                 // refuse: free the anchor and hand the duration back —
                 // the scheduler re-binds it and sends one replacement
                 // probe, so no task is ever stranded
                 ctx.out.gang_rejections += 1;
+                ctx.flight(EvKind::GangNack, Actor::Node(worker), job, NONE, k as u64);
                 ctx.pool.give(members);
                 v.workers[lw].state = WState::Idle;
                 advance_worker(worker, v.workers, v.worker_lo, ctx);
@@ -272,6 +283,8 @@ pub(crate) fn handle_event(v: &mut SparrowView<'_>, ev: Ev, ctx: &mut SimCtx<'_,
             ctx.gang_block(job);
             v.returned[job as usize].push(dur);
             let w = ctx.rng.below(v.cfg.workers) as u32;
+            let sched = Actor::Sched(job % v.cfg.n_schedulers as u32);
+            ctx.flight(EvKind::Reprobe, sched, job, NONE, w as u64);
             ctx.send(Ev::Reserve { worker: w, job });
         }
         Ev::GangFinish { workers, job } => {

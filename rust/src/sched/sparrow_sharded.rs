@@ -119,6 +119,7 @@ fn run_impl(cfg: &SparrowConfig, trace: &Trace, threaded: bool) -> RunOutcome {
     if let Some(reason) = driver::shard_fallback(plan.shards(), &cfg.sim) {
         let mut out = sparrow::simulate(cfg, trace);
         out.shard_fallback = Some(reason);
+        crate::obs::flight::record_fallback(&mut out);
         return out;
     }
     let demands = sparrow::resolve_and_check(cfg, trace);

@@ -20,6 +20,7 @@ use std::time::Instant;
 
 use crate::config::SimParams;
 use crate::metrics::{RunOutcome, ShardFallback};
+use crate::obs::flight::{self, Actor, EvKind, FlightRecorder, NONE};
 use crate::sched::common::JobTracker;
 use crate::sim::event::EventQueue;
 use crate::sim::net::NetModel;
@@ -158,6 +159,9 @@ pub struct SimCtx<'a, E> {
     /// local tracker only sees its own jobs, so it cannot answer
     /// [`all_done`](Self::all_done) itself).
     done_override: Option<bool>,
+    /// Flight recorder (lane-private under sharded execution). Off by
+    /// default; see [`SimCtx::flight`].
+    rec: &'a mut FlightRecorder,
 }
 
 impl<E> SimCtx<'_, E> {
@@ -240,6 +244,23 @@ impl<E> SimCtx<'_, E> {
     pub fn all_done(&self) -> bool {
         self.done_override.unwrap_or_else(|| self.tracker.all_done())
     }
+
+    /// Whether the flight recorder is on — call sites that must *compute*
+    /// a payload (e.g. staleness) gate on this so the off path does no
+    /// work at all.
+    #[inline]
+    pub fn flight_on(&self) -> bool {
+        self.rec.enabled()
+    }
+
+    /// Record one flight-recorder event at the current sim-time. A
+    /// single predictable branch unless the run set `SimParams::flight`
+    /// (`crate::obs::flight` documents the taxonomy and payloads).
+    #[inline]
+    pub fn flight(&mut self, kind: EvKind, actor: Actor, job: u32, task: u32, payload: u64) {
+        let t = self.q.now();
+        self.rec.record(t, kind, actor, job, task, payload);
+    }
 }
 
 /// A scheduling architecture, expressed as reactions to events.
@@ -282,10 +303,10 @@ pub fn run_with_pools<S: Scheduler>(
     trace: &Trace,
     mut pools: BufPools,
 ) -> RunOutcome {
-    let t0 = Instant::now();
     let mut rng = Rng::new(params.seed);
     let mut tracker = JobTracker::new(trace, params.short_threshold);
     let mut out = RunOutcome::default();
+    let mut rec = FlightRecorder::new(params.flight);
     let mut q: EventQueue<DriverEv<S::Ev>> = EventQueue::new();
 
     for (i, j) in trace.jobs.iter().enumerate() {
@@ -302,10 +323,14 @@ pub fn run_with_pools<S: Scheduler>(
             pool: &mut pools,
             route: None,
             done_override: None,
+            rec: &mut rec,
         };
         sched.init(&mut ctx);
     }
 
+    // started here — after arrival injection and scheduler init — so
+    // `events/s` measures exactly the drain loop it claims to
+    let t0 = Instant::now();
     while let Some((_, ev)) = q.pop() {
         let mut ctx = SimCtx {
             q: &mut q,
@@ -317,6 +342,7 @@ pub fn run_with_pools<S: Scheduler>(
             pool: &mut pools,
             route: None,
             done_override: None,
+            rec: &mut rec,
         };
         match ev {
             DriverEv::Arrival(j) => sched.on_arrival(j, &mut ctx),
@@ -341,6 +367,9 @@ pub fn run_with_pools<S: Scheduler>(
     outcome.events = q.popped();
     outcome.sim_wall_s = sim_wall_s;
     outcome.shards = 1;
+    if rec.enabled() {
+        flight::attach(&mut outcome, flight::merge(vec![rec]));
+    }
     outcome
 }
 
@@ -376,6 +405,10 @@ struct ShardLane<S: ShardSim> {
     pool: BufPools,
     /// Exchange log, bucketed by destination shard (length = shards).
     outbox: Vec<Vec<(SimTime, S::Ev)>>,
+    /// Lane-private flight recorder; merged in fixed lane order at run
+    /// end, so the merged log is identical in threaded and sequential
+    /// modes (per-lane logs already are — `run_epoch` is shared).
+    rec: FlightRecorder,
 }
 
 impl<S: ShardSim> ShardLane<S> {
@@ -393,11 +426,26 @@ impl<S: ShardSim> ShardLane<S> {
         net: &NetModel,
         trace: &Trace,
     ) {
+        let mut first = true;
         while let Some(t) = self.q.peek_time() {
             if t >= horizon {
                 break;
             }
             let (_, ev) = self.q.pop().expect("peeked event vanished");
+            if first {
+                // one epoch marker per lane per non-empty epoch, stamped
+                // at the first drained event; identical across execution
+                // modes because this method is the shared drain path
+                self.rec.record(
+                    t,
+                    EvKind::DrvEpoch,
+                    Actor::Driver(my_shard as u32),
+                    NONE,
+                    NONE,
+                    horizon.as_micros(),
+                );
+                first = false;
+            }
             let mut ctx = SimCtx {
                 q: &mut self.q,
                 rng: &mut self.rng,
@@ -412,6 +460,7 @@ impl<S: ShardSim> ShardLane<S> {
                     outbox: &mut self.outbox,
                 }),
                 done_override: Some(all_done),
+                rec: &mut self.rec,
             };
             match ev {
                 DriverEv::Arrival(j) => self.sim.on_arrival(j, &mut ctx),
@@ -465,6 +514,22 @@ fn barrier_step<S: ShardSim>(
         Some(h) if !fast_forward => h,
         _ => min_next,
     };
+    // lane 0 logs the fast-forward (the threaded mode's worker 0 runs
+    // the same (prev_horizon, min) arithmetic, so the logs agree)
+    if fast_forward {
+        if let Some(h) = prev_horizon {
+            if min_next > h {
+                lanes[0].rec.record(
+                    min_next,
+                    EvKind::DrvFastForward,
+                    Actor::Driver(0),
+                    NONE,
+                    NONE,
+                    (min_next - h).as_micros(),
+                );
+            }
+        }
+    }
     let done = lanes.iter().map(|l| l.tracker.done()).sum::<usize>() == n_jobs;
     Some((t0 + window, done))
 }
@@ -527,7 +592,6 @@ pub fn run_sharded<S: ShardSim>(
     trace: &Trace,
     threaded: bool,
 ) -> RunOutcome {
-    let t0 = Instant::now();
     let n = shards.len();
     let window = params.net.min_delay();
     // hard backstop behind the `shard_fallback` pre-check that
@@ -553,6 +617,7 @@ pub fn run_sharded<S: ShardSim>(
             out: RunOutcome::default(),
             pool: BufPools::new(),
             outbox: (0..n).map(|_| Vec::new()).collect(),
+            rec: FlightRecorder::new(params.flight),
         })
         .collect();
 
@@ -579,10 +644,15 @@ pub fn run_sharded<S: ShardSim>(
                 outbox: &mut lane.outbox,
             }),
             done_override: Some(false),
+            rec: &mut lane.rec,
         };
         lane.sim.init(&mut ctx);
     }
 
+    // started here — after arrival injection and shard init — so
+    // `events/s` measures the epoch loop, not setup (mirrors the
+    // classic driver's drain-loop-only accounting)
+    let t0 = Instant::now();
     if threaded && n > 1 {
         use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
         use std::sync::{Barrier, Mutex};
@@ -709,6 +779,24 @@ pub fn run_sharded<S: ShardSim>(
                                 Some(h) if !fast_forward => h + window,
                                 _ => m + window,
                             };
+                            // worker 0 logs the fast-forward with the
+                            // same (prev_horizon, min) arithmetic the
+                            // sequential `barrier_step` uses, keeping
+                            // lane 0's log identical across modes
+                            if me == 0 && fast_forward {
+                                if let Some(h) = prev_horizon {
+                                    if m > h {
+                                        lane.rec.record(
+                                            m,
+                                            EvKind::DrvFastForward,
+                                            Actor::Driver(0),
+                                            NONE,
+                                            NONE,
+                                            (m - h).as_micros(),
+                                        );
+                                    }
+                                }
+                            }
                             let all_done = done_cum == n_jobs;
                             lane.run_epoch(me, horizon, all_done, shard_of, net, trace);
                             let mut traffic = 0u64;
@@ -773,6 +861,7 @@ pub fn run_sharded<S: ShardSim>(
     let events: u64 = lanes.iter().map(|l| l.q.popped()).sum();
     let mut totals = RunOutcome::default();
     let mut trackers = Vec::with_capacity(n);
+    let mut recorders = Vec::with_capacity(n);
     for lane in lanes {
         totals.inconsistencies += lane.out.inconsistencies;
         totals.tasks += lane.out.tasks;
@@ -786,6 +875,7 @@ pub fn run_sharded<S: ShardSim>(
         totals.breakdown.queue_worker_s += lane.out.breakdown.queue_worker_s;
         totals.breakdown.exec_s += lane.out.breakdown.exec_s;
         trackers.push(lane.tracker);
+        recorders.push(lane.rec);
     }
     let mut outcome = JobTracker::merge_into_outcome(trackers, makespan);
     outcome.inconsistencies = totals.inconsistencies;
@@ -798,6 +888,10 @@ pub fn run_sharded<S: ShardSim>(
     outcome.events = events;
     outcome.sim_wall_s = sim_wall_s;
     outcome.shards = n as u32;
+    if params.flight {
+        // fixed lane order + stable time sort: identical in both modes
+        flight::attach(&mut outcome, flight::merge(recorders));
+    }
     outcome
 }
 

@@ -27,6 +27,7 @@ use crate::metrics::{
     summarize_constrained, summarize_constraint_wait, summarize_gang, summarize_gang_wait,
     summarize_jobs, DelaySummary, RunOutcome, ShardFallback,
 };
+use crate::obs::flight::FlightStats;
 use crate::runtime::match_engine::RustMatchEngine;
 use crate::sched;
 use crate::sched::megha::FailurePlan;
@@ -192,6 +193,12 @@ pub struct Scenario {
     /// dense epoch grid — the CLI `--no-fast-forward` debug mode and
     /// the on/off identity golden in `tests/shard_identity.rs`.
     pub fast_forward: bool,
+    /// Flight recorder (`SimParams::flight`, default off; CLI
+    /// `--flight`): record per-decision event logs and surface staleness
+    /// percentiles in the sweep's flight columns. Inert — the simulated
+    /// schedule is bit-identical either way
+    /// (`tests/driver_invariants.rs`).
+    pub flight: bool,
 }
 
 impl Scenario {
@@ -206,6 +213,13 @@ impl Scenario {
     /// [`shards`](Scenario::shards)).
     pub fn with_shards(mut self, n: usize) -> Scenario {
         self.shards = n.max(1);
+        self
+    }
+
+    /// This scenario with the flight recorder toggled (see
+    /// [`flight`](Scenario::flight)).
+    pub fn with_flight(mut self, on: bool) -> Scenario {
+        self.flight = on;
         self
     }
 
@@ -289,6 +303,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
             use_index: true,
             shards: 1,
             fast_forward: true,
+            flight: false,
         }]),
         "scale100" => Some(vec![Scenario {
             name: "scale100-yahoo-w1M".into(),
@@ -302,6 +317,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
             use_index: true,
             shards: 8, // clamps to min(n_gm, n_lm) = 8 at this size
             fast_forward: true,
+            flight: false,
         }]),
         "hetero" => {
             let gpu = |scarcity: f64, frac: f64| HeteroSpec {
@@ -322,6 +338,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
                 use_index: true,
                 shards: 1,
                 fast_forward: true,
+                flight: false,
             };
             Some(vec![
                 // scarce: ~6% GPU slots, ~5% of jobs demand them
@@ -356,6 +373,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
                 use_index: true,
                 shards: 1,
                 fast_forward: true,
+                flight: false,
             };
             let gang2 = || HeteroSpec {
                 profile: "bimodal-gpu".into(),
@@ -414,6 +432,7 @@ pub fn scenario_grid(
                 use_index: true,
                 shards: 1,
                 fast_forward: true,
+                flight: false,
             });
         }
     }
@@ -427,9 +446,10 @@ pub fn scenario_grid(
 /// over its own DC size), the occupancy-index routing flag, the
 /// execution-shard count (Megha and Sparrow shard; Eagle and Pigeon run
 /// the sequential driver and record
-/// [`ShardFallback::Unsupported`] when shards were requested), and the
-/// idle-epoch fast-forward toggle. `fig3::run_framework`, [`run_one`]
-/// and the cross-scheduler tests all route through here.
+/// [`ShardFallback::Unsupported`] when shards were requested), the
+/// idle-epoch fast-forward toggle, and the flight-recorder toggle.
+/// `fig3::run_framework`, [`run_one`] and the cross-scheduler tests all
+/// route through here.
 #[allow(clippy::too_many_arguments)]
 pub fn run_framework_hetero(
     framework: &str,
@@ -441,6 +461,7 @@ pub fn run_framework_hetero(
     use_index: bool,
     shards: usize,
     fast_forward: bool,
+    flight: bool,
     trace: &Trace,
 ) -> RunOutcome {
     match framework {
@@ -451,6 +472,7 @@ pub fn run_framework_hetero(
             cfg.sim.use_index = use_index;
             cfg.sim.shards = shards.max(1);
             cfg.sim.fast_forward = fast_forward;
+            cfg.sim.flight = flight;
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.spec.n_workers());
             }
@@ -471,6 +493,7 @@ pub fn run_framework_hetero(
             cfg.sim.use_index = use_index;
             cfg.sim.shards = shards.max(1);
             cfg.sim.fast_forward = fast_forward;
+            cfg.sim.flight = flight;
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.workers);
             }
@@ -485,12 +508,14 @@ pub fn run_framework_hetero(
             cfg.sim.seed = seed;
             cfg.sim.net = net.clone();
             cfg.sim.use_index = use_index;
+            cfg.sim.flight = flight;
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.workers);
             }
             let mut out = sched::eagle::simulate(&cfg, trace);
             if shards > 1 {
                 out.shard_fallback = Some(ShardFallback::Unsupported);
+                crate::obs::flight::record_fallback(&mut out);
             }
             out
         }
@@ -499,12 +524,14 @@ pub fn run_framework_hetero(
             cfg.sim.seed = seed;
             cfg.sim.net = net.clone();
             cfg.sim.use_index = use_index;
+            cfg.sim.flight = flight;
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.workers);
             }
             let mut out = sched::pigeon::simulate(&cfg, trace);
             if shards > 1 {
                 out.shard_fallback = Some(ShardFallback::Unsupported);
+                crate::obs::flight::record_fallback(&mut out);
             }
             out
         }
@@ -522,7 +549,7 @@ pub fn run_framework_with(
     trace: &Trace,
 ) -> RunOutcome {
     run_framework_hetero(
-        framework, workers, seed, net, gm_fail_at, None, true, 1, true, trace,
+        framework, workers, seed, net, gm_fail_at, None, true, 1, true, false, trace,
     )
 }
 
@@ -544,6 +571,7 @@ pub fn run_one(framework: &str, sc: &Scenario, seed: u64) -> RunOutcome {
         sc.use_index,
         sc.shards,
         sc.fast_forward,
+        sc.flight,
         &trace,
     )
 }
@@ -591,6 +619,9 @@ pub struct RunRecord {
     /// Why a shards > 1 request fell back to the sequential driver
     /// (`None` when sharding was honored or never requested).
     pub shard_fallback: Option<ShardFallback>,
+    /// Flight-recorder aggregates ([`RunOutcome::flight`]; `None` when
+    /// the scenario's [`Scenario::flight`] axis is off).
+    pub flight: Option<FlightStats>,
     /// Wall-clock of the event loop only ([`RunOutcome::sim_wall_s`]) —
     /// the events/s denominator, excluding scheduler construction and
     /// summarization.
@@ -696,6 +727,7 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
             sc.use_index,
             sc.shards,
             sc.fast_forward,
+            sc.flight,
             trace,
         );
         RunRecord {
@@ -716,6 +748,7 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
             events: out.events,
             shards: out.shards,
             shard_fallback: out.shard_fallback,
+            flight: out.flight,
             sim_wall_s: out.sim_wall_s,
             wall_s: r0.elapsed().as_secs_f64(),
         }
@@ -771,6 +804,18 @@ pub struct AggRow {
     /// Execution shards the cell's runs used (max over runs; 1 =
     /// sequential driver).
     pub shards: u32,
+    /// Runs in this cell that carried flight-recorder stats (0 ⇒ the
+    /// scenario's flight axis was off; the columns below are then zero).
+    pub flight_n: usize,
+    /// Median across runs of the per-run recorded-event count.
+    pub flight_events: f64,
+    /// Median across runs of the per-run p50 / p99 staleness-at-match
+    /// (µs of GM-view age behind the matched LM's last refresh).
+    pub stale_p50_us: f64,
+    pub stale_p99_us: f64,
+    /// Median across runs of the per-run p99 invalidation-chain length
+    /// (LM-invalidations one (GM, job) pair accumulated).
+    pub chain_p99: f64,
 }
 
 pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
@@ -805,6 +850,11 @@ pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
             let gw_p50s: Vec<f64> = rs.iter().map(|r| r.gang_wait.median).collect();
             let gw_p99s: Vec<f64> = rs.iter().map(|r| r.gang_wait.p99).collect();
             let g_rejs: Vec<f64> = rs.iter().map(|r| r.gang_rejections as f64).collect();
+            let flights: Vec<FlightStats> = rs.iter().filter_map(|r| r.flight).collect();
+            let f_events: Vec<f64> = flights.iter().map(|f| f.events as f64).collect();
+            let f_p50s: Vec<f64> = flights.iter().map(|f| f.stale_p50_us as f64).collect();
+            let f_p99s: Vec<f64> = flights.iter().map(|f| f.stale_p99_us as f64).collect();
+            let f_chains: Vec<f64> = flights.iter().map(|f| f.chain_p99 as f64).collect();
             rows.push(AggRow {
                 framework: fw.clone(),
                 scenario: si,
@@ -827,6 +877,11 @@ pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
                 gang_rejections: mean(&g_rejs),
                 events_per_sec: mean(&eps),
                 shards: rs.iter().map(|r| r.shards).max().unwrap_or(1),
+                flight_n: flights.len(),
+                flight_events: percentile(&f_events, 50.0),
+                stale_p50_us: percentile(&f_p50s, 50.0),
+                stale_p99_us: percentile(&f_p99s, 50.0),
+                chain_p99: percentile(&f_chains, 50.0),
             });
         }
     }
@@ -933,6 +988,26 @@ pub fn print_result(spec: &SweepSpec, result: &SweepResult) {
                 r.gwait_p50,
                 r.gwait_p99,
                 r.gang_rejections
+            );
+        }
+        println!();
+    }
+    if rows.iter().any(|r| r.flight_n > 0) {
+        println!("\n--- flight recorder (staleness-at-match, invalidation chains) ---");
+        println!(
+            "{:<22} {:<9} {:>6} {:>10} {:>13} {:>13} {:>10}",
+            "scenario", "framework", "runs", "events", "stale-p50(us)", "stale-p99(us)", "chain-p99"
+        );
+        for r in rows.iter().filter(|r| r.flight_n > 0) {
+            println!(
+                "{:<22} {:<9} {:>6} {:>10.0} {:>13.0} {:>13.0} {:>10.1}",
+                spec.scenarios[r.scenario].name,
+                r.framework,
+                r.flight_n,
+                r.flight_events,
+                r.stale_p50_us,
+                r.stale_p99_us,
+                r.chain_p99
             );
         }
         println!();
@@ -1068,6 +1143,7 @@ mod tests {
             use_index: true,
             shards: 2,
             fast_forward: true,
+            flight: false,
         };
         let spec = SweepSpec {
             frameworks: vec!["megha".into(), "sparrow".into()],
@@ -1154,6 +1230,7 @@ mod tests {
             use_index: true,
             shards: 1,
             fast_forward: true,
+            flight: false,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 7);
@@ -1186,6 +1263,7 @@ mod tests {
             use_index: true,
             shards: 1,
             fast_forward: true,
+            flight: false,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 3);
@@ -1214,6 +1292,7 @@ mod tests {
             use_index: true,
             shards: 1,
             fast_forward: true,
+            flight: false,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 5);

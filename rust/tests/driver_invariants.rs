@@ -317,6 +317,7 @@ fn megha_beats_probe_baselines_on_scarce_attributes() {
         use_index: true,
         shards: 1,
         fast_forward: true,
+        flight: false,
     };
     let megha_out = sweep::run_one("megha", &sc, 41);
     let sparrow_out = sweep::run_one("sparrow", &sc, 41);
@@ -382,12 +383,14 @@ fn gang_slots1_path_is_bit_identical_and_inert() {
     let net = NetModel::Constant(SimTime::from_millis(0.5));
     let h = Some(&hetero);
     for name in sweep::FRAMEWORKS {
-        let a =
-            sweep::run_framework_hetero(name, workers, seed, &net, None, h, true, 1, true, &trace);
-        let b =
-            sweep::run_framework_hetero(name, workers, seed, &net, None, h, true, 1, true, &trace);
+        let a = sweep::run_framework_hetero(
+            name, workers, seed, &net, None, h, true, 1, true, false, &trace,
+        );
+        let b = sweep::run_framework_hetero(
+            name, workers, seed, &net, None, h, true, 1, true, false, &trace,
+        );
         let c = sweep::run_framework_hetero(
-            name, workers, seed, &net, None, h, true, 1, true, &reparsed,
+            name, workers, seed, &net, None, h, true, 1, true, false, &reparsed,
         );
         assert_outcomes_identical(name, &a, &b);
         assert_outcomes_identical(name, &a, &c);
@@ -425,6 +428,7 @@ fn gang_megha_beats_probe_baselines_on_scarce_gangs() {
         use_index: true,
         shards: 1,
         fast_forward: true,
+        flight: false,
     };
     let megha_out = sweep::run_one("megha", &sc, 47);
     let sparrow_out = sweep::run_one("sparrow", &sc, 47);
@@ -499,6 +503,7 @@ fn sweep_matches_direct_execution() {
         use_index: true,
         shards: 1,
         fast_forward: true,
+        flight: false,
     };
     let spec = SweepSpec {
         frameworks: vec!["megha".into(), "pigeon".into()],
@@ -533,7 +538,47 @@ fn gm_failure_scenario_still_completes_through_sweep() {
         use_index: true,
         shards: 1,
         fast_forward: true,
+        flight: false,
     };
     let out = sweep::run_one("megha", &sc, 13);
     assert_eq!(out.jobs.len(), 20, "GM failure lost jobs");
+}
+
+/// Recorder-inertness golden (ISSUE 8): running with the flight
+/// recorder on must be bit-identical to running with it off, for every
+/// framework, on both the classic and the sharded driver. Recording
+/// only appends to a lane-private side log and fills
+/// [`RunOutcome::flight`]/[`RunOutcome::flight_log`]; it never touches
+/// the RNG, event order, or any scheduler state. (Eagle and Pigeon fall
+/// back to the sequential driver at shards = 2, which additionally
+/// exercises `obs::flight::record_fallback`.)
+#[test]
+fn flight_recorder_is_bit_identical_to_off() {
+    let workers = 400;
+    let seed = 53;
+    let trace = synthetic_fixed(25, 30, 1.0, 0.85, workers, seed);
+    let net = NetModel::Constant(SimTime::from_millis(0.5));
+    for name in sweep::FRAMEWORKS {
+        for (shards, label) in [(1usize, "classic"), (2, "sharded")] {
+            let off = sweep::run_framework_hetero(
+                name, workers, seed, &net, None, None, true, shards, true, false, &trace,
+            );
+            let on = sweep::run_framework_hetero(
+                name, workers, seed, &net, None, None, true, shards, true, true, &trace,
+            );
+            assert_outcomes_identical(&format!("{name}/{label}/flight"), &off, &on);
+            assert!(
+                off.flight.is_none() && off.flight_log.is_none(),
+                "{name}/{label}: flight data without recording"
+            );
+            let stats = on.flight.expect("recorded run must carry flight stats");
+            let log = on.flight_log.as_ref().expect("recorded run must carry its log");
+            assert_eq!(stats.events as usize, log.len(), "{name}/{label}: stats/log drift");
+            assert!(!log.is_empty(), "{name}/{label}: empty flight log");
+            assert!(
+                log.windows(2).all(|w| w[0].t_us <= w[1].t_us),
+                "{name}/{label}: merged log not time-ordered"
+            );
+        }
+    }
 }

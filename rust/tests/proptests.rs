@@ -500,6 +500,58 @@ fn proto_messages_roundtrip_random() {
 }
 
 #[test]
+fn flight_columnar_roundtrips_random_logs() {
+    // ISSUE-8 satellite: `write_columnar` -> `read_columnar` is an exact
+    // inverse for arbitrary logs — including the empty and single-event
+    // logs, whose column files are header-only (or nearly so).
+    use megha::obs::flight::{read_columnar, write_columnar, Actor, EvKind, FlightEvent, NONE};
+    let root = std::env::temp_dir().join(format!("megha-flight-rt-{}", std::process::id()));
+    check("flight-columnar-roundtrip", 60, |g| {
+        let mut rng = Rng::new(g.seed ^ 0xF117);
+        // bias toward the degenerate lengths the format must still handle
+        let n = match rng.below(6) {
+            0 => 0,
+            1 => 1,
+            _ => rng.range(2, 400),
+        };
+        let log: Vec<FlightEvent> = (0..n)
+            .map(|_| {
+                let actor = match rng.below(6) {
+                    0 => Actor::Gm(rng.below(1 << 20) as u32),
+                    1 => Actor::Lm(rng.below(1 << 20) as u32),
+                    2 => Actor::Sched(rng.below(1 << 20) as u32),
+                    3 => Actor::Node(rng.below(1 << 20) as u32),
+                    4 => Actor::Group(rng.below(1 << 20) as u32),
+                    _ => Actor::Driver(rng.below(1 << 20) as u32),
+                };
+                FlightEvent {
+                    // vary magnitude so both tiny and near-max values hit disk
+                    t_us: rng.next_u64() >> rng.below(64),
+                    kind: EvKind::ALL[rng.below(EvKind::ALL.len())],
+                    actor: actor.encode(),
+                    job: if rng.below(10) == 0 { NONE } else { rng.next_u64() as u32 },
+                    task: if rng.below(10) == 0 { NONE } else { rng.next_u64() as u32 },
+                    payload: rng.next_u64(),
+                }
+            })
+            .collect();
+        let dir = root.join(format!("case-{:x}", g.seed));
+        write_columnar(&dir, &log).map_err(|e| format!("write: {e}"))?;
+        let back = read_columnar(&dir).map_err(|e| format!("read: {e}"))?;
+        std::fs::remove_dir_all(&dir).ok();
+        if back != log {
+            return Err(format!(
+                "round-trip drift: wrote {} events, read {}",
+                log.len(),
+                back.len()
+            ));
+        }
+        Ok(())
+    });
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
 fn megha_delay_breakdown_sane() {
     // Eq. 5 components that apply to Megha are non-negative, and comm
     // reflects at least one network hop per launched task.

@@ -28,12 +28,17 @@
 //! threaded ≡ sequential *within* the dense `fast_forward = false`
 //! grid, whose `all_done` snapshots are tiling-dependent but
 //! mode-independent.
+//!
+//! The flight recorder (ISSUE 8) rides the same gate: with recording
+//! on, the lane-merged logs — and every exported file derived from
+//! them — must be byte-identical threaded vs sequential.
 
 use megha::cluster::NodeCatalog;
 use megha::config::{MeghaConfig, SparrowConfig};
 use megha::metrics::{
     summarize_constraint_wait, summarize_gang_wait, summarize_jobs, RunOutcome, ShardFallback,
 };
+use megha::obs::flight;
 use megha::sched::megha::{simulate, simulate_sharded, simulate_sharded_reference, FailurePlan};
 use megha::sched::sparrow_sharded;
 use megha::sim::net::NetModel;
@@ -266,6 +271,67 @@ fn megha_dense_grid_threaded_equals_sequential() {
     let b = simulate_sharded_reference(&cfg, &trace, None);
     assert_eq!(a.shards, 4, "dense grid must run sharded");
     assert_outcomes_identical("megha/ff-off thr vs seq", &a, &b);
+}
+
+/// Event-for-event and byte-for-byte equality of two recorded runs: the
+/// merged flight logs must match exactly, the derived stats must match,
+/// and every exported file (six columns, CSV, Perfetto) must be
+/// byte-identical. Exports land under `tmp` (recreated per call).
+fn assert_flight_logs_identical(tag: &str, tmp: &std::path::Path, a: &RunOutcome, b: &RunOutcome) {
+    let la = a.flight_log.as_ref().expect("threaded run must carry a flight log");
+    let lb = b.flight_log.as_ref().expect("sequential run must carry a flight log");
+    assert!(!la.is_empty(), "{tag}: empty flight log");
+    assert_eq!(la.len(), lb.len(), "{tag}: log length");
+    if let Some(i) = (0..la.len()).find(|&i| la[i] != lb[i]) {
+        panic!("{tag}: logs diverge at event {i}: {:?} vs {:?}", la[i], lb[i]);
+    }
+    assert_eq!(a.flight, b.flight, "{tag}: flight stats");
+    let (da, db) = (tmp.join("thr"), tmp.join("seq"));
+    flight::export(&da, la).expect("export threaded log");
+    flight::export(&db, lb).expect("export sequential log");
+    let files = flight::COLUMNS
+        .iter()
+        .map(|(name, _)| *name)
+        .chain(["flight.csv", "trace.json"]);
+    for name in files {
+        let x = std::fs::read(da.join(name)).expect("read threaded export");
+        let y = std::fs::read(db.join(name)).expect("read sequential export");
+        assert_eq!(x, y, "{tag}: exported {name} differs");
+    }
+}
+
+#[test]
+fn flight_logs_threaded_equal_sequential_byte_for_byte() {
+    // ISSUE 8 acceptance gate: with the recorder on, the lane-private
+    // logs merged in fixed lane order must make threaded and sequential
+    // execution indistinguishable all the way down to the exported
+    // bytes — and recording must leave the schedule itself untouched.
+    let tmp = std::env::temp_dir().join(format!("megha-flight-identity-{}", std::process::id()));
+    for preset_name in ["hetero", "gang"] {
+        let sc = scaled_preset(preset_name).remove(0);
+        let seed = sweep::run_seed(23, 0, 0);
+        let trace = sc.make_trace(seed);
+        for shards in [2usize, 4] {
+            let mut mcfg = megha_cfg(&sc, seed, shards);
+            mcfg.sim.flight = true;
+            let a = simulate_sharded(&mcfg, &trace, None);
+            let b = simulate_sharded_reference(&mcfg, &trace, None);
+            let tag = format!("flight/megha/{preset_name}/shards={shards}");
+            assert_eq!(a.shards, shards as u32, "{tag}: ran sharded");
+            assert_outcomes_identical(&tag, &a, &b);
+            assert_flight_logs_identical(&tag, &tmp, &a, &b);
+
+            let mut scfg = sparrow_cfg(&sc, seed, shards);
+            scfg.sim.flight = true;
+            let a = sparrow_sharded::simulate_sharded(&scfg, &trace);
+            let b = sparrow_sharded::simulate_sharded_reference(&scfg, &trace);
+            let tag = format!("flight/sparrow/{preset_name}/shards={shards}");
+            assert_eq!(a.shards, shards as u32, "{tag}: ran sharded");
+            assert_outcomes_identical(&tag, &a, &b);
+            assert_flight_logs_identical(&tag, &tmp, &a, &b);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&tmp);
 }
 
 #[test]
