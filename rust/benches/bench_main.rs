@@ -10,9 +10,9 @@
 //!
 //! Run with `cargo bench` (or `cargo bench -- fig3 match` to filter).
 //! Flags: `--quick` shrinks the per-bench budget (the CI smoke mode);
-//! `--json` additionally writes `BENCH_PR8.json` (per-bench median
+//! `--json` additionally writes `BENCH_PR9.json` (per-bench median
 //! ns/unit, experiment totals in seconds) at the repo root — the
-//! current PR's perf artifact (`BENCH_PR2.json` … `BENCH_PR7.json` are
+//! current PR's perf artifact (`BENCH_PR2.json` … `BENCH_PR8.json` are
 //! the frozen earlier snapshots, still pending hardware regeneration).
 
 use std::cell::RefCell;
@@ -93,7 +93,7 @@ impl Bench {
         self.total_results.borrow_mut().push((name.to_string(), total));
     }
 
-    /// Write `BENCH_PR8.json` at the repo root (next to `rust/`),
+    /// Write `BENCH_PR9.json` at the repo root (next to `rust/`),
     /// merging over any existing file so successive filtered runs
     /// (`-- queue --json` then `-- scale10 --json`) accumulate instead
     /// of clobbering each other. A fresh run of a bench name replaces
@@ -110,7 +110,7 @@ impl Bench {
             .ok()
             .and_then(|p| p.parent().map(|q| q.to_path_buf()))
             .unwrap_or_else(|| std::path::PathBuf::from("."));
-        let path = root.join("BENCH_PR8.json");
+        let path = root.join("BENCH_PR9.json");
         let mut bench: BTreeMap<String, Json> = BTreeMap::new();
         let mut totals: BTreeMap<String, Json> = BTreeMap::new();
         let mut measured = false;
@@ -428,8 +428,8 @@ fn bench_scale10(b: &Bench) {
     println!("bench sweep/scale10_total                        {total:>10.3} s total");
 }
 
-/// The ISSUE-6/7 sharded-execution family: Megha and Sparrow runs at
-/// shard counts 1/2/4/8 (same trace; each shard count is its own
+/// The ISSUE-6/7/9 sharded-execution family: Megha, Sparrow, and Eagle
+/// runs at shard counts 1/2/4/8 (same trace; each shard count is its own
 /// deterministic schedule), reporting events/s scaling of the threaded
 /// driver, the sequential reference of the widest schedule so the
 /// epoch/barrier machinery's single-thread overhead is visible, and a
@@ -513,6 +513,47 @@ fn bench_shard(b: &Bench) {
         b.total_results
             .borrow_mut()
             .push(("shard/sparrow_yahoo2k_s8_reference".into(), total));
+    }
+    // Eagle on the same trace: the hybrid split — short-job probe
+    // fan-out plus the pinned central long scheduler, whose
+    // LongPlace/Done round trips all cross shards from shard 0
+    for &shards in &[1usize, 2, 4, 8] {
+        let mut cfg = megha::config::EagleConfig::for_workers(20_000);
+        cfg.sim.seed = 11;
+        cfg.sim.shards = shards;
+        let t0 = Instant::now();
+        let out = if shards > 1 {
+            sched::eagle_sharded::simulate_sharded(&cfg, &trace)
+        } else {
+            sched::eagle::simulate(&cfg, &trace)
+        };
+        let total = t0.elapsed().as_secs_f64();
+        println!(
+            "bench shard/eagle_yahoo2k_s{shards:<2}                     {:>10.3} s  {:>12.0} events/s  ({} events, {} shards)",
+            total,
+            out.events_per_sec(),
+            out.events,
+            out.shards
+        );
+        b.total_results
+            .borrow_mut()
+            .push((format!("shard/eagle_yahoo2k_s{shards}"), total));
+    }
+    {
+        let mut cfg = megha::config::EagleConfig::for_workers(20_000);
+        cfg.sim.seed = 11;
+        cfg.sim.shards = 8;
+        let t0 = Instant::now();
+        let out = sched::eagle_sharded::simulate_sharded_reference(&cfg, &trace);
+        let total = t0.elapsed().as_secs_f64();
+        println!(
+            "bench shard/eagle_yahoo2k_s8_reference           {:>10.3} s  {:>12.0} events/s  (sequential lanes)",
+            total,
+            out.events_per_sec()
+        );
+        b.total_results
+            .borrow_mut()
+            .push(("shard/eagle_yahoo2k_s8_reference".into(), total));
     }
     // fast-forward on/off: a sparse trace where idle-epoch skipping is
     // the dominant cost difference (bit-identical outcomes, see

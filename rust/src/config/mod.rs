@@ -29,8 +29,8 @@ pub struct SimParams {
     /// sequential driver. N > 1 partitions the cluster state into N
     /// shards and drains events in network-lookahead epochs, either on N
     /// threads or serially — the two are bit-identical by construction
-    /// (`tests/shard_identity.rs`). Megha and Sparrow shard; Eagle and
-    /// Pigeon fall back to 1 with [`crate::metrics::ShardFallback`]
+    /// (`tests/shard_identity.rs`). Megha, Sparrow, and Eagle shard;
+    /// Pigeon falls back to 1 with [`crate::metrics::ShardFallback`]
     /// recorded on the outcome.
     pub shards: usize,
     /// Idle-epoch fast-forward for sharded runs (default `true`): at

@@ -33,11 +33,12 @@
 //! `--no-index` routes all bitmap queries onto the flat scans instead of
 //! the occupancy index (debug/A-B mode; results are bit-identical).
 //!
-//! `--shards N` runs each Megha or Sparrow simulation sharded across N
-//! threads (deterministic: threaded and sequential execution of the same
-//! sharded schedule are bit-identical; Eagle and Pigeon fall back to the
+//! `--shards N` runs each Megha, Sparrow, or Eagle simulation sharded
+//! across N threads (deterministic: threaded and sequential execution of
+//! the same sharded schedule are bit-identical; Pigeon falls back to the
 //! sequential driver with the reason recorded and warned). The sweep
-//! divides its across-run thread budget by N. `--no-fast-forward`
+//! divides its across-run thread budget by the grid's effective
+//! post-fallback shard width. `--no-fast-forward`
 //! disables the sharded driver's idle-epoch fast-forward, tiling epochs
 //! densely instead (debug/A-B mode). `--smoke` shrinks every sweep
 //! scenario ~10x (workers and jobs) for CI-sized runs, e.g.

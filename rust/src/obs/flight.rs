@@ -93,8 +93,12 @@ pub enum EvKind {
     Queue = 14,
     /// Pigeon coordinator claimed a worker for a task. Payload = worker.
     Claim = 15,
-    /// Sharded driver: a lane drained its first event of an epoch.
-    /// Payload = epoch horizon in µs.
+    /// Sharded driver: a lane drained the first event of a new
+    /// window's worth of activity (one marker per lookahead window
+    /// containing work, keyed off drained-event times so the stream is
+    /// independent of how barrier horizons tile idle stretches — dense
+    /// and fast-forwarded runs log identical markers). Payload = the
+    /// marker's window end (`t + window`) in µs.
     DrvEpoch = 16,
     /// Sharded driver: idle-epoch fast-forward skipped dead time at a
     /// barrier. Payload = µs skipped.

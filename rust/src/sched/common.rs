@@ -7,6 +7,8 @@ use std::collections::VecDeque;
 
 use crate::cluster::NodeCatalog;
 use crate::metrics::{JobRecord, RunOutcome};
+use crate::obs::flight::{Actor, EvKind, NONE};
+use crate::sim::driver::SimCtx;
 use crate::sim::time::SimTime;
 use crate::workload::{Job, Trace};
 
@@ -76,6 +78,44 @@ pub fn idle_coresidents<Q>(
         }
     }
     out.len() >= k
+}
+
+/// Scheduler-side handling of a gang NACK: re-credit the refused task's
+/// duration to the job's `returned` pool and send exactly one
+/// replacement probe. Shared by Sparrow and Eagle so neither can drop a
+/// credit.
+///
+/// The replacement target is a *blind fresh draw over the whole fleet* —
+/// deliberately not filtered against nodes already probed or NACKed.
+/// A filtered sample pool can be exhausted under scarce-gang pressure
+/// (every candidate already tried), which would strand the returned
+/// duration with no probe left to ever re-bind it; the blind draw can
+/// repeat a node but can never come up empty, so each NACK re-credit is
+/// always paired with exactly one live replacement probe and the
+/// credit/probe invariant (`returned` entries ≤ outstanding probes while
+/// work remains) holds. `probe` builds the scheduler-specific probe
+/// event for the drawn worker.
+pub fn nack_recredit<E>(
+    returned: &mut [Vec<SimTime>],
+    job: u32,
+    dur: SimTime,
+    n_workers: usize,
+    n_schedulers: usize,
+    ctx: &mut SimCtx<'_, E>,
+    probe: impl FnOnce(u32) -> E,
+) {
+    ctx.out.messages += 1;
+    ctx.gang_block(job);
+    returned[job as usize].push(dur);
+    let w = ctx.rng.below(n_workers) as u32;
+    ctx.flight(
+        EvKind::Reprobe,
+        Actor::Sched(job % n_schedulers as u32),
+        job,
+        NONE,
+        w as u64,
+    );
+    ctx.send(probe(w));
 }
 
 /// Late-binding cursor over one job's tasks: tracks the next unlaunched

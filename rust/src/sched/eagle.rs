@@ -6,11 +6,15 @@
 //!   vector of long-occupied nodes; the scheduler re-sends the probe to a
 //!   node the vector says is long-free, and on a second rejection falls
 //!   back to a random node in the *short partition* (the slice of the DC
-//!   where long tasks are never placed).
+//!   where long tasks are never placed; fleets too small to have one
+//!   fall back to the whole fleet).
 //! * **Sticky batch probing**: a worker that finishes a short task asks
 //!   the same job for its next unlaunched task before surfacing its
 //!   reservation queue, shrinking the number of in-flight jobs
-//!   (Little's law).
+//!   (Little's law). The ask is a real round trip — the completion
+//!   notice carries the request and the next task rides the reply — so
+//!   the worker holds in [`WState::Waiting`] until the scheduler
+//!   answers.
 //!
 //! Long jobs queue centrally and are placed only on long-partition
 //! workers the central scheduler believes free (its view is updated by
@@ -19,7 +23,22 @@
 //! blocking SSS exists to dodge).
 //!
 //! Runs on the shared [`crate::sim::driver`]; worker state and the
-//! late-binding cursor come from [`crate::sched::common`].
+//! late-binding cursor come from [`crate::sched::common`]. The handler
+//! body is written once over an offset-carrying [`EagleView`]: the
+//! unsharded [`Scheduler`] impl runs it over the full fleet
+//! (`worker_lo = 0`), and [`crate::sched::eagle_sharded`] runs the same
+//! code over per-shard worker blocks under
+//! [`crate::sim::driver::run_sharded`], with the central long-job
+//! scheduler pinned to one shard (its FIFO queue and free view are a
+//! serial actor).
+//!
+//! Shard-safety shapes the short-gang protocol exactly as it does
+//! Sparrow's: the scheduler cannot inspect (or reserve) a probed node's
+//! co-resident slots across the network, so it binds the gang task
+//! *optimistically* and sends [`Ev::GangTry`]; the node agent seats the
+//! gang against its live occupancy or refuses with [`Ev::GangNack`],
+//! returning the task's duration for re-binding with exactly one
+//! replacement probe per NACK ([`crate::sched::common::nack_recredit`]).
 
 use std::collections::VecDeque;
 
@@ -28,7 +47,7 @@ use crate::cluster::AvailMap;
 use crate::config::EagleConfig;
 use crate::metrics::RunOutcome;
 use crate::obs::flight::{Actor, EvKind, NONE};
-use crate::sched::common::{ProbeWorker, TaskCursor, WState};
+use crate::sched::common::{idle_coresidents, nack_recredit, ProbeWorker, TaskCursor, WState};
 use crate::sim::driver::{self, Scheduler, SimCtx};
 use crate::sim::time::SimTime;
 use crate::workload::{JobClass, Trace};
@@ -42,10 +61,15 @@ pub enum Ev {
     Ready { job: u32, worker: u32 },
     /// scheduler → worker: short task assignment (None = no-op)
     Launch { worker: u32, job: u32, dur: Option<SimTime> },
-    /// scheduler → node: start a short *gang* task on `workers`
-    /// (co-resident slots of one node; `workers[0]` is the probed
-    /// anchor, the rest idle co-residents reserved at bind time)
-    GangLaunch { job: u32, workers: Vec<u32>, dur: SimTime },
+    /// scheduler → node (via the probed anchor `worker`): try to seat a
+    /// `k`-wide short *gang* task. The scheduler binds optimistically —
+    /// only the node agent sees live occupancy, so the node either
+    /// starts the gang on the anchor plus idle co-residents or answers
+    /// [`Ev::GangNack`].
+    GangTry { worker: u32, job: u32, dur: SimTime, k: u32 },
+    /// node → scheduler: the probed node could not seat the gang; the
+    /// task's duration rides back for re-binding.
+    GangNack { job: u32, dur: SimTime },
     /// central scheduler → worker: long task (eager, carries duration)
     LongPlace { worker: u32, job: u32, dur: SimTime },
     /// central scheduler → node: long *gang* task, placed whole against
@@ -63,7 +87,7 @@ pub enum Ev {
 /// Reservation-queue payload: a late-bound short reservation, an
 /// eagerly-bound long task that raced with a short one, or a hold for
 /// one member slot of a racing long gang.
-enum QItem {
+pub(crate) enum QItem {
     Reservation(u32), // short job id (late binding)
     LongTask { job: u32, dur: SimTime },
     /// Member hold of long gang `gangs[gang]`: the worker joins the
@@ -74,23 +98,121 @@ enum QItem {
 
 /// A long gang placed by the central scheduler whose members are not
 /// all free yet (whole-or-queue at the node).
-struct GangState {
-    job: u32,
-    dur: SimTime,
-    workers: Vec<u32>,
+pub(crate) struct GangState {
+    pub(crate) job: u32,
+    pub(crate) dur: SimTime,
+    pub(crate) workers: Vec<u32>,
     /// Members still executing something else (holds outstanding).
-    need: u32,
+    pub(crate) need: u32,
+}
+
+/// Setup shared by the unsharded and sharded entry points: the short/
+/// long partition split, the central scheduler's free view, per-job
+/// classes, and demands resolved against the catalog — with the strict
+/// feasibility asserts that keep the central FIFO from deadlocking.
+pub(crate) struct EagleSetup {
+    /// workers [0, short_cut) = short partition (never runs long tasks);
+    /// workers [short_cut, n) = long partition.
+    pub(crate) short_cut: usize,
+    /// central long-job scheduler's free view (short partition
+    /// off-limits), carrying the occupancy index.
+    pub(crate) central_free: AvailMap,
+    pub(crate) classes: Vec<JobClass>,
+    pub(crate) demands: Vec<Option<ResolvedDemand>>,
+}
+
+/// Resolve the trace against the catalog and build the central view.
+pub(crate) fn resolve_and_check(cfg: &EagleConfig, trace: &Trace) -> EagleSetup {
+    let n_workers = cfg.workers;
+    assert_eq!(
+        cfg.catalog.len(),
+        n_workers,
+        "catalog covers {} slots but the DC has {} workers",
+        cfg.catalog.len(),
+        n_workers
+    );
+    let short_cut = ((n_workers as f64) * cfg.short_partition_frac) as usize;
+    // the central long-job view carries the occupancy index: its
+    // constrained scans and gang claims (`drain_long`) are
+    // summary-guided with per-node counters on non-trivial catalogs
+    let mut central_free = AvailMap::all_free(n_workers);
+    central_free.set_use_index(cfg.sim.use_index);
+    cfg.catalog.attach_index(&mut central_free);
+    for w in 0..short_cut {
+        central_free.set_busy(w); // short partition is off-limits for long
+    }
+    let classes: Vec<JobClass> = trace
+        .jobs
+        .iter()
+        .map(|j| j.class(cfg.sim.short_threshold))
+        .collect();
+    let demands = hetero::resolve_trace(&cfg.catalog, trace);
+    // strict feasibility: a constrained long job must be satisfiable
+    // inside the long partition, or its FIFO queue would deadlock;
+    // gang demands additionally need a node with enough co-resident
+    // slots the central view could ever offer (the short partition
+    // is permanently busy in it)
+    let long_probe = {
+        let mut m = AvailMap::all_free(n_workers);
+        // honor --no-index here too: the flat-scan debug mode must
+        // cover the setup feasibility queries, not just the run
+        m.set_use_index(cfg.sim.use_index);
+        for w in 0..short_cut {
+            m.set_busy(w);
+        }
+        m
+    };
+    for (i, rd) in demands.iter().enumerate() {
+        match (rd, classes[i]) {
+            (Some(rd), JobClass::Long) => {
+                if rd.is_gang() {
+                    assert!(
+                        cfg.catalog
+                            .find_node_with_free(
+                                &long_probe,
+                                0,
+                                n_workers,
+                                rd,
+                                rd.gang_width() as usize
+                            )
+                            .is_some(),
+                        "job {i}: gang of {} fits on no node of Eagle's long partition",
+                        rd.gang_width()
+                    );
+                } else {
+                    assert!(
+                        cfg.catalog.count_matching(short_cut, n_workers, rd) > 0,
+                        "job {i}: demand matches nothing in Eagle's long partition"
+                    );
+                }
+            }
+            (Some(rd), JobClass::Short) if rd.is_gang() => {
+                assert!(
+                    cfg.catalog.gangs_possible(0, n_workers, rd) > 0,
+                    "job {i}: gang of {} fits on no node of the catalog",
+                    rd.gang_width()
+                );
+            }
+            _ => {}
+        }
+    }
+    EagleSetup {
+        short_cut,
+        central_free,
+        classes,
+        demands,
+    }
 }
 
 pub struct Eagle<'a> {
     cfg: &'a EagleConfig,
-    /// workers [0, short_cut) = short partition (never runs long tasks);
-    /// workers [short_cut, n) = long partition.
     short_cut: usize,
     workers: Vec<ProbeWorker<QItem>>,
     jobs: Vec<TaskCursor>,
+    /// Per-job gang durations returned by [`Ev::GangNack`], re-bound
+    /// (LIFO) before the cursor advances further.
+    returned: Vec<Vec<SimTime>>,
     classes: Vec<JobClass>,
-    /// central long-job scheduler's free view (short partition off-limits)
     central_free: AvailMap,
     long_q: VecDeque<(u32, SimTime)>,
     /// authoritative "currently executing a long task" set (for SSS
@@ -113,178 +235,588 @@ pub struct Eagle<'a> {
 
 impl<'a> Eagle<'a> {
     pub fn new(cfg: &'a EagleConfig, trace: &Trace) -> Eagle<'a> {
-        let n_workers = cfg.workers;
-        assert_eq!(
-            cfg.catalog.len(),
-            n_workers,
-            "catalog covers {} slots but the DC has {} workers",
-            cfg.catalog.len(),
-            n_workers
-        );
-        let short_cut = ((n_workers as f64) * cfg.short_partition_frac) as usize;
-        // the central long-job view carries the occupancy index: its
-        // constrained scans and gang claims (`drain_long`) are
-        // summary-guided with per-node counters on non-trivial catalogs
-        let mut central_free = AvailMap::all_free(n_workers);
-        central_free.set_use_index(cfg.sim.use_index);
-        cfg.catalog.attach_index(&mut central_free);
-        for w in 0..short_cut {
-            central_free.set_busy(w); // short partition is off-limits for long
-        }
-        let classes: Vec<JobClass> = trace
-            .jobs
-            .iter()
-            .map(|j| j.class(cfg.sim.short_threshold))
-            .collect();
-        let demands = hetero::resolve_trace(&cfg.catalog, trace);
-        // strict feasibility: a constrained long job must be satisfiable
-        // inside the long partition, or its FIFO queue would deadlock;
-        // gang demands additionally need a node with enough co-resident
-        // slots the central view could ever offer (the short partition
-        // is permanently busy in it)
-        let long_probe = {
-            let mut m = AvailMap::all_free(n_workers);
-            // honor --no-index here too: the flat-scan debug mode must
-            // cover the setup feasibility queries, not just the run
-            m.set_use_index(cfg.sim.use_index);
-            for w in 0..short_cut {
-                m.set_busy(w);
-            }
-            m
-        };
-        for (i, rd) in demands.iter().enumerate() {
-            match (rd, classes[i]) {
-                (Some(rd), JobClass::Long) => {
-                    if rd.is_gang() {
-                        assert!(
-                            cfg.catalog
-                                .find_node_with_free(
-                                    &long_probe,
-                                    0,
-                                    n_workers,
-                                    rd,
-                                    rd.gang_width() as usize
-                                )
-                                .is_some(),
-                            "job {i}: gang of {} fits on no node of Eagle's long partition",
-                            rd.gang_width()
-                        );
-                    } else {
-                        assert!(
-                            cfg.catalog.count_matching(short_cut, n_workers, rd) > 0,
-                            "job {i}: demand matches nothing in Eagle's long partition"
-                        );
-                    }
-                }
-                (Some(rd), JobClass::Short) if rd.is_gang() => {
-                    assert!(
-                        cfg.catalog.gangs_possible(0, n_workers, rd) > 0,
-                        "job {i}: gang of {} fits on no node of the catalog",
-                        rd.gang_width()
-                    );
-                }
-                _ => {}
-            }
-        }
+        let EagleSetup {
+            short_cut,
+            central_free,
+            classes,
+            demands,
+        } = resolve_and_check(cfg, trace);
         Eagle {
             cfg,
             short_cut,
-            workers: ProbeWorker::fleet(n_workers),
+            workers: ProbeWorker::fleet(cfg.workers),
             jobs: TaskCursor::for_trace(trace),
+            returned: vec![Vec::new(); trace.n_jobs()],
             classes,
             central_free,
             long_q: VecDeque::new(),
-            long_busy: AvailMap::all_busy(n_workers),
+            long_busy: AvailMap::all_busy(cfg.workers),
             demands,
             gangs: Vec::new(),
             free_gangs: Vec::new(),
         }
     }
 
-    fn drain_long(&mut self, ctx: &mut SimCtx<'_, Ev>) {
-        while let Some(&(job, dur)) = self.long_q.front() {
-            let rd = self.demands[job as usize].as_ref();
-            let len = self.central_free.len();
-            if let Some(rd) = rd.filter(|rd| rd.is_gang()) {
-                // gang: claim gang_width() co-resident slots whole
-                // against the central view, or keep the gang queued
-                // (whole-or-queue — never a partial placement)
-                let mut slots: Vec<u32> = ctx.pool.take();
-                if self
-                    .cfg
-                    .catalog
-                    .pop_gang_free(&mut self.central_free, 0, len, rd, &mut slots)
-                {
-                    self.long_q.pop_front();
-                    ctx.constraint_unblock(job);
-                    ctx.gang_unblock(job);
-                    ctx.out.decisions += 1;
-                    // the central long-job scheduler gets its own actor id
-                    // (n_schedulers), one past the distributed schedulers
-                    ctx.flight(
-                        EvKind::LongPlace,
-                        Actor::Sched(self.cfg.n_schedulers as u32),
-                        job,
-                        NONE,
-                        slots[0] as u64,
-                    );
-                    ctx.send(Ev::GangPlace {
-                        job,
-                        workers: slots,
-                        dur,
-                    });
-                    continue;
-                }
-                ctx.pool.give(slots);
-                if self.central_free.free_count() > 0 {
-                    if self
-                        .cfg
-                        .catalog
-                        .count_matching_free(&self.central_free, 0, len, rd)
-                        > 0
-                    {
-                        // matching capacity visible, never co-resident
-                        ctx.out.gang_rejections += 1;
-                        ctx.gang_block(job);
-                    } else {
-                        ctx.out.constraint_rejections += 1;
-                        ctx.constraint_block(job);
-                    }
-                }
-                break;
+    fn view(&mut self) -> EagleView<'_> {
+        EagleView {
+            cfg: self.cfg,
+            short_cut: self.short_cut,
+            workers: &mut self.workers,
+            worker_lo: 0,
+            jobs: &mut self.jobs,
+            returned: &mut self.returned,
+            classes: &self.classes,
+            demands: &self.demands,
+            central_free: &mut self.central_free,
+            long_q: &mut self.long_q,
+            long_busy: &mut self.long_busy,
+            gangs: &mut self.gangs,
+            free_gangs: &mut self.free_gangs,
+        }
+    }
+}
+
+/// The offset-carrying execution view: one contiguous worker block plus
+/// full-width scheduler-side state. `workers[i]` is global worker
+/// `worker_lo + i`; the unsharded scheduler is the `worker_lo = 0`
+/// special case over the whole fleet. All per-event logic lives in
+/// [`handle_arrival`] / [`handle_event`] over this view, so sharded and
+/// unsharded execution cannot diverge in per-event behavior.
+///
+/// Ownership under sharding: `jobs`/`returned` are touched only for
+/// jobs homed on this shard's schedulers; `central_free` and `long_q`
+/// only on the central shard (every long-path event routes there);
+/// `long_busy` is a full-width map in which only this shard's workers'
+/// bits are ever set — an SSS reply therefore carries the shard's
+/// partial view, which is exactly the staleness the mechanism tolerates.
+pub(crate) struct EagleView<'v> {
+    pub cfg: &'v EagleConfig,
+    pub short_cut: usize,
+    pub workers: &'v mut [ProbeWorker<QItem>],
+    pub worker_lo: usize,
+    pub jobs: &'v mut [TaskCursor],
+    pub returned: &'v mut [Vec<SimTime>],
+    pub classes: &'v [JobClass],
+    pub demands: &'v [Option<ResolvedDemand>],
+    pub central_free: &'v mut AvailMap,
+    pub long_q: &'v mut VecDeque<(u32, SimTime)>,
+    pub long_busy: &'v mut AvailMap,
+    pub gangs: &'v mut Vec<Option<GangState>>,
+    pub free_gangs: &'v mut Vec<u32>,
+}
+
+/// Central long-job scheduler: place queued long work FIFO against the
+/// central free view — gangs whole-or-queue, scalars constraint-aware.
+fn drain_long(v: &mut EagleView<'_>, ctx: &mut SimCtx<'_, Ev>) {
+    while let Some(&(job, dur)) = v.long_q.front() {
+        let rd = v.demands[job as usize].as_ref();
+        let len = v.central_free.len();
+        if let Some(rd) = rd.filter(|rd| rd.is_gang()) {
+            // gang: claim gang_width() co-resident slots whole
+            // against the central view, or keep the gang queued
+            // (whole-or-queue — never a partial placement)
+            let mut slots: Vec<u32> = ctx.pool.take();
+            if v.cfg
+                .catalog
+                .pop_gang_free(v.central_free, 0, len, rd, &mut slots)
+            {
+                v.long_q.pop_front();
+                ctx.constraint_unblock(job);
+                ctx.gang_unblock(job);
+                ctx.out.decisions += 1;
+                // the central long-job scheduler gets its own actor id
+                // (n_schedulers), one past the distributed schedulers
+                ctx.flight(
+                    EvKind::LongPlace,
+                    Actor::Sched(v.cfg.n_schedulers as u32),
+                    job,
+                    NONE,
+                    slots[0] as u64,
+                );
+                ctx.send(Ev::GangPlace {
+                    job,
+                    workers: slots,
+                    dur,
+                });
+                continue;
             }
-            let w = match rd {
-                None => self.central_free.pop_free_in(0, len),
-                // centralized: the long-job scheduler owns a global view
-                // and may match constraints against it directly
-                Some(rd) => self.cfg.catalog.pop_matching_free(&mut self.central_free, 0, len, rd),
-            };
-            let Some(w) = w else {
-                if rd.is_some() && self.central_free.free_count() > 0 {
-                    // free long-partition capacity exists, none matches
+            ctx.pool.give(slots);
+            if v.central_free.free_count() > 0 {
+                if v.cfg
+                    .catalog
+                    .count_matching_free(v.central_free, 0, len, rd)
+                    > 0
+                {
+                    // matching capacity visible, never co-resident
+                    ctx.out.gang_rejections += 1;
+                    ctx.gang_block(job);
+                } else {
                     ctx.out.constraint_rejections += 1;
                     ctx.constraint_block(job);
                 }
-                break;
-            };
-            self.long_q.pop_front();
-            if rd.is_some() {
-                ctx.constraint_unblock(job);
             }
-            ctx.out.decisions += 1;
+            break;
+        }
+        let w = match rd {
+            None => v.central_free.pop_free_in(0, len),
+            // centralized: the long-job scheduler owns a global view
+            // and may match constraints against it directly
+            Some(rd) => v.cfg.catalog.pop_matching_free(v.central_free, 0, len, rd),
+        };
+        let Some(w) = w else {
+            if rd.is_some() && v.central_free.free_count() > 0 {
+                // free long-partition capacity exists, none matches
+                ctx.out.constraint_rejections += 1;
+                ctx.constraint_block(job);
+            }
+            break;
+        };
+        v.long_q.pop_front();
+        if rd.is_some() {
+            ctx.constraint_unblock(job);
+        }
+        ctx.out.decisions += 1;
+        ctx.flight(
+            EvKind::LongPlace,
+            Actor::Sched(v.cfg.n_schedulers as u32),
+            job,
+            NONE,
+            w as u64,
+        );
+        ctx.send(Ev::LongPlace {
+            worker: w as u32,
+            job,
+            dur,
+        });
+    }
+}
+
+/// Job arrival: long jobs queue at the central scheduler (which lives on
+/// the central shard under sharding — arrivals route there); short jobs
+/// fan out `d·n` blind probes exactly like Sparrow.
+pub(crate) fn handle_arrival(v: &mut EagleView<'_>, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
+    match v.classes[jidx as usize] {
+        JobClass::Long => {
+            let job = &ctx.trace.jobs[jidx as usize];
+            for t in 0..job.n_tasks() {
+                v.long_q.push_back((jidx, job.durations[t]));
+            }
+            drain_long(v, ctx);
+        }
+        JobClass::Short => {
+            // d·n probes: d distinct workers per task, duplicates
+            // allowed across tasks (as in Sparrow's batch sampling);
+            // the probe vector is pooled, sampling allocation-free
+            let n_workers = v.cfg.workers;
+            let n = v.jobs[jidx as usize].n_tasks as usize;
+            let d_per_task = v.cfg.probe_ratio.min(n_workers);
+            let mut probes: Vec<usize> = ctx.pool.take();
+            let sched = Actor::Sched(jidx % v.cfg.n_schedulers as u32);
+            for _ in 0..n {
+                ctx.rng.sample_distinct_into(n_workers, d_per_task, &mut probes);
+                for &w in &probes {
+                    ctx.flight(EvKind::Probe, sched, jidx, NONE, w as u64);
+                    ctx.send(Ev::Probe {
+                        worker: w as u32,
+                        job: jidx,
+                        retry: 0,
+                    });
+                }
+            }
+            ctx.pool.give(probes);
+        }
+    }
+}
+
+/// The single Eagle event handler, shared by every execution mode.
+pub(crate) fn handle_event(v: &mut EagleView<'_>, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
+    match ev {
+        Ev::Probe { worker, job, retry } => {
+            let lw = worker as usize - v.worker_lo;
+            let is_long_busy = matches!(v.workers[lw].state, WState::Busy { long: true });
+            if is_long_busy {
+                // SSS: reject with the current long-occupancy vector
+                ctx.send(Ev::Reject {
+                    job,
+                    retry,
+                    sss: v.long_busy.clone(),
+                });
+            } else {
+                v.workers[lw].queue.push_back(QItem::Reservation(job));
+                if v.workers[lw].state == WState::Idle {
+                    advance_worker(v, worker, ctx);
+                }
+            }
+        }
+        Ev::Reject { job, retry, sss } => {
+            ctx.out.messages += 1;
+            let n_workers = v.cfg.workers;
+            let short_cut = v.short_cut;
+            // pick the re-probe target from the freshest SSS
+            let target = if retry == 0 {
+                // any worker the vector says is long-free
+                let mut pick = None;
+                for _ in 0..8 {
+                    let c = ctx.rng.below(n_workers);
+                    if !sss.is_free(c) {
+                        pick = Some(c);
+                        break;
+                    }
+                }
+                match pick {
+                    Some(c) => c,
+                    // a fleet too small for a short partition
+                    // (short_cut == 0) falls back to the whole fleet —
+                    // `below(short_cut.max(1))` would pin every
+                    // fallback re-probe to worker 0
+                    None if short_cut > 0 => ctx.rng.below(short_cut),
+                    None => ctx.rng.below(n_workers),
+                }
+            } else if short_cut > 0 {
+                // second rejection: random worker in the short partition
+                ctx.rng.below(short_cut)
+            } else {
+                ctx.rng.below(n_workers)
+            };
             ctx.flight(
-                EvKind::LongPlace,
-                Actor::Sched(self.cfg.n_schedulers as u32),
+                EvKind::Reprobe,
+                Actor::Sched(job % v.cfg.n_schedulers as u32),
                 job,
                 NONE,
-                w as u64,
+                target as u64,
             );
-            ctx.send(Ev::LongPlace {
-                worker: w as u32,
+            ctx.send(Ev::Probe {
+                worker: target as u32,
                 job,
-                dur,
+                retry: retry.saturating_add(1),
             });
         }
+        Ev::Ready { job, worker } => {
+            ctx.out.messages += 1;
+            let j = job as usize;
+            if let Some(rd) = v.demands[j].as_ref() {
+                // a fully-bound job's leftover reservations are NOT
+                // constraint misses — they fall through to the normal
+                // proactive-cancellation no-op below (a gang job still
+                // has work while NACK-returned durations await
+                // re-binding, even with the cursor exhausted)
+                if !(v.jobs[j].exhausted() && v.returned[j].is_empty()) {
+                    if !v.cfg.catalog.slot_matches(worker as usize, rd) {
+                        // constraint verified at the probed node — and
+                        // failed: no-op the worker, re-probe blind (as in
+                        // Sparrow; SSS only tracks long-occupancy, not
+                        // attributes)
+                        ctx.out.constraint_rejections += 1;
+                        ctx.constraint_block(job);
+                        ctx.send(Ev::Launch { worker, job, dur: None });
+                        let w = ctx.rng.below(v.cfg.workers) as u32;
+                        ctx.flight(
+                            EvKind::Reprobe,
+                            Actor::Sched(job % v.cfg.n_schedulers as u32),
+                            job,
+                            NONE,
+                            w as u64,
+                        );
+                        ctx.send(Ev::Probe { worker: w, job, retry: 0 });
+                        return;
+                    }
+                    if rd.is_gang() {
+                        // the scheduler cannot see the probed node's
+                        // occupancy (it lives across the network, maybe
+                        // on another shard): bind optimistically and let
+                        // the node agent seat or refuse the gang
+                        let dur = v.returned[j].pop().unwrap_or_else(|| {
+                            v.jobs[j]
+                                .bind_next(&ctx.trace.jobs[j])
+                                .expect("gang bind after exhaustion check")
+                                .1
+                        });
+                        ctx.out.decisions += 1;
+                        ctx.constraint_unblock(job);
+                        ctx.gang_unblock(job);
+                        let sched = Actor::Sched(job % v.cfg.n_schedulers as u32);
+                        ctx.flight(EvKind::GangTry, sched, job, NONE, rd.gang_width() as u64);
+                        ctx.send(Ev::GangTry {
+                            worker,
+                            job,
+                            dur,
+                            k: rd.gang_width(),
+                        });
+                        return;
+                    }
+                }
+            }
+            let dur = match v.jobs[j].bind_next(&ctx.trace.jobs[j]) {
+                Some((t, dur)) => {
+                    ctx.out.decisions += 1;
+                    ctx.flight(
+                        EvKind::Bind,
+                        Actor::Sched(job % v.cfg.n_schedulers as u32),
+                        job,
+                        t as u32,
+                        worker as u64,
+                    );
+                    if v.demands[j].is_some() {
+                        ctx.constraint_unblock(job);
+                    }
+                    Some(dur)
+                }
+                None => None, // proactive cancellation: all tasks already bound
+            };
+            ctx.send(Ev::Launch { worker, job, dur });
+        }
+        Ev::GangTry { worker, job, dur, k } => {
+            let lw = worker as usize - v.worker_lo;
+            debug_assert!(v.workers[lw].state == WState::Waiting);
+            // gang: the probe discovers *this node's* occupancy only —
+            // the probed anchor plus enough idle co-residents, or a
+            // partial fit that forces a blind re-probe
+            let mut members: Vec<u32> = ctx.pool.take();
+            if idle_coresidents(
+                v.workers,
+                v.worker_lo,
+                &v.cfg.catalog,
+                worker,
+                k as usize,
+                &mut members,
+            ) {
+                for &w in members.iter() {
+                    v.workers[w as usize - v.worker_lo].state = WState::Busy { long: false };
+                }
+                ctx.out.tasks += 1;
+                ctx.flight(EvKind::Bind, Actor::Node(worker), job, NONE, k as u64);
+                ctx.push_after(dur, Ev::GangFinish {
+                    workers: members,
+                    job,
+                    long: false,
+                });
+            } else {
+                // refuse: free the anchor and hand the duration back —
+                // the scheduler re-binds it and sends one replacement
+                // probe, so no task is ever stranded
+                ctx.out.gang_rejections += 1;
+                ctx.flight(EvKind::GangNack, Actor::Node(worker), job, NONE, k as u64);
+                ctx.pool.give(members);
+                v.workers[lw].state = WState::Idle;
+                advance_worker(v, worker, ctx);
+                ctx.send(Ev::GangNack { job, dur });
+            }
+        }
+        Ev::GangNack { job, dur } => {
+            nack_recredit(
+                v.returned,
+                job,
+                dur,
+                v.cfg.workers,
+                v.cfg.n_schedulers,
+                ctx,
+                |w| Ev::Probe { worker: w, job, retry: 0 },
+            );
+        }
+        Ev::GangPlace { job, workers, dur } => {
+            // whole-or-queue at the node: idle members commit
+            // immediately; members racing a short task get a gang
+            // hold queued and join when they free (the head-of-line
+            // blocking SSS cannot dodge for eagerly-bound work)
+            let gid = v
+                .free_gangs
+                .last()
+                .copied()
+                .unwrap_or(v.gangs.len() as u32);
+            let mut need = 0u32;
+            for &w in &workers {
+                let lw = w as usize - v.worker_lo;
+                if v.workers[lw].state == WState::Idle {
+                    v.workers[lw].state = WState::Busy { long: true };
+                    v.long_busy.set_free(w as usize);
+                } else {
+                    v.workers[lw].queue.push_back(QItem::GangHold { gang: gid });
+                    need += 1;
+                }
+            }
+            if need == 0 {
+                ctx.out.tasks += 1;
+                ctx.push_after(dur, Ev::GangFinish {
+                    workers,
+                    job,
+                    long: true,
+                });
+            } else {
+                let state = Some(GangState {
+                    job,
+                    dur,
+                    workers,
+                    need,
+                });
+                if v.free_gangs.pop().is_some() {
+                    v.gangs[gid as usize] = state; // recycled slot
+                } else {
+                    v.gangs.push(state);
+                }
+            }
+        }
+        Ev::GangFinish { workers, job, long } => {
+            let mut members: Vec<u32> = ctx.pool.take();
+            members.extend_from_slice(&workers);
+            let d = ctx.net_delay();
+            ctx.out.breakdown.comm_s += d.as_secs();
+            ctx.push_after(d, Ev::GangDone { job, workers, long });
+            // atomic release: all member slots free together
+            for &w in &members {
+                v.workers[w as usize - v.worker_lo].state = WState::Idle;
+                if long {
+                    v.long_busy.set_busy(w as usize);
+                }
+            }
+            for &w in &members {
+                advance_worker(v, w, ctx);
+            }
+            ctx.pool.give(members);
+        }
+        Ev::GangDone { job, workers, long } => {
+            ctx.out.messages += 1;
+            ctx.task_done(job);
+            if long {
+                for &w in &workers {
+                    v.central_free.set_free(w as usize);
+                }
+                ctx.pool.give(workers);
+                drain_long(v, ctx);
+            } else {
+                ctx.pool.give(workers);
+            }
+        }
+        Ev::Launch { worker, job, dur } => {
+            let lw = worker as usize - v.worker_lo;
+            debug_assert!(v.workers[lw].state == WState::Waiting);
+            match dur {
+                Some(dur) => {
+                    v.workers[lw].state = WState::Busy { long: false };
+                    ctx.out.tasks += 1;
+                    ctx.push_after(dur, Ev::Finish {
+                        worker,
+                        job,
+                        long: false,
+                    });
+                }
+                None => {
+                    v.workers[lw].state = WState::Idle;
+                    advance_worker(v, worker, ctx);
+                }
+            }
+        }
+        Ev::LongPlace { worker, job, dur } => {
+            let lw = worker as usize - v.worker_lo;
+            match v.workers[lw].state {
+                WState::Idle => {
+                    v.workers[lw].state = WState::Busy { long: true };
+                    v.long_busy.set_free(worker as usize); // bit set = long-busy
+                    ctx.out.tasks += 1;
+                    ctx.push_after(dur, Ev::Finish {
+                        worker,
+                        job,
+                        long: true,
+                    });
+                }
+                _ => {
+                    // raced with a short task: queue at the worker
+                    v.workers[lw].queue.push_back(QItem::LongTask { job, dur });
+                }
+            }
+        }
+        Ev::Finish { worker, job, long } => {
+            let d = ctx.net_delay();
+            ctx.out.breakdown.comm_s += d.as_secs();
+            ctx.push_after(d, Ev::Done { job, worker, long });
+            let lw = worker as usize - v.worker_lo;
+            if long {
+                v.workers[lw].state = WState::Idle;
+                v.long_busy.set_busy(worker as usize);
+                advance_worker(v, worker, ctx);
+            } else {
+                // sticky batch probing is a round trip: the completion
+                // notice doubles as the "same job, next task?" ask, so
+                // the worker holds in Waiting (stable against probes,
+                // gang holds, and long placements, which only queue)
+                // until the scheduler's Launch reply lands
+                v.workers[lw].state = WState::Waiting;
+            }
+        }
+        Ev::Done { job, worker, long } => {
+            ctx.out.messages += 1;
+            ctx.task_done(job);
+            if long {
+                v.central_free.set_free(worker as usize);
+                drain_long(v, ctx);
+            } else {
+                // sticky batch: bind the same job's next task back to
+                // the finishing worker (it just ran a task of this job,
+                // so it matches any demand the job carries — no
+                // re-verification), else no-op the worker free
+                let j = job as usize;
+                let dur = match v.jobs[j].bind_next(&ctx.trace.jobs[j]) {
+                    Some((t, dur)) => {
+                        ctx.out.decisions += 1;
+                        // sticky batch: the *node* re-binds itself
+                        ctx.flight(EvKind::Bind, Actor::Node(worker), job, t as u32, worker as u64);
+                        if v.demands[j].is_some() {
+                            ctx.constraint_unblock(job);
+                        }
+                        Some(dur)
+                    }
+                    None => None,
+                };
+                ctx.send(Ev::Launch { worker, job, dur });
+            }
+        }
+    }
+}
+
+/// Idle worker surfaces its reservation queue: a short reservation turns
+/// into a Ready RPC; a queued long task starts executing immediately; a
+/// gang hold joins its long gang, which starts once the last member has
+/// joined. (long_busy bookkeeping for queued long tasks happens in
+/// Finish.)
+fn advance_worker(v: &mut EagleView<'_>, worker: u32, ctx: &mut SimCtx<'_, Ev>) {
+    let lw = worker as usize - v.worker_lo;
+    if v.workers[lw].state != WState::Idle {
+        return;
+    }
+    match v.workers[lw].queue.pop_front() {
+        Some(QItem::Reservation(job)) => {
+            v.workers[lw].state = WState::Waiting;
+            ctx.send(Ev::Ready { job, worker });
+        }
+        Some(QItem::LongTask { job, dur }) => {
+            v.workers[lw].state = WState::Busy { long: true };
+            ctx.out.tasks += 1;
+            ctx.push_after(dur, Ev::Finish {
+                worker,
+                job,
+                long: true,
+            });
+        }
+        Some(QItem::GangHold { gang }) => {
+            v.workers[lw].state = WState::Busy { long: true };
+            v.long_busy.set_free(worker as usize); // bit set = long-busy
+            let slot = &mut v.gangs[gang as usize];
+            let need = {
+                let g = slot.as_mut().expect("gang hold after gang start");
+                g.need -= 1;
+                g.need
+            };
+            if need == 0 {
+                let g = slot.take().expect("last hold just joined");
+                v.free_gangs.push(gang);
+                ctx.out.tasks += 1;
+                ctx.push_after(g.dur, Ev::GangFinish {
+                    workers: g.workers,
+                    job: g.job,
+                    long: true,
+                });
+            }
+        }
+        None => {}
     }
 }
 
@@ -296,465 +828,17 @@ impl Scheduler for Eagle<'_> {
     }
 
     fn on_arrival(&mut self, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
-        match self.classes[jidx as usize] {
-            JobClass::Long => {
-                let job = &ctx.trace.jobs[jidx as usize];
-                for t in 0..job.n_tasks() {
-                    self.long_q.push_back((jidx, job.durations[t]));
-                }
-                self.drain_long(ctx);
-            }
-            JobClass::Short => {
-                // d·n probes: d distinct workers per task, duplicates
-                // allowed across tasks (as in Sparrow's batch sampling);
-                // the probe vector is pooled, sampling allocation-free
-                let n_workers = self.cfg.workers;
-                let n = self.jobs[jidx as usize].n_tasks as usize;
-                let d_per_task = self.cfg.probe_ratio.min(n_workers);
-                let mut probes: Vec<usize> = ctx.pool.take();
-                let sched = Actor::Sched(jidx % self.cfg.n_schedulers as u32);
-                for _ in 0..n {
-                    ctx.rng.sample_distinct_into(n_workers, d_per_task, &mut probes);
-                    for &w in &probes {
-                        ctx.flight(EvKind::Probe, sched, jidx, NONE, w as u64);
-                        ctx.send(Ev::Probe {
-                            worker: w as u32,
-                            job: jidx,
-                            retry: 0,
-                        });
-                    }
-                }
-                ctx.pool.give(probes);
-            }
-        }
+        handle_arrival(&mut self.view(), jidx, ctx);
     }
 
     fn on_event(&mut self, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
-        match ev {
-            Ev::Probe { worker, job, retry } => {
-                let is_long_busy =
-                    matches!(self.workers[worker as usize].state, WState::Busy { long: true });
-                if is_long_busy {
-                    // SSS: reject with the current long-occupancy vector
-                    ctx.send(Ev::Reject {
-                        job,
-                        retry,
-                        sss: self.long_busy.clone(),
-                    });
-                } else {
-                    let w = &mut self.workers[worker as usize];
-                    w.queue.push_back(QItem::Reservation(job));
-                    if w.state == WState::Idle {
-                        advance_worker(
-                            worker,
-                            &mut self.workers,
-                            &mut self.gangs,
-                            &mut self.free_gangs,
-                            &mut self.long_busy,
-                            ctx,
-                        );
-                    }
-                }
-            }
-            Ev::Reject { job, retry, sss } => {
-                ctx.out.messages += 1;
-                let n_workers = self.cfg.workers;
-                let short_cut = self.short_cut;
-                // pick the re-probe target from the freshest SSS
-                let target = if retry == 0 {
-                    // any worker the vector says is long-free
-                    let mut pick = None;
-                    for _ in 0..8 {
-                        let c = ctx.rng.below(n_workers);
-                        if !sss.is_free(c) {
-                            pick = Some(c);
-                            break;
-                        }
-                    }
-                    pick.unwrap_or_else(|| ctx.rng.below(short_cut.max(1)))
-                } else {
-                    // second rejection: random worker in the short partition
-                    ctx.rng.below(short_cut.max(1))
-                };
-                ctx.flight(
-                    EvKind::Reprobe,
-                    Actor::Sched(job % self.cfg.n_schedulers as u32),
-                    job,
-                    NONE,
-                    target as u64,
-                );
-                ctx.send(Ev::Probe {
-                    worker: target as u32,
-                    job,
-                    retry: retry.saturating_add(1),
-                });
-            }
-            Ev::Ready { job, worker } => {
-                ctx.out.messages += 1;
-                if let Some(rd) = &self.demands[job as usize] {
-                    // a fully-bound job's leftover reservations are NOT
-                    // constraint misses — they fall through to the normal
-                    // proactive-cancellation no-op below
-                    if !self.jobs[job as usize].exhausted() {
-                        if !self.cfg.catalog.slot_matches(worker as usize, rd) {
-                            // constraint verified at the probed node — and
-                            // failed: no-op the worker, re-probe blind (as in
-                            // Sparrow; SSS only tracks long-occupancy, not
-                            // attributes)
-                            ctx.out.constraint_rejections += 1;
-                            ctx.constraint_block(job);
-                            ctx.send(Ev::Launch { worker, job, dur: None });
-                            let w = ctx.rng.below(self.cfg.workers) as u32;
-                            ctx.flight(
-                                EvKind::Reprobe,
-                                Actor::Sched(job % self.cfg.n_schedulers as u32),
-                                job,
-                                NONE,
-                                w as u64,
-                            );
-                            ctx.send(Ev::Probe { worker: w, job, retry: 0 });
-                            return;
-                        }
-                        if rd.is_gang() {
-                            // gang: only the probed node's occupancy is
-                            // discoverable — bind the probed slot plus
-                            // idle co-residents, or no-op and re-probe
-                            // blind on a partial fit (as in Sparrow)
-                            let k = rd.gang_width() as usize;
-                            let mut members: Vec<u32> = ctx.pool.take();
-                            if !crate::sched::common::idle_coresidents(
-                                &self.workers,
-                                0,
-                                &self.cfg.catalog,
-                                worker,
-                                k,
-                                &mut members,
-                            ) {
-                                ctx.pool.give(members);
-                                ctx.out.gang_rejections += 1;
-                                ctx.flight(
-                                    EvKind::GangNack,
-                                    Actor::Node(worker),
-                                    job,
-                                    NONE,
-                                    k as u64,
-                                );
-                                ctx.gang_block(job);
-                                ctx.send(Ev::Launch { worker, job, dur: None });
-                                let w = ctx.rng.below(self.cfg.workers) as u32;
-                                ctx.flight(
-                                    EvKind::Reprobe,
-                                    Actor::Sched(job % self.cfg.n_schedulers as u32),
-                                    job,
-                                    NONE,
-                                    w as u64,
-                                );
-                                ctx.send(Ev::Probe { worker: w, job, retry: 0 });
-                                return;
-                            }
-                            let (t, dur) = self.jobs[job as usize]
-                                .bind_next(&ctx.trace.jobs[job as usize])
-                                .expect("gang bind after exhaustion check");
-                            ctx.out.decisions += 1;
-                            ctx.flight(
-                                EvKind::Bind,
-                                Actor::Sched(job % self.cfg.n_schedulers as u32),
-                                job,
-                                t as u32,
-                                worker as u64,
-                            );
-                            ctx.constraint_unblock(job);
-                            ctx.gang_unblock(job);
-                            for &w in &members[1..] {
-                                self.workers[w as usize].state = WState::Busy { long: false };
-                            }
-                            ctx.send(Ev::GangLaunch {
-                                job,
-                                workers: members,
-                                dur,
-                            });
-                            return;
-                        }
-                    }
-                }
-                let dur = match self.jobs[job as usize].bind_next(&ctx.trace.jobs[job as usize]) {
-                    Some((t, dur)) => {
-                        ctx.out.decisions += 1;
-                        ctx.flight(
-                            EvKind::Bind,
-                            Actor::Sched(job % self.cfg.n_schedulers as u32),
-                            job,
-                            t as u32,
-                            worker as u64,
-                        );
-                        if self.demands[job as usize].is_some() {
-                            ctx.constraint_unblock(job);
-                        }
-                        Some(dur)
-                    }
-                    None => None,
-                };
-                ctx.send(Ev::Launch { worker, job, dur });
-            }
-            Ev::GangLaunch { job, workers, dur } => {
-                debug_assert!(self.workers[workers[0] as usize].state == WState::Waiting);
-                for &w in &workers {
-                    self.workers[w as usize].state = WState::Busy { long: false };
-                }
-                ctx.out.tasks += 1;
-                ctx.push_after(dur, Ev::GangFinish {
-                    workers,
-                    job,
-                    long: false,
-                });
-            }
-            Ev::GangPlace { job, workers, dur } => {
-                // whole-or-queue at the node: idle members commit
-                // immediately; members racing a short task get a gang
-                // hold queued and join when they free (the head-of-line
-                // blocking SSS cannot dodge for eagerly-bound work)
-                let gid = self
-                    .free_gangs
-                    .last()
-                    .copied()
-                    .unwrap_or(self.gangs.len() as u32);
-                let mut need = 0u32;
-                for &w in &workers {
-                    let ws = &mut self.workers[w as usize];
-                    if ws.state == WState::Idle {
-                        ws.state = WState::Busy { long: true };
-                        self.long_busy.set_free(w as usize);
-                    } else {
-                        ws.queue.push_back(QItem::GangHold { gang: gid });
-                        need += 1;
-                    }
-                }
-                if need == 0 {
-                    ctx.out.tasks += 1;
-                    ctx.push_after(dur, Ev::GangFinish {
-                        workers,
-                        job,
-                        long: true,
-                    });
-                } else {
-                    let state = Some(GangState {
-                        job,
-                        dur,
-                        workers,
-                        need,
-                    });
-                    if self.free_gangs.pop().is_some() {
-                        self.gangs[gid as usize] = state; // recycled slot
-                    } else {
-                        self.gangs.push(state);
-                    }
-                }
-            }
-            Ev::GangFinish { workers, job, long } => {
-                let mut members: Vec<u32> = ctx.pool.take();
-                members.extend_from_slice(&workers);
-                let d = ctx.net_delay();
-                ctx.out.breakdown.comm_s += d.as_secs();
-                ctx.push_after(d, Ev::GangDone { job, workers, long });
-                // atomic release: all member slots free together
-                for &w in &members {
-                    self.workers[w as usize].state = WState::Idle;
-                    if long {
-                        self.long_busy.set_busy(w as usize);
-                    }
-                }
-                for &w in &members {
-                    advance_worker(
-                        w,
-                        &mut self.workers,
-                        &mut self.gangs,
-                        &mut self.free_gangs,
-                        &mut self.long_busy,
-                        ctx,
-                    );
-                }
-                ctx.pool.give(members);
-            }
-            Ev::GangDone { job, workers, long } => {
-                ctx.out.messages += 1;
-                ctx.task_done(job);
-                if long {
-                    for &w in &workers {
-                        self.central_free.set_free(w as usize);
-                    }
-                    ctx.pool.give(workers);
-                    self.drain_long(ctx);
-                } else {
-                    ctx.pool.give(workers);
-                }
-            }
-            Ev::Launch { worker, job, dur } => {
-                match dur {
-                    Some(dur) => {
-                        self.workers[worker as usize].state = WState::Busy { long: false };
-                        ctx.out.tasks += 1;
-                        ctx.push_after(dur, Ev::Finish {
-                            worker,
-                            job,
-                            long: false,
-                        });
-                    }
-                    None => {
-                        self.workers[worker as usize].state = WState::Idle;
-                        advance_worker(
-                            worker,
-                            &mut self.workers,
-                            &mut self.gangs,
-                            &mut self.free_gangs,
-                            &mut self.long_busy,
-                            ctx,
-                        );
-                    }
-                }
-            }
-            Ev::LongPlace { worker, job, dur } => {
-                let w = &mut self.workers[worker as usize];
-                match w.state {
-                    WState::Idle => {
-                        w.state = WState::Busy { long: true };
-                        self.long_busy.set_free(worker as usize); // bit set = long-busy
-                        ctx.out.tasks += 1;
-                        ctx.push_after(dur, Ev::Finish {
-                            worker,
-                            job,
-                            long: true,
-                        });
-                    }
-                    _ => {
-                        // raced with a short task: queue at the worker
-                        w.queue.push_back(QItem::LongTask { job, dur });
-                    }
-                }
-            }
-            Ev::Finish { worker, job, long } => {
-                let d = ctx.net_delay();
-                ctx.out.breakdown.comm_s += d.as_secs();
-                ctx.push_after(d, Ev::Done { job, worker, long });
-                self.workers[worker as usize].state = WState::Idle;
-                if long {
-                    self.long_busy.set_busy(worker as usize);
-                    advance_worker(
-                        worker,
-                        &mut self.workers,
-                        &mut self.gangs,
-                        &mut self.free_gangs,
-                        &mut self.long_busy,
-                        ctx,
-                    );
-                } else {
-                    // sticky batch probing: same job first (the worker
-                    // just ran a task of this job, so it matches any
-                    // demand the job carries — no re-verification)
-                    match self.jobs[job as usize].bind_next(&ctx.trace.jobs[job as usize]) {
-                        Some((t, dur)) => {
-                            ctx.out.decisions += 1;
-                            // sticky batch: the *node* re-binds itself
-                            ctx.flight(
-                                EvKind::Bind,
-                                Actor::Node(worker),
-                                job,
-                                t as u32,
-                                worker as u64,
-                            );
-                            if self.demands[job as usize].is_some() {
-                                ctx.constraint_unblock(job);
-                            }
-                            self.workers[worker as usize].state = WState::Busy { long: false };
-                            ctx.out.tasks += 1;
-                            ctx.push_after(dur, Ev::Finish {
-                                worker,
-                                job,
-                                long: false,
-                            });
-                        }
-                        None => {
-                            advance_worker(
-                                worker,
-                                &mut self.workers,
-                                &mut self.gangs,
-                                &mut self.free_gangs,
-                                &mut self.long_busy,
-                                ctx,
-                            );
-                        }
-                    }
-                }
-            }
-            Ev::Done { job, worker, long } => {
-                ctx.out.messages += 1;
-                ctx.task_done(job);
-                if long {
-                    self.central_free.set_free(worker as usize);
-                    self.drain_long(ctx);
-                }
-            }
-        }
+        handle_event(&mut self.view(), ev, ctx);
     }
 }
 
 pub fn simulate(cfg: &EagleConfig, trace: &Trace) -> RunOutcome {
     let mut sched = Eagle::new(cfg, trace);
     driver::run(&mut sched, &cfg.sim, trace)
-}
-
-/// Idle worker surfaces its reservation queue: a short reservation turns
-/// into a Ready RPC; a queued long task starts executing immediately; a
-/// gang hold joins its long gang, which starts once the last member has
-/// joined. (long_busy bookkeeping for queued long tasks happens in
-/// Finish.)
-fn advance_worker(
-    worker: u32,
-    workers: &mut [ProbeWorker<QItem>],
-    gangs: &mut [Option<GangState>],
-    free_gangs: &mut Vec<u32>,
-    long_busy: &mut AvailMap,
-    ctx: &mut SimCtx<'_, Ev>,
-) {
-    let w = &mut workers[worker as usize];
-    if w.state != WState::Idle {
-        return;
-    }
-    match w.queue.pop_front() {
-        Some(QItem::Reservation(job)) => {
-            w.state = WState::Waiting;
-            ctx.send(Ev::Ready { job, worker });
-        }
-        Some(QItem::LongTask { job, dur }) => {
-            w.state = WState::Busy { long: true };
-            ctx.out.tasks += 1;
-            ctx.push_after(dur, Ev::Finish {
-                worker,
-                job,
-                long: true,
-            });
-        }
-        Some(QItem::GangHold { gang }) => {
-            w.state = WState::Busy { long: true };
-            long_busy.set_free(worker as usize); // bit set = long-busy
-            let slot = &mut gangs[gang as usize];
-            let need = {
-                let g = slot.as_mut().expect("gang hold after gang start");
-                g.need -= 1;
-                g.need
-            };
-            if need == 0 {
-                let g = slot.take().expect("last hold just joined");
-                free_gangs.push(gang);
-                ctx.out.tasks += 1;
-                ctx.push_after(g.dur, Ev::GangFinish {
-                    workers: g.workers,
-                    job: g.job,
-                    long: true,
-                });
-            }
-        }
-        None => {}
-    }
 }
 
 #[cfg(test)]
@@ -850,8 +934,8 @@ mod tests {
         let mut cfg = EagleConfig::for_workers(320);
         cfg.sim.seed = 23;
         cfg.catalog = NodeCatalog::bimodal_gpu(320, 0.25);
-        // 1 s tasks: short class — gangs bind probed slot + idle
-        // co-residents, partial fits re-probe blind
+        // 1 s tasks: short class — gangs seat at the probed node via
+        // GangTry, partial fits NACK back and re-probe blind
         let trace = synthetic_fixed_constrained(
             10,
             30,
@@ -927,5 +1011,47 @@ mod tests {
         let b = simulate(&cfg, &trace);
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(summarize_jobs(&a.jobs).p95, summarize_jobs(&b.jobs).p95);
+    }
+
+    #[test]
+    fn sss_fallback_reprobes_spread_without_a_short_partition() {
+        use crate::workload::Job;
+        // regression (ISSUE 9): a fleet smaller than
+        // 1/short_partition_frac has short_cut == 0 — no short
+        // partition at all. The SSS fallback used to draw from
+        // `below(short_cut.max(1))`, pinning every fallback re-probe to
+        // worker 0; it must spread over the whole fleet instead.
+        let mut cfg = EagleConfig::for_workers(10); // 10 * 0.09 -> short_cut = 0
+        cfg.sim.seed = 33;
+        cfg.sim.flight = true;
+        cfg.sim.short_threshold = SimTime::from_secs(1.0);
+        // one long job saturates all 10 workers; the short jobs' probes
+        // then bounce off SSS rejections until the long tasks finish
+        let mut jobs = vec![Job::new(0, SimTime::ZERO, vec![SimTime::from_secs(3.0); 10])];
+        for i in 1..6u32 {
+            jobs.push(Job::new(
+                i,
+                SimTime::from_secs(1.0 + i as f64 * 0.01),
+                vec![SimTime::from_secs(0.5); 2],
+            ));
+        }
+        let trace = Trace::new("sss-fallback", jobs);
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 6);
+        assert_eq!(out.tasks as usize, trace.n_tasks());
+        let log = out.flight_log.as_ref().expect("flight recording was on");
+        // unconstrained trace: every Reprobe is an SSS fallback re-probe
+        // (payload = target worker)
+        let reprobes: Vec<u64> = log
+            .iter()
+            .filter(|e| e.kind == EvKind::Reprobe)
+            .map(|e| e.payload)
+            .collect();
+        assert!(!reprobes.is_empty(), "no SSS fallback re-probe ever fired");
+        assert!(
+            reprobes.iter().any(|&w| w != 0),
+            "all {} fallback re-probes pinned to worker 0",
+            reprobes.len()
+        );
     }
 }

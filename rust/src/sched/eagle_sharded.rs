@@ -1,0 +1,357 @@
+//! Sharded Eagle execution: one run partitioned across cores.
+//!
+//! Sparrow's scheduler/worker cut ([`crate::sched::sparrow_sharded`])
+//! extended with a **pinned central actor**: a
+//! [`crate::cluster::shard::ShardPlan`] built by `for_axes` over Eagle's
+//! `cfg.n_schedulers` distributed short-job schedulers and the catalog's
+//! nodes, plus the long-job central scheduler homed on
+//! [`CENTRAL_SHARD`]. The central FIFO queue and free view are a serial
+//! actor — every long-path event (`Reject`-free: long arrivals, long
+//! `Done`/`GangDone` completion notices) routes to that one shard, so
+//! `drain_long`'s re-scan runs under a single lane's deterministic event
+//! order and its placements (`LongPlace`/`GangPlace`) leave as
+//! net-delayed cross-shard messages to the target node's shard.
+//!
+//! Short-job traffic shards exactly like Sparrow: worker events (probes,
+//! launches, gang tries, finishes) home on the worker's node's shard;
+//! scheduler events (SSS rejects, ready RPCs, gang NACKs, short
+//! completion notices — the sticky re-bind round trip) home on the
+//! owning scheduler's shard, jobs striped round-robin. Node boundaries
+//! bound shard cuts, so a gang's co-resident slots never straddle shards
+//! — short gangs seat via the shared [`Ev::GangTry`]/[`Ev::GangNack`]
+//! protocol, long gangs commit whole-or-queue inside one node's shard.
+//!
+//! Each worker-side `long_busy` map is the shard's *partial* view of
+//! long occupancy (only its own workers' bits are ever set), so an SSS
+//! reject carries exactly the staleness the mechanism is designed to
+//! tolerate — and the same partial view in both lane orders, keeping
+//! threaded ≡ sequential bit-identity (`tests/shard_identity.rs`).
+//! `shards = 1` and zero-lookahead network models delegate to the
+//! classic driver with the reason recorded on
+//! [`RunOutcome::shard_fallback`].
+
+use std::collections::VecDeque;
+
+use crate::cluster::hetero::ResolvedDemand;
+use crate::cluster::shard::{ShardPlan, ShardedState};
+use crate::cluster::{AvailMap, NodeCatalog};
+use crate::config::EagleConfig;
+use crate::metrics::RunOutcome;
+use crate::sched::common::{ProbeWorker, TaskCursor};
+use crate::sim::driver::{self, ShardSim, SimCtx};
+use crate::sim::time::SimTime;
+use crate::workload::{JobClass, Trace};
+
+use super::eagle::{self, EagleSetup, EagleView, Ev, GangState, QItem};
+
+/// The shard the long-job central scheduler is pinned to. Shard 0 by
+/// construction: `ShardPlan`'s CSR cut always assigns scheduler 0 to
+/// shard 0 (`shard_of_gm(0) == 0`), so pinning the central actor there
+/// needs no extra plan machinery — long arrivals and long completion
+/// notices simply route to shard 0, where the FIFO queue and central
+/// free view live.
+pub(crate) const CENTRAL_SHARD: usize = 0;
+
+/// One shard: a contiguous block of workers (whole nodes) plus
+/// full-width scheduler-side state. Only jobs homed on this shard's
+/// schedulers touch their cursor/returned entries; `central_free` and
+/// `long_q` are live on [`CENTRAL_SHARD`] only (placeholders elsewhere,
+/// unreachable by routing); `long_busy` is full-width but only this
+/// shard's workers' bits are ever set; `gangs`/`free_gangs` hold long
+/// gangs queued at this shard's nodes (gangs never straddle shards).
+struct EagleShard<'a> {
+    cfg: &'a EagleConfig,
+    short_cut: usize,
+    workers: Vec<ProbeWorker<QItem>>,
+    worker_lo: usize,
+    jobs: Vec<TaskCursor>,
+    returned: Vec<Vec<SimTime>>,
+    classes: &'a [JobClass],
+    demands: &'a [Option<ResolvedDemand>],
+    central_free: AvailMap,
+    long_q: VecDeque<(u32, SimTime)>,
+    long_busy: AvailMap,
+    gangs: Vec<Option<GangState>>,
+    free_gangs: Vec<u32>,
+}
+
+impl EagleShard<'_> {
+    fn view(&mut self) -> EagleView<'_> {
+        EagleView {
+            cfg: self.cfg,
+            short_cut: self.short_cut,
+            workers: &mut self.workers,
+            worker_lo: self.worker_lo,
+            jobs: &mut self.jobs,
+            returned: &mut self.returned,
+            classes: self.classes,
+            demands: self.demands,
+            central_free: &mut self.central_free,
+            long_q: &mut self.long_q,
+            long_busy: &mut self.long_busy,
+            gangs: &mut self.gangs,
+            free_gangs: &mut self.free_gangs,
+        }
+    }
+}
+
+impl ShardSim for EagleShard<'_> {
+    type Ev = Ev;
+
+    fn init(&mut self, _ctx: &mut SimCtx<'_, Ev>) {
+        // Eagle has no recurring events — the central scheduler drains
+        // on arrivals and completion notices, workers react to messages
+    }
+
+    fn on_arrival(&mut self, job: u32, ctx: &mut SimCtx<'_, Ev>) {
+        eagle::handle_arrival(&mut self.view(), job, ctx);
+    }
+
+    fn on_event(&mut self, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
+        eagle::handle_event(&mut self.view(), ev, ctx);
+    }
+}
+
+/// The shard every event homes on: worker-side events go to the shard
+/// owning the worker's node; short-job scheduler events to the shard
+/// owning the job's scheduler (`job % n_schedulers`, the same striping
+/// as `shard_of_job`); long-path completion notices to the pinned
+/// central actor. Same-shard homes stay local (`Finish`/`GangFinish` at
+/// `now + dur`); everything else is a network message delayed by at
+/// least the lookahead window.
+fn home_shard(plan: &ShardPlan, catalog: &NodeCatalog, n_schedulers: usize, ev: &Ev) -> usize {
+    match ev {
+        Ev::Probe { worker, .. }
+        | Ev::Launch { worker, .. }
+        | Ev::GangTry { worker, .. }
+        | Ev::LongPlace { worker, .. }
+        | Ev::Finish { worker, .. } => plan.shard_of_lm(catalog.node_of(*worker as usize) as usize),
+        Ev::GangPlace { workers, .. } | Ev::GangFinish { workers, .. } => {
+            plan.shard_of_lm(catalog.node_of(workers[0] as usize) as usize)
+        }
+        Ev::Reject { job, .. } | Ev::Ready { job, .. } | Ev::GangNack { job, .. } => {
+            plan.shard_of_gm(*job as usize % n_schedulers)
+        }
+        // completion notices split by class: the central view must see
+        // long frees (they re-arm `drain_long`), the sticky re-bind
+        // belongs to the short job's scheduler
+        Ev::Done { job, long, .. } | Ev::GangDone { job, long, .. } => {
+            if *long {
+                CENTRAL_SHARD
+            } else {
+                plan.shard_of_gm(*job as usize % n_schedulers)
+            }
+        }
+    }
+}
+
+/// Simulate Eagle with `cfg.sim.shards` execution shards on as many
+/// threads. Falls back to the classic sequential driver — recording the
+/// reason on the outcome — when the plan clamps to one shard or the
+/// network model has no delay floor.
+pub fn simulate_sharded(cfg: &EagleConfig, trace: &Trace) -> RunOutcome {
+    run_impl(cfg, trace, true)
+}
+
+/// Sequential-reference twin of [`simulate_sharded`]: the same sharded
+/// schedule with the lanes drained serially on one thread.
+/// `tests/shard_identity.rs` pins bit-identity between the two at every
+/// shard count.
+pub fn simulate_sharded_reference(cfg: &EagleConfig, trace: &Trace) -> RunOutcome {
+    run_impl(cfg, trace, false)
+}
+
+fn run_impl(cfg: &EagleConfig, trace: &Trace, threaded: bool) -> RunOutcome {
+    let catalog = &cfg.catalog;
+    let plan = ShardPlan::for_axes(cfg.n_schedulers, catalog.n_nodes(), cfg.sim.shards);
+    if let Some(reason) = driver::shard_fallback(plan.shards(), &cfg.sim) {
+        let mut out = eagle::simulate(cfg, trace);
+        out.shard_fallback = Some(reason);
+        crate::obs::flight::record_fallback(&mut out);
+        return out;
+    }
+    let EagleSetup {
+        short_cut,
+        central_free,
+        classes,
+        demands,
+    } = eagle::resolve_and_check(cfg, trace);
+    // the live central view exists exactly once, on the pinned shard;
+    // the other shards carry an inert all-busy placeholder that routing
+    // never lets them read
+    let mut central = Some(central_free);
+    let n = plan.shards();
+    debug_assert_eq!(plan.shard_of_gm(0), CENTRAL_SHARD);
+    // worker-block bounds: shard s owns the slots of its node block
+    // (contiguous because node slot ranges are contiguous and ascending)
+    let mut bounds: Vec<usize> = (0..n)
+        .map(|s| catalog.node_range(plan.lm_range(s).start as u32).0)
+        .collect();
+    bounds.push(catalog.len());
+    let mut fleet = ShardedState::by_bounds(ProbeWorker::fleet(cfg.workers), &bounds);
+    let shards: Vec<EagleShard<'_>> = (0..n)
+        .map(|s| EagleShard {
+            cfg,
+            short_cut,
+            workers: fleet.take_block(s),
+            worker_lo: bounds[s],
+            jobs: TaskCursor::for_trace(trace),
+            returned: vec![Vec::new(); trace.n_jobs()],
+            classes: &classes,
+            demands: &demands,
+            central_free: if s == CENTRAL_SHARD {
+                central.take().expect("central view taken once")
+            } else {
+                AvailMap::all_busy(cfg.workers)
+            },
+            long_q: VecDeque::new(),
+            long_busy: AvailMap::all_busy(cfg.workers),
+            gangs: Vec::new(),
+            free_gangs: Vec::new(),
+        })
+        .collect();
+    let shard_of = |ev: &Ev| home_shard(&plan, catalog, cfg.n_schedulers, ev);
+    // long jobs arrive at the pinned central actor, short jobs at their
+    // round-robin scheduler's shard
+    let shard_of_job = |j: u32| match classes[j as usize] {
+        JobClass::Long => CENTRAL_SHARD,
+        JobClass::Short => plan.shard_of_gm(j as usize % cfg.n_schedulers),
+    };
+    driver::run_sharded(shards, &shard_of, &shard_of_job, &cfg.sim, trace, threaded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::ShardFallback;
+    use crate::sim::net::NetModel;
+    use crate::workload::synthetic::{google_like, synthetic_fixed};
+
+    fn cfg_with_shards(workers: usize, seed: u64, shards: usize) -> EagleConfig {
+        let mut c = EagleConfig::for_workers(workers);
+        c.sim.seed = seed;
+        c.sim.shards = shards;
+        c
+    }
+
+    #[test]
+    fn sharded_completes_all_jobs() {
+        for shards in [2, 3] {
+            let cfg = cfg_with_shards(300, 7, shards);
+            let trace = synthetic_fixed(20, 30, 1.0, 0.6, cfg.workers, 8);
+            let out = simulate_sharded(&cfg, &trace);
+            assert_eq!(out.jobs.len(), 30, "shards={shards}");
+            assert_eq!(out.tasks as usize, trace.n_tasks(), "shards={shards}");
+            assert_eq!(out.shards, shards as u32);
+            assert_eq!(out.shard_fallback, None);
+        }
+    }
+
+    #[test]
+    fn sharded_mixed_workload_routes_long_jobs_to_central_shard() {
+        // google_like mixes classes: long tasks ride the pinned central
+        // actor (LongPlace/Done round trips across shards), short tasks
+        // the probe path — all must complete on every shard count
+        for shards in [2, 4] {
+            let cfg = cfg_with_shards(500, 9, shards);
+            let trace = google_like(60, 500, 0.7, 10);
+            let out = simulate_sharded(&cfg, &trace);
+            assert_eq!(out.jobs.len(), 60, "shards={shards}");
+            assert_eq!(out.tasks as usize, trace.n_tasks(), "shards={shards}");
+            assert_eq!(out.shard_fallback, None);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_sequential_reference() {
+        let cfg = cfg_with_shards(300, 11, 3);
+        let trace = google_like(40, 300, 0.8, 12);
+        let a = simulate_sharded(&cfg, &trace);
+        let b = simulate_sharded_reference(&cfg, &trace);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.events, b.events);
+        for (x, y) in a.jobs.iter().zip(b.jobs.iter()) {
+            assert_eq!(x.complete, y.complete);
+        }
+    }
+
+    #[test]
+    fn long_gangs_place_whole_across_shards() {
+        use crate::cluster::NodeCatalog;
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        // everything long: the central actor on shard 0 claims gangs
+        // against its view and ships GangPlace to other shards' nodes,
+        // whose holds/finishes flow back as GangDone
+        let mut cfg = cfg_with_shards(320, 25, 4);
+        cfg.sim.short_threshold = SimTime::from_secs(0.5);
+        cfg.catalog = NodeCatalog::rack_tiered(320, 0.25);
+        let trace =
+            synthetic_fixed_constrained(6, 15, 2.0, 0.5, 320, 26, 0.3, Demand::new(4, vec![]));
+        let a = simulate_sharded(&cfg, &trace);
+        let b = simulate_sharded_reference(&cfg, &trace);
+        assert_eq!(a.tasks as usize, trace.n_tasks());
+        assert_eq!(a.shard_fallback, None);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.messages, b.messages);
+    }
+
+    #[test]
+    fn scarce_gang_nacks_recredit_and_complete() {
+        use crate::cluster::NodeCatalog;
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        // regression (ISSUE 9): every gang NACK must re-credit the
+        // returned duration with exactly one live replacement probe. A
+        // scarce-gang trace at 0.9 load NACKs constantly; a dropped
+        // credit would strand a task and hang the run short of
+        // `trace.n_tasks()`.
+        let mut cfg = cfg_with_shards(240, 29, 4);
+        cfg.catalog = NodeCatalog::bimodal_gpu(240, 0.25);
+        let trace = synthetic_fixed_constrained(
+            6,
+            40,
+            1.0,
+            0.9,
+            240,
+            30,
+            0.5,
+            Demand::new(2, vec!["gpu".into()]),
+        );
+        let a = simulate_sharded(&cfg, &trace);
+        assert_eq!(a.shard_fallback, None);
+        assert_eq!(a.tasks as usize, trace.n_tasks());
+        assert!(a.gang_rejections > 0, "no gang try was ever refused");
+        let b = simulate_sharded_reference(&cfg, &trace);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.gang_rejections, b.gang_rejections);
+    }
+
+    #[test]
+    fn one_shard_delegates_with_recorded_reason() {
+        let cfg1 = cfg_with_shards(300, 13, 1);
+        let trace = synthetic_fixed(20, 30, 1.0, 0.7, cfg1.workers, 14);
+        let a = simulate_sharded(&cfg1, &trace);
+        let b = eagle::simulate(&cfg1, &trace);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.shards, 1);
+        assert_eq!(a.shard_fallback, Some(ShardFallback::PlanClamped));
+    }
+
+    #[test]
+    fn zero_window_net_delegates_with_recorded_reason() {
+        let mut cfg = cfg_with_shards(300, 17, 4);
+        cfg.sim.net = NetModel::Jittered {
+            base: SimTime::ZERO,
+            jitter: SimTime::from_millis(1.0),
+        };
+        let trace = synthetic_fixed(20, 30, 1.0, 0.6, cfg.workers, 18);
+        let out = simulate_sharded(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 30);
+        assert_eq!(out.shards, 1);
+        assert_eq!(out.shard_fallback, Some(ShardFallback::ZeroWindow));
+    }
+}

@@ -7,13 +7,16 @@
 //! * [`sparrow`] — distributed batch sampling + late binding (§2.2.2);
 //!   [`sparrow_sharded`] runs the same handlers under the sharded driver.
 //! * [`eagle`] — hybrid centralized/distributed with succinct state
-//!   sharing and sticky batch probing (§2.2.3).
+//!   sharing and sticky batch probing (§2.2.3); [`eagle_sharded`] runs
+//!   the same handlers under the sharded driver with the long-job
+//!   central scheduler pinned to one shard.
 //! * [`pigeon`] — federated distributors + group coordinators with
 //!   weighted fair queues (§2.2.4).
 //! * [`ideal`] — the omniscient infinite-DC scheduler defining IdealJCT.
 
 pub mod common;
 pub mod eagle;
+pub mod eagle_sharded;
 pub mod ideal;
 pub mod megha;
 pub mod pigeon;

@@ -32,7 +32,7 @@ use crate::cluster::hetero::{self, ResolvedDemand};
 use crate::config::SparrowConfig;
 use crate::metrics::RunOutcome;
 use crate::obs::flight::{Actor, EvKind, NONE};
-use crate::sched::common::{idle_coresidents, ProbeWorker, TaskCursor, WState};
+use crate::sched::common::{idle_coresidents, nack_recredit, ProbeWorker, TaskCursor, WState};
 use crate::sim::driver::{self, Scheduler, SimCtx};
 use crate::sim::time::SimTime;
 use crate::workload::Trace;
@@ -279,13 +279,15 @@ pub(crate) fn handle_event(v: &mut SparrowView<'_>, ev: Ev, ctx: &mut SimCtx<'_,
             }
         }
         Ev::GangNack { job, dur } => {
-            ctx.out.messages += 1;
-            ctx.gang_block(job);
-            v.returned[job as usize].push(dur);
-            let w = ctx.rng.below(v.cfg.workers) as u32;
-            let sched = Actor::Sched(job % v.cfg.n_schedulers as u32);
-            ctx.flight(EvKind::Reprobe, sched, job, NONE, w as u64);
-            ctx.send(Ev::Reserve { worker: w, job });
+            nack_recredit(
+                v.returned,
+                job,
+                dur,
+                v.cfg.workers,
+                v.cfg.n_schedulers,
+                ctx,
+                |w| Ev::Reserve { worker: w, job },
+            );
         }
         Ev::GangFinish { workers, job } => {
             let d = ctx.net_delay();

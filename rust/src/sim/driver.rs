@@ -409,6 +409,12 @@ struct ShardLane<S: ShardSim> {
     /// end, so the merged log is identical in threaded and sequential
     /// modes (per-lane logs already are — `run_epoch` is shared).
     rec: FlightRecorder,
+    /// Next sim time at which draining an event emits a `DrvEpoch`
+    /// marker. Advanced to `t + window` on each marker, so the marker
+    /// stream is a pure function of the lane's drained-event times and
+    /// the window — *not* of how barrier horizons tile those times,
+    /// which fast-forward deliberately changes on idle stretches.
+    next_epoch_mark: SimTime,
 }
 
 impl<S: ShardSim> ShardLane<S> {
@@ -417,34 +423,38 @@ impl<S: ShardSim> ShardLane<S> {
     /// sequential modes of [`run_sharded`] both call it, so they cannot
     /// diverge in per-event behavior, only in lane interleaving (which
     /// is invisible: lanes share no mutable state between barriers).
+    #[allow(clippy::too_many_arguments)]
     fn run_epoch(
         &mut self,
         my_shard: usize,
         horizon: SimTime,
+        window: SimTime,
         all_done: bool,
         shard_of: &(dyn Fn(&S::Ev) -> usize + Sync),
         net: &NetModel,
         trace: &Trace,
     ) {
-        let mut first = true;
         while let Some(t) = self.q.peek_time() {
             if t >= horizon {
                 break;
             }
             let (_, ev) = self.q.pop().expect("peeked event vanished");
-            if first {
-                // one epoch marker per lane per non-empty epoch, stamped
-                // at the first drained event; identical across execution
-                // modes because this method is the shared drain path
+            if t >= self.next_epoch_mark {
+                // one marker per window's worth of drained activity,
+                // keyed off drained-event times rather than barrier
+                // horizons: a lane's drained sequence is time-ordered
+                // and identical whichever way idle stretches are tiled,
+                // so fast-forwarded and dense runs (and threaded and
+                // sequential lanes) log the same markers
                 self.rec.record(
                     t,
                     EvKind::DrvEpoch,
                     Actor::Driver(my_shard as u32),
                     NONE,
                     NONE,
-                    horizon.as_micros(),
+                    (t + window).as_micros(),
                 );
-                first = false;
+                self.next_epoch_mark = t + window;
             }
             let mut ctx = SimCtx {
                 q: &mut self.q,
@@ -618,6 +628,7 @@ pub fn run_sharded<S: ShardSim>(
             pool: BufPools::new(),
             outbox: (0..n).map(|_| Vec::new()).collect(),
             rec: FlightRecorder::new(params.flight),
+            next_epoch_mark: SimTime::ZERO,
         })
         .collect();
 
@@ -798,7 +809,7 @@ pub fn run_sharded<S: ShardSim>(
                                 }
                             }
                             let all_done = done_cum == n_jobs;
-                            lane.run_epoch(me, horizon, all_done, shard_of, net, trace);
+                            lane.run_epoch(me, horizon, window, all_done, shard_of, net, trace);
                             let mut traffic = 0u64;
                             for (d, bucket) in lane.outbox.iter_mut().enumerate() {
                                 if !bucket.is_empty() {
@@ -844,7 +855,7 @@ pub fn run_sharded<S: ShardSim>(
             };
             prev_horizon = Some(horizon);
             for (s, lane) in lanes.iter_mut().enumerate() {
-                lane.run_epoch(s, horizon, all_done, shard_of, &params.net, trace);
+                lane.run_epoch(s, horizon, window, all_done, shard_of, &params.net, trace);
             }
         }
     }

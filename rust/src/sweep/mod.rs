@@ -21,6 +21,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::cluster::shard::ShardPlan;
 use crate::cluster::NodeCatalog;
 use crate::config::{EagleConfig, MeghaConfig, PigeonConfig, SparrowConfig};
 use crate::metrics::{
@@ -49,6 +50,46 @@ pub fn effective_threads(requested: usize) -> usize {
         std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1)
+    }
+}
+
+/// The number of OS threads one (framework, scenario) run actually
+/// occupies: the scenario's requested shard count pushed through the
+/// same clamps and fallbacks the run itself will hit. Pigeon has no
+/// sharded port and always runs single-threaded; a zero-lookahead
+/// network or a plan clamped to one shard delegates every framework to
+/// the classic driver; Megha's plan cuts over its GM/LM federation,
+/// Sparrow's and Eagle's over their schedulers x catalog nodes. The
+/// sweep's thread-budget divisor uses this so scenarios that *record* a
+/// fallback and run on one thread don't shrink the across-run fan-out.
+fn effective_shards(framework: &str, sc: &Scenario) -> usize {
+    let req = sc.shards.max(1);
+    if req == 1 || sc.net.min_delay() == SimTime::ZERO {
+        return 1; // PlanClamped / ZeroWindow: classic driver
+    }
+    match framework {
+        "megha" => {
+            let cfg = MeghaConfig::for_workers(sc.workers);
+            ShardPlan::new(&cfg.spec, req).shards()
+        }
+        "sparrow" => {
+            let cfg = SparrowConfig::for_workers(sc.workers);
+            let n_nodes = sc
+                .hetero
+                .as_ref()
+                .map_or(cfg.workers, |h| h.catalog(cfg.workers).n_nodes());
+            ShardPlan::for_axes(cfg.n_schedulers, n_nodes, req).shards()
+        }
+        "eagle" => {
+            let cfg = EagleConfig::for_workers(sc.workers);
+            let n_nodes = sc
+                .hetero
+                .as_ref()
+                .map_or(cfg.workers, |h| h.catalog(cfg.workers).n_nodes());
+            ShardPlan::for_axes(cfg.n_schedulers, n_nodes, req).shards()
+        }
+        // pigeon (and anything unknown): no sharded port
+        _ => 1,
     }
 }
 
@@ -183,10 +224,12 @@ pub struct Scenario {
     /// goldens in `tests/index_oracle.rs`.
     pub use_index: bool,
     /// Execution shards per run (`SimParams::shards`): 1 = the classic
-    /// sequential driver; N > 1 runs Megha's or Sparrow's event loop on
-    /// N threads (Eagle and Pigeon fall back to 1, recorded on
+    /// sequential driver; N > 1 runs Megha's, Sparrow's, or Eagle's
+    /// event loop on N threads (Pigeon falls back to 1, recorded on
     /// [`RunOutcome::shard_fallback`]). The sweep divides its across-run
-    /// fan-out by this, so total threads stay within the core budget.
+    /// fan-out by the *effective* post-fallback shard counts, so total
+    /// threads stay within the core budget without undersubscribing for
+    /// falling-back runs.
     pub shards: usize,
     /// Idle-epoch fast-forward in the sharded driver
     /// (`SimParams::fast_forward`, default on); `false` selects the
@@ -275,9 +318,9 @@ pub fn preset_names() -> &'static [&'static str] {
 ///   routine.
 /// * `scale100` — the ISSUE-6 sharded-execution target: the same Yahoo
 ///   shape at ~1M worker slots, run with 8 execution shards
-///   (`Scenario::shards`; Megha shards its event loop across that many
-///   threads, baselines fall back to sequential). `--smoke` on the CLI
-///   shrinks it 10× for CI.
+///   (`Scenario::shards`; Megha, Sparrow, and Eagle shard their event
+///   loops across that many threads, Pigeon falls back to sequential).
+///   `--smoke` on the CLI shrinks it 10× for CI.
 /// * `hetero` — the ISSUE-3 heterogeneity grid: attribute-scarcity ×
 ///   load on a bimodal-GPU catalog, plus one rack-tiered scenario. The
 ///   constrained fraction is calibrated so the *constrained sub-load*
@@ -444,8 +487,8 @@ pub fn scenario_grid(
 /// optional GM failure injection (Megha only; ignored by baselines), an
 /// optional heterogeneity spec (each framework builds the catalog
 /// over its own DC size), the occupancy-index routing flag, the
-/// execution-shard count (Megha and Sparrow shard; Eagle and Pigeon run
-/// the sequential driver and record
+/// execution-shard count (Megha, Sparrow, and Eagle shard; Pigeon runs
+/// the sequential driver and records
 /// [`ShardFallback::Unsupported`] when shards were requested), the
 /// idle-epoch fast-forward toggle, and the flight-recorder toggle.
 /// `fig3::run_framework`, [`run_one`] and the cross-scheduler tests all
@@ -508,16 +551,17 @@ pub fn run_framework_hetero(
             cfg.sim.seed = seed;
             cfg.sim.net = net.clone();
             cfg.sim.use_index = use_index;
+            cfg.sim.shards = shards.max(1);
+            cfg.sim.fast_forward = fast_forward;
             cfg.sim.flight = flight;
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.workers);
             }
-            let mut out = sched::eagle::simulate(&cfg, trace);
-            if shards > 1 {
-                out.shard_fallback = Some(ShardFallback::Unsupported);
-                crate::obs::flight::record_fallback(&mut out);
+            if cfg.sim.shards > 1 {
+                sched::eagle_sharded::simulate_sharded(&cfg, trace)
+            } else {
+                sched::eagle::simulate(&cfg, trace)
             }
-            out
         }
         "pigeon" => {
             let mut cfg = PigeonConfig::for_workers(workers);
@@ -700,13 +744,23 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
     });
     let gen_s = t_gen.elapsed().as_secs_f64();
     // A run with `shards` execution shards occupies that many OS threads
-    // on its own; divide the across-run fan-out by the widest scenario so
-    // the sweep's total thread count stays within the core budget rather
-    // than oversubscribing shards x runs threads.
+    // on its own; divide the across-run fan-out by the widest (framework,
+    // scenario) cell so the sweep's total thread count stays within the
+    // core budget rather than oversubscribing shards x runs threads.
+    // "Widest" means *effective* shards after the same clamps and
+    // fallbacks the run itself will hit — a grid of falling-back
+    // frameworks (e.g. Pigeon at shards = 8) runs single-threaded and
+    // must not shrink the across-run fan-out 8x for nothing.
     let max_shards = spec
         .scenarios
         .iter()
-        .map(|s| s.shards.max(1))
+        .map(|sc| {
+            spec.frameworks
+                .iter()
+                .map(|f| effective_shards(f, sc))
+                .max()
+                .unwrap_or(1)
+        })
         .max()
         .unwrap_or(1);
     let threads = (budget / max_shards).max(1);
@@ -1129,8 +1183,9 @@ mod tests {
 
     #[test]
     fn sharded_scenario_runs_and_divides_thread_budget() {
-        // a sharded Megha cell through the sweep front door: the run
-        // reports its shard count and the across-run pool is divided
+        // sharded cells through the sweep front door: every ported
+        // framework reports its shard count and the across-run pool is
+        // divided by the effective width
         let sc = Scenario {
             name: "shard-tiny".into(),
             workload: WorkloadKind::Fixed { tasks_per_job: 8 },
@@ -1155,11 +1210,84 @@ mod tests {
         let res = run_sweep(&spec);
         assert_eq!(res.threads, 2, "4-thread budget / 2 shards");
         for r in &res.records {
-            let want = if r.framework == "megha" { 2 } else { 1 };
-            assert_eq!(r.shards, want, "{}", r.framework);
+            assert_eq!(r.shards, 2, "{}", r.framework);
         }
         let rows = aggregate(&spec, &res.records);
         assert!(rows.iter().any(|r| r.shards == 2));
+    }
+
+    #[test]
+    fn fallback_only_grid_keeps_the_full_thread_budget() {
+        // regression (ISSUE 9): the budget divisor must come from
+        // *effective* shard counts. Pigeon has no sharded port — a
+        // pigeon-only grid requesting 8 shards runs every cell on one
+        // thread, so dividing the across-run fan-out by the requested 8
+        // would undersubscribe the pool 8x for nothing.
+        let sc = Scenario {
+            name: "fallback-tiny".into(),
+            workload: WorkloadKind::Fixed { tasks_per_job: 8 },
+            workers: 200,
+            jobs: 12,
+            load: 0.6,
+            net: NetModel::paper_default(),
+            gm_fail_at: None,
+            hetero: None,
+            use_index: true,
+            shards: 8,
+            fast_forward: true,
+            flight: false,
+        };
+        let spec = SweepSpec {
+            frameworks: vec!["pigeon".into()],
+            scenarios: vec![sc],
+            seeds: 4,
+            base_seed: 21,
+            threads: 4,
+        };
+        let res = run_sweep(&spec);
+        assert_eq!(res.threads, 4, "fallback-only grid must not divide the budget");
+        for r in &res.records {
+            assert_eq!(r.shards, 1, "{}", r.framework);
+        }
+    }
+
+    #[test]
+    fn effective_shards_tracks_clamps_and_fallbacks() {
+        let mut sc = Scenario {
+            name: "eff".into(),
+            workload: WorkloadKind::Fixed { tasks_per_job: 8 },
+            workers: 300,
+            jobs: 10,
+            load: 0.5,
+            net: NetModel::paper_default(),
+            gm_fail_at: None,
+            hetero: None,
+            use_index: true,
+            shards: 4,
+            fast_forward: true,
+            flight: false,
+        };
+        // all three ported frameworks shard; pigeon never does. Megha's
+        // plan cuts over its 3x3 GM/LM federation at this DC size, so a
+        // 4-shard request clamps to 3.
+        assert_eq!(effective_shards("megha", &sc), 3);
+        assert_eq!(effective_shards("sparrow", &sc), 4);
+        assert_eq!(effective_shards("eagle", &sc), 4);
+        assert_eq!(effective_shards("pigeon", &sc), 1);
+        // requesting more shards than scheduler-side entities clamps
+        // (Sparrow and Eagle have 8 distributed schedulers)
+        sc.shards = 64;
+        assert_eq!(effective_shards("sparrow", &sc), 8);
+        assert_eq!(effective_shards("eagle", &sc), 8);
+        // a zero-lookahead network forces the classic driver everywhere
+        sc.shards = 4;
+        sc.net = NetModel::Jittered {
+            base: SimTime::ZERO,
+            jitter: SimTime::from_millis(1.0),
+        };
+        for f in FRAMEWORKS {
+            assert_eq!(effective_shards(f, &sc), 1, "{f}");
+        }
     }
 
     #[test]

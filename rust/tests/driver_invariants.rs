@@ -549,9 +549,9 @@ fn gm_failure_scenario_still_completes_through_sweep() {
 /// framework, on both the classic and the sharded driver. Recording
 /// only appends to a lane-private side log and fills
 /// [`RunOutcome::flight`]/[`RunOutcome::flight_log`]; it never touches
-/// the RNG, event order, or any scheduler state. (Eagle and Pigeon fall
-/// back to the sequential driver at shards = 2, which additionally
-/// exercises `obs::flight::record_fallback`.)
+/// the RNG, event order, or any scheduler state. (Pigeon falls back to
+/// the sequential driver at shards = 2, which additionally exercises
+/// `obs::flight::record_fallback`; Megha, Sparrow, and Eagle shard.)
 #[test]
 fn flight_recorder_is_bit_identical_to_off() {
     let workers = 400;
@@ -579,6 +579,56 @@ fn flight_recorder_is_bit_identical_to_off() {
                 log.windows(2).all(|w| w[0].t_us <= w[1].t_us),
                 "{name}/{label}: merged log not time-ordered"
             );
+        }
+    }
+}
+
+/// Fast-forward flight golden (ISSUE 9): idle-epoch fast-forward only
+/// re-tiles dead time between barriers — it never changes which events
+/// run or when — so a `--no-fast-forward` run's flight log must differ
+/// from the default run's only by the `DrvFastForward` markers
+/// themselves. In particular `DrvEpoch` markers must agree: they are
+/// keyed off drained-event times, not barrier horizons. (Pre-fix, the
+/// dense run emitted one marker per dense epoch with horizon payloads,
+/// so counts and payloads disagreed wherever the ff run skipped idle
+/// windows.)
+#[test]
+fn fast_forward_flight_logs_differ_only_by_ff_markers() {
+    use megha::obs::flight::EvKind;
+    let workers = 400;
+    let seed = 61;
+    // sparse load: long idle stretches between job waves, so
+    // fast-forward actually skips windows
+    let trace = synthetic_fixed(8, 12, 1.0, 0.2, workers, 62);
+    let net = NetModel::Constant(SimTime::from_millis(0.5));
+    for name in ["sparrow", "eagle"] {
+        let ff_on = sweep::run_framework_hetero(
+            name, workers, seed, &net, None, None, true, 4, true, true, &trace,
+        );
+        let ff_off = sweep::run_framework_hetero(
+            name, workers, seed, &net, None, None, true, 4, false, true, &trace,
+        );
+        assert_eq!(ff_on.shard_fallback, None, "{name}: expected a sharded run");
+        assert_eq!(ff_off.shard_fallback, None, "{name}: expected a sharded run");
+        let la = ff_on.flight_log.as_ref().expect("ff-on log");
+        let lb = ff_off.flight_log.as_ref().expect("ff-off log");
+        let a: Vec<_> = la.iter().filter(|e| e.kind != EvKind::DrvFastForward).collect();
+        let b: Vec<_> = lb.iter().filter(|e| e.kind != EvKind::DrvFastForward).collect();
+        assert!(
+            la.iter().any(|e| e.kind == EvKind::DrvFastForward),
+            "{name}: sparse trace never fast-forwarded — test lost its teeth"
+        );
+        assert!(
+            a.iter().any(|e| e.kind == EvKind::DrvEpoch),
+            "{name}: no epoch markers recorded"
+        );
+        assert!(
+            lb.iter().all(|e| e.kind != EvKind::DrvFastForward),
+            "{name}: dense run logged a fast-forward"
+        );
+        assert_eq!(a.len(), b.len(), "{name}: log sizes differ beyond ff markers");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!(x == y, "{name}: flight logs diverge at event {i}");
         }
     }
 }

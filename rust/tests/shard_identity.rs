@@ -21,24 +21,30 @@
 //!
 //! Sparrow (PR 7) runs the same gate: its probe/late-binding handlers on
 //! the sharded driver, threaded vs sequential, over the same preset
-//! grids plus a jittered-net run. The idle-epoch fast-forward toggle
-//! gets its own golden — on a constant-delay net, `fast_forward` on and
-//! off must be bit-identical for Sparrow (its handlers never consult
-//! `all_done`, so epoch tiling is unobservable); Megha instead pins
+//! grids plus a jittered-net run. Eagle (PR 9) too: its hybrid
+//! handlers with the long-job central scheduler pinned to shard 0,
+//! over the same grids at shards 2/4/8. The idle-epoch fast-forward
+//! toggle gets its own goldens — on a constant-delay net,
+//! `fast_forward` on and off must be bit-identical for Sparrow and
+//! Eagle (their handlers never consult `all_done`, so epoch tiling is
+//! unobservable; Eagle's central queue drains on arrivals and
+//! completion notices, never on epoch boundaries); Megha instead pins
 //! threaded ≡ sequential *within* the dense `fast_forward = false`
 //! grid, whose `all_done` snapshots are tiling-dependent but
-//! mode-independent.
+//! mode-independent. Pigeon remains the one recorded
+//! `ShardFallback::Unsupported` case.
 //!
 //! The flight recorder (ISSUE 8) rides the same gate: with recording
 //! on, the lane-merged logs — and every exported file derived from
 //! them — must be byte-identical threaded vs sequential.
 
 use megha::cluster::NodeCatalog;
-use megha::config::{MeghaConfig, SparrowConfig};
+use megha::config::{EagleConfig, MeghaConfig, SparrowConfig};
 use megha::metrics::{
     summarize_constraint_wait, summarize_gang_wait, summarize_jobs, RunOutcome, ShardFallback,
 };
 use megha::obs::flight;
+use megha::sched::eagle_sharded;
 use megha::sched::megha::{simulate, simulate_sharded, simulate_sharded_reference, FailurePlan};
 use megha::sched::sparrow_sharded;
 use megha::sim::net::NetModel;
@@ -65,6 +71,20 @@ fn megha_cfg(sc: &sweep::Scenario, seed: u64, shards: usize) -> MeghaConfig {
 /// scenario, with an explicit shard count.
 fn sparrow_cfg(sc: &sweep::Scenario, seed: u64, shards: usize) -> SparrowConfig {
     let mut cfg = SparrowConfig::for_workers(sc.workers);
+    cfg.sim.seed = seed;
+    cfg.sim.net = sc.net.clone();
+    cfg.sim.use_index = sc.use_index;
+    cfg.sim.shards = shards;
+    if let Some(h) = &sc.hetero {
+        cfg.catalog = h.catalog(cfg.workers);
+    }
+    cfg
+}
+
+/// The Eagle config `sweep::run_framework_hetero` would build for this
+/// scenario, with an explicit shard count.
+fn eagle_cfg(sc: &sweep::Scenario, seed: u64, shards: usize) -> EagleConfig {
+    let mut cfg = EagleConfig::for_workers(sc.workers);
     cfg.sim.seed = seed;
     cfg.sim.net = sc.net.clone();
     cfg.sim.use_index = sc.use_index;
@@ -232,6 +252,77 @@ fn sparrow_shard_identity_survives_net_jitter() {
 }
 
 #[test]
+fn eagle_shard_threaded_equals_sequential_on_preset_grids() {
+    // the PR-9 tentpole gate: Eagle's hybrid handlers under the sharded
+    // driver — blind probes, SSS rejects, sticky re-binds, and short
+    // gang tries as cross-shard traffic, the long-job central scheduler
+    // pinned to shard 0 — over the constrained (hetero) and gang cells
+    // at shards 2/4/8
+    for preset_name in ["hetero", "gang"] {
+        for (si, sc) in scaled_preset(preset_name).into_iter().enumerate() {
+            let seed = sweep::run_seed(29, si as u64, 0);
+            let trace = sc.make_trace(seed);
+            for shards in [2usize, 4, 8] {
+                let cfg = eagle_cfg(&sc, seed, shards);
+                let a = eagle_sharded::simulate_sharded(&cfg, &trace);
+                let b = eagle_sharded::simulate_sharded_reference(&cfg, &trace);
+                let tag = format!("eagle/{preset_name}/{}/shards={shards}", sc.name);
+                assert_eq!(a.shards, shards as u32, "{tag}: ran sharded");
+                assert_eq!(a.shard_fallback, None, "{tag}: unexpected fallback");
+                assert_outcomes_identical(&tag, &a, &b);
+            }
+        }
+    }
+}
+
+#[test]
+fn eagle_shard_identity_covers_the_central_long_path() {
+    // everything-long variant: every task rides the pinned central
+    // scheduler — FIFO drains, cross-shard LongPlace/Done round trips,
+    // and worker-queued races must replay identically threaded vs
+    // sequential
+    let mut cfg = EagleConfig::for_workers(1_000);
+    cfg.sim.seed = 37;
+    cfg.sim.shards = 4;
+    cfg.sim.short_threshold = SimTime::from_secs(0.5);
+    let trace = synthetic_fixed(20, 40, 2.0, 0.8, 1_000, 38);
+    let a = eagle_sharded::simulate_sharded(&cfg, &trace);
+    let b = eagle_sharded::simulate_sharded_reference(&cfg, &trace);
+    assert_eq!(a.shards, 4, "central-path run must shard");
+    assert_eq!(a.shard_fallback, None);
+    assert_outcomes_identical("eagle/central-long", &a, &b);
+}
+
+#[test]
+fn fast_forward_toggle_is_bit_identical_for_eagle() {
+    // like Sparrow's golden: Eagle's handlers are purely event-driven
+    // (the central queue drains on arrivals and completion notices, not
+    // on epoch boundaries), so on a constant-delay net the four runs
+    // {on, off} x {threaded, sequential} must be bit-identical — for a
+    // sparse all-short trace (probe path) and a sparse all-long one
+    // (central path)
+    for (label, threshold) in [("short", 90.0), ("long", 0.5)] {
+        let mut on = EagleConfig::for_workers(400);
+        on.sim.seed = 47;
+        on.sim.shards = 4;
+        on.sim.short_threshold = SimTime::from_secs(threshold);
+        let mut off = on.clone();
+        off.sim.fast_forward = false;
+        assert!(on.sim.fast_forward, "fast-forward must default on");
+        // load 0.2 -> inter-arrival gaps of hundreds of windows
+        let trace = synthetic_fixed(8, 12, 1.0, 0.2, 400, 48);
+        let on_thr = eagle_sharded::simulate_sharded(&on, &trace);
+        let on_seq = eagle_sharded::simulate_sharded_reference(&on, &trace);
+        let off_thr = eagle_sharded::simulate_sharded(&off, &trace);
+        let off_seq = eagle_sharded::simulate_sharded_reference(&off, &trace);
+        assert_eq!(on_thr.shards, 4, "eagle/{label}: ff golden must run sharded");
+        assert_outcomes_identical(&format!("eagle/{label}: ff-on thr vs seq"), &on_thr, &on_seq);
+        assert_outcomes_identical(&format!("eagle/{label}: ff-off thr vs seq"), &off_thr, &off_seq);
+        assert_outcomes_identical(&format!("eagle/{label}: ff on vs off"), &on_thr, &off_thr);
+    }
+}
+
+#[test]
 fn fast_forward_toggle_is_bit_identical_for_sparrow() {
     // sparse arrivals on a constant-delay net: fast-forward on skips the
     // idle stretches in one epoch each, off tiles them densely — Sparrow
@@ -329,6 +420,15 @@ fn flight_logs_threaded_equal_sequential_byte_for_byte() {
             assert_eq!(a.shards, shards as u32, "{tag}: ran sharded");
             assert_outcomes_identical(&tag, &a, &b);
             assert_flight_logs_identical(&tag, &tmp, &a, &b);
+
+            let mut ecfg = eagle_cfg(&sc, seed, shards);
+            ecfg.sim.flight = true;
+            let a = eagle_sharded::simulate_sharded(&ecfg, &trace);
+            let b = eagle_sharded::simulate_sharded_reference(&ecfg, &trace);
+            let tag = format!("flight/eagle/{preset_name}/shards={shards}");
+            assert_eq!(a.shards, shards as u32, "{tag}: ran sharded");
+            assert_outcomes_identical(&tag, &a, &b);
+            assert_flight_logs_identical(&tag, &tmp, &a, &b);
         }
     }
     let _ = std::fs::remove_dir_all(&tmp);
@@ -370,11 +470,52 @@ fn shard_fallbacks_are_recorded_not_silent() {
     let out = simulate_sharded(&mg, &mtrace, None);
     assert_eq!(out.shards, 1);
     assert_eq!(out.shard_fallback, Some(ShardFallback::ZeroWindow));
+    // Eagle records the same reasons through its own front-end
+    let mut eg = EagleConfig::for_workers(1_000);
+    eg.sim.seed = 3;
+    eg.sim.shards = 1;
+    let out = eagle_sharded::simulate_sharded(&eg, &trace);
+    assert_eq!(out.shards, 1);
+    assert_eq!(out.shard_fallback, Some(ShardFallback::PlanClamped));
+    eg.sim.shards = 4;
+    eg.sim.net = NetModel::Jittered {
+        base: SimTime::ZERO,
+        jitter: SimTime::from_millis(1.0),
+    };
+    let out = eagle_sharded::simulate_sharded(&eg, &trace);
+    assert_eq!(out.shards, 1);
+    assert_eq!(out.shard_fallback, Some(ShardFallback::ZeroWindow));
     // honored sharding records no fallback
     let mut sp = SparrowConfig::for_workers(1_000);
     sp.sim.seed = 3;
     sp.sim.shards = 4;
     let out = sparrow_sharded::simulate_sharded(&sp, &trace);
     assert_eq!(out.shards, 4);
+    assert_eq!(out.shard_fallback, None);
+    let mut eg = EagleConfig::for_workers(1_000);
+    eg.sim.seed = 3;
+    eg.sim.shards = 4;
+    let out = eagle_sharded::simulate_sharded(&eg, &trace);
+    assert_eq!(out.shards, 4);
+    assert_eq!(out.shard_fallback, None);
+}
+
+#[test]
+fn pigeon_records_unsupported_fallback() {
+    // Pigeon is the one baseline without a sharded port: requesting
+    // shards through the sweep front door must run the classic driver
+    // and say so on the outcome — recorded, never silent
+    let trace = synthetic_fixed(10, 20, 1.0, 0.5, 600, 51);
+    let net = NetModel::paper_default();
+    let out = sweep::run_framework_hetero(
+        "pigeon", 600, 51, &net, None, None, true, 4, true, false, &trace,
+    );
+    assert_eq!(out.shards, 1, "pigeon must run the classic driver");
+    assert_eq!(out.shard_fallback, Some(ShardFallback::Unsupported));
+    // eagle through the same front door now genuinely shards
+    let out = sweep::run_framework_hetero(
+        "eagle", 600, 51, &net, None, None, true, 4, true, false, &trace,
+    );
+    assert_eq!(out.shards, 4, "eagle must shard through the sweep");
     assert_eq!(out.shard_fallback, None);
 }
