@@ -10,9 +10,9 @@
 //!
 //! Run with `cargo bench` (or `cargo bench -- fig3 match` to filter).
 //! Flags: `--quick` shrinks the per-bench budget (the CI smoke mode);
-//! `--json` additionally writes `BENCH_PR9.json` (per-bench median
+//! `--json` additionally writes `BENCH_PR10.json` (per-bench median
 //! ns/unit, experiment totals in seconds) at the repo root — the
-//! current PR's perf artifact (`BENCH_PR2.json` … `BENCH_PR8.json` are
+//! current PR's perf artifact (`BENCH_PR2.json` … `BENCH_PR9.json` are
 //! the frozen earlier snapshots, still pending hardware regeneration).
 
 use std::cell::RefCell;
@@ -93,7 +93,7 @@ impl Bench {
         self.total_results.borrow_mut().push((name.to_string(), total));
     }
 
-    /// Write `BENCH_PR9.json` at the repo root (next to `rust/`),
+    /// Write `BENCH_PR10.json` at the repo root (next to `rust/`),
     /// merging over any existing file so successive filtered runs
     /// (`-- queue --json` then `-- scale10 --json`) accumulate instead
     /// of clobbering each other. A fresh run of a bench name replaces
@@ -110,7 +110,7 @@ impl Bench {
             .ok()
             .and_then(|p| p.parent().map(|q| q.to_path_buf()))
             .unwrap_or_else(|| std::path::PathBuf::from("."));
-        let path = root.join("BENCH_PR9.json");
+        let path = root.join("BENCH_PR10.json");
         let mut bench: BTreeMap<String, Json> = BTreeMap::new();
         let mut totals: BTreeMap<String, Json> = BTreeMap::new();
         let mut measured = false;
@@ -209,6 +209,7 @@ fn main() {
     bench_ablation_shuffle(&b);
     bench_sweep_speedup(&b);
     bench_flight(&b);
+    bench_fault(&b);
     bench_scale10(&b);
     bench_shard(&b);
     bench_scale100(&b);
@@ -393,6 +394,52 @@ fn bench_flight(b: &Bench) {
         200_000
     });
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The ISSUE-10 fault-injection family: `FaultPlan` compilation
+/// throughput at DC scale, and whole-sim cost with a busy churn plan vs
+/// the retained fault-free baselines (`fault/megha_churn_yahoo300`
+/// against `sim/megha_yahoo300_tasks`, likewise Sparrow) — the kill /
+/// park / re-dispatch machinery plus the recovery-SLO accounting is the
+/// delta being measured.
+fn bench_fault(b: &Bench) {
+    use megha::sim::fault::{FaultPlan, FaultSpec};
+    let churny = FaultSpec {
+        churn_per_khour: 400.0,
+        downtime_s: 15.0,
+        drain_frac: 0.25,
+        rack_outages: 2,
+        horizon_s: 120.0,
+        degrade: None,
+    };
+    let big = megha::cluster::NodeCatalog::rack_tiered(20_000, 0.25);
+    b.time("fault/plan_compile_20k", || {
+        let mut events = 0u64;
+        for seed in 0..50u64 {
+            let plan = FaultPlan::compile(&churny, &big, seed);
+            events += plan.events().len() as u64;
+        }
+        std::hint::black_box(events);
+        50
+    });
+    let mut cfg = MeghaConfig::for_workers(3_000);
+    cfg.sim.seed = 7;
+    cfg.sim.fault = Some(FaultPlan::compile(&churny, &cfg.catalog, 7));
+    let trace = yahoo_like(300, 3_000, 0.85, 7);
+    let n_tasks = trace.n_tasks() as u64;
+    b.time("fault/megha_churn_yahoo300", || {
+        let out = sched::megha::simulate(&cfg, &trace);
+        std::hint::black_box((out.tasks_killed, out.redispatch_s.len()));
+        n_tasks
+    });
+    let mut scfg = megha::config::SparrowConfig::for_workers(3_000);
+    scfg.sim.seed = 7;
+    scfg.sim.fault = Some(FaultPlan::compile(&churny, &scfg.catalog, 7));
+    b.time("fault/sparrow_churn_yahoo300", || {
+        let out = sched::sparrow::simulate(&scfg, &trace);
+        std::hint::black_box((out.tasks_killed, out.redispatch_s.len()));
+        n_tasks
+    });
 }
 
 /// The ISSUE-2 acceptance scenario: fig3a Yahoo at 10× jobs and 10×

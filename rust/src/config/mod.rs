@@ -6,6 +6,7 @@
 pub mod file;
 
 use crate::cluster::{ClusterSpec, NodeCatalog};
+use crate::sim::fault::FaultPlan;
 use crate::sim::net::NetModel;
 use crate::sim::time::SimTime;
 
@@ -49,6 +50,13 @@ pub struct SimParams {
     /// and only [`RunOutcome::flight`](crate::metrics::RunOutcome) /
     /// [`flight_log`](crate::metrics::RunOutcome::flight_log) change.
     pub flight: bool,
+    /// Compiled fault schedule (`sim::fault`, CLI `--churn` /
+    /// `--rack-outages`): node churn, correlated rack outages, and GM
+    /// failures, injected by each scheduler at init into the lane that
+    /// owns the faulted state. `None` (the default) and the empty plan
+    /// are both inert — the run is bit-identical to a fault-free one
+    /// (`tests/driver_invariants.rs` pins this).
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for SimParams {
@@ -61,6 +69,7 @@ impl Default for SimParams {
             shards: 1,
             fast_forward: true,
             flight: false,
+            fault: None,
         }
     }
 }

@@ -5,10 +5,13 @@
 //! megha simulate --scheduler megha|sparrow|eagle|pigeon
 //!                (--trace FILE | --workload yahoo|google|fixed --jobs N)
 //!                [--workers N] [--load X] [--seed N] [--xla] [--no-index]
-//!                [--shards N] [--no-fast-forward]
+//!                [--shards N] [--no-fast-forward] [--fail-gm-at T]
 //!                [--flight] [--flight-record DIR] [--json]
 //!                [--hetero uniform|bimodal-gpu|rack-tiered] [--scarcity X]
 //!                [--constrained-frac X] [--require a,b] [--gang K]
+//!                [--churn R] [--churn-downtime S] [--churn-drain F]
+//!                [--rack-outages N] [--fault-horizon S]
+//!                [--net-degrade FROM,UNTIL,FACTOR[,TAIL_PPM,TAIL_FACTOR]]
 //! megha prototype --scheduler megha|pigeon [--jobs N] [--time-scale X] [--xla]
 //! megha sweep [--schedulers megha,sparrow,eagle,pigeon] [--seeds N]
 //!             [--base-seed S] [--workers N1,N2,...] [--loads X1,X2,...]
@@ -18,6 +21,9 @@
 //!             [--shards N] [--no-fast-forward] [--smoke] [--flight]
 //!             [--hetero PROFILE] [--scarcity X] [--constrained-frac X]
 //!             [--require a,b] [--gang K]
+//!             [--churn R] [--churn-downtime S] [--churn-drain F]
+//!             [--rack-outages N] [--fault-horizon S]
+//!             [--net-degrade FROM,UNTIL,FACTOR[,TAIL_PPM,TAIL_FACTOR]]
 //! megha flight-verify --dir DIR [--run-json FILE]
 //! megha trace gen --workload yahoo|google|fixed --jobs N --workers N
 //!                 [--load X] [--seed N] --out FILE
@@ -44,6 +50,17 @@
 //! scenario ~10x (workers and jobs) for CI-sized runs, e.g.
 //! `megha sweep --preset scale100 --smoke`.
 //!
+//! `--churn R` injects deterministic node churn at R events per
+//! simulated hour per 1000 workers (crashing unless `--churn-drain`
+//! says otherwise; nodes heal after `--churn-downtime` seconds, default
+//! 30). `--rack-outages N` crashes N whole racks at random times;
+//! `--net-degrade` opens a window where every network delay is
+//! multiplied by FACTOR with TAIL_PPM-per-million heavy-tail stragglers
+//! at TAIL_FACTOR on top. All faults compile to a seed-deterministic
+//! plan (`sim::fault`); recovery SLOs (kills, re-runs, work lost,
+//! time-to-redispatch percentiles) land in the output and in the
+//! sweep's recovery table. Try `megha sweep --preset churn --smoke`.
+//!
 //! `--flight` turns on the flight recorder (`obs::flight`): every
 //! scheduler decision is logged with staleness accounting, surfaced as
 //! the `flight` block of `--json` output and the sweep's flight columns.
@@ -65,6 +82,7 @@ use megha::metrics::{
 };
 use megha::proto::{driver, ProtoConfig};
 use megha::runtime::match_engine::RustMatchEngine;
+use megha::sim::fault::{FaultSpec, NetDegrade};
 use megha::sim::net::NetModel;
 use megha::sim::time::SimTime;
 use megha::sweep;
@@ -190,6 +208,49 @@ fn hetero_of(args: &Args) -> Result<Option<sweep::HeteroSpec>> {
     }))
 }
 
+/// Parse the fault-injection flags into a [`FaultSpec`] (None when none
+/// of `--churn`, `--rack-outages`, `--net-degrade` is present).
+fn fault_of(args: &Args) -> Result<Option<FaultSpec>> {
+    let degrade = args.get("net-degrade");
+    if args.get("churn").is_none() && args.get("rack-outages").is_none() && degrade.is_none() {
+        return Ok(None);
+    }
+    let mut fs = FaultSpec {
+        churn_per_khour: args.f64("churn", 0.0),
+        rack_outages: args.usize("rack-outages", 0),
+        ..FaultSpec::default()
+    };
+    fs.downtime_s = args.f64("churn-downtime", fs.downtime_s);
+    fs.drain_frac = args.f64("churn-drain", fs.drain_frac);
+    fs.horizon_s = args.f64("fault-horizon", fs.horizon_s);
+    if fs.churn_per_khour < 0.0 {
+        bail!("--churn must be >= 0");
+    }
+    if !(0.0..=1.0).contains(&fs.drain_frac) {
+        bail!("--churn-drain must be in [0, 1]");
+    }
+    if let Some(d) = degrade {
+        let parts: Vec<f64> = d
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<std::result::Result<_, _>>()
+            .ok()
+            .filter(|p: &Vec<f64>| (3..=5).contains(&p.len()))
+            .context("--net-degrade expects FROM,UNTIL,FACTOR[,TAIL_PPM,TAIL_FACTOR]")?;
+        if parts[1] <= parts[0] || parts[2] < 1.0 {
+            bail!("--net-degrade: need UNTIL > FROM and FACTOR >= 1");
+        }
+        fs.degrade = Some(NetDegrade {
+            from_s: parts[0],
+            until_s: parts[1],
+            factor: parts[2] as u32,
+            tail_ppm: parts.get(3).copied().unwrap_or(0.0) as u32,
+            tail_factor: parts.get(4).copied().unwrap_or(1.0) as u32,
+        });
+    }
+    Ok(Some(fs))
+}
+
 fn cmd_experiment(args: &Args) -> Result<()> {
     let id = args
         .positional
@@ -257,6 +318,14 @@ fn print_outcome(name: &str, out: &RunOutcome, short_only: bool) {
             gs.n, gs.median, gs.p99, gw.median, gw.p99, out.gang_rejections
         );
     }
+    if out.tasks_killed > 0 {
+        let rd = out.redispatch_summary();
+        println!(
+            "  recovery: {} killed / {} re-run | work lost {:.1} task-s | \
+             redispatch p50 {:.4}s p99 {:.3}s",
+            out.tasks_killed, out.tasks_rerun, out.work_lost_s, rd.median, rd.p99
+        );
+    }
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -265,6 +334,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let mut trace = make_workload(args, workers)?;
     let scheduler = args.get_or("scheduler", "megha");
     let hetero = hetero_of(args)?;
+    let fault = fault_of(args)?;
+    let gm_fail_at = args.get("fail-gm-at").map(|_| args.f64("fail-gm-at", 0.0));
     if let Some(h) = &hetero {
         // a v2 trace file may already carry demands; only synthesized /
         // demand-free traces get decorated here
@@ -309,6 +380,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         if hetero.is_some() {
             bail!("--xla does not support --hetero yet (the AOT match kernel is unconstrained)");
         }
+        if fault.is_some() {
+            bail!("--xla does not support fault injection yet");
+        }
         let mut cfg = MeghaConfig::for_workers(workers);
         cfg.sim.seed = seed;
         cfg.sim.use_index = !args.flag("no-index");
@@ -322,12 +396,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             workers,
             seed,
             &NetModel::paper_default(),
-            None,
+            gm_fail_at,
             hetero.as_ref(),
             !args.flag("no-index"),
             args.usize("shards", 1),
             !args.flag("no-fast-forward"),
             flight,
+            fault.as_ref(),
             &trace,
         )
     };
@@ -338,6 +413,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             args.usize("shards", 1),
             fb.reason()
         );
+    }
+    if let Some(at) = out.gm_fail_ignored {
+        eprintln!("warning: {scheduler} has no global manager; --fail-gm-at {at} was ignored");
     }
     if let Some(dir) = flight_dir {
         let dir = std::path::Path::new(dir);
@@ -465,6 +543,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             "require",
             "demand-slots",
             "gang",
+            "churn",
+            "churn-downtime",
+            "churn-drain",
+            "rack-outages",
+            "fault-horizon",
+            "net-degrade",
         ] {
             if args.get(flag).is_some() {
                 bail!("--preset {p} fixes the scenario grid; drop --{flag}");
@@ -478,7 +562,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         })?
     } else {
         let hetero = hetero_of(args)?;
-        sweep::scenario_grid(
+        let fault = fault_of(args)?;
+        let mut scs = sweep::scenario_grid(
             &workload,
             &args.usize_list("workers", &[600]),
             &args.f64_list("loads", &[0.5, 0.8]),
@@ -486,7 +571,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             &net,
             gm_fail_at,
             hetero.as_ref(),
-        )
+        );
+        if let Some(fs) = fault {
+            for sc in &mut scs {
+                sc.fault = Some(fs.clone());
+            }
+        }
+        scs
     };
     let scenarios = if args.flag("no-index") {
         scenarios.into_iter().map(|sc| sc.with_index(false)).collect()

@@ -39,6 +39,9 @@ pub struct JobRecord {
     /// non-gang jobs; disjoint from `constraint_wait_s` (which covers
     /// "no matching capacity at all").
     pub gang_wait_s: f64,
+    /// Tasks of this job killed by fault injection (`sim::fault`) and
+    /// re-dispatched. Zero on fault-free runs.
+    pub killed: u32,
 }
 
 impl JobRecord {
@@ -148,6 +151,26 @@ pub struct RunOutcome {
     /// `RunOutcome` stays cheap). Export with
     /// [`obs::flight::export`](crate::obs::flight::export).
     pub flight_log: Option<Arc<Vec<FlightEvent>>>,
+    /// Tasks killed by fault injection (running work lost to a crash, or
+    /// an in-flight launch bounced off a dead node). 0 without faults.
+    pub tasks_killed: u64,
+    /// Killed tasks the scheduler re-dispatched (at run completion this
+    /// equals [`tasks_killed`](Self::tasks_killed): every lost task must
+    /// be re-run for its job to complete).
+    pub tasks_rerun: u64,
+    /// Task-seconds of execution progress destroyed by kills.
+    pub work_lost_s: f64,
+    /// Recovery-SLO samples: seconds from each kill until the owning
+    /// scheduler re-committed that job's lost work (oldest-outstanding
+    /// pairing per job). Summarize with
+    /// [`redispatch_summary`](Self::redispatch_summary).
+    pub redispatch_s: Vec<f64>,
+    /// `Some` when the CLI/sweep requested a GM failure (`gm_fail_at`)
+    /// for a scheduler that has no GM to fail (Sparrow, Eagle, Pigeon):
+    /// the requested failure time, recorded instead of silently dropped
+    /// — mirroring [`shard_fallback`](Self::shard_fallback) — so tables
+    /// and the simulate CLI can warn.
+    pub gm_fail_ignored: Option<f64>,
 }
 
 impl RunOutcome {
@@ -169,6 +192,11 @@ impl RunOutcome {
         } else {
             0.0
         }
+    }
+
+    /// Percentiles of the time-to-redispatch samples (recovery SLO).
+    pub fn redispatch_summary(&self) -> DelaySummary {
+        summarize(&self.redispatch_s)
     }
 
     /// Scheduling decisions per simulated second.
@@ -229,6 +257,26 @@ impl RunOutcome {
                 "flight",
                 match &self.flight {
                     Some(s) => s.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "recovery",
+                Json::obj(vec![
+                    ("tasks_killed", Json::num(self.tasks_killed as f64)),
+                    ("tasks_rerun", Json::num(self.tasks_rerun as f64)),
+                    ("work_lost_s", Json::num(self.work_lost_s)),
+                    (
+                        "redispatch_p50_s",
+                        Json::num(self.redispatch_summary().median),
+                    ),
+                    ("redispatch_p99_s", Json::num(self.redispatch_summary().p99)),
+                ]),
+            ),
+            (
+                "gm_fail_ignored",
+                match self.gm_fail_ignored {
+                    Some(at) => Json::num(at),
                     None => Json::Null,
                 },
             ),
@@ -379,6 +427,7 @@ mod tests {
             constraint_wait_s: 0.0,
             gang: false,
             gang_wait_s: 0.0,
+            killed: 0,
         }
     }
 

@@ -106,11 +106,23 @@ pub enum EvKind {
     /// Run fell back from the sharded to the classic driver. Payload =
     /// discriminant of [`crate::metrics::ShardFallback`].
     DrvFallback = 18,
+    /// Fault injection took a node down ([`crate::sim::fault`]). Actor =
+    /// the node; payload = 1 for a crash (running work killed), 0 for a
+    /// drain.
+    FaultDown = 19,
+    /// Fault injection brought a node back. Actor = the node.
+    FaultUp = 20,
+    /// A running task was killed by a node crash. Payload = task-seconds
+    /// of execution lost, in µs.
+    TaskKill = 21,
+    /// A wounded job's next commit closed its oldest outstanding kill.
+    /// Payload = time-to-redispatch in µs.
+    Redispatch = 22,
 }
 
 impl EvKind {
     /// All kinds, in discriminant order (for tests and generators).
-    pub const ALL: [EvKind; 18] = [
+    pub const ALL: [EvKind; 22] = [
         EvKind::GmMatch,
         EvKind::GmMatchGang,
         EvKind::LmVerifyOk,
@@ -129,6 +141,10 @@ impl EvKind {
         EvKind::DrvEpoch,
         EvKind::DrvFastForward,
         EvKind::DrvFallback,
+        EvKind::FaultDown,
+        EvKind::FaultUp,
+        EvKind::TaskKill,
+        EvKind::Redispatch,
     ];
 
     /// Symbolic name used in the CSV fallback and Perfetto tracks.
@@ -152,6 +168,10 @@ impl EvKind {
             EvKind::DrvEpoch => "drv_epoch",
             EvKind::DrvFastForward => "drv_fast_forward",
             EvKind::DrvFallback => "drv_fallback",
+            EvKind::FaultDown => "fault_down",
+            EvKind::FaultUp => "fault_up",
+            EvKind::TaskKill => "task_kill",
+            EvKind::Redispatch => "redispatch",
         }
     }
 

@@ -228,6 +228,7 @@ fn to_record(
         constraint_wait_s: 0.0, // prototype runs are unconstrained
         gang: j.demand.as_ref().is_some_and(|d| d.slots > 1),
         gang_wait_s: 0.0,
+        killed: 0,
     }
 }
 

@@ -27,11 +27,34 @@ pub enum WState {
     Busy { long: bool },
 }
 
+/// What a probe/late-binding worker slot is currently executing, kept so
+/// fault injection can identify (and kill) in-flight work. `members` is
+/// empty for scalar tasks; a gang anchor records every member slot so
+/// one kill notice covers the whole co-resident gang.
+#[derive(Clone, Debug)]
+pub struct Running {
+    pub job: u32,
+    pub dur: SimTime,
+    pub started: SimTime,
+    pub members: Vec<u32>,
+}
+
 /// A worker in a probe/late-binding architecture: a queue of pending
 /// reservations (payload `Q` is scheduler-specific) plus its [`WState`].
+///
+/// The fault fields are inert without a fault plan: `up` stays `true`,
+/// `gen` stays 0 (so every completion's generation matches), and
+/// `running` is plain bookkeeping that nothing reads.
 pub struct ProbeWorker<Q> {
     pub queue: VecDeque<Q>,
     pub state: WState,
+    /// False while the node is crashed or draining ([`crate::sim::fault`]).
+    pub up: bool,
+    /// Kill generation: bumped when a running task is killed, carried by
+    /// Finish events so completions of killed incarnations are dropped.
+    pub gen: u32,
+    /// The task currently executing on this slot, if any.
+    pub running: Option<Running>,
 }
 
 impl<Q> ProbeWorker<Q> {
@@ -41,6 +64,9 @@ impl<Q> ProbeWorker<Q> {
             .map(|_| ProbeWorker {
                 queue: VecDeque::new(),
                 state: WState::Idle,
+                up: true,
+                gen: 0,
+                running: None,
             })
             .collect()
     }
@@ -73,7 +99,8 @@ pub fn idle_coresidents<Q>(
         if out.len() >= k {
             break;
         }
-        if w as u32 != worker && workers[w - lo].state == WState::Idle {
+        let cand = &workers[w - lo];
+        if w as u32 != worker && cand.state == WState::Idle && cand.up {
             out.push(w as u32);
         }
     }
@@ -107,6 +134,32 @@ pub fn nack_recredit<E>(
     ctx.out.messages += 1;
     ctx.gang_block(job);
     returned[job as usize].push(dur);
+    let w = ctx.rng.below(n_workers) as u32;
+    ctx.flight(
+        EvKind::Reprobe,
+        Actor::Sched(job % n_schedulers as u32),
+        job,
+        NONE,
+        w as u64,
+    );
+    ctx.send(probe(w));
+}
+
+/// Scheduler-side replacement probe for a reservation stranded at a dead
+/// node: the queued probe is discarded and exactly one blind fresh draw
+/// replaces it, like [`nack_recredit`] but without a gang block or a
+/// duration re-credit (the reservation never bound a task). The blind
+/// draw may land on another dead node — that probe bounces and re-draws
+/// on arrival — but can never come up empty, and fault plans always heal
+/// every down node, so the probe/credit liveness argument carries over.
+pub fn fault_reprobe<E>(
+    job: u32,
+    n_workers: usize,
+    n_schedulers: usize,
+    ctx: &mut SimCtx<'_, E>,
+    probe: impl FnOnce(u32) -> E,
+) {
+    ctx.out.messages += 1;
     let w = ctx.rng.below(n_workers) as u32;
     ctx.flight(
         EvKind::Reprobe,
@@ -207,6 +260,10 @@ pub struct JobTracker {
     gang: Vec<bool>,
     cclock: BlockClock,
     gclock: BlockClock,
+    /// Kill timestamps not yet paired with a re-dispatch (FIFO per job).
+    kill_since: Vec<VecDeque<SimTime>>,
+    /// Total tasks of this job killed by fault injection.
+    killed: Vec<u32>,
 }
 
 impl JobTracker {
@@ -225,7 +282,29 @@ impl JobTracker {
                 .collect(),
             cclock: BlockClock::new(n),
             gclock: BlockClock::new(n),
+            kill_since: vec![VecDeque::new(); n],
+            killed: vec![0; n],
         }
+    }
+
+    /// Record a fault-killed task of `job_idx` at `now`. The kill enters
+    /// a per-job FIFO so the next commit for the job measures
+    /// time-to-redispatch ([`task_redispatched`](Self::task_redispatched)).
+    pub fn task_killed(&mut self, job_idx: usize, now: SimTime) {
+        self.kill_since[job_idx].push_back(now);
+        self.killed[job_idx] += 1;
+    }
+
+    /// Pair a successful placement of `job_idx` at `now` with the oldest
+    /// outstanding kill, returning the recovery latency in seconds, or
+    /// `None` when no kill is pending (the common, fault-free case).
+    /// Pairing is FIFO, not task-identity-exact: the job's *next* commit
+    /// closes its oldest kill, which is the figure of merit — how long
+    /// the scheduler took to route fresh capacity to the wounded job.
+    pub fn task_redispatched(&mut self, job_idx: usize, now: SimTime) -> Option<f64> {
+        self.kill_since[job_idx]
+            .pop_front()
+            .map(|t0| now.saturating_sub(t0).as_secs())
     }
 
     /// Start (idempotently) the job's constraint-blocked interval.
@@ -269,6 +348,7 @@ impl JobTracker {
                 constraint_wait_s: self.cclock.acc_s[job_idx],
                 gang: self.gang[job_idx],
                 gang_wait_s: self.gclock.acc_s[job_idx],
+                killed: self.killed[job_idx],
             });
             self.done += 1;
             true

@@ -47,8 +47,11 @@ use crate::cluster::AvailMap;
 use crate::config::EagleConfig;
 use crate::metrics::RunOutcome;
 use crate::obs::flight::{Actor, EvKind, NONE};
-use crate::sched::common::{idle_coresidents, nack_recredit, ProbeWorker, TaskCursor, WState};
+use crate::sched::common::{
+    fault_reprobe, idle_coresidents, nack_recredit, ProbeWorker, Running, TaskCursor, WState,
+};
 use crate::sim::driver::{self, Scheduler, SimCtx};
+use crate::sim::fault::{FaultKind, FaultPlan};
 use crate::sim::time::SimTime;
 use crate::workload::{JobClass, Trace};
 
@@ -76,12 +79,35 @@ pub enum Ev {
     /// the central view; members racing a short task queue a gang hold
     /// at the worker and the gang starts when the last member frees
     GangPlace { job: u32, workers: Vec<u32>, dur: SimTime },
-    Finish { worker: u32, job: u32, long: bool },
-    /// gang execution finished: all member slots free atomically
-    GangFinish { workers: Vec<u32>, job: u32, long: bool },
+    /// `gen` is the slot's kill generation at launch; a stale finish
+    /// belongs to a fault-killed incarnation and is dropped
+    Finish { worker: u32, job: u32, long: bool, gen: u32 },
+    /// gang execution finished: all member slots free atomically (`gen`
+    /// is the anchor slot's — `workers[0]` — kill generation at start)
+    GangFinish { workers: Vec<u32>, job: u32, long: bool, gen: u32 },
     Done { job: u32, worker: u32, long: bool },
     /// gang completion notice (central view frees all members)
     GangDone { job: u32, workers: Vec<u32>, long: bool },
+    /// Fault injection ([`crate::sim::fault`]): a node-level event,
+    /// delivered to the lane owning the node's worker block.
+    Fault(FaultKind),
+    /// The same node-level fault event, delivered to the central
+    /// long-job scheduler (its own lane under sharding) so it can mask
+    /// the node's slots out of — and later back into — its free view.
+    CentralFault(FaultKind),
+    /// node → short scheduler: a bound short task came back — killed
+    /// while running (`ran`) or bounced off a dead/reoccupied slot
+    /// (`!ran`). Mirrors Sparrow's loss path: re-credit + one
+    /// replacement probe.
+    TaskLost { job: u32, dur: SimTime, lost: SimTime, ran: bool },
+    /// node → central scheduler: a long *scalar* task came back (killed
+    /// while running, or a `LongPlace` bounced off a dead worker). The
+    /// central slot claim is released (or parked until the node heals)
+    /// and the task re-enters the FIFO at the front.
+    LongLost { job: u32, dur: SimTime, worker: u32, lost: SimTime, ran: bool },
+    /// node → central scheduler: a long *gang* task came back with its
+    /// member claims; like [`Ev::LongLost`] but releasing every member.
+    GangLost { job: u32, dur: SimTime, workers: Vec<u32>, lost: SimTime, ran: bool },
 }
 
 /// Reservation-queue payload: a late-bound short reservation, an
@@ -231,6 +257,11 @@ pub struct Eagle<'a> {
     /// the number of *concurrently waiting* gangs, not the total raced
     /// over a run.
     free_gangs: Vec<u32>,
+    /// Central-side fault mask: slot's node is currently down, so
+    /// completions at it park their claim instead of freeing it.
+    central_down: Vec<bool>,
+    /// Claims parked while the node was down, released at NodeUp.
+    central_pending_free: Vec<bool>,
 }
 
 impl<'a> Eagle<'a> {
@@ -254,6 +285,8 @@ impl<'a> Eagle<'a> {
             demands,
             gangs: Vec::new(),
             free_gangs: Vec::new(),
+            central_down: vec![false; cfg.workers],
+            central_pending_free: vec![false; cfg.workers],
         }
     }
 
@@ -272,6 +305,8 @@ impl<'a> Eagle<'a> {
             long_busy: &mut self.long_busy,
             gangs: &mut self.gangs,
             free_gangs: &mut self.free_gangs,
+            central_down: &mut self.central_down,
+            central_pending_free: &mut self.central_pending_free,
         }
     }
 }
@@ -303,6 +338,8 @@ pub(crate) struct EagleView<'v> {
     pub long_busy: &'v mut AvailMap,
     pub gangs: &'v mut Vec<Option<GangState>>,
     pub free_gangs: &'v mut Vec<u32>,
+    pub central_down: &'v mut Vec<bool>,
+    pub central_pending_free: &'v mut Vec<bool>,
 }
 
 /// Central long-job scheduler: place queued long work FIFO against the
@@ -324,6 +361,7 @@ fn drain_long(v: &mut EagleView<'_>, ctx: &mut SimCtx<'_, Ev>) {
                 ctx.constraint_unblock(job);
                 ctx.gang_unblock(job);
                 ctx.out.decisions += 1;
+                ctx.task_redispatched(job);
                 // the central long-job scheduler gets its own actor id
                 // (n_schedulers), one past the distributed schedulers
                 ctx.flight(
@@ -376,6 +414,7 @@ fn drain_long(v: &mut EagleView<'_>, ctx: &mut SimCtx<'_, Ev>) {
             ctx.constraint_unblock(job);
         }
         ctx.out.decisions += 1;
+        ctx.task_redispatched(job);
         ctx.flight(
             EvKind::LongPlace,
             Actor::Sched(v.cfg.n_schedulers as u32),
@@ -388,6 +427,35 @@ fn drain_long(v: &mut EagleView<'_>, ctx: &mut SimCtx<'_, Ev>) {
             job,
             dur,
         });
+    }
+}
+
+/// Push the fault plan's node events into the queue at plan time. Eagle
+/// needs *dual* injection: every node event goes to the lane owning the
+/// node's worker block ([`Ev::Fault`]) AND to the central long-job
+/// scheduler's lane ([`Ev::CentralFault`]) so it can mask the node's
+/// slots out of — and later back into — its free view. The unsharded
+/// scheduler owns both, so it pushes both into one queue. GM failures
+/// don't apply to Eagle — the front-ends record the ignored axis on
+/// [`RunOutcome::gm_fail_ignored`].
+pub(crate) fn inject_plan(
+    plan: &FaultPlan,
+    owns_node: impl Fn(u32) -> bool,
+    owns_central: bool,
+    ctx: &mut SimCtx<'_, Ev>,
+) {
+    for e in plan.events() {
+        match e.kind {
+            FaultKind::GmFail { .. } => {}
+            FaultKind::NodeDown { node, .. } | FaultKind::NodeUp { node } => {
+                if owns_node(node) {
+                    ctx.push(e.at, Ev::Fault(e.kind));
+                }
+                if owns_central {
+                    ctx.push(e.at, Ev::CentralFault(e.kind));
+                }
+            }
+        }
     }
 }
 
@@ -433,6 +501,16 @@ pub(crate) fn handle_event(v: &mut EagleView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
     match ev {
         Ev::Probe { worker, job, retry } => {
             let lw = worker as usize - v.worker_lo;
+            if !v.workers[lw].up {
+                // probe landed on a down node: discard and re-draw
+                // elsewhere, preserving the SSS retry budget
+                fault_reprobe(job, v.cfg.workers, v.cfg.n_schedulers, ctx, |t| Ev::Probe {
+                    worker: t,
+                    job,
+                    retry,
+                });
+                return;
+            }
             let is_long_busy = matches!(v.workers[lw].state, WState::Busy { long: true });
             if is_long_busy {
                 // SSS: reject with the current long-occupancy vector
@@ -534,6 +612,7 @@ pub(crate) fn handle_event(v: &mut EagleView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
                         ctx.out.decisions += 1;
                         ctx.constraint_unblock(job);
                         ctx.gang_unblock(job);
+                        ctx.task_redispatched(job);
                         let sched = Actor::Sched(job % v.cfg.n_schedulers as u32);
                         ctx.flight(EvKind::GangTry, sched, job, NONE, rd.gang_width() as u64);
                         ctx.send(Ev::GangTry {
@@ -546,28 +625,58 @@ pub(crate) fn handle_event(v: &mut EagleView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
                     }
                 }
             }
-            let dur = match v.jobs[j].bind_next(&ctx.trace.jobs[j]) {
-                Some((t, dur)) => {
+            let dur = match v.returned[j].pop() {
+                // a fault-returned scalar duration re-binds before the
+                // cursor advances (inert without a fault plan: only
+                // gang NACKs and task losses populate `returned`, and
+                // gang jobs never reach this scalar path)
+                Some(dur) => {
                     ctx.out.decisions += 1;
                     ctx.flight(
                         EvKind::Bind,
                         Actor::Sched(job % v.cfg.n_schedulers as u32),
                         job,
-                        t as u32,
+                        NONE,
                         worker as u64,
                     );
                     if v.demands[j].is_some() {
                         ctx.constraint_unblock(job);
                     }
+                    ctx.task_redispatched(job);
                     Some(dur)
                 }
-                None => None, // proactive cancellation: all tasks already bound
+                None => match v.jobs[j].bind_next(&ctx.trace.jobs[j]) {
+                    Some((t, dur)) => {
+                        ctx.out.decisions += 1;
+                        ctx.flight(
+                            EvKind::Bind,
+                            Actor::Sched(job % v.cfg.n_schedulers as u32),
+                            job,
+                            t as u32,
+                            worker as u64,
+                        );
+                        if v.demands[j].is_some() {
+                            ctx.constraint_unblock(job);
+                        }
+                        ctx.task_redispatched(job);
+                        Some(dur)
+                    }
+                    None => None, // proactive cancellation: all tasks already bound
+                },
             };
             ctx.send(Ev::Launch { worker, job, dur });
         }
         Ev::GangTry { worker, job, dur, k } => {
             let lw = worker as usize - v.worker_lo;
-            debug_assert!(v.workers[lw].state == WState::Waiting);
+            if !v.workers[lw].up || v.workers[lw].state != WState::Waiting {
+                // the probed anchor died (or was fault-reset) between
+                // its Ready and this try: refuse without touching the
+                // slot — the NACK re-credit keeps the task alive
+                ctx.out.gang_rejections += 1;
+                ctx.flight(EvKind::GangNack, Actor::Node(worker), job, NONE, k as u64);
+                ctx.send(Ev::GangNack { job, dur });
+                return;
+            }
             // gang: the probe discovers *this node's* occupancy only —
             // the probed anchor plus enough idle co-residents, or a
             // partial fit that forces a blind re-probe
@@ -580,15 +689,27 @@ pub(crate) fn handle_event(v: &mut EagleView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
                 k as usize,
                 &mut members,
             ) {
+                let now = ctx.now();
                 for &w in members.iter() {
                     v.workers[w as usize - v.worker_lo].state = WState::Busy { long: false };
                 }
+                // the anchor slot carries the gang's kill bookkeeping;
+                // the whole gang is co-resident, so one crash sweep
+                // covers every member
+                let gen = v.workers[lw].gen;
+                v.workers[lw].running = Some(Running {
+                    job,
+                    dur,
+                    started: now,
+                    members: Vec::new(),
+                });
                 ctx.out.tasks += 1;
                 ctx.flight(EvKind::Bind, Actor::Node(worker), job, NONE, k as u64);
                 ctx.push_after(dur, Ev::GangFinish {
                     workers: members,
                     job,
                     long: false,
+                    gen,
                 });
             } else {
                 // refuse: free the anchor and hand the duration back —
@@ -614,6 +735,21 @@ pub(crate) fn handle_event(v: &mut EagleView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
             );
         }
         Ev::GangPlace { job, workers, dur } => {
+            if workers
+                .iter()
+                .any(|&w| !v.workers[w as usize - v.worker_lo].up)
+            {
+                // the node died while the placement was in flight: hand
+                // every member claim back to the central scheduler
+                ctx.send(Ev::GangLost {
+                    job,
+                    dur,
+                    workers,
+                    lost: SimTime::ZERO,
+                    ran: false,
+                });
+                return;
+            }
             // whole-or-queue at the node: idle members commit
             // immediately; members racing a short task get a gang
             // hold queued and join when they free (the head-of-line
@@ -635,11 +771,23 @@ pub(crate) fn handle_event(v: &mut EagleView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
                 }
             }
             if need == 0 {
+                let now = ctx.now();
+                let anchor = workers[0] as usize - v.worker_lo;
+                let gen = v.workers[anchor].gen;
+                // the anchor carries the member list so a crash can
+                // hand every central claim back in one notice
+                v.workers[anchor].running = Some(Running {
+                    job,
+                    dur,
+                    started: now,
+                    members: workers.clone(),
+                });
                 ctx.out.tasks += 1;
                 ctx.push_after(dur, Ev::GangFinish {
                     workers,
                     job,
                     long: true,
+                    gen,
                 });
             } else {
                 let state = Some(GangState {
@@ -655,7 +803,15 @@ pub(crate) fn handle_event(v: &mut EagleView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
                 }
             }
         }
-        Ev::GangFinish { workers, job, long } => {
+        Ev::GangFinish { workers, job, long, gen } => {
+            let anchor = workers[0] as usize - v.worker_lo;
+            if gen != v.workers[anchor].gen {
+                // a fault-killed incarnation: the crash sweep already
+                // reset the members and handed the claims back
+                ctx.pool.give(workers);
+                return;
+            }
+            v.workers[anchor].running = None;
             let mut members: Vec<u32> = ctx.pool.take();
             members.extend_from_slice(&workers);
             let d = ctx.net_delay();
@@ -678,7 +834,14 @@ pub(crate) fn handle_event(v: &mut EagleView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
             ctx.task_done(job);
             if long {
                 for &w in &workers {
-                    v.central_free.set_free(w as usize);
+                    let w = w as usize;
+                    if v.central_down[w] {
+                        // the node died after the gang finished: park
+                        // the claim until NodeUp
+                        v.central_pending_free[w] = true;
+                    } else {
+                        v.central_free.set_free(w);
+                    }
                 }
                 ctx.pool.give(workers);
                 drain_long(v, ctx);
@@ -687,35 +850,81 @@ pub(crate) fn handle_event(v: &mut EagleView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
             }
         }
         Ev::Launch { worker, job, dur } => {
+            let now = ctx.now();
             let lw = worker as usize - v.worker_lo;
-            debug_assert!(v.workers[lw].state == WState::Waiting);
             match dur {
                 Some(dur) => {
-                    v.workers[lw].state = WState::Busy { long: false };
-                    ctx.out.tasks += 1;
-                    ctx.push_after(dur, Ev::Finish {
-                        worker,
-                        job,
-                        long: false,
-                    });
+                    let w = &mut v.workers[lw];
+                    if w.up && w.state == WState::Waiting {
+                        w.state = WState::Busy { long: false };
+                        let gen = w.gen;
+                        w.running = Some(Running {
+                            job,
+                            dur,
+                            started: now,
+                            members: Vec::new(),
+                        });
+                        ctx.out.tasks += 1;
+                        ctx.push_after(dur, Ev::Finish {
+                            worker,
+                            job,
+                            long: false,
+                            gen,
+                        });
+                    } else {
+                        // the bound task reached a dead, fault-reset, or
+                        // since-reoccupied slot: hand it back unstarted
+                        if w.state == WState::Waiting {
+                            w.state = WState::Idle;
+                        }
+                        ctx.send(Ev::TaskLost {
+                            job,
+                            dur,
+                            lost: SimTime::ZERO,
+                            ran: false,
+                        });
+                    }
                 }
                 None => {
-                    v.workers[lw].state = WState::Idle;
-                    advance_worker(v, worker, ctx);
+                    if v.workers[lw].state == WState::Waiting {
+                        v.workers[lw].state = WState::Idle;
+                        if v.workers[lw].up {
+                            advance_worker(v, worker, ctx);
+                        }
+                    }
                 }
             }
         }
         Ev::LongPlace { worker, job, dur } => {
             let lw = worker as usize - v.worker_lo;
+            if !v.workers[lw].up {
+                // placement raced the crash: hand the claim back
+                ctx.send(Ev::LongLost {
+                    job,
+                    dur,
+                    worker,
+                    lost: SimTime::ZERO,
+                    ran: false,
+                });
+                return;
+            }
             match v.workers[lw].state {
                 WState::Idle => {
                     v.workers[lw].state = WState::Busy { long: true };
                     v.long_busy.set_free(worker as usize); // bit set = long-busy
+                    let gen = v.workers[lw].gen;
+                    v.workers[lw].running = Some(Running {
+                        job,
+                        dur,
+                        started: ctx.now(),
+                        members: Vec::new(),
+                    });
                     ctx.out.tasks += 1;
                     ctx.push_after(dur, Ev::Finish {
                         worker,
                         job,
                         long: true,
+                        gen,
                     });
                 }
                 _ => {
@@ -724,11 +933,15 @@ pub(crate) fn handle_event(v: &mut EagleView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
                 }
             }
         }
-        Ev::Finish { worker, job, long } => {
+        Ev::Finish { worker, job, long, gen } => {
+            let lw = worker as usize - v.worker_lo;
+            if gen != v.workers[lw].gen {
+                return; // completion of a fault-killed incarnation
+            }
             let d = ctx.net_delay();
             ctx.out.breakdown.comm_s += d.as_secs();
             ctx.push_after(d, Ev::Done { job, worker, long });
-            let lw = worker as usize - v.worker_lo;
+            v.workers[lw].running = None;
             if long {
                 v.workers[lw].state = WState::Idle;
                 v.long_busy.set_busy(worker as usize);
@@ -746,28 +959,256 @@ pub(crate) fn handle_event(v: &mut EagleView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
             ctx.out.messages += 1;
             ctx.task_done(job);
             if long {
-                v.central_free.set_free(worker as usize);
-                drain_long(v, ctx);
+                let w = worker as usize;
+                if v.central_down[w] {
+                    // completion notice from a node that has since gone
+                    // down: park the claim until NodeUp
+                    v.central_pending_free[w] = true;
+                } else {
+                    v.central_free.set_free(w);
+                    drain_long(v, ctx);
+                }
             } else {
                 // sticky batch: bind the same job's next task back to
                 // the finishing worker (it just ran a task of this job,
                 // so it matches any demand the job carries — no
-                // re-verification), else no-op the worker free
+                // re-verification), else no-op the worker free. A
+                // fault-returned duration re-binds before the cursor
+                // advances (inert without a fault plan).
                 let j = job as usize;
-                let dur = match v.jobs[j].bind_next(&ctx.trace.jobs[j]) {
-                    Some((t, dur)) => {
+                let dur = match v.returned[j].pop() {
+                    Some(dur) => {
                         ctx.out.decisions += 1;
-                        // sticky batch: the *node* re-binds itself
-                        ctx.flight(EvKind::Bind, Actor::Node(worker), job, t as u32, worker as u64);
+                        ctx.flight(EvKind::Bind, Actor::Node(worker), job, NONE, worker as u64);
                         if v.demands[j].is_some() {
                             ctx.constraint_unblock(job);
                         }
+                        ctx.task_redispatched(job);
                         Some(dur)
                     }
-                    None => None,
+                    None => match v.jobs[j].bind_next(&ctx.trace.jobs[j]) {
+                        Some((t, dur)) => {
+                            ctx.out.decisions += 1;
+                            // sticky batch: the *node* re-binds itself
+                            ctx.flight(EvKind::Bind, Actor::Node(worker), job, t as u32, worker as u64);
+                            if v.demands[j].is_some() {
+                                ctx.constraint_unblock(job);
+                            }
+                            ctx.task_redispatched(job);
+                            Some(dur)
+                        }
+                        None => None,
+                    },
                 };
                 ctx.send(Ev::Launch { worker, job, dur });
             }
+        }
+        Ev::Fault(kind) => match kind {
+            FaultKind::NodeDown { node, kill } => {
+                ctx.flight(EvKind::FaultDown, Actor::Node(node), NONE, NONE, kill as u64);
+                let now = ctx.now();
+                let (nlo, nhi) = v.cfg.catalog.node_range(node);
+                for wi in nlo..nhi {
+                    v.workers[wi - v.worker_lo].up = false;
+                    // the queue is stranded either way: short
+                    // reservations re-probe elsewhere, an eagerly-bound
+                    // long task hands its claim back, and a gang hold
+                    // returns the whole gang (resetting members already
+                    // seated on this node — the gang is co-resident)
+                    while let Some(item) = v.workers[wi - v.worker_lo].queue.pop_front() {
+                        match item {
+                            QItem::Reservation(job) => {
+                                fault_reprobe(job, v.cfg.workers, v.cfg.n_schedulers, ctx, |t| {
+                                    Ev::Probe { worker: t, job, retry: 0 }
+                                });
+                            }
+                            QItem::LongTask { job, dur } => {
+                                ctx.send(Ev::LongLost {
+                                    job,
+                                    dur,
+                                    worker: wi as u32,
+                                    lost: SimTime::ZERO,
+                                    ran: false,
+                                });
+                            }
+                            QItem::GangHold { gang } => {
+                                // exactly-once: later holds of the same
+                                // gang find the slot already taken
+                                if let Some(g) = v.gangs[gang as usize].take() {
+                                    v.free_gangs.push(gang);
+                                    for &mw in &g.workers {
+                                        let mlw = mw as usize - v.worker_lo;
+                                        if matches!(
+                                            v.workers[mlw].state,
+                                            WState::Busy { long: true }
+                                        ) && v.workers[mlw].running.is_none()
+                                        {
+                                            v.workers[mlw].state = WState::Idle;
+                                            v.long_busy.set_busy(mw as usize);
+                                        }
+                                    }
+                                    ctx.send(Ev::GangLost {
+                                        job: g.job,
+                                        dur: g.dur,
+                                        workers: g.workers,
+                                        lost: SimTime::ZERO,
+                                        ran: false,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                    if kill {
+                        match v.workers[wi - v.worker_lo].state {
+                            WState::Busy { long } => {
+                                // an anchor's `running` covers every
+                                // co-resident member (all on this node);
+                                // member slots are Busy with no `running`
+                                // and are silently reset
+                                let w = &mut v.workers[wi - v.worker_lo];
+                                w.gen = w.gen.wrapping_add(1);
+                                w.state = WState::Idle;
+                                let rt = w.running.take();
+                                if long {
+                                    v.long_busy.set_busy(wi);
+                                }
+                                if let Some(rt) = rt {
+                                    let lost = now.saturating_sub(rt.started);
+                                    ctx.flight(
+                                        EvKind::TaskKill,
+                                        Actor::Node(node),
+                                        rt.job,
+                                        NONE,
+                                        lost.as_micros(),
+                                    );
+                                    if !long {
+                                        // short scalar or short gang
+                                        // anchor: one re-credit, one
+                                        // replacement probe either way
+                                        ctx.send(Ev::TaskLost {
+                                            job: rt.job,
+                                            dur: rt.dur,
+                                            lost,
+                                            ran: true,
+                                        });
+                                    } else if rt.members.is_empty() {
+                                        ctx.send(Ev::LongLost {
+                                            job: rt.job,
+                                            dur: rt.dur,
+                                            worker: wi as u32,
+                                            lost,
+                                            ran: true,
+                                        });
+                                    } else {
+                                        ctx.send(Ev::GangLost {
+                                            job: rt.job,
+                                            dur: rt.dur,
+                                            workers: rt.members,
+                                            lost,
+                                            ran: true,
+                                        });
+                                    }
+                                }
+                            }
+                            // the pending Launch bounces via TaskLost
+                            WState::Waiting => {
+                                v.workers[wi - v.worker_lo].state = WState::Idle;
+                            }
+                            WState::Idle => {}
+                        }
+                    }
+                    // drain (kill=false): running work survives to
+                    // completion; a Waiting slot's pending Launch still
+                    // bounces because the slot is down
+                }
+            }
+            FaultKind::NodeUp { node } => {
+                ctx.flight(EvKind::FaultUp, Actor::Node(node), NONE, NONE, 0);
+                let (nlo, nhi) = v.cfg.catalog.node_range(node);
+                for wi in nlo..nhi {
+                    v.workers[wi - v.worker_lo].up = true;
+                }
+                // no slot states to repair: kills reset their slots at
+                // crash time, drained work finishes on its own, and new
+                // probes start landing again immediately
+            }
+            FaultKind::GmFail { .. } => {
+                unreachable!("GM failures are not routed to Eagle workers")
+            }
+        },
+        Ev::CentralFault(kind) => match kind {
+            FaultKind::NodeDown { node, .. } => {
+                // mask the node's slots out of the central free view;
+                // already-free slots park so NodeUp restores them,
+                // claimed slots park later when their release notice
+                // (Done / LongLost / GangDone / GangLost) arrives
+                let (nlo, nhi) = v.cfg.catalog.node_range(node);
+                for w in nlo..nhi {
+                    v.central_down[w] = true;
+                    if v.central_free.is_free(w) {
+                        v.central_free.set_busy(w);
+                        v.central_pending_free[w] = true;
+                    }
+                }
+            }
+            FaultKind::NodeUp { node } => {
+                let (nlo, nhi) = v.cfg.catalog.node_range(node);
+                for w in nlo..nhi {
+                    v.central_down[w] = false;
+                    if v.central_pending_free[w] {
+                        v.central_pending_free[w] = false;
+                        v.central_free.set_free(w);
+                    }
+                }
+                drain_long(v, ctx);
+            }
+            FaultKind::GmFail { .. } => {
+                unreachable!("GM failures are not routed to Eagle's central scheduler")
+            }
+        },
+        Ev::TaskLost { job, dur, lost, ran } => {
+            if ran {
+                // a started short task died with the node; bounced
+                // launches (`!ran`) never started and only re-bind
+                ctx.task_killed(job, lost);
+            }
+            v.returned[job as usize].push(dur);
+            fault_reprobe(job, v.cfg.workers, v.cfg.n_schedulers, ctx, |t| Ev::Probe {
+                worker: t,
+                job,
+                retry: 0,
+            });
+        }
+        Ev::LongLost { job, dur, worker, lost, ran } => {
+            if ran {
+                ctx.task_killed(job, lost);
+            }
+            let w = worker as usize;
+            if v.central_down[w] {
+                v.central_pending_free[w] = true;
+            } else {
+                v.central_free.set_free(w);
+            }
+            // head-of-queue: recovered work re-places before newer
+            // arrivals (FIFO fairness for the victim)
+            v.long_q.push_front((job, dur));
+            drain_long(v, ctx);
+        }
+        Ev::GangLost { job, dur, workers, lost, ran } => {
+            if ran {
+                ctx.task_killed(job, lost);
+            }
+            for &mw in &workers {
+                let w = mw as usize;
+                if v.central_down[w] {
+                    v.central_pending_free[w] = true;
+                } else {
+                    v.central_free.set_free(w);
+                }
+            }
+            ctx.pool.give(workers);
+            v.long_q.push_front((job, dur));
+            drain_long(v, ctx);
         }
     }
 }
@@ -789,11 +1230,19 @@ fn advance_worker(v: &mut EagleView<'_>, worker: u32, ctx: &mut SimCtx<'_, Ev>) 
         }
         Some(QItem::LongTask { job, dur }) => {
             v.workers[lw].state = WState::Busy { long: true };
+            let gen = v.workers[lw].gen;
+            v.workers[lw].running = Some(Running {
+                job,
+                dur,
+                started: ctx.now(),
+                members: Vec::new(),
+            });
             ctx.out.tasks += 1;
             ctx.push_after(dur, Ev::Finish {
                 worker,
                 job,
                 long: true,
+                gen,
             });
         }
         Some(QItem::GangHold { gang }) => {
@@ -808,11 +1257,22 @@ fn advance_worker(v: &mut EagleView<'_>, worker: u32, ctx: &mut SimCtx<'_, Ev>) 
             if need == 0 {
                 let g = slot.take().expect("last hold just joined");
                 v.free_gangs.push(gang);
+                // the anchor slot carries the gang's kill bookkeeping
+                // (the whole gang is co-resident on one node)
+                let anchor = g.workers[0] as usize - v.worker_lo;
+                let gen = v.workers[anchor].gen;
+                v.workers[anchor].running = Some(Running {
+                    job: g.job,
+                    dur: g.dur,
+                    started: ctx.now(),
+                    members: g.workers.clone(),
+                });
                 ctx.out.tasks += 1;
                 ctx.push_after(g.dur, Ev::GangFinish {
                     workers: g.workers,
                     job: g.job,
                     long: true,
+                    gen,
                 });
             }
         }
@@ -825,6 +1285,15 @@ impl Scheduler for Eagle<'_> {
 
     fn name(&self) -> &'static str {
         "eagle"
+    }
+
+    fn init(&mut self, ctx: &mut SimCtx<'_, Ev>) {
+        // plan-time fault injection (an empty plan pushes nothing,
+        // keeping fault-free runs bit-identical); the unsharded
+        // scheduler owns every node and the central view
+        if let Some(plan) = &self.cfg.sim.fault {
+            inject_plan(plan, |_| true, true, ctx);
+        }
     }
 
     fn on_arrival(&mut self, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
@@ -1053,5 +1522,117 @@ mod tests {
             "all {} fallback re-probes pinned to worker 0",
             reprobes.len()
         );
+    }
+
+    #[test]
+    fn fault_empty_plan_bit_identical() {
+        use crate::sim::fault::FaultPlan;
+        let mut cfg = EagleConfig::for_workers(300);
+        cfg.sim.seed = 11;
+        // mixed workload: exercises the probe path, sticky batches, and
+        // the central long queue
+        let trace = google_like(60, 300, 0.8, 12);
+        let a = simulate(&cfg, &trace);
+        cfg.sim.fault = Some(FaultPlan::empty());
+        let b = simulate(&cfg, &trace);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.decisions, b.decisions);
+        assert_eq!(b.tasks_killed, 0);
+    }
+
+    #[test]
+    fn fault_churn_conserves_short_tasks() {
+        use crate::sim::fault::{FaultEvent, FaultPlan};
+        let mut cfg = EagleConfig::for_workers(100);
+        cfg.sim.seed = 31;
+        let mut evs = Vec::new();
+        for i in 0..10u32 {
+            let t0 = 2.0 + i as f64 * 2.5;
+            let node = i * 7 % 100;
+            evs.push(FaultEvent {
+                at: SimTime::from_secs(t0),
+                // mix crashes (running tasks killed) with drains
+                kind: FaultKind::NodeDown { node, kill: i % 3 != 0 },
+            });
+            evs.push(FaultEvent {
+                at: SimTime::from_secs(t0 + 2.0),
+                kind: FaultKind::NodeUp { node },
+            });
+        }
+        cfg.sim.fault = Some(FaultPlan::from_events(evs));
+        // 1 s tasks are all short: probes, sticky batches, TaskLost
+        let trace = synthetic_fixed(50, 30, 1.0, 0.8, 100, 32);
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 30);
+        // conservation: every killed task runs again exactly once
+        assert_eq!(out.tasks, trace.n_tasks() as u64 + out.tasks_killed);
+        assert_eq!(out.tasks_rerun, out.tasks_killed);
+        assert!(out.tasks_killed > 0, "churn never killed a running task");
+        assert!(out.work_lost_s > 0.0);
+        assert_eq!(out.redispatch_s.len(), out.tasks_rerun as usize);
+    }
+
+    #[test]
+    fn fault_long_churn_requeues_centrally() {
+        use crate::sim::fault::{FaultEvent, FaultPlan};
+        let mut cfg = EagleConfig::for_workers(100);
+        cfg.sim.seed = 35;
+        cfg.sim.short_threshold = SimTime::from_secs(0.5); // everything long
+        let mut evs = Vec::new();
+        // kill nodes inside the long partition while the central queue
+        // is busy; LongLost must hand claims back and re-place FIFO
+        for (i, slot) in [20usize, 50, 80].iter().enumerate() {
+            let node = cfg.catalog.node_of(*slot) as u32;
+            let t0 = 2.0 + i as f64 * 3.0;
+            evs.push(FaultEvent {
+                at: SimTime::from_secs(t0),
+                kind: FaultKind::NodeDown { node, kill: true },
+            });
+            evs.push(FaultEvent {
+                at: SimTime::from_secs(t0 + 4.0),
+                kind: FaultKind::NodeUp { node },
+            });
+        }
+        cfg.sim.fault = Some(FaultPlan::from_events(evs));
+        let trace = synthetic_fixed(30, 10, 2.0, 0.8, 100, 36);
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 10);
+        assert_eq!(out.tasks, trace.n_tasks() as u64 + out.tasks_killed);
+        assert_eq!(out.tasks_rerun, out.tasks_killed);
+        assert!(out.tasks_killed > 0, "no running long task was ever killed");
+    }
+
+    #[test]
+    fn fault_long_gang_churn_reseats_whole() {
+        use crate::cluster::NodeCatalog;
+        use crate::sim::fault::{FaultEvent, FaultPlan};
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        let mut cfg = EagleConfig::for_workers(320);
+        cfg.sim.seed = 37;
+        cfg.sim.short_threshold = SimTime::from_secs(0.5); // everything long
+        cfg.catalog = NodeCatalog::rack_tiered(320, 0.25);
+        let mut evs = Vec::new();
+        for (i, slot) in (40..320).step_by(60).enumerate() {
+            let node = cfg.catalog.node_of(slot) as u32;
+            let t0 = 3.0 + i as f64 * 2.0;
+            evs.push(FaultEvent {
+                at: SimTime::from_secs(t0),
+                kind: FaultKind::NodeDown { node, kill: true },
+            });
+            evs.push(FaultEvent {
+                at: SimTime::from_secs(t0 + 4.0),
+                kind: FaultKind::NodeUp { node },
+            });
+        }
+        cfg.sim.fault = Some(FaultPlan::from_events(evs));
+        let trace =
+            synthetic_fixed_constrained(6, 15, 2.0, 0.6, 320, 38, 0.4, Demand::new(4, vec![]));
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 15);
+        assert_eq!(out.tasks, trace.n_tasks() as u64 + out.tasks_killed);
+        assert_eq!(out.tasks_rerun, out.tasks_killed);
     }
 }

@@ -39,6 +39,7 @@ use crate::config::EagleConfig;
 use crate::metrics::RunOutcome;
 use crate::sched::common::{ProbeWorker, TaskCursor};
 use crate::sim::driver::{self, ShardSim, SimCtx};
+use crate::sim::fault::FaultKind;
 use crate::sim::time::SimTime;
 use crate::workload::{JobClass, Trace};
 
@@ -73,6 +74,11 @@ struct EagleShard<'a> {
     long_busy: AvailMap,
     gangs: Vec<Option<GangState>>,
     free_gangs: Vec<u32>,
+    /// whether this shard hosts the pinned central actor
+    /// ([`CENTRAL_SHARD`]) — drives fault-plan injection
+    is_central: bool,
+    central_down: Vec<bool>,
+    central_pending_free: Vec<bool>,
 }
 
 impl EagleShard<'_> {
@@ -91,6 +97,8 @@ impl EagleShard<'_> {
             long_busy: &mut self.long_busy,
             gangs: &mut self.gangs,
             free_gangs: &mut self.free_gangs,
+            central_down: &mut self.central_down,
+            central_pending_free: &mut self.central_pending_free,
         }
     }
 }
@@ -98,9 +106,26 @@ impl EagleShard<'_> {
 impl ShardSim for EagleShard<'_> {
     type Ev = Ev;
 
-    fn init(&mut self, _ctx: &mut SimCtx<'_, Ev>) {
+    fn init(&mut self, ctx: &mut SimCtx<'_, Ev>) {
         // Eagle has no recurring events — the central scheduler drains
-        // on arrivals and completion notices, workers react to messages
+        // on arrivals and completion notices, workers react to messages.
+        // Fault-plan node events are injected at plan time: each lane
+        // takes the events of the nodes in its worker block, and the
+        // central lane additionally takes every node event as a
+        // CentralFault so its free view can mask the node (an empty
+        // plan pushes nothing, keeping fault-free lanes bit-identical).
+        if let Some(plan) = &self.cfg.sim.fault {
+            let (lo, hi) = (self.worker_lo, self.worker_lo + self.workers.len());
+            eagle::inject_plan(
+                plan,
+                |node| {
+                    let (nlo, nhi) = self.cfg.catalog.node_range(node);
+                    lo <= nlo && nhi <= hi
+                },
+                self.is_central,
+                ctx,
+            );
+        }
     }
 
     fn on_arrival(&mut self, job: u32, ctx: &mut SimCtx<'_, Ev>) {
@@ -142,6 +167,18 @@ fn home_shard(plan: &ShardPlan, catalog: &NodeCatalog, n_schedulers: usize, ev: 
                 plan.shard_of_gm(*job as usize % n_schedulers)
             }
         }
+        // short-task losses re-credit at the owning scheduler; long
+        // losses hand their central claims back to the pinned actor
+        Ev::TaskLost { job, .. } => plan.shard_of_gm(*job as usize % n_schedulers),
+        Ev::LongLost { .. } | Ev::GangLost { .. } | Ev::CentralFault(_) => CENTRAL_SHARD,
+        // node fault events home on the lane owning the node's block
+        // (nodes never straddle shard cuts)
+        Ev::Fault(kind) => match kind {
+            FaultKind::NodeDown { node, .. } | FaultKind::NodeUp { node } => {
+                plan.shard_of_lm(*node as usize)
+            }
+            FaultKind::GmFail { .. } => unreachable!("GmFail is never injected into Eagle"),
+        },
     }
 }
 
@@ -208,6 +245,9 @@ fn run_impl(cfg: &EagleConfig, trace: &Trace, threaded: bool) -> RunOutcome {
             long_busy: AvailMap::all_busy(cfg.workers),
             gangs: Vec::new(),
             free_gangs: Vec::new(),
+            is_central: s == CENTRAL_SHARD,
+            central_down: vec![false; cfg.workers],
+            central_pending_free: vec![false; cfg.workers],
         })
         .collect();
     let shard_of = |ev: &Ev| home_shard(&plan, catalog, cfg.n_schedulers, ev);
@@ -326,6 +366,45 @@ mod tests {
         let b = simulate_sharded_reference(&cfg, &trace);
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.gang_rejections, b.gang_rejections);
+    }
+
+    #[test]
+    fn fault_churn_threaded_matches_sequential() {
+        use crate::sim::fault::{FaultEvent, FaultPlan};
+        // crash-and-recover churn on a mixed workload: worker lanes see
+        // Fault sweeps, the central lane sees CentralFault masks, and
+        // loss notices criss-cross shards — threaded must stay
+        // bit-identical to the sequential lane drain
+        for shards in [2, 4] {
+            let mut cfg = cfg_with_shards(300, 41, shards);
+            let mut evs = Vec::new();
+            for i in 0..8u32 {
+                let t0 = 2.0 + i as f64 * 2.0;
+                let node = i * 37 % 300;
+                evs.push(FaultEvent {
+                    at: SimTime::from_secs(t0),
+                    kind: FaultKind::NodeDown { node, kill: i % 4 != 3 },
+                });
+                evs.push(FaultEvent {
+                    at: SimTime::from_secs(t0 + 3.0),
+                    kind: FaultKind::NodeUp { node },
+                });
+            }
+            cfg.sim.fault = Some(FaultPlan::from_events(evs));
+            let trace = google_like(50, 300, 0.8, 42);
+            let a = simulate_sharded(&cfg, &trace);
+            let b = simulate_sharded_reference(&cfg, &trace);
+            assert_eq!(a.shard_fallback, None, "shards={shards}");
+            assert_eq!(a.makespan, b.makespan, "shards={shards}");
+            assert_eq!(a.messages, b.messages, "shards={shards}");
+            assert_eq!(a.events, b.events, "shards={shards}");
+            assert_eq!(a.tasks_killed, b.tasks_killed, "shards={shards}");
+            assert_eq!(a.tasks_rerun, b.tasks_rerun, "shards={shards}");
+            assert_eq!(a.tasks, trace.n_tasks() as u64 + a.tasks_killed);
+            for (x, y) in a.jobs.iter().zip(b.jobs.iter()) {
+                assert_eq!(x.complete, y.complete, "shards={shards}");
+            }
+        }
     }
 
     #[test]

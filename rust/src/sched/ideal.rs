@@ -22,6 +22,7 @@ pub fn simulate(params: &SimParams, trace: &Trace) -> RunOutcome {
             constraint_wait_s: 0.0, // omniscient placement never waits
             gang: j.demand.as_ref().is_some_and(|d| d.slots > 1),
             gang_wait_s: 0.0,
+            killed: 0,
         })
         .collect();
     let makespan = jobs

@@ -11,6 +11,7 @@ use crate::metrics::RunOutcome;
 use crate::obs::flight::{Actor, EvKind, NONE};
 use crate::runtime::match_engine::{constrained_plan, gang_plan, MatchPlanner, RustMatchEngine};
 use crate::sim::driver::{self, Scheduler, SimCtx};
+use crate::sim::fault::{FaultKind, FaultPlan};
 use crate::sim::time::SimTime;
 use crate::workload::Trace;
 
@@ -39,8 +40,11 @@ pub enum Ev {
     LmVerify { lm: u32, gm: u32, maps: Vec<Mapping> },
     /// LM→GM: batched inconsistency reply + piggybacked cluster snapshot.
     GmReply { gm: u32, invalid: Vec<(u32, u32)>, snap: Arc<Snapshot> },
-    /// Worker finished a task (local to the LM: no network hop).
-    TaskFinish { lm: u32, gm: u32, job: u32, worker: u32 },
+    /// Worker finished a task (local to the LM: no network hop). `gen`
+    /// is the slot's kill generation at launch: a finish whose
+    /// generation is stale belongs to a fault-killed incarnation and is
+    /// dropped (the kill notice already requeued the task).
+    TaskFinish { lm: u32, gm: u32, job: u32, worker: u32, gen: u32 },
     /// LM→GM: task-completion notice (§3.4). `reuse` = worker is internal
     /// to the scheduling GM, which may immediately re-assign it.
     GmTaskDone { gm: u32, job: u32, worker: u32, reuse: bool },
@@ -49,8 +53,9 @@ pub enum Ev {
     /// it, so the owner is told it is available again).
     GmWorkerFreed { gm: u32, worker: u32 },
     /// Worker finished a *gang* task: all `workers` free atomically
-    /// (local to the LM: no network hop).
-    GangFinish { lm: u32, gm: u32, job: u32, workers: Vec<u32> },
+    /// (local to the LM: no network hop). `gen` is the anchor slot's
+    /// kill generation at launch (see [`Ev::TaskFinish`]).
+    GangFinish { lm: u32, gm: u32, job: u32, workers: Vec<u32>, gen: u32 },
     /// LM→GM: gang-completion notice (§3.4, gang form of `GmTaskDone`).
     GmGangDone { gm: u32, job: u32, workers: Vec<u32>, reuse: bool },
     /// LM→GM (owner): a borrowed gang's slots freed (gang form of
@@ -64,6 +69,13 @@ pub enum Ev {
     /// Failure injection (§3.5): the GM loses its in-memory global state
     /// and must rebuild from subsequent LM updates.
     GmFail { gm: u32 },
+    /// Fault injection ([`crate::sim::fault`]): a node-level event,
+    /// delivered to the LM owning (part of) the node's slots.
+    Fault { lm: u32, kind: FaultKind },
+    /// LM→GM: a running task was killed by a node crash. `lost` is the
+    /// execution time thrown away; the GM requeues the task at the
+    /// front, exactly like an LM-invalidated mapping.
+    GmTaskKilled { gm: u32, job: u32, task: u32, lost: SimTime },
 }
 
 /// A range-scoped **delta snapshot** of one LM's authoritative state as
@@ -118,6 +130,30 @@ pub(super) struct Lm {
     cached: Option<Arc<Snapshot>>,
     /// Scratch for building the next snapshot's words.
     scratch: Vec<u64>,
+    /// Per slot (range-local index): what is executing there, if
+    /// anything. Inert bookkeeping without a fault plan; fault handlers
+    /// use it to kill running work and to tell fault-parked busy slots
+    /// from genuinely occupied ones.
+    running: Vec<Option<RunTask>>,
+    /// Per slot: kill generation, carried by finish events (see
+    /// [`Ev::TaskFinish`]). Stays 0 fault-free, so every finish matches.
+    gen: Vec<u32>,
+    /// Per slot: node currently down (crashed or draining).
+    down: Vec<bool>,
+}
+
+/// What one LM slot is executing (see [`Lm::running`]).
+#[derive(Clone)]
+pub(super) struct RunTask {
+    gm: u32,
+    job: u32,
+    task: u32,
+    started: SimTime,
+    /// True on the slot that owns the task's finish event — every scalar
+    /// slot, and a gang's first slot. Non-anchor gang members carry the
+    /// marker only so fault handling can tell they are genuinely
+    /// occupied (one kill notice per task, not per slot).
+    anchor: bool,
 }
 
 impl Lm {
@@ -357,6 +393,7 @@ pub(super) fn build_lm(cfg: &MeghaConfig, l: usize) -> Lm {
     // initial range, which every GM's view starts from
     let mut last_words = Vec::new();
     state.copy_words_into(r.start as usize, r.end as usize, &mut last_words);
+    let width = (r.end - r.start) as usize;
     Lm {
         state,
         version: 0,
@@ -367,6 +404,9 @@ pub(super) fn build_lm(cfg: &MeghaConfig, l: usize) -> Lm {
         last_version: u64::MAX,
         cached: None,
         scratch: Vec::new(),
+        running: vec![None; width],
+        gen: vec![0; width],
+        down: vec![false; width],
     }
 }
 
@@ -396,6 +436,11 @@ impl Scheduler for MeghaSim<'_> {
         if let Some(f) = self.failure {
             assert!(f.gm < self.spec.n_gm);
             ctx.push(f.at, Ev::GmFail { gm: f.gm as u32 });
+        }
+        // fault-plan events last, so an empty plan leaves the queue —
+        // and hence the whole run — bit-identical to a fault-free one
+        if let Some(plan) = &self.cfg.sim.fault {
+            inject_plan(plan, &self.spec, &self.cfg.catalog, |_| true, |_| true, ctx);
         }
     }
 
@@ -463,6 +508,7 @@ pub(super) fn handle_event(v: &mut MeghaView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
             ctx.out.messages += 1;
             let mut invalid: Vec<(u32, u32)> = ctx.pool.take();
             {
+                let now = ctx.now();
                 let lm_entry = &mut v.lms[lm as usize - v.lm_lo];
                 for m in maps.drain(..) {
                     if m.gang.is_empty() {
@@ -470,12 +516,21 @@ pub(super) fn handle_event(v: &mut MeghaView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
                             lm_entry.state.set_busy(m.worker as usize);
                             lm_entry.version += 1;
                             ctx.out.tasks += 1;
+                            let li = m.worker as usize - lm_entry.lo;
+                            lm_entry.running[li] = Some(RunTask {
+                                gm,
+                                job: m.job,
+                                task: m.task,
+                                started: now,
+                                anchor: true,
+                            });
                             ctx.flight(EvKind::LmVerifyOk, Actor::Lm(lm), m.job, m.task, 1);
                             ctx.push_after(m.dur, Ev::TaskFinish {
                                 lm,
                                 gm,
                                 job: m.job,
                                 worker: m.worker,
+                                gen: lm_entry.gen[li],
                             });
                         } else {
                             ctx.flight(EvKind::LmInvalid, Actor::Lm(lm), m.job, m.task, 1);
@@ -489,17 +544,26 @@ pub(super) fn handle_event(v: &mut MeghaView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
                         let ok = m.gang.iter().all(|&w| lm_entry.state.is_free(w as usize));
                         let width = m.gang.len() as u64;
                         if ok {
-                            for &w in &m.gang {
+                            for (i, &w) in m.gang.iter().enumerate() {
                                 lm_entry.state.set_busy(w as usize);
+                                lm_entry.running[w as usize - lm_entry.lo] = Some(RunTask {
+                                    gm,
+                                    job: m.job,
+                                    task: m.task,
+                                    started: now,
+                                    anchor: i == 0,
+                                });
                             }
                             lm_entry.version += 1;
                             ctx.out.tasks += 1;
+                            let gen = lm_entry.gen[m.gang[0] as usize - lm_entry.lo];
                             ctx.flight(EvKind::LmVerifyOk, Actor::Lm(lm), m.job, m.task, width);
                             ctx.push_after(m.dur, Ev::GangFinish {
                                 lm,
                                 gm,
                                 job: m.job,
                                 workers: m.gang,
+                                gen,
                             });
                         } else {
                             ctx.out.gang_rejections += 1;
@@ -551,8 +615,23 @@ pub(super) fn handle_event(v: &mut MeghaView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
                 ctx,
             );
         }
-        Ev::TaskFinish { lm, gm, job, worker } => {
+        Ev::TaskFinish { lm, gm, job, worker, gen } => {
             let lm_entry = &mut v.lms[lm as usize - v.lm_lo];
+            let li = worker as usize - lm_entry.lo;
+            if gen != lm_entry.gen[li] {
+                return; // killed incarnation; the kill notice requeued it
+            }
+            lm_entry.running[li] = None;
+            if lm_entry.down[li] {
+                // finished on a draining node: the job's task is done,
+                // but the slot stays parked (no GM is told it freed —
+                // NodeUp releases it through the snapshot path)
+                let d = ctx.net_delay();
+                let comm = ctx.net_delay().as_secs();
+                ctx.out.breakdown.comm_s += comm;
+                ctx.push_after(d, Ev::GmTaskDone { gm, job, worker, reuse: false });
+                return;
+            }
             lm_entry.state.set_free(worker as usize);
             lm_entry.version += 1;
             let owner = v.spec.owner_gm_of_worker(WorkerId(worker));
@@ -570,9 +649,26 @@ pub(super) fn handle_event(v: &mut MeghaView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
                 });
             }
         }
-        Ev::GangFinish { lm, gm, job, workers } => {
+        Ev::GangFinish { lm, gm, job, workers, gen } => {
             // atomic release: all slots of the gang free together
             let lm_entry = &mut v.lms[lm as usize - v.lm_lo];
+            let anchor = workers[0] as usize - lm_entry.lo;
+            if gen != lm_entry.gen[anchor] {
+                ctx.pool.give(workers);
+                return; // killed incarnation; the kill notice requeued it
+            }
+            for &w in &workers {
+                lm_entry.running[w as usize - lm_entry.lo] = None;
+            }
+            if lm_entry.down[anchor] {
+                // finished on a draining node: done, but slots stay
+                // parked until NodeUp (see the scalar drain path above)
+                let d = ctx.net_delay();
+                let comm = ctx.net_delay().as_secs();
+                ctx.out.breakdown.comm_s += comm;
+                ctx.push_after(d, Ev::GmGangDone { gm, job, workers, reuse: false });
+                return;
+            }
             for &w in &workers {
                 lm_entry.state.set_free(w as usize);
             }
@@ -739,6 +835,150 @@ pub(super) fn handle_event(v: &mut MeghaView<'_>, ev: Ev, ctx: &mut SimCtx<'_, E
             gm_entry.counts.iter_mut().for_each(|c| *c = 0);
             gm_entry.applied.iter_mut().for_each(|a| *a = u64::MAX);
             gm_entry.touched.iter_mut().for_each(|t| *t = true);
+        }
+        Ev::Fault { lm, kind } => {
+            let now = ctx.now();
+            let lm_entry = &mut v.lms[lm as usize - v.lm_lo];
+            match kind {
+                FaultKind::NodeDown { node, kill } => {
+                    ctx.flight(EvKind::FaultDown, Actor::Node(node), NONE, NONE, kill as u64);
+                    let (nlo, nhi) = v.cfg.catalog.node_range(node);
+                    let (lo, hi) = (nlo.max(lm_entry.lo), nhi.min(lm_entry.hi));
+                    let mut flipped = false;
+                    for w in lo..hi {
+                        let li = w - lm_entry.lo;
+                        lm_entry.down[li] = true;
+                        if lm_entry.state.is_free(w) {
+                            // park free slots busy: a stale GM that
+                            // still plans onto them fails LM
+                            // verification like any other inconsistency,
+                            // and heartbeats carry the outage to every
+                            // view
+                            lm_entry.state.set_busy(w);
+                            flipped = true;
+                        } else if kill {
+                            if let Some(rt) = lm_entry.running[li].take() {
+                                lm_entry.gen[li] += 1;
+                                if rt.anchor {
+                                    let lost = now.saturating_sub(rt.started);
+                                    ctx.flight(
+                                        EvKind::TaskKill,
+                                        Actor::Node(node),
+                                        rt.job,
+                                        rt.task,
+                                        lost.as_micros(),
+                                    );
+                                    let d = ctx.net_delay();
+                                    ctx.push_after(d, Ev::GmTaskKilled {
+                                        gm: rt.gm,
+                                        job: rt.job,
+                                        task: rt.task,
+                                        lost,
+                                    });
+                                }
+                            }
+                        }
+                        // drain (`!kill`): running work finishes; the
+                        // TaskFinish drain path keeps the slot parked
+                    }
+                    if flipped {
+                        lm_entry.version += 1;
+                    }
+                }
+                FaultKind::NodeUp { node } => {
+                    ctx.flight(EvKind::FaultUp, Actor::Node(node), NONE, NONE, 0);
+                    let (nlo, nhi) = v.cfg.catalog.node_range(node);
+                    let (lo, hi) = (nlo.max(lm_entry.lo), nhi.min(lm_entry.hi));
+                    let mut flipped = false;
+                    for w in lo..hi {
+                        let li = w - lm_entry.lo;
+                        lm_entry.down[li] = false;
+                        // busy with nothing running = fault-parked (free
+                        // at the outage, killed, or drained to finish):
+                        // release it; heartbeats heal the GM views
+                        if lm_entry.running[li].is_none() && !lm_entry.state.is_free(w) {
+                            lm_entry.state.set_free(w);
+                            flipped = true;
+                        }
+                    }
+                    if flipped {
+                        lm_entry.version += 1;
+                    }
+                }
+                FaultKind::GmFail { .. } => {
+                    unreachable!("GM failures are injected as Ev::GmFail")
+                }
+            }
+        }
+        Ev::GmTaskKilled { gm, job, task, lost } => {
+            ctx.out.messages += 1;
+            let gm_id = gm as usize;
+            ctx.task_killed(job, lost);
+            let now = ctx.now();
+            let gm_entry = &mut v.gms[gm_id - v.gm_lo];
+            // requeue at the front, exactly like an LM-invalidated
+            // mapping (§3.4.1); the slot itself stays parked at the LM
+            v.jobs[job as usize].pending.push_front(task);
+            v.jobs[job as usize].enq = now;
+            if !gm_entry.in_queue[job as usize] {
+                gm_entry.queue.push_front(job);
+                gm_entry.in_queue[job as usize] = true;
+            }
+            try_schedule(
+                gm_id,
+                gm_entry,
+                v.jobs,
+                v.demands,
+                &v.cfg.catalog,
+                v.batches,
+                &v.spec,
+                v.cfg,
+                &mut *v.planner,
+                ctx,
+            );
+        }
+    }
+}
+
+/// Fan a fault plan out into per-LM [`Ev::Fault`] pushes (plus legacy
+/// [`Ev::GmFail`] for GM failures), restricted to the LMs/GMs the caller
+/// owns — everything for the unsharded engine, the shard's own blocks
+/// under the sharded executor (plan-time injection into the owning
+/// lane). A node event goes to every LM whose worker range overlaps the
+/// node's slots; handlers clamp to their own range, so a node straddling
+/// an LM boundary is handled piecewise.
+pub(super) fn inject_plan(
+    plan: &FaultPlan,
+    spec: &ClusterSpec,
+    catalog: &NodeCatalog,
+    owns_lm: impl Fn(usize) -> bool,
+    owns_gm: impl Fn(usize) -> bool,
+    ctx: &mut SimCtx<'_, Ev>,
+) {
+    for e in plan.events() {
+        match e.kind {
+            FaultKind::GmFail { gm } => {
+                assert!(
+                    (gm as usize) < spec.n_gm,
+                    "fault plan names GM {gm} of {}",
+                    spec.n_gm
+                );
+                if owns_gm(gm as usize) {
+                    ctx.push(e.at, Ev::GmFail { gm });
+                }
+            }
+            FaultKind::NodeDown { node, .. } | FaultKind::NodeUp { node } => {
+                let (nlo, nhi) = catalog.node_range(node);
+                for l in 0..spec.n_lm {
+                    if !owns_lm(l) {
+                        continue;
+                    }
+                    let r = spec.cluster_worker_range(l);
+                    if (r.start as usize) < nhi && nlo < r.end as usize {
+                        ctx.push(e.at, Ev::Fault { lm: l as u32, kind: e.kind });
+                    }
+                }
+            }
         }
     }
 }
@@ -965,6 +1205,7 @@ fn try_schedule(
                     gm.counts[part] -= slots.len() as u32;
                     let task = js.pending.pop_front().expect("plan larger than job");
                     ctx.out.decisions += 1;
+                    ctx.task_redispatched(jidx);
                     ctx.flight(
                         EvKind::GmMatchGang,
                         Actor::Gm(gm_id as u32),
@@ -998,6 +1239,7 @@ fn try_schedule(
                 gm.counts[part] -= 1;
                 let task = js.pending.pop_front().expect("plan larger than job");
                 ctx.out.decisions += 1;
+                ctx.task_redispatched(jidx);
                 ctx.flight(
                     EvKind::GmMatch,
                     Actor::Gm(gm_id as u32),

@@ -82,6 +82,20 @@ impl ShardSim for MeghaShard<'_> {
         if let Some(f) = self.failure {
             ctx.push(f.at, Ev::GmFail { gm: f.gm as u32 });
         }
+        // plan-time fault injection into this lane: only events homed on
+        // an owned LM (node churn) or an owned GM (GM failures)
+        if let Some(plan) = &self.cfg.sim.fault {
+            let (lm_lo, lm_hi) = (self.lm_lo, self.lm_lo + self.lms.len());
+            let (gm_lo, gm_hi) = (self.gm_lo, self.gm_lo + self.gms.len());
+            engine::inject_plan(
+                plan,
+                &self.cfg.spec,
+                &self.cfg.catalog,
+                |l| lm_lo <= l && l < lm_hi,
+                |g| gm_lo <= g && g < gm_hi,
+                ctx,
+            );
+        }
     }
 
     fn on_arrival(&mut self, job: u32, ctx: &mut SimCtx<'_, Ev>) {
@@ -103,14 +117,16 @@ fn home_shard(plan: &ShardPlan, ev: &Ev) -> usize {
         Ev::LmVerify { lm, .. }
         | Ev::TaskFinish { lm, .. }
         | Ev::GangFinish { lm, .. }
-        | Ev::Heartbeat { lm } => plan.shard_of_lm(*lm as usize),
+        | Ev::Heartbeat { lm }
+        | Ev::Fault { lm, .. } => plan.shard_of_lm(*lm as usize),
         Ev::GmReply { gm, .. }
         | Ev::GmTaskDone { gm, .. }
         | Ev::GmWorkerFreed { gm, .. }
         | Ev::GmGangDone { gm, .. }
         | Ev::GmGangFreed { gm, .. }
         | Ev::GmHeartbeat { gm, .. }
-        | Ev::GmFail { gm } => plan.shard_of_gm(*gm as usize),
+        | Ev::GmFail { gm }
+        | Ev::GmTaskKilled { gm, .. } => plan.shard_of_gm(*gm as usize),
     }
 }
 

@@ -36,18 +36,27 @@ use crate::cluster::AvailMap;
 use crate::config::PigeonConfig;
 use crate::metrics::RunOutcome;
 use crate::obs::flight::{Actor, EvKind, NONE};
+use crate::sched::common::Running;
 use crate::sim::driver::{self, Scheduler, SimCtx};
+use crate::sim::fault::FaultKind;
 use crate::sim::time::SimTime;
 use crate::workload::{JobClass, Trace};
 
 pub enum Ev {
     /// distributor → coordinator: a slice of a job's tasks
     CoordRecv { group: u32, job: u32, durs: Vec<SimTime>, high: bool },
-    Finish { group: u32, worker: u32, job: u32 },
+    /// `gen` is the slot's kill generation at launch; a stale finish
+    /// belongs to a fault-killed incarnation and is dropped
+    Finish { group: u32, worker: u32, job: u32, gen: u32 },
     /// a gang task finished: all member slots (group-local general ids)
-    /// free atomically
-    GangFinish { group: u32, workers: Vec<u32>, job: u32 },
+    /// free atomically (`gen` is the anchor slot's — `workers[0]` —
+    /// kill generation at launch)
+    GangFinish { group: u32, workers: Vec<u32>, job: u32, gen: u32 },
     Done { job: u32 },
+    /// Fault injection ([`crate::sim::fault`]): a node-level event. The
+    /// node's slots may straddle group boundaries — the sweep walks the
+    /// slot range and touches every owning group.
+    Fault(FaultKind),
 }
 
 struct Group {
@@ -59,6 +68,19 @@ struct Group {
     lo_q: VecDeque<(u32, SimTime)>,
     /// consecutive high-priority dispatches since the last low one
     hi_streak: usize,
+    /// per-slot kill bookkeeping (group-local slot ids; a gang's state
+    /// lives on its anchor slot, `members` carrying every local id)
+    running: Vec<Option<Running>>,
+    /// kill generation per slot: bumped when a crash kills the slot's
+    /// running task, so the in-flight `Finish`/`GangFinish` is dropped
+    gen: Vec<u32>,
+    /// slot's node is currently down (fault plan): the slot is parked
+    /// busy in the free maps so nothing claims it
+    down: Vec<bool>,
+    /// slot parked while down (was free, finished while down, or its
+    /// task was killed): re-enters service at NodeUp via a
+    /// `dispatch_freed` pass
+    pending: Vec<bool>,
 }
 
 pub struct Pigeon<'a> {
@@ -159,6 +181,10 @@ impl<'a> Pigeon<'a> {
                         hi_q: VecDeque::new(),
                         lo_q: VecDeque::new(),
                         hi_streak: 0,
+                        running: vec![None; per_group],
+                        gen: vec![0; per_group],
+                        down: vec![false; per_group],
+                        pending: vec![false; per_group],
                     }
                 })
                 .collect(),
@@ -320,6 +346,22 @@ impl Scheduler for Pigeon<'_> {
         "pigeon"
     }
 
+    fn init(&mut self, ctx: &mut SimCtx<'_, Ev>) {
+        // Fault-plan node events, injected at plan time (an empty plan
+        // pushes nothing, keeping fault-free runs bit-identical). GM
+        // failures don't apply: Pigeon's distributors are stateless.
+        if let Some(plan) = &self.cfg.sim.fault {
+            for e in plan.events() {
+                match e.kind {
+                    FaultKind::NodeDown { .. } | FaultKind::NodeUp { .. } => {
+                        ctx.push(e.at, Ev::Fault(e.kind));
+                    }
+                    FaultKind::GmFail { .. } => {}
+                }
+            }
+        }
+    }
+
     fn on_arrival(&mut self, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
         let job = &ctx.trace.jobs[jidx as usize];
         let high = job.class(self.cfg.sim.short_threshold) == JobClass::Short;
@@ -385,7 +427,7 @@ impl Scheduler for Pigeon<'_> {
                         {
                             ctx.constraint_unblock(job);
                             ctx.gang_unblock(job);
-                            launch_gang(ctx, group, members, job, dur);
+                            launch_gang(ctx, g, group, members, job, dur);
                         } else {
                             ctx.pool.give(members);
                             // None while free capacity exists: compute the
@@ -427,7 +469,7 @@ impl Scheduler for Pigeon<'_> {
                             if rd.is_some() {
                                 ctx.constraint_unblock(job);
                             }
-                            launch(ctx, group, w as u32, job, dur);
+                            launch(ctx, g, group, w as u32, job, dur);
                         } else if let Some(w) =
                             claim(&mut g.reserved, catalog, rd, base + general_per_group)
                         {
@@ -435,7 +477,7 @@ impl Scheduler for Pigeon<'_> {
                                 ctx.constraint_unblock(job);
                             }
                             let w = (general_per_group + w) as u32;
-                            launch(ctx, group, w, job, dur);
+                            launch(ctx, g, group, w, job, dur);
                         } else {
                             if rd.is_some()
                                 && (g.general.free_count() > 0 || g.reserved.free_count() > 0)
@@ -452,7 +494,7 @@ impl Scheduler for Pigeon<'_> {
                         if rd.is_some() {
                             ctx.constraint_unblock(job);
                         }
-                        launch(ctx, group, w as u32, job, dur);
+                        launch(ctx, g, group, w as u32, job, dur);
                     } else {
                         if rd.is_some() && g.general.free_count() > 0 {
                             ctx.out.constraint_rejections += 1;
@@ -464,32 +506,61 @@ impl Scheduler for Pigeon<'_> {
                 }
                 ctx.pool.give(durs);
             }
-            Ev::Finish { group, worker, job } => {
+            Ev::Finish { group, worker, job, gen } => {
+                let g = &mut self.groups[group as usize];
+                let w = worker as usize;
+                if gen != g.gen[w] {
+                    return; // completion of a fault-killed incarnation
+                }
+                g.running[w] = None;
                 let d = ctx.net_delay();
                 ctx.out.breakdown.comm_s += d.as_secs();
                 ctx.push_after(d, Ev::Done { job });
+                if g.down[w] {
+                    // the node is down (drain): the task completed, but
+                    // the slot parks until NodeUp
+                    g.pending[w] = true;
+                    return;
+                }
                 self.dispatch_freed(group, worker, ctx);
             }
-            Ev::GangFinish { group, workers, job } => {
+            Ev::GangFinish { group, workers, job, gen } => {
+                {
+                    let g = &mut self.groups[group as usize];
+                    let anchor = workers[0] as usize;
+                    if gen != g.gen[anchor] {
+                        // a fault-killed incarnation: the crash sweep
+                        // already requeued the gang and parked its slots
+                        ctx.pool.give(workers);
+                        return;
+                    }
+                    g.running[anchor] = None;
+                }
                 let d = ctx.net_delay();
                 ctx.out.breakdown.comm_s += d.as_secs();
                 ctx.push_after(d, Ev::Done { job });
-                // atomic release: all member slots free together, then
+                // atomic release: all member slots free together (slots
+                // whose node has since gone down park for NodeUp), then
                 // one redispatch pass per freed slot — a freed slot may
                 // complete the co-residency a queued gang was missing
                 {
                     let g = &mut self.groups[group as usize];
                     for &w in &workers {
-                        g.general.set_free(w as usize);
+                        if g.down[w as usize] {
+                            g.pending[w as usize] = true;
+                        } else {
+                            g.general.set_free(w as usize);
+                        }
                     }
                 }
                 for &w in &workers {
                     // a slot may already be claimed again by a gang
                     // dispatched for an earlier member of this pass
-                    if !self.groups[group as usize].general.is_free(w as usize) {
+                    let g = &mut self.groups[group as usize];
+                    if g.down[w as usize] || !g.general.is_free(w as usize) {
                         continue;
                     }
-                    self.groups[group as usize].general.set_busy(w as usize);
+                    g.general.set_busy(w as usize);
                     self.dispatch_freed(group, w, ctx);
                 }
                 ctx.pool.give(workers);
@@ -498,6 +569,103 @@ impl Scheduler for Pigeon<'_> {
                 ctx.out.messages += 1;
                 ctx.task_done(job);
             }
+            Ev::Fault(kind) => match kind {
+                FaultKind::NodeDown { node, kill } => {
+                    ctx.flight(EvKind::FaultDown, Actor::Node(node), NONE, NONE, kill as u64);
+                    let now = ctx.now();
+                    let (nlo, nhi) = self.cfg.catalog.node_range(node);
+                    // the node's slots may straddle group boundaries;
+                    // slots past the grouped region (division remainder)
+                    // were never schedulable and are skipped
+                    let covered = self.groups.len() * self.per_group;
+                    for s in nlo..nhi.min(covered) {
+                        let gq = s / self.per_group;
+                        let w = s % self.per_group;
+                        let is_reserved = w >= self.general_per_group;
+                        let g = &mut self.groups[gq];
+                        g.down[w] = true;
+                        // park a free slot so nothing claims it while
+                        // down; it re-enters service at NodeUp
+                        let was_free = if is_reserved {
+                            g.reserved.set_busy(w - self.general_per_group)
+                        } else {
+                            g.general.set_busy(w)
+                        };
+                        if was_free {
+                            g.pending[w] = true;
+                        }
+                        if kill {
+                            if let Some(rt) = g.running[w].take() {
+                                g.gen[w] = g.gen[w].wrapping_add(1);
+                                let lost = now.saturating_sub(rt.started);
+                                ctx.flight(
+                                    EvKind::TaskKill,
+                                    Actor::Node(node),
+                                    rt.job,
+                                    NONE,
+                                    lost.as_micros(),
+                                );
+                                ctx.task_killed(rt.job, lost);
+                                // killed slots park for NodeUp: the
+                                // anchor's members list covers a gang's
+                                // claimed slots (anchor included)
+                                if rt.members.is_empty() {
+                                    g.pending[w] = true;
+                                } else {
+                                    for &mw in &rt.members {
+                                        g.pending[mw as usize] = true;
+                                    }
+                                }
+                                // requeue at the front: recovered work
+                                // re-places before newer arrivals (tasks
+                                // can never migrate groups — the Megha
+                                // asymmetry holds under faults too)
+                                let high = ctx.trace.jobs[rt.job as usize]
+                                    .class(self.cfg.sim.short_threshold)
+                                    == JobClass::Short;
+                                ctx.flight(
+                                    EvKind::Queue,
+                                    Actor::Group(gq as u32),
+                                    rt.job,
+                                    NONE,
+                                    high as u64,
+                                );
+                                if high {
+                                    g.hi_q.push_front((rt.job, rt.dur));
+                                } else {
+                                    g.lo_q.push_front((rt.job, rt.dur));
+                                }
+                            }
+                        }
+                        // drain (kill=false): running work survives to
+                        // completion and parks its slot via the down
+                        // check in Finish/GangFinish
+                    }
+                }
+                FaultKind::NodeUp { node } => {
+                    ctx.flight(EvKind::FaultUp, Actor::Node(node), NONE, NONE, 0);
+                    let (nlo, nhi) = self.cfg.catalog.node_range(node);
+                    let covered = self.groups.len() * self.per_group;
+                    for s in nlo..nhi.min(covered) {
+                        let gq = s / self.per_group;
+                        let w = s % self.per_group;
+                        self.groups[gq].down[w] = false;
+                    }
+                    // parked slots re-enter service: serve queued work
+                    // (killed tasks wait at the queue front) or go free
+                    for s in nlo..nhi.min(covered) {
+                        let gq = s / self.per_group;
+                        let w = s % self.per_group;
+                        if self.groups[gq].pending[w] {
+                            self.groups[gq].pending[w] = false;
+                            self.dispatch_freed(gq as u32, w as u32, ctx);
+                        }
+                    }
+                }
+                FaultKind::GmFail { .. } => {
+                    unreachable!("GM failures are not routed to Pigeon (no GMs)")
+                }
+            },
         }
     }
 }
@@ -534,6 +702,7 @@ impl Pigeon<'_> {
             hi_q,
             lo_q,
             hi_streak,
+            ..
         } = g;
         let next = if is_reserved {
             pop_first_servable(hi_q, general, demands, catalog, base, gw, true, &mut skipped)
@@ -586,13 +755,14 @@ impl Pigeon<'_> {
                         ctx.gang_unblock(job);
                     }
                 }
+                let g = &mut groups[group as usize];
                 if extra.is_empty() {
-                    launch(ctx, group, worker, job, dur);
+                    launch(ctx, g, group, worker, job, dur);
                 } else {
                     let mut members: Vec<u32> = ctx.pool.take();
                     members.push(worker);
                     members.extend(extra);
-                    launch_gang(ctx, group, members, job, dur);
+                    launch_gang(ctx, g, group, members, job, dur);
                 }
             }
             None => {
@@ -612,19 +782,46 @@ pub fn simulate(cfg: &PigeonConfig, trace: &Trace) -> RunOutcome {
 }
 
 /// Start a task on a (known-free) worker of `group`.
-fn launch(ctx: &mut SimCtx<'_, Ev>, group: u32, worker: u32, job: u32, dur: SimTime) {
+fn launch(ctx: &mut SimCtx<'_, Ev>, g: &mut Group, group: u32, worker: u32, job: u32, dur: SimTime) {
     ctx.out.tasks += 1;
     ctx.out.decisions += 1;
+    ctx.task_redispatched(job);
     ctx.flight(EvKind::Claim, Actor::Group(group), job, NONE, worker as u64);
-    ctx.push_after(dur, Ev::Finish { group, worker, job });
+    let w = worker as usize;
+    let gen = g.gen[w];
+    g.running[w] = Some(Running {
+        job,
+        dur,
+        started: ctx.now(),
+        members: Vec::new(),
+    });
+    ctx.push_after(dur, Ev::Finish { group, worker, job, gen });
 }
 
 /// Start a gang on known-claimed general workers of `group` (local ids).
-fn launch_gang(ctx: &mut SimCtx<'_, Ev>, group: u32, workers: Vec<u32>, job: u32, dur: SimTime) {
+fn launch_gang(
+    ctx: &mut SimCtx<'_, Ev>,
+    g: &mut Group,
+    group: u32,
+    workers: Vec<u32>,
+    job: u32,
+    dur: SimTime,
+) {
     ctx.out.tasks += 1;
     ctx.out.decisions += 1;
+    ctx.task_redispatched(job);
     ctx.flight(EvKind::Claim, Actor::Group(group), job, NONE, workers[0] as u64);
-    ctx.push_after(dur, Ev::GangFinish { group, workers, job });
+    // the anchor slot carries the gang's kill bookkeeping, members
+    // listing every claimed local slot (anchor included)
+    let anchor = workers[0] as usize;
+    let gen = g.gen[anchor];
+    g.running[anchor] = Some(Running {
+        job,
+        dur,
+        started: ctx.now(),
+        members: workers.clone(),
+    });
+    ctx.push_after(dur, Ev::GangFinish { group, workers, job, gen });
 }
 
 #[cfg(test)]
@@ -770,5 +967,93 @@ mod tests {
         let b = simulate(&cfg, &trace);
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(summarize_jobs(&a.jobs).p95, summarize_jobs(&b.jobs).p95);
+    }
+
+    #[test]
+    fn fault_empty_plan_bit_identical() {
+        use crate::sim::fault::FaultPlan;
+        let mut cfg = PigeonConfig::for_workers(250);
+        cfg.sim.seed = 17;
+        let trace = google_like(60, 250, 0.8, 18);
+        let a = simulate(&cfg, &trace);
+        cfg.sim.fault = Some(FaultPlan::empty());
+        let b = simulate(&cfg, &trace);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.decisions, b.decisions);
+        assert_eq!(b.tasks_killed, 0);
+    }
+
+    #[test]
+    fn fault_churn_conserves_tasks() {
+        use crate::sim::fault::{FaultEvent, FaultPlan};
+        let mut cfg = PigeonConfig::for_workers(100);
+        cfg.sim.seed = 33;
+        let mut evs = Vec::new();
+        for i in 0..10u32 {
+            let t0 = 2.0 + i as f64 * 2.5;
+            let node = i * 7 % 100;
+            evs.push(FaultEvent {
+                at: SimTime::from_secs(t0),
+                // mix crashes (running tasks killed) with drains
+                kind: FaultKind::NodeDown { node, kill: i % 3 != 0 },
+            });
+            evs.push(FaultEvent {
+                at: SimTime::from_secs(t0 + 2.0),
+                kind: FaultKind::NodeUp { node },
+            });
+        }
+        cfg.sim.fault = Some(FaultPlan::from_events(evs));
+        let trace = synthetic_fixed(50, 30, 1.0, 0.8, 100, 34);
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 30);
+        // conservation: every killed task runs again exactly once, in
+        // the group it was first split to (tasks never migrate)
+        assert_eq!(out.tasks, trace.n_tasks() as u64 + out.tasks_killed);
+        assert_eq!(out.tasks_rerun, out.tasks_killed);
+        assert!(out.tasks_killed > 0, "churn never killed a running task");
+        assert!(out.work_lost_s > 0.0);
+        assert_eq!(out.redispatch_s.len(), out.tasks_rerun as usize);
+    }
+
+    #[test]
+    fn fault_gang_churn_reseats_in_group() {
+        use crate::cluster::NodeCatalog;
+        use crate::sim::fault::{FaultEvent, FaultPlan};
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        let mut cfg = PigeonConfig::for_workers(300);
+        cfg.sim.seed = 35;
+        cfg.catalog = NodeCatalog::bimodal_gpu(300, 0.25);
+        let mut evs = Vec::new();
+        for (i, slot) in (0..300).step_by(40).enumerate() {
+            let node = cfg.catalog.node_of(slot);
+            let t0 = 3.0 + i as f64 * 1.5;
+            evs.push(FaultEvent {
+                at: SimTime::from_secs(t0),
+                kind: FaultKind::NodeDown { node, kill: true },
+            });
+            evs.push(FaultEvent {
+                at: SimTime::from_secs(t0 + 4.0),
+                kind: FaultKind::NodeUp { node },
+            });
+        }
+        cfg.sim.fault = Some(FaultPlan::from_events(evs));
+        let trace = synthetic_fixed_constrained(
+            12,
+            40,
+            1.0,
+            0.85,
+            300,
+            36,
+            0.3,
+            Demand::new(2, vec!["gpu".into()]),
+        );
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 40);
+        assert_eq!(out.tasks, trace.n_tasks() as u64 + out.tasks_killed);
+        assert_eq!(out.tasks_rerun, out.tasks_killed);
+        assert!(out.tasks_killed > 0, "no running task was ever killed");
     }
 }

@@ -32,8 +32,11 @@ use crate::cluster::hetero::{self, ResolvedDemand};
 use crate::config::SparrowConfig;
 use crate::metrics::RunOutcome;
 use crate::obs::flight::{Actor, EvKind, NONE};
-use crate::sched::common::{idle_coresidents, nack_recredit, ProbeWorker, TaskCursor, WState};
+use crate::sched::common::{
+    fault_reprobe, idle_coresidents, nack_recredit, ProbeWorker, Running, TaskCursor, WState,
+};
 use crate::sim::driver::{self, Scheduler, SimCtx};
+use crate::sim::fault::{FaultKind, FaultPlan};
 use crate::sim::time::SimTime;
 use crate::workload::Trace;
 
@@ -53,12 +56,24 @@ pub enum Ev {
     /// node → scheduler: the probed node could not seat the gang; the
     /// task's duration rides back for re-binding.
     GangNack { job: u32, dur: SimTime },
-    /// task execution finished at the worker.
-    Finish { worker: u32, job: u32 },
-    /// gang execution finished: all member slots free atomically.
-    GangFinish { workers: Vec<u32>, job: u32 },
+    /// task execution finished at the worker. `gen` is the slot's kill
+    /// generation at launch; a stale finish belongs to a fault-killed
+    /// incarnation and is dropped.
+    Finish { worker: u32, job: u32, gen: u32 },
+    /// gang execution finished: all member slots free atomically. `gen`
+    /// is the anchor slot's kill generation at launch.
+    GangFinish { workers: Vec<u32>, job: u32, gen: u32 },
     /// worker → scheduler: completion notice.
     Done { job: u32 },
+    /// Fault injection ([`crate::sim::fault`]): a node-level event,
+    /// delivered to the lane owning the node's worker block.
+    Fault(FaultKind),
+    /// node → scheduler: a bound task came back — its node crashed
+    /// (`ran`, with `lost` execution seconds thrown away) or its launch
+    /// reached a dead/reoccupied slot (`!ran`, nothing started). The
+    /// duration re-enters the job's `returned` pool and one replacement
+    /// probe goes out, like a gang NACK.
+    TaskLost { job: u32, dur: SimTime, lost: SimTime, ran: bool },
 }
 
 /// Sparrow's simulation state: a fleet of probe workers (reservation
@@ -171,11 +186,43 @@ pub(crate) fn handle_arrival(v: &mut SparrowView<'_>, jidx: u32, ctx: &mut SimCt
     ctx.pool.give(probes);
 }
 
+/// Push the fault plan's node events into the queue at plan time, one
+/// [`Ev::Fault`] per event whose node passes `owns_node` (the sharded
+/// driver injects each node's events into the lane owning its worker
+/// block; the unsharded scheduler owns everything). GM failures don't
+/// apply to Sparrow — the front-ends record the ignored axis on
+/// [`RunOutcome::gm_fail_ignored`].
+pub(crate) fn inject_plan(
+    plan: &FaultPlan,
+    owns_node: impl Fn(u32) -> bool,
+    ctx: &mut SimCtx<'_, Ev>,
+) {
+    for e in plan.events() {
+        match e.kind {
+            FaultKind::GmFail { .. } => {}
+            FaultKind::NodeDown { node, .. } | FaultKind::NodeUp { node } => {
+                if owns_node(node) {
+                    ctx.push(e.at, Ev::Fault(e.kind));
+                }
+            }
+        }
+    }
+}
+
 /// The single Sparrow event handler, shared by every execution mode.
 pub(crate) fn handle_event(v: &mut SparrowView<'_>, ev: Ev, ctx: &mut SimCtx<'_, Ev>) {
     match ev {
         Ev::Reserve { worker, job } => {
             let w = &mut v.workers[worker as usize - v.worker_lo];
+            if !w.up {
+                // probe landed on a down node: the reservation is
+                // discarded and one blind replacement probe re-draws
+                fault_reprobe(job, v.cfg.workers, v.cfg.n_schedulers, ctx, |t| Ev::Reserve {
+                    worker: t,
+                    job,
+                });
+                return;
+            }
             w.queue.push_back(job);
             if w.state == WState::Idle {
                 advance_worker(worker, v.workers, v.worker_lo, ctx);
@@ -218,6 +265,7 @@ pub(crate) fn handle_event(v: &mut SparrowView<'_>, ev: Ev, ctx: &mut SimCtx<'_,
                         ctx.out.decisions += 1;
                         ctx.constraint_unblock(job);
                         ctx.gang_unblock(job);
+                        ctx.task_redispatched(job);
                         let sched = Actor::Sched(job % v.cfg.n_schedulers as u32);
                         ctx.flight(EvKind::GangTry, sched, job, NONE, rd.gang_width() as u64);
                         ctx.send(Ev::GangTry {
@@ -230,23 +278,48 @@ pub(crate) fn handle_event(v: &mut SparrowView<'_>, ev: Ev, ctx: &mut SimCtx<'_,
                     }
                 }
             }
-            let dur = match v.jobs[j].bind_next(&ctx.trace.jobs[j]) {
-                Some((t, dur)) => {
+            let dur = match v.returned[j].pop() {
+                // a fault-returned scalar duration re-binds before the
+                // cursor advances (fault-free runs never populate
+                // `returned` for non-gang jobs, so this arm is inert
+                // without a fault plan)
+                Some(dur) => {
                     ctx.out.decisions += 1;
                     let sched = Actor::Sched(job % v.cfg.n_schedulers as u32);
-                    ctx.flight(EvKind::Bind, sched, job, t as u32, worker as u64);
+                    ctx.flight(EvKind::Bind, sched, job, NONE, worker as u64);
                     if v.demands[j].is_some() {
                         ctx.constraint_unblock(job);
                     }
+                    ctx.task_redispatched(job);
                     Some(dur)
                 }
-                None => None, // proactive cancellation: all tasks already bound
+                None => match v.jobs[j].bind_next(&ctx.trace.jobs[j]) {
+                    Some((t, dur)) => {
+                        ctx.out.decisions += 1;
+                        let sched = Actor::Sched(job % v.cfg.n_schedulers as u32);
+                        ctx.flight(EvKind::Bind, sched, job, t as u32, worker as u64);
+                        if v.demands[j].is_some() {
+                            ctx.constraint_unblock(job);
+                        }
+                        ctx.task_redispatched(job);
+                        Some(dur)
+                    }
+                    None => None, // proactive cancellation: all tasks already bound
+                },
             };
             ctx.send(Ev::Launch { worker, job, dur });
         }
         Ev::GangTry { worker, job, dur, k } => {
             let lw = worker as usize - v.worker_lo;
-            debug_assert!(v.workers[lw].state == WState::Waiting);
+            if !v.workers[lw].up || v.workers[lw].state != WState::Waiting {
+                // the probed anchor died (or was fault-reset) between
+                // its Ready and this try: refuse without touching the
+                // slot — the NACK re-credit keeps the task alive
+                ctx.out.gang_rejections += 1;
+                ctx.flight(EvKind::GangNack, Actor::Node(worker), job, NONE, k as u64);
+                ctx.send(Ev::GangNack { job, dur });
+                return;
+            }
             // gang: the probe discovers *this node's* occupancy only —
             // the probed anchor plus enough idle co-residents, or a
             // partial fit that forces a blind re-probe (the structural
@@ -260,12 +333,22 @@ pub(crate) fn handle_event(v: &mut SparrowView<'_>, ev: Ev, ctx: &mut SimCtx<'_,
                 k as usize,
                 &mut members,
             ) {
+                let now = ctx.now();
                 for &w in members.iter() {
                     v.workers[w as usize - v.worker_lo].state = WState::Busy { long: false };
                 }
+                // the anchor slot carries the gang's kill bookkeeping:
+                // one crash notice covers every co-resident member
+                let gen = v.workers[lw].gen;
+                v.workers[lw].running = Some(Running {
+                    job,
+                    dur,
+                    started: now,
+                    members: Vec::new(),
+                });
                 ctx.out.tasks += 1;
                 ctx.flight(EvKind::Bind, Actor::Node(worker), job, NONE, k as u64);
-                ctx.push_after(dur, Ev::GangFinish { workers: members, job });
+                ctx.push_after(dur, Ev::GangFinish { workers: members, job, gen });
             } else {
                 // refuse: free the anchor and hand the duration back —
                 // the scheduler re-binds it and sends one replacement
@@ -289,7 +372,15 @@ pub(crate) fn handle_event(v: &mut SparrowView<'_>, ev: Ev, ctx: &mut SimCtx<'_,
                 |w| Ev::Reserve { worker: w, job },
             );
         }
-        Ev::GangFinish { workers, job } => {
+        Ev::GangFinish { workers, job, gen } => {
+            let anchor = workers[0] as usize - v.worker_lo;
+            if gen != v.workers[anchor].gen {
+                // a fault-killed incarnation: the crash sweep already
+                // reset the member slots and re-credited the task
+                ctx.pool.give(workers);
+                return;
+            }
+            v.workers[anchor].running = None;
             let d = ctx.net_delay();
             ctx.out.breakdown.comm_s += d.as_secs();
             ctx.push_after(d, Ev::Done { job });
@@ -303,30 +394,139 @@ pub(crate) fn handle_event(v: &mut SparrowView<'_>, ev: Ev, ctx: &mut SimCtx<'_,
             ctx.pool.give(workers);
         }
         Ev::Launch { worker, job, dur } => {
-            let w = &mut v.workers[worker as usize - v.worker_lo];
-            debug_assert!(w.state == WState::Waiting);
+            let now = ctx.now();
+            let lw = worker as usize - v.worker_lo;
             match dur {
                 Some(dur) => {
-                    w.state = WState::Busy { long: false };
-                    ctx.out.tasks += 1;
-                    ctx.push_after(dur, Ev::Finish { worker, job });
+                    let w = &mut v.workers[lw];
+                    if w.up && w.state == WState::Waiting {
+                        w.state = WState::Busy { long: false };
+                        let gen = w.gen;
+                        w.running = Some(Running {
+                            job,
+                            dur,
+                            started: now,
+                            members: Vec::new(),
+                        });
+                        ctx.out.tasks += 1;
+                        ctx.push_after(dur, Ev::Finish { worker, job, gen });
+                    } else {
+                        // the bound task reached a dead, fault-reset, or
+                        // since-reoccupied slot: hand it back unstarted
+                        if w.state == WState::Waiting {
+                            w.state = WState::Idle;
+                        }
+                        ctx.send(Ev::TaskLost {
+                            job,
+                            dur,
+                            lost: SimTime::ZERO,
+                            ran: false,
+                        });
+                    }
                 }
                 None => {
-                    w.state = WState::Idle;
-                    advance_worker(worker, v.workers, v.worker_lo, ctx);
+                    let w = &mut v.workers[lw];
+                    if w.state == WState::Waiting {
+                        w.state = WState::Idle;
+                        if w.up {
+                            advance_worker(worker, v.workers, v.worker_lo, ctx);
+                        }
+                    }
                 }
             }
         }
-        Ev::Finish { worker, job } => {
+        Ev::Finish { worker, job, gen } => {
+            let lw = worker as usize - v.worker_lo;
+            if gen != v.workers[lw].gen {
+                return; // completion of a fault-killed incarnation
+            }
             let d = ctx.net_delay();
             ctx.out.breakdown.comm_s += d.as_secs();
             ctx.push_after(d, Ev::Done { job });
-            v.workers[worker as usize - v.worker_lo].state = WState::Idle;
+            v.workers[lw].running = None;
+            v.workers[lw].state = WState::Idle;
             advance_worker(worker, v.workers, v.worker_lo, ctx);
         }
         Ev::Done { job } => {
             ctx.out.messages += 1;
             ctx.task_done(job);
+        }
+        Ev::Fault(kind) => match kind {
+            FaultKind::NodeDown { node, kill } => {
+                ctx.flight(EvKind::FaultDown, Actor::Node(node), NONE, NONE, kill as u64);
+                let now = ctx.now();
+                let (nlo, nhi) = v.cfg.catalog.node_range(node);
+                for wi in nlo..nhi {
+                    let w = &mut v.workers[wi - v.worker_lo];
+                    w.up = false;
+                    // queued reservations are stranded: re-probe each
+                    // one somewhere else
+                    while let Some(job) = w.queue.pop_front() {
+                        fault_reprobe(job, v.cfg.workers, v.cfg.n_schedulers, ctx, |t| {
+                            Ev::Reserve { worker: t, job }
+                        });
+                    }
+                    if kill {
+                        match w.state {
+                            WState::Busy { .. } => {
+                                // a gang anchor's `running` covers every
+                                // co-resident member (all on this node);
+                                // member slots are Busy with no `running`
+                                // and are silently reset
+                                w.gen = w.gen.wrapping_add(1);
+                                w.state = WState::Idle;
+                                if let Some(rt) = w.running.take() {
+                                    let lost = now.saturating_sub(rt.started);
+                                    ctx.flight(
+                                        EvKind::TaskKill,
+                                        Actor::Node(node),
+                                        rt.job,
+                                        NONE,
+                                        lost.as_micros(),
+                                    );
+                                    ctx.send(Ev::TaskLost {
+                                        job: rt.job,
+                                        dur: rt.dur,
+                                        lost,
+                                        ran: true,
+                                    });
+                                }
+                            }
+                            // the pending Launch bounces via TaskLost
+                            WState::Waiting => w.state = WState::Idle,
+                            WState::Idle => {}
+                        }
+                    }
+                    // drain (kill=false): running work survives to
+                    // completion; a Waiting slot's pending Launch still
+                    // bounces because the slot is down
+                }
+            }
+            FaultKind::NodeUp { node } => {
+                ctx.flight(EvKind::FaultUp, Actor::Node(node), NONE, NONE, 0);
+                let (nlo, nhi) = v.cfg.catalog.node_range(node);
+                for wi in nlo..nhi {
+                    v.workers[wi - v.worker_lo].up = true;
+                }
+                // no slot states to repair: kills reset their slots at
+                // crash time, drained work finishes on its own, and new
+                // probes start landing again immediately
+            }
+            FaultKind::GmFail { .. } => {
+                unreachable!("GM failures are not routed to Sparrow (no GMs)")
+            }
+        },
+        Ev::TaskLost { job, dur, lost, ran } => {
+            if ran {
+                // a started task died with the node; bounced launches
+                // (`!ran`) never started and only need re-binding
+                ctx.task_killed(job, lost);
+            }
+            v.returned[job as usize].push(dur);
+            fault_reprobe(job, v.cfg.workers, v.cfg.n_schedulers, ctx, |t| Ev::Reserve {
+                worker: t,
+                job,
+            });
         }
     }
 }
@@ -351,6 +551,14 @@ impl Scheduler for Sparrow<'_> {
 
     fn name(&self) -> &'static str {
         "sparrow"
+    }
+
+    fn init(&mut self, ctx: &mut SimCtx<'_, Ev>) {
+        // plan-time fault injection: an empty plan pushes nothing, so
+        // fault-free runs stay bit-identical to the pre-fault scheduler
+        if let Some(plan) = &self.cfg.sim.fault {
+            inject_plan(plan, |_| true, ctx);
+        }
     }
 
     fn on_arrival(&mut self, jidx: u32, ctx: &mut SimCtx<'_, Ev>) {
@@ -494,5 +702,92 @@ mod tests {
         let b = simulate(&cfg, &trace);
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.messages, b.messages);
+    }
+
+    #[test]
+    fn fault_empty_plan_bit_identical() {
+        use crate::sim::fault::FaultPlan;
+        let mut cfg = SparrowConfig::for_workers(150);
+        cfg.sim.seed = 7;
+        let trace = synthetic_fixed(30, 25, 1.0, 0.7, 150, 8);
+        let a = simulate(&cfg, &trace);
+        cfg.sim.fault = Some(FaultPlan::empty());
+        let b = simulate(&cfg, &trace);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.decisions, b.decisions);
+        assert_eq!(b.tasks_killed, 0);
+    }
+
+    #[test]
+    fn fault_churn_conserves_tasks() {
+        use crate::sim::fault::{FaultEvent, FaultPlan};
+        let mut cfg = SparrowConfig::for_workers(100);
+        cfg.sim.seed = 31;
+        let mut evs = Vec::new();
+        for i in 0..10u32 {
+            let t0 = 2.0 + i as f64 * 2.5;
+            let node = i * 7 % 100;
+            evs.push(FaultEvent {
+                at: SimTime::from_secs(t0),
+                // mix crashes (running tasks killed) with drains
+                kind: FaultKind::NodeDown { node, kill: i % 3 != 0 },
+            });
+            evs.push(FaultEvent {
+                at: SimTime::from_secs(t0 + 2.0),
+                kind: FaultKind::NodeUp { node },
+            });
+        }
+        cfg.sim.fault = Some(FaultPlan::from_events(evs));
+        let trace = synthetic_fixed(50, 30, 1.0, 0.8, 100, 32);
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 30);
+        // conservation: every killed task runs again exactly once
+        assert_eq!(out.tasks, trace.n_tasks() as u64 + out.tasks_killed);
+        assert_eq!(out.tasks_rerun, out.tasks_killed);
+        assert!(out.tasks_killed > 0, "churn never killed a running task");
+        assert!(out.work_lost_s > 0.0);
+        assert_eq!(out.redispatch_s.len(), out.tasks_rerun as usize);
+    }
+
+    #[test]
+    fn fault_gang_churn_reseats_without_losing_tasks() {
+        use crate::cluster::NodeCatalog;
+        use crate::sim::fault::{FaultEvent, FaultPlan};
+        use crate::workload::synthetic::synthetic_fixed_constrained;
+        use crate::workload::Demand;
+        let mut cfg = SparrowConfig::for_workers(240);
+        cfg.sim.seed = 23;
+        cfg.catalog = NodeCatalog::bimodal_gpu(240, 0.25);
+        let mut evs = Vec::new();
+        for (i, slot) in (0..240).step_by(30).enumerate() {
+            let node = cfg.catalog.node_of(slot) as u32;
+            let t0 = 3.0 + i as f64 * 1.5;
+            evs.push(FaultEvent {
+                at: SimTime::from_secs(t0),
+                kind: FaultKind::NodeDown { node, kill: true },
+            });
+            evs.push(FaultEvent {
+                at: SimTime::from_secs(t0 + 4.0),
+                kind: FaultKind::NodeUp { node },
+            });
+        }
+        cfg.sim.fault = Some(FaultPlan::from_events(evs));
+        let trace = synthetic_fixed_constrained(
+            6,
+            40,
+            1.0,
+            0.9,
+            240,
+            24,
+            0.5,
+            Demand::new(2, vec!["gpu".into()]),
+        );
+        let out = simulate(&cfg, &trace);
+        assert_eq!(out.jobs.len(), 40);
+        assert_eq!(out.tasks, trace.n_tasks() as u64 + out.tasks_killed);
+        assert_eq!(out.tasks_rerun, out.tasks_killed);
+        assert!(out.tasks_killed > 0, "no running task was ever killed");
     }
 }

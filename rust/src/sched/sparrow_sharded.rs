@@ -30,6 +30,7 @@ use crate::config::SparrowConfig;
 use crate::metrics::RunOutcome;
 use crate::sched::common::{ProbeWorker, TaskCursor};
 use crate::sim::driver::{self, ShardSim, SimCtx};
+use crate::sim::fault::FaultKind;
 use crate::sim::time::SimTime;
 use crate::workload::Trace;
 
@@ -63,8 +64,22 @@ impl SparrowShard<'_> {
 impl ShardSim for SparrowShard<'_> {
     type Ev = Ev;
 
-    fn init(&mut self, _ctx: &mut SimCtx<'_, Ev>) {
-        // Sparrow has no recurring events — workers react to probes only
+    fn init(&mut self, ctx: &mut SimCtx<'_, Ev>) {
+        // Sparrow has no recurring events — workers react to probes
+        // only. Fault-plan node events are injected at plan time into
+        // the lane owning the node's worker block (an empty plan pushes
+        // nothing, keeping fault-free lanes bit-identical).
+        if let Some(plan) = &self.cfg.sim.fault {
+            let (lo, hi) = (self.worker_lo, self.worker_lo + self.workers.len());
+            sparrow::inject_plan(
+                plan,
+                |node| {
+                    let (nlo, nhi) = self.cfg.catalog.node_range(node);
+                    lo <= nlo && nhi <= hi
+                },
+                ctx,
+            );
+        }
     }
 
     fn on_arrival(&mut self, job: u32, ctx: &mut SimCtx<'_, Ev>) {
@@ -91,9 +106,18 @@ fn home_shard(plan: &ShardPlan, catalog: &NodeCatalog, n_schedulers: usize, ev: 
         Ev::GangFinish { workers, .. } => {
             plan.shard_of_lm(catalog.node_of(workers[0] as usize) as usize)
         }
-        Ev::Ready { job, .. } | Ev::GangNack { job, .. } | Ev::Done { job } => {
-            plan.shard_of_gm(*job as usize % n_schedulers)
-        }
+        Ev::Ready { job, .. }
+        | Ev::GangNack { job, .. }
+        | Ev::Done { job }
+        | Ev::TaskLost { job, .. } => plan.shard_of_gm(*job as usize % n_schedulers),
+        // node fault events home on the lane owning the node's block
+        // (nodes never straddle shard cuts)
+        Ev::Fault(kind) => match kind {
+            FaultKind::NodeDown { node, .. } | FaultKind::NodeUp { node } => {
+                plan.shard_of_lm(*node as usize)
+            }
+            FaultKind::GmFail { .. } => unreachable!("GmFail is never injected into Sparrow"),
+        },
     }
 }
 

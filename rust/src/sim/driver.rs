@@ -190,9 +190,12 @@ impl<E> SimCtx<'_, E> {
         self.push(at, ev);
     }
 
-    /// Draw one network latency from the run's model.
+    /// Draw one network latency from the run's model at the current sim
+    /// time (time matters only to the fault-injection `Degraded` overlay;
+    /// every other model ignores it).
     pub fn net_delay(&mut self) -> SimTime {
-        self.net.delay(self.rng)
+        let now = self.q.now();
+        self.net.delay_at(now, self.rng)
     }
 
     /// Send `ev` over the network: one latency draw, one message counted,
@@ -207,6 +210,34 @@ impl<E> SimCtx<'_, E> {
     pub fn task_done(&mut self, job: u32) -> bool {
         let now = self.q.now();
         self.tracker.task_done(self.trace, job as usize, now)
+    }
+
+    /// Record one fault-killed task of `job` that had accrued `lost`
+    /// task-seconds of execution. Must be called on the lane that owns
+    /// the job's completions (the same lane that will later call
+    /// [`task_redispatched`](Self::task_redispatched)), so the per-job
+    /// kill FIFO and [`crate::metrics::JobRecord::killed`] land on the
+    /// tracker whose record survives the shard merge.
+    pub fn task_killed(&mut self, job: u32, lost: SimTime) {
+        let now = self.q.now();
+        self.out.tasks_killed += 1;
+        self.out.work_lost_s += lost.as_secs();
+        self.tracker.task_killed(job as usize, now);
+    }
+
+    /// Pair a successful placement of `job` with its oldest outstanding
+    /// kill, if any, recording the time-to-redispatch sample. Call at
+    /// every commit point on the job's owning lane; a no-op (single
+    /// predictable branch) while no kill is pending, so fault-free runs
+    /// are untouched.
+    pub fn task_redispatched(&mut self, job: u32) {
+        let now = self.q.now();
+        if let Some(s) = self.tracker.task_redispatched(job as usize, now) {
+            self.out.tasks_rerun += 1;
+            self.out.redispatch_s.push(s);
+            let us = (s * 1e6) as u64;
+            self.flight(EvKind::Redispatch, Actor::Driver(0), job, NONE, us);
+        }
     }
 
     /// Mark `job` constraint-blocked as of now (idempotent): a placement
@@ -363,6 +394,10 @@ pub fn run_with_pools<S: Scheduler>(
     outcome.decisions = out.decisions;
     outcome.constraint_rejections = out.constraint_rejections;
     outcome.gang_rejections = out.gang_rejections;
+    outcome.tasks_killed = out.tasks_killed;
+    outcome.tasks_rerun = out.tasks_rerun;
+    outcome.work_lost_s = out.work_lost_s;
+    outcome.redispatch_s = out.redispatch_s;
     outcome.breakdown = out.breakdown;
     outcome.events = q.popped();
     outcome.sim_wall_s = sim_wall_s;
@@ -880,6 +915,10 @@ pub fn run_sharded<S: ShardSim>(
         totals.decisions += lane.out.decisions;
         totals.constraint_rejections += lane.out.constraint_rejections;
         totals.gang_rejections += lane.out.gang_rejections;
+        totals.tasks_killed += lane.out.tasks_killed;
+        totals.tasks_rerun += lane.out.tasks_rerun;
+        totals.work_lost_s += lane.out.work_lost_s;
+        totals.redispatch_s.extend(lane.out.redispatch_s);
         totals.breakdown.queue_scheduler_s += lane.out.breakdown.queue_scheduler_s;
         totals.breakdown.proc_s += lane.out.breakdown.proc_s;
         totals.breakdown.comm_s += lane.out.breakdown.comm_s;
@@ -895,6 +934,10 @@ pub fn run_sharded<S: ShardSim>(
     outcome.decisions = totals.decisions;
     outcome.constraint_rejections = totals.constraint_rejections;
     outcome.gang_rejections = totals.gang_rejections;
+    outcome.tasks_killed = totals.tasks_killed;
+    outcome.tasks_rerun = totals.tasks_rerun;
+    outcome.work_lost_s = totals.work_lost_s;
+    outcome.redispatch_s = totals.redispatch_s;
     outcome.breakdown = totals.breakdown;
     outcome.events = events;
     outcome.sim_wall_s = sim_wall_s;

@@ -1,0 +1,392 @@
+//! Deterministic fault injection: worker/node churn, correlated rack
+//! outages, and the degraded-network window spec.
+//!
+//! A [`FaultSpec`] is a *scenario axis* — a handful of rates and knobs —
+//! and a [`FaultPlan`] is its per-run compilation: a time-sorted list of
+//! [`FaultEvent`]s, produced by a pure function of `(spec, catalog,
+//! seed)`. The plan is compiled with its **own** RNG stream
+//! (`seed ^ FAULT_SEED_SALT`), so compiling a plan never perturbs the
+//! simulation's random draws: a run with an *empty* plan is bit-identical
+//! to a run with no plan at all, and that inertness is what every
+//! pre-fault golden in `tests/driver_invariants.rs` /
+//! `tests/shard_identity.rs` rides on.
+//!
+//! Determinism under sharding: schedulers inject the plan's events at
+//! `init` time into the event queue of the lane that *owns* the faulted
+//! state (the node's worker shard; Megha additionally fans a node event
+//! out per overlapping LM). Fault events therefore never cross shards
+//! in flight — only their *consequences* (kill notices, re-credit
+//! probes) do, as ordinary net-delayed messages ≥ the epoch window, so
+//! threaded ≡ sequential bit-identity holds with faults enabled.
+//!
+//! Liveness: compiled plans always heal. Every `NodeDown` is paired with
+//! a `NodeUp` after `downtime_s`, and compilation caps the concurrently
+//! down fraction of the cluster (`MAX_DOWN_FRAC`), so a run can always
+//! complete — a plan that could retire the whole DC forever would turn
+//! the completion invariant (`JobTracker` panics on incomplete jobs)
+//! into a scenario bug instead of a scheduler bug.
+
+use crate::cluster::NodeCatalog;
+use crate::sim::net::NetModel;
+use crate::sim::time::SimTime;
+use crate::util::rng::Rng;
+
+/// Salt folded into the run seed for the plan-compilation RNG stream.
+const FAULT_SEED_SALT: u64 = 0xFA17_FA17_FA17_FA17;
+
+/// Largest fraction of the cluster's nodes allowed down at once.
+const MAX_DOWN_FRAC: f64 = 0.25;
+
+/// One kind of injected fault, the `Ev::Fault(..)` payload every
+/// scheduler threads through its event enum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A node leaves the cluster. `kill = true` is a crash: running
+    /// tasks are lost and must be re-dispatched; `kill = false` is a
+    /// drain: the node stops accepting work, running tasks finish.
+    NodeDown { node: u32, kill: bool },
+    /// A previously down node rejoins, empty and idle.
+    NodeUp { node: u32 },
+    /// A Megha global manager loses its in-memory view (§3.5) — the
+    /// generalization of the legacy `Ev::GmFail`. Ignored by the
+    /// schedulers that have no GMs.
+    GmFail { gm: u32 },
+}
+
+/// A fault at a point in simulated time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at: SimTime,
+    pub kind: FaultKind,
+}
+
+/// Degraded-network window: between `from_s` and `until_s` every drawn
+/// delay is multiplied by `factor` (a partition-ish slowdown — the
+/// affected traffic crawls but is never dropped, which keeps the
+/// sharded driver's lookahead window intact), and each draw additionally
+/// becomes a heavy-tail straggler with probability `tail_ppm` / 1e6,
+/// multiplying by `tail_factor` on top. Applied by wrapping the run's
+/// [`NetModel`] in [`NetModel::Degraded`]; `min_delay` is the base
+/// model's (factors only inflate), so the epoch window survives.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetDegrade {
+    pub from_s: f64,
+    pub until_s: f64,
+    /// Delay multiplier inside the window (≥ 1).
+    pub factor: u32,
+    /// Per-draw straggler probability in parts-per-million.
+    pub tail_ppm: u32,
+    /// Extra multiplier a straggler draw suffers (≥ 1).
+    pub tail_factor: u32,
+}
+
+impl NetDegrade {
+    /// Wrap `base` in the degraded overlay this spec describes.
+    pub fn wrap(&self, base: NetModel) -> NetModel {
+        NetModel::Degraded {
+            base: Box::new(base),
+            from: SimTime::from_secs(self.from_s),
+            until: SimTime::from_secs(self.until_s),
+            factor: self.factor.max(1),
+            tail_ppm: self.tail_ppm,
+            tail_factor: self.tail_factor.max(1),
+        }
+    }
+}
+
+/// Scenario-level fault axes. `Default` is the inert spec: zero rates
+/// compile to an empty plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Node churn events per simulated hour per 1000 workers.
+    pub churn_per_khour: f64,
+    /// Seconds a churned node stays down before rejoining.
+    pub downtime_s: f64,
+    /// Fraction of churn events that drain instead of crash.
+    pub drain_frac: f64,
+    /// Correlated whole-rack outages (every node of a rack crashes at
+    /// once) — the rack-tiered catalog's failure mode.
+    pub rack_outages: usize,
+    /// Injection horizon in simulated seconds: all faults land in
+    /// `[0, horizon_s)`; churn times are drawn uniformly over it.
+    pub horizon_s: f64,
+    /// Optional degraded-network window (partition + stragglers).
+    pub degrade: Option<NetDegrade>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            churn_per_khour: 0.0,
+            downtime_s: 60.0,
+            drain_frac: 0.0,
+            rack_outages: 0,
+            horizon_s: 300.0,
+            degrade: None,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Whether this spec compiles to an empty plan and no net overlay.
+    pub fn is_inert(&self) -> bool {
+        self.churn_per_khour <= 0.0 && self.rack_outages == 0 && self.degrade.is_none()
+    }
+}
+
+/// A compiled, time-sorted fault schedule for one run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty (inert) plan.
+    pub fn empty() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// All events, ascending by `(at, kind order of emission)`.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Build a plan directly from events (tests, hand-written
+    /// scenarios). Sorted into canonical order.
+    pub fn from_events(mut events: Vec<FaultEvent>) -> FaultPlan {
+        events.sort_by_key(|e| (e.at, fault_sort_key(&e.kind)));
+        FaultPlan { events }
+    }
+
+    /// Compile `spec` against a catalog. Pure in `(spec, catalog,
+    /// seed)`; the RNG stream is salted so compilation is invisible to
+    /// the simulation's own draws. Every `NodeDown` gets a matching
+    /// `NodeUp` `downtime_s` later; a node already down at a drawn time
+    /// is skipped, as is any draw that would push the down fraction
+    /// past [`MAX_DOWN_FRAC`].
+    pub fn compile(spec: &FaultSpec, catalog: &NodeCatalog, seed: u64) -> FaultPlan {
+        if spec.is_inert() || spec.churn_per_khour <= 0.0 && spec.rack_outages == 0 {
+            return FaultPlan::empty();
+        }
+        let mut rng = Rng::new(seed ^ FAULT_SEED_SALT);
+        let n_nodes = catalog.n_nodes();
+        let n_workers = catalog.len();
+        let horizon = spec.horizon_s.max(1.0);
+        let downtime = SimTime::from_secs(spec.downtime_s.max(1.0));
+        let max_down = ((n_nodes as f64 * MAX_DOWN_FRAC) as usize).max(1);
+
+        // draw candidate (time, node, kill) churn events, then rack
+        // outages as bursts of co-timed crashes over a rack's node range
+        let n_churn =
+            (spec.churn_per_khour * (n_workers as f64 / 1000.0) * (horizon / 3600.0)).round()
+                as usize;
+        let mut candidates: Vec<(SimTime, u32, bool)> = (0..n_churn)
+            .map(|_| {
+                let at = SimTime::from_secs(rng.uniform(0.0, horizon));
+                let node = rng.below(n_nodes) as u32;
+                let kill = rng.f64() >= spec.drain_frac;
+                (at, node, kill)
+            })
+            .collect();
+        for _ in 0..spec.rack_outages {
+            let at = SimTime::from_secs(rng.uniform(0.0, horizon));
+            // a rack is a contiguous RACK-slot stripe of the catalog
+            // (`NodeCatalog::rack_tiered`); derive its node range from
+            // the stripe's first slot
+            let n_racks = n_workers.div_ceil(crate::cluster::hetero::RACK).max(1);
+            let rack = rng.below(n_racks);
+            let lo_slot = rack * crate::cluster::hetero::RACK;
+            let hi_slot = (lo_slot + crate::cluster::hetero::RACK).min(n_workers);
+            let lo_node = catalog.node_of(lo_slot);
+            let hi_node = catalog.node_of(hi_slot - 1);
+            for node in lo_node..=hi_node {
+                candidates.push((at, node, true));
+            }
+        }
+        candidates.sort_by_key(|&(at, node, _)| (at, node));
+
+        // sweep in time order, rejecting draws on already-down nodes and
+        // draws that would exceed the concurrent-down cap
+        let mut down_until: Vec<SimTime> = vec![SimTime::ZERO; n_nodes];
+        let mut events = Vec::with_capacity(candidates.len() * 2);
+        for (at, node, kill) in candidates {
+            if down_until[node as usize] > at {
+                continue;
+            }
+            let concurrent = down_until.iter().filter(|&&t| t > at).count();
+            if concurrent >= max_down {
+                continue;
+            }
+            let up_at = at + downtime;
+            down_until[node as usize] = up_at;
+            events.push(FaultEvent {
+                at,
+                kind: FaultKind::NodeDown { node, kill },
+            });
+            events.push(FaultEvent {
+                at: up_at,
+                kind: FaultKind::NodeUp { node },
+            });
+        }
+        FaultPlan::from_events(events)
+    }
+}
+
+/// Canonical intra-timestamp ordering so `from_events` is deterministic
+/// regardless of emission order: downs before ups before GM failures,
+/// then by entity id.
+fn fault_sort_key(k: &FaultKind) -> (u8, u32) {
+    match *k {
+        FaultKind::NodeDown { node, .. } => (0, node),
+        FaultKind::NodeUp { node } => (1, node),
+        FaultKind::GmFail { gm } => (2, gm),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(churn: f64) -> FaultSpec {
+        FaultSpec {
+            churn_per_khour: churn,
+            downtime_s: 30.0,
+            horizon_s: 600.0,
+            ..FaultSpec::default()
+        }
+    }
+
+    #[test]
+    fn fault_empty_spec_compiles_to_empty_plan() {
+        let cat = NodeCatalog::uniform(400);
+        let plan = FaultPlan::compile(&FaultSpec::default(), &cat, 7);
+        assert!(plan.is_empty());
+        assert!(FaultSpec::default().is_inert());
+    }
+
+    #[test]
+    fn fault_plan_is_deterministic_and_sorted() {
+        let cat = NodeCatalog::rack_tiered(640, 0.25);
+        let mut s = spec(40.0);
+        s.rack_outages = 1;
+        let a = FaultPlan::compile(&s, &cat, 13);
+        let b = FaultPlan::compile(&s, &cat, 13);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        for w in a.events().windows(2) {
+            assert!(
+                (w[0].at, fault_sort_key(&w[0].kind)) <= (w[1].at, fault_sort_key(&w[1].kind))
+            );
+        }
+        // a different seed is a different plan
+        let c = FaultPlan::compile(&s, &cat, 14);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn fault_every_down_heals_and_never_overlaps() {
+        let cat = NodeCatalog::uniform(2000);
+        let plan = FaultPlan::compile(&spec(80.0), &cat, 5);
+        assert!(!plan.is_empty());
+        let mut down: Vec<bool> = vec![false; cat.n_nodes()];
+        let mut downs = 0usize;
+        let mut ups = 0usize;
+        for e in plan.events() {
+            match e.kind {
+                FaultKind::NodeDown { node, .. } => {
+                    assert!(!down[node as usize], "node {node} went down twice");
+                    down[node as usize] = true;
+                    downs += 1;
+                }
+                FaultKind::NodeUp { node } => {
+                    assert!(down[node as usize], "node {node} came up while up");
+                    down[node as usize] = false;
+                    ups += 1;
+                }
+                FaultKind::GmFail { .. } => {}
+            }
+        }
+        assert_eq!(downs, ups, "every down must be paired with an up");
+        assert!(down.iter().all(|&d| !d), "plan must end fully healed");
+    }
+
+    #[test]
+    fn fault_concurrent_down_fraction_is_capped() {
+        let cat = NodeCatalog::uniform(320); // 320 nodes (uniform = 1 slot/node)
+        let mut s = spec(100_000.0); // absurd churn; the cap must bite
+        s.downtime_s = 600.0;
+        s.horizon_s = 100.0;
+        let plan = FaultPlan::compile(&s, &cat, 3);
+        let cap = ((cat.n_nodes() as f64 * MAX_DOWN_FRAC) as usize).max(1);
+        let mut live_down = 0usize;
+        let mut peak = 0usize;
+        for e in plan.events() {
+            match e.kind {
+                FaultKind::NodeDown { .. } => {
+                    live_down += 1;
+                    peak = peak.max(live_down);
+                }
+                FaultKind::NodeUp { .. } => live_down -= 1,
+                FaultKind::GmFail { .. } => {}
+            }
+        }
+        assert!(peak <= cap, "peak {peak} exceeds cap {cap}");
+        assert!(peak > 0);
+    }
+
+    #[test]
+    fn fault_rack_outage_covers_whole_rack() {
+        let cat = NodeCatalog::rack_tiered(256, 0.25);
+        let mut s = FaultSpec {
+            rack_outages: 1,
+            downtime_s: 20.0,
+            horizon_s: 100.0,
+            ..FaultSpec::default()
+        };
+        s.churn_per_khour = 0.0;
+        let plan = FaultPlan::compile(&s, &cat, 9);
+        // all downs of the burst share one timestamp and tile a
+        // contiguous node range
+        let downs: Vec<&FaultEvent> = plan
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::NodeDown { .. }))
+            .collect();
+        assert!(!downs.is_empty());
+        assert!(downs.iter().all(|e| e.at == downs[0].at));
+        let mut nodes: Vec<u32> = downs
+            .iter()
+            .map(|e| match e.kind {
+                FaultKind::NodeDown { node, .. } => node,
+                _ => unreachable!(),
+            })
+            .collect();
+        nodes.sort_unstable();
+        for w in nodes.windows(2) {
+            assert_eq!(w[1], w[0] + 1, "rack outage must hit contiguous nodes");
+        }
+        // the burst's slots cover exactly one RACK stripe
+        let lo = cat.node_range(nodes[0]).0;
+        let hi = cat.node_range(*nodes.last().unwrap()).1;
+        assert_eq!(lo % crate::cluster::hetero::RACK, 0);
+        assert!(hi - lo <= crate::cluster::hetero::RACK);
+    }
+
+    #[test]
+    fn fault_degrade_wrap_keeps_min_delay() {
+        let d = NetDegrade {
+            from_s: 10.0,
+            until_s: 20.0,
+            factor: 8,
+            tail_ppm: 1000,
+            tail_factor: 50,
+        };
+        let base = NetModel::paper_default();
+        let wrapped = d.wrap(base.clone());
+        assert_eq!(wrapped.min_delay(), base.min_delay());
+    }
+}

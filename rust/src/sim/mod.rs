@@ -10,6 +10,7 @@
 
 pub mod driver;
 pub mod event;
+pub mod fault;
 pub mod net;
 pub mod time;
 

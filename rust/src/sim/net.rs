@@ -13,6 +13,23 @@ pub enum NetModel {
     Constant(SimTime),
     /// Uniform jitter in [base, base + jitter].
     Jittered { base: SimTime, jitter: SimTime },
+    /// Degraded overlay (`sim::fault`): inside the window `[from,
+    /// until)` every delay drawn from `base` is multiplied by `factor`
+    /// (a network partition that slows traffic to a crawl rather than
+    /// dropping it), and each in-window draw additionally becomes a
+    /// heavy-tail straggler with probability `tail_ppm` / 1e6,
+    /// multiplying by `tail_factor` on top. Both factors are ≥ 1, so
+    /// delays only ever inflate — [`min_delay`](Self::min_delay) stays
+    /// the base model's and the sharded driver's lookahead window
+    /// survives the outage.
+    Degraded {
+        base: Box<NetModel>,
+        from: SimTime,
+        until: SimTime,
+        factor: u32,
+        tail_ppm: u32,
+        tail_factor: u32,
+    },
 }
 
 impl NetModel {
@@ -20,12 +37,44 @@ impl NetModel {
         NetModel::Constant(SimTime::from_millis(0.5))
     }
 
+    /// Time-blind delay draw. For [`Degraded`](Self::Degraded) this is
+    /// the out-of-window (base) behavior — callers with a clock use
+    /// [`delay_at`](Self::delay_at).
     pub fn delay(&self, rng: &mut Rng) -> SimTime {
         match self {
             NetModel::Constant(d) => *d,
             NetModel::Jittered { base, jitter } => {
                 *base + SimTime::from_micros(rng.below(jitter.as_micros() as usize + 1) as u64)
             }
+            NetModel::Degraded { base, .. } => base.delay(rng),
+        }
+    }
+
+    /// Delay draw at simulated time `now`. Identical to
+    /// [`delay`](Self::delay) for the time-invariant models; the
+    /// [`Degraded`](Self::Degraded) overlay inflates in-window draws.
+    /// The straggler coin is flipped only inside the window, so the RNG
+    /// stream outside it is bit-identical to the base model's.
+    pub fn delay_at(&self, now: SimTime, rng: &mut Rng) -> SimTime {
+        match self {
+            NetModel::Degraded {
+                base,
+                from,
+                until,
+                factor,
+                tail_ppm,
+                tail_factor,
+            } => {
+                let d = base.delay_at(now, rng);
+                if now >= *from && now < *until {
+                    let tail = *tail_ppm > 0 && rng.below(1_000_000) < *tail_ppm as usize;
+                    let mult = *factor as u64 * if tail { *tail_factor as u64 } else { 1 };
+                    SimTime::from_micros(d.as_micros().saturating_mul(mult.max(1)))
+                } else {
+                    d
+                }
+            }
+            _ => self.delay(rng),
         }
     }
 
@@ -33,11 +82,14 @@ impl NetModel {
     /// uses it as its conservative lookahead window: every cross-shard
     /// message is delivered at least this far in the future, so events
     /// inside one epoch window can be executed per-shard without ever
-    /// seeing a message from another shard's same-window activity.
+    /// seeing a message from another shard's same-window activity. A
+    /// [`Degraded`](Self::Degraded) overlay only multiplies delays up,
+    /// so its floor is the base model's.
     pub fn min_delay(&self) -> SimTime {
         match self {
             NetModel::Constant(d) => *d,
             NetModel::Jittered { base, .. } => *base,
+            NetModel::Degraded { base, .. } => base.min_delay(),
         }
     }
 }
@@ -53,6 +105,45 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(m.delay(&mut r), SimTime::from_millis(0.5));
         }
+    }
+
+    #[test]
+    fn fault_degraded_inflates_only_inside_window() {
+        let m = NetModel::Degraded {
+            base: Box::new(NetModel::paper_default()),
+            from: SimTime::from_secs(10.0),
+            until: SimTime::from_secs(20.0),
+            factor: 8,
+            tail_ppm: 0,
+            tail_factor: 1,
+        };
+        let mut r = Rng::new(3);
+        assert_eq!(m.delay_at(SimTime::from_secs(5.0), &mut r), SimTime::from_millis(0.5));
+        assert_eq!(m.delay_at(SimTime::from_secs(15.0), &mut r), SimTime::from_millis(4.0));
+        assert_eq!(m.delay_at(SimTime::from_secs(25.0), &mut r), SimTime::from_millis(0.5));
+        assert_eq!(m.min_delay(), SimTime::from_millis(0.5));
+    }
+
+    #[test]
+    fn fault_degraded_stragglers_are_heavy_tailed() {
+        let m = NetModel::Degraded {
+            base: Box::new(NetModel::paper_default()),
+            from: SimTime::ZERO,
+            until: SimTime::from_secs(1.0),
+            factor: 1,
+            tail_ppm: 500_000, // half the draws straggle
+            tail_factor: 100,
+        };
+        let mut r = Rng::new(4);
+        let mut slow = 0;
+        for _ in 0..1000 {
+            let d = m.delay_at(SimTime::from_secs(0.5), &mut r);
+            if d > SimTime::from_millis(1.0) {
+                assert_eq!(d, SimTime::from_millis(50.0));
+                slow += 1;
+            }
+        }
+        assert!((300..700).contains(&slow), "{slow} stragglers of 1000");
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::obs::flight::FlightStats;
 use crate::runtime::match_engine::RustMatchEngine;
 use crate::sched;
 use crate::sched::megha::FailurePlan;
+use crate::sim::fault::{FaultPlan, FaultSpec, NetDegrade};
 use crate::sim::net::NetModel;
 use crate::sim::time::SimTime;
 use crate::util::stats::{mean, percentile};
@@ -242,6 +243,14 @@ pub struct Scenario {
     /// schedule is bit-identical either way
     /// (`tests/driver_invariants.rs`).
     pub flight: bool,
+    /// Fault-injection axes ([`FaultSpec`]): node churn, correlated rack
+    /// outages, and the degraded-network window. Compiled per run into a
+    /// [`FaultPlan`] against each framework's *own* catalog with the
+    /// run's seed, so the schedule of faults is deterministic and paired
+    /// across seeds (not across frameworks — they round DC sizes
+    /// differently). `None` (and the inert default spec) runs
+    /// bit-identical to a fault-free scenario.
+    pub fault: Option<FaultSpec>,
 }
 
 impl Scenario {
@@ -307,7 +316,7 @@ impl Scenario {
 /// Preset names accepted by [`preset`] (surfaced by `--help` and by the
 /// unknown-preset error).
 pub fn preset_names() -> &'static [&'static str] {
-    &["scale10", "scale100", "hetero", "gang"]
+    &["scale10", "scale100", "hetero", "gang", "churn"]
 }
 
 /// Named scenario presets.
@@ -332,6 +341,11 @@ pub fn preset_names() -> &'static [&'static str] {
 ///   rack-tiered capacity-4 nodes; the constrained fraction is kept
 ///   modest so gangs contend for co-residency (the effect under test)
 ///   rather than for raw matching capacity.
+/// * `churn` — the fault-injection grid (`Scenario::fault`): node churn
+///   rate × drain fraction, one correlated rack-outage cell on the
+///   rack-tiered catalog, and one degraded-network (partition +
+///   straggler-tail) window. The recovery table (kills, re-runs,
+///   time-to-redispatch percentiles) keys off these cells.
 pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
     match name {
         "scale10" => Some(vec![Scenario {
@@ -347,6 +361,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
             shards: 1,
             fast_forward: true,
             flight: false,
+            fault: None,
         }]),
         "scale100" => Some(vec![Scenario {
             name: "scale100-yahoo-w1M".into(),
@@ -361,6 +376,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
             shards: 8, // clamps to min(n_gm, n_lm) = 8 at this size
             fast_forward: true,
             flight: false,
+            fault: None,
         }]),
         "hetero" => {
             let gpu = |scarcity: f64, frac: f64| HeteroSpec {
@@ -382,6 +398,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
                 shards: 1,
                 fast_forward: true,
                 flight: false,
+                fault: None,
             };
             Some(vec![
                 // scarce: ~6% GPU slots, ~5% of jobs demand them
@@ -417,6 +434,7 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
                 shards: 1,
                 fast_forward: true,
                 flight: false,
+                fault: None,
             };
             let gang2 = || HeteroSpec {
                 profile: "bimodal-gpu".into(),
@@ -437,6 +455,74 @@ pub fn preset(name: &str, net: &NetModel) -> Option<Vec<Scenario>> {
                 // width-4 gangs on rack-end big-mem nodes
                 cell("g4-big", 0.5, gang4()),
                 cell("g4-big", 0.85, gang4()),
+            ])
+        }
+        "churn" => {
+            let cell = |tag: &str, load: f64, h: Option<HeteroSpec>, fs: FaultSpec| Scenario {
+                name: format!("churn-{tag}-l{load:.2}"),
+                workload: WorkloadKind::Yahoo,
+                workers: 600,
+                jobs: 200,
+                load,
+                net: net.clone(),
+                gm_fail_at: None,
+                hetero: h,
+                use_index: true,
+                shards: 1,
+                fast_forward: true,
+                flight: false,
+                fault: Some(fs),
+            };
+            let churn = |per_khour: f64, downtime_s: f64, drain_frac: f64| FaultSpec {
+                churn_per_khour: per_khour,
+                downtime_s,
+                drain_frac,
+                ..FaultSpec::default()
+            };
+            Some(vec![
+                // churn-rate axis: crashes dominate, nodes heal in 30 s
+                cell("light", 0.7, None, churn(60.0, 30.0, 0.25)),
+                cell("heavy", 0.7, None, churn(240.0, 30.0, 0.25)),
+                // pure drains: no work is ever lost, only capacity parks
+                cell("drain", 0.7, None, churn(120.0, 30.0, 1.0)),
+                // crash churn under saturation pressure
+                cell("kill", 0.85, None, churn(120.0, 30.0, 0.0)),
+                // correlated rack outages on the rack-tiered catalog
+                cell(
+                    "rack",
+                    0.7,
+                    Some(HeteroSpec {
+                        profile: "rack-tiered".into(),
+                        scarcity: 0.25,
+                        constrained_frac: 0.0,
+                        demand: Demand::attrs(&["nvme"]),
+                    }),
+                    FaultSpec {
+                        rack_outages: 2,
+                        downtime_s: 45.0,
+                        ..FaultSpec::default()
+                    },
+                ),
+                // partition-ish window: delays x8 with heavy-tail
+                // stragglers, plus light churn underneath
+                cell(
+                    "degrade",
+                    0.7,
+                    None,
+                    FaultSpec {
+                        churn_per_khour: 60.0,
+                        downtime_s: 30.0,
+                        drain_frac: 0.25,
+                        degrade: Some(NetDegrade {
+                            from_s: 20.0,
+                            until_s: 60.0,
+                            factor: 8,
+                            tail_ppm: 2000,
+                            tail_factor: 40,
+                        }),
+                        ..FaultSpec::default()
+                    },
+                ),
             ])
         }
         _ => None,
@@ -476,21 +562,40 @@ pub fn scenario_grid(
                 shards: 1,
                 fast_forward: true,
                 flight: false,
+                fault: None,
             });
         }
     }
     out
 }
 
+/// Compile a scenario's fault axes for one framework's run: the
+/// degraded-network overlay wraps the run's net model, and the churn /
+/// rack-outage axes compile to a deterministic [`FaultPlan`] against the
+/// framework's own catalog with the run's seed.
+fn apply_fault(net: &mut NetModel, plan_slot: &mut Option<FaultPlan>, fs: &FaultSpec, catalog: &NodeCatalog, seed: u64) {
+    if let Some(d) = &fs.degrade {
+        *net = d.wrap(net.clone());
+    }
+    let plan = FaultPlan::compile(fs, catalog, seed);
+    if !plan.is_empty() {
+        *plan_slot = Some(plan);
+    }
+}
+
 /// The one dispatch table from framework name to simulation: paper-shaped
 /// config for `workers`, with the run's seed, an explicit network model,
-/// optional GM failure injection (Megha only; ignored by baselines), an
+/// optional GM failure injection (Megha only; the other frameworks have
+/// no GM — the request is recorded on
+/// [`RunOutcome::gm_fail_ignored`] instead of silently dropped), an
 /// optional heterogeneity spec (each framework builds the catalog
 /// over its own DC size), the occupancy-index routing flag, the
 /// execution-shard count (Megha, Sparrow, and Eagle shard; Pigeon runs
 /// the sequential driver and records
 /// [`ShardFallback::Unsupported`] when shards were requested), the
-/// idle-epoch fast-forward toggle, and the flight-recorder toggle.
+/// idle-epoch fast-forward toggle, the flight-recorder toggle, and the
+/// optional fault-injection axes (compiled per framework via
+/// [`FaultPlan::compile`]).
 /// `fig3::run_framework`, [`run_one`] and the cross-scheduler tests all
 /// route through here.
 #[allow(clippy::too_many_arguments)]
@@ -505,6 +610,7 @@ pub fn run_framework_hetero(
     shards: usize,
     fast_forward: bool,
     flight: bool,
+    fault: Option<&FaultSpec>,
     trace: &Trace,
 ) -> RunOutcome {
     match framework {
@@ -518,6 +624,9 @@ pub fn run_framework_hetero(
             cfg.sim.flight = flight;
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.spec.n_workers());
+            }
+            if let Some(fs) = fault {
+                apply_fault(&mut cfg.sim.net, &mut cfg.sim.fault, fs, &cfg.catalog, seed);
             }
             let failure = gm_fail_at.map(|at| FailurePlan {
                 at: SimTime::from_secs(at),
@@ -540,11 +649,16 @@ pub fn run_framework_hetero(
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.workers);
             }
-            if cfg.sim.shards > 1 {
+            if let Some(fs) = fault {
+                apply_fault(&mut cfg.sim.net, &mut cfg.sim.fault, fs, &cfg.catalog, seed);
+            }
+            let mut out = if cfg.sim.shards > 1 {
                 sched::sparrow_sharded::simulate_sharded(&cfg, trace)
             } else {
                 sched::sparrow::simulate(&cfg, trace)
-            }
+            };
+            out.gm_fail_ignored = gm_fail_at;
+            out
         }
         "eagle" => {
             let mut cfg = EagleConfig::for_workers(workers);
@@ -557,11 +671,16 @@ pub fn run_framework_hetero(
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.workers);
             }
-            if cfg.sim.shards > 1 {
+            if let Some(fs) = fault {
+                apply_fault(&mut cfg.sim.net, &mut cfg.sim.fault, fs, &cfg.catalog, seed);
+            }
+            let mut out = if cfg.sim.shards > 1 {
                 sched::eagle_sharded::simulate_sharded(&cfg, trace)
             } else {
                 sched::eagle::simulate(&cfg, trace)
-            }
+            };
+            out.gm_fail_ignored = gm_fail_at;
+            out
         }
         "pigeon" => {
             let mut cfg = PigeonConfig::for_workers(workers);
@@ -572,11 +691,15 @@ pub fn run_framework_hetero(
             if let Some(h) = hetero {
                 cfg.catalog = h.catalog(cfg.workers);
             }
+            if let Some(fs) = fault {
+                apply_fault(&mut cfg.sim.net, &mut cfg.sim.fault, fs, &cfg.catalog, seed);
+            }
             let mut out = sched::pigeon::simulate(&cfg, trace);
             if shards > 1 {
                 out.shard_fallback = Some(ShardFallback::Unsupported);
                 crate::obs::flight::record_fallback(&mut out);
             }
+            out.gm_fail_ignored = gm_fail_at;
             out
         }
         other => panic!("unknown framework '{other}'"),
@@ -593,7 +716,7 @@ pub fn run_framework_with(
     trace: &Trace,
 ) -> RunOutcome {
     run_framework_hetero(
-        framework, workers, seed, net, gm_fail_at, None, true, 1, true, false, trace,
+        framework, workers, seed, net, gm_fail_at, None, true, 1, true, false, None, trace,
     )
 }
 
@@ -616,6 +739,7 @@ pub fn run_one(framework: &str, sc: &Scenario, seed: u64) -> RunOutcome {
         sc.shards,
         sc.fast_forward,
         sc.flight,
+        sc.fault.as_ref(),
         &trace,
     )
 }
@@ -666,6 +790,18 @@ pub struct RunRecord {
     /// Flight-recorder aggregates ([`RunOutcome::flight`]; `None` when
     /// the scenario's [`Scenario::flight`] axis is off).
     pub flight: Option<FlightStats>,
+    /// Recovery SLOs ([`RunOutcome`] fault accounting; all zero when the
+    /// scenario's [`Scenario::fault`] axis is off or inert).
+    pub tasks_killed: u64,
+    pub tasks_rerun: u64,
+    /// Task-seconds of execution progress destroyed by kills.
+    pub work_lost_s: f64,
+    /// Time-to-redispatch percentiles over the run's kill→re-commit
+    /// pairs ([`RunOutcome::redispatch_summary`]).
+    pub redispatch: DelaySummary,
+    /// The run requested `gm_fail_at` of a GM-less framework
+    /// ([`RunOutcome::gm_fail_ignored`]).
+    pub gm_fail_ignored: Option<f64>,
     /// Wall-clock of the event loop only ([`RunOutcome::sim_wall_s`]) —
     /// the events/s denominator, excluding scheduler construction and
     /// summarization.
@@ -782,6 +918,7 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
             sc.shards,
             sc.fast_forward,
             sc.flight,
+            sc.fault.as_ref(),
             trace,
         );
         RunRecord {
@@ -803,6 +940,11 @@ pub fn run_sweep(spec: &SweepSpec) -> SweepResult {
             shards: out.shards,
             shard_fallback: out.shard_fallback,
             flight: out.flight,
+            tasks_killed: out.tasks_killed,
+            tasks_rerun: out.tasks_rerun,
+            work_lost_s: out.work_lost_s,
+            redispatch: out.redispatch_summary(),
+            gm_fail_ignored: out.gm_fail_ignored,
             sim_wall_s: out.sim_wall_s,
             wall_s: r0.elapsed().as_secs_f64(),
         }
@@ -870,6 +1012,16 @@ pub struct AggRow {
     /// Median across runs of the per-run p99 invalidation-chain length
     /// (LM-invalidations one (GM, job) pair accumulated).
     pub chain_p99: f64,
+    /// Mean tasks killed / re-run per run (0 ⇒ the cell's fault axis is
+    /// off or never hit a running task; the recovery columns below are
+    /// then zero too).
+    pub killed: f64,
+    pub rerun: f64,
+    /// Mean task-seconds of work destroyed per run.
+    pub work_lost_s: f64,
+    /// Median across runs of the per-run time-to-redispatch p50 / p99.
+    pub redispatch_p50: f64,
+    pub redispatch_p99: f64,
 }
 
 pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
@@ -909,6 +1061,11 @@ pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
             let f_p50s: Vec<f64> = flights.iter().map(|f| f.stale_p50_us as f64).collect();
             let f_p99s: Vec<f64> = flights.iter().map(|f| f.stale_p99_us as f64).collect();
             let f_chains: Vec<f64> = flights.iter().map(|f| f.chain_p99 as f64).collect();
+            let killeds: Vec<f64> = rs.iter().map(|r| r.tasks_killed as f64).collect();
+            let reruns: Vec<f64> = rs.iter().map(|r| r.tasks_rerun as f64).collect();
+            let losts: Vec<f64> = rs.iter().map(|r| r.work_lost_s).collect();
+            let rd_p50s: Vec<f64> = rs.iter().map(|r| r.redispatch.median).collect();
+            let rd_p99s: Vec<f64> = rs.iter().map(|r| r.redispatch.p99).collect();
             rows.push(AggRow {
                 framework: fw.clone(),
                 scenario: si,
@@ -936,6 +1093,11 @@ pub fn aggregate(spec: &SweepSpec, records: &[RunRecord]) -> Vec<AggRow> {
                 stale_p50_us: percentile(&f_p50s, 50.0),
                 stale_p99_us: percentile(&f_p99s, 50.0),
                 chain_p99: percentile(&f_chains, 50.0),
+                killed: mean(&killeds),
+                rerun: mean(&reruns),
+                work_lost_s: mean(&losts),
+                redispatch_p50: percentile(&rd_p50s, 50.0),
+                redispatch_p99: percentile(&rd_p99s, 50.0),
             });
         }
     }
@@ -952,6 +1114,21 @@ pub fn print_result(spec: &SweepSpec, result: &SweepResult) {
         result.records.len(),
         result.threads
     );
+    // a GM-failure request against a GM-less framework is recorded per
+    // run (RunOutcome::gm_fail_ignored); warn exactly once per framework
+    // so the request is never silently dropped
+    let mut gm_warned: Vec<&str> = Vec::new();
+    for r in &result.records {
+        if let Some(at) = r.gm_fail_ignored {
+            if !gm_warned.contains(&r.framework.as_str()) {
+                gm_warned.push(r.framework.as_str());
+                eprintln!(
+                    "warning: {} has no global manager; --gm-fail-at {at} was ignored",
+                    r.framework
+                );
+            }
+        }
+    }
     // sharding fallbacks are recorded per run; surface each distinct
     // reason exactly once so a clamped `--shards` request is never silent
     let mut warned: Vec<(&str, ShardFallback)> = Vec::new();
@@ -1042,6 +1219,26 @@ pub fn print_result(spec: &SweepSpec, result: &SweepResult) {
                 r.gwait_p50,
                 r.gwait_p99,
                 r.gang_rejections
+            );
+        }
+        println!();
+    }
+    if rows.iter().any(|r| r.killed > 0.0) {
+        println!("\n--- recovery (fault injection: kills, re-runs, time-to-redispatch) ---");
+        println!(
+            "{:<22} {:<9} {:>8} {:>8} {:>12} {:>13} {:>13}",
+            "scenario", "framework", "killed", "rerun", "lost(task-s)", "redisp-p50(s)", "redisp-p99(s)"
+        );
+        for r in rows.iter().filter(|r| r.killed > 0.0) {
+            println!(
+                "{:<22} {:<9} {:>8.1} {:>8.1} {:>12.1} {:>13.4} {:>13.3}",
+                spec.scenarios[r.scenario].name,
+                r.framework,
+                r.killed,
+                r.rerun,
+                r.work_lost_s,
+                r.redispatch_p50,
+                r.redispatch_p99
             );
         }
         println!();
@@ -1174,7 +1371,7 @@ mod tests {
         assert!(scs[0].workers >= 1_000_000, "~1M worker slots");
         assert_eq!(scs[0].shards, 8);
         // every other preset stays on the sequential driver
-        for name in ["scale10", "hetero", "gang"] {
+        for name in ["scale10", "hetero", "gang", "churn"] {
             for sc in preset(name, &net).unwrap() {
                 assert_eq!(sc.shards, 1, "{}", sc.name);
             }
@@ -1199,6 +1396,7 @@ mod tests {
             shards: 2,
             fast_forward: true,
             flight: false,
+            fault: None,
         };
         let spec = SweepSpec {
             frameworks: vec!["megha".into(), "sparrow".into()],
@@ -1236,6 +1434,7 @@ mod tests {
             shards: 8,
             fast_forward: true,
             flight: false,
+            fault: None,
         };
         let spec = SweepSpec {
             frameworks: vec!["pigeon".into()],
@@ -1266,6 +1465,7 @@ mod tests {
             shards: 4,
             fast_forward: true,
             flight: false,
+            fault: None,
         };
         // all three ported frameworks shard; pigeon never does. Megha's
         // plan cuts over its 3x3 GM/LM federation at this DC size, so a
@@ -1359,6 +1559,7 @@ mod tests {
             shards: 1,
             fast_forward: true,
             flight: false,
+            fault: None,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 7);
@@ -1392,6 +1593,7 @@ mod tests {
             shards: 1,
             fast_forward: true,
             flight: false,
+            fault: None,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 3);
@@ -1401,6 +1603,91 @@ mod tests {
                 "{fw}: no constrained job records"
             );
         }
+    }
+
+    #[test]
+    fn fault_churn_preset_resolves() {
+        let net = NetModel::paper_default();
+        let scs = preset("churn", &net).expect("churn preset");
+        assert!(scs.len() >= 5);
+        for sc in &scs {
+            let fs = sc.fault.as_ref().expect("churn scenario has a fault axis");
+            assert!(!fs.is_inert(), "{}: inert fault spec", sc.name);
+        }
+        // churn cells compile to non-empty plans on the default catalog
+        let fs = scs[0].fault.as_ref().unwrap();
+        let plan = FaultPlan::compile(fs, &NodeCatalog::uniform(600), run_seed(1, 0, 0));
+        assert!(!plan.is_empty());
+        // the degrade cell carries a network window
+        assert!(scs.iter().any(|sc| sc
+            .fault
+            .as_ref()
+            .is_some_and(|f| f.degrade.is_some())));
+    }
+
+    #[test]
+    fn fault_scenario_runs_all_frameworks_and_conserves_tasks() {
+        // one faulted cell end-to-end per framework through the sweep
+        // front door: killed work re-runs exactly once everywhere
+        let sc = Scenario {
+            name: "churn-tiny".into(),
+            workload: WorkloadKind::Fixed { tasks_per_job: 12 },
+            workers: 150,
+            jobs: 30,
+            load: 0.8,
+            net: NetModel::paper_default(),
+            gm_fail_at: None,
+            hetero: None,
+            use_index: true,
+            shards: 1,
+            fast_forward: true,
+            flight: false,
+            fault: Some(FaultSpec {
+                churn_per_khour: 3000.0,
+                downtime_s: 10.0,
+                drain_frac: 0.0,
+                horizon_s: 40.0,
+                ..FaultSpec::default()
+            }),
+        };
+        for fw in FRAMEWORKS {
+            let out = run_one(fw, &sc, 7);
+            assert_eq!(out.jobs.len(), 30, "{fw} lost jobs");
+            assert_eq!(
+                out.tasks,
+                30 * 12 + out.tasks_killed,
+                "{fw}: task conservation"
+            );
+            assert_eq!(out.tasks_rerun, out.tasks_killed, "{fw}");
+        }
+    }
+
+    #[test]
+    fn fault_gm_fail_request_recorded_for_gmless_frameworks() {
+        // regression: `--gm-fail-at` against Sparrow/Eagle/Pigeon used
+        // to be silently dropped; it must be recorded on the outcome
+        let sc = Scenario {
+            name: "gmfail-tiny".into(),
+            workload: WorkloadKind::Fixed { tasks_per_job: 8 },
+            workers: 100,
+            jobs: 10,
+            load: 0.6,
+            net: NetModel::paper_default(),
+            gm_fail_at: Some(2.0),
+            hetero: None,
+            use_index: true,
+            shards: 1,
+            fast_forward: true,
+            flight: false,
+            fault: None,
+        };
+        for fw in ["sparrow", "eagle", "pigeon"] {
+            let out = run_one(fw, &sc, 5);
+            assert_eq!(out.gm_fail_ignored, Some(2.0), "{fw}");
+        }
+        // Megha honors the request and must NOT record it as ignored
+        let out = run_one("megha", &sc, 5);
+        assert_eq!(out.gm_fail_ignored, None);
     }
 
     #[test]
@@ -1421,6 +1708,7 @@ mod tests {
             shards: 1,
             fast_forward: true,
             flight: false,
+            fault: None,
         };
         for fw in FRAMEWORKS {
             let out = run_one(fw, &sc, 5);

@@ -12,7 +12,7 @@
 //! `(framework, seed) → (makespan, messages, median)` tuples from a
 //! known-good build and pin them here.
 
-use megha::cluster::NodeCatalog;
+use megha::cluster::{ClusterSpec, NodeCatalog};
 use megha::config::{EagleConfig, MeghaConfig, PigeonConfig, SparrowConfig};
 use megha::metrics::{summarize_constrained, summarize_jobs, RunOutcome};
 use megha::runtime::match_engine::RustMatchEngine;
@@ -21,11 +21,12 @@ use megha::sched::megha::MeghaSim;
 use megha::sched::pigeon::Pigeon;
 use megha::sched::sparrow::Sparrow;
 use megha::sim::driver::{self, BufPools};
+use megha::sim::fault::{FaultEvent, FaultKind, FaultPlan};
 use megha::sim::net::NetModel;
 use megha::sim::time::SimTime;
 use megha::sweep::{self, HeteroSpec, Scenario, SweepSpec, WorkloadKind};
 use megha::workload::synthetic::synthetic_fixed;
-use megha::workload::{Demand, Trace};
+use megha::workload::{Demand, Job, Trace};
 
 /// The canonical name→simulation dispatch (also used by fig3 and the
 /// sweep harness), on the paper-default network model.
@@ -318,6 +319,7 @@ fn megha_beats_probe_baselines_on_scarce_attributes() {
         shards: 1,
         fast_forward: true,
         flight: false,
+        fault: None,
     };
     let megha_out = sweep::run_one("megha", &sc, 41);
     let sparrow_out = sweep::run_one("sparrow", &sc, 41);
@@ -384,13 +386,13 @@ fn gang_slots1_path_is_bit_identical_and_inert() {
     let h = Some(&hetero);
     for name in sweep::FRAMEWORKS {
         let a = sweep::run_framework_hetero(
-            name, workers, seed, &net, None, h, true, 1, true, false, &trace,
+            name, workers, seed, &net, None, h, true, 1, true, false, None, &trace,
         );
         let b = sweep::run_framework_hetero(
-            name, workers, seed, &net, None, h, true, 1, true, false, &trace,
+            name, workers, seed, &net, None, h, true, 1, true, false, None, &trace,
         );
         let c = sweep::run_framework_hetero(
-            name, workers, seed, &net, None, h, true, 1, true, false, &reparsed,
+            name, workers, seed, &net, None, h, true, 1, true, false, None, &reparsed,
         );
         assert_outcomes_identical(name, &a, &b);
         assert_outcomes_identical(name, &a, &c);
@@ -429,6 +431,7 @@ fn gang_megha_beats_probe_baselines_on_scarce_gangs() {
         shards: 1,
         fast_forward: true,
         flight: false,
+        fault: None,
     };
     let megha_out = sweep::run_one("megha", &sc, 47);
     let sparrow_out = sweep::run_one("sparrow", &sc, 47);
@@ -504,6 +507,7 @@ fn sweep_matches_direct_execution() {
         shards: 1,
         fast_forward: true,
         flight: false,
+        fault: None,
     };
     let spec = SweepSpec {
         frameworks: vec!["megha".into(), "pigeon".into()],
@@ -539,6 +543,7 @@ fn gm_failure_scenario_still_completes_through_sweep() {
         shards: 1,
         fast_forward: true,
         flight: false,
+        fault: None,
     };
     let out = sweep::run_one("megha", &sc, 13);
     assert_eq!(out.jobs.len(), 20, "GM failure lost jobs");
@@ -561,10 +566,10 @@ fn flight_recorder_is_bit_identical_to_off() {
     for name in sweep::FRAMEWORKS {
         for (shards, label) in [(1usize, "classic"), (2, "sharded")] {
             let off = sweep::run_framework_hetero(
-                name, workers, seed, &net, None, None, true, shards, true, false, &trace,
+                name, workers, seed, &net, None, None, true, shards, true, false, None, &trace,
             );
             let on = sweep::run_framework_hetero(
-                name, workers, seed, &net, None, None, true, shards, true, true, &trace,
+                name, workers, seed, &net, None, None, true, shards, true, true, None, &trace,
             );
             assert_outcomes_identical(&format!("{name}/{label}/flight"), &off, &on);
             assert!(
@@ -603,10 +608,10 @@ fn fast_forward_flight_logs_differ_only_by_ff_markers() {
     let net = NetModel::Constant(SimTime::from_millis(0.5));
     for name in ["sparrow", "eagle"] {
         let ff_on = sweep::run_framework_hetero(
-            name, workers, seed, &net, None, None, true, 4, true, true, &trace,
+            name, workers, seed, &net, None, None, true, 4, true, true, None, &trace,
         );
         let ff_off = sweep::run_framework_hetero(
-            name, workers, seed, &net, None, None, true, 4, false, true, &trace,
+            name, workers, seed, &net, None, None, true, 4, false, true, None, &trace,
         );
         assert_eq!(ff_on.shard_fallback, None, "{name}: expected a sharded run");
         assert_eq!(ff_off.shard_fallback, None, "{name}: expected a sharded run");
@@ -630,5 +635,209 @@ fn fast_forward_flight_logs_differ_only_by_ff_markers() {
         for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
             assert!(x == y, "{name}: flight logs diverge at event {i}");
         }
+    }
+}
+
+/// Fault-subsystem inertness golden (ISSUE 10): a run carrying an
+/// *empty* [`FaultPlan`] must be bit-identical to a fault-free run for
+/// every framework — the plan is injected at init, so an empty plan
+/// pushes nothing and every fault-only branch (gen guards, down/pending
+/// flags, kill FIFOs) stays structurally unreachable.
+#[test]
+fn fault_empty_plan_is_bit_identical_for_every_framework() {
+    let workers = 300;
+    let seed = 67;
+    let trace = synthetic_fixed(20, 25, 1.0, 0.8, workers, seed);
+    let check = |name: &str, a: RunOutcome, b: RunOutcome| {
+        assert_outcomes_identical(&format!("{name}/empty-plan"), &a, &b);
+        assert_eq!(b.tasks_killed, 0, "{name}: empty plan killed tasks");
+        assert_eq!(b.tasks_rerun, 0, "{name}: empty plan reran tasks");
+        assert_eq!(b.work_lost_s, 0.0, "{name}: empty plan lost work");
+        assert!(b.redispatch_s.is_empty(), "{name}: phantom redispatches");
+    };
+    {
+        let mut base = MeghaConfig::for_workers(workers);
+        base.sim.seed = seed;
+        let mut planned = base.clone();
+        planned.sim.fault = Some(FaultPlan::empty());
+        check(
+            "megha",
+            megha::sched::megha::simulate(&base, &trace),
+            megha::sched::megha::simulate(&planned, &trace),
+        );
+    }
+    {
+        let mut base = SparrowConfig::for_workers(workers);
+        base.sim.seed = seed;
+        let mut planned = base.clone();
+        planned.sim.fault = Some(FaultPlan::empty());
+        check(
+            "sparrow",
+            megha::sched::sparrow::simulate(&base, &trace),
+            megha::sched::sparrow::simulate(&planned, &trace),
+        );
+    }
+    {
+        let mut base = EagleConfig::for_workers(workers);
+        base.sim.seed = seed;
+        let mut planned = base.clone();
+        planned.sim.fault = Some(FaultPlan::empty());
+        check(
+            "eagle",
+            megha::sched::eagle::simulate(&base, &trace),
+            megha::sched::eagle::simulate(&planned, &trace),
+        );
+    }
+    {
+        let mut base = PigeonConfig::for_workers(workers);
+        base.sim.seed = seed;
+        let mut planned = base.clone();
+        planned.sim.fault = Some(FaultPlan::empty());
+        check(
+            "pigeon",
+            megha::sched::pigeon::simulate(&base, &trace),
+            megha::sched::pigeon::simulate(&planned, &trace),
+        );
+    }
+}
+
+/// Satellite regression (ISSUE 10): a GM crash with a gang's k-slot
+/// reservation outstanding must roll the reservation back, never leak
+/// it. Single-GM cluster ⇒ every gang completion is a `reuse` notice
+/// (`GmGangDone`) that re-frees the k reserved slots in the GM's own
+/// view. The crash wipes the view to all-busy (`clear_to_busy` + the
+/// `applied` sentinel); the in-flight notice then lands on the
+/// *restarted* incarnation, where the flip-guarded `mark_free` rolls
+/// the k slots back into the view without corrupting the free counts.
+/// The failure modes this pins: dropping the notice (k slots leaked
+/// busy until the next heartbeat) or applying it unguarded (view/count
+/// drift). A follow-up gang job submitted just after the crash
+/// separates the worlds observably: with rollback it schedules from
+/// the notice-freed slots within ~2 network hops; leaked, it stalls
+/// for the (deliberately long) 10 s heartbeat rebuild.
+#[test]
+fn fault_gm_failure_with_inflight_gang_done_rolls_back_reserved_slots() {
+    for fail_at in [0.05f64, 1.15] {
+        // 0.05 s: crash while the gang *claim* (LmVerify) is in flight;
+        // 1.15 s: crash while the *completion* (GmGangDone) is in
+        // flight — claim at t=0, verify at 0.1, finish at 1.1, notice
+        // delivery at 1.2 with the 100 ms constant network below.
+        let cfg = {
+            let mut c = MeghaConfig::for_workers(40);
+            c.spec = ClusterSpec::for_workers(40, 1, 1);
+            c.catalog = NodeCatalog::from_nodes(vec![(4, vec![]); 10]);
+            c.sim.net = NetModel::Constant(SimTime::from_millis(100.0));
+            c.heartbeat = SimTime::from_secs(10.0);
+            c.sim.seed = 5;
+            c
+        };
+        let gang = Demand::new(2, vec![]);
+        let trace = Trace::new(
+            "gm-crash-gang",
+            vec![
+                Job::new(0, SimTime::ZERO, vec![SimTime::from_secs(1.0)])
+                    .with_demand(gang.clone()),
+                Job::new(1, SimTime::from_secs(1.16), vec![SimTime::from_secs(1.0)])
+                    .with_demand(gang),
+            ],
+        );
+        let mut planner = RustMatchEngine;
+        let mut s = MeghaSim::new(
+            &cfg,
+            &trace,
+            &mut planner,
+            Some(megha::sched::megha::FailurePlan {
+                at: SimTime::from_secs(fail_at),
+                gm: 0,
+            }),
+        );
+        let out = driver::run(&mut s, &cfg.sim, &trace);
+        assert_eq!(out.jobs.len(), 2, "fail_at={fail_at}: job lost");
+        assert_eq!(out.tasks, 2, "fail_at={fail_at}: task count drifted");
+        let late = out.jobs.iter().find(|r| r.job_id == 1).unwrap();
+        assert!(
+            late.delay() < 2.0,
+            "fail_at={fail_at}: post-crash gang job stalled {:.2}s — the \
+             in-flight gang notice leaked its reserved slots instead of \
+             rolling them back",
+            late.delay()
+        );
+    }
+}
+
+/// Config-level fault injection (`cfg.sim.fault`, what `--churn`
+/// compiles into): a hand-built down/up schedule with kills must leave
+/// every framework's driver invariants intact — every job completes,
+/// every killed task reruns exactly once, and every rerun carries a
+/// time-to-redispatch sample.
+#[test]
+fn fault_config_plan_churn_conserves_tasks_for_every_framework() {
+    let workers = 200;
+    let trace = synthetic_fixed(25, 30, 1.0, 0.85, workers, 77);
+    let n_tasks = trace.n_tasks() as u64;
+    let events: Vec<FaultEvent> = (0..12)
+        .flat_map(|i| {
+            let node = (i * 13 % workers) as u32;
+            let t0 = 2.0 + i as f64 * 1.5;
+            [
+                FaultEvent {
+                    at: SimTime::from_secs(t0),
+                    kind: FaultKind::NodeDown { node, kill: i % 4 != 0 },
+                },
+                FaultEvent {
+                    at: SimTime::from_secs(t0 + 3.0),
+                    kind: FaultKind::NodeUp { node },
+                },
+            ]
+        })
+        .collect();
+    let plan = FaultPlan::from_events(events);
+    let check = |name: &str, out: RunOutcome| {
+        assert_eq!(out.jobs.len(), 30, "{name}: churn lost jobs");
+        assert_eq!(
+            out.tasks,
+            n_tasks + out.tasks_killed,
+            "{name}: task launches must equal trace tasks + kills"
+        );
+        assert_eq!(
+            out.tasks_rerun, out.tasks_killed,
+            "{name}: every killed task must re-run exactly once"
+        );
+        assert_eq!(
+            out.redispatch_s.len(),
+            out.tasks_rerun as usize,
+            "{name}: re-runs without redispatch samples"
+        );
+        for r in &out.jobs {
+            assert!(
+                r.complete >= r.submit + r.ideal_jct,
+                "{name}: job {} finished impossibly fast under churn",
+                r.job_id
+            );
+        }
+    };
+    {
+        let mut c = MeghaConfig::for_workers(workers);
+        c.sim.seed = 78;
+        c.sim.fault = Some(plan.clone());
+        check("megha", megha::sched::megha::simulate(&c, &trace));
+    }
+    {
+        let mut c = SparrowConfig::for_workers(workers);
+        c.sim.seed = 78;
+        c.sim.fault = Some(plan.clone());
+        check("sparrow", megha::sched::sparrow::simulate(&c, &trace));
+    }
+    {
+        let mut c = EagleConfig::for_workers(workers);
+        c.sim.seed = 78;
+        c.sim.fault = Some(plan.clone());
+        check("eagle", megha::sched::eagle::simulate(&c, &trace));
+    }
+    {
+        let mut c = PigeonConfig::for_workers(workers);
+        c.sim.seed = 78;
+        c.sim.fault = Some(plan);
+        check("pigeon", megha::sched::pigeon::simulate(&c, &trace));
     }
 }

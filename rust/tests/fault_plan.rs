@@ -1,0 +1,392 @@
+//! Fault-plan occupancy harness (ISSUE 10 satellite).
+//!
+//! Replays *any* `FaultPlan` — compiled from random `FaultSpec`s against
+//! random catalogs, or hand-built event lists — over the word-wise
+//! bitmap fast path (`AvailMap` + `NodeCatalog::pop_gang_free`) while a
+//! naive per-slot occupancy oracle (the `tests/gang_oracle.rs` model
+//! extended with a `Parked` state for down nodes) tracks the same
+//! stream. Between fault events, random gang acquires and releases keep
+//! the map churning.
+//!
+//! Invariants pinned, each over ≥ 256 proptest cases:
+//! * **occupancy conserved** — `free + held + parked == total` after
+//!   every operation, on both models, slot-for-slot;
+//! * **down nodes hold no free slots** — parking at `NodeDown` and
+//!   park-on-release while down never leak a schedulable slot on a dead
+//!   node, and no acquire ever lands there;
+//! * **plans heal** — after the last event (compiled plans always pair
+//!   every down with an up) and a full release, the map is exactly
+//!   all-free again: no slot is lost to a fault forever;
+//! * **`GmFail` is occupancy-inert** — scheduler-state faults never
+//!   touch the cluster map.
+
+use megha::cluster::{AvailMap, NodeCatalog, ResolvedDemand};
+use megha::sim::fault::{FaultEvent, FaultKind, FaultPlan, FaultSpec};
+use megha::sim::time::SimTime;
+use megha::util::proptest::check;
+use megha::util::rng::Rng;
+use megha::workload::Demand;
+
+/// Per-slot state in the naive model. `Parked` = busy because its node
+/// is down (or a kill/drain stranded it there), not because a task
+/// holds it.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Slot {
+    Free,
+    Held,
+    Parked,
+}
+
+/// The naive oracle: per-slot states and per-node down flags, updated
+/// per slot — no words, no masks, no early exits.
+struct Oracle {
+    slots: Vec<Slot>,
+    down: Vec<bool>,
+}
+
+impl Oracle {
+    fn new(catalog: &NodeCatalog) -> Oracle {
+        Oracle {
+            slots: vec![Slot::Free; catalog.len()],
+            down: vec![false; catalog.n_nodes()],
+        }
+    }
+
+    /// Mirror of `pop_gang_free`'s placement choice: first matching
+    /// node fully inside `[lo, hi)` with ≥ k free slots, first k free
+    /// slots ascending; width-1 demands take the first free match.
+    fn place(
+        &self,
+        catalog: &NodeCatalog,
+        lo: usize,
+        hi: usize,
+        rd: &ResolvedDemand,
+    ) -> Option<Vec<u32>> {
+        let k = rd.gang_width() as usize;
+        if k <= 1 {
+            return (lo..hi)
+                .find(|&s| self.slots[s] == Slot::Free && catalog.slot_matches(s, rd))
+                .map(|s| vec![s as u32]);
+        }
+        for node in 0..catalog.n_nodes() as u32 {
+            let (nlo, nhi) = catalog.node_range(node);
+            if nlo < lo || nhi > hi || !catalog.slot_matches(nlo, rd) {
+                continue;
+            }
+            let free: Vec<u32> = (nlo..nhi)
+                .filter(|&s| self.slots[s] == Slot::Free)
+                .map(|s| s as u32)
+                .collect();
+            if free.len() >= k {
+                return Some(free[..k].to_vec());
+            }
+        }
+        None
+    }
+
+    fn count(&self, want: Slot) -> usize {
+        self.slots.iter().filter(|&&s| s == want).count()
+    }
+}
+
+/// Slot-for-slot and count-for-count agreement, plus the conservation
+/// and dead-node invariants.
+fn assert_conserved(
+    catalog: &NodeCatalog,
+    state: &AvailMap,
+    oracle: &Oracle,
+    held: &[Vec<u32>],
+) -> Result<(), String> {
+    let held_slots: usize = held.iter().map(|c| c.len()).sum();
+    let parked = oracle.count(Slot::Parked);
+    if state.free_count() + held_slots + parked != catalog.len() {
+        return Err(format!(
+            "occupancy leaked: free {} + held {held_slots} + parked {parked} != {}",
+            state.free_count(),
+            catalog.len()
+        ));
+    }
+    if oracle.count(Slot::Free) != state.free_count() {
+        return Err(format!(
+            "free count drifted: bitmap {} vs oracle {}",
+            state.free_count(),
+            oracle.count(Slot::Free)
+        ));
+    }
+    for (s, &st) in oracle.slots.iter().enumerate() {
+        if state.is_free(s) != (st == Slot::Free) {
+            return Err(format!("slot {s} freeness drifted"));
+        }
+    }
+    for node in 0..catalog.n_nodes() as u32 {
+        let (lo, hi) = catalog.node_range(node);
+        if oracle.down[node as usize] && state.count_free_in(lo, hi) != 0 {
+            return Err(format!("down node {node} still offers free slots"));
+        }
+    }
+    Ok(())
+}
+
+/// Apply one fault event to both models, reclassifying held claims the
+/// way the engines do: a crash kills co-resident claims (slots stay
+/// busy until the node heals), a drain lets them run and parks their
+/// slots only if released while the node is still down.
+fn apply_fault(
+    catalog: &NodeCatalog,
+    oracle: &mut Oracle,
+    state: &mut AvailMap,
+    held: &mut Vec<Vec<u32>>,
+    kind: FaultKind,
+) -> Result<(), String> {
+    match kind {
+        FaultKind::NodeDown { node, kill } => {
+            if oracle.down[node as usize] {
+                return Err(format!("plan downs node {node} twice"));
+            }
+            oracle.down[node as usize] = true;
+            let (lo, hi) = catalog.node_range(node);
+            for s in lo..hi {
+                if oracle.slots[s] == Slot::Free {
+                    oracle.slots[s] = Slot::Parked;
+                    if !state.set_busy(s) {
+                        return Err(format!("parking free slot {s} found it busy"));
+                    }
+                }
+            }
+            if kill {
+                held.retain(|claim| {
+                    let dead = claim
+                        .iter()
+                        .any(|&s| catalog.node_of(s as usize) == node);
+                    if dead {
+                        // killed: slots stay busy (parked) until NodeUp
+                        for &s in claim {
+                            oracle.slots[s as usize] = Slot::Parked;
+                        }
+                    }
+                    !dead
+                });
+            }
+        }
+        FaultKind::NodeUp { node } => {
+            if !oracle.down[node as usize] {
+                return Err(format!("plan ups node {node} while up"));
+            }
+            oracle.down[node as usize] = false;
+            let (lo, hi) = catalog.node_range(node);
+            for s in lo..hi {
+                if oracle.slots[s] == Slot::Parked {
+                    oracle.slots[s] = Slot::Free;
+                    if !state.set_free(s) {
+                        return Err(format!("unparking slot {s} found it free"));
+                    }
+                }
+            }
+        }
+        // scheduler-state fault: must not touch the cluster map
+        FaultKind::GmFail { .. } => {}
+    }
+    Ok(())
+}
+
+const ATTR_POOL: [&str; 3] = ["gpu", "ssd", "big-mem"];
+
+/// Random catalog: uniform, rack-tiered, or fully random multi-slot
+/// nodes (one capacity-4 gpu node guaranteed so gangs resolve).
+fn random_catalog(rng: &mut Rng) -> NodeCatalog {
+    match rng.below(3) {
+        0 => NodeCatalog::uniform(rng.range(40, 400)),
+        1 => NodeCatalog::rack_tiered(rng.range(128, 640), 0.25),
+        _ => {
+            let n_nodes = rng.range(8, 60);
+            let mut nodes: Vec<(u32, Vec<String>)> = (0..n_nodes)
+                .map(|_| {
+                    let cap = rng.below(5) as u32 + 1;
+                    let attrs: Vec<String> = ATTR_POOL
+                        .iter()
+                        .filter(|_| rng.below(3) == 0)
+                        .map(|s| s.to_string())
+                        .collect();
+                    (cap, attrs)
+                })
+                .collect();
+            nodes.insert(rng.below(nodes.len() + 1), (4, vec!["gpu".to_string()]));
+            NodeCatalog::from_nodes(nodes)
+        }
+    }
+}
+
+/// A random demand that resolves against the catalog (widths 1–4, no
+/// attrs so it lands anywhere — fault coverage wants placements on
+/// every node kind).
+fn random_demand(rng: &mut Rng, catalog: &NodeCatalog) -> Option<ResolvedDemand> {
+    let slots = rng.below(4) as u32 + 1;
+    catalog.resolve(&Demand::new(slots, vec![])).ok()
+}
+
+/// One random acquire or release between fault events, honoring the
+/// down/park rules on release.
+fn random_op(
+    rng: &mut Rng,
+    catalog: &NodeCatalog,
+    state: &mut AvailMap,
+    oracle: &mut Oracle,
+    held: &mut Vec<Vec<u32>>,
+) -> Result<(), String> {
+    let n = catalog.len();
+    let release = !held.is_empty() && rng.below(3) == 0;
+    if release {
+        let claim = held.swap_remove(rng.below(held.len()));
+        for &s in &claim {
+            let node = catalog.node_of(s as usize);
+            if oracle.down[node as usize] {
+                // finished on a drained-down node: slot parks, stays
+                // busy in the bitmap until the node heals
+                oracle.slots[s as usize] = Slot::Parked;
+            } else {
+                oracle.slots[s as usize] = Slot::Free;
+                if !state.set_free(s as usize) {
+                    return Err(format!("bitmap slot {s} released while free"));
+                }
+            }
+        }
+        return Ok(());
+    }
+    let Some(rd) = random_demand(rng, catalog) else {
+        return Ok(());
+    };
+    let expect = oracle.place(catalog, 0, n, &rd);
+    let mut got: Vec<u32> = Vec::new();
+    let ok = catalog.pop_gang_free(state, 0, n, &rd, &mut got);
+    match (&expect, ok) {
+        (None, false) => {}
+        (Some(e), true) => {
+            if *e != got {
+                return Err(format!("placement diverged: oracle {e:?} vs bitmap {got:?}"));
+            }
+            for &s in &got {
+                if oracle.down[catalog.node_of(s as usize) as usize] {
+                    return Err(format!("acquire landed slot {s} on a down node"));
+                }
+                oracle.slots[s as usize] = Slot::Held;
+            }
+            held.push(got);
+        }
+        (e, ok) => {
+            return Err(format!("placeability diverged: oracle {e:?} vs bitmap ok={ok}"));
+        }
+    }
+    Ok(())
+}
+
+/// A random spec whose compiled plan actually does something on most
+/// draws (high churn over a short horizon), sometimes with rack
+/// bursts. Rates are sized so a debug-build replay of 256 cases stays
+/// in CI territory.
+fn random_spec(rng: &mut Rng) -> FaultSpec {
+    FaultSpec {
+        churn_per_khour: rng.uniform(100.0, 1500.0),
+        downtime_s: rng.uniform(5.0, 60.0),
+        drain_frac: rng.uniform(0.0, 1.0),
+        rack_outages: rng.below(3),
+        horizon_s: rng.uniform(30.0, 120.0),
+        degrade: None,
+    }
+}
+
+/// Drive one plan over both models with `ops` random ops between
+/// consecutive events, then heal + full-release and demand all-free.
+fn replay_plan(
+    rng: &mut Rng,
+    catalog: &NodeCatalog,
+    plan: &FaultPlan,
+    ops: usize,
+) -> Result<(), String> {
+    let mut state = AvailMap::all_free(catalog.len());
+    let mut oracle = Oracle::new(catalog);
+    let mut held: Vec<Vec<u32>> = Vec::new();
+    for ev in plan.events() {
+        for _ in 0..ops {
+            random_op(rng, catalog, &mut state, &mut oracle, &mut held)?;
+            assert_conserved(catalog, &state, &oracle, &held)?;
+        }
+        apply_fault(catalog, &mut oracle, &mut state, &mut held, ev.kind)?;
+        assert_conserved(catalog, &state, &oracle, &held)?;
+    }
+    // compiled plans end fully healed; release the survivors
+    if oracle.down.iter().any(|&d| d) {
+        return Err("plan ended with a node still down".into());
+    }
+    for claim in held.drain(..) {
+        for &s in &claim {
+            oracle.slots[s as usize] = Slot::Free;
+            if !state.set_free(s as usize) {
+                return Err(format!("slot {s} was not held at final release"));
+            }
+        }
+    }
+    if state.free_count() != catalog.len() {
+        return Err(format!(
+            "faults leaked slots: {} of {} free after heal + release",
+            state.free_count(),
+            catalog.len()
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn fault_any_compiled_plan_conserves_occupancy() {
+    check("fault-plan-occupancy-compiled", 256, |g| {
+        let mut rng = Rng::new(g.seed ^ 0xFA_17_04AC);
+        let catalog = random_catalog(&mut rng);
+        let spec = random_spec(&mut rng);
+        let plan = FaultPlan::compile(&spec, &catalog, g.seed);
+        replay_plan(&mut rng, &catalog, &plan, 4)
+    });
+}
+
+#[test]
+fn fault_hand_built_plans_with_gm_failures_conserve_occupancy() {
+    check("fault-plan-occupancy-handbuilt", 512, |g| {
+        let mut rng = Rng::new(g.seed ^ 0x9A6_F417);
+        let catalog = random_catalog(&mut rng);
+        // disjoint nodes, each with one down/up pair at random times,
+        // plus occupancy-inert GmFail events sprinkled through
+        let n_nodes = catalog.n_nodes();
+        let pairs = rng.range(1, n_nodes.min(12));
+        let mut events: Vec<FaultEvent> = Vec::new();
+        for i in 0..pairs {
+            let node = (i * n_nodes / pairs) as u32;
+            let t0 = rng.uniform(0.0, 100.0);
+            events.push(FaultEvent {
+                at: SimTime::from_secs(t0),
+                kind: FaultKind::NodeDown { node, kill: rng.below(2) == 0 },
+            });
+            events.push(FaultEvent {
+                at: SimTime::from_secs(t0 + rng.uniform(200.0, 300.0)),
+                kind: FaultKind::NodeUp { node },
+            });
+            events.push(FaultEvent {
+                at: SimTime::from_secs(rng.uniform(0.0, 400.0)),
+                kind: FaultKind::GmFail { gm: rng.below(8) as u32 },
+            });
+        }
+        let plan = FaultPlan::from_events(events);
+        replay_plan(&mut rng, &catalog, &plan, 4)
+    });
+}
+
+#[test]
+fn fault_empty_plan_replay_is_a_plain_oracle_run() {
+    check("fault-plan-occupancy-empty", 256, |g| {
+        let mut rng = Rng::new(g.seed ^ 0x0E_317);
+        let catalog = random_catalog(&mut rng);
+        let plan = FaultPlan::compile(&FaultSpec::default(), &catalog, g.seed);
+        if !plan.is_empty() {
+            return Err("inert spec compiled a non-empty plan".into());
+        }
+        // zero events: replay degenerates to heal + release of nothing
+        replay_plan(&mut rng, &catalog, &plan, 0)
+    });
+}

@@ -47,6 +47,7 @@ use megha::obs::flight;
 use megha::sched::eagle_sharded;
 use megha::sched::megha::{simulate, simulate_sharded, simulate_sharded_reference, FailurePlan};
 use megha::sched::sparrow_sharded;
+use megha::sim::fault::{FaultEvent, FaultKind, FaultPlan};
 use megha::sim::net::NetModel;
 use megha::sim::time::SimTime;
 use megha::sweep;
@@ -508,14 +509,138 @@ fn pigeon_records_unsupported_fallback() {
     let trace = synthetic_fixed(10, 20, 1.0, 0.5, 600, 51);
     let net = NetModel::paper_default();
     let out = sweep::run_framework_hetero(
-        "pigeon", 600, 51, &net, None, None, true, 4, true, false, &trace,
+        "pigeon", 600, 51, &net, None, None, true, 4, true, false, None, &trace,
     );
     assert_eq!(out.shards, 1, "pigeon must run the classic driver");
     assert_eq!(out.shard_fallback, Some(ShardFallback::Unsupported));
     // eagle through the same front door now genuinely shards
     let out = sweep::run_framework_hetero(
-        "eagle", 600, 51, &net, None, None, true, 4, true, false, &trace,
+        "eagle", 600, 51, &net, None, None, true, 4, true, false, None, &trace,
     );
     assert_eq!(out.shards, 4, "eagle must shard through the sweep");
     assert_eq!(out.shard_fallback, None);
+}
+
+/// Fault-plan shard identity (ISSUE 10): with a crash-and-recover churn
+/// plan active — node kills, parks, and re-dispatches as cross-shard
+/// traffic — threaded and sequential execution must stay bit-identical,
+/// per-job and down to the recovery SLOs. Fault events are injected at
+/// plan time into the lane that owns the faulted LM/scheduler, so the
+/// thread interleaving can have no observable effect.
+#[test]
+fn fault_churn_shard_identity_for_megha_and_sparrow() {
+    // ~11 of 16 outages kill running work (i % 3 != 0), the rest drain;
+    // every node recovers 2 s later, inside the active window
+    let plan_for = |workers: usize| {
+        FaultPlan::from_events(
+            (0..16usize)
+                .flat_map(|i| {
+                    let node = (i * 97 % workers) as u32;
+                    let t0 = 1.0 + i as f64 * 0.4;
+                    [
+                        FaultEvent {
+                            at: SimTime::from_secs(t0),
+                            kind: FaultKind::NodeDown { node, kill: i % 3 != 0 },
+                        },
+                        FaultEvent {
+                            at: SimTime::from_secs(t0 + 2.0),
+                            kind: FaultKind::NodeUp { node },
+                        },
+                    ]
+                })
+                .collect(),
+        )
+    };
+    let assert_recovery_identical = |tag: &str, a: &RunOutcome, b: &RunOutcome| {
+        assert!(
+            a.tasks_killed > 0,
+            "{tag}: churn plan never killed a task — golden lost its teeth"
+        );
+        assert_eq!(a.tasks_killed, b.tasks_killed, "{tag}: kills drifted");
+        assert_eq!(a.tasks_rerun, b.tasks_rerun, "{tag}: re-runs drifted");
+        assert_eq!(a.work_lost_s, b.work_lost_s, "{tag}: lost work drifted");
+        assert_eq!(a.redispatch_s, b.redispatch_s, "{tag}: redispatch samples drifted");
+    };
+    {
+        let mut base = MeghaConfig::for_workers(2_000); // 8 GMs / 10 LMs
+        base.sim.seed = 91;
+        base.sim.fault = Some(plan_for(base.spec.n_workers()));
+        // 900 running 5 s tasks on 2000 slots ⇒ ~45% occupancy across
+        // the whole fault window, so the kill events reliably land
+        let trace = synthetic_fixed(15, 60, 5.0, 0.85, base.spec.n_workers(), 92);
+        for shards in [2usize, 4, 8] {
+            let mut cfg = base.clone();
+            cfg.sim.shards = shards;
+            let a = simulate_sharded(&cfg, &trace, None);
+            let b = simulate_sharded_reference(&cfg, &trace, None);
+            let tag = format!("fault/megha/shards={shards}");
+            assert_eq!(a.shards, shards as u32, "{tag}: ran sharded");
+            assert_outcomes_identical(&tag, &a, &b);
+            assert_recovery_identical(&tag, &a, &b);
+        }
+    }
+    {
+        let mut base = SparrowConfig::for_workers(1_000);
+        base.sim.seed = 93;
+        base.sim.fault = Some(plan_for(base.workers));
+        let trace = synthetic_fixed(15, 40, 5.0, 0.85, base.workers, 94);
+        for shards in [2usize, 4, 8] {
+            let mut cfg = base.clone();
+            cfg.sim.shards = shards;
+            let a = sparrow_sharded::simulate_sharded(&cfg, &trace);
+            let b = sparrow_sharded::simulate_sharded_reference(&cfg, &trace);
+            let tag = format!("fault/sparrow/shards={shards}");
+            assert_eq!(a.shards, shards as u32, "{tag}: ran sharded");
+            assert_eq!(a.shard_fallback, None, "{tag}: unexpected fallback");
+            assert_outcomes_identical(&tag, &a, &b);
+            assert_recovery_identical(&tag, &a, &b);
+        }
+    }
+}
+
+/// Sharded inertness half of the ISSUE 10 bit-identity gate: an empty
+/// `FaultPlan` on the *sharded* driver must be indistinguishable from no
+/// plan at all — nothing is injected into any lane, so the epoch
+/// schedule, exchange logs, and every outcome field match exactly.
+#[test]
+fn fault_empty_plan_sharded_is_bit_identical_to_none() {
+    {
+        let mut cfg = MeghaConfig::for_workers(2_000);
+        cfg.sim.seed = 95;
+        cfg.sim.shards = 4;
+        let trace = synthetic_fixed(15, 30, 1.0, 0.8, cfg.spec.n_workers(), 96);
+        let a = simulate_sharded(&cfg, &trace, None);
+        let mut planned = cfg.clone();
+        planned.sim.fault = Some(FaultPlan::empty());
+        let b = simulate_sharded(&planned, &trace, None);
+        assert_eq!(a.shards, 4, "megha/empty-plan: ran sharded");
+        assert_outcomes_identical("fault/megha/empty-plan", &a, &b);
+        assert_eq!(b.tasks_killed, 0, "megha: empty plan killed tasks");
+    }
+    {
+        let mut cfg = SparrowConfig::for_workers(1_000);
+        cfg.sim.seed = 97;
+        cfg.sim.shards = 4;
+        let trace = synthetic_fixed(15, 30, 1.0, 0.8, cfg.workers, 98);
+        let a = sparrow_sharded::simulate_sharded(&cfg, &trace);
+        let mut planned = cfg.clone();
+        planned.sim.fault = Some(FaultPlan::empty());
+        let b = sparrow_sharded::simulate_sharded(&planned, &trace);
+        assert_eq!(a.shards, 4, "sparrow/empty-plan: ran sharded");
+        assert_outcomes_identical("fault/sparrow/empty-plan", &a, &b);
+        assert_eq!(b.tasks_killed, 0, "sparrow: empty plan killed tasks");
+    }
+    {
+        let mut cfg = EagleConfig::for_workers(1_000);
+        cfg.sim.seed = 99;
+        cfg.sim.shards = 4;
+        let trace = synthetic_fixed(15, 30, 1.0, 0.8, cfg.workers, 100);
+        let a = eagle_sharded::simulate_sharded(&cfg, &trace);
+        let mut planned = cfg.clone();
+        planned.sim.fault = Some(FaultPlan::empty());
+        let b = eagle_sharded::simulate_sharded(&planned, &trace);
+        assert_eq!(a.shards, 4, "eagle/empty-plan: ran sharded");
+        assert_outcomes_identical("fault/eagle/empty-plan", &a, &b);
+        assert_eq!(b.tasks_killed, 0, "eagle: empty plan killed tasks");
+    }
 }
